@@ -1,0 +1,66 @@
+//! Quickstart: load an AOT artifact, verify its numerics, run inference,
+//! and print the analytic cost story of the paper's five variants.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use lrdx::decompose::{plan_variant, Variant};
+use lrdx::model::{cost, Arch};
+use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel};
+use lrdx::runtime::{Engine, HostTensor};
+
+fn main() -> Result<()> {
+    // 1. PJRT runtime (CPU) — python is NOT involved from here on.
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // 2. Load a python-AOT artifact: the LRD-decomposed mini ResNet.
+    let lib = ArtifactLibrary::load("artifacts")?;
+    let spec = lib
+        .find_by("resnet-mini", "lrd", "forward")
+        .expect("run `make artifacts` first");
+    let model = ForwardModel::load(&engine, spec)?;
+    println!("loaded {} ({} weight tensors)", spec.name, spec.params.len());
+
+    // 3. Verify against the numerics recorded at AOT time.
+    let delta = model.verify()?;
+    println!("numerics check vs jax: max |Δ| = {delta:.2e}  ✔");
+
+    // 4. Run a real inference batch.
+    let x = HostTensor::new(
+        vec![spec.batch, 3, spec.hw, spec.hw],
+        lrdx::util::det_input(spec.batch, spec.hw),
+    );
+    let logits = model.infer(&x)?;
+    println!(
+        "inference: batch {} -> logits {:?}, argmax[0] = {}",
+        spec.batch,
+        logits.dims,
+        logits.data[..spec.classes]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    );
+
+    // 5. The paper's story in one table: what each method costs.
+    let arch = Arch::by_name("resnet50").unwrap();
+    println!("\nresnet50 @224 (analytic):");
+    println!("{:14} {:>7} {:>11} {:>10}", "variant", "layers", "params(M)", "GFLOPs");
+    for v in [Variant::Orig, Variant::Lrd, Variant::Merged, Variant::Branched] {
+        let plan = plan_variant(&arch, v, 2.0, 4, None)?;
+        let r = cost::report(&arch, &plan, 224);
+        println!(
+            "{:14} {:>7} {:>11.2} {:>10.2}",
+            v.name(),
+            r.layers,
+            r.params as f64 / 1e6,
+            2.0 * r.macs as f64 / 1e9
+        );
+    }
+    println!("\nnext: `lrdx bench table1` … `lrdx bench fig5`, `lrdx serve`, `lrdx train`");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Serving comparison: original vs decomposed ResNet-50 artifacts behind
+//! the coordinator (router + dynamic batcher), reporting throughput and
+//! latency percentiles per variant — the deployment-facing version of the
+//! paper's "Infer Speed-up" column.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_compare -- [--requests 96]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+use lrdx::coordinator::batcher::BatchPolicy;
+use lrdx::coordinator::{BatchModel, Coordinator};
+use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel};
+use lrdx::trainsim::data::SynthData;
+use lrdx::util::cli::Args;
+use lrdx::util::rng::Rng;
+use lrdx::util::stats::Summary;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let requests = args.usize_or("requests", 96)?;
+    let arch = args.get_or("arch", "resnet50").to_string();
+    let variants: Vec<String> = args
+        .get_or("variants", "orig,lrd,merged,branched")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let root = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+
+    let lib = ArtifactLibrary::load(&root)?;
+    let hw = lib
+        .find_by(&arch, &variants[0], "forward")
+        .ok_or_else(|| anyhow!("missing {arch} artifacts — run `make artifacts`"))?
+        .hw;
+
+    let mut coord = Coordinator::new(BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(5),
+    });
+    for v in &variants {
+        let (root2, arch2, v2) = (root.clone(), arch.clone(), v.clone());
+        coord.register(v, hw, 1, move |eng| {
+            let lib = ArtifactLibrary::load(&root2)?;
+            let spec = lib
+                .find_by(&arch2, &v2, "forward")
+                .ok_or_else(|| anyhow!("no {arch2}/{v2} forward artifact"))?;
+            Ok(Box::new(ForwardModel::load(eng, spec)?) as Box<dyn BatchModel>)
+        })?;
+        println!("registered {arch}/{v}");
+    }
+
+    let gen = SynthData::new(hw, 10);
+    let mut rng = Rng::new(123);
+    println!("\n{:10} {:>9} {:>9} {:>9} {:>9}", "variant", "req/s", "p50 ms", "p99 ms", "speedup");
+    let mut base_rps = None;
+    for v in &variants {
+        // warmup (compile + first batches)
+        for _ in 0..4 {
+            let (x, _) = gen.batch(&mut rng, 1);
+            coord.infer_blocking(v, x)?;
+        }
+        let t0 = Instant::now();
+        let pending: Vec<_> = (0..requests)
+            .map(|_| {
+                let (x, _) = gen.batch(&mut rng, 1);
+                coord.infer(v, x)
+            })
+            .collect::<Result<_>>()?;
+        let mut lats = Vec::with_capacity(requests);
+        for rx in pending {
+            let resp = rx.recv().map_err(|_| anyhow!("worker died"))??;
+            lats.push(resp.latency);
+        }
+        let rps = requests as f64 / t0.elapsed().as_secs_f64();
+        let s = Summary::of(&lats);
+        let speedup = match base_rps {
+            None => {
+                base_rps = Some(rps);
+                "1.00x".to_string()
+            }
+            Some(b) => format!("{:+.1}%", (rps / b - 1.0) * 100.0),
+        };
+        println!(
+            "{v:10} {rps:>9.1} {:>9.2} {:>9.2} {speedup:>9}",
+            s.p50 * 1e3,
+            s.p99 * 1e3
+        );
+    }
+    println!("\ncoordinator metrics:\n{}", coord.metrics.snapshot().render());
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,2 @@
+# Build-time package: L1 pallas kernels + L2 jax model + AOT emitter.
+# Never imported at runtime — the rust binary only reads artifacts/.

@@ -1,0 +1,254 @@
+"""AOT compile path: lower every model/train variant to HLO-text artifacts.
+
+Python runs ONCE (``make artifacts``); the rust runtime then loads
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and never
+imports python again.
+
+Interchange is HLO **text**, not ``.serialize()``: jax>=0.5 emits protos
+with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted per artifact:
+  * ``<name>.hlo.txt``            the lowered module (return_tuple=True)
+  * ``params/<name>/<param>.bin`` flat little-endian f32 initial weights
+  * a manifest entry (shapes, parameter order, expected outputs for the
+    deterministic test input) in ``manifest.json``
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import resnet as RN
+from . import train as T
+
+SEED = 20240731  # paper date
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def det_input(batch: int, hw: int) -> np.ndarray:
+    """Deterministic test image reproduced bit-for-bit by the rust side:
+    x.flat[i] = sin(i * 0.01) * 0.5 (computed in f64, cast to f32)."""
+    n = batch * 3 * hw * hw
+    x = np.sin(np.arange(n, dtype=np.float64) * 0.01) * 0.5
+    return x.astype(np.float32).reshape(batch, 3, hw, hw)
+
+
+def det_labels(batch: int, classes: int) -> np.ndarray:
+    return (np.arange(batch) % classes).astype(np.int32)
+
+
+def _save_params(
+    out: pathlib.Path, art_name: str, names: list[str], params: dict
+) -> list[dict]:
+    pdir = out / "params" / art_name
+    pdir.mkdir(parents=True, exist_ok=True)
+    entries = []
+    for n in names:
+        a = np.asarray(params[n], dtype=np.float32)
+        f = pdir / f"{n}.bin"
+        a.tofile(f)
+        entries.append(
+            {"name": n, "shape": list(a.shape), "file": str(f.relative_to(out))}
+        )
+    return entries
+
+
+def emit_forward(
+    out: pathlib.Path,
+    arch_name: str,
+    variant: str,
+    *,
+    hw: int,
+    batch: int,
+    use_pallas: bool = False,
+    groups: int = 4,
+) -> dict:
+    arch = RN.ARCHS[arch_name]
+    key = jax.random.PRNGKey(SEED)
+    p0 = RN.init_params(arch, key)
+    plan = RN.plan_variant(arch, variant, groups=groups)
+    params = RN.decompose_params(arch, plan, p0)
+    fn, names = T.make_flat_forward(arch, plan, params, use_pallas=use_pallas)
+
+    arg_specs = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names]
+    arg_specs.append(jax.ShapeDtypeStruct((batch, 3, hw, hw), jnp.float32))
+    lowered = jax.jit(fn).lower(*arg_specs)
+    suffix = "_pallas" if use_pallas else ""
+    name = f"{arch_name}_{variant}{suffix}_hw{hw}_b{batch}_fwd"
+    (out / f"{name}.hlo.txt").write_text(to_hlo_text(lowered))
+
+    x = det_input(batch, hw)
+    (logits,) = fn(*[params[n] for n in names], x)
+    entry = {
+        "name": name,
+        "kind": "forward",
+        "arch": arch_name,
+        "variant": variant,
+        "use_pallas": use_pallas,
+        "hw": hw,
+        "batch": batch,
+        "classes": arch.classes,
+        "groups": groups if variant == "branched" else 1,
+        "hlo": f"{name}.hlo.txt",
+        "params": _save_params(out, name, names, params),
+        "plan": {k: list(v) for k, v in plan.items()},
+        "expected": {
+            "input": "det_sin",
+            "logits_row0": [float(v) for v in np.asarray(logits)[0][:8]],
+            "tol": 2e-2,
+        },
+    }
+    print(f"  wrote {name} ({len(names)} params)")
+    return entry
+
+
+def emit_train(
+    out: pathlib.Path,
+    arch_name: str,
+    variant: str,
+    *,
+    hw: int,
+    batch: int,
+    lr: float = 0.05,
+    momentum: float = 0.9,
+    use_pallas: bool = False,
+    groups: int = 4,
+) -> dict:
+    arch = RN.ARCHS[arch_name]
+    key = jax.random.PRNGKey(SEED)
+    p0 = RN.init_params(arch, key)
+    plan = RN.plan_variant(
+        arch, variant if variant != "freeze" else "lrd", groups=groups
+    )
+    params = RN.decompose_params(arch, plan, p0)
+    mask = RN.freeze_mask(arch, plan, params) if variant == "freeze" else None
+    fn, t_names, f_names = T.make_flat_train_step(
+        arch, plan, params, mask, lr=lr, momentum=momentum, use_pallas=use_pallas
+    )
+    specs = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in t_names]
+    specs += [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in f_names]
+    specs += [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in t_names]
+    specs.append(jax.ShapeDtypeStruct((batch, 3, hw, hw), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
+    lowered = jax.jit(fn).lower(*specs)
+    name = f"{arch_name}_{variant}_hw{hw}_b{batch}_train"
+    (out / f"{name}.hlo.txt").write_text(to_hlo_text(lowered))
+
+    # one smoke step for expected loss/accuracy
+    x = det_input(batch, hw)
+    y = det_labels(batch, arch.classes)
+    v0 = [np.zeros(params[n].shape, np.float32) for n in t_names]
+    res = fn(
+        *[params[n] for n in t_names],
+        *[params[n] for n in f_names],
+        *v0,
+        x,
+        y,
+    )
+    loss, acc = float(res[-2]), float(res[-1])
+    entry = {
+        "name": name,
+        "kind": "train",
+        "arch": arch_name,
+        "variant": variant,
+        "use_pallas": use_pallas,
+        "hw": hw,
+        "batch": batch,
+        "classes": arch.classes,
+        "lr": lr,
+        "momentum": momentum,
+        "hlo": f"{name}.hlo.txt",
+        "params": _save_params(out, name, t_names, params),
+        "frozen_params": _save_params(out, name, f_names, params),
+        "plan": {k: list(v) for k, v in plan.items()},
+        "expected": {"input": "det_sin", "loss0": loss, "acc0": acc, "tol": 5e-2},
+    }
+    print(
+        f"  wrote {name} (trainable={len(t_names)} frozen={len(f_names)}, loss0={loss:.4f})"
+    )
+    return entry
+
+
+DEFAULT_SET = [
+    # (emitter, arch, variant, kwargs)
+    ("fwd", "resnet-mini", "orig", dict(hw=32, batch=8)),
+    ("fwd", "resnet-mini", "lrd", dict(hw=32, batch=8)),
+    ("fwd", "resnet-mini", "merged", dict(hw=32, batch=8)),
+    ("fwd", "resnet-mini", "branched", dict(hw=32, batch=8, groups=2)),
+    ("fwd", "resnet-mini", "lrd", dict(hw=32, batch=4, use_pallas=True)),
+    ("train", "resnet-mini", "orig", dict(hw=32, batch=32)),
+    ("train", "resnet-mini", "lrd", dict(hw=32, batch=32)),
+    ("train", "resnet-mini", "freeze", dict(hw=32, batch=32)),
+    ("train", "resnet-mini", "merged", dict(hw=32, batch=32)),
+    ("train", "resnet-mini", "branched", dict(hw=32, batch=32, groups=2)),
+    ("fwd", "resnet50", "orig", dict(hw=64, batch=8)),
+    ("fwd", "resnet50", "lrd", dict(hw=64, batch=8)),
+    ("fwd", "resnet50", "merged", dict(hw=64, batch=8)),
+    ("fwd", "resnet50", "branched", dict(hw=64, batch=8)),
+]
+
+FULL_EXTRA = [
+    ("fwd", "resnet101", "orig", dict(hw=64, batch=8)),
+    ("fwd", "resnet101", "lrd", dict(hw=64, batch=8)),
+    ("fwd", "resnet101", "merged", dict(hw=64, batch=8)),
+    ("fwd", "resnet152", "orig", dict(hw=64, batch=8)),
+    ("fwd", "resnet152", "lrd", dict(hw=64, batch=8)),
+    ("fwd", "resnet152", "merged", dict(hw=64, batch=8)),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true", help="also emit resnet101/152")
+    ap.add_argument("--only", default=None, help="substring filter on artifact name")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    jobs = DEFAULT_SET + (FULL_EXTRA if args.full else [])
+    # Merge with any existing manifest so partial (--only) rebuilds keep the
+    # other artifacts' entries.
+    mpath = out / "manifest.json"
+    by_name: dict[str, dict] = {}
+    if mpath.exists():
+        try:
+            for e in json.loads(mpath.read_text())["artifacts"]:
+                by_name[e["name"]] = e
+        except Exception:
+            by_name = {}
+    for kind, arch, variant, kw in jobs:
+        tag = f"{arch}_{variant}{'_pallas' if kw.get('use_pallas') else ''}"
+        if args.only and args.only not in tag:
+            continue
+        entry = (
+            emit_forward(out, arch, variant, **kw)
+            if kind == "fwd"
+            else emit_train(out, arch, variant, **kw)
+        )
+        by_name[entry["name"]] = entry
+    manifest = {"seed": SEED, "artifacts": sorted(by_name.values(), key=lambda e: e["name"])}
+    mpath.write_text(json.dumps(manifest, indent=1))
+    print(f"manifest: {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

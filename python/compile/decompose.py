@@ -1,0 +1,213 @@
+"""Low-rank decomposition of model weights (paper §2).
+
+Implements, in JAX:
+
+* eq. (1)-(3)   SVD decomposition of FC / 1x1-conv weights into two factors
+* eq. (4)-(6)   Tucker-2 decomposition (HOSVD on the two channel modes) of
+                k x k conv weights into a 1x1 -> core -> 1x1 stack
+* eq. (7)       rank-from-compression-ratio for Tucker (and the SVD analogue)
+* Fig. 3        layer merging: matrix product of adjacent 1x1 factors
+* eq. (12)-(17) branch splitting of a Tucker stack into N groups
+
+Conventions: conv weights are OIHW ``[S, C, k, k]``; 1x1 convs and FC
+weights are ``[S, C]`` ("out x in", the transpose of the paper's W in
+eq. 1 — chosen to match conv OIHW; all equations are transposed
+accordingly and round-trip tested in python/tests/test_decompose.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# SVD (FC and 1x1 conv), eq. (1)-(3)
+# --------------------------------------------------------------------------
+
+
+class SvdFactors(NamedTuple):
+    """``w ~= w1 @ w0`` with ``w0``: [R, C] (first layer), ``w1``: [S, R]."""
+
+    w0: jax.Array
+    w1: jax.Array
+
+
+def svd_decompose(w: jax.Array, rank: int) -> SvdFactors:
+    """Truncated SVD of ``w``: [S, C] into rank-``rank`` factors (eq. 3).
+
+    Returns ``(w0, w1)`` such that the layer computes
+    ``y = w1 @ (w0 @ x)`` — i.e. first a [R, C] projection then a [S, R]
+    expansion, each factor absorbing ``sqrt(sigma)``.
+    """
+    u, s, vt = jnp.linalg.svd(w, full_matrices=False)
+    r = int(rank)
+    sq = jnp.sqrt(s[:r])
+    w1 = u[:, :r] * sq[None, :]  # [S, R]
+    w0 = sq[:, None] * vt[:r, :]  # [R, C]
+    return SvdFactors(w0=w0, w1=w1)
+
+
+def svd_reconstruct(f: SvdFactors) -> jax.Array:
+    return f.w1 @ f.w0
+
+
+def svd_rank_for_ratio(c: int, s: int, alpha: float) -> int:
+    """Rank giving ``alpha``x parameter compression for an [S, C] matrix.
+
+    orig = C*S params; decomposed = (C+S)*R  =>  R = C*S / (alpha*(C+S)).
+    Matches the paper's Table 2 (e.g. 64x64 @ 2x -> 16; 2048x1001 @ 2x -> 336).
+    """
+    r = int(c * s / (alpha * (c + s)))
+    return max(1, min(r, min(c, s)))
+
+
+# --------------------------------------------------------------------------
+# Tucker-2 (k x k conv), eq. (4)-(6)
+# --------------------------------------------------------------------------
+
+
+class TuckerFactors(NamedTuple):
+    """1x1 -> core -> 1x1 stack (Fig. 1b).
+
+    ``u``:    [r1, C]         input 1x1 projection
+    ``core``: [r2, r1, k, k]  core conv
+    ``v``:    [S, r2]         output 1x1 expansion
+    """
+
+    u: jax.Array
+    core: jax.Array
+    v: jax.Array
+
+
+def _mode_unfold_svd(m: jax.Array, rank: int) -> jax.Array:
+    """Leading ``rank`` left singular vectors of a matrix unfolding."""
+    u, _s, _vt = jnp.linalg.svd(m, full_matrices=False)
+    return u[:, :rank]
+
+
+def tucker2_decompose(w: jax.Array, r1: int, r2: int) -> TuckerFactors:
+    """Tucker-2 HOSVD of an OIHW tensor ``w``: [S, C, k, k] (eq. 4-6).
+
+    Only the two channel modes are decomposed (spatial dims are tiny,
+    paper §2): U from the mode-C unfolding, V from the mode-S unfolding,
+    core = W x_C U^T x_S V^T.
+    """
+    s, c, kh, kw = w.shape
+    r1, r2 = int(r1), int(r2)
+    # mode-C unfolding: [C, S*k*k]
+    m_c = jnp.transpose(w, (1, 0, 2, 3)).reshape(c, s * kh * kw)
+    u_c = _mode_unfold_svd(m_c, r1)  # [C, r1]
+    # mode-S unfolding: [S, C*k*k]
+    m_s = w.reshape(s, c * kh * kw)
+    u_s = _mode_unfold_svd(m_s, r2)  # [S, r2]
+    core = jnp.einsum("schw,ci,sj->jihw", w, u_c, u_s)  # [r2, r1, k, k]
+    return TuckerFactors(u=u_c.T, core=core, v=u_s)
+
+
+def tucker2_reconstruct(f: TuckerFactors) -> jax.Array:
+    """Inverse of :func:`tucker2_decompose`: W' = core x_C U x_S V."""
+    return jnp.einsum("jihw,ic,sj->schw", f.core, f.u, f.v)
+
+
+def tucker_rank_for_ratio(
+    c: int, s: int, k: int, alpha: float, beta: float | None = None
+) -> tuple[int, int]:
+    """Eq. (7): ranks (r1, r2 = beta*r1) giving ``alpha``x compression.
+
+    orig = C*S*k^2;  decomposed = C*r1 + beta*r1^2*k^2 + beta*r1*S.
+    Solving the quadratic gives eq. (7) exactly. ``beta`` defaults to S/C
+    so the ranks scale with their channel dims (r1/C == r2/S).
+
+    Matches the paper's Table 2: (64,64,3,3) @ 2x -> 38; (512,512,3,3) @ 2x
+    -> 309.
+    """
+    if beta is None:
+        beta = s / c
+    k2 = k * k
+    term = (c + beta * s) / (beta * k2)
+    r1 = (-term + math.sqrt(term * term + 4.0 * c * s / (beta * alpha))) / 2.0
+    r1 = int(r1)
+    r1 = max(1, min(r1, c))
+    r2 = max(1, min(int(beta * r1), s))
+    return r1, r2
+
+
+# --------------------------------------------------------------------------
+# Layer merging (Fig. 3)
+# --------------------------------------------------------------------------
+
+
+class MergedBottleneck(NamedTuple):
+    """Bottleneck after Fig. 3 merging — back to exactly 3 conv layers.
+
+    ``w1m``: [r1, C]       conv1 merged with the Tucker U of conv2
+    ``core``: [r2, r1, k, k]
+    ``w3m``: [S3, r2]      conv3 merged with the Tucker V of conv2
+    """
+
+    w1m: jax.Array
+    core: jax.Array
+    w3m: jax.Array
+
+
+def merge_bottleneck(
+    w1: jax.Array, f2: TuckerFactors, w3: jax.Array
+) -> MergedBottleneck:
+    """Fold the 1x1 Tucker factors of conv2 into the adjacent 1x1 convs.
+
+    conv1':  U2 @ W1   ([r1, M] @ [M, C]  -> [r1, C])
+    conv3':  W3 @ V2   ([S, M] @ [M, r2] -> [S, r2])
+
+    Note (documented in DESIGN.md): the original block has BN+ReLU between
+    conv1 and conv2; merging commutes the product past them, so the merged
+    weights are an *initialisation* that fine-tuning polishes — exactly why
+    the paper reports a small ΔTop-1 for Layer Merging rather than zero.
+    """
+    return MergedBottleneck(w1m=f2.u @ w1, core=f2.core, w3m=w3 @ f2.v)
+
+
+# --------------------------------------------------------------------------
+# Branching Tucker, eq. (12)-(17)
+# --------------------------------------------------------------------------
+
+
+class BranchedFactors(NamedTuple):
+    """Grouped-conv implementation of N Tucker branches (Fig. 4 right).
+
+    ``u``:    [r1, C]              full 1x1 (concat of U_j)
+    ``core``: [r2, r1 // N, k, k]  grouped core (G = N)
+    ``v``:    [S, r2]              full 1x1 (concat of V_j)
+    """
+
+    u: jax.Array
+    core: jax.Array
+    v: jax.Array
+    groups: int
+
+
+def branch_tucker(f: TuckerFactors, groups: int) -> BranchedFactors:
+    """Split a Tucker stack into ``groups`` parallel branches (eq. 12-17).
+
+    Rank blocks j get U_j = U[jR1:(j+1)R1], V_j = V[:, jR2:(j+1)R2] and the
+    *diagonal* core blocks X_j = core[jR2:(j+1)R2, jR1:(j+1)R1]; off-diagonal
+    core blocks are dropped — that is the paper's N-fold core-parameter
+    reduction (eq. 18-20) and the reason branching needs fine-tuning.
+    """
+    r2, r1 = f.core.shape[0], f.core.shape[1]
+    if r1 % groups or r2 % groups:
+        raise ValueError(f"ranks ({r1},{r2}) not divisible by N={groups}")
+    b1, b2 = r1 // groups, r2 // groups
+    blocks = [
+        f.core[j * b2 : (j + 1) * b2, j * b1 : (j + 1) * b1] for j in range(groups)
+    ]
+    core = jnp.concatenate(blocks, axis=0)  # [r2, r1/N, k, k] grouped OIHW
+    return BranchedFactors(u=f.u, core=core, v=f.v, groups=groups)
+
+
+def quantize_ranks(r1: int, r2: int, groups: int) -> tuple[int, int]:
+    """Eq. (10)-(11): round ranks down to multiples of N (at least N)."""
+    return max(groups, r1 - r1 % groups), max(groups, r2 - r2 % groups)

@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the paper's compute hot-spots, plus the pure-jnp
+# oracle (ref.py) used by pytest and by the L2 model's reference path.
+from . import conv2d, grouped_conv, lowrank_matmul, ref  # noqa: F401

@@ -1,0 +1,111 @@
+"""Pallas kernel for the k x k core convolution of a Tucker-2 stack.
+
+Strategy (DESIGN.md §Hardware-Adaptation): instead of porting the paper's
+CUDA im2col-into-shared-memory scheme, we tile for VMEM — the grid walks
+(batch, out-channel tiles); each step holds one padded input image
+``(C, Hp, Wp)`` and one weight tile ``(bs, C, k, k)`` in VMEM and expresses
+the convolution as k*k shifted-slice matmuls that all hit the MXU:
+
+    out[s, :, :] = sum_{kh,kw}  W[s, :, kh, kw] @ X[:, kh::stride, kw::stride]
+
+The k*k loop is a static Python loop (k is 1/3/7 in ResNets), so the whole
+body unrolls into k^2 MXU contractions of shape (bs, C) x (C, Ho*Wo) — the
+same arithmetic as im2col without materialising the im2col matrix
+(C*k*k*Ho*Wo words) in memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(k: int, stride: int, ho: int, wo: int):
+    def kernel(x_ref, w_ref, o_ref):
+        # x_ref: (C, Hp, Wp)   one padded image
+        # w_ref: (bs, C, k, k) one output-channel tile
+        # o_ref: (bs, Ho, Wo)
+        c = x_ref.shape[0]
+        bs = w_ref.shape[0]
+        acc = jnp.zeros((bs, ho * wo), dtype=jnp.float32)
+        for kh in range(k):
+            for kw in range(k):
+                # strided window starting at (kh, kw): (C, Ho, Wo)
+                patch = jax.lax.slice(
+                    x_ref[...],
+                    (0, kh, kw),
+                    (c, kh + (ho - 1) * stride + 1, kw + (wo - 1) * stride + 1),
+                    (1, stride, stride),
+                )
+                acc += jnp.dot(
+                    w_ref[:, :, kh, kw],
+                    patch.reshape(c, ho * wo),
+                    preferred_element_type=jnp.float32,
+                )
+        o_ref[...] = acc.reshape(bs, ho, wo).astype(o_ref.dtype)
+
+    return kernel
+
+
+def _round_block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "padding", "block_s", "interpret")
+)
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    block_s: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """NCHW conv via shifted-slice matmuls. x: [N,C,H,W], w: [S,C,k,k]."""
+    n, c, h, wdt = x.shape
+    s, c2, kh, kw = w.shape
+    if c != c2 or kh != kw:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape}")
+    k = kh
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    hp, wp = h + 2 * padding, wdt + 2 * padding
+    ho = (hp - k) // stride + 1
+    wo = (wp - k) // stride + 1
+    bs = _round_block(s, block_s)
+    grid = (n, s // bs)
+    return pl.pallas_call(
+        _make_kernel(k, stride, ho, wo),
+        grid=grid,
+        in_specs=[
+            # Leading `None` squeezes the batch dim: the kernel sees (C,Hp,Wp).
+            pl.BlockSpec((None, c, hp, wp), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((bs, c, k, k), lambda i, j: (j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bs, ho, wo), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, s, ho, wo), x.dtype),
+        interpret=interpret,
+    )(xp, w)
+
+
+def vmem_bytes(
+    c: int, s: int, h: int, w: int, k: int, padding: int = 0, block_s: int = 128
+) -> int:
+    """f32 VMEM footprint of one grid step (input image + weight tile + acc)."""
+    bs = _round_block(s, block_s)
+    hp, wp = h + 2 * padding, w + 2 * padding
+    ho, wo = hp - k + 1, wp - k + 1
+    words = c * hp * wp + bs * c * k * k + 2 * bs * ho * wo
+    return 4 * words
+
+
+def mxu_flops(n: int, c: int, s: int, ho: int, wo: int, k: int) -> int:
+    """MACs through the MXU for one call."""
+    return n * s * c * k * k * ho * wo

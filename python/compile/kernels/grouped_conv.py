@@ -1,0 +1,101 @@
+"""Pallas kernel for the Branching-Tucker grouped convolution (Fig. 4).
+
+The N parallel Tucker branches of eq. (17) become ONE grouped conv: the
+grid walks (batch, group); each step convolves the group's input-channel
+slab ``(Cg, Hp, Wp)`` against the group's weight block ``(Sg, Cg, k, k)``
+and writes the group's output-channel slab. Branch parallelism is thus
+expressed as grid parallelism — on TPU each branch is an independent MXU
+stream with a 1/N^2-sized weight block (the paper's N-fold core-parameter
+reduction, eq. 18-20), on CPU-PJRT each grid step is an independent
+vectorised loop nest.
+
+Same shifted-slice-matmul body as ``conv2d.py`` — see that file for the
+im2col-free rationale.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(k: int, stride: int, ho: int, wo: int):
+    def kernel(x_ref, w_ref, o_ref):
+        # x_ref: (Cg, Hp, Wp) — this group's input slab
+        # w_ref: (Sg, Cg, k, k) — this group's weights
+        # o_ref: (Sg, Ho, Wo)
+        cg = x_ref.shape[0]
+        sg = w_ref.shape[0]
+        acc = jnp.zeros((sg, ho * wo), dtype=jnp.float32)
+        for kh in range(k):
+            for kw in range(k):
+                patch = jax.lax.slice(
+                    x_ref[...],
+                    (0, kh, kw),
+                    (cg, kh + (ho - 1) * stride + 1, kw + (wo - 1) * stride + 1),
+                    (1, stride, stride),
+                )
+                acc += jnp.dot(
+                    w_ref[:, :, kh, kw],
+                    patch.reshape(cg, ho * wo),
+                    preferred_element_type=jnp.float32,
+                )
+        o_ref[...] = acc.reshape(sg, ho, wo).astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("groups", "stride", "padding", "interpret")
+)
+def grouped_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    groups: int,
+    stride: int = 1,
+    padding: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Grouped NCHW conv. x: [N, C, H, W], w: [S, C//G, k, k] -> [N, S, Ho, Wo]."""
+    n, c, h, wdt = x.shape
+    s, cg, kh, kw = w.shape
+    if kh != kw:
+        raise ValueError(f"non-square kernel {w.shape}")
+    if c % groups or s % groups or cg != c // groups:
+        raise ValueError(f"bad grouping: C={c} S={s} G={groups} w{w.shape}")
+    k = kh
+    sg = s // groups
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    hp, wp = h + 2 * padding, wdt + 2 * padding
+    ho = (hp - k) // stride + 1
+    wo = (wp - k) // stride + 1
+    grid = (n, groups)
+    return pl.pallas_call(
+        _make_kernel(k, stride, ho, wo),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, cg, hp, wp), lambda i, g: (i, g, 0, 0)),
+            pl.BlockSpec((sg, cg, k, k), lambda i, g: (g, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, sg, ho, wo), lambda i, g: (i, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, s, ho, wo), x.dtype),
+        interpret=interpret,
+    )(xp, w)
+
+
+def vmem_bytes(c: int, s: int, groups: int, h: int, w: int, k: int, padding: int = 0) -> int:
+    """f32 VMEM footprint of one grid step (one group's slab + weights + acc)."""
+    cg, sg = c // groups, s // groups
+    hp, wp = h + 2 * padding, w + 2 * padding
+    ho, wo = hp - k + 1, wp - k + 1
+    words = cg * hp * wp + sg * cg * k * k + 2 * sg * ho * wo
+    return 4 * words
+
+
+def core_params(r1: int, r2: int, k: int, groups: int) -> int:
+    """Eq. (18)-(20): grouped core holds (r1*r2*k^2)/N parameters."""
+    return (r1 // groups) * (r2 // groups) * k * k * groups

@@ -1,0 +1,90 @@
+"""Pallas kernel for the SVD-decomposed linear layer (paper eq. 3).
+
+Computes ``y = (x @ W0) @ W1`` in one fused kernel so the rank-R
+intermediate never round-trips through HBM: per grid step, a ``(bm, R)``
+tile of ``t = x @ W0`` lives in VMEM scratch and is immediately contracted
+against a ``(R, bn)`` tile of W1.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): both contractions hit the
+MXU; the win over two separate matmul dispatches is the elided HBM write +
+read of ``t`` (2·B·R·4 bytes). VMEM footprint per step is
+``bm·C + C·R + R·bn + bm·R + bm·bn`` f32 words — block shapes below are
+chosen to keep that under ~2 MiB for the ResNet shapes we sweep.
+
+CPU note: lowered with ``interpret=True`` (Mosaic custom-calls cannot run
+on the CPU PJRT plugin); numerics are still exactly the kernel's.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w0_ref, w1_ref, o_ref):
+    # x_ref: (bm, C); w0_ref: (C, R); w1_ref: (R, bn); o_ref: (bm, bn)
+    t = jnp.dot(x_ref[...], w0_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(t, w1_ref[...], preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def _round_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (keeps the grid exact)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def lowrank_matmul(
+    x: jax.Array,
+    w0: jax.Array,
+    w1: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused ``(x @ w0) @ w1``. x: [B, C], w0: [C, R], w1: [R, S] -> [B, S]."""
+    b, c = x.shape
+    c2, r = w0.shape
+    r2, s = w1.shape
+    if c != c2 or r != r2:
+        raise ValueError(f"shape mismatch: x{x.shape} w0{w0.shape} w1{w1.shape}")
+    bm = _round_block(b, block_m)
+    bn = _round_block(s, block_n)
+    grid = (b // bm, s // bn)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((c, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, s), x.dtype),
+        interpret=interpret,
+    )(x, w0, w1)
+
+
+def vmem_bytes(b: int, c: int, r: int, s: int, block_m: int = 128, block_n: int = 128) -> int:
+    """Analytic VMEM footprint (f32 words x4) of one grid step.
+
+    Used by the §Perf analysis and mirrored by the rust cost model
+    (``model::cost::lowrank_vmem_bytes``) — keep the two in sync.
+    """
+    bm = _round_block(b, block_m)
+    bn = _round_block(s, block_n)
+    words = bm * c + c * r + r * bn + bm * r + bm * bn
+    return 4 * words
+
+
+def mxu_flops(b: int, c: int, r: int, s: int) -> int:
+    """MACs routed through the MXU for one call (both contractions)."""
+    return b * c * r + b * r * s

@@ -1,0 +1,143 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+These are the ground truth the pytest suite checks the Pallas kernels
+against (`assert_allclose`). They are written with `jax.lax` / `jnp`
+primitives only — no Pallas — so they execute on any backend and are
+trivially auditable against the paper's equations:
+
+* ``lowrank_matmul``   — eq. (3):  y = (x @ W0) @ W1      (SVD-decomposed FC / 1x1 conv)
+* ``conv2d``           — the regular k x k convolution (NCHW)
+* ``grouped_conv2d``   — Fig. 4: grouped convolution used by Branching Tucker
+* ``tucker_conv_stack``— Fig. 1b: 1x1 -> k x k core -> 1x1 Tucker-2 stack
+* ``branched_tucker``  — eq. (17): explicit N-branch sum (used to prove the
+                          grouped-conv equivalence of Fig. 4)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lowrank_matmul(x: jax.Array, w0: jax.Array, w1: jax.Array) -> jax.Array:
+    """SVD-decomposed linear layer, eq. (3): ``y = (x @ W0) @ W1``.
+
+    x: [B, C], w0: [C, R], w1: [R, S] -> [B, S].
+    """
+    return (x @ w0) @ w1
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+) -> jax.Array:
+    """NCHW convolution. x: [N, C, H, W], w: [S, C, kh, kw] -> [N, S, Ho, Wo]."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def grouped_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    groups: int,
+    stride: int = 1,
+    padding: int = 0,
+) -> jax.Array:
+    """Grouped NCHW convolution (Fig. 4 right).
+
+    x: [N, C, H, W], w: [S, C // groups, kh, kw] -> [N, S, Ho, Wo].
+    """
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+    )
+
+
+def conv1x1(x: jax.Array, w: jax.Array) -> jax.Array:
+    """1x1 convolution as a channel matmul. x: [N, C, H, W], w: [S, C]."""
+    return jnp.einsum("nchw,sc->nshw", x, w)
+
+
+def tucker_conv_stack(
+    x: jax.Array,
+    u: jax.Array,
+    core: jax.Array,
+    v: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+) -> jax.Array:
+    """Tucker-2 decomposed k x k conv (Fig. 1b).
+
+    ``u``:    [r1, C]          first 1x1 conv (input projection, U'^T)
+    ``core``: [r2, r1, k, k]   the core k x k conv
+    ``v``:    [S, r2]          last 1x1 conv (output projection, V')
+    """
+    y = conv1x1(x, u)
+    y = conv2d(y, core, stride=stride, padding=padding)
+    return conv1x1(y, v)
+
+
+def branched_tucker(
+    x: jax.Array,
+    us: jax.Array,
+    cores: jax.Array,
+    vs: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+) -> jax.Array:
+    """Eq. (17): N explicit parallel Tucker branches, summed.
+
+    ``us``:    [N, R1, C]
+    ``cores``: [N, R2, R1, k, k]
+    ``vs``:    [N, S, R2]
+
+    The paper's Fig. 4 claims this equals one grouped-conv stack with
+    U = concat_j U_j, core = block-diag (grouped, G=N), V = concat_j V_j.
+    """
+    n = us.shape[0]
+    out = None
+    for j in range(n):
+        y = tucker_conv_stack(
+            x, us[j], cores[j], vs[j], stride=stride, padding=padding
+        )
+        out = y if out is None else out + y
+    return out
+
+
+def branched_as_grouped(
+    x: jax.Array,
+    us: jax.Array,
+    cores: jax.Array,
+    vs: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+) -> jax.Array:
+    """The grouped-convolution implementation of eq. (17) / Fig. 4.
+
+    Same inputs as :func:`branched_tucker`; internally rewrites the N
+    branches as   1x1 (C -> N*R1)  ->  grouped k x k (G=N)  ->  1x1 (N*R2 -> S).
+    """
+    n, r1, _c = us.shape
+    _n, r2, _r1, kh, kw = cores.shape
+    u_cat = us.reshape(n * r1, -1)  # [N*R1, C]
+    core_cat = cores.reshape(n * r2, r1, kh, kw)  # grouped OIHW, G=N
+    v_cat = jnp.concatenate([vs[j] for j in range(n)], axis=1)  # [S, N*R2]
+    y = conv1x1(x, u_cat)
+    y = grouped_conv2d(y, core_cat, groups=n, stride=stride, padding=padding)
+    return conv1x1(y, v_cat)

@@ -1,0 +1,534 @@
+"""L2 model: functional ResNet family, parameterised by a decomposition plan.
+
+One code path builds every variant the paper evaluates:
+
+* ``orig``      — the stock architecture
+* ``lrd``       — vanilla LRD (paper §2): SVD on FC/1x1, Tucker-2 on k x k
+* ``opt``       — like ``lrd`` but with externally supplied (Algorithm 1)
+                  per-site ranks; sites may opt out (keep the original layer)
+* ``merged``    — Fig. 3 layer merging inside bottlenecks
+* ``branched``  — Fig. 4 branching Tucker (grouped core convs)
+* ``freeze``    — same params as ``lrd``; the *train step* freezes the
+                  1x1 factor layers (see train.py), forward is identical
+
+The network is described as a list of :class:`ConvSite` records; a *plan*
+maps each site name to a :class:`Scheme`. ``decompose_params`` turns
+original weights into variant weights (the paper's "one-shot KD" init), and
+``forward`` interprets (sites, plan, params) functionally — so jit/grad/AOT
+all see a single pure function.
+
+BatchNorm is modelled as batch-statistics normalisation with learnable
+scale/shift (train and eval — no running-stats state; documented in
+DESIGN.md substitutions). Conv weights are OIHW; FC weight is [classes, F].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import decompose as D
+from .kernels import conv2d as pl_conv
+from .kernels import grouped_conv as pl_gconv
+from .kernels import lowrank_matmul as pl_lrmm
+from .kernels import ref as R
+
+# --------------------------------------------------------------------------
+# Architecture description
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSite:
+    """One decomposable weight site (conv or fc) in the network."""
+
+    name: str
+    c: int  # input channels (fc: input features)
+    s: int  # output channels (fc: classes)
+    k: int  # kernel size (fc: 1)
+    stride: int = 1
+    padding: int = 0
+    kind: str = "conv"  # "stem" | "conv" | "downsample" | "fc"
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    name: str
+    block: str  # "basic" | "bottleneck"
+    layers: tuple[int, int, int, int]
+    width: int = 64
+    expansion: int = 4
+    classes: int = 1000
+
+    @property
+    def stage_widths(self) -> tuple[int, int, int, int]:
+        w = self.width
+        return (w, 2 * w, 4 * w, 8 * w)
+
+
+ARCHS: dict[str, Arch] = {
+    "resnet18": Arch("resnet18", "basic", (2, 2, 2, 2), expansion=1),
+    "resnet34": Arch("resnet34", "basic", (3, 4, 6, 3), expansion=1),
+    "resnet50": Arch("resnet50", "bottleneck", (3, 4, 6, 3)),
+    "resnet101": Arch("resnet101", "bottleneck", (3, 4, 23, 3)),
+    "resnet152": Arch("resnet152", "bottleneck", (3, 8, 36, 3)),
+    # tiny bottleneck net for the fine-tuning simulations (Tables 4-6)
+    "resnet-mini": Arch("resnet-mini", "bottleneck", (1, 1, 1, 1), width=16, classes=10),
+}
+
+
+def sites(arch: Arch) -> list[ConvSite]:
+    """Enumerate every decomposable site, torch-style names (Table 2)."""
+    out: list[ConvSite] = [
+        ConvSite("stem.conv", 3, arch.width, 7, stride=2, padding=3, kind="stem")
+    ]
+    c_in = arch.width
+    for si, (n_blocks, w) in enumerate(zip(arch.layers, arch.stage_widths)):
+        stride = 1 if si == 0 else 2
+        c_out = w * arch.expansion
+        for bi in range(n_blocks):
+            pre = f"layer{si + 1}.{bi}"
+            blk_stride = stride if bi == 0 else 1
+            if arch.block == "bottleneck":
+                out.append(ConvSite(f"{pre}.conv1", c_in, w, 1))
+                out.append(
+                    ConvSite(f"{pre}.conv2", w, w, 3, stride=blk_stride, padding=1)
+                )
+                out.append(ConvSite(f"{pre}.conv3", w, c_out, 1))
+            else:
+                c_out = w
+                out.append(
+                    ConvSite(f"{pre}.conv1", c_in, w, 3, stride=blk_stride, padding=1)
+                )
+                out.append(ConvSite(f"{pre}.conv2", w, w, 3, padding=1))
+            if bi == 0 and (blk_stride != 1 or c_in != c_out):
+                out.append(
+                    ConvSite(
+                        f"{pre}.downsample",
+                        c_in,
+                        c_out,
+                        1,
+                        stride=blk_stride,
+                        kind="downsample",
+                    )
+                )
+            c_in = c_out
+    out.append(ConvSite("fc", c_in, arch.classes, 1, kind="fc"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Plans
+# --------------------------------------------------------------------------
+
+# Scheme tuples (kept as plain tuples so plans serialise to JSON):
+#   ("orig",)
+#   ("svd", r)                      k == 1 or fc
+#   ("tucker", r1, r2)              k > 1
+#   ("branched", r1, r2, groups)    k > 1
+#   ("merged", r1, r2)              on conv2; conv1/conv3 of the block get
+#                                   ("merged_into", peer) markers
+Scheme = tuple
+
+
+def plan_variant(
+    arch: Arch,
+    variant: str,
+    *,
+    alpha: float = 2.0,
+    groups: int = 4,
+    ranks: dict[str, Scheme] | None = None,
+) -> dict[str, Scheme]:
+    """Build the decomposition plan for one of the paper's five variants.
+
+    The stem conv is never decomposed (3 input channels — decomposition
+    cannot reach the target ratio and the paper's Table 1 layer counts
+    confirm they skip it). ``ranks`` overrides per-site schemes for the
+    ``opt`` variant (output of the rust Algorithm 1 search).
+    """
+    plan: dict[str, Scheme] = {}
+    site_list = sites(arch)
+    by_name = {t.name: t for t in site_list}
+    for t in site_list:
+        if t.kind == "stem" or variant == "orig":
+            plan[t.name] = ("orig",)
+            continue
+        if variant in ("lrd", "freeze"):
+            plan[t.name] = _ratio_scheme(t, alpha)
+        elif variant == "opt":
+            plan[t.name] = (ranks or {}).get(t.name, _ratio_scheme(t, alpha))
+        elif variant == "merged":
+            plan[t.name] = _ratio_scheme(t, alpha)  # refined below
+        elif variant == "branched":
+            if t.k > 1:
+                # Branch the alpha-compression ranks: eq. (18)-(20) shrinks the
+                # core a further N-fold *without lowering the ranks*, which is
+                # how Table 6 compounds -47.69% (vanilla) into -66.75%.
+                r1, r2 = D.tucker_rank_for_ratio(t.c, t.s, t.k, alpha)
+                r1, r2 = D.quantize_ranks(min(r1, t.c), min(r2, t.s), groups)
+                plan[t.name] = ("branched", r1, r2, groups)
+            else:
+                plan[t.name] = _ratio_scheme(t, alpha)
+        else:
+            raise ValueError(f"unknown variant {variant!r}")
+    if variant == "merged":
+        if arch.block != "bottleneck":
+            raise ValueError("layer merging is defined for bottleneck nets")
+        for t in site_list:
+            if t.name.endswith(".conv2"):
+                pre = t.name[: -len(".conv2")]
+                r1, r2 = D.tucker_rank_for_ratio(t.c, t.s, t.k, alpha)
+                plan[t.name] = ("merged", r1, r2)
+                plan[f"{pre}.conv1"] = ("merged_into", t.name)
+                plan[f"{pre}.conv3"] = ("merged_into", t.name)
+            elif t.kind == "downsample":
+                plan[t.name] = _ratio_scheme(t, alpha)
+            elif t.kind == "fc":
+                # fc has no adjacent 1x1 to merge with; keeping it original
+                # preserves the paper's "same layer count" claim (Table 3).
+                plan[t.name] = ("orig",)
+        # non-conv2 1x1s inside blocks already marked merged_into above
+    _ = by_name
+    return plan
+
+
+def _ratio_scheme(t: ConvSite, alpha: float) -> Scheme:
+    if t.k == 1:
+        return ("svd", D.svd_rank_for_ratio(t.c, t.s, alpha))
+    r1, r2 = D.tucker_rank_for_ratio(t.c, t.s, t.k, alpha)
+    return ("tucker", r1, r2)
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def init_params(arch: Arch, key: jax.Array) -> dict[str, jax.Array]:
+    """He-init original weights + BN scale/shift for every site."""
+    params: dict[str, jax.Array] = {}
+    for t in sites(arch):
+        key, sub = jax.random.split(key)
+        fan_in = t.c * t.k * t.k
+        std = (2.0 / fan_in) ** 0.5
+        if t.kind == "fc":
+            params[f"{t.name}.w"] = jax.random.normal(sub, (t.s, t.c)) * std
+            params[f"{t.name}.b"] = jnp.zeros((t.s,))
+        else:
+            shape = (t.s, t.c) if t.k == 1 else (t.s, t.c, t.k, t.k)
+            params[f"{t.name}.w"] = jax.random.normal(sub, shape) * std
+            params[f"{t.name}.bn.g"] = jnp.ones((t.s,))
+            params[f"{t.name}.bn.b"] = jnp.zeros((t.s,))
+    return params
+
+
+def decompose_params(
+    arch: Arch, plan: dict[str, Scheme], params: dict[str, jax.Array]
+) -> dict[str, jax.Array]:
+    """One-shot init of the variant weights from the original weights.
+
+    This is the paper's "built-in one-shot knowledge distillation": every
+    factor is *computed* from the teacher weight, never random.
+    """
+    out: dict[str, jax.Array] = {}
+    site_list = sites(arch)
+    by_name = {t.name: t for t in site_list}
+    for t in site_list:
+        scheme = plan.get(t.name, ("orig",))
+        kind = scheme[0]
+        w = params[f"{t.name}.w"]
+        if t.kind != "fc":
+            out[f"{t.name}.bn.g"] = params[f"{t.name}.bn.g"]
+            out[f"{t.name}.bn.b"] = params[f"{t.name}.bn.b"]
+        if kind == "orig":
+            out[f"{t.name}.w"] = w
+            if t.kind == "fc":
+                out[f"{t.name}.b"] = params[f"{t.name}.b"]
+        elif kind == "svd":
+            f = D.svd_decompose(w, scheme[1])
+            out[f"{t.name}.w0"] = f.w0
+            out[f"{t.name}.w1"] = f.w1
+            if t.kind == "fc":
+                out[f"{t.name}.b"] = params[f"{t.name}.b"]
+        elif kind == "tucker":
+            f = D.tucker2_decompose(w, scheme[1], scheme[2])
+            out[f"{t.name}.u"] = f.u
+            out[f"{t.name}.core"] = f.core
+            out[f"{t.name}.v"] = f.v
+        elif kind == "branched":
+            r1, r2, g = scheme[1], scheme[2], scheme[3]
+            f = D.branch_tucker(D.tucker2_decompose(w, r1, r2), g)
+            out[f"{t.name}.u"] = f.u
+            out[f"{t.name}.core"] = f.core
+            out[f"{t.name}.v"] = f.v
+        elif kind == "merged":
+            pre = t.name[: -len(".conv2")]
+            f = D.tucker2_decompose(w, scheme[1], scheme[2])
+            w1 = params[f"{pre}.conv1.w"]
+            w3 = params[f"{pre}.conv3.w"]
+            m = D.merge_bottleneck(w1, f, w3)
+            out[f"{pre}.conv1.w"] = m.w1m
+            out[f"{t.name}.w"] = m.core
+            out[f"{pre}.conv3.w"] = m.w3m
+            # BN of conv1/conv3 now acts on r1/r2 channels; re-init affine.
+            out[f"{pre}.conv1.bn.g"] = jnp.ones((scheme[1],))
+            out[f"{pre}.conv1.bn.b"] = jnp.zeros((scheme[1],))
+            out[f"{pre}.conv2.bn.g"] = jnp.ones((scheme[2],))
+            out[f"{pre}.conv2.bn.b"] = jnp.zeros((scheme[2],))
+        elif kind == "merged_into":
+            pass  # weights written by the peer conv2 site above
+        else:
+            raise ValueError(f"unknown scheme {scheme!r} at {t.name}")
+    _ = by_name
+    return out
+
+
+def freeze_mask(
+    arch: Arch, plan: dict[str, Scheme], params: dict[str, jax.Array]
+) -> dict[str, bool]:
+    """Paper §2.2: trainable=False for the SVD/Tucker 1x1 factor weights.
+
+    Frozen: ``w0`` of SVD pairs (Fig. 1a "first 1x1") and ``u``/``v`` of
+    Tucker stacks (Fig. 1b "first and last 1x1"). Everything else trains.
+    """
+    frozen_suffix = (".w0", ".u", ".v")
+    return {
+        name: not any(name.endswith(sfx) for sfx in frozen_suffix)
+        for name in params
+    }
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def _bn(x: jax.Array, g: jax.Array, b: jax.Array) -> jax.Array:
+    mean = jnp.mean(x, axis=(0, 2, 3), keepdims=True)
+    var = jnp.var(x, axis=(0, 2, 3), keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + 1e-5)
+    return xn * g[None, :, None, None] + b[None, :, None, None]
+
+
+def _conv1x1(x: jax.Array, w: jax.Array, stride: int) -> jax.Array:
+    if stride != 1:
+        x = x[:, :, ::stride, ::stride]
+    return R.conv1x1(x, w)
+
+
+def _apply_site(
+    t: ConvSite,
+    plan: dict[str, Scheme],
+    p: dict[str, jax.Array],
+    x: jax.Array,
+    *,
+    use_pallas: bool,
+) -> jax.Array:
+    """Run one conv site's (possibly decomposed) stack, without BN/ReLU."""
+    scheme = plan.get(t.name, ("orig",))
+    kind = scheme[0]
+    n = t.name
+    if kind == "merged_into":
+        # 1x1 conv carrying the Fig. 3 product weight ([r1, C] or [S, r2]).
+        return _conv1x1(x, p[f"{n}.w"], t.stride)
+    if kind in ("orig", "merged"):
+        w = p[f"{n}.w"]
+        if t.k == 1 and w.ndim == 2:
+            return _conv1x1(x, w, t.stride)
+        conv = pl_conv.conv2d if use_pallas else None
+        if conv is not None:
+            return conv(x, w, stride=t.stride, padding=t.padding)
+        return R.conv2d(x, w, stride=t.stride, padding=t.padding)
+    if kind == "svd":
+        y = _conv1x1(x, p[f"{n}.w0"], t.stride)
+        return R.conv1x1(y, p[f"{n}.w1"])
+    if kind == "tucker":
+        y = R.conv1x1(x, p[f"{n}.u"])
+        core = p[f"{n}.core"]
+        if use_pallas:
+            y = pl_conv.conv2d(y, core, stride=t.stride, padding=t.padding)
+        else:
+            y = R.conv2d(y, core, stride=t.stride, padding=t.padding)
+        return R.conv1x1(y, p[f"{n}.v"])
+    if kind == "branched":
+        g = scheme[3]
+        y = R.conv1x1(x, p[f"{n}.u"])
+        core = p[f"{n}.core"]
+        if use_pallas:
+            y = pl_gconv.grouped_conv2d(
+                y, core, groups=g, stride=t.stride, padding=t.padding
+            )
+        else:
+            y = R.grouped_conv2d(
+                y, core, groups=g, stride=t.stride, padding=t.padding
+            )
+        return R.conv1x1(y, p[f"{n}.v"])
+    raise ValueError(f"cannot apply scheme {scheme!r} at {t.name}")
+
+
+def forward(
+    arch: Arch,
+    plan: dict[str, Scheme],
+    params: dict[str, jax.Array],
+    x: jax.Array,
+    *,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Full network forward. x: [N, 3, H, W] -> logits [N, classes]."""
+    site_list = sites(arch)
+    by_name = {t.name: t for t in site_list}
+
+    def site_bn_relu(name: str, x: jax.Array, relu: bool = True) -> jax.Array:
+        t = by_name[name]
+        # Merged conv1/conv3 sites carry rewritten weights under their own
+        # names; `merged_into` is resolved by _apply_site via stored params.
+        y = _apply_site(t, plan, params, x, use_pallas=use_pallas)
+        y = _bn(y, params[f"{name}.bn.g"], params[f"{name}.bn.b"])
+        return jax.nn.relu(y) if relu else y
+
+    # Stem
+    y = site_bn_relu("stem.conv", x)
+    y = _maxpool(y, 3, 2, 1)
+
+    c_in = arch.width
+    for si, (n_blocks, w) in enumerate(zip(arch.layers, arch.stage_widths)):
+        stride = 1 if si == 0 else 2
+        c_out = w * arch.expansion if arch.block == "bottleneck" else w
+        for bi in range(n_blocks):
+            pre = f"layer{si + 1}.{bi}"
+            blk_stride = stride if bi == 0 else 1
+            identity = y
+            if arch.block == "bottleneck":
+                h = site_bn_relu(f"{pre}.conv1", y)
+                h = site_bn_relu(f"{pre}.conv2", h)
+                h = site_bn_relu(f"{pre}.conv3", h, relu=False)
+            else:
+                h = site_bn_relu(f"{pre}.conv1", y)
+                h = site_bn_relu(f"{pre}.conv2", h, relu=False)
+            if f"{pre}.downsample" in by_name:
+                identity = site_bn_relu(f"{pre}.downsample", y, relu=False)
+            y = jax.nn.relu(h + identity)
+            c_in = c_out
+    _ = c_in
+
+    # Head
+    y = jnp.mean(y, axis=(2, 3))  # global average pool -> [N, F]
+    fcn = "fc"
+    scheme = plan.get(fcn, ("orig",))
+    if scheme[0] == "svd":
+        w0, w1 = params[f"{fcn}.w0"], params[f"{fcn}.w1"]
+        if use_pallas:
+            logits = pl_lrmm.lowrank_matmul(y, w0.T, w1.T)
+        else:
+            logits = R.lowrank_matmul(y, w0.T, w1.T)
+    else:
+        logits = y @ params[f"{fcn}.w"].T
+    return logits + params[f"{fcn}.b"]
+
+
+def _maxpool(x: jax.Array, k: int, stride: int, padding: int) -> jax.Array:
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        (1, 1, k, k),
+        (1, 1, stride, stride),
+        [(0, 0), (0, 0), (padding, padding), (padding, padding)],
+    )
+
+
+# --------------------------------------------------------------------------
+# Cost accounting (mirrored by rust `model::cost` — keep in sync)
+# --------------------------------------------------------------------------
+
+
+def count_layers(arch: Arch, plan: dict[str, Scheme]) -> int:
+    """Conv+FC layer count, the paper's Table 1 "Layers" column."""
+    n = 0
+    for t in sites(arch):
+        if t.kind == "downsample":
+            continue  # torch convention: downsample convs aren't counted
+        scheme = plan.get(t.name, ("orig",))
+        n += {
+            "orig": 1,
+            "merged": 1,
+            "merged_into": 1,
+            "svd": 2,
+            "tucker": 3,
+            "branched": 3,
+        }[scheme[0]]
+    return n
+
+
+def count_params(plan: dict[str, Scheme], params: dict[str, jax.Array]) -> int:
+    return sum(int(v.size) for v in params.values())
+
+
+def flops(
+    arch: Arch, plan: dict[str, Scheme], hw: int = 224
+) -> int:
+    """Multiply-accumulate count of the conv/fc stack (x2 for FLOPs)."""
+    total = 0
+    h = w = hw
+    site_list = sites(arch)
+    by_name = {t.name: t for t in site_list}
+    spatial: dict[str, tuple[int, int]] = {}
+    # replay the forward's spatial sizes
+    h, w = (hw + 1) // 2, (hw + 1) // 2  # stem stride 2
+    spatial["stem.conv"] = (h, w)
+    h, w = (h + 1) // 2, (w + 1) // 2  # maxpool
+    for si, n_blocks in enumerate(arch.layers):
+        stride = 1 if si == 0 else 2
+        for bi in range(n_blocks):
+            pre = f"layer{si + 1}.{bi}"
+            blk_stride = stride if bi == 0 else 1
+            h_in, w_in = h, w
+            if blk_stride == 2:
+                h, w = (h + 1) // 2, (w + 1) // 2
+            if arch.block == "bottleneck":
+                # conv1 is stride-1 and runs at the block's input resolution;
+                # the stride lives on conv2.
+                spatial[f"{pre}.conv1"] = (h_in, w_in)
+                spatial[f"{pre}.conv2"] = (h, w)
+                spatial[f"{pre}.conv3"] = (h, w)
+            else:
+                spatial[f"{pre}.conv1"] = (h, w)
+                spatial[f"{pre}.conv2"] = (h, w)
+            if f"{pre}.downsample" in by_name:
+                spatial[f"{pre}.downsample"] = (h, w)
+    spatial["fc"] = (1, 1)
+    for t in site_list:
+        ho, wo = spatial[t.name]
+        total += _site_macs(t, plan, ho, wo)
+    return total
+
+
+def _site_macs(t: ConvSite, plan: dict[str, Scheme], ho: int, wo: int) -> int:
+    scheme = plan.get(t.name, ("orig",))
+    a = ho * wo
+    k2 = t.k * t.k
+    kind = scheme[0]
+    if kind == "orig":
+        return a * t.c * t.s * k2
+    if kind == "svd":
+        r = scheme[1]
+        return a * r * (t.c + t.s)
+    if kind == "tucker":
+        r1, r2 = scheme[1], scheme[2]
+        return a * (t.c * r1 + r1 * r2 * k2 + r2 * t.s)
+    if kind == "branched":
+        r1, r2, g = scheme[1], scheme[2], scheme[3]
+        return a * (t.c * r1 + (r1 // g) * (r2 // g) * k2 * g + r2 * t.s)
+    if kind == "merged":
+        # conv2 core only; merged 1x1s accounted by their own sites
+        r1, r2 = scheme[1], scheme[2]
+        return a * r1 * r2 * k2
+    if kind == "merged_into":
+        # rewritten 1x1: conv1' is [r1, C], conv3' is [S, r2] (Fig. 3)
+        peer = plan[scheme[1]]
+        r1, r2 = peer[1], peer[2]
+        return a * t.c * r1 if t.name.endswith(".conv1") else a * r2 * t.s
+    raise ValueError(f"unknown scheme {scheme!r}")

@@ -1,0 +1,92 @@
+"""AOT emitter: artifacts exist, manifests are consistent, HLO text is sane."""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    fwd = aot.emit_forward(out, "resnet-mini", "lrd", hw=32, batch=2)
+    trn = aot.emit_train(out, "resnet-mini", "freeze", hw=32, batch=4)
+    return out, fwd, trn
+
+
+class TestForwardArtifact:
+    def test_hlo_text_structure(self, emitted):
+        out, fwd, _ = emitted
+        text = (out / fwd["hlo"]).read_text()
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        # return_tuple=True: root is a tuple
+        assert "(f32[" in text
+
+    def test_param_files_match_manifest_shapes(self, emitted):
+        out, fwd, _ = emitted
+        for p in fwd["params"]:
+            data = np.fromfile(out / p["file"], dtype=np.float32)
+            assert data.size == int(np.prod(p["shape"])), p["name"]
+
+    def test_expected_logits_recorded(self, emitted):
+        _, fwd, _ = emitted
+        row = fwd["expected"]["logits_row0"]
+        assert len(row) == 8
+        assert all(np.isfinite(row))
+
+    def test_det_input_reproducible(self):
+        a = aot.det_input(2, 8)
+        b = aot.det_input(2, 8)
+        np.testing.assert_array_equal(a, b)
+        assert a[0, 0, 0, 0] == np.float32(0.0)
+        assert abs(float(a.flat[1]) - np.sin(0.01) * 0.5) < 1e-9
+
+    def test_plan_serialised(self, emitted):
+        _, fwd, _ = emitted
+        assert fwd["plan"]["stem.conv"] == ["orig"]
+        assert fwd["plan"]["layer1.0.conv2"][0] == "tucker"
+
+
+class TestTrainArtifact:
+    def test_frozen_params_nonempty(self, emitted):
+        _, _, trn = emitted
+        assert len(trn["frozen_params"]) > 0
+        for p in trn["frozen_params"]:
+            assert p["name"].endswith((".w0", ".u", ".v"))
+
+    def test_loss0_near_log_classes(self, emitted):
+        _, _, trn = emitted
+        # untrained net on 10 classes: loss ~ ln(10) = 2.30 (one-shot-KD init
+        # keeps the head near uniform)
+        assert 1.0 < trn["expected"]["loss0"] < 4.5
+
+    def test_hlo_has_int_labels(self, emitted):
+        out, _, trn = emitted
+        text = (out / trn["hlo"]).read_text()
+        assert "s32[4]" in text  # the label argument
+
+
+class TestManifestCli:
+    def test_cli_writes_manifest(self, tmp_path, monkeypatch):
+        import sys
+
+        monkeypatch.setattr(
+            sys,
+            "argv",
+            ["aot", "--out", str(tmp_path), "--only", "resnet-mini_merged"],
+        )
+        aot.main()
+        m = json.loads((tmp_path / "manifest.json").read_text())
+        names = sorted(e["name"] for e in m["artifacts"])
+        # the merged filter matches both the fwd and the train job
+        assert names == [
+            "resnet-mini_merged_hw32_b32_train",
+            "resnet-mini_merged_hw32_b8_fwd",
+        ]
+        for e in m["artifacts"]:
+            assert (tmp_path / e["hlo"]).exists()
+            assert all((tmp_path / p["file"]).exists() for p in e["params"])

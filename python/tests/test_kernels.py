@@ -1,0 +1,204 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/strides/groups/ranks; fixed cases pin the exact
+ResNet shapes the paper benchmarks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as pl_conv
+from compile.kernels import grouped_conv as pl_gconv
+from compile.kernels import lowrank_matmul as pl_lrmm
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# lowrank_matmul
+# --------------------------------------------------------------------------
+
+
+class TestLowrankMatmul:
+    @given(
+        b=st.integers(1, 64),
+        c=st.integers(1, 96),
+        r=st.integers(1, 48),
+        s=st.integers(1, 96),
+    )
+    def test_matches_ref(self, b, c, r, s):
+        x, w0, w1 = rand(0, b, c), rand(1, c, r), rand(2, r, s)
+        got = pl_lrmm.lowrank_matmul(x, w0, w1)
+        want = ref.lowrank_matmul(x, w0, w1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_resnet_fc_shape(self):
+        # the paper's fc site: 2048 -> 1001 at rank 335 (Table 2)
+        x, w0, w1 = rand(0, 8, 2048), rand(1, 2048, 335), rand(2, 335, 1001)
+        got = pl_lrmm.lowrank_matmul(x, w0, w1)
+        np.testing.assert_allclose(
+            got, ref.lowrank_matmul(x, w0, w1), rtol=1e-3, atol=1e-3
+        )
+
+    @pytest.mark.parametrize("block_m,block_n", [(8, 8), (32, 128), (128, 32)])
+    def test_block_shapes_equivalent(self, block_m, block_n):
+        x, w0, w1 = rand(0, 48, 64), rand(1, 64, 16), rand(2, 16, 40)
+        got = pl_lrmm.lowrank_matmul(x, w0, w1, block_m=block_m, block_n=block_n)
+        np.testing.assert_allclose(
+            got, ref.lowrank_matmul(x, w0, w1), rtol=1e-4, atol=1e-4
+        )
+
+    def test_equals_full_matmul_at_full_rank(self):
+        # eq. (1): with R = min(C, S) the factorisation is exact
+        w = rand(3, 32, 24)
+        u, s, vt = jnp.linalg.svd(w, full_matrices=False)
+        w0 = u * jnp.sqrt(s)[None, :]
+        w1 = jnp.sqrt(s)[:, None] * vt
+        x = rand(0, 16, 32)
+        np.testing.assert_allclose(
+            pl_lrmm.lowrank_matmul(x, w0, w1), x @ w, rtol=1e-3, atol=1e-3
+        )
+
+    def test_vmem_estimate_positive_and_monotone_in_rank(self):
+        lo = pl_lrmm.vmem_bytes(32, 256, 16, 256)
+        hi = pl_lrmm.vmem_bytes(32, 256, 128, 256)
+        assert 0 < lo < hi
+
+    def test_mxu_flops(self):
+        assert pl_lrmm.mxu_flops(2, 3, 5, 7) == 2 * 3 * 5 + 2 * 5 * 7
+
+
+# --------------------------------------------------------------------------
+# conv2d
+# --------------------------------------------------------------------------
+
+
+class TestConv2d:
+    @given(
+        n=st.integers(1, 3),
+        c=st.integers(1, 8),
+        s=st.integers(1, 12),
+        h=st.integers(5, 14),
+        k=st.sampled_from([1, 3]),
+        stride=st.sampled_from([1, 2]),
+        padding=st.integers(0, 2),
+    )
+    def test_matches_ref(self, n, c, s, h, k, stride, padding):
+        if h + 2 * padding < k:
+            return
+        x, w = rand(0, n, c, h, h), rand(1, s, c, k, k)
+        got = pl_conv.conv2d(x, w, stride=stride, padding=padding)
+        want = ref.conv2d(x, w, stride=stride, padding=padding)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_resnet_core_shape(self):
+        # Tucker core of the paper's [512,512,3,3] layer at rank 309
+        x, w = rand(0, 1, 309, 8, 8), rand(1, 309, 309, 3, 3)
+        got = pl_conv.conv2d(x, w, stride=1, padding=1)
+        want = ref.conv2d(x, w, stride=1, padding=1)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+    def test_7x7_stride2_stem(self):
+        x, w = rand(0, 2, 3, 32, 32), rand(1, 16, 3, 7, 7)
+        got = pl_conv.conv2d(x, w, stride=2, padding=3)
+        want = ref.conv2d(x, w, stride=2, padding=3)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_output_channel_tiling(self):
+        x, w = rand(0, 1, 4, 10, 10), rand(1, 96, 4, 3, 3)
+        got = pl_conv.conv2d(x, w, padding=1, block_s=32)
+        want = ref.conv2d(x, w, padding=1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_vmem_estimate(self):
+        assert pl_conv.vmem_bytes(64, 64, 16, 16, 3, padding=1) > 0
+
+    def test_mxu_flops(self):
+        assert pl_conv.mxu_flops(1, 2, 3, 4, 5, 3) == 1 * 3 * 2 * 9 * 4 * 5
+
+
+# --------------------------------------------------------------------------
+# grouped_conv2d
+# --------------------------------------------------------------------------
+
+
+class TestGroupedConv:
+    @given(
+        n=st.integers(1, 2),
+        cg=st.integers(1, 6),
+        sg=st.integers(1, 6),
+        g=st.sampled_from([1, 2, 4]),
+        h=st.integers(5, 12),
+        stride=st.sampled_from([1, 2]),
+    )
+    def test_matches_ref(self, n, cg, sg, g, h, stride):
+        c, s = cg * g, sg * g
+        x, w = rand(0, n, c, h, h), rand(1, s, cg, 3, 3)
+        got = pl_gconv.grouped_conv2d(x, w, groups=g, stride=stride, padding=1)
+        want = ref.grouped_conv2d(x, w, groups=g, stride=stride, padding=1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_groups_one_equals_dense(self):
+        x, w = rand(0, 2, 8, 9, 9), rand(1, 12, 8, 3, 3)
+        got = pl_gconv.grouped_conv2d(x, w, groups=1, padding=1)
+        want = ref.conv2d(x, w, padding=1)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_bad_grouping(self):
+        x, w = rand(0, 1, 6, 8, 8), rand(1, 8, 2, 3, 3)
+        with pytest.raises(ValueError):
+            pl_gconv.grouped_conv2d(x, w, groups=4)
+
+    def test_core_params_eq_18_20(self):
+        # eq. (18)-(20): branched core holds 1/N of the vanilla core params
+        r1, r2, k = 308, 308, 3
+        for n in (1, 2, 4, 7, 11, 14, 22, 28, 44, 77, 154):
+            if r1 % n == 0:
+                assert pl_gconv.core_params(r1, r2, k, n) == r1 * r2 * k * k // n
+
+
+# --------------------------------------------------------------------------
+# Fig. 4: branched Tucker == grouped conv implementation
+# --------------------------------------------------------------------------
+
+
+class TestBranchedEquivalence:
+    @given(
+        g=st.sampled_from([1, 2, 4]),
+        r1=st.integers(1, 4),
+        r2=st.integers(1, 4),
+        c=st.integers(2, 8),
+        s=st.integers(2, 8),
+    )
+    def test_branch_sum_equals_grouped(self, g, r1, r2, c, s):
+        x = rand(0, 1, c, 8, 8)
+        us = rand(1, g, r1, c)
+        cores = rand(2, g, r2, r1, 3, 3)
+        vs = rand(3, g, s, r2)
+        a = ref.branched_tucker(x, us, cores, vs, padding=1)
+        b = ref.branched_as_grouped(x, us, cores, vs, padding=1)
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+    def test_grouped_path_through_pallas(self):
+        g, r1, r2, c, s = 4, 3, 5, 8, 12
+        x = rand(0, 2, c, 8, 8)
+        us = rand(1, g, r1, c)
+        cores = rand(2, g, r2, r1, 3, 3)
+        vs = rand(3, g, s, r2)
+        want = ref.branched_tucker(x, us, cores, vs, padding=1)
+        u_cat = us.reshape(g * r1, c)
+        core_cat = cores.reshape(g * r2, r1, 3, 3)
+        v_cat = jnp.concatenate([vs[j] for j in range(g)], axis=1)
+        y = ref.conv1x1(x, u_cat)
+        y = pl_gconv.grouped_conv2d(y, core_cat, groups=g, padding=1)
+        got = ref.conv1x1(y, v_cat)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,175 @@
+"""L2 model: variants, layer counts (Table 1/3), FLOPs, one-shot init."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import decompose as D
+from compile import resnet as RN
+
+MINI = RN.ARCHS["resnet-mini"]
+
+
+@pytest.fixture(scope="module")
+def mini_params():
+    return RN.init_params(MINI, jax.random.PRNGKey(0))
+
+
+def x_batch(b=2, hw=32):
+    return jax.random.normal(jax.random.PRNGKey(1), (b, 3, hw, hw))
+
+
+class TestSites:
+    def test_resnet50_site_count(self):
+        s = RN.sites(RN.ARCHS["resnet50"])
+        convs = [t for t in s if t.kind in ("stem", "conv")]
+        downs = [t for t in s if t.kind == "downsample"]
+        assert len(convs) == 1 + 16 * 3  # stem + 16 bottlenecks x 3
+        assert len(downs) == 4
+        assert s[-1].kind == "fc" and s[-1].c == 2048 and s[-1].s == 1000
+
+    def test_table2_shapes_present(self):
+        """The exact layer shapes the paper's Table 2 lists for ResNet-152."""
+        by = {t.name: t for t in RN.sites(RN.ARCHS["resnet152"])}
+        assert (by["layer1.0.conv1"].c, by["layer1.0.conv1"].s) == (64, 64)
+        assert (by["layer1.0.conv2"].c, by["layer1.0.conv2"].s) == (64, 64)
+        assert (by["layer1.0.conv3"].c, by["layer1.0.conv3"].s) == (64, 256)
+        assert (by["layer4.2.conv1"].c, by["layer4.2.conv1"].s) == (2048, 512)
+        assert (by["layer4.2.conv2"].c, by["layer4.2.conv2"].s) == (512, 512)
+        assert (by["layer4.2.conv3"].c, by["layer4.2.conv3"].s) == (512, 2048)
+
+    def test_stride_placement(self):
+        by = {t.name: t for t in RN.sites(RN.ARCHS["resnet50"])}
+        assert by["layer2.0.conv2"].stride == 2  # stride lives on the 3x3
+        assert by["layer2.0.conv1"].stride == 1
+        assert by["layer2.0.downsample"].stride == 2
+
+
+class TestLayerCounts:
+    """Paper Table 1: 50->115, 101->233, 152->352 conv+fc layers."""
+
+    @pytest.mark.parametrize(
+        "arch,orig,lrd",
+        [("resnet50", 50, 115), ("resnet101", 101, 233), ("resnet152", 152, 352)],
+    )
+    def test_table1_layer_counts(self, arch, orig, lrd):
+        a = RN.ARCHS[arch]
+        assert RN.count_layers(a, RN.plan_variant(a, "orig")) == orig
+        got = RN.count_layers(a, RN.plan_variant(a, "lrd"))
+        # paper: 115/233/352; our honest count differs by <=1 for 101/152
+        # (they appear not to decompose one late 1x1; see EXPERIMENTS.md)
+        assert abs(got - lrd) <= 1
+
+    @pytest.mark.parametrize("arch", ["resnet50", "resnet101", "resnet152"])
+    def test_merged_restores_depth(self, arch):
+        a = RN.ARCHS[arch]
+        assert RN.count_layers(a, RN.plan_variant(a, "merged")) == RN.count_layers(
+            a, RN.plan_variant(a, "orig")
+        )
+
+
+class TestCost:
+    def test_resnet50_macs_canonical(self):
+        a = RN.ARCHS["resnet50"]
+        macs = RN.flops(a, RN.plan_variant(a, "orig"), 224)
+        assert 4.0e9 < macs < 4.2e9  # canonical ~4.1 GMACs
+
+    def test_lrd_halves_flops_roughly(self):
+        a = RN.ARCHS["resnet50"]
+        orig = RN.flops(a, RN.plan_variant(a, "orig"), 224)
+        lrd = RN.flops(a, RN.plan_variant(a, "lrd"), 224)
+        assert 0.40 < lrd / orig < 0.60  # paper: -43.26%
+
+    def test_merged_cheaper_than_lrd(self):
+        a = RN.ARCHS["resnet50"]
+        lrd = RN.flops(a, RN.plan_variant(a, "lrd"), 224)
+        merged = RN.flops(a, RN.plan_variant(a, "merged"), 224)
+        assert merged < lrd  # paper: -55.09% vs -43.26%
+
+    def test_branched_cheaper_than_lrd(self):
+        a = RN.ARCHS["resnet152"]
+        lrd = RN.flops(a, RN.plan_variant(a, "lrd"), 224)
+        br = RN.flops(a, RN.plan_variant(a, "branched", groups=4), 224)
+        assert br < lrd  # Table 6: -66.75% vs -47.69%
+
+    def test_params_compression_ratio(self, mini_params):
+        plan = RN.plan_variant(MINI, "lrd")
+        pv = RN.decompose_params(MINI, plan, mini_params)
+        n0 = sum(int(v.size) for v in mini_params.values())
+        n1 = sum(int(v.size) for v in pv.values())
+        assert 0.4 < n1 / n0 < 0.6
+
+
+class TestForward:
+    @pytest.mark.parametrize("variant", ["orig", "lrd", "merged", "branched"])
+    def test_shapes_and_finiteness(self, mini_params, variant):
+        plan = RN.plan_variant(MINI, variant, groups=2)
+        pv = RN.decompose_params(MINI, plan, mini_params)
+        logits = RN.forward(MINI, plan, pv, x_batch())
+        assert logits.shape == (2, 10)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_full_rank_lrd_matches_orig(self, mini_params):
+        """At full ranks the decomposition is exact, so logits must match."""
+        plan = {}
+        for t in RN.sites(MINI):
+            if t.kind in ("stem",):
+                plan[t.name] = ("orig",)
+            elif t.k == 1:
+                plan[t.name] = ("svd", min(t.c, t.s))
+            else:
+                plan[t.name] = ("tucker", t.c, t.s)
+        pv = RN.decompose_params(MINI, plan, mini_params)
+        got = RN.forward(MINI, plan, pv, x_batch())
+        want = RN.forward(MINI, RN.plan_variant(MINI, "orig"), mini_params, x_batch())
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+    def test_pallas_path_matches_ref_path(self, mini_params):
+        plan = RN.plan_variant(MINI, "lrd")
+        pv = RN.decompose_params(MINI, plan, mini_params)
+        x = x_batch(b=2)
+        a = RN.forward(MINI, plan, pv, x, use_pallas=False)
+        b = RN.forward(MINI, plan, pv, x, use_pallas=True)
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+    def test_branched_pallas_path(self, mini_params):
+        plan = RN.plan_variant(MINI, "branched", groups=2)
+        pv = RN.decompose_params(MINI, plan, mini_params)
+        x = x_batch(b=2)
+        a = RN.forward(MINI, plan, pv, x, use_pallas=False)
+        b = RN.forward(MINI, plan, pv, x, use_pallas=True)
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+class TestFreezeMask:
+    def test_frozen_set_is_factor_1x1s(self, mini_params):
+        plan = RN.plan_variant(MINI, "lrd")
+        pv = RN.decompose_params(MINI, plan, mini_params)
+        mask = RN.freeze_mask(MINI, plan, pv)
+        frozen = {k for k, train in mask.items() if not train}
+        assert frozen  # something actually freezes
+        for k in frozen:
+            assert k.endswith((".w0", ".u", ".v"))
+        # cores and BN affines stay trainable
+        assert all(mask[k] for k in pv if k.endswith(".core"))
+        assert all(mask[k] for k in pv if ".bn." in k)
+
+    def test_frozen_fraction_substantial(self, mini_params):
+        plan = RN.plan_variant(MINI, "lrd")
+        pv = RN.decompose_params(MINI, plan, mini_params)
+        mask = RN.freeze_mask(MINI, plan, pv)
+        frozen_params = sum(int(pv[k].size) for k, t in mask.items() if not t)
+        total = sum(int(v.size) for v in pv.values())
+        assert frozen_params / total > 0.2  # the paper's training saving
+
+
+class TestPlanSerialisation:
+    @pytest.mark.parametrize("variant", ["orig", "lrd", "merged", "branched"])
+    def test_plans_are_json_roundtrippable(self, variant):
+        import json
+
+        plan = RN.plan_variant(MINI, variant, groups=2)
+        s = json.dumps({k: list(v) for k, v in plan.items()})
+        back = {k: tuple(v) for k, v in json.loads(s).items()}
+        assert back == plan

@@ -1,0 +1,148 @@
+"""Train step: loss decreases; freezing shrinks the differentiated set."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import resnet as RN
+from compile import train as T
+
+MINI = RN.ARCHS["resnet-mini"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    p0 = RN.init_params(MINI, jax.random.PRNGKey(0))
+    plan = RN.plan_variant(MINI, "lrd")
+    params = RN.decompose_params(MINI, plan, p0)
+    return plan, params
+
+
+class TestLossAndData:
+    def test_cross_entropy_uniform(self):
+        logits = jnp.zeros((4, 10))
+        labels = jnp.array([0, 1, 2, 3])
+        np.testing.assert_allclose(
+            T.cross_entropy(logits, labels), jnp.log(10.0), rtol=1e-5
+        )
+
+    def test_accuracy(self):
+        logits = jnp.array([[1.0, 0.0], [0.0, 1.0], [1.0, 0.0]])
+        labels = jnp.array([0, 1, 1])
+        assert float(T.accuracy(logits, labels)) == pytest.approx(2 / 3)
+
+    def test_synthetic_batch_shapes_and_balance(self):
+        x, y = T.synthetic_batch(jax.random.PRNGKey(0), 64, 32, 10)
+        assert x.shape == (64, 3, 32, 32) and y.shape == (64,)
+        assert x.dtype == jnp.float32
+        assert int(y.min()) >= 0 and int(y.max()) < 10
+
+    def test_synthetic_classes_differ(self):
+        """Different classes must be statistically distinguishable."""
+        x, y = T.synthetic_batch(jax.random.PRNGKey(1), 256, 16, 4)
+        means = jnp.stack([x[y == c].mean(axis=0) for c in range(4)])
+        d = jnp.linalg.norm((means[0] - means[1]).ravel())
+        assert float(d) > 0.05
+
+
+class TestTrainStep:
+    def test_loss_decreases(self, setup):
+        plan, params = setup
+        step = jax.jit(T.make_train_step(MINI, plan, None, lr=0.02))
+        t, f = T.split_by_mask(params, None)
+        v = {k: jnp.zeros_like(p) for k, p in t.items()}
+        key = jax.random.PRNGKey(2)
+        x, y = T.synthetic_batch(key, 32, 32, 10)
+        losses = []
+        for i in range(8):
+            t, v, loss, _acc = step(t, f, v, x, y)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+
+    def test_freeze_keeps_frozen_params_constant(self, setup):
+        plan, params = setup
+        mask = RN.freeze_mask(MINI, plan, params)
+        step = jax.jit(T.make_train_step(MINI, plan, mask, lr=0.05))
+        t, f = T.split_by_mask(params, mask)
+        assert f  # non-empty frozen set
+        f_before = {k: np.asarray(v).copy() for k, v in f.items()}
+        v = {k: jnp.zeros_like(p) for k, p in t.items()}
+        x, y = T.synthetic_batch(jax.random.PRNGKey(3), 16, 32, 10)
+        t, v, _loss, _acc = step(t, f, v, x, y)
+        for k in f:
+            np.testing.assert_array_equal(np.asarray(f[k]), f_before[k])
+
+    def test_freeze_reduces_grad_arrays(self, setup):
+        plan, params = setup
+        mask = RN.freeze_mask(MINI, plan, params)
+        t_all, _ = T.split_by_mask(params, None)
+        t_frozen, f_frozen = T.split_by_mask(params, mask)
+        assert len(t_frozen) < len(t_all)
+        assert len(t_frozen) + len(f_frozen) == len(t_all)
+
+    def test_flat_wrapper_roundtrip(self, setup):
+        plan, params = setup
+        mask = RN.freeze_mask(MINI, plan, params)
+        fn, t_names, f_names = T.make_flat_train_step(MINI, plan, params, mask)
+        x, y = T.synthetic_batch(jax.random.PRNGKey(4), 8, 32, 10)
+        v0 = [jnp.zeros_like(params[n]) for n in t_names]
+        out = fn(
+            *[params[n] for n in t_names],
+            *[params[n] for n in f_names],
+            *v0,
+            x,
+            y,
+        )
+        assert len(out) == 2 * len(t_names) + 2
+        loss, acc = float(out[-2]), float(out[-1])
+        assert np.isfinite(loss) and 0.0 <= acc <= 1.0
+
+    def test_flat_forward_matches_dict_forward(self, setup):
+        plan, params = setup
+        fn, names = T.make_flat_forward(MINI, plan, params)
+        x = T.synthetic_batch(jax.random.PRNGKey(5), 4, 32, 10)[0]
+        (got,) = fn(*[params[n] for n in names], x)
+        want = RN.forward(MINI, plan, params, x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestGradientClipping:
+    def test_large_gradient_is_clipped(self, setup):
+        """The step must stay finite even from a pathological init (the
+        instability we observed fine-tuning decomposed stacks)."""
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        plan, params = setup
+        # blow up one factor pair to generate huge gradients
+        bad = dict(params)
+        bad["layer1.0.conv1.w0"] = bad["layer1.0.conv1.w0"] * 100.0
+        bad["layer1.0.conv1.w1"] = bad["layer1.0.conv1.w1"] * 100.0
+        step = jax.jit(T.make_train_step(MINI, plan, None, lr=0.05))
+        t, f = T.split_by_mask(bad, None)
+        v = {k: jnp.zeros_like(p) for k, p in t.items()}
+        x, y = T.synthetic_batch(jax.random.PRNGKey(0), 16, 32, 10)
+        for _ in range(3):
+            t, v, loss, _ = step(t, f, v, x, y)
+            assert np.isfinite(float(loss))
+        for k, p in t.items():
+            assert bool(jnp.isfinite(p).all()), k
+
+    def test_update_norm_bounded(self, setup):
+        import jax
+        import jax.numpy as jnp
+
+        plan, params = setup
+        lr = 0.05
+        step = jax.jit(T.make_train_step(MINI, plan, None, lr=lr))
+        t, f = T.split_by_mask(params, None)
+        v = {k: jnp.zeros_like(p) for k, p in t.items()}
+        x, y = T.synthetic_batch(jax.random.PRNGKey(1), 16, 32, 10)
+        t2, v2, _, _ = step(t, f, v, x, y)
+        # first step: v = clip(g), |g_clipped| <= 5 => |Δw| <= lr * 5
+        total = sum(
+            float(jnp.sum((t2[k] - t[k]) ** 2)) for k in t
+        ) ** 0.5
+        assert total <= lr * 5.0 * 1.01

@@ -1,0 +1,81 @@
+//! `cargo bench --bench coordinator` — serving-stack overhead + batching
+//! characteristics (the L3 §Perf gate): direct executable calls vs the
+//! full router/batcher path, and latency percentiles under load.
+use std::time::{Duration, Instant};
+
+use lrdx::coordinator::batcher::BatchPolicy;
+use lrdx::coordinator::{BatchModel, Coordinator};
+use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel};
+use lrdx::runtime::Engine;
+use lrdx::trainsim::data::SynthData;
+use lrdx::util::rng::Rng;
+use lrdx::util::stats::Summary;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP coordinator bench: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::cpu().expect("engine");
+    let lib = ArtifactLibrary::load("artifacts").expect("manifest");
+    let spec = lib.find_by("resnet-mini", "lrd", "forward").expect("artifact");
+    let direct = ForwardModel::load(&engine, spec).expect("load");
+    let b = spec.batch;
+    let img = 3 * spec.hw * spec.hw;
+    let gen = SynthData::new(spec.hw, spec.classes);
+    let mut rng = Rng::new(3);
+    let (xflat, _) = gen.batch(&mut rng, b);
+
+    // direct path
+    let n_batches = 40;
+    for _ in 0..4 {
+        direct.run_batch(&xflat).unwrap();
+    }
+    let t0 = Instant::now();
+    for _ in 0..n_batches {
+        direct.run_batch(&xflat).unwrap();
+    }
+    let direct_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "direct:      {:>8.1} img/s ({:.3} ms/batch)",
+        (n_batches * b) as f64 / direct_secs,
+        direct_secs / n_batches as f64 * 1e3
+    );
+
+    // coordinated path, saturated
+    let mut coord = Coordinator::new(BatchPolicy {
+        max_batch: b,
+        max_wait: Duration::from_millis(2),
+    });
+    coord
+        .register("m", spec.hw, 1, move |eng| {
+            let lib = ArtifactLibrary::load("artifacts")?;
+            let spec = lib.find_by("resnet-mini", "lrd", "forward").unwrap();
+            Ok(Box::new(ForwardModel::load(eng, spec)?) as Box<dyn BatchModel>)
+        })
+        .unwrap();
+    coord.infer_blocking("m", xflat[..img].to_vec()).unwrap();
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..n_batches * b)
+        .map(|i| coord.infer("m", xflat[(i % b) * img..(i % b + 1) * img].to_vec()).unwrap())
+        .collect();
+    let mut lats = Vec::new();
+    for rx in pending {
+        lats.push(rx.recv().unwrap().unwrap().latency);
+    }
+    let coord_secs = t0.elapsed().as_secs_f64();
+    let s = Summary::of(&lats);
+    println!(
+        "coordinated: {:>8.1} img/s (overhead {:+.1}%)",
+        (n_batches * b) as f64 / coord_secs,
+        (coord_secs / direct_secs - 1.0) * 100.0
+    );
+    println!(
+        "latency: p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
+        s.p50 * 1e3,
+        s.p90 * 1e3,
+        s.p99 * 1e3
+    );
+    println!("{}", coord.metrics.snapshot().render());
+    coord.shutdown();
+}

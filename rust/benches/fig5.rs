@@ -1,0 +1,16 @@
+//! `cargo bench --bench fig5` — model throughput vs number of Tucker
+//! branches (paper Fig. 5).
+use lrdx::harness::fig5;
+use lrdx::runtime::Engine;
+
+fn main() {
+    let engine = Engine::cpu().expect("PJRT engine");
+    let full = std::env::args().any(|a| a == "--full");
+    let cfg = fig5::Config {
+        arch: if full { "resnet152".into() } else { "resnet50".into() },
+        ..Default::default()
+    };
+    let report = fig5::run(&engine, &cfg).expect("fig5");
+    print!("{}", report.render());
+    report.save(std::path::Path::new("reports")).expect("save");
+}

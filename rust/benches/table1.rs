@@ -1,0 +1,19 @@
+//! `cargo bench --bench table1` — regenerate paper Table 1 (measured).
+use lrdx::harness::table1;
+use lrdx::runtime::Engine;
+
+fn main() {
+    let engine = Engine::cpu().expect("PJRT engine");
+    let full = std::env::args().any(|a| a == "--full");
+    let cfg = table1::Config {
+        archs: if full {
+            vec!["resnet50".into(), "resnet101".into(), "resnet152".into()]
+        } else {
+            vec!["resnet50".into()]
+        },
+        ..Default::default()
+    };
+    let report = table1::run(&engine, &cfg).expect("table1");
+    print!("{}", report.render());
+    report.save(std::path::Path::new("reports")).expect("save");
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench table2` — Algorithm 1 ranks with REAL XLA:CPU timing.
+use lrdx::harness::table2;
+use lrdx::runtime::Engine;
+
+fn main() {
+    let engine = Engine::cpu().expect("PJRT engine");
+    let cfg = table2::Config { real: true, stride: 12, refine: 2, ..Default::default() };
+    let report = table2::run(&engine, &cfg).expect("table2");
+    print!("{}", report.render());
+    report.save(std::path::Path::new("reports")).expect("save");
+}

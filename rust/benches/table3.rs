@@ -1,0 +1,19 @@
+//! `cargo bench --bench table3` — method comparison (measured infer speedups).
+use lrdx::harness::table3;
+use lrdx::runtime::Engine;
+
+fn main() {
+    let engine = Engine::cpu().expect("PJRT engine");
+    let full = std::env::args().any(|a| a == "--full");
+    let cfg = table3::Config {
+        archs: if full {
+            vec!["resnet50".into(), "resnet101".into(), "resnet152".into()]
+        } else {
+            vec!["resnet50".into()]
+        },
+        ..Default::default()
+    };
+    let report = table3::run(&engine, &cfg).expect("table3");
+    print!("{}", report.render());
+    report.save(std::path::Path::new("reports")).expect("save");
+}

@@ -1,0 +1,26 @@
+//! `cargo bench --bench table456` — fine-tuning accuracy comparison
+//! (train-from-scratch + one-shot decomposition + fine-tune + pruning
+//! baseline). Uses shorter schedules than `lrdx bench table456` defaults so
+//! the whole bench suite stays tractable.
+use lrdx::harness::table456;
+use lrdx::runtime::Engine;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP table456: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::cpu().expect("PJRT engine");
+    let cfg = table456::Config {
+        train_steps: 160,
+        finetune_steps: 80,
+        ..Default::default()
+    };
+    let report = table456::run(&engine, &cfg).expect("table456");
+    print!("{}", report.render());
+    println!("\npaper-quoted rows (Tables 4-6):");
+    for (t, m, dt, df) in table456::paper_quoted_rows() {
+        println!("  {t:8} {m:16} ΔTop-1 {dt:>6}  ΔFLOPs {df:>7}");
+    }
+    report.save(std::path::Path::new("reports")).expect("save");
+}

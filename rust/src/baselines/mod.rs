@@ -1,0 +1,6 @@
+//! Comparator baselines for Tables 4-6. The paper quotes pruning numbers
+//! from their original publications; we additionally implement one for real
+//! (magnitude filter pruning, the Li et al. 2016 family) so the comparison
+//! is executable on our testbed.
+
+pub mod pruning;

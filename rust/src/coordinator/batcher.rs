@@ -1,0 +1,147 @@
+//! Dynamic batching policy: collect up to `max_batch` requests, waiting at
+//! most `max_wait` after the first arrival (size-or-deadline flush — the
+//! standard serving policy, cf. vllm router / TF-Serving batcher).
+//!
+//! Pure std-mpsc logic, fully testable without XLA.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Outcome of one collection round.
+pub enum Collected<T> {
+    /// A batch of 1..=max_batch items (never empty).
+    Batch(Vec<T>),
+    /// The channel closed with nothing pending: the worker should exit.
+    Closed,
+}
+
+/// Block for the first item, then keep collecting until the batch is full
+/// or `max_wait` has elapsed since the first item arrived.
+pub fn collect<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Collected<T> {
+    let first = match rx.recv() {
+        Ok(item) => item,
+        Err(_) => return Collected::Closed,
+    };
+    let deadline = Instant::now() + policy.max_wait;
+    let mut batch = Vec::with_capacity(policy.max_batch);
+    batch.push(first);
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Collected::Batch(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn collects_full_batch_when_queue_is_hot() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..20 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) };
+        match collect(&rx, &policy) {
+            Collected::Batch(b) => {
+                assert_eq!(b, (0..8).collect::<Vec<_>>());
+            }
+            Collected::Closed => panic!("should batch"),
+        }
+        // the rest are still queued
+        match collect(&rx, &policy) {
+            Collected::Batch(b) => assert_eq!(b.len(), 8),
+            Collected::Closed => panic!(),
+        }
+    }
+
+    #[test]
+    fn flushes_partial_batch_on_deadline() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) };
+        let t0 = Instant::now();
+        match collect(&rx, &policy) {
+            Collected::Batch(b) => {
+                assert_eq!(b, vec![1, 2]);
+                assert!(t0.elapsed() >= Duration::from_millis(9));
+            }
+            Collected::Closed => panic!(),
+        }
+    }
+
+    #[test]
+    fn closed_channel_reports_closed() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        assert!(matches!(
+            collect(&rx, &BatchPolicy::default()),
+            Collected::Closed
+        ));
+    }
+
+    #[test]
+    fn late_arrivals_join_within_window() {
+        let (tx, rx) = mpsc::channel();
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(60) };
+        let sender = std::thread::spawn(move || {
+            tx.send(1).unwrap();
+            std::thread::sleep(Duration::from_millis(15));
+            tx.send(2).unwrap();
+            std::thread::sleep(Duration::from_millis(15));
+            tx.send(3).unwrap();
+        });
+        match collect(&rx, &policy) {
+            Collected::Batch(b) => assert_eq!(b, vec![1, 2, 3]),
+            Collected::Closed => panic!(),
+        }
+        sender.join().unwrap();
+    }
+
+    #[test]
+    fn never_exceeds_max_batch_property() {
+        crate::util::check::property(20, |rng| {
+            let (tx, rx) = mpsc::channel();
+            let n = rng.range(1, 40);
+            for i in 0..n {
+                tx.send(i).unwrap();
+            }
+            let policy = BatchPolicy {
+                max_batch: rng.range(1, 12),
+                max_wait: Duration::from_millis(1),
+            };
+            match collect(&rx, &policy) {
+                Collected::Batch(b) => {
+                    assert!(!b.is_empty() && b.len() <= policy.max_batch);
+                    // FIFO order preserved
+                    for w in b.windows(2) {
+                        assert!(w[0] < w[1]);
+                    }
+                }
+                Collected::Closed => panic!(),
+            }
+        });
+    }
+}

@@ -1,0 +1,143 @@
+//! Serving metrics: lock-free counters + a sampled latency reservoir.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::Summary;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_items: AtomicU64,
+    pub errors: AtomicU64,
+    /// end-to-end request latencies, seconds (bounded reservoir)
+    latencies: Mutex<Vec<f64>>,
+    /// time spent inside model execution, seconds
+    exec_time: Mutex<Vec<f64>>,
+}
+
+const RESERVOIR: usize = 65_536;
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, items: usize, exec_secs: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_items.fetch_add(items as u64, Ordering::Relaxed);
+        let mut t = self.exec_time.lock().unwrap();
+        if t.len() < RESERVOIR {
+            t.push(exec_secs);
+        }
+    }
+
+    pub fn record_response(&self, latency_secs: f64) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        if l.len() < RESERVOIR {
+            l.push(latency_secs);
+        }
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsReport {
+        let latencies = self.latencies.lock().unwrap().clone();
+        let exec = self.exec_time.lock().unwrap().clone();
+        let batches = self.batches.load(Ordering::Relaxed);
+        let items = self.batch_items.load(Ordering::Relaxed);
+        MetricsReport {
+            requests: self.requests.load(Ordering::Relaxed),
+            responses: self.responses.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            batches,
+            mean_batch_occupancy: if batches == 0 {
+                0.0
+            } else {
+                items as f64 / batches as f64
+            },
+            latency: (!latencies.is_empty()).then(|| Summary::of(&latencies)),
+            exec: (!exec.is_empty()).then(|| Summary::of(&exec)),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct MetricsReport {
+    pub requests: u64,
+    pub responses: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub mean_batch_occupancy: f64,
+    pub latency: Option<Summary>,
+    pub exec: Option<Summary>,
+}
+
+impl MetricsReport {
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "requests={} responses={} errors={} batches={} occupancy={:.2}",
+            self.requests, self.responses, self.errors, self.batches, self.mean_batch_occupancy
+        );
+        if let Some(l) = &self.latency {
+            s.push_str(&format!(
+                "\nlatency  p50={:.2}ms p90={:.2}ms p99={:.2}ms",
+                l.p50 * 1e3,
+                l.p90 * 1e3,
+                l.p99 * 1e3
+            ));
+        }
+        if let Some(e) = &self.exec {
+            s.push_str(&format!("\nexec     mean={:.2}ms", e.trimmed_mean * 1e3));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_request();
+        m.record_batch(2, 0.010);
+        m.record_response(0.011);
+        m.record_response(0.013);
+        let r = m.snapshot();
+        assert_eq!(r.requests, 2);
+        assert_eq!(r.responses, 2);
+        assert_eq!(r.batches, 1);
+        assert_eq!(r.mean_batch_occupancy, 2.0);
+        assert!(r.latency.unwrap().p50 > 0.010);
+    }
+
+    #[test]
+    fn empty_snapshot_has_no_summaries() {
+        let r = Metrics::new().snapshot();
+        assert!(r.latency.is_none());
+        assert!(r.exec.is_none());
+        assert_eq!(r.mean_batch_occupancy, 0.0);
+    }
+
+    #[test]
+    fn render_contains_key_fields() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_response(0.002);
+        let s = m.snapshot().render();
+        assert!(s.contains("requests=1"));
+        assert!(s.contains("latency"));
+    }
+}

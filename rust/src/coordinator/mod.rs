@@ -1,0 +1,444 @@
+//! L3 serving coordinator: request router + dynamic batcher + worker pool.
+//!
+//! Architecture (threads + channels; no async runtime available offline):
+//!
+//! ```text
+//!  clients ── Coordinator::infer(model, image)
+//!                │  route by model name (replicas: round-robin)
+//!                ▼
+//!        mpsc queue per worker ── batcher::collect (size-or-deadline)
+//!                ▼
+//!        worker thread (owns Engine + compiled model, weights on device)
+//!                ▼
+//!        per-request responses (logits + timing) via oneshot channels
+//! ```
+//!
+//! PJRT wrapper types hold raw pointers and are not `Send`, so each worker
+//! constructs its own `Engine` + model inside its thread via the factory
+//! closure — no unsafe, clean shutdown by dropping senders.
+
+pub mod batcher;
+pub mod metrics;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::Engine;
+use batcher::{BatchPolicy, Collected};
+use metrics::Metrics;
+
+/// A model a worker can execute batch-at-a-time.
+pub trait BatchModel {
+    /// fixed device batch size
+    fn batch(&self) -> usize;
+    /// input spatial size
+    fn hw(&self) -> usize;
+    fn classes(&self) -> usize;
+    /// `x` is a full device batch [batch, 3, hw, hw] flattened; returns
+    /// flattened logits [batch, classes].
+    fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// One inference request: a single image [3, hw, hw], flattened.
+pub struct InferRequest {
+    pub image: Vec<f32>,
+    enqueued: Instant,
+    resp: SyncSender<Result<InferResponse>>,
+}
+
+/// Response with scheduling telemetry.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub logits: Vec<f32>,
+    /// end-to-end seconds (enqueue -> response)
+    pub latency: f64,
+    /// model execution seconds for the carrying batch
+    pub exec: f64,
+    /// how many real requests shared the batch
+    pub batch_size: usize,
+}
+
+struct Replica {
+    tx: Sender<InferRequest>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+struct ModelEntry {
+    replicas: Vec<Replica>,
+    next: AtomicUsize,
+    hw: usize,
+}
+
+/// The coordinator: owns the router table and all worker threads.
+pub struct Coordinator {
+    models: HashMap<String, ModelEntry>,
+    pub metrics: Arc<Metrics>,
+    policy: BatchPolicy,
+}
+
+impl Coordinator {
+    pub fn new(policy: BatchPolicy) -> Coordinator {
+        Coordinator { models: HashMap::new(), metrics: Arc::new(Metrics::new()), policy }
+    }
+
+    /// Register a model under `name` with `replicas` worker threads. The
+    /// factory runs inside each worker thread (PJRT types are not Send) and
+    /// must yield a model with consistent batch/hw.
+    pub fn register<F>(&mut self, name: &str, hw: usize, replicas: usize, factory: F) -> Result<()>
+    where
+        F: Fn(&Engine) -> Result<Box<dyn BatchModel>> + Send + Sync + 'static,
+    {
+        if self.models.contains_key(name) {
+            bail!("model {name:?} already registered");
+        }
+        let factory = Arc::new(factory);
+        let mut reps = Vec::new();
+        for ri in 0..replicas.max(1) {
+            let (tx, rx) = mpsc::channel::<InferRequest>();
+            let metrics = self.metrics.clone();
+            let policy = self.policy.clone();
+            let factory = factory.clone();
+            let nm = name.to_string();
+            // report factory failure back synchronously
+            let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+            let handle = std::thread::Builder::new()
+                .name(format!("lrdx-worker-{nm}-{ri}"))
+                .spawn(move || worker_loop(rx, metrics, policy, factory, ready_tx))
+                .expect("spawn worker");
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("worker {nm}-{ri} died during init"))??;
+            reps.push(Replica { tx, handle });
+        }
+        self.models.insert(
+            name.to_string(),
+            ModelEntry { replicas: reps, next: AtomicUsize::new(0), hw },
+        );
+        Ok(())
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Submit one image; returns a receiver for the response (async-style).
+    pub fn infer(
+        &self,
+        model: &str,
+        image: Vec<f32>,
+    ) -> Result<Receiver<Result<InferResponse>>> {
+        let entry = self
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model {model:?} (have {:?})", self.model_names()))?;
+        let expect = 3 * entry.hw * entry.hw;
+        if image.len() != expect {
+            bail!("image has {} floats, model {model:?} expects {}", image.len(), expect);
+        }
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        let idx = entry.next.fetch_add(1, Ordering::Relaxed) % entry.replicas.len();
+        self.metrics.record_request();
+        entry.replicas[idx]
+            .tx
+            .send(InferRequest { image, enqueued: Instant::now(), resp: resp_tx })
+            .map_err(|_| anyhow!("worker for {model:?} is gone"))?;
+        Ok(resp_rx)
+    }
+
+    /// Submit and wait.
+    pub fn infer_blocking(&self, model: &str, image: Vec<f32>) -> Result<InferResponse> {
+        let rx = self.infer(model, image)?;
+        rx.recv().map_err(|_| anyhow!("response channel closed"))?
+    }
+
+    /// Drop queues and join workers.
+    pub fn shutdown(self) {
+        for (_, entry) in self.models {
+            for r in entry.replicas {
+                drop(r.tx);
+                let _ = r.handle.join();
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<InferRequest>,
+    metrics: Arc<Metrics>,
+    policy: BatchPolicy,
+    factory: Arc<dyn Fn(&Engine) -> Result<Box<dyn BatchModel>> + Send + Sync>,
+    ready: SyncSender<Result<()>>,
+) {
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let model = match factory(&engine) {
+        Ok(m) => m,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let device_batch = model.batch();
+    let img_len = 3 * model.hw() * model.hw();
+    let classes = model.classes();
+    let policy = BatchPolicy { max_batch: device_batch, ..policy };
+    let _ = ready.send(Ok(()));
+
+    // Reused batch assembly buffer — no allocation in the steady state.
+    let mut xbatch = vec![0f32; device_batch * img_len];
+    loop {
+        let requests = match batcher::collect(&rx, &policy) {
+            Collected::Batch(b) => b,
+            Collected::Closed => return,
+        };
+        let n = requests.len();
+        for (i, req) in requests.iter().enumerate() {
+            xbatch[i * img_len..(i + 1) * img_len].copy_from_slice(&req.image);
+        }
+        // Pad by repeating the first image (device batch is fixed).
+        for i in n..device_batch {
+            let (head, tail) = xbatch.split_at_mut(i * img_len);
+            tail[..img_len].copy_from_slice(&head[..img_len]);
+        }
+        let t0 = Instant::now();
+        let result = model.run_batch(&xbatch);
+        let exec = t0.elapsed().as_secs_f64();
+        metrics.record_batch(n, exec);
+        match result {
+            Ok(logits) => {
+                for (i, req) in requests.into_iter().enumerate() {
+                    let latency = req.enqueued.elapsed().as_secs_f64();
+                    metrics.record_response(latency);
+                    let _ = req.resp.send(Ok(InferResponse {
+                        logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                        latency,
+                        exec,
+                        batch_size: n,
+                    }));
+                }
+            }
+            Err(e) => {
+                metrics.record_error();
+                let msg = format!("batch execution failed: {e:#}");
+                for req in requests {
+                    let _ = req.resp.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// BatchModel impls for the two runtime backends
+// --------------------------------------------------------------------------
+
+impl BatchModel for crate::runtime::artifacts::ForwardModel {
+    fn batch(&self) -> usize {
+        self.spec.batch
+    }
+    fn hw(&self) -> usize {
+        self.spec.hw
+    }
+    fn classes(&self) -> usize {
+        self.spec.classes
+    }
+    fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let t = crate::runtime::HostTensor::new(
+            vec![self.spec.batch, 3, self.spec.hw, self.spec.hw],
+            x.to_vec(),
+        );
+        Ok(self.infer(&t)?.data)
+    }
+}
+
+impl BatchModel for crate::runtime::netbuilder::BuiltNet {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn hw(&self) -> usize {
+        self.hw
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let eng = self.exe.engine().clone();
+        let xb = eng.upload(x, &[self.batch, 3, self.hw, self.hw])?;
+        let out = self.forward(&xb)?;
+        let lit = out
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        Ok(crate::runtime::HostTensor::from_literal(&lit)?.data)
+    }
+}
+
+// --------------------------------------------------------------------------
+// A trivial host-side model for coordinator unit tests (no XLA)
+// --------------------------------------------------------------------------
+
+#[cfg(test)]
+pub(crate) struct EchoModel {
+    pub batch: usize,
+    pub hw: usize,
+    pub delay: std::time::Duration,
+}
+
+#[cfg(test)]
+impl BatchModel for EchoModel {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn hw(&self) -> usize {
+        self.hw
+    }
+    fn classes(&self) -> usize {
+        2
+    }
+    fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        let img = 3 * self.hw * self.hw;
+        Ok((0..self.batch)
+            .flat_map(|i| {
+                let s: f32 = x[i * img..(i + 1) * img].iter().sum();
+                [s, -s]
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn coord(batch: usize, delay_ms: u64) -> Coordinator {
+        let mut c = Coordinator::new(BatchPolicy {
+            max_batch: batch,
+            max_wait: Duration::from_millis(3),
+        });
+        c.register("echo", 4, 1, move |_eng| {
+            Ok(Box::new(EchoModel {
+                batch,
+                hw: 4,
+                delay: Duration::from_millis(delay_ms),
+            }) as Box<dyn BatchModel>)
+        })
+        .unwrap();
+        c
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let c = coord(4, 0);
+        let img = vec![1.0f32; 48];
+        let r = c.infer_blocking("echo", img).unwrap();
+        assert_eq!(r.logits, vec![48.0, -48.0]);
+        assert_eq!(r.batch_size, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_share_batches() {
+        let c = coord(8, 2);
+        let rxs: Vec<_> = (0..16)
+            .map(|i| c.infer("echo", vec![i as f32; 48]).unwrap())
+            .collect();
+        let mut max_batch_seen = 0;
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.logits[0], 48.0 * i as f32);
+            max_batch_seen = max_batch_seen.max(r.batch_size);
+        }
+        assert!(max_batch_seen > 1, "batching never kicked in");
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.responses, 16);
+        assert!(snap.batches < 16, "each request got its own batch");
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let c = coord(2, 0);
+        assert!(c.infer("nope", vec![0.0; 48]).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn wrong_image_size_rejected() {
+        let c = coord(2, 0);
+        assert!(c.infer("echo", vec![0.0; 7]).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let mut c = coord(2, 0);
+        let err = c.register("echo", 4, 1, |_eng| unreachable!());
+        assert!(err.is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn replicas_round_robin() {
+        let mut c = Coordinator::new(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+        });
+        c.register("m", 4, 3, |_eng| {
+            Ok(Box::new(EchoModel { batch: 1, hw: 4, delay: Duration::ZERO })
+                as Box<dyn BatchModel>)
+        })
+        .unwrap();
+        for i in 0..9 {
+            let r = c.infer_blocking("m", vec![i as f32; 48]).unwrap();
+            assert_eq!(r.logits[0], 48.0 * i as f32);
+        }
+        assert_eq!(c.metrics.snapshot().responses, 9);
+        c.shutdown();
+    }
+
+    #[test]
+    fn failing_model_reports_errors_to_all_requests() {
+        let mut c = Coordinator::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        });
+        struct Broken;
+        impl BatchModel for Broken {
+            fn batch(&self) -> usize {
+                4
+            }
+            fn hw(&self) -> usize {
+                4
+            }
+            fn classes(&self) -> usize {
+                2
+            }
+            fn run_batch(&self, _x: &[f32]) -> Result<Vec<f32>> {
+                bail!("injected failure")
+            }
+        }
+        c.register("broken", 4, 1, |_eng| Ok(Box::new(Broken) as Box<dyn BatchModel>))
+            .unwrap();
+        let rxs: Vec<_> = (0..4)
+            .map(|_| c.infer("broken", vec![0.0; 48]).unwrap())
+            .collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_err());
+        }
+        assert!(c.metrics.snapshot().errors >= 1);
+        c.shutdown();
+    }
+}

@@ -1,0 +1,371 @@
+//! Decomposition planner: schemes, rank selection (eq. 7) and the paper's
+//! five variants. Weight-level transforms live in `weights.rs`; the
+//! Algorithm 1 rank optimizer in `rank_opt.rs`.
+
+pub mod params;
+pub mod rank_opt;
+pub mod weights;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::model::{Arch, BlockKind, ConvSite, SiteKind};
+use crate::util::json::Json;
+
+/// Per-site decomposition scheme. JSON form matches python
+/// (`["svd", r]`, `["tucker", r1, r2]`, ...) so plans interchange freely.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    Orig,
+    Svd { r: usize },
+    Tucker { r1: usize, r2: usize },
+    Branched { r1: usize, r2: usize, groups: usize },
+    /// conv2 of a merged bottleneck: only the Tucker core remains
+    Merged { r1: usize, r2: usize },
+    /// conv1/conv3 of a merged bottleneck: carries the folded 1x1 product
+    MergedInto { peer: String },
+}
+
+pub type Plan = BTreeMap<String, Scheme>;
+
+/// The paper's five evaluated configurations (+ original).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Orig,
+    /// vanilla LRD (§2)
+    Lrd,
+    /// Algorithm 1 optimized ranks (§2.1)
+    Opt,
+    /// layer freezing (§2.2) — same plan as Lrd; freezing lives in training
+    Freeze,
+    /// layer merging (§2.3, Fig. 3)
+    Merged,
+    /// branching Tucker (§2.4, Fig. 4)
+    Branched,
+}
+
+impl Variant {
+    pub fn by_name(s: &str) -> Option<Variant> {
+        Some(match s {
+            "orig" => Variant::Orig,
+            "lrd" => Variant::Lrd,
+            "opt" => Variant::Opt,
+            "freeze" => Variant::Freeze,
+            "merged" => Variant::Merged,
+            "branched" => Variant::Branched,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Orig => "orig",
+            Variant::Lrd => "lrd",
+            Variant::Opt => "opt",
+            Variant::Freeze => "freeze",
+            Variant::Merged => "merged",
+            Variant::Branched => "branched",
+        }
+    }
+
+    pub fn all() -> &'static [Variant] {
+        &[
+            Variant::Orig,
+            Variant::Lrd,
+            Variant::Opt,
+            Variant::Freeze,
+            Variant::Merged,
+            Variant::Branched,
+        ]
+    }
+}
+
+// --------------------------------------------------------------------------
+// Rank selection
+// --------------------------------------------------------------------------
+
+/// SVD rank giving `alpha`x parameter compression for an [S, C] weight:
+/// R = C*S / (alpha * (C+S)). Matches the paper's Table 2 (64x64@2x -> 16).
+pub fn svd_rank_for_ratio(c: usize, s: usize, alpha: f64) -> usize {
+    let r = (c as f64 * s as f64 / (alpha * (c + s) as f64)) as usize;
+    r.clamp(1, c.min(s))
+}
+
+/// Eq. (7): Tucker ranks (r1, r2 = beta*r1) for `alpha`x compression of a
+/// [S, C, k, k] conv. `beta` defaults to S/C (ranks proportional to their
+/// channel dims). Matches Table 2 (64x64x3x3@2x -> 38; 512@2x -> 309).
+pub fn tucker_rank_for_ratio(
+    c: usize,
+    s: usize,
+    k: usize,
+    alpha: f64,
+    beta: Option<f64>,
+) -> (usize, usize) {
+    let beta = beta.unwrap_or(s as f64 / c as f64);
+    let k2 = (k * k) as f64;
+    let (cf, sf) = (c as f64, s as f64);
+    let term = (cf + beta * sf) / (beta * k2);
+    let r1 = (-term + (term * term + 4.0 * cf * sf / (beta * alpha)).sqrt()) / 2.0;
+    let r1 = (r1 as usize).clamp(1, c);
+    let r2 = ((beta * r1 as f64) as usize).clamp(1, s);
+    (r1, r2)
+}
+
+/// Eq. (10)-(11): quantize ranks down to multiples of N (minimum N).
+pub fn quantize_ranks(r1: usize, r2: usize, groups: usize) -> (usize, usize) {
+    (
+        (r1 - r1 % groups).max(groups),
+        (r2 - r2 % groups).max(groups),
+    )
+}
+
+fn ratio_scheme(t: &ConvSite, alpha: f64) -> Scheme {
+    if t.k == 1 {
+        Scheme::Svd { r: svd_rank_for_ratio(t.c, t.s, alpha) }
+    } else {
+        let (r1, r2) = tucker_rank_for_ratio(t.c, t.s, t.k, alpha, None);
+        Scheme::Tucker { r1, r2 }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Plans
+// --------------------------------------------------------------------------
+
+/// Build the plan for one of the paper's variants. The stem conv is never
+/// decomposed (3 input channels; the paper's Table 1 layer counts confirm).
+/// `overrides` supplies Algorithm 1 results for `Variant::Opt`.
+pub fn plan_variant(
+    arch: &Arch,
+    variant: Variant,
+    alpha: f64,
+    groups: usize,
+    overrides: Option<&Plan>,
+) -> Result<Plan> {
+    let mut plan = Plan::new();
+    let sites = arch.sites();
+    for t in &sites {
+        let scheme = if t.kind == SiteKind::Stem || variant == Variant::Orig {
+            Scheme::Orig
+        } else {
+            match variant {
+                Variant::Orig => unreachable!(),
+                Variant::Lrd | Variant::Freeze | Variant::Merged => ratio_scheme(t, alpha),
+                Variant::Opt => overrides
+                    .and_then(|o| o.get(&t.name).cloned())
+                    .unwrap_or_else(|| ratio_scheme(t, alpha)),
+                Variant::Branched => {
+                    if t.k > 1 {
+                        // Branch the alpha-compression ranks (Table 6 compounds
+                        // -47.69% into -66.75% via the extra core/N saving).
+                        let (r1, r2) = tucker_rank_for_ratio(t.c, t.s, t.k, alpha, None);
+                        let (r1, r2) = quantize_ranks(r1.min(t.c), r2.min(t.s), groups);
+                        Scheme::Branched { r1, r2, groups }
+                    } else {
+                        ratio_scheme(t, alpha)
+                    }
+                }
+            }
+        };
+        plan.insert(t.name.clone(), scheme);
+    }
+    if variant == Variant::Merged {
+        if arch.block != BlockKind::Bottleneck {
+            bail!("layer merging is defined for bottleneck nets");
+        }
+        for t in &sites {
+            if let Some(pre) = t.name.strip_suffix(".conv2") {
+                let (r1, r2) = tucker_rank_for_ratio(t.c, t.s, t.k, alpha, None);
+                plan.insert(t.name.clone(), Scheme::Merged { r1, r2 });
+                plan.insert(
+                    format!("{pre}.conv1"),
+                    Scheme::MergedInto { peer: t.name.clone() },
+                );
+                plan.insert(
+                    format!("{pre}.conv3"),
+                    Scheme::MergedInto { peer: t.name.clone() },
+                );
+            } else if t.kind == SiteKind::Fc {
+                // fc has no adjacent 1x1 to fold into; keep it original so the
+                // merged model really has the original depth (Table 3).
+                plan.insert(t.name.clone(), Scheme::Orig);
+            }
+        }
+    }
+    Ok(plan)
+}
+
+// --------------------------------------------------------------------------
+// JSON interchange (matches python's list encoding)
+// --------------------------------------------------------------------------
+
+impl Scheme {
+    pub fn to_json(&self) -> Json {
+        let arr = match self {
+            Scheme::Orig => vec![Json::Str("orig".into())],
+            Scheme::Svd { r } => vec![Json::Str("svd".into()), Json::Num(*r as f64)],
+            Scheme::Tucker { r1, r2 } => vec![
+                Json::Str("tucker".into()),
+                Json::Num(*r1 as f64),
+                Json::Num(*r2 as f64),
+            ],
+            Scheme::Branched { r1, r2, groups } => vec![
+                Json::Str("branched".into()),
+                Json::Num(*r1 as f64),
+                Json::Num(*r2 as f64),
+                Json::Num(*groups as f64),
+            ],
+            Scheme::Merged { r1, r2 } => vec![
+                Json::Str("merged".into()),
+                Json::Num(*r1 as f64),
+                Json::Num(*r2 as f64),
+            ],
+            Scheme::MergedInto { peer } => {
+                vec![Json::Str("merged_into".into()), Json::Str(peer.clone())]
+            }
+        };
+        Json::Arr(arr)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Scheme> {
+        let a = j.arr()?;
+        let tag = a[0].str()?;
+        Ok(match tag {
+            "orig" => Scheme::Orig,
+            "svd" => Scheme::Svd { r: a[1].int()? as usize },
+            "tucker" => {
+                Scheme::Tucker { r1: a[1].int()? as usize, r2: a[2].int()? as usize }
+            }
+            "branched" => Scheme::Branched {
+                r1: a[1].int()? as usize,
+                r2: a[2].int()? as usize,
+                groups: a[3].int()? as usize,
+            },
+            "merged" => {
+                Scheme::Merged { r1: a[1].int()? as usize, r2: a[2].int()? as usize }
+            }
+            "merged_into" => Scheme::MergedInto { peer: a[1].str()?.to_string() },
+            _ => bail!("unknown scheme tag {tag:?}"),
+        })
+    }
+}
+
+pub fn plan_to_json(plan: &Plan) -> Json {
+    Json::Obj(plan.iter().map(|(k, v)| (k.clone(), v.to_json())).collect())
+}
+
+pub fn plan_from_json(j: &Json) -> Result<Plan> {
+    let mut plan = Plan::new();
+    for (k, v) in j.obj()? {
+        plan.insert(k.clone(), Scheme::from_json(v)?);
+    }
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_svd_ranks() {
+        assert_eq!(svd_rank_for_ratio(64, 64, 2.0), 16);
+        assert_eq!(svd_rank_for_ratio(64, 256, 2.0), 25);
+        assert_eq!(svd_rank_for_ratio(2048, 512, 2.0), 204);
+        assert_eq!(svd_rank_for_ratio(512, 2048, 2.0), 204);
+        // paper reports 335 for 2048x1001; exact floor is 336
+        let fc = svd_rank_for_ratio(2048, 1001, 2.0);
+        assert!((335..=336).contains(&fc), "fc rank {fc}");
+    }
+
+    #[test]
+    fn table2_tucker_ranks() {
+        assert_eq!(tucker_rank_for_ratio(64, 64, 3, 2.0, None), (38, 38));
+        assert_eq!(tucker_rank_for_ratio(512, 512, 3, 2.0, None), (309, 309));
+    }
+
+    #[test]
+    fn eq7_achieves_ratio() {
+        for (c, s) in [(64, 64), (128, 256), (512, 512), (256, 1024)] {
+            for alpha in [1.5, 2.0, 4.0] {
+                let (r1, r2) = tucker_rank_for_ratio(c, s, 3, alpha, None);
+                let orig = c * s * 9;
+                let dec = c * r1 + r1 * r2 * 9 + r2 * s;
+                assert!(
+                    (dec as f64) <= orig as f64 / alpha * 1.05,
+                    "({c},{s})@{alpha}: {dec} vs {orig}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantize() {
+        assert_eq!(quantize_ranks(309, 309, 4), (308, 308));
+        assert_eq!(quantize_ranks(3, 5, 4), (4, 4));
+    }
+
+    #[test]
+    fn lrd_plan_decomposes_everything_but_stem() {
+        let arch = Arch::by_name("resnet50").unwrap();
+        let plan = plan_variant(&arch, Variant::Lrd, 2.0, 4, None).unwrap();
+        assert_eq!(plan["stem.conv"], Scheme::Orig);
+        assert!(matches!(plan["layer1.0.conv1"], Scheme::Svd { .. }));
+        assert!(matches!(plan["layer1.0.conv2"], Scheme::Tucker { .. }));
+        assert!(matches!(plan["fc"], Scheme::Svd { .. }));
+    }
+
+    #[test]
+    fn merged_plan_structure() {
+        let arch = Arch::by_name("resnet50").unwrap();
+        let plan = plan_variant(&arch, Variant::Merged, 2.0, 4, None).unwrap();
+        assert!(matches!(plan["layer1.0.conv2"], Scheme::Merged { .. }));
+        assert_eq!(
+            plan["layer1.0.conv1"],
+            Scheme::MergedInto { peer: "layer1.0.conv2".into() }
+        );
+        assert_eq!(plan["fc"], Scheme::Orig);
+        assert!(matches!(plan["layer1.0.downsample"], Scheme::Svd { .. }));
+    }
+
+    #[test]
+    fn merged_rejected_for_basic_blocks() {
+        let arch = Arch::by_name("resnet18").unwrap();
+        assert!(plan_variant(&arch, Variant::Merged, 2.0, 4, None).is_err());
+    }
+
+    #[test]
+    fn branched_ranks_divisible() {
+        let arch = Arch::by_name("resnet50").unwrap();
+        let plan = plan_variant(&arch, Variant::Branched, 2.0, 4, None).unwrap();
+        for s in plan.values() {
+            if let Scheme::Branched { r1, r2, groups } = s {
+                assert_eq!(r1 % groups, 0);
+                assert_eq!(r2 % groups, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let arch = Arch::by_name("resnet-mini").unwrap();
+        for v in Variant::all() {
+            if *v == Variant::Merged && arch.block != BlockKind::Bottleneck {
+                continue;
+            }
+            let plan = plan_variant(&arch, *v, 2.0, 2, None).unwrap();
+            let back = plan_from_json(&plan_to_json(&plan)).unwrap();
+            assert_eq!(back, plan, "variant {v:?}");
+        }
+    }
+
+    #[test]
+    fn opt_overrides_apply() {
+        let arch = Arch::by_name("resnet-mini").unwrap();
+        let mut ov = Plan::new();
+        ov.insert("layer1.0.conv2".into(), Scheme::Orig);
+        let plan = plan_variant(&arch, Variant::Opt, 2.0, 4, Some(&ov)).unwrap();
+        assert_eq!(plan["layer1.0.conv2"], Scheme::Orig);
+        assert!(matches!(plan["layer2.0.conv2"], Scheme::Tucker { .. }));
+    }
+}

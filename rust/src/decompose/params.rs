@@ -1,0 +1,203 @@
+//! Rust-native model parameters: He-init original weights and the one-shot
+//! decomposition of them under a plan (the rust mirror of
+//! `python/compile/resnet.py::init_params/decompose_params`).
+//!
+//! Used by the netbuilder cross-checks, the pruning baseline and anywhere a
+//! model's weights must exist without python.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::weights::{branch_tucker, merge_bottleneck, svd_split, tucker_stack};
+use super::{Plan, Scheme};
+use crate::linalg::{Matrix, Tensor4};
+use crate::model::{Arch, SiteKind};
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+pub type Params = BTreeMap<String, HostTensor>;
+
+fn ht_mat(m: &Matrix) -> HostTensor {
+    HostTensor::new(vec![m.rows, m.cols], m.data.clone())
+}
+
+fn ht_t4(t: &Tensor4) -> HostTensor {
+    HostTensor::new(vec![t.o, t.i, t.h, t.w], t.data.clone())
+}
+
+fn as_mat(t: &HostTensor) -> Matrix {
+    assert_eq!(t.dims.len(), 2, "expected matrix, got {:?}", t.dims);
+    Matrix::from_vec(t.dims[0], t.dims[1], t.data.clone())
+}
+
+fn as_t4(t: &HostTensor) -> Tensor4 {
+    assert_eq!(t.dims.len(), 4, "expected 4-d tensor, got {:?}", t.dims);
+    Tensor4::from_vec(t.dims[0], t.dims[1], t.dims[2], t.dims[3], t.data.clone())
+}
+
+/// He-initialised ORIGINAL weights + BN affines for every site.
+pub fn init_orig_params(arch: &Arch, rng: &mut Rng) -> Params {
+    let mut out = Params::new();
+    for t in arch.sites() {
+        let fan_in = t.c * t.k * t.k;
+        if t.kind == SiteKind::Fc {
+            out.insert(
+                format!("{}.w", t.name),
+                HostTensor::new(vec![t.s, t.c], rng.he_weights(t.s * t.c, fan_in)),
+            );
+            out.insert(format!("{}.b", t.name), HostTensor::zeros(vec![t.s]));
+        } else {
+            let shape = if t.k == 1 {
+                vec![t.s, t.c]
+            } else {
+                vec![t.s, t.c, t.k, t.k]
+            };
+            let n: usize = shape.iter().product();
+            out.insert(
+                format!("{}.w", t.name),
+                HostTensor::new(shape, rng.he_weights(n, fan_in)),
+            );
+            out.insert(
+                format!("{}.bn.g", t.name),
+                HostTensor::new(vec![t.s], vec![1.0; t.s]),
+            );
+            out.insert(format!("{}.bn.b", t.name), HostTensor::zeros(vec![t.s]));
+        }
+    }
+    out
+}
+
+/// One-shot decomposition of original weights under `plan` — the paper's
+/// built-in knowledge-distillation init (every factor computed, not random).
+pub fn decompose_params(arch: &Arch, plan: &Plan, orig: &Params) -> Result<Params> {
+    let mut out = Params::new();
+    for t in arch.sites() {
+        let scheme = plan.get(&t.name).unwrap_or(&Scheme::Orig);
+        let w = &orig[&format!("{}.w", t.name)];
+        if t.kind != SiteKind::Fc {
+            out.insert(
+                format!("{}.bn.g", t.name),
+                orig[&format!("{}.bn.g", t.name)].clone(),
+            );
+            out.insert(
+                format!("{}.bn.b", t.name),
+                orig[&format!("{}.bn.b", t.name)].clone(),
+            );
+        }
+        match scheme {
+            Scheme::Orig => {
+                out.insert(format!("{}.w", t.name), w.clone());
+                if t.kind == SiteKind::Fc {
+                    out.insert(format!("{}.b", t.name), orig[&format!("{}.b", t.name)].clone());
+                }
+            }
+            Scheme::Svd { r } => {
+                let (w0, w1) = svd_split(&as_mat(w), *r);
+                out.insert(format!("{}.w0", t.name), ht_mat(&w0));
+                out.insert(format!("{}.w1", t.name), ht_mat(&w1));
+                if t.kind == SiteKind::Fc {
+                    out.insert(format!("{}.b", t.name), orig[&format!("{}.b", t.name)].clone());
+                }
+            }
+            Scheme::Tucker { r1, r2 } => {
+                let f = tucker_stack(&as_t4(w), *r1, *r2);
+                out.insert(format!("{}.u", t.name), ht_mat(&f.u));
+                out.insert(format!("{}.core", t.name), ht_t4(&f.core));
+                out.insert(format!("{}.v", t.name), ht_mat(&f.v));
+            }
+            Scheme::Branched { r1, r2, groups } => {
+                let f = tucker_stack(&as_t4(w), *r1, *r2);
+                let b = branch_tucker(&f, *groups)?;
+                out.insert(format!("{}.u", t.name), ht_mat(&b.u));
+                out.insert(format!("{}.core", t.name), ht_t4(&b.core));
+                out.insert(format!("{}.v", t.name), ht_mat(&b.v));
+            }
+            Scheme::Merged { r1, r2 } => {
+                let pre = match t.name.strip_suffix(".conv2") {
+                    Some(p) => p,
+                    None => bail!("merged scheme on non-conv2 site {}", t.name),
+                };
+                let f = tucker_stack(&as_t4(w), *r1, *r2);
+                let w1 = as_mat(&orig[&format!("{pre}.conv1.w")]);
+                let w3 = as_mat(&orig[&format!("{pre}.conv3.w")]);
+                let m = merge_bottleneck(&w1, &f, &w3)?;
+                out.insert(format!("{pre}.conv1.w"), ht_mat(&m.w1m));
+                out.insert(format!("{}.w", t.name), ht_t4(&m.core));
+                out.insert(format!("{pre}.conv3.w"), ht_mat(&m.w3m));
+                // BN affines of the rewritten 1x1s now act on r1/r2 channels
+                out.insert(
+                    format!("{pre}.conv1.bn.g"),
+                    HostTensor::new(vec![*r1], vec![1.0; *r1]),
+                );
+                out.insert(format!("{pre}.conv1.bn.b"), HostTensor::zeros(vec![*r1]));
+                out.insert(
+                    format!("{}.bn.g", t.name),
+                    HostTensor::new(vec![*r2], vec![1.0; *r2]),
+                );
+                out.insert(format!("{}.bn.b", t.name), HostTensor::zeros(vec![*r2]));
+            }
+            Scheme::MergedInto { .. } => {} // written by the peer conv2
+        }
+    }
+    Ok(out)
+}
+
+/// Paper §2.2 freeze mask over decomposed params: the SVD/Tucker 1x1
+/// factor weights are frozen (false = frozen).
+pub fn freeze_mask(params: &Params) -> BTreeMap<String, bool> {
+    params
+        .keys()
+        .map(|k| {
+            let frozen = k.ends_with(".w0") || k.ends_with(".u") || k.ends_with(".v");
+            (k.clone(), !frozen)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decompose::{plan_variant, Variant};
+    use crate::model::cost;
+
+    #[test]
+    fn decomposed_param_count_matches_cost_model() {
+        let arch = Arch::by_name("resnet-mini").unwrap();
+        let mut rng = Rng::new(1);
+        let orig = init_orig_params(&arch, &mut rng);
+        for v in [Variant::Lrd, Variant::Merged, Variant::Branched] {
+            let plan = plan_variant(&arch, v, 2.0, 2, None).unwrap();
+            let params = decompose_params(&arch, &plan, &orig).unwrap();
+            let all: usize = params.values().map(|t| t.data.len()).sum();
+            let (want_total, _bn) = cost::count_params_split(&arch, &plan);
+            assert_eq!(all, want_total, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn freeze_mask_targets_factors() {
+        let arch = Arch::by_name("resnet-mini").unwrap();
+        let mut rng = Rng::new(2);
+        let orig = init_orig_params(&arch, &mut rng);
+        let plan = plan_variant(&arch, Variant::Lrd, 2.0, 2, None).unwrap();
+        let params = decompose_params(&arch, &plan, &orig).unwrap();
+        let mask = freeze_mask(&params);
+        let frozen: Vec<_> = mask.iter().filter(|(_, &t)| !t).map(|(k, _)| k).collect();
+        assert!(!frozen.is_empty());
+        for k in frozen {
+            assert!(k.ends_with(".w0") || k.ends_with(".u") || k.ends_with(".v"));
+        }
+        assert!(mask["layer1.0.conv2.core"]);
+    }
+
+    #[test]
+    fn orig_params_have_bn_and_bias() {
+        let arch = Arch::by_name("resnet-mini").unwrap();
+        let mut rng = Rng::new(3);
+        let p = init_orig_params(&arch, &mut rng);
+        assert!(p.contains_key("stem.conv.bn.g"));
+        assert!(p.contains_key("fc.b"));
+        assert_eq!(p["fc.w"].dims, vec![10, 512]);
+    }
+}

@@ -1,0 +1,359 @@
+//! Algorithm 1 — hardware-aware rank optimization (§2.1).
+//!
+//! For each layer: start from the compression-ratio rank R (eq. 7), sweep
+//! candidate ranks downward measuring real wall-clock of the decomposed
+//! layer, pick the rank on the fast side of the largest throughput cliff
+//! (argmax of the time step Δt), and keep the ORIGINAL layer when no
+//! decomposed rank beats it.
+//!
+//! The timing oracle is abstracted (`LayerTimer`) so the same search runs
+//! against the PJRT runtime (`runtime::layer_factory`) in production and a
+//! deterministic analytic model in tests. A coarse-sweep + local-refine
+//! schedule keeps the number of XLA compiles per site bounded (the paper
+//! scans every rank; we document this divergence in EXPERIMENTS.md).
+
+use anyhow::Result;
+
+use super::{svd_rank_for_ratio, tucker_rank_for_ratio, Plan, Scheme};
+use crate::model::{Arch, ConvSite, SiteKind};
+
+/// Wall-clock oracle for one layer configuration (seconds per execution).
+pub trait LayerTimer {
+    fn time_layer(&mut self, site: &ConvSite, scheme: &Scheme, batch: usize, hw: usize)
+        -> Result<f64>;
+}
+
+#[derive(Clone, Debug)]
+pub struct RankOptConfig {
+    /// target compression used for the initial rank (paper: 2x)
+    pub alpha: f64,
+    /// lower sweep bound as a fraction of the initial rank (paper's R_min)
+    pub rmin_frac: f64,
+    /// coarse sweep stride (1 = paper's exhaustive scan)
+    pub stride: usize,
+    /// half-width of the stride-1 refinement window around the coarse pick
+    pub refine: usize,
+    pub batch: usize,
+    pub hw: usize,
+}
+
+impl Default for RankOptConfig {
+    fn default() -> Self {
+        RankOptConfig { alpha: 2.0, rmin_frac: 0.5, stride: 4, refine: 4, batch: 8, hw: 64 }
+    }
+}
+
+/// Outcome of Algorithm 1 on one site.
+#[derive(Clone, Debug)]
+pub struct SiteDecision {
+    pub name: String,
+    /// eq. (7) / ratio-based initial rank
+    pub initial_rank: usize,
+    /// `None` = keep the original layer (decomposition is slower)
+    pub chosen_rank: Option<usize>,
+    /// measured time of the original layer
+    pub t_orig: f64,
+    /// measured time at the initial rank
+    pub t_initial: f64,
+    /// measured time at the chosen rank (== t_orig when kept original)
+    pub t_chosen: f64,
+    /// (rank, time) samples from the sweep, ascending rank
+    pub sweep: Vec<(usize, f64)>,
+}
+
+impl SiteDecision {
+    pub fn scheme(&self, site: &ConvSite) -> Scheme {
+        match self.chosen_rank {
+            None => Scheme::Orig,
+            Some(r) => {
+                if site.k == 1 {
+                    Scheme::Svd { r }
+                } else {
+                    let beta = site.s as f64 / site.c as f64;
+                    let r2 = ((beta * r as f64) as usize).clamp(1, site.s);
+                    Scheme::Tucker { r1: r, r2 }
+                }
+            }
+        }
+    }
+
+    /// Throughput gain vs the original layer (>1 = faster).
+    pub fn speedup(&self) -> f64 {
+        self.t_orig / self.t_chosen
+    }
+}
+
+fn scheme_at_rank(site: &ConvSite, r: usize) -> Scheme {
+    if site.k == 1 {
+        Scheme::Svd { r }
+    } else {
+        let beta = site.s as f64 / site.c as f64;
+        let r2 = ((beta * r as f64) as usize).clamp(1, site.s);
+        Scheme::Tucker { r1: r, r2 }
+    }
+}
+
+/// Initial rank from the desired compression ratio.
+pub fn initial_rank(site: &ConvSite, alpha: f64) -> usize {
+    if site.k == 1 {
+        svd_rank_for_ratio(site.c, site.s, alpha)
+    } else {
+        tucker_rank_for_ratio(site.c, site.s, site.k, alpha, None).0
+    }
+}
+
+/// Run Algorithm 1 on one site.
+pub fn optimize_site(
+    timer: &mut dyn LayerTimer,
+    site: &ConvSite,
+    cfg: &RankOptConfig,
+) -> Result<SiteDecision> {
+    let r_init = initial_rank(site, cfg.alpha);
+    let r_min = ((r_init as f64 * cfg.rmin_frac) as usize).max(1);
+    let t_orig = timer.time_layer(site, &Scheme::Orig, cfg.batch, cfg.hw)?;
+
+    // Coarse sweep r_init down to r_min.
+    let mut sweep: Vec<(usize, f64)> = Vec::new();
+    let mut r = r_init;
+    loop {
+        let t = timer.time_layer(site, &scheme_at_rank(site, r), cfg.batch, cfg.hw)?;
+        sweep.push((r, t));
+        if r <= r_min || r < cfg.stride {
+            break;
+        }
+        r = (r - cfg.stride).max(r_min);
+    }
+    sweep.sort_by_key(|&(r, _)| r);
+
+    // Largest cliff: the biggest time drop between adjacent sampled ranks
+    // going downward; the chosen rank is the fast (lower) side.
+    // Cliff score is the per-rank slope (t_hi - t_lo)/(r_hi - r_lo) so
+    // coarse (gap > 1) and refined (gap = 1) samples compare fairly.
+    let mut best_rank = r_init;
+    let mut best_cliff = f64::NEG_INFINITY;
+    for w in sweep.windows(2) {
+        let (lo, t_lo) = w[0];
+        let (hi, t_hi) = w[1];
+        let cliff = (t_hi - t_lo) / (hi - lo) as f64;
+        if cliff > best_cliff {
+            best_cliff = cliff;
+            best_rank = lo;
+        }
+    }
+
+    // Stride-1 refinement around the coarse pick.
+    if cfg.stride > 1 && cfg.refine > 0 {
+        let lo = best_rank.saturating_sub(cfg.refine).max(r_min);
+        let hi = (best_rank + cfg.refine).min(r_init);
+        for r in lo..=hi {
+            if sweep.iter().any(|&(rr, _)| rr == r) {
+                continue;
+            }
+            let t = timer.time_layer(site, &scheme_at_rank(site, r), cfg.batch, cfg.hw)?;
+            sweep.push((r, t));
+        }
+        sweep.sort_by_key(|&(r, _)| r);
+        let mut cliff_best = f64::NEG_INFINITY;
+        for w in sweep.windows(2) {
+            let cliff = (w[1].1 - w[0].1) / (w[1].0 - w[0].0) as f64;
+            if cliff > cliff_best {
+                cliff_best = cliff;
+                best_rank = w[0].0;
+            }
+        }
+    }
+
+    let t_initial = sweep
+        .iter()
+        .find(|&&(r, _)| r == r_init)
+        .map(|&(_, t)| t)
+        .unwrap_or(f64::NAN);
+    let t_best = sweep
+        .iter()
+        .find(|&&(r, _)| r == best_rank)
+        .map(|&(_, t)| t)
+        .unwrap();
+
+    // Paper: "if it could not find such a rank with lower computational
+    // time, the original layer will be used instead".
+    let (chosen, t_chosen) = if t_best < t_orig {
+        (Some(best_rank), t_best)
+    } else {
+        (None, t_orig)
+    };
+    Ok(SiteDecision {
+        name: site.name.clone(),
+        initial_rank: r_init,
+        chosen_rank: chosen,
+        t_orig,
+        t_initial,
+        t_chosen,
+        sweep,
+    })
+}
+
+/// Run Algorithm 1 over every decomposable site of a model, returning the
+/// per-site decisions and the resulting `Variant::Opt` plan overrides.
+pub fn optimize_model(
+    timer: &mut dyn LayerTimer,
+    arch: &Arch,
+    cfg: &RankOptConfig,
+    mut progress: impl FnMut(&SiteDecision),
+) -> Result<(Vec<SiteDecision>, Plan)> {
+    let mut decisions = Vec::new();
+    let mut plan = Plan::new();
+    for site in arch.sites() {
+        if site.kind == SiteKind::Stem {
+            plan.insert(site.name.clone(), Scheme::Orig);
+            continue;
+        }
+        let d = optimize_site(timer, &site, cfg)?;
+        plan.insert(site.name.clone(), d.scheme(&site));
+        progress(&d);
+        decisions.push(d);
+    }
+    Ok((decisions, plan))
+}
+
+// --------------------------------------------------------------------------
+// Analytic timer for tests & dry-runs: MAC count modulated by the Fig. 2
+// tile-efficiency model, plus a fixed per-layer dispatch overhead.
+// --------------------------------------------------------------------------
+
+/// Deterministic cost-model timer. `lane` sets the tile width of the
+/// simulated device (128 = MXU-like, 8 = AVX-like); `overhead` is the fixed
+/// per-layer dispatch cost in seconds that makes depth expensive (the
+/// paper's core observation).
+pub struct AnalyticTimer {
+    pub lane: usize,
+    pub overhead: f64,
+    pub flops_per_sec: f64,
+}
+
+impl Default for AnalyticTimer {
+    fn default() -> Self {
+        AnalyticTimer { lane: 8, overhead: 20e-6, flops_per_sec: 50e9 }
+    }
+}
+
+impl AnalyticTimer {
+    fn dims_of(&self, site: &ConvSite, scheme: &Scheme) -> Vec<(usize, usize)> {
+        // (macs-weight, gating dim) per sub-layer
+        let k2 = site.k * site.k;
+        match scheme {
+            Scheme::Orig => vec![(site.c * site.s * k2, site.s)],
+            Scheme::Svd { r } => vec![(site.c * r, *r), (r * site.s, site.s)],
+            Scheme::Tucker { r1, r2 } => vec![
+                (site.c * r1, *r1),
+                (r1 * r2 * k2, *r2),
+                (r2 * site.s, site.s),
+            ],
+            Scheme::Branched { r1, r2, groups } => vec![
+                (site.c * r1, *r1),
+                ((r1 / groups) * (r2 / groups) * k2 * groups, r2 / groups),
+                (r2 * site.s, site.s),
+            ],
+            Scheme::Merged { r1, r2 } => vec![(r1 * r2 * k2, *r2)],
+            Scheme::MergedInto { .. } => vec![(site.c * site.s, site.s)],
+        }
+    }
+}
+
+impl LayerTimer for AnalyticTimer {
+    fn time_layer(
+        &mut self,
+        site: &ConvSite,
+        scheme: &Scheme,
+        batch: usize,
+        hw: usize,
+    ) -> Result<f64> {
+        let area = (hw / site.stride).max(1).pow(2);
+        let mut t = 0.0;
+        for (macs_w, gate) in self.dims_of(site, scheme) {
+            let eff = crate::model::cost::tile_efficiency(gate, self.lane).max(1e-3);
+            let flops = 2.0 * (batch * area * macs_w) as f64;
+            t += flops / (self.flops_per_sec * eff) + self.overhead;
+        }
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Arch;
+
+    fn site(c: usize, s: usize, k: usize) -> ConvSite {
+        ConvSite {
+            name: format!("t.{c}x{s}x{k}"),
+            c,
+            s,
+            k,
+            stride: 1,
+            padding: if k > 1 { 1 } else { 0 },
+            kind: SiteKind::Conv,
+        }
+    }
+
+    fn cfg() -> RankOptConfig {
+        RankOptConfig { stride: 1, refine: 0, batch: 2, hw: 16, ..Default::default() }
+    }
+
+    #[test]
+    fn initial_ranks_match_table2() {
+        assert_eq!(initial_rank(&site(64, 64, 1), 2.0), 16);
+        assert_eq!(initial_rank(&site(64, 64, 3), 2.0), 38);
+        assert_eq!(initial_rank(&site(512, 512, 3), 2.0), 309);
+    }
+
+    #[test]
+    fn picks_tile_aligned_rank() {
+        // lane=8 device: the optimizer should land on a multiple of 8 at or
+        // below the eq.-7 rank 38 (the paper's Table 2 lands on 32).
+        let mut timer = AnalyticTimer { lane: 8, ..Default::default() };
+        let d = optimize_site(&mut timer, &site(64, 64, 3), &cfg()).unwrap();
+        let r = d.chosen_rank.expect("should decompose");
+        assert_eq!(r % 8, 0, "rank {r} not tile aligned");
+        assert!(r <= d.initial_rank);
+    }
+
+    #[test]
+    fn keeps_original_when_decomposition_slower() {
+        // huge dispatch overhead: 3 layers can never beat 1
+        let mut timer =
+            AnalyticTimer { lane: 8, overhead: 10.0, flops_per_sec: 50e9 };
+        let d = optimize_site(&mut timer, &site(64, 64, 3), &cfg()).unwrap();
+        assert_eq!(d.chosen_rank, None);
+        assert_eq!(d.t_chosen, d.t_orig);
+        assert_eq!(d.speedup(), 1.0);
+    }
+
+    #[test]
+    fn coarse_plus_refine_finds_cliff() {
+        let mut timer = AnalyticTimer { lane: 16, ..Default::default() };
+        let c = RankOptConfig { stride: 8, refine: 8, batch: 2, hw: 16, ..Default::default() };
+        let d = optimize_site(&mut timer, &site(256, 256, 3), &c).unwrap();
+        let r = d.chosen_rank.expect("should decompose");
+        assert_eq!(r % 16, 0, "refined rank {r} should hit the lane-16 cliff");
+    }
+
+    #[test]
+    fn optimize_model_covers_all_non_stem_sites() {
+        let arch = Arch::by_name("resnet-mini").unwrap();
+        let mut timer = AnalyticTimer::default();
+        let (decisions, plan) =
+            optimize_model(&mut timer, &arch, &cfg(), |_| {}).unwrap();
+        assert_eq!(decisions.len(), arch.sites().len() - 1); // minus stem
+        assert_eq!(plan["stem.conv"], Scheme::Orig);
+    }
+
+    #[test]
+    fn sweep_is_recorded_and_sorted() {
+        let mut timer = AnalyticTimer::default();
+        let d = optimize_site(&mut timer, &site(64, 128, 1), &cfg()).unwrap();
+        assert!(!d.sweep.is_empty());
+        for w in d.sweep.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Weight-level decomposition transforms (the rust mirror of
+//! `python/compile/decompose.py`): SVD split, Tucker-2 stack, Fig. 3
+//! merging and Fig. 4 branch splitting, over `linalg` types.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{svd, tucker2, Matrix, Tensor4, Tucker2};
+
+/// Eq. (3): split an [S, C] weight into (w0: [R, C], w1: [S, R]) with each
+/// factor absorbing sqrt(sigma).
+pub fn svd_split(w: &Matrix, r: usize) -> (Matrix, Matrix) {
+    svd(w).split(r)
+}
+
+/// Eq. (4)-(6): Tucker-2 stack of an OIHW conv weight.
+pub fn tucker_stack(w: &Tensor4, r1: usize, r2: usize) -> Tucker2 {
+    tucker2(w, r1, r2)
+}
+
+/// Fig. 3 merged bottleneck weights.
+#[derive(Clone, Debug)]
+pub struct MergedBottleneck {
+    /// [r1, C] — conv1 folded with conv2's Tucker U
+    pub w1m: Matrix,
+    /// [r2, r1, k, k]
+    pub core: Tensor4,
+    /// [S, r2] — conv3 folded with conv2's Tucker V
+    pub w3m: Matrix,
+}
+
+/// Fold the Tucker 1x1 factors into the adjacent bottleneck 1x1 convs:
+/// conv1' = U2 @ W1 ([r1,M]@[M,C]), conv3' = W3 @ V2 ([S,M]@[M,r2]).
+pub fn merge_bottleneck(w1: &Matrix, t2: &Tucker2, w3: &Matrix) -> Result<MergedBottleneck> {
+    if t2.u.cols != w1.rows {
+        bail!("U2 [.,{}] does not compose with conv1 [{},.]", t2.u.cols, w1.rows);
+    }
+    if w3.cols != t2.v.rows {
+        bail!("conv3 [.,{}] does not compose with V2 [{},.]", w3.cols, t2.v.rows);
+    }
+    Ok(MergedBottleneck {
+        w1m: t2.u.matmul(w1),
+        core: t2.core.clone(),
+        w3m: w3.matmul(&t2.v),
+    })
+}
+
+/// Fig. 4 grouped-conv weights for N Tucker branches.
+#[derive(Clone, Debug)]
+pub struct Branched {
+    /// [r1, C]
+    pub u: Matrix,
+    /// grouped OIHW: [r2, r1/N, k, k]
+    pub core: Tensor4,
+    /// [S, r2]
+    pub v: Matrix,
+    pub groups: usize,
+}
+
+/// Eq. (12)-(17): keep the diagonal core blocks (the off-diagonal blocks
+/// are dropped — that is the N-fold parameter saving of eq. 18-20 and why
+/// branching needs fine-tuning).
+pub fn branch_tucker(t: &Tucker2, groups: usize) -> Result<Branched> {
+    let (r2, r1) = (t.core.o, t.core.i);
+    if r1 % groups != 0 || r2 % groups != 0 {
+        bail!("ranks ({r1},{r2}) not divisible by N={groups}");
+    }
+    let (b1, b2) = (r1 / groups, r2 / groups);
+    let mut core = Tensor4::zeros(r2, b1, t.core.h, t.core.w);
+    for g in 0..groups {
+        for j in 0..b2 {
+            for i in 0..b1 {
+                for h in 0..t.core.h {
+                    for w in 0..t.core.w {
+                        *core.at_mut(g * b2 + j, i, h, w) =
+                            t.core.at(g * b2 + j, g * b1 + i, h, w);
+                    }
+                }
+            }
+        }
+    }
+    Ok(Branched { u: t.u.clone(), core, v: t.v.clone(), groups })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::assert_allclose;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn svd_split_reconstructs_at_full_rank() {
+        let mut rng = Rng::new(0);
+        let w = Matrix::random(12, 8, &mut rng);
+        let (w0, w1) = svd_split(&w, 8);
+        assert_allclose(&w1.matmul(&w0).data, &w.data, 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn merge_shapes() {
+        let mut rng = Rng::new(1);
+        let (c, m, s) = (8, 16, 32);
+        let w1 = Matrix::random(m, c, &mut rng);
+        let w3 = Matrix::random(s, m, &mut rng);
+        let t2 = tucker_stack(&Tensor4::random(m, m, 3, 3, &mut rng), 6, 7);
+        let mg = merge_bottleneck(&w1, &t2, &w3).unwrap();
+        assert_eq!((mg.w1m.rows, mg.w1m.cols), (6, c));
+        assert_eq!((mg.core.o, mg.core.i), (7, 6));
+        assert_eq!((mg.w3m.rows, mg.w3m.cols), (s, 7));
+    }
+
+    #[test]
+    fn merge_shape_mismatch_rejected() {
+        let mut rng = Rng::new(2);
+        let w1 = Matrix::random(10, 4, &mut rng); // M=10 but tucker is over M=8
+        let w3 = Matrix::random(16, 8, &mut rng);
+        let t2 = tucker_stack(&Tensor4::random(8, 8, 3, 3, &mut rng), 4, 4);
+        assert!(merge_bottleneck(&w1, &t2, &w3).is_err());
+    }
+
+    #[test]
+    fn branch_extracts_diagonal_blocks() {
+        let mut rng = Rng::new(3);
+        let t = tucker_stack(&Tensor4::random(8, 8, 3, 3, &mut rng), 4, 4);
+        let b = branch_tucker(&t, 2).unwrap();
+        assert_eq!((b.core.o, b.core.i), (4, 2));
+        assert_eq!(b.core.numel(), t.core.numel() / 2); // eq. (18)-(20)
+        for j in 0..2 {
+            for i in 0..2 {
+                assert_eq!(b.core.at(j, i, 1, 1), t.core.at(j, i, 1, 1));
+                assert_eq!(b.core.at(2 + j, i, 1, 1), t.core.at(2 + j, 2 + i, 1, 1));
+            }
+        }
+    }
+
+    #[test]
+    fn branch_rejects_indivisible() {
+        let mut rng = Rng::new(4);
+        let t = tucker_stack(&Tensor4::random(9, 9, 3, 3, &mut rng), 6, 6);
+        assert!(branch_tucker(&t, 4).is_err());
+    }
+
+    #[test]
+    fn merged_linear_equivalence_at_full_rank() {
+        // with full-rank Tucker and no nonlinearity, the merged 1x1 products
+        // compute the same linear map as the unmerged chain
+        let mut rng = Rng::new(5);
+        let (c, m) = (4, 6);
+        let w1 = Matrix::random(m, c, &mut rng);
+        let w3 = Matrix::random(8, m, &mut rng);
+        let w2 = Tensor4::random(m, m, 1, 1, &mut rng); // 1x1 core for exact algebra
+        let t2 = tucker_stack(&w2, m, m);
+        let mg = merge_bottleneck(&w1, &t2, &w3).unwrap();
+        // chain: w3 @ (V (core U)) @ w1 as matrices (all 1x1)
+        let core_m = Matrix::from_vec(t2.core.o, t2.core.i, t2.core.data.clone());
+        let chain = w3
+            .matmul(&t2.v)
+            .matmul(&core_m)
+            .matmul(&t2.u)
+            .matmul(&w1);
+        let merged_m = Matrix::from_vec(mg.core.o, mg.core.i, mg.core.data.clone());
+        let merged = mg.w3m.matmul(&merged_m).matmul(&mg.w1m);
+        assert_allclose(&merged.data, &chain.data, 1e-3, 1e-3);
+    }
+}

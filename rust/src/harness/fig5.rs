@@ -1,0 +1,122 @@
+//! Fig. 5: model throughput vs number of Tucker branches N.
+//!
+//! Builds the branched network for N in {1, 2, 4, 8, ...} and measures
+//! images/sec, plus the analytic core-parameter saving (eq. 18-20).
+
+use anyhow::Result;
+
+use super::{measure_fps, Report};
+use crate::decompose::{plan_variant, Variant};
+use crate::model::{cost, Arch};
+use crate::profiler::Timer;
+use crate::runtime::netbuilder::BuiltNet;
+use crate::runtime::Engine;
+use crate::util::json::Json;
+
+pub struct Config {
+    pub arch: String,
+    pub branch_counts: Vec<usize>,
+    pub hw: usize,
+    pub batch: usize,
+    pub alpha: f64,
+    pub no_measure: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            arch: "resnet50".into(),
+            branch_counts: vec![1, 2, 4],
+            hw: 64,
+            batch: 8,
+            alpha: 2.0,
+            no_measure: false,
+        }
+    }
+}
+
+pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
+    let arch = Arch::by_name(&cfg.arch)
+        .ok_or_else(|| anyhow::anyhow!("unknown arch {}", cfg.arch))?;
+    let timer = Timer::default();
+    let plan0 = plan_variant(&arch, Variant::Orig, cfg.alpha, 1, None)?;
+    let macs0 = cost::count_macs(&arch, &plan0, 224);
+    let fps0 = if cfg.no_measure {
+        f64::NAN
+    } else {
+        let net = BuiltNet::compile(engine, &arch, &plan0, cfg.batch, cfg.hw, 2)?;
+        measure_fps(engine, &net, &timer)?
+    };
+
+    let mut rows = vec![vec![
+        "orig".into(),
+        "-".into(),
+        format!("{:.2}", 2.0 * macs0 as f64 / 1e9),
+        if fps0.is_nan() { "-".into() } else { format!("{fps0:.1}") },
+        "1.00x".into(),
+    ]];
+    let mut jrows = Vec::new();
+    for &n in &cfg.branch_counts {
+        let plan = plan_variant(&arch, Variant::Branched, cfg.alpha, n, None)?;
+        let macs = cost::count_macs(&arch, &plan, 224);
+        let fps = if cfg.no_measure {
+            f64::NAN
+        } else {
+            let net = BuiltNet::compile(engine, &arch, &plan, cfg.batch, cfg.hw, 2)?;
+            measure_fps(engine, &net, &timer)?
+        };
+        rows.push(vec![
+            format!("N={n}"),
+            n.to_string(),
+            format!("{:.2}", 2.0 * macs as f64 / 1e9),
+            if fps.is_nan() { "-".into() } else { format!("{fps:.1}") },
+            if fps.is_nan() {
+                format!("{:.2}x (analytic)", macs0 as f64 / macs as f64)
+            } else {
+                format!("{:.2}x", fps / fps0)
+            },
+        ]);
+        jrows.push(Json::obj_from(vec![
+            ("branches", Json::Num(n as f64)),
+            ("flops", Json::Num(2.0 * macs as f64)),
+            ("fps", Json::Num(fps)),
+            ("fps_orig", Json::Num(fps0)),
+        ]));
+    }
+    Ok(Report {
+        id: "fig5".into(),
+        title: format!("throughput vs branch count, {} (paper Fig. 5)", cfg.arch),
+        header: ["config", "N", "FLOPs (B)", "fps", "speedup"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        rows,
+        notes: vec![
+            "N=1 is vanilla Tucker at the same ranks; larger N shrinks the core \
+             N-fold (eq. 18-20) at fixed ranks"
+                .into(),
+        ],
+        json: Json::obj_from(vec![("rows", Json::Arr(jrows))]),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_fig5_flops_fall_with_branches() {
+        let engine = Engine::cpu().unwrap();
+        let cfg = Config {
+            arch: "resnet50".into(),
+            branch_counts: vec![1, 2, 4],
+            no_measure: true,
+            ..Default::default()
+        };
+        let rep = run(&engine, &cfg).unwrap();
+        let flops: Vec<f64> = rep.rows.iter().map(|r| r[2].parse::<f64>().unwrap()).collect();
+        assert!(flops[1] < flops[0], "N=1 branched < orig");
+        assert!(flops[2] < flops[1], "N=2 < N=1");
+        assert!(flops[3] < flops[2], "N=4 < N=2");
+    }
+}

@@ -1,0 +1,128 @@
+//! Experiment harness: one regenerator per table/figure of the paper.
+//!
+//! Every experiment returns a `Report` (markdown-ish table + structured
+//! JSON) and is reachable three ways: `lrdx bench <id>`, `cargo bench
+//! --bench <id>`, and the functions here. Reports are also written to
+//! `reports/<id>.json` for EXPERIMENTS.md.
+
+pub mod fig2;
+pub mod fig5;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table456;
+
+use anyhow::Result;
+
+use crate::profiler::Timer;
+use crate::runtime::netbuilder::BuiltNet;
+use crate::runtime::Engine;
+use crate::util::json::Json;
+
+/// A rendered experiment result.
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+    pub json: Json,
+}
+
+impl Report {
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(cell.len());
+                }
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths.get(i).copied().unwrap_or(4)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    /// Persist the structured result under `reports/`.
+    pub fn save(&self, dir: &std::path::Path) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.json", self.id));
+        std::fs::write(&path, self.json.render())?;
+        Ok(path)
+    }
+}
+
+/// Measure steady-state images/sec of a built network at its batch size.
+pub fn measure_fps(engine: &Engine, net: &BuiltNet, timer: &Timer) -> Result<f64> {
+    let x: Vec<f32> = crate::util::det_input(net.batch, net.hw);
+    let xb = engine.upload(&x, &[net.batch, 3, net.hw, net.hw])?;
+    let summary = timer.measure(|| {
+        let out = net.forward(&xb)?;
+        let _ = out
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("sync: {e:?}"))?;
+        Ok(())
+    })?;
+    Ok(net.batch as f64 / summary.trimmed_mean)
+}
+
+/// Percent delta vs a baseline (negative = reduction), rendered like the
+/// paper's tables.
+pub fn pct_delta(value: f64, baseline: f64) -> f64 {
+    (value / baseline - 1.0) * 100.0
+}
+
+pub fn fmt_pct(v: f64) -> String {
+    format!("{v:+.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_render_aligns_columns() {
+        let r = Report {
+            id: "t".into(),
+            title: "demo".into(),
+            header: vec!["a".into(), "bbbb".into()],
+            rows: vec![
+                vec!["xxxxx".into(), "1".into()],
+                vec!["y".into(), "22".into()],
+            ],
+            notes: vec!["n1".into()],
+            json: Json::Null,
+        };
+        let s = r.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("note: n1"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[1].len(), lines[3].len());
+    }
+
+    #[test]
+    fn pct_delta_signs() {
+        assert!((pct_delta(50.0, 100.0) + 50.0).abs() < 1e-12);
+        assert!((pct_delta(110.0, 100.0) - 10.0).abs() < 1e-12);
+        assert_eq!(fmt_pct(-43.26), "-43.26");
+    }
+}

@@ -1,0 +1,205 @@
+//! Table 2: Algorithm 1 optimized ranks for the early/late ResNet-152
+//! layers the paper lists (layer1.0.conv1..3, layer4.2.conv1..3, fc).
+//!
+//! Two timing backends: the real PJRT layer timer (`--real`, measures
+//! XLA:CPU wall-clock per candidate rank) or the deterministic analytic
+//! timer (tile-efficiency cost model — reproduces the *mechanism* of the
+//! paper's 15% cliff without minutes of compiles).
+
+use anyhow::Result;
+
+use super::Report;
+use crate::decompose::rank_opt::{
+    optimize_site, AnalyticTimer, LayerTimer, RankOptConfig,
+};
+use crate::model::Arch;
+use crate::profiler::Timer;
+use crate::runtime::layer_factory::PjrtLayerTimer;
+use crate::runtime::Engine;
+use crate::util::json::Json;
+
+pub struct Config {
+    pub arch: String,
+    pub sites: Vec<String>,
+    pub real: bool,
+    pub batch: usize,
+    pub hw: usize,
+    pub stride: usize,
+    pub refine: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            arch: "resnet152".into(),
+            sites: [
+                "layer1.0.conv1",
+                "layer1.0.conv2",
+                "layer1.0.conv3",
+                "layer4.2.conv1",
+                "layer4.2.conv2",
+                "layer4.2.conv3",
+                "fc",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+            real: false,
+            batch: 4,
+            hw: 32,
+            stride: 4,
+            refine: 4,
+        }
+    }
+}
+
+/// Paper's Table 2 "Optimized Ranks" column for reference in the output.
+fn paper_rank(site: &str) -> &'static str {
+    match site {
+        "layer1.0.conv1" => "ORG",
+        "layer1.0.conv2" => "32",
+        "layer1.0.conv3" => "24",
+        "layer4.2.conv1" => "202",
+        "layer4.2.conv2" => "308",
+        "layer4.2.conv3" => "200",
+        "fc" => "253",
+        _ => "-",
+    }
+}
+
+pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
+    let arch = Arch::by_name(&cfg.arch)
+        .ok_or_else(|| anyhow::anyhow!("unknown arch {}", cfg.arch))?;
+    let sites = arch.sites();
+    let mut real_timer;
+    let mut analytic_timer;
+    let timer: &mut dyn LayerTimer = if cfg.real {
+        real_timer = PjrtLayerTimer::with_timer(
+            engine.clone(),
+            Timer { warmup: 1, min_samples: 4, max_samples: 10, cv_target: 0.15 },
+        );
+        &mut real_timer
+    } else {
+        analytic_timer = AnalyticTimer { lane: 16, ..Default::default() };
+        &mut analytic_timer
+    };
+    let ocfg = RankOptConfig {
+        alpha: 2.0,
+        rmin_frac: 0.5,
+        stride: cfg.stride,
+        refine: cfg.refine,
+        batch: cfg.batch,
+        hw: cfg.hw,
+    };
+
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+    for name in &cfg.sites {
+        let site = sites
+            .iter()
+            .find(|t| &t.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no site {name} in {}", cfg.arch))?;
+        // the fc site's spatial extent is 1 — time it at hw=1
+        let (b, hw) = if site.k == 1 && site.name == "fc" {
+            (cfg.batch * 8, 1)
+        } else {
+            (cfg.batch, cfg.hw)
+        };
+        let d = optimize_site(timer, site, &RankOptConfig { batch: b, hw, ..ocfg.clone() })?;
+        let chosen = match d.chosen_rank {
+            Some(r) => r.to_string(),
+            None => "ORG".to_string(),
+        };
+        rows.push(vec![
+            name.clone(),
+            site.c.to_string(),
+            site.s.to_string(),
+            d.initial_rank.to_string(),
+            chosen.clone(),
+            paper_rank(name).to_string(),
+            format!("{:.2}x", d.speedup()),
+        ]);
+        jrows.push(Json::obj_from(vec![
+            ("site", Json::Str(name.clone())),
+            ("initial_rank", Json::Num(d.initial_rank as f64)),
+            (
+                "chosen_rank",
+                d.chosen_rank.map(|r| Json::Num(r as f64)).unwrap_or(Json::Null),
+            ),
+            ("t_orig", Json::Num(d.t_orig)),
+            ("t_chosen", Json::Num(d.t_chosen)),
+            ("speedup", Json::Num(d.speedup())),
+            (
+                "sweep",
+                Json::Arr(
+                    d.sweep
+                        .iter()
+                        .map(|&(r, t)| {
+                            Json::Arr(vec![Json::Num(r as f64), Json::Num(t)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    Ok(Report {
+        id: "table2".into(),
+        title: format!(
+            "Algorithm 1 optimized ranks, {} ({} timing)",
+            cfg.arch,
+            if cfg.real { "XLA:CPU wall-clock" } else { "analytic tile model" }
+        ),
+        header: ["Layer", "In", "Out", "2x Rank", "Opt Rank", "Paper", "Speedup"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        rows,
+        notes: vec![
+            "Paper column = their Table 2 (V100-class GPU); absolute optimized ranks \
+             are device-specific by design — what must reproduce is the *behaviour*: \
+             ranks snap to tile-aligned values at/below the 2x rank, and layers where \
+             decomposition loses keep ORG"
+                .into(),
+            format!(
+                "search: coarse stride {} + stride-1 refine ±{}, Rmin = R/2",
+                cfg.stride, cfg.refine
+            ),
+        ],
+        json: Json::obj_from(vec![("rows", Json::Arr(jrows))]),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_table2_reproduces_paper_behaviour() {
+        let engine = Engine::cpu().unwrap();
+        let cfg = Config { stride: 1, refine: 0, ..Default::default() };
+        let rep = run(&engine, &cfg).unwrap();
+        assert_eq!(rep.rows.len(), 7);
+        // 2x ranks column must match the paper exactly (it's pure eq. 7)
+        let by: std::collections::HashMap<String, Vec<String>> =
+            rep.rows.iter().map(|r| (r[0].clone(), r.clone())).collect();
+        assert_eq!(by["layer1.0.conv1"][3], "16");
+        assert_eq!(by["layer1.0.conv2"][3], "38");
+        assert_eq!(by["layer4.2.conv2"][3], "309");
+        assert_eq!(by["layer4.2.conv1"][3], "204");
+        // optimized ranks stay within [R/2, R]; the large Tucker site must
+        // snap to a lane-16 boundary (the Fig. 2 cliff mechanism)
+        for r in &rep.rows {
+            let opt = &r[4];
+            if opt != "ORG" {
+                let v: usize = opt.parse().unwrap();
+                let init: usize = r[3].parse().unwrap();
+                assert!(v <= init && v >= init / 2, "{}: rank {v} outside bounds", r[0]);
+            }
+        }
+        let big = &by["layer4.2.conv2"][4];
+        if big != "ORG" {
+            let v: usize = big.parse().unwrap();
+            assert_eq!(v % 16, 0, "512-wide core should snap to lane 16, got {v}");
+        }
+    }
+}

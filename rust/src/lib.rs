@@ -1,0 +1,28 @@
+//! # lrdx — Accelerating Low-Rank Decomposed Models
+//!
+//! Reproduction of Hajimolahoseini et al., *"Accelerating the Low-Rank
+//! Decomposed Models"* (2024) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time, python)** — Pallas kernels + JAX ResNet variants,
+//!   AOT-lowered to HLO-text artifacts (`python/compile`, `make artifacts`).
+//! * **L3 (this crate)** — the runtime: PJRT execution of the artifacts, an
+//!   XlaBuilder layer/network factory for rank sweeps, the Algorithm 1 rank
+//!   optimizer, the serving coordinator, the fine-tuning driver, and the
+//!   benchmark harness that regenerates every table/figure of the paper.
+//!
+//! Python never runs on the request path: after `make artifacts` the rust
+//! binary is self-contained.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod decompose;
+pub mod harness;
+pub mod linalg;
+pub mod model;
+pub mod profiler;
+pub mod runtime;
+pub mod trainsim;
+pub mod util;

@@ -1,0 +1,209 @@
+//! Dense linear-algebra substrate, built from scratch (no LA crate offline):
+//! row-major matrices, QR, one-sided Jacobi SVD and Tucker-2 HOSVD over
+//! OIHW tensors. Sized for the paper's layers (up to 2048 x 512 factors).
+
+pub mod qr;
+pub mod svd;
+pub mod tensor4;
+pub mod tucker;
+
+pub use qr::qr;
+pub use svd::{svd, Svd};
+pub use tensor4::Tensor4;
+pub use tucker::{tucker2, Tucker2};
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn random(rows: usize, cols: usize, rng: &mut crate::util::rng::Rng) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.normal_f32()).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// `self @ other`, blocked over rows; f64 accumulation.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (p, &a) in arow.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(p);
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Keep the leading `r` columns.
+    pub fn take_cols(&self, r: usize) -> Matrix {
+        assert!(r <= self.cols);
+        Matrix::from_fn(self.rows, r, |i, j| self[(i, j)])
+    }
+
+    /// Columns `lo..hi`.
+    pub fn col_block(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.cols);
+        Matrix::from_fn(self.rows, hi - lo, |i, j| self[(i, lo + j)])
+    }
+
+    /// Rows `lo..hi`.
+    pub fn row_block(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.rows);
+        Matrix::from_fn(hi - lo, self.cols, |i, j| self[(lo + i, j)])
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::assert_allclose;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::random(5, 7, &mut rng);
+        let i = Matrix::eye(7);
+        assert_allclose(&a.matmul(&i).data, &a.data, 1e-6, 1e-7);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.matmul(&b).data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::random(3, 8, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matmul_transpose_property() {
+        crate::util::check::property(10, |rng| {
+            let (m, k, n) = (rng.range(1, 6), rng.range(1, 6), rng.range(1, 6));
+            let a = Matrix::random(m, k, rng);
+            let b = Matrix::random(k, n, rng);
+            let ab_t = a.matmul(&b).transpose();
+            let bt_at = b.transpose().matmul(&a.transpose());
+            assert_allclose(&ab_t.data, &bt_at.data, 1e-5, 1e-6);
+        });
+    }
+
+    #[test]
+    fn blocks() {
+        let a = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        assert_eq!(a.col_block(1, 3).data, vec![1., 2., 5., 6., 9., 10., 13., 14.]);
+        assert_eq!(a.row_block(2, 3).data, vec![8., 9., 10., 11.]);
+        assert_eq!(a.take_cols(1).data, vec![0., 4., 8., 12.]);
+    }
+
+    #[test]
+    fn fro_norm() {
+        let a = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.fro() - 5.0).abs() < 1e-12);
+    }
+}

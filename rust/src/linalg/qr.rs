@@ -1,0 +1,99 @@
+//! Householder QR decomposition (used by tests as an orthogonality oracle
+//! and by the pruning baseline's subspace analysis).
+
+use super::Matrix;
+
+/// Reduced QR: `a = q @ r` with `q`: [m, k], `r`: [k, n], k = min(m, n).
+pub fn qr(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    let k = m.min(n);
+    // Work in f64 for stability.
+    let mut r: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut q: Vec<f64> = vec![0.0; m * m];
+    for i in 0..m {
+        q[i * m + i] = 1.0;
+    }
+    let idx = |i: usize, j: usize, cols: usize| i * cols + j;
+
+    for col in 0..k {
+        // Householder vector for column `col` below the diagonal.
+        let mut norm = 0.0;
+        for i in col..m {
+            norm += r[idx(i, col, n)] * r[idx(i, col, n)];
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-300 {
+            continue;
+        }
+        let alpha = if r[idx(col, col, n)] >= 0.0 { -norm } else { norm };
+        let mut v = vec![0.0; m];
+        for i in col..m {
+            v[i] = r[idx(i, col, n)];
+        }
+        v[col] -= alpha;
+        let vnorm2: f64 = v[col..].iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+        // R <- (I - 2 v v^T / |v|^2) R
+        for j in col..n {
+            let dot: f64 = (col..m).map(|i| v[i] * r[idx(i, j, n)]).sum();
+            let s = 2.0 * dot / vnorm2;
+            for i in col..m {
+                r[idx(i, j, n)] -= s * v[i];
+            }
+        }
+        // Q <- Q (I - 2 v v^T / |v|^2)
+        for i in 0..m {
+            let dot: f64 = (col..m).map(|j| q[idx(i, j, m)] * v[j]).sum();
+            let s = 2.0 * dot / vnorm2;
+            for j in col..m {
+                q[idx(i, j, m)] -= s * v[j];
+            }
+        }
+    }
+
+    let qk = Matrix::from_fn(m, k, |i, j| q[idx(i, j, m)] as f32);
+    let rk = Matrix::from_fn(k, n, |i, j| if i <= j { r[idx(i, j, n)] as f32 } else { 0.0 });
+    (qk, rk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{assert_allclose, property};
+
+    #[test]
+    fn reconstructs() {
+        property(10, |rng| {
+            let (m, n) = (rng.range(1, 10), rng.range(1, 10));
+            let a = Matrix::random(m, n, rng);
+            let (q, r) = qr(&a);
+            assert_allclose(&q.matmul(&r).data, &a.data, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        property(10, |rng| {
+            let (m, n) = (rng.range(2, 10), rng.range(1, 8));
+            let a = Matrix::random(m, n, rng);
+            let (q, _r) = qr(&a);
+            let qtq = q.transpose().matmul(&q);
+            let eye = Matrix::eye(q.cols);
+            assert_allclose(&qtq.data, &eye.data, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let a = Matrix::random(6, 4, &mut rng);
+        let (_q, r) = qr(&a);
+        for i in 0..r.rows {
+            for j in 0..i.min(r.cols) {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+}

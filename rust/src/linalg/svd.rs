@@ -1,0 +1,219 @@
+//! One-sided Jacobi SVD (Hestenes), f64 internally.
+//!
+//! The decomposition engine behind eq. (1)-(3): thin SVD `a = u @ diag(s) @ vt`
+//! with singular values sorted descending. One-sided Jacobi is simple,
+//! numerically robust, and fast enough for the paper's largest factor
+//! (2048 x 512) — it is the same family of algorithm LAPACK uses for
+//! high-accuracy SVD (xGEJSV).
+
+use super::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct Svd {
+    /// [m, k] left singular vectors (k = min(m, n))
+    pub u: Matrix,
+    /// k singular values, descending
+    pub s: Vec<f32>,
+    /// [k, n] right singular vectors, transposed
+    pub vt: Matrix,
+}
+
+/// Thin SVD via one-sided Jacobi. Orthogonalises the columns of A by plane
+/// rotations; converged column norms are the singular values.
+pub fn svd(a: &Matrix) -> Svd {
+    if a.rows < a.cols {
+        // Work on the transpose and swap factors.
+        let t = svd(&a.transpose());
+        return Svd { u: t.vt.transpose(), s: t.s, vt: t.u.transpose() };
+    }
+    let (m, n) = (a.rows, a.cols);
+    // Column-major working copy in f64: cols[j][i]
+    let mut cols: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..m).map(|i| a[(i, j)] as f64).collect())
+        .collect();
+    let mut v = vec![vec![0.0f64; n]; n];
+    for (j, row) in v.iter_mut().enumerate() {
+        row[j] = 1.0;
+    }
+
+    let eps = 1e-12;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    app += cols[p][i] * cols[p][i];
+                    aqq += cols[q][i] * cols[q][i];
+                    apq += cols[p][i] * cols[q][i];
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let (xp, xq) = (cols[p][i], cols[q][i]);
+                    cols[p][i] = c * xp - s * xq;
+                    cols[q][i] = s * xp + c * xq;
+                }
+                for row in v.iter_mut() {
+                    let (vp, vq) = (row[p], row[q]);
+                    row[p] = c * vp - s * vq;
+                    row[q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+
+    // Singular values = column norms; sort descending.
+    let mut sv: Vec<(f64, usize)> = (0..n)
+        .map(|j| ((0..m).map(|i| cols[j][i] * cols[j][i]).sum::<f64>().sqrt(), j))
+        .collect();
+    sv.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let k = n; // thin: m >= n here
+    let mut u = Matrix::zeros(m, k);
+    let mut s_out = Vec::with_capacity(k);
+    let mut vt = Matrix::zeros(k, n);
+    for (rank, &(sval, j)) in sv.iter().enumerate() {
+        s_out.push(sval as f32);
+        let inv = if sval > 1e-300 { 1.0 / sval } else { 0.0 };
+        for i in 0..m {
+            u[(i, rank)] = (cols[j][i] * inv) as f32;
+        }
+        for (i, row) in v.iter().enumerate() {
+            vt[(rank, i)] = row[j] as f32;
+        }
+    }
+    Svd { u, s: s_out, vt }
+}
+
+impl Svd {
+    /// Reconstruct with the leading `r` components (eq. 2).
+    pub fn reconstruct(&self, r: usize) -> Matrix {
+        let r = r.min(self.s.len());
+        let mut us = self.u.take_cols(r);
+        for i in 0..us.rows {
+            for j in 0..r {
+                us[(i, j)] *= self.s[j];
+            }
+        }
+        us.matmul(&self.vt.row_block(0, r))
+    }
+
+    /// The paper's eq. (3) split: `w ~= w1 @ w0` with each factor absorbing
+    /// `sqrt(sigma)`. Input convention matches python `decompose.py`:
+    /// `self` decomposes an [S, C] weight; returns (w0: [R, C], w1: [S, R]).
+    pub fn split(&self, r: usize) -> (Matrix, Matrix) {
+        let r = r.min(self.s.len());
+        let mut w1 = self.u.take_cols(r); // [S, R]
+        let mut w0 = self.vt.row_block(0, r); // [R, C]
+        for j in 0..r {
+            let sq = self.s[j].max(0.0).sqrt();
+            for i in 0..w1.rows {
+                w1[(i, j)] *= sq;
+            }
+            for c in 0..w0.cols {
+                w0[(j, c)] *= sq;
+            }
+        }
+        (w0, w1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{assert_allclose, property};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstructs_full_rank() {
+        property(8, |rng| {
+            let (m, n) = (rng.range(1, 12), rng.range(1, 12));
+            let a = Matrix::random(m, n, rng);
+            let d = svd(&a);
+            let r = m.min(n);
+            assert_allclose(&d.reconstruct(r).data, &a.data, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn singular_values_descending_nonnegative() {
+        property(8, |rng| {
+            let a = Matrix::random(rng.range(2, 10), rng.range(2, 10), rng);
+            let d = svd(&a);
+            for w in d.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-6);
+            }
+            assert!(d.s.iter().all(|&x| x >= 0.0));
+        });
+    }
+
+    #[test]
+    fn u_and_v_orthonormal() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::random(10, 6, &mut rng);
+        let d = svd(&a);
+        let utu = d.u.transpose().matmul(&d.u);
+        assert_allclose(&utu.data, &Matrix::eye(6).data, 1e-4, 1e-4);
+        let vvt = d.vt.matmul(&d.vt.transpose());
+        assert_allclose(&vvt.data, &Matrix::eye(6).data, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn truncation_error_equals_tail_energy() {
+        // ||A - A_r||_F^2 == sum of squared trailing singular values
+        let mut rng = Rng::new(5);
+        let a = Matrix::random(8, 8, &mut rng);
+        let d = svd(&a);
+        for r in [2usize, 4, 6] {
+            let err = a.sub(&d.reconstruct(r)).fro();
+            let tail: f64 = d.s[r..].iter().map(|&x| (x as f64) * (x as f64)).sum();
+            assert!((err - tail.sqrt()).abs() < 1e-3, "r={r}: {err} vs {}", tail.sqrt());
+        }
+    }
+
+    #[test]
+    fn split_matches_reconstruct() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::random(9, 5, &mut rng);
+        let d = svd(&a);
+        let (w0, w1) = d.split(3);
+        assert_eq!(w0.rows, 3);
+        assert_eq!(w1.cols, 3);
+        assert_allclose(&w1.matmul(&w0).data, &d.reconstruct(3).data, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn wide_matrix_handled_by_transpose() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::random(4, 11, &mut rng);
+        let d = svd(&a);
+        assert_eq!(d.u.rows, 4);
+        assert_eq!(d.vt.cols, 11);
+        assert_allclose(&d.reconstruct(4).data, &a.data, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        let u = Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]);
+        let v = Matrix::from_vec(1, 2, vec![4.0, 5.0]);
+        let a = u.matmul(&v);
+        let d = svd(&a);
+        assert!(d.s[0] > 1.0);
+        assert!(d.s[1] < 1e-5);
+        assert_allclose(&d.reconstruct(1).data, &a.data, 1e-4, 1e-4);
+    }
+}

@@ -1,0 +1,141 @@
+//! OIHW 4-D tensor with the mode unfoldings Tucker-2 needs.
+
+use super::Matrix;
+
+/// Conv weight tensor, OIHW layout: `[o, i, h, w]` = `[S, C, k, k]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor4 {
+    pub o: usize,
+    pub i: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor4 {
+    pub fn zeros(o: usize, i: usize, h: usize, w: usize) -> Tensor4 {
+        Tensor4 { o, i, h, w, data: vec![0.0; o * i * h * w] }
+    }
+
+    pub fn from_vec(o: usize, i: usize, h: usize, w: usize, data: Vec<f32>) -> Tensor4 {
+        assert_eq!(o * i * h * w, data.len());
+        Tensor4 { o, i, h, w, data }
+    }
+
+    pub fn random(
+        o: usize,
+        i: usize,
+        h: usize,
+        w: usize,
+        rng: &mut crate::util::rng::Rng,
+    ) -> Tensor4 {
+        Tensor4 { o, i, h, w, data: (0..o * i * h * w).map(|_| rng.normal_f32()).collect() }
+    }
+
+    #[inline]
+    pub fn at(&self, o: usize, i: usize, h: usize, w: usize) -> f32 {
+        self.data[((o * self.i + i) * self.h + h) * self.w + w]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, o: usize, i: usize, h: usize, w: usize) -> &mut f32 {
+        &mut self.data[((o * self.i + i) * self.h + h) * self.w + w]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Mode-O ("output channel" / paper's S-mode) unfolding: [O, I*h*w].
+    /// Rows are output channels — this is just the natural layout.
+    pub fn unfold_o(&self) -> Matrix {
+        Matrix::from_vec(self.o, self.i * self.h * self.w, self.data.clone())
+    }
+
+    /// Mode-I ("input channel" / paper's C-mode) unfolding: [I, O*h*w].
+    pub fn unfold_i(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.i, self.o * self.h * self.w);
+        for o in 0..self.o {
+            for i in 0..self.i {
+                for h in 0..self.h {
+                    for w in 0..self.w {
+                        m[(i, (o * self.h + h) * self.w + w)] = self.at(o, i, h, w);
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn sub(&self, other: &Tensor4) -> Tensor4 {
+        assert_eq!(
+            (self.o, self.i, self.h, self.w),
+            (other.o, other.i, other.h, other.w)
+        );
+        Tensor4 {
+            o: self.o,
+            i: self.i,
+            h: self.h,
+            w: self.w,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    /// L2 norm of one output-channel filter (used by the pruning baseline).
+    pub fn filter_norm(&self, o: usize) -> f64 {
+        let span = self.i * self.h * self.w;
+        self.data[o * span..(o + 1) * span]
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn unfold_o_layout() {
+        let t = Tensor4::from_vec(2, 1, 1, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let m = t.unfold_o();
+        assert_eq!(m.row(0), &[1.0, 2.0]);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn unfold_i_layout() {
+        // o=2, i=2, 1x1: W[o][i] = o*2+i
+        let t = Tensor4::from_vec(2, 2, 1, 1, vec![0.0, 1.0, 2.0, 3.0]);
+        let m = t.unfold_i();
+        assert_eq!(m.row(0), &[0.0, 2.0]); // input channel 0 across outputs
+        assert_eq!(m.row(1), &[1.0, 3.0]);
+    }
+
+    #[test]
+    fn unfoldings_preserve_norm() {
+        let mut rng = Rng::new(2);
+        let t = Tensor4::random(3, 4, 3, 3, &mut rng);
+        assert!((t.unfold_o().fro() - t.fro()).abs() < 1e-9);
+        assert!((t.unfold_i().fro() - t.fro()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn filter_norm_matches_manual() {
+        let t = Tensor4::from_vec(2, 1, 1, 2, vec![3.0, 4.0, 1.0, 0.0]);
+        assert!((t.filter_norm(0) - 5.0).abs() < 1e-12);
+        assert!((t.filter_norm(1) - 1.0).abs() < 1e-12);
+    }
+}

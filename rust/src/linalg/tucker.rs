@@ -1,0 +1,169 @@
+//! Tucker-2 HOSVD over the two channel modes of an OIHW conv tensor
+//! (paper eq. 4-6), mirroring `python/compile/decompose.py` exactly.
+
+use super::{svd, Matrix, Tensor4};
+
+/// Tucker-2 factors in the Fig. 1b stack convention:
+/// `u`: [r1, C] (first 1x1), `core`: [r2, r1, k, k], `v`: [S, r2] (last 1x1).
+#[derive(Clone, Debug)]
+pub struct Tucker2 {
+    pub u: Matrix,
+    pub core: Tensor4,
+    pub v: Matrix,
+}
+
+/// HOSVD: mode factors from the unfoldings' left singular vectors, core by
+/// contracting both factors into the weight.
+pub fn tucker2(w: &Tensor4, r1: usize, r2: usize) -> Tucker2 {
+    let (s_ch, c_ch, kh, kw) = (w.o, w.i, w.h, w.w);
+    assert!(r1 >= 1 && r1 <= c_ch, "r1={r1} out of range (C={c_ch})");
+    assert!(r2 >= 1 && r2 <= s_ch, "r2={r2} out of range (S={s_ch})");
+    // U_c: [C, r1] from mode-I unfolding; U_s: [S, r2] from mode-O unfolding.
+    let uc = svd(&w.unfold_i()).u.take_cols(r1);
+    let us = svd(&w.unfold_o()).u.take_cols(r2);
+    // core[j, i, h, w] = sum_{s,c} W[s,c,h,w] * uc[c,i] * us[s,j]
+    // two-step contraction for O(S*C*k^2*(r1 + r2)) work:
+    //   tmp[s, i, h, w] = sum_c W[s,c,h,w] uc[c,i]
+    let mut tmp = Tensor4::zeros(s_ch, r1, kh, kw);
+    for s in 0..s_ch {
+        for c in 0..c_ch {
+            for h in 0..kh {
+                for w_ in 0..kw {
+                    let x = w.at(s, c, h, w_);
+                    if x == 0.0 {
+                        continue;
+                    }
+                    for i in 0..r1 {
+                        *tmp.at_mut(s, i, h, w_) += x * uc[(c, i)];
+                    }
+                }
+            }
+        }
+    }
+    let mut core = Tensor4::zeros(r2, r1, kh, kw);
+    for s in 0..s_ch {
+        for i in 0..r1 {
+            for h in 0..kh {
+                for w_ in 0..kw {
+                    let x = tmp.at(s, i, h, w_);
+                    if x == 0.0 {
+                        continue;
+                    }
+                    for j in 0..r2 {
+                        *core.at_mut(j, i, h, w_) += x * us[(s, j)];
+                    }
+                }
+            }
+        }
+    }
+    Tucker2 { u: uc.transpose(), core, v: us }
+}
+
+impl Tucker2 {
+    /// Reconstruct W' = core x_C U x_S V (inverse of `tucker2`).
+    pub fn reconstruct(&self) -> Tensor4 {
+        let (r2, r1, kh, kw) = (self.core.o, self.core.i, self.core.h, self.core.w);
+        let c_ch = self.u.cols;
+        let s_ch = self.v.rows;
+        // tmp[j, c, h, w] = sum_i core[j,i,h,w] u[i,c]
+        let mut tmp = Tensor4::zeros(r2, c_ch, kh, kw);
+        for j in 0..r2 {
+            for i in 0..r1 {
+                for h in 0..kh {
+                    for w_ in 0..kw {
+                        let x = self.core.at(j, i, h, w_);
+                        if x == 0.0 {
+                            continue;
+                        }
+                        for c in 0..c_ch {
+                            *tmp.at_mut(j, c, h, w_) += x * self.u[(i, c)];
+                        }
+                    }
+                }
+            }
+        }
+        let mut out = Tensor4::zeros(s_ch, c_ch, kh, kw);
+        for j in 0..r2 {
+            for c in 0..c_ch {
+                for h in 0..kh {
+                    for w_ in 0..kw {
+                        let x = tmp.at(j, c, h, w_);
+                        if x == 0.0 {
+                            continue;
+                        }
+                        for s in 0..s_ch {
+                            *out.at_mut(s, c, h, w_) += x * self.v[(s, j)];
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Parameter count of the decomposed stack (Fig. 1b).
+    pub fn params(&self) -> usize {
+        self.u.rows * self.u.cols + self.core.numel() + self.v.rows * self.v.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{assert_allclose, property};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn full_rank_exact() {
+        let mut rng = Rng::new(0);
+        let w = Tensor4::random(6, 5, 3, 3, &mut rng);
+        let t = tucker2(&w, 5, 6);
+        assert_allclose(&t.reconstruct().data, &w.data, 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn shapes() {
+        let mut rng = Rng::new(1);
+        let w = Tensor4::random(12, 8, 3, 3, &mut rng);
+        let t = tucker2(&w, 3, 5);
+        assert_eq!((t.u.rows, t.u.cols), (3, 8));
+        assert_eq!((t.core.o, t.core.i, t.core.h, t.core.w), (5, 3, 3, 3));
+        assert_eq!((t.v.rows, t.v.cols), (12, 5));
+    }
+
+    #[test]
+    fn error_monotone_in_rank() {
+        let mut rng = Rng::new(2);
+        let w = Tensor4::random(8, 8, 3, 3, &mut rng);
+        let mut prev = f64::INFINITY;
+        for r in [2usize, 4, 6, 8] {
+            let t = tucker2(&w, r, r);
+            let err = w.sub(&t.reconstruct()).fro();
+            assert!(err <= prev + 1e-6, "rank {r}: {err} > {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn factors_orthonormal() {
+        property(5, |rng| {
+            let w = Tensor4::random(rng.range(4, 8), rng.range(4, 8), 3, 3, rng);
+            let r1 = rng.range(1, w.i);
+            let r2 = rng.range(1, w.o);
+            let t = tucker2(&w, r1, r2);
+            // u [r1, C]: rows orthonormal; v [S, r2]: cols orthonormal
+            let uut = t.u.matmul(&t.u.transpose());
+            assert_allclose(&uut.data, &Matrix::eye(r1).data, 1e-3, 1e-3);
+            let vtv = t.v.transpose().matmul(&t.v);
+            assert_allclose(&vtv.data, &Matrix::eye(r2).data, 1e-3, 1e-3);
+        });
+    }
+
+    #[test]
+    fn params_formula() {
+        let mut rng = Rng::new(4);
+        let w = Tensor4::random(16, 8, 3, 3, &mut rng);
+        let t = tucker2(&w, 4, 6);
+        assert_eq!(t.params(), 4 * 8 + 6 * 4 * 9 + 16 * 6);
+    }
+}

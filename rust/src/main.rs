@@ -1,0 +1,414 @@
+//! `lrdx` — leader entrypoint / CLI for the LRD acceleration stack.
+//!
+//! ```text
+//! lrdx info                             runtime + artifact inventory
+//! lrdx cost   --arch resnet50 ...       analytic cost report per variant
+//! lrdx plan   --arch resnet50 --variant merged --out plan.json
+//! lrdx rank-search --arch resnet50 [--real] [--out plan.json]
+//! lrdx verify                           run every artifact vs recorded numerics
+//! lrdx train  --variant freeze --steps 200
+//! lrdx serve  --arch resnet-mini --variants orig,lrd --requests 64
+//! lrdx bench  table1|table2|table3|table456|fig2|fig5 [flags]
+//! ```
+//!
+//! Common flags: `--artifacts DIR` (default ./artifacts), `--reports DIR`
+//! (default ./reports), `--hw`, `--batch`, `--alpha`, `--groups`.
+
+use anyhow::{anyhow, bail, Result};
+use lrdx::coordinator::batcher::BatchPolicy;
+use lrdx::coordinator::{BatchModel, Coordinator};
+use lrdx::decompose::rank_opt::{optimize_model, AnalyticTimer, LayerTimer, RankOptConfig};
+use lrdx::decompose::{plan_to_json, plan_variant, Variant};
+use lrdx::harness::{self, Report};
+use lrdx::model::{cost, Arch};
+use lrdx::profiler::Timer;
+use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel, TrainSession};
+use lrdx::runtime::layer_factory::PjrtLayerTimer;
+use lrdx::runtime::Engine;
+use lrdx::trainsim::{self, data::SynthData};
+use lrdx::util::cli::Args;
+use lrdx::util::rng::Rng;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => cmd_info(args),
+        "cost" => cmd_cost(args),
+        "plan" => cmd_plan(args),
+        "rank-search" => cmd_rank_search(args),
+        "verify" => cmd_verify(args),
+        "train" => cmd_train(args),
+        "serve" => cmd_serve(args),
+        "bench" => cmd_bench(args),
+        "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+lrdx — Accelerating Low-Rank Decomposed Models (rust+JAX+Pallas reproduction)
+
+commands:
+  info          runtime platform + artifact inventory
+  cost          analytic layers/params/FLOPs for --arch x --variant
+  plan          emit a decomposition plan JSON (--arch, --variant, --out)
+  rank-search   Algorithm 1 over a model (--arch, [--real], [--out])
+  verify        execute every artifact and check recorded numerics
+  train         fine-tuning simulation (--variant, --steps)
+  serve         serving demo through the coordinator (--variants a,b)
+  bench         regenerate a paper table/figure:
+                table1 table2 table3 table456 fig2 fig5
+flags: --artifacts DIR  --reports DIR  --arch NAME  --hw N  --batch N
+       --alpha F  --groups N  --real  --full  --no-measure";
+
+fn artifacts_dir(args: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn reports_dir(args: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(args.get_or("reports", "reports"))
+}
+
+fn finish(report: Report, args: &Args) -> Result<()> {
+    print!("{}", report.render());
+    let path = report.save(&reports_dir(args))?;
+    println!("(saved {})", path.display());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let engine = Engine::cpu()?;
+    println!("platform: {}", engine.platform());
+    println!("archs: {}", Arch::all_names().join(", "));
+    match ArtifactLibrary::load(artifacts_dir(args)) {
+        Ok(lib) => {
+            println!("artifacts ({}):", lib.specs.len());
+            for s in &lib.specs {
+                println!(
+                    "  {:44} {:7} {} params={}",
+                    s.name,
+                    s.kind,
+                    if s.use_pallas { "pallas" } else { "      " },
+                    s.params.len()
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_cost(args: &Args) -> Result<()> {
+    let arch = Arch::by_name(args.get_or("arch", "resnet50"))
+        .ok_or_else(|| anyhow!("unknown --arch"))?;
+    let alpha = args.f64_or("alpha", 2.0)?;
+    let groups = args.usize_or("groups", 4)?;
+    let hw = args.usize_or("hw", 224)?;
+    println!(
+        "{:16} {:>7} {:>12} {:>12} {:>10}",
+        "variant", "layers", "params", "FLOPs(B)", "Δ FLOPs"
+    );
+    let base = cost::count_macs(
+        &arch,
+        &plan_variant(&arch, Variant::Orig, alpha, groups, None)?,
+        hw,
+    );
+    for v in Variant::all() {
+        if *v == Variant::Merged && arch.block != lrdx::model::BlockKind::Bottleneck {
+            continue;
+        }
+        let plan = plan_variant(&arch, *v, alpha, groups, None)?;
+        let rep = cost::report(&arch, &plan, hw);
+        println!(
+            "{:16} {:>7} {:>12} {:>12.2} {:>+9.2}%",
+            v.name(),
+            rep.layers,
+            rep.params,
+            2.0 * rep.macs as f64 / 1e9,
+            (rep.macs as f64 / base as f64 - 1.0) * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let arch = Arch::by_name(args.get_or("arch", "resnet50"))
+        .ok_or_else(|| anyhow!("unknown --arch"))?;
+    let variant = Variant::by_name(args.get_or("variant", "lrd"))
+        .ok_or_else(|| anyhow!("unknown --variant"))?;
+    let plan = plan_variant(
+        &arch,
+        variant,
+        args.f64_or("alpha", 2.0)?,
+        args.usize_or("groups", 4)?,
+        None,
+    )?;
+    let text = plan_to_json(&plan).render();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!("wrote {path}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_rank_search(args: &Args) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let arch = Arch::by_name(args.get_or("arch", "resnet50"))
+        .ok_or_else(|| anyhow!("unknown --arch"))?;
+    let cfg = RankOptConfig {
+        alpha: args.f64_or("alpha", 2.0)?,
+        rmin_frac: args.f64_or("rmin-frac", 0.5)?,
+        stride: args.usize_or("stride", 4)?,
+        refine: args.usize_or("refine", 4)?,
+        batch: args.usize_or("batch", 4)?,
+        hw: args.usize_or("hw", 32)?,
+    };
+    let mut real;
+    let mut analytic;
+    let timer: &mut dyn LayerTimer = if args.bool("real") {
+        real = PjrtLayerTimer::with_timer(
+            engine.clone(),
+            Timer { warmup: 1, min_samples: 4, max_samples: 10, cv_target: 0.15 },
+        );
+        &mut real
+    } else {
+        analytic = AnalyticTimer { lane: args.usize_or("lane", 16)?, ..Default::default() };
+        &mut analytic
+    };
+    println!(
+        "Algorithm 1 on {} ({} timing):",
+        arch.name,
+        if args.bool("real") { "XLA:CPU" } else { "analytic" }
+    );
+    let (decisions, plan) = optimize_model(timer, &arch, &cfg, |d| {
+        println!(
+            "  {:24} R={:<4} -> {:6} ({:.2}x)",
+            d.name,
+            d.initial_rank,
+            d.chosen_rank.map(|r| r.to_string()).unwrap_or_else(|| "ORG".into()),
+            d.speedup()
+        );
+    })?;
+    let kept = decisions.iter().filter(|d| d.chosen_rank.is_none()).count();
+    println!("{} sites, {} kept original", decisions.len(), kept);
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, plan_to_json(&plan).render())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let lib = ArtifactLibrary::load(artifacts_dir(args))?;
+    let mut failures = 0;
+    for spec in &lib.specs {
+        let outcome = match spec.kind.as_str() {
+            "forward" => ForwardModel::load(&engine, spec)
+                .and_then(|m| m.verify())
+                .map(|d| format!("max |Δ| = {d:.2e}")),
+            "train" => {
+                let x = lrdx::util::det_input(spec.batch, spec.hw);
+                let y = lrdx::util::det_labels(spec.batch, spec.classes);
+                TrainSession::load(&engine, spec).and_then(|mut s| {
+                    let (loss, _) = s.step(&x, &y)?;
+                    let want = spec.expected.get("loss0")?.num()?;
+                    let tol = spec.expected.get("tol")?.num()?;
+                    if (loss as f64 - want).abs() > tol {
+                        bail!("loss {loss} vs recorded {want}");
+                    }
+                    Ok(format!("loss0 {loss:.4} ≈ {want:.4}"))
+                })
+            }
+            k => Err(anyhow!("unknown kind {k}")),
+        };
+        match outcome {
+            Ok(msg) => println!("  OK   {:44} {msg}", spec.name),
+            Err(e) => {
+                failures += 1;
+                println!("  FAIL {:44} {e:#}", spec.name);
+            }
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} artifact(s) failed verification");
+    }
+    println!("all {} artifacts verified", lib.specs.len());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let lib = ArtifactLibrary::load(artifacts_dir(args))?;
+    let arch = args.get_or("arch", "resnet-mini");
+    let variant = args.get_or("variant", "lrd");
+    let steps = args.usize_or("steps", 150)?;
+    let gen = SynthData::new(32, 10);
+    let mut rng = Rng::new(args.usize_or("seed", 1)? as u64);
+    println!("fine-tuning {arch}/{variant} for {steps} steps on synthetic data");
+    let report =
+        trainsim::finetune_variant(&engine, &lib, arch, variant, None, &gen, &mut rng, steps)?;
+    for (s, l) in &report.loss_curve {
+        println!("  step {s:>5}  loss {l:.4}");
+    }
+    println!(
+        "done: {:.1}s, final train acc {:.1}%, eval acc {:.1}%",
+        report.train_secs,
+        report.train_acc * 100.0,
+        report.eval_acc * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let root = artifacts_dir(args);
+    let arch = args.get_or("arch", "resnet-mini").to_string();
+    let variants: Vec<String> = args
+        .get_or("variants", "orig,lrd,merged")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let requests = args.usize_or("requests", 64)?;
+    let lib = ArtifactLibrary::load(&root)?;
+    let hw = lib
+        .find_by(&arch, &variants[0], "forward")
+        .ok_or_else(|| anyhow!("no {arch}/{} forward artifact", variants[0]))?
+        .hw;
+
+    let mut coord = Coordinator::new(BatchPolicy::default());
+    for v in &variants {
+        let (root, arch, v2) = (root.clone(), arch.clone(), v.clone());
+        coord.register(v, hw, 1, move |eng| {
+            let lib = ArtifactLibrary::load(&root)?;
+            let spec = lib
+                .find_by(&arch, &v2, "forward")
+                .ok_or_else(|| anyhow!("no {arch}/{v2} forward artifact"))?;
+            Ok(Box::new(ForwardModel::load(eng, spec)?) as Box<dyn BatchModel>)
+        })?;
+    }
+    println!("serving {} variants of {arch}; {requests} requests each", variants.len());
+    let gen = SynthData::new(hw, 10);
+    let mut rng = Rng::new(7);
+    for v in &variants {
+        let t0 = std::time::Instant::now();
+        let pending: Vec<_> = (0..requests)
+            .map(|_| {
+                let (x, _) = gen.batch(&mut rng, 1);
+                coord.infer(v, x)
+            })
+            .collect::<Result<_>>()?;
+        for rx in pending {
+            rx.recv().map_err(|_| anyhow!("worker died"))??;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        println!("  {v:10} {:.1} req/s", requests as f64 / secs);
+    }
+    println!("{}", coord.metrics.snapshot().render());
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("bench needs a target (table1..table456, fig2, fig5)"))?;
+    let archs = |d: &str| -> Vec<String> {
+        if args.bool("full") {
+            vec!["resnet50".into(), "resnet101".into(), "resnet152".into()]
+        } else {
+            args.get_or("arch", d).split(',').map(|s| s.to_string()).collect()
+        }
+    };
+    let report = match which {
+        "table1" => harness::table1::run(
+            &engine,
+            &harness::table1::Config {
+                archs: archs("resnet50"),
+                hw: args.usize_or("hw", 64)?,
+                batch: args.usize_or("batch", 8)?,
+                alpha: args.f64_or("alpha", 2.0)?,
+                no_measure: args.bool("no-measure"),
+            },
+        )?,
+        "table2" => harness::table2::run(
+            &engine,
+            &harness::table2::Config {
+                real: args.bool("real"),
+                batch: args.usize_or("batch", 4)?,
+                hw: args.usize_or("hw", 32)?,
+                stride: args.usize_or("stride", 4)?,
+                refine: args.usize_or("refine", 4)?,
+                ..Default::default()
+            },
+        )?,
+        "table3" => harness::table3::run(
+            &engine,
+            &harness::table3::Config {
+                archs: archs("resnet50"),
+                hw: args.usize_or("hw", 64)?,
+                batch: args.usize_or("batch", 8)?,
+                alpha: args.f64_or("alpha", 2.0)?,
+                groups: args.usize_or("groups", 4)?,
+                no_measure: args.bool("no-measure"),
+                ..Default::default()
+            },
+        )?,
+        "table456" => harness::table456::run(
+            &engine,
+            &harness::table456::Config {
+                artifacts: artifacts_dir(args),
+                train_steps: args.usize_or("train-steps", 250)?,
+                finetune_steps: args.usize_or("finetune-steps", 200)?,
+                prune_fraction: args.f64_or("prune", 0.3)?,
+                ..Default::default()
+            },
+        )?,
+        "fig2" => harness::fig2::run(
+            &engine,
+            &harness::fig2::Config {
+                real: args.bool("real"),
+                rank_lo: args.usize_or("rank-lo", 240)?,
+                rank_hi: args.usize_or("rank-hi", 320)?,
+                step: args.usize_or("step", 4)?,
+                batch: args.usize_or("batch", 2)?,
+                hw: args.usize_or("hw", 16)?,
+                ..Default::default()
+            },
+        )?,
+        "fig5" => harness::fig5::run(
+            &engine,
+            &harness::fig5::Config {
+                arch: args.get_or("arch", "resnet50").to_string(),
+                hw: args.usize_or("hw", 64)?,
+                batch: args.usize_or("batch", 8)?,
+                no_measure: args.bool("no-measure"),
+                ..Default::default()
+            },
+        )?,
+        other => bail!("unknown bench target {other:?}"),
+    };
+    finish(report, args)
+}

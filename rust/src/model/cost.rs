@@ -1,0 +1,311 @@
+//! Analytic cost model: layer counts, parameters, MACs/FLOPs and the
+//! hardware tile-efficiency estimate driving the §2.1 rank discussion.
+//!
+//! Mirrors `python/compile/resnet.py::flops/count_layers` — pinned tests on
+//! both sides keep them in sync.
+
+use std::collections::BTreeMap;
+
+use crate::decompose::{Plan, Scheme};
+use crate::model::{Arch, BlockKind, SiteKind};
+
+/// Full cost report for one (arch, plan) pair.
+#[derive(Clone, Debug)]
+pub struct CostReport {
+    /// conv+fc layer count (paper Table 1 "Layers")
+    pub layers: usize,
+    /// trainable parameters (weights only; BN affines excluded like the paper)
+    pub params: usize,
+    /// multiply-accumulates for one image (FLOPs = 2x this)
+    pub macs: usize,
+}
+
+/// Spatial sizes each site's *output* sees, replaying the forward pass.
+pub fn spatial_map(arch: &Arch, hw: usize) -> BTreeMap<String, (usize, usize)> {
+    let mut spatial = BTreeMap::new();
+    let mut h = hw.div_ceil(2); // stem conv, stride 2
+    let mut w = hw.div_ceil(2);
+    spatial.insert("stem.conv".to_string(), (h, w));
+    h = h.div_ceil(2); // maxpool 3x3/2
+    w = w.div_ceil(2);
+    let site_names: std::collections::HashSet<String> =
+        arch.sites().into_iter().map(|t| t.name).collect();
+    for (si, &n_blocks) in arch.layers.iter().enumerate() {
+        let stage_stride = if si == 0 { 1 } else { 2 };
+        for bi in 0..n_blocks {
+            let pre = format!("layer{}.{}", si + 1, bi);
+            let blk_stride = if bi == 0 { stage_stride } else { 1 };
+            let (h_in, w_in) = (h, w);
+            if blk_stride == 2 {
+                h = h.div_ceil(2);
+                w = w.div_ceil(2);
+            }
+            match arch.block {
+                BlockKind::Bottleneck => {
+                    // conv1 is stride-1 at the block input resolution
+                    spatial.insert(format!("{pre}.conv1"), (h_in, w_in));
+                    spatial.insert(format!("{pre}.conv2"), (h, w));
+                    spatial.insert(format!("{pre}.conv3"), (h, w));
+                }
+                BlockKind::Basic => {
+                    spatial.insert(format!("{pre}.conv1"), (h, w));
+                    spatial.insert(format!("{pre}.conv2"), (h, w));
+                }
+            }
+            if site_names.contains(&format!("{pre}.downsample")) {
+                spatial.insert(format!("{pre}.downsample"), (h, w));
+            }
+        }
+    }
+    spatial.insert("fc".to_string(), (1, 1));
+    spatial
+}
+
+/// Conv+fc layer count — downsample convs are not counted (torch convention,
+/// matches the paper's 50/101/152 and 115/233/352).
+pub fn count_layers(arch: &Arch, plan: &Plan) -> usize {
+    arch.sites()
+        .iter()
+        .filter(|t| t.kind != SiteKind::Downsample)
+        .map(|t| match plan.get(&t.name).unwrap_or(&Scheme::Orig) {
+            Scheme::Orig | Scheme::Merged { .. } | Scheme::MergedInto { .. } => 1,
+            Scheme::Svd { .. } => 2,
+            Scheme::Tucker { .. } | Scheme::Branched { .. } => 3,
+        })
+        .sum()
+}
+
+/// Parameter count for the plan: weights + BatchNorm affines + fc bias
+/// (the torchvision convention the paper's 25.56M/44.55M/60.19M follow).
+pub fn count_params(arch: &Arch, plan: &Plan) -> usize {
+    count_params_split(arch, plan).0
+}
+
+/// (total, bn_affines) parameter counts.
+pub fn count_params_split(arch: &Arch, plan: &Plan) -> (usize, usize) {
+    let by_name: BTreeMap<String, _> =
+        arch.sites().into_iter().map(|t| (t.name.clone(), t)).collect();
+    let mut weights = 0usize;
+    let mut bn = 0usize;
+    for t in by_name.values() {
+        let k2 = t.k * t.k;
+        let scheme = plan.get(&t.name).unwrap_or(&Scheme::Orig);
+        weights += match scheme {
+            Scheme::Orig => t.c * t.s * k2 + if t.kind == SiteKind::Fc { t.s } else { 0 },
+            Scheme::Svd { r } => {
+                r * (t.c + t.s) + if t.kind == SiteKind::Fc { t.s } else { 0 }
+            }
+            Scheme::Tucker { r1, r2 } => t.c * r1 + r1 * r2 * k2 + r2 * t.s,
+            Scheme::Branched { r1, r2, groups } => {
+                t.c * r1 + (r1 / groups) * (r2 / groups) * k2 * groups + r2 * t.s
+            }
+            Scheme::Merged { r1, r2 } => r1 * r2 * k2,
+            Scheme::MergedInto { peer } => {
+                let (r1, r2) = match &plan[peer] {
+                    Scheme::Merged { r1, r2 } => (*r1, *r2),
+                    other => panic!("merged_into peer has scheme {other:?}"),
+                };
+                if t.name.ends_with(".conv1") {
+                    t.c * r1
+                } else {
+                    r2 * t.s
+                }
+            }
+        };
+        // BN affine (gamma + beta) on the site's output channels; merging
+        // shrinks the inner BNs to the ranks (see decompose::params).
+        if t.kind != SiteKind::Fc {
+            bn += 2 * match scheme {
+                Scheme::Merged { r2, .. } => *r2,
+                Scheme::MergedInto { peer } if t.name.ends_with(".conv1") => {
+                    match &plan[peer] {
+                        Scheme::Merged { r1, .. } => *r1,
+                        _ => t.s,
+                    }
+                }
+                _ => t.s,
+            };
+        }
+    }
+    (weights + bn, bn)
+}
+
+/// MACs for one image at `hw` input resolution (FLOPs = 2x).
+pub fn count_macs(arch: &Arch, plan: &Plan, hw: usize) -> usize {
+    let spatial = spatial_map(arch, hw);
+    arch.sites()
+        .iter()
+        .map(|t| {
+            let (ho, wo) = spatial[&t.name];
+            let a = ho * wo;
+            let k2 = t.k * t.k;
+            match plan.get(&t.name).unwrap_or(&Scheme::Orig) {
+                Scheme::Orig => a * t.c * t.s * k2,
+                Scheme::Svd { r } => a * r * (t.c + t.s),
+                Scheme::Tucker { r1, r2 } => a * (t.c * r1 + r1 * r2 * k2 + r2 * t.s),
+                Scheme::Branched { r1, r2, groups } => {
+                    a * (t.c * r1 + (r1 / groups) * (r2 / groups) * k2 * groups + r2 * t.s)
+                }
+                Scheme::Merged { r1, r2 } => a * r1 * r2 * k2,
+                Scheme::MergedInto { peer } => {
+                    let (r1, r2) = match &plan[peer] {
+                        Scheme::Merged { r1, r2 } => (*r1, *r2),
+                        other => panic!("merged_into peer has scheme {other:?}"),
+                    };
+                    if t.name.ends_with(".conv1") {
+                        a * t.c * r1
+                    } else {
+                        a * r2 * t.s
+                    }
+                }
+            }
+        })
+        .sum()
+}
+
+pub fn report(arch: &Arch, plan: &Plan, hw: usize) -> CostReport {
+    CostReport {
+        layers: count_layers(arch, plan),
+        params: count_params(arch, plan),
+        macs: count_macs(arch, plan, hw),
+    }
+}
+
+// --------------------------------------------------------------------------
+// Tile efficiency — the §2.1 / Fig. 2 hardware model
+// --------------------------------------------------------------------------
+
+/// Fraction of lanes doing useful work when a dimension of size `dim` is
+/// processed in `lane`-wide tiles: dim / (ceil(dim/lane) * lane).
+///
+/// This is the mechanism behind the paper's Fig. 2 cliff (rank 257 -> 256 =
+/// +15% throughput on CUDA tiles) and behind our TPU adaptation (MXU lane
+/// width 128; DESIGN.md §Hardware-Adaptation). On XLA:CPU the effective
+/// lane is the AVX vector width x unroll (8/16 f32).
+pub fn tile_efficiency(dim: usize, lane: usize) -> f64 {
+    if dim == 0 {
+        return 0.0;
+    }
+    dim as f64 / (dim.div_ceil(lane) * lane) as f64
+}
+
+/// Combined tile efficiency of a low-rank stack: the rank dimension appears
+/// as both a contraction output and input, so it gates both factor matmuls.
+pub fn rank_efficiency(r: usize, lane: usize) -> f64 {
+    tile_efficiency(r, lane)
+}
+
+/// Estimated VMEM bytes of one grid step of the fused low-rank matmul
+/// kernel — mirrors `python/compile/kernels/lowrank_matmul.py::vmem_bytes`.
+pub fn lowrank_vmem_bytes(b: usize, c: usize, r: usize, s: usize) -> usize {
+    let round_block = |dim: usize, target: usize| {
+        let mut bl = dim.min(target);
+        while dim % bl != 0 {
+            bl -= 1;
+        }
+        bl
+    };
+    let bm = round_block(b, 128);
+    let bn = round_block(s, 128);
+    4 * (bm * c + c * r + r * bn + bm * r + bm * bn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decompose::{plan_variant, Variant};
+
+    fn arch(n: &str) -> Arch {
+        Arch::by_name(n).unwrap()
+    }
+
+    #[test]
+    fn table1_layer_counts() {
+        for (name, orig, lrd) in
+            [("resnet50", 50, 115), ("resnet101", 101, 233), ("resnet152", 152, 352)]
+        {
+            let a = arch(name);
+            let p_orig = plan_variant(&a, Variant::Orig, 2.0, 4, None).unwrap();
+            let p_lrd = plan_variant(&a, Variant::Lrd, 2.0, 4, None).unwrap();
+            assert_eq!(count_layers(&a, &p_orig), orig, "{name} orig");
+            let got = count_layers(&a, &p_lrd);
+            assert!((got as i64 - lrd as i64).abs() <= 1, "{name} lrd: {got} vs {lrd}");
+        }
+    }
+
+    #[test]
+    fn table1_params() {
+        // paper: ResNet-50 25.56M / LRD 12.78M; 101: 44.55/22.21; 152: 60.19/30.01
+        for (name, orig_m, lrd_m) in
+            [("resnet50", 25.56, 12.78), ("resnet101", 44.55, 22.21), ("resnet152", 60.19, 30.01)]
+        {
+            let a = arch(name);
+            let p0 = count_params(&a, &plan_variant(&a, Variant::Orig, 2.0, 4, None).unwrap());
+            let p1 = count_params(&a, &plan_variant(&a, Variant::Lrd, 2.0, 4, None).unwrap());
+            assert!(
+                ((p0 as f64) / 1e6 - orig_m).abs() < 0.2,
+                "{name} orig params {}",
+                p0 as f64 / 1e6
+            );
+            assert!(
+                ((p1 as f64) / 1e6 - lrd_m).abs() < 0.7,
+                "{name} lrd params {}",
+                p1 as f64 / 1e6
+            );
+        }
+    }
+
+    #[test]
+    fn resnet50_macs_canonical() {
+        let a = arch("resnet50");
+        let m = count_macs(&a, &plan_variant(&a, Variant::Orig, 2.0, 4, None).unwrap(), 224);
+        assert!((4.0e9..4.2e9).contains(&(m as f64)), "{m}");
+    }
+
+    #[test]
+    fn variant_ordering_macs() {
+        // merged < lrd < orig; branched < lrd (Table 3/6 shape)
+        let a = arch("resnet152");
+        let m = |v| count_macs(&a, &plan_variant(&a, v, 2.0, 4, None).unwrap(), 224);
+        let (orig, lrd, merged, branched) =
+            (m(Variant::Orig), m(Variant::Lrd), m(Variant::Merged), m(Variant::Branched));
+        assert!(merged < lrd && lrd < orig);
+        assert!(branched < lrd);
+        // Table 1: LRD roughly halves FLOPs
+        let ratio = lrd as f64 / orig as f64;
+        assert!((0.40..0.60).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn merged_restores_depth() {
+        let a = arch("resnet50");
+        let p = plan_variant(&a, Variant::Merged, 2.0, 4, None).unwrap();
+        assert_eq!(count_layers(&a, &p), 50);
+    }
+
+    #[test]
+    fn tile_efficiency_cliff() {
+        // Fig. 2: 256 is perfectly tiled, 257 wastes almost a full tile
+        assert_eq!(tile_efficiency(256, 128), 1.0);
+        assert!(tile_efficiency(257, 128) < 0.67);
+        assert!(tile_efficiency(0, 128) == 0.0);
+        assert!((tile_efficiency(308, 8) - 308.0 / 312.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spatial_map_resnet50_at_224() {
+        let a = arch("resnet50");
+        let sp = spatial_map(&a, 224);
+        assert_eq!(sp["stem.conv"], (112, 112));
+        assert_eq!(sp["layer1.0.conv1"], (56, 56));
+        assert_eq!(sp["layer2.0.conv1"], (56, 56)); // pre-stride resolution
+        assert_eq!(sp["layer2.0.conv2"], (28, 28));
+        assert_eq!(sp["layer4.2.conv3"], (7, 7));
+    }
+
+    #[test]
+    fn vmem_estimate_sane() {
+        let b = lowrank_vmem_bytes(128, 512, 256, 512);
+        assert!(b > 0 && b < 16 * 1024 * 1024, "{b}");
+    }
+}

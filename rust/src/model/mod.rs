@@ -1,0 +1,221 @@
+//! Model IR: architecture descriptions and decomposable weight sites.
+//!
+//! Mirrors `python/compile/resnet.py` exactly — the two sides are kept in
+//! sync by pinned tests (Table 2 shapes, Table 1 layer counts) so rust can
+//! plan/cost/build variants without touching python.
+
+pub mod cost;
+
+/// What role a site plays in the network.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SiteKind {
+    Stem,
+    Conv,
+    Downsample,
+    Fc,
+}
+
+/// One decomposable weight site (conv or fc).
+#[derive(Clone, Debug)]
+pub struct ConvSite {
+    pub name: String,
+    /// input channels (fc: input features)
+    pub c: usize,
+    /// output channels (fc: classes)
+    pub s: usize,
+    /// kernel size (1 for fc)
+    pub k: usize,
+    pub stride: usize,
+    pub padding: usize,
+    pub kind: SiteKind,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockKind {
+    Basic,
+    Bottleneck,
+}
+
+/// Architecture family descriptor (ResNet-style).
+#[derive(Clone, Debug)]
+pub struct Arch {
+    pub name: &'static str,
+    pub block: BlockKind,
+    pub layers: [usize; 4],
+    pub width: usize,
+    pub expansion: usize,
+    pub classes: usize,
+}
+
+impl Arch {
+    pub fn by_name(name: &str) -> Option<Arch> {
+        let a = |name, block, layers, width, expansion, classes| Arch {
+            name,
+            block,
+            layers,
+            width,
+            expansion,
+            classes,
+        };
+        Some(match name {
+            "resnet18" => a("resnet18", BlockKind::Basic, [2, 2, 2, 2], 64, 1, 1000),
+            "resnet34" => a("resnet34", BlockKind::Basic, [3, 4, 6, 3], 64, 1, 1000),
+            "resnet50" => a("resnet50", BlockKind::Bottleneck, [3, 4, 6, 3], 64, 4, 1000),
+            "resnet101" => {
+                a("resnet101", BlockKind::Bottleneck, [3, 4, 23, 3], 64, 4, 1000)
+            }
+            "resnet152" => {
+                a("resnet152", BlockKind::Bottleneck, [3, 8, 36, 3], 64, 4, 1000)
+            }
+            "resnet-mini" => {
+                a("resnet-mini", BlockKind::Bottleneck, [1, 1, 1, 1], 16, 4, 10)
+            }
+            _ => return None,
+        })
+    }
+
+    pub fn all_names() -> &'static [&'static str] {
+        &["resnet18", "resnet34", "resnet50", "resnet101", "resnet152", "resnet-mini"]
+    }
+
+    pub fn stage_widths(&self) -> [usize; 4] {
+        [self.width, 2 * self.width, 4 * self.width, 8 * self.width]
+    }
+
+    /// Enumerate every decomposable site, torch-style names (paper Table 2).
+    pub fn sites(&self) -> Vec<ConvSite> {
+        let mut out = vec![ConvSite {
+            name: "stem.conv".into(),
+            c: 3,
+            s: self.width,
+            k: 7,
+            stride: 2,
+            padding: 3,
+            kind: SiteKind::Stem,
+        }];
+        let mut c_in = self.width;
+        for (si, (&n_blocks, &w)) in
+            self.layers.iter().zip(self.stage_widths().iter()).enumerate()
+        {
+            let stage_stride = if si == 0 { 1 } else { 2 };
+            let c_out = match self.block {
+                BlockKind::Bottleneck => w * self.expansion,
+                BlockKind::Basic => w,
+            };
+            for bi in 0..n_blocks {
+                let pre = format!("layer{}.{}", si + 1, bi);
+                let blk_stride = if bi == 0 { stage_stride } else { 1 };
+                match self.block {
+                    BlockKind::Bottleneck => {
+                        out.push(site(&pre, "conv1", c_in, w, 1, 1, 0));
+                        out.push(site(&pre, "conv2", w, w, 3, blk_stride, 1));
+                        out.push(site(&pre, "conv3", w, c_out, 1, 1, 0));
+                    }
+                    BlockKind::Basic => {
+                        out.push(site(&pre, "conv1", c_in, w, 3, blk_stride, 1));
+                        out.push(site(&pre, "conv2", w, w, 3, 1, 1));
+                    }
+                }
+                if bi == 0 && (blk_stride != 1 || c_in != c_out) {
+                    out.push(ConvSite {
+                        name: format!("{pre}.downsample"),
+                        c: c_in,
+                        s: c_out,
+                        k: 1,
+                        stride: blk_stride,
+                        padding: 0,
+                        kind: SiteKind::Downsample,
+                    });
+                }
+                c_in = c_out;
+            }
+        }
+        out.push(ConvSite {
+            name: "fc".into(),
+            c: c_in,
+            s: self.classes,
+            k: 1,
+            stride: 1,
+            padding: 0,
+            kind: SiteKind::Fc,
+        });
+        out
+    }
+}
+
+fn site(
+    pre: &str,
+    nm: &str,
+    c: usize,
+    s: usize,
+    k: usize,
+    stride: usize,
+    padding: usize,
+) -> ConvSite {
+    ConvSite {
+        name: format!("{pre}.{nm}"),
+        c,
+        s,
+        k,
+        stride,
+        padding,
+        kind: SiteKind::Conv,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_site_inventory() {
+        let a = Arch::by_name("resnet50").unwrap();
+        let s = a.sites();
+        let convs = s
+            .iter()
+            .filter(|t| matches!(t.kind, SiteKind::Stem | SiteKind::Conv))
+            .count();
+        assert_eq!(convs, 1 + 16 * 3);
+        assert_eq!(s.iter().filter(|t| t.kind == SiteKind::Downsample).count(), 4);
+        let fc = s.last().unwrap();
+        assert_eq!((fc.c, fc.s), (2048, 1000));
+    }
+
+    #[test]
+    fn table2_shapes_resnet152() {
+        let a = Arch::by_name("resnet152").unwrap();
+        let by: std::collections::HashMap<_, _> =
+            a.sites().into_iter().map(|t| (t.name.clone(), t)).collect();
+        assert_eq!((by["layer1.0.conv1"].c, by["layer1.0.conv1"].s), (64, 64));
+        assert_eq!((by["layer1.0.conv2"].c, by["layer1.0.conv2"].s), (64, 64));
+        assert_eq!((by["layer1.0.conv3"].c, by["layer1.0.conv3"].s), (64, 256));
+        assert_eq!((by["layer4.2.conv1"].c, by["layer4.2.conv1"].s), (2048, 512));
+        assert_eq!((by["layer4.2.conv2"].c, by["layer4.2.conv2"].s), (512, 512));
+        assert_eq!((by["layer4.2.conv3"].c, by["layer4.2.conv3"].s), (512, 2048));
+    }
+
+    #[test]
+    fn stride_on_conv2_in_bottleneck() {
+        let a = Arch::by_name("resnet50").unwrap();
+        let by: std::collections::HashMap<_, _> =
+            a.sites().into_iter().map(|t| (t.name.clone(), t)).collect();
+        assert_eq!(by["layer2.0.conv2"].stride, 2);
+        assert_eq!(by["layer2.0.conv1"].stride, 1);
+        assert_eq!(by["layer2.0.downsample"].stride, 2);
+        assert_eq!(by["layer3.1.conv2"].stride, 1);
+    }
+
+    #[test]
+    fn unknown_arch_is_none() {
+        assert!(Arch::by_name("resnet1001").is_none());
+    }
+
+    #[test]
+    fn basic_block_arch() {
+        let a = Arch::by_name("resnet18").unwrap();
+        let s = a.sites();
+        // 1 stem + 8 blocks x 2 convs + 3 downsamples + fc
+        assert_eq!(s.len(), 1 + 16 + 3 + 1);
+        assert_eq!(s.last().unwrap().c, 512);
+    }
+}

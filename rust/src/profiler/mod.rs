@@ -1,0 +1,106 @@
+//! Steady-state wall-clock profiler (the paper used the PyTorch profiler;
+//! this plays the same role for Algorithm 1 and all fps tables).
+//!
+//! Method: `warmup` untimed runs (JIT caches, page faults), then timed
+//! samples until either the coefficient of variation of the collected
+//! sample drops under `cv_target` or `max_samples` is reached. The primary
+//! statistic is the 80% trimmed mean (robust to scheduler noise).
+
+use anyhow::Result;
+
+use crate::util::stats::Summary;
+
+#[derive(Clone, Debug)]
+pub struct Timer {
+    pub warmup: usize,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    pub cv_target: f64,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Timer { warmup: 3, min_samples: 10, max_samples: 50, cv_target: 0.05 }
+    }
+}
+
+impl Timer {
+    /// Cheaper settings for inner-loop searches (Algorithm 1 sweeps).
+    pub fn quick() -> Timer {
+        Timer { warmup: 2, min_samples: 5, max_samples: 15, cv_target: 0.10 }
+    }
+
+    /// Higher-confidence settings for headline numbers.
+    pub fn thorough() -> Timer {
+        Timer { warmup: 5, min_samples: 20, max_samples: 100, cv_target: 0.03 }
+    }
+
+    /// Measure seconds-per-call of `f` at steady state.
+    pub fn measure(&self, mut f: impl FnMut() -> Result<()>) -> Result<Summary> {
+        for _ in 0..self.warmup {
+            f()?;
+        }
+        let mut samples = Vec::with_capacity(self.max_samples);
+        while samples.len() < self.max_samples {
+            let t0 = std::time::Instant::now();
+            f()?;
+            samples.push(t0.elapsed().as_secs_f64());
+            if samples.len() >= self.min_samples {
+                let s = Summary::of(&samples);
+                if s.cv() < self.cv_target {
+                    return Ok(s);
+                }
+            }
+        }
+        Ok(Summary::of(&samples))
+    }
+
+    /// Throughput helper: items/second given seconds-per-call.
+    pub fn fps(items_per_call: usize, sec_per_call: f64) -> f64 {
+        items_per_call as f64 / sec_per_call
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_sleep() {
+        let t = Timer { warmup: 1, min_samples: 3, max_samples: 5, cv_target: 0.5 };
+        let s = t
+            .measure(|| {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                Ok(())
+            })
+            .unwrap();
+        assert!(s.trimmed_mean >= 0.002, "{}", s.trimmed_mean);
+        assert!(s.trimmed_mean < 0.050);
+    }
+
+    #[test]
+    fn stops_early_when_stable() {
+        let t = Timer { warmup: 0, min_samples: 4, max_samples: 1000, cv_target: 0.9 };
+        let mut calls = 0;
+        let s = t
+            .measure(|| {
+                calls += 1;
+                Ok(())
+            })
+            .unwrap();
+        assert!(calls < 1000);
+        assert_eq!(s.n, calls);
+    }
+
+    #[test]
+    fn propagates_errors() {
+        let t = Timer::default();
+        let r = t.measure(|| anyhow::bail!("boom"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fps_math() {
+        assert_eq!(Timer::fps(8, 0.5), 16.0);
+    }
+}

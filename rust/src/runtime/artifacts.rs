@@ -1,0 +1,501 @@
+//! Artifact library: loads the python-AOT HLO-text modules + weights per
+//! `artifacts/manifest.json` and wraps them as runnable forward/train units.
+//!
+//! This is the production path of the three-layer architecture: python
+//! lowered the L2 jax model (with L1 pallas kernels inlined) once at build
+//! time; here rust compiles the HLO with PJRT and keeps every weight
+//! resident on device.
+
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{Engine, Executable, HostTensor};
+use crate::decompose::{plan_from_json, Plan};
+use crate::util::json::Json;
+
+/// One parameter (weight) of an artifact.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub file: PathBuf,
+}
+
+/// Parsed manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String, // "forward" | "train"
+    pub arch: String,
+    pub variant: String,
+    pub use_pallas: bool,
+    pub hw: usize,
+    pub batch: usize,
+    pub classes: usize,
+    pub hlo: PathBuf,
+    pub params: Vec<ParamEntry>,
+    pub frozen_params: Vec<ParamEntry>,
+    pub plan: Plan,
+    pub expected: Json,
+}
+
+/// The artifact library rooted at `artifacts/`.
+pub struct ArtifactLibrary {
+    pub root: PathBuf,
+    pub specs: Vec<ArtifactSpec>,
+}
+
+fn parse_params(root: &Path, j: &Json) -> Result<Vec<ParamEntry>> {
+    let mut out = Vec::new();
+    for p in j.arr()? {
+        out.push(ParamEntry {
+            name: p.get("name")?.str()?.to_string(),
+            shape: p
+                .get("shape")?
+                .arr()?
+                .iter()
+                .map(|d| d.num().map(|v| v as usize))
+                .collect::<Result<_>>()?,
+            file: root.join(p.get("file")?.str()?),
+        });
+    }
+    Ok(out)
+}
+
+impl ArtifactLibrary {
+    pub fn load(root: impl AsRef<Path>) -> Result<ArtifactLibrary> {
+        let root = root.as_ref().to_path_buf();
+        let manifest = Json::parse_file(&root.join("manifest.json"))
+            .context("artifacts/manifest.json missing — run `make artifacts` first")?;
+        let mut specs = Vec::new();
+        for e in manifest.get("artifacts")?.arr()? {
+            specs.push(ArtifactSpec {
+                name: e.get("name")?.str()?.to_string(),
+                kind: e.get("kind")?.str()?.to_string(),
+                arch: e.get("arch")?.str()?.to_string(),
+                variant: e.get("variant")?.str()?.to_string(),
+                use_pallas: e
+                    .opt("use_pallas")
+                    .map(|v| v.boolean().unwrap_or(false))
+                    .unwrap_or(false),
+                hw: e.get("hw")?.int()? as usize,
+                batch: e.get("batch")?.int()? as usize,
+                classes: e.get("classes")?.int()? as usize,
+                hlo: root.join(e.get("hlo")?.str()?),
+                params: parse_params(&root, e.get("params")?)?,
+                frozen_params: match e.opt("frozen_params") {
+                    Some(j) => parse_params(&root, j)?,
+                    None => Vec::new(),
+                },
+                plan: plan_from_json(e.get("plan")?)?,
+                expected: e.get("expected")?.clone(),
+            });
+        }
+        Ok(ArtifactLibrary { root, specs })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Find by (arch, variant, kind), e.g. ("resnet50", "lrd", "forward").
+    pub fn find_by(&self, arch: &str, variant: &str, kind: &str) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .find(|s| s.arch == arch && s.variant == variant && s.kind == kind && !s.use_pallas)
+    }
+
+    pub fn forward_specs(&self) -> impl Iterator<Item = &ArtifactSpec> {
+        self.specs.iter().filter(|s| s.kind == "forward")
+    }
+}
+
+/// Read a raw little-endian f32 `.bin` weight file.
+pub fn read_f32_bin(path: &Path, expect_len: usize) -> Result<Vec<f32>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != expect_len * 4 {
+        bail!("{}: {} bytes, expected {}", path.display(), bytes.len(), expect_len * 4);
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn upload_params(engine: &Engine, entries: &[ParamEntry]) -> Result<Vec<xla::PjRtBuffer>> {
+    entries
+        .iter()
+        .map(|p| {
+            let n: usize = p.shape.iter().product();
+            let host = read_f32_bin(&p.file, n)?;
+            engine.upload(&host, &p.shape)
+        })
+        .collect()
+}
+
+// --------------------------------------------------------------------------
+// Forward artifacts
+// --------------------------------------------------------------------------
+
+/// A compiled forward artifact with weights resident on device.
+pub struct ForwardModel {
+    pub spec: ArtifactSpec,
+    exe: Executable,
+    weights: Vec<xla::PjRtBuffer>,
+    engine: Engine,
+}
+
+impl ForwardModel {
+    pub fn load(engine: &Engine, spec: &ArtifactSpec) -> Result<ForwardModel> {
+        if spec.kind != "forward" {
+            bail!("{} is a {} artifact", spec.name, spec.kind);
+        }
+        let exe = engine.compile_hlo_text_file(&spec.hlo)?;
+        let weights = upload_params(engine, &spec.params)?;
+        Ok(ForwardModel { spec: spec.clone(), exe, weights, engine: engine.clone() })
+    }
+
+    /// Load the artifact's graph but substitute custom parameter values
+    /// (e.g. weights fine-tuned in rust, or a one-shot decomposition of a
+    /// rust-trained original). Shapes must match the manifest.
+    pub fn load_with_params(
+        engine: &Engine,
+        spec: &ArtifactSpec,
+        params: &crate::decompose::params::Params,
+    ) -> Result<ForwardModel> {
+        if spec.kind != "forward" {
+            bail!("{} is a {} artifact", spec.name, spec.kind);
+        }
+        let exe = engine.compile_hlo_text_file(&spec.hlo)?;
+        let weights = spec
+            .params
+            .iter()
+            .map(|p| {
+                let t = params
+                    .get(&p.name)
+                    .ok_or_else(|| anyhow!("missing param {}", p.name))?;
+                if t.dims != p.shape {
+                    bail!("{}: got {:?}, artifact expects {:?}", p.name, t.dims, p.shape);
+                }
+                engine.upload(&t.data, &t.dims)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ForwardModel { spec: spec.clone(), exe, weights, engine: engine.clone() })
+    }
+
+    /// Logits for a host batch [batch, 3, hw, hw] -> [batch, classes].
+    pub fn infer(&self, x: &HostTensor) -> Result<HostTensor> {
+        if x.dims != [self.spec.batch, 3, self.spec.hw, self.spec.hw] {
+            bail!(
+                "{}: input {:?}, artifact expects [{}, 3, {}, {}]",
+                self.spec.name,
+                x.dims,
+                self.spec.batch,
+                self.spec.hw,
+                self.spec.hw
+            );
+        }
+        let xb = self.engine.upload(&x.data, &x.dims)?;
+        let out = self.infer_buffer(&xb)?;
+        let lit = out.to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // jax modules are lowered with return_tuple=True: unwrap the 1-tuple.
+        let mut parts = super::decompose_tuple(lit)?;
+        HostTensor::from_literal(&parts.remove(0))
+    }
+
+    /// Device-buffer hot path (used by the coordinator and benches).
+    /// NOTE: the returned buffer is the module's 1-tuple result; callers
+    /// unwrap at host-read time (`decompose_tuple`).
+    pub fn infer_buffer(&self, x: &xla::PjRtBuffer) -> Result<xla::PjRtBuffer> {
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
+        args.extend(self.weights.iter());
+        args.push(x);
+        let mut outs = self.exe.run_buffers(&args)?;
+        Ok(outs.swap_remove(0))
+    }
+
+    /// Check the artifact reproduces the manifest's recorded logits for the
+    /// deterministic test input. Returns max |Δ| over the recorded row.
+    pub fn verify(&self) -> Result<f64> {
+        let x = HostTensor::new(
+            vec![self.spec.batch, 3, self.spec.hw, self.spec.hw],
+            crate::util::det_input(self.spec.batch, self.spec.hw),
+        );
+        let logits = self.infer(&x)?;
+        let want: Vec<f64> = self
+            .spec
+            .expected
+            .get("logits_row0")?
+            .arr()?
+            .iter()
+            .map(|v| v.num())
+            .collect::<Result<_>>()?;
+        let tol = self.spec.expected.get("tol")?.num()?;
+        let mut max_delta = 0.0f64;
+        for (i, &w) in want.iter().enumerate() {
+            let g = logits.data[i] as f64;
+            max_delta = max_delta.max((g - w).abs());
+        }
+        if max_delta > tol {
+            bail!("{}: max |Δ| {max_delta} > tol {tol}", self.spec.name);
+        }
+        Ok(max_delta)
+    }
+}
+
+// --------------------------------------------------------------------------
+// Train artifacts
+// --------------------------------------------------------------------------
+
+/// A compiled train-step artifact holding the full optimizer state on
+/// device: trainable params, frozen params, momentum velocities.
+/// Each `step` feeds buffers back in — python is long gone.
+pub struct TrainSession {
+    pub spec: ArtifactSpec,
+    exe: Executable,
+    trainable: Vec<xla::PjRtBuffer>,
+    frozen: Vec<xla::PjRtBuffer>,
+    velocity: Vec<xla::PjRtBuffer>,
+    engine: Engine,
+    pub steps_done: usize,
+}
+
+impl TrainSession {
+    pub fn load(engine: &Engine, spec: &ArtifactSpec) -> Result<TrainSession> {
+        if spec.kind != "train" {
+            bail!("{} is a {} artifact", spec.name, spec.kind);
+        }
+        let exe = engine.compile_hlo_text_file(&spec.hlo)?;
+        let trainable = upload_params(engine, &spec.params)?;
+        let frozen = upload_params(engine, &spec.frozen_params)?;
+        let velocity = spec
+            .params
+            .iter()
+            .map(|p| {
+                let n: usize = p.shape.iter().product();
+                engine.upload(&vec![0f32; n], &p.shape)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TrainSession {
+            spec: spec.clone(),
+            exe,
+            trainable,
+            frozen,
+            velocity,
+            engine: engine.clone(),
+            steps_done: 0,
+        })
+    }
+
+    /// Load the step graph but start from custom parameter values (e.g. the
+    /// decomposition of a rust-trained original, for fine-tuning).
+    pub fn load_with_params(
+        engine: &Engine,
+        spec: &ArtifactSpec,
+        params: &crate::decompose::params::Params,
+    ) -> Result<TrainSession> {
+        let mut sess = TrainSession::load(engine, spec)?;
+        let upload = |entries: &[ParamEntry]| -> Result<Vec<xla::PjRtBuffer>> {
+            entries
+                .iter()
+                .map(|p| {
+                    let t = params
+                        .get(&p.name)
+                        .ok_or_else(|| anyhow!("missing param {}", p.name))?;
+                    if t.dims != p.shape {
+                        bail!("{}: got {:?}, expects {:?}", p.name, t.dims, p.shape);
+                    }
+                    engine.upload(&t.data, &t.dims)
+                })
+                .collect()
+        };
+        sess.trainable = upload(&sess.spec.params.clone())?;
+        sess.frozen = upload(&sess.spec.frozen_params.clone())?;
+        Ok(sess)
+    }
+
+    /// Download the current (trainable + frozen) parameters by name.
+    pub fn export_params(&self) -> Result<crate::decompose::params::Params> {
+        let mut out = crate::decompose::params::Params::new();
+        for (entry, buf) in self
+            .spec
+            .params
+            .iter()
+            .zip(self.trainable.iter())
+            .chain(self.spec.frozen_params.iter().zip(self.frozen.iter()))
+        {
+            let lit = buf
+                .to_literal_sync()
+                .map_err(|e| anyhow!("download {}: {e:?}", entry.name))?;
+            out.insert(entry.name.clone(), HostTensor::from_literal(&lit)?);
+        }
+        Ok(out)
+    }
+
+    /// Zero out masked entries of named trainable params (used by the
+    /// magnitude-pruning baseline to keep pruned filters at zero through
+    /// fine-tuning). `masks` maps param name -> keep-flags per output
+    /// channel (dim 0 of the weight).
+    pub fn apply_channel_masks(
+        &mut self,
+        masks: &std::collections::BTreeMap<String, Vec<bool>>,
+    ) -> Result<()> {
+        for (i, entry) in self.spec.params.clone().iter().enumerate() {
+            let Some(mask) = masks.get(&entry.name) else { continue };
+            let lit = self.trainable[i]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("download {}: {e:?}", entry.name))?;
+            let mut t = HostTensor::from_literal(&lit)?;
+            let span: usize = t.dims.iter().skip(1).product();
+            if mask.len() != t.dims[0] {
+                bail!("{}: mask len {} vs dim0 {}", entry.name, mask.len(), t.dims[0]);
+            }
+            for (o, keep) in mask.iter().enumerate() {
+                if !keep {
+                    t.data[o * span..(o + 1) * span].fill(0.0);
+                }
+            }
+            self.trainable[i] = self.engine.upload(&t.data, &t.dims)?;
+        }
+        Ok(())
+    }
+
+    pub fn n_trainable(&self) -> usize {
+        self.trainable.len()
+    }
+
+    pub fn n_frozen(&self) -> usize {
+        self.frozen.len()
+    }
+
+    /// One SGD+momentum step on a host batch. Returns (loss, accuracy).
+    pub fn step(&mut self, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let (b, hw) = (self.spec.batch, self.spec.hw);
+        if x.len() != b * 3 * hw * hw || y.len() != b {
+            bail!("bad batch shapes: x={} y={}", x.len(), y.len());
+        }
+        let xb = self.engine.upload(x, &[b, 3, hw, hw])?;
+        let yb = self.engine.upload_i32(y, &[b])?;
+        let nt = self.trainable.len();
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(2 * nt + self.frozen.len() + 2);
+        args.extend(self.trainable.iter());
+        args.extend(self.frozen.iter());
+        args.extend(self.velocity.iter());
+        args.push(&xb);
+        args.push(&yb);
+        // jax returns a single tuple buffer; decompose on host is wasteful,
+        // so the AOT module was lowered with return_tuple=True and PJRT
+        // "untuples" the result automatically into separate buffers.
+        let outs = self.exe.run_buffers(&args)?;
+        if outs.len() == 2 * nt + 2 {
+            // tuple already flattened by PJRT
+            let mut it = outs.into_iter();
+            self.trainable = (&mut it).take(nt).collect();
+            self.velocity = (&mut it).take(nt).collect();
+            let loss_b = it.next().unwrap();
+            let acc_b = it.next().unwrap();
+            let loss = scalar_f32(&loss_b)?;
+            let acc = scalar_f32(&acc_b)?;
+            self.steps_done += 1;
+            Ok((loss, acc))
+        } else {
+            // single tuple buffer: pull to host and re-upload state
+            let lit = outs[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+            if parts.len() != 2 * nt + 2 {
+                bail!("train step returned {} outputs, expected {}", parts.len(), 2 * nt + 2);
+            }
+            for (i, part) in parts.iter().take(nt).enumerate() {
+                let t = HostTensor::from_literal(part)?;
+                self.trainable[i] = self.engine.upload(&t.data, &t.dims)?;
+            }
+            for (i, part) in parts.iter().skip(nt).take(nt).enumerate() {
+                let t = HostTensor::from_literal(part)?;
+                self.velocity[i] = self.engine.upload(&t.data, &t.dims)?;
+            }
+            let loss = HostTensor::from_literal(&parts[2 * nt])?.data[0];
+            let acc = HostTensor::from_literal(&parts[2 * nt + 1])?.data[0];
+            self.steps_done += 1;
+            Ok((loss, acc))
+        }
+    }
+}
+
+fn scalar_f32(buf: &xla::PjRtBuffer) -> Result<f32> {
+    let lit = buf.to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    lit.get_first_element::<f32>().map_err(|e| anyhow!("scalar: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Integration tests against real artifacts live in rust/tests/; here we
+    // only test the manifest parsing against a synthetic manifest.
+
+    fn fake_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir.join("params/m1")).unwrap();
+        std::fs::write(
+            dir.join("params/m1/w.bin"),
+            [1f32, 2.0, 3.0, 4.0]
+                .iter()
+                .flat_map(|f| f.to_le_bytes())
+                .collect::<Vec<u8>>(),
+        )
+        .unwrap();
+        std::fs::write(dir.join("m1.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"seed": 1, "artifacts": [{
+                "name": "m1", "kind": "forward", "arch": "resnet-mini",
+                "variant": "lrd", "use_pallas": false, "hw": 8, "batch": 1,
+                "classes": 10, "groups": 1, "hlo": "m1.hlo.txt",
+                "params": [{"name": "w", "shape": [2, 2], "file": "params/m1/w.bin"}],
+                "plan": {"stem.conv": ["orig"], "fc": ["svd", 4]},
+                "expected": {"input": "det_sin", "logits_row0": [0.1], "tol": 0.02}
+            }]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join(format!("lrdx_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let lib = ArtifactLibrary::load(&dir).unwrap();
+        assert_eq!(lib.specs.len(), 1);
+        let s = lib.find("m1").unwrap();
+        assert_eq!(s.params[0].shape, vec![2, 2]);
+        assert_eq!(s.hw, 8);
+        assert!(matches!(
+            s.plan.get("fc"),
+            Some(crate::decompose::Scheme::Svd { r: 4 })
+        ));
+        assert!(lib.find_by("resnet-mini", "lrd", "forward").is_some());
+        assert!(lib.find_by("resnet50", "lrd", "forward").is_none());
+        let w = read_f32_bin(&s.params[0].file, 4).unwrap();
+        assert_eq!(w, vec![1.0, 2.0, 3.0, 4.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_bin_length_checked() {
+        let dir = std::env::temp_dir().join(format!("lrdx_bin_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join("x.bin");
+        std::fs::write(&f, [0u8; 8]).unwrap();
+        assert!(read_f32_bin(&f, 2).is_ok());
+        assert!(read_f32_bin(&f, 3).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,202 @@
+//! PJRT runtime: the only layer that talks to XLA.
+//!
+//! * `Engine` wraps the PJRT CPU client (one per process, `Arc`-shared).
+//! * `Executable` wraps a compiled module with shape metadata and
+//!   buffer-based execution (weights stay on device across calls).
+//! * `artifacts` loads the python-AOT HLO-text artifacts + weights.
+//! * `layer_factory` constructs layer/network computations directly with
+//!   the XlaBuilder — the Algorithm 1 rank search and the fps tables never
+//!   touch python.
+
+pub mod artifacts;
+pub mod layer_factory;
+pub mod netbuilder;
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Process-wide PJRT engine.
+#[derive(Clone)]
+pub struct Engine {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine. (GPU/TPU would be a one-line change here;
+    /// everything above this type is backend-agnostic.)
+    pub fn cpu() -> Result<Engine> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile an HLO-text file (the python AOT interchange format — see
+    /// `python/compile/aot.py` for why text, not serialized proto).
+    pub fn compile_hlo_text_file(&self, path: &std::path::Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.compile_computation(&comp)
+    }
+
+    pub fn compile_computation(&self, comp: &xla::XlaComputation) -> Result<Executable> {
+        let exe = self
+            .client
+            .compile(comp)
+            .map_err(|e| anyhow!("XLA compile: {e:?}"))?;
+        Ok(Executable { exe: Arc::new(exe), engine: self.clone() })
+    }
+
+    /// Upload an f32 host buffer to the device.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload {dims:?}: {e:?}"))
+    }
+
+    /// Upload an i32 host buffer to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
+    }
+}
+
+/// A compiled computation plus conveniences for literal/buffer execution.
+#[derive(Clone)]
+pub struct Executable {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    engine: Engine,
+}
+
+impl Executable {
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Execute with on-device buffers (hot path — no host copies).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut outs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute_b: {e:?}"))?;
+        Ok(outs.swap_remove(0))
+    }
+
+    /// Execute with host literals (convenience / tests).
+    pub fn run_literals(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        decompose_tuple(lit)
+    }
+
+    /// Execute with buffers and bring the (tuple) result back to the host.
+    pub fn run_to_host(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let outs = self.run_buffers(args)?;
+        let lit = outs[0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        decompose_tuple(lit)
+    }
+}
+
+/// jax `return_tuple=True` modules return a single tuple literal; builder
+/// modules may return a plain array. Normalise both to a Vec<Literal>.
+pub(crate) fn decompose_tuple(lit: xla::Literal) -> Result<Vec<xla::Literal>> {
+    let shape = lit.shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+    match shape {
+        xla::Shape::Tuple(_) => lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}")),
+        _ => Ok(vec![lit]),
+    }
+}
+
+/// Host-side f32 tensor handed around by the coordinator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        HostTensor { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> HostTensor {
+        let n = dims.iter().product();
+        HostTensor { dims, data: vec![0.0; n] }
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().map_err(|e| anyhow!("array_shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(HostTensor::new(dims, data))
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&self.data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Engine {
+        Engine::cpu().expect("cpu engine")
+    }
+
+    #[test]
+    fn builder_roundtrip() {
+        let eng = engine();
+        let b = xla::XlaBuilder::new("t");
+        let p = b.parameter(0, xla::ElementType::F32, &[2, 2], "x").unwrap();
+        let out = (p.clone() + p).unwrap();
+        let comp = b.build(&out).unwrap();
+        let exe = eng.compile_computation(&comp).unwrap();
+        let x = HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let res = exe.run_literals(&[x.to_literal().unwrap()]).unwrap();
+        let t = HostTensor::from_literal(&res[0]).unwrap();
+        assert_eq!(t.data, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn buffer_execution() {
+        let eng = engine();
+        let b = xla::XlaBuilder::new("t2");
+        let p = b.parameter(0, xla::ElementType::F32, &[4], "x").unwrap();
+        let comp = b.build(&p.sqrt().unwrap()).unwrap();
+        let exe = eng.compile_computation(&comp).unwrap();
+        let buf = eng.upload(&[1.0, 4.0, 9.0, 16.0], &[4]).unwrap();
+        let out = exe.run_to_host(&[&buf]).unwrap();
+        let t = HostTensor::from_literal(&out[0]).unwrap();
+        assert_eq!(t.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn host_tensor_shape_checked() {
+        let r = std::panic::catch_unwind(|| HostTensor::new(vec![2, 3], vec![0.0; 5]));
+        assert!(r.is_err());
+    }
+}

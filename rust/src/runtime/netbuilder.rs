@@ -1,0 +1,347 @@
+//! Full-network XlaBuilder construction: the entire ResNet forward pass for
+//! any (arch, plan) pair, weights as parameters. Used by the fps tables
+//! (Table 1/3, Fig. 5) so sweeping models/variants needs no python and no
+//! artifact explosion; numerics are cross-checked against the python AOT
+//! artifacts in the integration tests.
+//!
+//! BatchNorm is inference-mode (per-channel affine) here — the measured
+//! quantity is throughput, and affine-BN is exactly what a deployed
+//! inference graph folds to.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::layer_factory as lf;
+use super::{Engine, Executable};
+use crate::decompose::{Plan, Scheme};
+use crate::model::{Arch, BlockKind, ConvSite, SiteKind};
+use crate::util::rng::Rng;
+
+type B = xla::XlaBuilder;
+type Op = xla::XlaOp;
+
+fn err(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+/// Parameter spec of a built network (order == parameter index - 1; the
+/// input image is always parameter 0).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+struct NetCtx<'a> {
+    b: &'a B,
+    specs: Vec<ParamSpec>,
+    next_idx: i64,
+}
+
+impl<'a> NetCtx<'a> {
+    fn param(&mut self, name: &str, shape: Vec<usize>) -> Result<Op> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let p = self
+            .b
+            .parameter(self.next_idx, xla::ElementType::F32, &dims, name)
+            .map_err(err)?;
+        self.next_idx += 1;
+        self.specs.push(ParamSpec { name: name.to_string(), shape });
+        Ok(p)
+    }
+}
+
+/// Apply one (possibly decomposed) conv site WITHOUT its BN/ReLU.
+/// Returns the op and output (channels, h, w).
+fn apply_site(
+    ctx: &mut NetCtx,
+    site: &ConvSite,
+    plan: &Plan,
+    x: &Op,
+    n: usize,
+    h: usize,
+    w: usize,
+) -> Result<(Op, usize, usize, usize)> {
+    let scheme = plan.get(&site.name).unwrap_or(&Scheme::Orig);
+    let (ho, wo) = (
+        (h + 2 * site.padding - site.k) / site.stride + 1,
+        (w + 2 * site.padding - site.k) / site.stride + 1,
+    );
+    let nm = &site.name;
+    Ok(match scheme {
+        Scheme::Orig => {
+            if site.k == 1 {
+                let wp = ctx.param(&format!("{nm}.w"), vec![site.s, site.c])?;
+                (lf::conv1x1(x, &wp, site.stride)?, site.s, ho, wo)
+            } else {
+                let wp =
+                    ctx.param(&format!("{nm}.w"), vec![site.s, site.c, site.k, site.k])?;
+                let xp = lf::pad_hw(ctx.b, x, &[n, site.c, h, w], site.padding, 0.0)?;
+                let pd = [n, site.c, h + 2 * site.padding, w + 2 * site.padding];
+                (lf::conv2d(ctx.b, &xp, &wp, &pd, site.s, site.k, site.stride)?, site.s, ho, wo)
+            }
+        }
+        Scheme::Svd { r } => {
+            let w0 = ctx.param(&format!("{nm}.w0"), vec![*r, site.c])?;
+            let w1 = ctx.param(&format!("{nm}.w1"), vec![site.s, *r])?;
+            let t = lf::conv1x1(x, &w0, site.stride)?;
+            (lf::conv1x1(&t, &w1, 1)?, site.s, ho, wo)
+        }
+        Scheme::Tucker { r1, r2 } => {
+            let u = ctx.param(&format!("{nm}.u"), vec![*r1, site.c])?;
+            let core =
+                ctx.param(&format!("{nm}.core"), vec![*r2, *r1, site.k, site.k])?;
+            let v = ctx.param(&format!("{nm}.v"), vec![site.s, *r2])?;
+            let t = lf::conv1x1(x, &u, 1)?;
+            let tp = lf::pad_hw(ctx.b, &t, &[n, *r1, h, w], site.padding, 0.0)?;
+            let pd = [n, *r1, h + 2 * site.padding, w + 2 * site.padding];
+            let t = lf::conv2d(ctx.b, &tp, &core, &pd, *r2, site.k, site.stride)?;
+            (lf::conv1x1(&t, &v, 1)?, site.s, ho, wo)
+        }
+        Scheme::Branched { r1, r2, groups } => {
+            let u = ctx.param(&format!("{nm}.u"), vec![*r1, site.c])?;
+            let core = ctx
+                .param(&format!("{nm}.core"), vec![*r2, r1 / groups, site.k, site.k])?;
+            let v = ctx.param(&format!("{nm}.v"), vec![site.s, *r2])?;
+            let t = lf::conv1x1(x, &u, 1)?;
+            let tp = lf::pad_hw(ctx.b, &t, &[n, *r1, h, w], site.padding, 0.0)?;
+            let pd = [n, *r1, h + 2 * site.padding, w + 2 * site.padding];
+            let t =
+                lf::grouped_conv2d(ctx.b, &tp, &core, &pd, *r2, site.k, site.stride, *groups)?;
+            (lf::conv1x1(&t, &v, 1)?, site.s, ho, wo)
+        }
+        Scheme::Merged { r1, r2 } => {
+            // the core conv of a merged bottleneck: input is already r1 wide
+            let core =
+                ctx.param(&format!("{nm}.w"), vec![*r2, *r1, site.k, site.k])?;
+            let xp = lf::pad_hw(ctx.b, x, &[n, *r1, h, w], site.padding, 0.0)?;
+            let pd = [n, *r1, h + 2 * site.padding, w + 2 * site.padding];
+            (lf::conv2d(ctx.b, &xp, &core, &pd, *r2, site.k, site.stride)?, *r2, ho, wo)
+        }
+        Scheme::MergedInto { peer } => {
+            let (r1, r2) = match plan.get(peer) {
+                Some(Scheme::Merged { r1, r2 }) => (*r1, *r2),
+                other => bail!("{nm}: merged_into peer {peer} has scheme {other:?}"),
+            };
+            let (co, ci) = if nm.ends_with(".conv1") { (r1, site.c) } else { (site.s, r2) };
+            let wp = ctx.param(&format!("{nm}.w"), vec![co, ci])?;
+            (lf::conv1x1(x, &wp, site.stride)?, co, ho, wo)
+        }
+    })
+}
+
+/// BN affine + optional ReLU on an NCHW op.
+fn bn_relu(
+    ctx: &mut NetCtx,
+    name: &str,
+    x: &Op,
+    dims: &[usize; 4],
+    relu: bool,
+) -> Result<Op> {
+    let g = ctx.param(&format!("{name}.bn.g"), vec![dims[1]])?;
+    let bta = ctx.param(&format!("{name}.bn.b"), vec![dims[1]])?;
+    let y = lf::bn_affine(x, &g, &bta, dims)?;
+    if relu {
+        lf::relu(ctx.b, &y)
+    } else {
+        Ok(y)
+    }
+}
+
+/// Build the full forward computation. Parameter 0 is the input image
+/// [batch, 3, hw, hw]; the returned specs describe parameters 1..N.
+pub fn build_forward(
+    arch: &Arch,
+    plan: &Plan,
+    batch: usize,
+    hw: usize,
+) -> Result<(xla::XlaComputation, Vec<ParamSpec>)> {
+    let b = B::new(&format!("{}_fwd", arch.name));
+    let x = b
+        .parameter(0, xla::ElementType::F32, &[batch as i64, 3, hw as i64, hw as i64], "x")
+        .map_err(err)?;
+    let mut ctx = NetCtx { b: &b, specs: Vec::new(), next_idx: 1 };
+    let sites = arch.sites();
+    let by_name: std::collections::HashMap<String, ConvSite> =
+        sites.iter().map(|t| (t.name.clone(), t.clone())).collect();
+
+    // Stem
+    let stem = &by_name["stem.conv"];
+    let (mut y, mut c, mut h, mut w) = apply_site(&mut ctx, stem, plan, &x, batch, hw, hw)?;
+    y = bn_relu(&mut ctx, "stem.conv", &y, &[batch, c, h, w], true)?;
+    y = lf::maxpool_3x3_s2(&b, &y, &[batch, c, h, w])?;
+    h = (h + 2 - 3) / 2 + 1;
+    w = (w + 2 - 3) / 2 + 1;
+
+    for (si, &n_blocks) in arch.layers.iter().enumerate() {
+        for bi in 0..n_blocks {
+            let pre = format!("layer{}.{}", si + 1, bi);
+            let identity = (y.clone(), c, h, w);
+            let names: Vec<String> = match arch.block {
+                BlockKind::Bottleneck => {
+                    vec![format!("{pre}.conv1"), format!("{pre}.conv2"), format!("{pre}.conv3")]
+                }
+                BlockKind::Basic => vec![format!("{pre}.conv1"), format!("{pre}.conv2")],
+            };
+            let mut hh = (y.clone(), c, h, w);
+            for (i, nm) in names.iter().enumerate() {
+                let site = &by_name[nm];
+                let (op, cc, nh, nw) =
+                    apply_site(&mut ctx, site, plan, &hh.0, batch, hh.2, hh.3)?;
+                let last = i == names.len() - 1;
+                let op = bn_relu(&mut ctx, nm, &op, &[batch, cc, nh, nw], !last)?;
+                hh = (op, cc, nh, nw);
+            }
+            let (mut idy, _idc, _idh, _idw) = identity.clone();
+            if let Some(ds) = by_name.get(&format!("{pre}.downsample")) {
+                let (op, cc, nh, nw) =
+                    apply_site(&mut ctx, ds, plan, &identity.0, batch, identity.2, identity.3)?;
+                idy = bn_relu(&mut ctx, &ds.name, &op, &[batch, cc, nh, nw], false)?;
+            }
+            let sum = (hh.0 + idy).map_err(err)?;
+            y = lf::relu(&b, &sum)?;
+            (c, h, w) = (hh.1, hh.2, hh.3);
+        }
+    }
+
+    // Head
+    let pooled = lf::gap(&y)?; // [batch, C]
+    let fc = sites.last().unwrap();
+    assert_eq!(fc.kind, SiteKind::Fc);
+    let logits = match plan.get("fc").unwrap_or(&Scheme::Orig) {
+        Scheme::Svd { r } => {
+            let w0 = ctx.param("fc.w0", vec![*r, fc.c])?;
+            let w1 = ctx.param("fc.w1", vec![fc.s, *r])?;
+            let t = pooled.dot_general(&w0, &[1], &[1], &[], &[]).map_err(err)?;
+            t.dot_general(&w1, &[1], &[1], &[], &[]).map_err(err)?
+        }
+        _ => {
+            let wp = ctx.param("fc.w", vec![fc.s, fc.c])?;
+            pooled.dot_general(&wp, &[1], &[1], &[], &[]).map_err(err)?
+        }
+    };
+    let bias = ctx.param("fc.b", vec![fc.s])?;
+    let bias = bias
+        .broadcast_in_dim(&[batch as i64, fc.s as i64], &[1])
+        .map_err(err)?;
+    let out = (logits + bias).map_err(err)?;
+    let comp = b.build(&out).map_err(err)?;
+    Ok((comp, ctx.specs))
+}
+
+/// A compiled network with random weights resident on device — the unit the
+/// fps benchmarks (and the coordinator's synthetic workers) execute.
+pub struct BuiltNet {
+    pub exe: Executable,
+    pub weight_bufs: Vec<xla::PjRtBuffer>,
+    pub batch: usize,
+    pub hw: usize,
+    pub classes: usize,
+}
+
+impl BuiltNet {
+    /// Compile (arch, plan) and upload He-initialised weights.
+    pub fn compile(
+        engine: &Engine,
+        arch: &Arch,
+        plan: &Plan,
+        batch: usize,
+        hw: usize,
+        seed: u64,
+    ) -> Result<BuiltNet> {
+        let (comp, specs) = build_forward(arch, plan, batch, hw)?;
+        let exe = engine.compile_computation(&comp)?;
+        let mut rng = Rng::new(seed);
+        let mut weight_bufs = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            let n: usize = spec.shape.iter().product();
+            let fan_in = spec.shape.iter().skip(1).product::<usize>().max(1);
+            let host = if spec.name.ends_with(".bn.g") {
+                vec![1.0f32; n]
+            } else if spec.name.ends_with(".bn.b") || spec.name == "fc.b" {
+                vec![0.0f32; n]
+            } else {
+                rng.he_weights(n, fan_in)
+            };
+            weight_bufs.push(engine.upload(&host, &spec.shape)?);
+        }
+        Ok(BuiltNet { exe, weight_bufs, batch, hw, classes: arch.classes })
+    }
+
+    /// Compile (arch, plan) and upload the given named parameters (e.g. the
+    /// one-shot decomposition of a trained original — `decompose::params`).
+    pub fn compile_with_params(
+        engine: &Engine,
+        arch: &Arch,
+        plan: &Plan,
+        batch: usize,
+        hw: usize,
+        params: &crate::decompose::params::Params,
+    ) -> Result<BuiltNet> {
+        let (comp, specs) = build_forward(arch, plan, batch, hw)?;
+        let exe = engine.compile_computation(&comp)?;
+        let mut weight_bufs = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            let t = params
+                .get(&spec.name)
+                .ok_or_else(|| anyhow!("missing param {}", spec.name))?;
+            if t.dims != spec.shape {
+                bail!("{}: params give {:?}, net expects {:?}", spec.name, t.dims, spec.shape);
+            }
+            weight_bufs.push(engine.upload(&t.data, &t.dims)?);
+        }
+        Ok(BuiltNet { exe, weight_bufs, batch, hw, classes: arch.classes })
+    }
+
+    /// Run one forward pass on an input buffer; returns the logits buffer.
+    pub fn forward(&self, x: &xla::PjRtBuffer) -> Result<xla::PjRtBuffer> {
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_bufs.len());
+        args.push(x);
+        args.extend(self.weight_bufs.iter());
+        let mut outs = self.exe.run_buffers(&args)?;
+        Ok(outs.swap_remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decompose::{plan_variant, Variant};
+    use crate::runtime::HostTensor;
+
+    fn forward_logits(variant: Variant) -> Vec<f32> {
+        let engine = Engine::cpu().unwrap();
+        let arch = Arch::by_name("resnet-mini").unwrap();
+        let plan = plan_variant(&arch, variant, 2.0, 2, None).unwrap();
+        let net = BuiltNet::compile(&engine, &arch, &plan, 2, 16, 7).unwrap();
+        let x = crate::util::det_input(2, 16);
+        let xb = engine.upload(&x, &[2, 3, 16, 16]).unwrap();
+        let out = net.forward(&xb).unwrap();
+        let lit = out.to_literal_sync().unwrap();
+        HostTensor::from_literal(&lit).unwrap().data
+    }
+
+    #[test]
+    fn builds_and_runs_all_variants() {
+        for v in
+            [Variant::Orig, Variant::Lrd, Variant::Merged, Variant::Branched]
+        {
+            let logits = forward_logits(v);
+            assert_eq!(logits.len(), 2 * 10, "{v:?}");
+            assert!(logits.iter().all(|x| x.is_finite()), "{v:?}: {logits:?}");
+            // batch entries must differ (no accidental weight/input mixup)
+            assert!(logits[..10] != logits[10..], "{v:?}");
+        }
+    }
+
+    #[test]
+    fn param_specs_unique_names() {
+        let arch = Arch::by_name("resnet-mini").unwrap();
+        let plan = plan_variant(&arch, Variant::Lrd, 2.0, 2, None).unwrap();
+        let (_comp, specs) = build_forward(&arch, &plan, 1, 16).unwrap();
+        let names: std::collections::HashSet<_> =
+            specs.iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names.len(), specs.len());
+        assert!(names.contains("layer1.0.conv2.core"));
+        assert!(names.contains("fc.w0"));
+    }
+}

@@ -1,0 +1,136 @@
+//! Fine-tuning simulation driver (the Tables 4-6 substitute workload —
+//! DESIGN.md §3): synthetic class-conditional image data, a from-scratch
+//! training run of the original model, one-shot decomposition of the
+//! trained weights, and per-variant fine-tuning through the AOT train-step
+//! artifacts. Everything after `make artifacts` is rust-only.
+
+pub mod data;
+
+use anyhow::{anyhow, Result};
+
+use crate::decompose::params::Params;
+use crate::runtime::artifacts::{ArtifactLibrary, ForwardModel, TrainSession};
+use crate::runtime::{Engine, HostTensor};
+use crate::util::rng::Rng;
+use data::SynthData;
+
+/// One fine-tuning run's telemetry.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub variant: String,
+    pub steps: usize,
+    /// (step, loss) curve
+    pub loss_curve: Vec<(usize, f32)>,
+    /// wall-clock seconds spent in train steps
+    pub train_secs: f64,
+    /// final train-set accuracy proxy (last-step batch accuracies averaged)
+    pub train_acc: f32,
+    /// held-out accuracy measured through the forward artifact
+    pub eval_acc: f32,
+}
+
+/// Train a session for `steps` steps on synthetic data; returns the curve.
+pub fn run_training(
+    sess: &mut TrainSession,
+    gen: &SynthData,
+    rng: &mut Rng,
+    steps: usize,
+    log_every: usize,
+) -> Result<(Vec<(usize, f32)>, f64, f32)> {
+    let mut curve = Vec::new();
+    let mut accs = Vec::new();
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let (x, y) = gen.batch(rng, sess.spec.batch);
+        let (loss, acc) = sess.step(&x, &y)?;
+        if step % log_every == 0 || step + 1 == steps {
+            curve.push((step, loss));
+        }
+        if steps - step <= 5 {
+            accs.push(acc);
+        }
+    }
+    let train_secs = t0.elapsed().as_secs_f64();
+    let train_acc = accs.iter().sum::<f32>() / accs.len().max(1) as f32;
+    Ok((curve, train_secs, train_acc))
+}
+
+/// Evaluate accuracy through a forward artifact (batch-stat BN semantics —
+/// consistent with how the train graphs normalise).
+pub fn evaluate(
+    model: &ForwardModel,
+    gen: &SynthData,
+    rng: &mut Rng,
+    batches: usize,
+) -> Result<f32> {
+    let b = model.spec.batch;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for _ in 0..batches {
+        let (x, y) = gen.batch(rng, b);
+        let logits = model.infer(&HostTensor::new(
+            vec![b, 3, model.spec.hw, model.spec.hw],
+            x,
+        ))?;
+        let c = model.spec.classes;
+        for (i, &label) in y.iter().enumerate() {
+            let row = &logits.data[i * c..(i + 1) * c];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == label as usize {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f32 / total as f32)
+}
+
+/// End-to-end fine-tuning experiment for one variant:
+/// start the variant's train artifact from `init` (decomposition of the
+/// trained original), fine-tune, then evaluate via its forward artifact.
+#[allow(clippy::too_many_arguments)]
+pub fn finetune_variant(
+    engine: &Engine,
+    lib: &ArtifactLibrary,
+    arch: &str,
+    variant: &str,
+    init: Option<&Params>,
+    gen: &SynthData,
+    rng: &mut Rng,
+    steps: usize,
+) -> Result<TrainReport> {
+    let train_variant = variant; // artifact naming matches variant
+    let tspec = lib
+        .find_by(arch, train_variant, "train")
+        .ok_or_else(|| anyhow!("no train artifact for {arch}/{variant}"))?;
+    let mut sess = match init {
+        Some(p) => TrainSession::load_with_params(engine, tspec, p)?,
+        None => TrainSession::load(engine, tspec)?,
+    };
+    let (loss_curve, train_secs, train_acc) =
+        run_training(&mut sess, gen, rng, steps, (steps / 20).max(1))?;
+
+    // Evaluate with the fine-tuned weights through the forward artifact.
+    // The freeze variant shares the lrd forward graph/plan.
+    let fwd_variant = if variant == "freeze" { "lrd" } else { variant };
+    let fspec = lib
+        .find_by(arch, fwd_variant, "forward")
+        .ok_or_else(|| anyhow!("no forward artifact for {arch}/{fwd_variant}"))?;
+    let tuned = sess.export_params()?;
+    let fwd = ForwardModel::load_with_params(engine, fspec, &tuned)?;
+    let mut eval_rng = Rng::new(0xE7A1);
+    let eval_acc = evaluate(&fwd, gen, &mut eval_rng, 8)?;
+    Ok(TrainReport {
+        variant: variant.to_string(),
+        steps,
+        loss_curve,
+        train_secs,
+        train_acc,
+        eval_acc,
+    })
+}

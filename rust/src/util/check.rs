@@ -1,0 +1,87 @@
+//! Mini property-testing harness (offline substitute for `proptest`).
+//!
+//! `property(cases, |rng| { ... })` runs a closure over `cases` random
+//! seeds; on panic it reports the failing seed so the case can be replayed
+//! deterministically with `replay(seed, f)`.
+
+use super::rng::Rng;
+
+/// Run `f` against `cases` independent PRNG streams. Panics (re-raising the
+/// inner panic message) with the failing seed on the first failure.
+pub fn property<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: usize, f: F) {
+    let base = match std::env::var("LRDX_CHECK_SEED") {
+        Ok(s) => s.parse::<u64>().unwrap_or(0xC0FFEE),
+        Err(_) => 0xC0FFEE,
+    };
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        });
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| panic.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property failed on case {case} (replay: LRDX_CHECK_SEED={base}, seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn replay<F: FnOnce(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+/// Assert two f32 slices are elementwise close.
+#[track_caller]
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "mismatch at {i}: got {g}, want {w} (|Δ|={} > tol={tol})",
+            (g - w).abs()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        property(10, |rng| {
+            let _ = rng.next_u64();
+            counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        property(5, |rng| {
+            assert!(rng.next_f64() < 0.0, "always fails");
+        });
+    }
+
+    #[test]
+    fn allclose_accepts_within_tol() {
+        assert_allclose(&[1.0, 2.0], &[1.0005, 2.0], 1e-3, 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch at 1")]
+    fn allclose_rejects_outside_tol() {
+        assert_allclose(&[1.0, 3.0], &[1.0, 2.0], 1e-3, 1e-3);
+    }
+}

@@ -1,0 +1,401 @@
+//! Minimal JSON parser/serializer (RFC 8259 subset sufficient for the
+//! artifact manifest, plans and experiment reports). Hand-rolled because the
+//! offline crate cache has no `serde`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ---------------- accessors ----------------
+
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
+            _ => bail!("not an object (looking up {key:?})"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn num(&self) -> Result<f64> {
+        match self {
+            Json::Num(v) => Ok(*v),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn int(&self) -> Result<i64> {
+        Ok(self.num()? as i64)
+    }
+
+    pub fn boolean(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+
+    pub fn arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => bail!("not an array: {self:?}"),
+        }
+    }
+
+    pub fn obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => bail!("not an object: {self:?}"),
+        }
+    }
+
+    // ---------------- constructors ----------------
+
+    pub fn obj_from(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn from_f64s(v: &[f64]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    pub fn from_usizes(v: &[usize]) -> Json {
+        Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    // ---------------- parsing ----------------
+
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut p = Parser { b: bytes, i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != bytes.len() {
+            bail!("trailing garbage at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Json::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    // ---------------- serialising ----------------
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.fract() == 0.0 && v.abs() < 9e15 {
+                    let _ = write!(out, "{}", *v as i64);
+                } else {
+                    let _ = write!(out, "{v}");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    item.write(out, indent);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    for _ in 0..indent + 1 {
+                        out.push(' ');
+                    }
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                }
+                if !m.is_empty() {
+                    out.push('\n');
+                    for _ in 0..indent {
+                        out.push(' ');
+                    }
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!(
+                "expected {:?} at byte {}, found {:?}",
+                c as char,
+                self.i,
+                self.peek()? as char
+            );
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            m.insert(k, self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => bail!("expected ',' or '}}', found {:?}", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.ws();
+            v.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => bail!("expected ',' or ']', found {:?}", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        _ => bail!("bad escape at byte {}", self.i),
+                    }
+                }
+                c => {
+                    // re-decode UTF-8 multibyte sequences
+                    if c < 0x80 {
+                        s.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let len = utf8_len(c);
+                        let chunk = std::str::from_utf8(&self.b[start..start + len])?;
+                        s.push_str(chunk);
+                        self.i = start + len;
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse::<f64>().with_context(|| format!("bad number {s:?}"))?))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_manifest_like() {
+        let text = r#"{"seed": 42, "artifacts": [{"name": "m", "shape": [1, 2, 3], "tol": 0.02, "ok": true, "none": null}]}"#;
+        let v = Json::parse(text).unwrap();
+        let a = &v.get("artifacts").unwrap().arr().unwrap()[0];
+        assert_eq!(a.get("name").unwrap().str().unwrap(), "m");
+        assert_eq!(a.get("shape").unwrap().arr().unwrap().len(), 3);
+        assert!(a.get("ok").unwrap().boolean().unwrap());
+        let re = Json::parse(&v.render()).unwrap();
+        assert_eq!(re, v);
+    }
+
+    #[test]
+    fn parses_escapes_and_unicode() {
+        let v = Json::parse(r#""a\n\"b\" é ü""#).unwrap();
+        assert_eq!(v.str().unwrap(), "a\n\"b\" é ü");
+    }
+
+    #[test]
+    fn parses_numbers() {
+        for (s, want) in [("0", 0.0), ("-1.5", -1.5), ("2e3", 2000.0), ("1.25e-2", 0.0125)] {
+            assert_eq!(Json::parse(s).unwrap().num().unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("tru").is_err());
+        assert!(Json::parse("1 2").is_err());
+    }
+
+    #[test]
+    fn renders_ints_without_fraction() {
+        assert_eq!(Json::Num(3.0).render(), "3");
+        assert_eq!(Json::Num(3.5).render(), "3.5");
+    }
+
+    #[test]
+    fn missing_key_error() {
+        let v = Json::parse(r#"{"a": 1}"#).unwrap();
+        assert!(v.get("b").is_err());
+        assert!(v.opt("b").is_none());
+    }
+}

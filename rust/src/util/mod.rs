@@ -1,0 +1,21 @@
+//! In-tree substrates for an offline build: PRNG, stats, JSON, CLI args and
+//! a tiny property-testing harness. No external crates beyond `xla`/`anyhow`.
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Deterministic test image shared with the python AOT path
+/// (`compile/aot.py::det_input`): `x.flat[i] = sin(i * 0.01) * 0.5`,
+/// computed in f64 then cast to f32.
+pub fn det_input(batch: usize, hw: usize) -> Vec<f32> {
+    let n = batch * 3 * hw * hw;
+    (0..n).map(|i| ((i as f64 * 0.01).sin() * 0.5) as f32).collect()
+}
+
+/// Deterministic labels shared with `compile/aot.py::det_labels`.
+pub fn det_labels(batch: usize, classes: usize) -> Vec<i32> {
+    (0..batch).map(|i| (i % classes) as i32).collect()
+}

@@ -1,0 +1,99 @@
+//! Summary statistics for timing samples (the profiler's math lives here).
+
+/// Robust summary of a sample of measurements (nanoseconds, fps, ...).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    /// trimmed mean over the middle 80% — the profiler's primary statistic
+    pub trimmed_mean: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "empty sample");
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let lo = n / 10;
+        let hi = n - lo;
+        let mid = &s[lo..hi.max(lo + 1)];
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            max: s[n - 1],
+            p50: percentile(&s, 0.50),
+            p90: percentile(&s, 0.90),
+            p99: percentile(&s, 0.99),
+            trimmed_mean: mid.iter().sum::<f64>() / mid.len() as f64,
+        }
+    }
+
+    /// Coefficient of variation — the profiler's steady-state criterion.
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.std / self.mean
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an already-sorted slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q * (sorted.len() - 1) as f64;
+    let (i, frac) = (pos.floor() as usize, pos.fract());
+    if i + 1 < sorted.len() {
+        sorted[i] * (1.0 - frac) + sorted[i + 1] * frac
+    } else {
+        sorted[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = Summary::of(&[5.0; 20]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.trimmed_mean, 5.0);
+        assert_eq!(s.p99, 5.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!(s.p50 < s.p90 && s.p90 < s.p99);
+        assert!((s.p50 - 50.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn trimmed_mean_robust_to_outliers() {
+        let mut xs = vec![10.0; 18];
+        xs.push(1000.0);
+        xs.push(0.0);
+        let s = Summary::of(&xs);
+        assert!((s.trimmed_mean - 10.0).abs() < 1e-9);
+        assert!(s.mean > 10.0);
+    }
+
+    #[test]
+    fn cv_zero_for_constant() {
+        assert_eq!(Summary::of(&[3.0; 5]).cv(), 0.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Integration: the python-AOT artifacts load, run and reproduce the
+//! manifest-recorded numerics on the rust PJRT runtime — the core proof
+//! that the three layers compose (Pallas kernel -> jax model -> HLO text ->
+//! rust execution).
+//!
+//! Requires `make artifacts` to have run (skips, loudly, otherwise).
+
+use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel, TrainSession};
+use lrdx::runtime::{Engine, HostTensor};
+use lrdx::util::{det_input, det_labels};
+
+fn library() -> Option<(Engine, ArtifactLibrary)> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        return None;
+    }
+    let engine = Engine::cpu().expect("PJRT CPU engine");
+    let lib = ArtifactLibrary::load(root).expect("manifest parses");
+    Some((engine, lib))
+}
+
+#[test]
+fn mini_forward_artifacts_reproduce_recorded_logits() {
+    let Some((engine, lib)) = library() else { return };
+    for variant in ["orig", "lrd", "merged", "branched"] {
+        let spec = lib
+            .find_by("resnet-mini", variant, "forward")
+            .unwrap_or_else(|| panic!("missing resnet-mini {variant} artifact"));
+        let model = ForwardModel::load(&engine, spec).expect("load");
+        let delta = model.verify().expect(variant);
+        eprintln!("resnet-mini/{variant}: max |Δ| = {delta:.2e}");
+    }
+}
+
+#[test]
+fn pallas_artifact_matches_jax_numerics() {
+    // The kernel-bearing artifact: interpret-mode pallas lowered into the
+    // same HLO. Verifying it on the rust side closes the L1->L3 loop.
+    let Some((engine, lib)) = library() else { return };
+    let spec = lib
+        .specs
+        .iter()
+        .find(|s| s.use_pallas && s.kind == "forward")
+        .expect("pallas artifact present");
+    let model = ForwardModel::load(&engine, spec).expect("load pallas artifact");
+    let delta = model.verify().expect("pallas numerics");
+    eprintln!("{}: max |Δ| = {delta:.2e}", spec.name);
+}
+
+#[test]
+fn forward_batch_shape_is_validated() {
+    let Some((engine, lib)) = library() else { return };
+    let spec = lib.find_by("resnet-mini", "orig", "forward").unwrap();
+    let model = ForwardModel::load(&engine, spec).unwrap();
+    let bad = HostTensor::zeros(vec![1, 3, spec.hw, spec.hw]); // wrong batch
+    assert!(model.infer(&bad).is_err());
+}
+
+#[test]
+fn train_artifact_first_step_matches_recorded_loss() {
+    let Some((engine, lib)) = library() else { return };
+    for variant in ["lrd", "freeze"] {
+        let spec = lib
+            .find_by("resnet-mini", variant, "train")
+            .unwrap_or_else(|| panic!("missing train artifact {variant}"));
+        let mut sess = TrainSession::load(&engine, spec).expect("load train");
+        if variant == "freeze" {
+            assert!(sess.n_frozen() > 0, "freeze artifact must have frozen params");
+        } else {
+            assert_eq!(sess.n_frozen(), 0);
+        }
+        let x = det_input(spec.batch, spec.hw);
+        let y = det_labels(spec.batch, spec.classes);
+        let (loss, acc) = sess.step(&x, &y).expect("step");
+        let want = spec.expected.get("loss0").unwrap().num().unwrap();
+        let tol = spec.expected.get("tol").unwrap().num().unwrap();
+        assert!(
+            (loss as f64 - want).abs() < tol,
+            "{variant}: loss {loss} vs recorded {want} (tol {tol})"
+        );
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}
+
+#[test]
+fn training_reduces_loss_over_repeated_batches() {
+    let Some((engine, lib)) = library() else { return };
+    let spec = lib.find_by("resnet-mini", "freeze", "train").unwrap();
+    let mut sess = TrainSession::load(&engine, spec).unwrap();
+    let x = det_input(spec.batch, spec.hw);
+    let y = det_labels(spec.batch, spec.classes);
+    let (first, _) = sess.step(&x, &y).unwrap();
+    let mut last = first;
+    for _ in 0..5 {
+        let (l, _) = sess.step(&x, &y).unwrap();
+        last = l;
+    }
+    assert!(
+        last < first,
+        "loss should fall when overfitting one batch: {first} -> {last}"
+    );
+    assert_eq!(sess.steps_done, 6);
+}
+
+#[test]
+fn resnet50_artifacts_load_and_execute() {
+    let Some((engine, lib)) = library() else { return };
+    let spec = lib.find_by("resnet50", "lrd", "forward").expect("resnet50 lrd");
+    let model = ForwardModel::load(&engine, spec).expect("compile resnet50");
+    let x = HostTensor::new(
+        vec![spec.batch, 3, spec.hw, spec.hw],
+        det_input(spec.batch, spec.hw),
+    );
+    let logits = model.infer(&x).expect("infer");
+    assert_eq!(logits.dims, vec![spec.batch, spec.classes]);
+    assert!(logits.data.iter().all(|v| v.is_finite()));
+}

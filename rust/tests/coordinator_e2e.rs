@@ -1,0 +1,140 @@
+//! End-to-end coordinator test: real AOT artifacts served through the
+//! router + dynamic batcher, original and decomposed variants side by side.
+
+use std::time::Duration;
+
+use lrdx::coordinator::batcher::BatchPolicy;
+use lrdx::coordinator::{BatchModel, Coordinator};
+use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel};
+
+fn artifacts_root() -> Option<std::path::PathBuf> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if root.join("manifest.json").exists() {
+        Some(root)
+    } else {
+        eprintln!("SKIP: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn serve_orig_and_lrd_mini_models() {
+    let Some(root) = artifacts_root() else { return };
+    let mut coord = Coordinator::new(BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_millis(4),
+    });
+    for variant in ["orig", "lrd"] {
+        let root = root.clone();
+        coord
+            .register(&format!("mini-{variant}"), 32, 1, move |engine| {
+                let lib = ArtifactLibrary::load(&root)?;
+                let spec = lib
+                    .find_by("resnet-mini", variant, "forward")
+                    .ok_or_else(|| anyhow::anyhow!("missing artifact"))?;
+                Ok(Box::new(ForwardModel::load(engine, spec)?) as Box<dyn BatchModel>)
+            })
+            .expect("register");
+    }
+
+    // Fire a burst at both models; every response must be well-formed.
+    let gen = lrdx::trainsim::data::SynthData::new(32, 10);
+    let mut rng = lrdx::util::rng::Rng::new(99);
+    let mut pending = Vec::new();
+    for i in 0..24 {
+        let (x, _y) = gen.batch(&mut rng, 1);
+        let model = if i % 2 == 0 { "mini-orig" } else { "mini-lrd" };
+        pending.push(coord.infer(model, x).expect("submit"));
+    }
+    let mut batched = 0;
+    for rx in pending {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("response within deadline")
+            .expect("inference ok");
+        assert_eq!(resp.logits.len(), 10);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+        if resp.batch_size > 1 {
+            batched += 1;
+        }
+    }
+    assert!(batched > 0, "dynamic batching never engaged");
+
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.responses, 24);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.mean_batch_occupancy > 1.0, "occupancy {}", snap.mean_batch_occupancy);
+    eprintln!("{}", snap.render());
+    coord.shutdown();
+}
+
+#[test]
+fn coordinator_overhead_is_small_vs_direct_calls() {
+    // §Perf gate: routing+batching over bare execution for a saturated
+    // closed loop (DESIGN.md L3 target: <5% at batch 8 steady-state; the
+    // tiny mini model makes fixed overheads most visible so the gate here
+    // is looser).
+    let Some(root) = artifacts_root() else { return };
+    let engine = lrdx::runtime::Engine::cpu().unwrap();
+    let lib = ArtifactLibrary::load(&root).unwrap();
+    let spec = lib.find_by("resnet-mini", "lrd", "forward").unwrap();
+    let direct = ForwardModel::load(&engine, spec).unwrap();
+    let b = spec.batch;
+    let img = 3 * spec.hw * spec.hw;
+
+    let gen = lrdx::trainsim::data::SynthData::new(spec.hw, spec.classes);
+    let mut rng = lrdx::util::rng::Rng::new(7);
+    let (xflat, _y) = gen.batch(&mut rng, b);
+
+    // direct: N batch executions
+    let n_batches = 24;
+    for _ in 0..3 {
+        direct.run_batch(&xflat).unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..n_batches {
+        direct.run_batch(&xflat).unwrap();
+    }
+    let direct_secs = t0.elapsed().as_secs_f64();
+
+    // coordinated: same number of images through the full stack, saturated
+    let mut coord = Coordinator::new(BatchPolicy {
+        max_batch: b,
+        max_wait: Duration::from_millis(2),
+    });
+    {
+        let root = root.clone();
+        coord
+            .register("m", spec.hw, 1, move |eng| {
+                let lib = ArtifactLibrary::load(&root)?;
+                let spec = lib.find_by("resnet-mini", "lrd", "forward").unwrap();
+                Ok(Box::new(ForwardModel::load(eng, spec)?) as Box<dyn BatchModel>)
+            })
+            .unwrap();
+    }
+    // warmup
+    coord.infer_blocking("m", xflat[..img].to_vec()).unwrap();
+    let t0 = std::time::Instant::now();
+    let pending: Vec<_> = (0..n_batches * b)
+        .map(|i| {
+            coord
+                .infer("m", xflat[(i % b) * img..(i % b + 1) * img].to_vec())
+                .unwrap()
+        })
+        .collect();
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    let coord_secs = t0.elapsed().as_secs_f64();
+    let overhead = coord_secs / direct_secs - 1.0;
+    eprintln!(
+        "direct={direct_secs:.3}s coordinated={coord_secs:.3}s overhead={:.1}%",
+        overhead * 100.0
+    );
+    assert!(
+        overhead < 0.40,
+        "coordinator overhead {:.1}% is too high",
+        overhead * 100.0
+    );
+    coord.shutdown();
+}

@@ -1,0 +1,96 @@
+//! Algorithm 1 against the REAL XLA:CPU backend: sweep ranks of a conv
+//! layer with the PJRT layer timer and check the decision is sane.
+
+use lrdx::decompose::rank_opt::{optimize_site, RankOptConfig};
+use lrdx::decompose::Scheme;
+use lrdx::model::{ConvSite, SiteKind};
+use lrdx::profiler::Timer;
+use lrdx::runtime::layer_factory::PjrtLayerTimer;
+use lrdx::runtime::Engine;
+
+fn site(c: usize, s: usize, k: usize) -> ConvSite {
+    ConvSite {
+        name: format!("bench.{c}x{s}x{k}"),
+        c,
+        s,
+        k,
+        stride: 1,
+        padding: if k > 1 { 1 } else { 0 },
+        kind: SiteKind::Conv,
+    }
+}
+
+#[test]
+fn rank_search_on_real_backend_produces_valid_decision() {
+    let engine = Engine::cpu().unwrap();
+    let mut timer = PjrtLayerTimer::with_timer(
+        engine,
+        Timer { warmup: 1, min_samples: 3, max_samples: 6, cv_target: 0.3 },
+    );
+    let cfg = RankOptConfig {
+        alpha: 2.0,
+        rmin_frac: 0.5,
+        stride: 8,
+        refine: 2,
+        batch: 2,
+        hw: 16,
+    };
+    let t = site(64, 64, 3);
+    let d = optimize_site(&mut timer, &t, &cfg).unwrap();
+    // eq. (7) initial rank for 64x64x3x3 @ 2x is 38 (Table 2)
+    assert_eq!(d.initial_rank, 38);
+    assert!(!d.sweep.is_empty());
+    // every sweep time is positive and finite
+    for &(r, tsec) in &d.sweep {
+        assert!(r >= 19 && r <= 38, "rank {r} outside sweep bounds");
+        assert!(tsec.is_finite() && tsec > 0.0);
+    }
+    match d.chosen_rank {
+        Some(r) => {
+            assert!((19..=38).contains(&r));
+            assert!(d.t_chosen < d.t_orig, "chosen rank must beat original");
+            assert!(d.speedup() > 1.0);
+        }
+        None => {
+            // keeping the original is a legal outcome on a fast backend
+            assert_eq!(d.t_chosen, d.t_orig);
+        }
+    }
+    eprintln!(
+        "decision: initial=38 chosen={:?} t_orig={:.2}ms t_chosen={:.2}ms ({} compiles, {} cache hits)",
+        d.chosen_rank,
+        d.t_orig * 1e3,
+        d.t_chosen * 1e3,
+        timer.compiles,
+        timer.cache_hits,
+    );
+}
+
+#[test]
+fn scheme_construction_for_rectangular_sites() {
+    // tucker r2 must scale with S/C (beta) for rectangular layers
+    let engine = Engine::cpu().unwrap();
+    let mut timer = PjrtLayerTimer::with_timer(
+        engine,
+        Timer { warmup: 0, min_samples: 2, max_samples: 3, cv_target: 0.9 },
+    );
+    let cfg = RankOptConfig {
+        alpha: 2.0,
+        rmin_frac: 0.9,
+        stride: 4,
+        refine: 0,
+        batch: 1,
+        hw: 8,
+    };
+    let t = site(32, 64, 3);
+    let d = optimize_site(&mut timer, &t, &cfg).unwrap();
+    if let Some(r) = d.chosen_rank {
+        match d.scheme(&t) {
+            Scheme::Tucker { r1, r2 } => {
+                assert_eq!(r1, r);
+                assert_eq!(r2, (2 * r).min(64)); // beta = S/C = 2
+            }
+            other => panic!("unexpected scheme {other:?}"),
+        }
+    }
+}
