@@ -13,7 +13,7 @@ use lrdx::util::stats::Summary;
 
 fn main() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("SKIP coordinator bench: run `make artifacts` first");
+        eprintln!("SKIP coordinator bench: run `python python/compile/aot.py --out rust/artifacts` first");
         return;
     }
     let engine = Engine::cpu().expect("engine");

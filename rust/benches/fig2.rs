@@ -1,10 +1,10 @@
 //! `cargo bench --bench fig2` — rank sweep of the [512,512,3,3] layer with
-//! REAL XLA:CPU timing (the paper's Fig. 2 rank-cliff curve).
+//! REAL backend wall-clock timing (the paper's Fig. 2 rank-cliff curve).
 use lrdx::harness::fig2;
 use lrdx::runtime::Engine;
 
 fn main() {
-    let engine = Engine::cpu().expect("PJRT engine");
+    let engine = Engine::cpu().expect("engine");
     let cfg = fig2::Config { real: true, step: 16, ..Default::default() };
     let report = fig2::run(&engine, &cfg).expect("fig2");
     print!("{}", report.render());

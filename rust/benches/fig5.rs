@@ -4,7 +4,7 @@ use lrdx::harness::fig5;
 use lrdx::runtime::Engine;
 
 fn main() {
-    let engine = Engine::cpu().expect("PJRT engine");
+    let engine = Engine::cpu().expect("engine");
     let full = std::env::args().any(|a| a == "--full");
     let cfg = fig5::Config {
         arch: if full { "resnet152".into() } else { "resnet50".into() },

@@ -3,7 +3,7 @@ use lrdx::harness::table1;
 use lrdx::runtime::Engine;
 
 fn main() {
-    let engine = Engine::cpu().expect("PJRT engine");
+    let engine = Engine::cpu().expect("engine");
     let full = std::env::args().any(|a| a == "--full");
     let cfg = table1::Config {
         archs: if full {

@@ -1,9 +1,9 @@
-//! `cargo bench --bench table2` — Algorithm 1 ranks with REAL XLA:CPU timing.
+//! `cargo bench --bench table2` — Algorithm 1 ranks with REAL backend wall-clock timing.
 use lrdx::harness::table2;
 use lrdx::runtime::Engine;
 
 fn main() {
-    let engine = Engine::cpu().expect("PJRT engine");
+    let engine = Engine::cpu().expect("engine");
     let cfg = table2::Config { real: true, stride: 12, refine: 2, ..Default::default() };
     let report = table2::run(&engine, &cfg).expect("table2");
     print!("{}", report.render());

@@ -7,10 +7,10 @@ use lrdx::runtime::Engine;
 
 fn main() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("SKIP table456: run `make artifacts` first");
+        eprintln!("SKIP table456: run `python python/compile/aot.py --out rust/artifacts` first");
         return;
     }
-    let engine = Engine::cpu().expect("PJRT engine");
+    let engine = Engine::cpu().expect("engine");
     let cfg = table456::Config {
         train_steps: 160,
         finetune_steps: 80,

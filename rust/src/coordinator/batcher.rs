@@ -121,6 +121,60 @@ mod tests {
     }
 
     #[test]
+    fn full_batch_flushes_without_waiting_for_deadline() {
+        // size-limit flush: with max_batch items already queued, collect
+        // must return immediately, far before max_wait elapses.
+        let (tx, rx) = mpsc::channel();
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(250) };
+        let t0 = Instant::now();
+        match collect(&rx, &policy) {
+            Collected::Batch(b) => assert_eq!(b.len(), 4),
+            Collected::Closed => panic!(),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(200),
+            "size-limit flush waited for the deadline: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn max_batch_one_never_waits() {
+        // degenerate size limit: every item is its own batch, and the
+        // deadline never applies.
+        let (tx, rx) = mpsc::channel();
+        tx.send(7).unwrap();
+        let policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_secs(10) };
+        let t0 = Instant::now();
+        match collect(&rx, &policy) {
+            Collected::Batch(b) => assert_eq!(b, vec![7]),
+            Collected::Closed => panic!(),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn lone_item_flushes_at_deadline_limit() {
+        // time-limit flush: one item and silence afterwards must flush a
+        // 1-batch once max_wait has elapsed (not hang for more items).
+        let (tx, rx) = mpsc::channel();
+        tx.send(42).unwrap();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(15) };
+        let t0 = Instant::now();
+        match collect(&rx, &policy) {
+            Collected::Batch(b) => assert_eq!(b, vec![42]),
+            Collected::Closed => panic!(),
+        }
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(14), "flushed early: {waited:?}");
+        assert!(waited < Duration::from_secs(2), "deadline overshot: {waited:?}");
+        drop(tx);
+    }
+
+    #[test]
     fn never_exceeds_max_batch_property() {
         crate::util::check::property(20, |rng| {
             let (tx, rx) = mpsc::channel();

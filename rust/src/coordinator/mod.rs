@@ -13,9 +13,11 @@
 //!        per-request responses (logits + timing) via oneshot channels
 //! ```
 //!
-//! PJRT wrapper types hold raw pointers and are not `Send`, so each worker
-//! constructs its own `Engine` + model inside its thread via the factory
-//! closure — no unsafe, clean shutdown by dropping senders.
+//! Backends are not required to be `Send` (the PJRT wrapper types hold raw
+//! pointers), so each worker constructs its own `Engine` + model inside its
+//! thread via the factory closure — no unsafe, clean shutdown by dropping
+//! senders. The same code path serves native-backend synthetic models and
+//! PJRT artifact models.
 
 pub mod batcher;
 pub mod metrics;
@@ -87,8 +89,8 @@ impl Coordinator {
     }
 
     /// Register a model under `name` with `replicas` worker threads. The
-    /// factory runs inside each worker thread (PJRT types are not Send) and
-    /// must yield a model with consistent batch/hw.
+    /// factory runs inside each worker thread (backends need not be Send)
+    /// and must yield a model with consistent batch/hw.
     pub fn register<F>(&mut self, name: &str, hw: usize, replicas: usize, factory: F) -> Result<()>
     where
         F: Fn(&Engine) -> Result<Box<dyn BatchModel>> + Send + Sync + 'static,
@@ -277,10 +279,7 @@ impl BatchModel for crate::runtime::netbuilder::BuiltNet {
         let eng = self.exe.engine().clone();
         let xb = eng.upload(x, &[self.batch, 3, self.hw, self.hw])?;
         let out = self.forward(&xb)?;
-        let lit = out
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        Ok(crate::runtime::HostTensor::from_literal(&lit)?.data)
+        Ok(out.to_host()?.data)
     }
 }
 

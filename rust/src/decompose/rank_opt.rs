@@ -7,10 +7,12 @@
 //! decomposed rank beats it.
 //!
 //! The timing oracle is abstracted (`LayerTimer`) so the same search runs
-//! against the PJRT runtime (`runtime::layer_factory`) in production and a
-//! deterministic analytic model in tests. A coarse-sweep + local-refine
-//! schedule keeps the number of XLA compiles per site bounded (the paper
-//! scans every rank; we document this divergence in EXPERIMENTS.md).
+//! against a real execution backend (`runtime::layer_factory::
+//! EngineLayerTimer` — native CPU by default, XLA:CPU under `xla-pjrt`)
+//! in production and a deterministic analytic model in tests. A
+//! coarse-sweep + local-refine schedule keeps the number of compiles per
+//! site bounded (the paper scans every rank; DESIGN.md documents this
+//! divergence).
 
 use anyhow::Result;
 

@@ -13,7 +13,7 @@ use crate::decompose::rank_opt::{AnalyticTimer, LayerTimer};
 use crate::decompose::Scheme;
 use crate::model::{ConvSite, SiteKind};
 use crate::profiler::Timer;
-use crate::runtime::layer_factory::PjrtLayerTimer;
+use crate::runtime::layer_factory::EngineLayerTimer;
 use crate::runtime::Engine;
 use crate::util::json::Json;
 
@@ -58,7 +58,7 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
     let mut real_timer;
     let mut analytic_timer;
     let timer: &mut dyn LayerTimer = if cfg.real {
-        real_timer = PjrtLayerTimer::with_timer(
+        real_timer = EngineLayerTimer::with_timer(
             engine.clone(),
             Timer { warmup: 1, min_samples: 4, max_samples: 10, cv_target: 0.15 },
         );
@@ -94,7 +94,11 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
             "throughput vs Tucker rank, [{},{},{k},{k}] ({} timing)",
             cfg.c,
             cfg.s,
-            if cfg.real { "XLA:CPU wall-clock" } else { "analytic 128-lane tile model" },
+            if cfg.real {
+                format!("{} wall-clock", engine.platform())
+            } else {
+                "analytic 128-lane tile model".to_string()
+            },
             k = cfg.k
         ),
         header: ["rank", "ms/call", "items/s"].iter().map(|s| s.to_string()).collect(),

@@ -77,9 +77,7 @@ pub fn measure_fps(engine: &Engine, net: &BuiltNet, timer: &Timer) -> Result<f64
     let xb = engine.upload(&x, &[net.batch, 3, net.hw, net.hw])?;
     let summary = timer.measure(|| {
         let out = net.forward(&xb)?;
-        let _ = out
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("sync: {e:?}"))?;
+        out.sync()?;
         Ok(())
     })?;
     Ok(net.batch as f64 / summary.trimmed_mean)

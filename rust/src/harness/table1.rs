@@ -88,8 +88,11 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
         rows,
         notes: vec![
             format!(
-                "fps measured on XLA:CPU at {}x{} batch {}; paper used GPU at 224 (DESIGN.md §3)",
-                cfg.hw, cfg.hw, cfg.batch
+                "fps measured on {} at {}x{} batch {}; paper used GPU at 224 (DESIGN.md §3)",
+                engine.platform(),
+                cfg.hw,
+                cfg.hw,
+                cfg.batch
             ),
             "Train fps* estimated as infer fps / 3 (fwd:fwd+bwd MACs); measured train \
              throughput for the mini models is in table456"

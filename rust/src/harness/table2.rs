@@ -14,7 +14,7 @@ use crate::decompose::rank_opt::{
 };
 use crate::model::Arch;
 use crate::profiler::Timer;
-use crate::runtime::layer_factory::PjrtLayerTimer;
+use crate::runtime::layer_factory::EngineLayerTimer;
 use crate::runtime::Engine;
 use crate::util::json::Json;
 
@@ -74,7 +74,7 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
     let mut real_timer;
     let mut analytic_timer;
     let timer: &mut dyn LayerTimer = if cfg.real {
-        real_timer = PjrtLayerTimer::with_timer(
+        real_timer = EngineLayerTimer::with_timer(
             engine.clone(),
             Timer { warmup: 1, min_samples: 4, max_samples: 10, cv_target: 0.15 },
         );
@@ -147,7 +147,11 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
         title: format!(
             "Algorithm 1 optimized ranks, {} ({} timing)",
             cfg.arch,
-            if cfg.real { "XLA:CPU wall-clock" } else { "analytic tile model" }
+            if cfg.real {
+                format!("{} wall-clock", engine.platform())
+            } else {
+                "analytic tile model".to_string()
+            }
         ),
         header: ["Layer", "In", "Out", "2x Rank", "Opt Rank", "Paper", "Speedup"]
             .iter()

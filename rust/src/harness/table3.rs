@@ -147,7 +147,13 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
             .collect(),
         rows,
         notes: vec![
-            format!("infer speed-up measured on XLA:CPU, {}x{} batch {}", cfg.hw, cfg.hw, cfg.batch),
+            format!(
+                "infer speed-up measured on {}, {}x{} batch {}",
+                engine.platform(),
+                cfg.hw,
+                cfg.hw,
+                cfg.batch
+            ),
             "ΔTrain for Layer Freezing adds the frozen-fraction backward saving; for other \
              methods training cost tracks the forward graph (measured end-to-end on the mini \
              models in table456)"

@@ -4,17 +4,20 @@
 //! Decomposed Models"* (2024) as a three-layer rust + JAX + Pallas stack:
 //!
 //! * **L1/L2 (build time, python)** — Pallas kernels + JAX ResNet variants,
-//!   AOT-lowered to HLO-text artifacts (`python/compile`, `make artifacts`).
-//! * **L3 (this crate)** — the runtime: PJRT execution of the artifacts, an
-//!   XlaBuilder layer/network factory for rank sweeps, the Algorithm 1 rank
-//!   optimizer, the serving coordinator, the fine-tuning driver, and the
-//!   benchmark harness that regenerates every table/figure of the paper.
+//!   AOT-lowered to HLO-text artifacts (`python/compile`; regenerate with
+//!   `python python/compile/aot.py --out rust/artifacts`).
+//! * **L3 (this crate)** — the runtime: a pluggable `runtime::Backend`
+//!   (pure-rust `native` interpreter by default, PJRT execution of the AOT
+//!   artifacts under `--features xla-pjrt`), a graph-IR layer/network
+//!   factory for rank sweeps, the Algorithm 1 rank optimizer, the serving
+//!   coordinator, the fine-tuning driver, and the benchmark harness that
+//!   regenerates every table/figure of the paper.
 //!
-//! Python never runs on the request path: after `make artifacts` the rust
-//! binary is self-contained.
+//! Python never runs on the request path: the native backend is fully
+//! self-contained, and after the AOT step the PJRT path is too.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` (repo root) for the system inventory, the backend
+//! trait and the feature matrix.
 
 pub mod baselines;
 pub mod coordinator;

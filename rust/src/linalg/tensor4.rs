@@ -67,6 +67,31 @@ impl Tensor4 {
         m
     }
 
+    /// Inverse of `unfold_o`: rebuild `[o, i, h, w]` from an `[o, i*h*w]`
+    /// matrix (the natural layout, so this is a reshape).
+    pub fn fold_o(m: &Matrix, i: usize, h: usize, w: usize) -> Tensor4 {
+        assert_eq!(m.cols, i * h * w, "fold_o: {} cols != {i}*{h}*{w}", m.cols);
+        Tensor4 { o: m.rows, i, h, w, data: m.data.clone() }
+    }
+
+    /// Inverse of `unfold_i`: rebuild `[o, i, h, w]` from an `[i, o*h*w]`
+    /// matrix whose columns are ordered `(o, h, w)`.
+    pub fn fold_i(m: &Matrix, o: usize, h: usize, w: usize) -> Tensor4 {
+        assert_eq!(m.cols, o * h * w, "fold_i: {} cols != {o}*{h}*{w}", m.cols);
+        let i = m.rows;
+        let mut t = Tensor4::zeros(o, i, h, w);
+        for oi in 0..o {
+            for ii in 0..i {
+                for hi in 0..h {
+                    for wi in 0..w {
+                        *t.at_mut(oi, ii, hi, wi) = m[(ii, (oi * h + hi) * w + wi)];
+                    }
+                }
+            }
+        }
+        t
+    }
+
     /// Frobenius norm.
     pub fn fro(&self) -> f64 {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
@@ -122,6 +147,14 @@ mod tests {
         let m = t.unfold_i();
         assert_eq!(m.row(0), &[0.0, 2.0]); // input channel 0 across outputs
         assert_eq!(m.row(1), &[1.0, 3.0]);
+    }
+
+    #[test]
+    fn unfold_fold_roundtrips() {
+        let mut rng = Rng::new(7);
+        let t = Tensor4::random(4, 3, 2, 5, &mut rng);
+        assert_eq!(Tensor4::fold_o(&t.unfold_o(), t.i, t.h, t.w), t);
+        assert_eq!(Tensor4::fold_i(&t.unfold_i(), t.o, t.h, t.w), t);
     }
 
     #[test]

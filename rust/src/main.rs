@@ -23,7 +23,7 @@ use lrdx::harness::{self, Report};
 use lrdx::model::{cost, Arch};
 use lrdx::profiler::Timer;
 use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel, TrainSession};
-use lrdx::runtime::layer_factory::PjrtLayerTimer;
+use lrdx::runtime::layer_factory::EngineLayerTimer;
 use lrdx::runtime::Engine;
 use lrdx::trainsim::{self, data::SynthData};
 use lrdx::util::cli::Args;
@@ -186,7 +186,7 @@ fn cmd_rank_search(args: &Args) -> Result<()> {
     let mut real;
     let mut analytic;
     let timer: &mut dyn LayerTimer = if args.bool("real") {
-        real = PjrtLayerTimer::with_timer(
+        real = EngineLayerTimer::with_timer(
             engine.clone(),
             Timer { warmup: 1, min_samples: 4, max_samples: 10, cv_target: 0.15 },
         );
@@ -198,7 +198,7 @@ fn cmd_rank_search(args: &Args) -> Result<()> {
     println!(
         "Algorithm 1 on {} ({} timing):",
         arch.name,
-        if args.bool("real") { "XLA:CPU" } else { "analytic" }
+        if args.bool("real") { engine.platform() } else { "analytic".to_string() }
     );
     let (decisions, plan) = optimize_model(timer, &arch, &cfg, |d| {
         println!(

@@ -1,17 +1,19 @@
 //! Artifact library: loads the python-AOT HLO-text modules + weights per
 //! `artifacts/manifest.json` and wraps them as runnable forward/train units.
 //!
-//! This is the production path of the three-layer architecture: python
-//! lowered the L2 jax model (with L1 pallas kernels inlined) once at build
-//! time; here rust compiles the HLO with PJRT and keeps every weight
-//! resident on device.
-
+//! This is the PJRT production path of the three-layer architecture:
+//! python lowered the L2 jax model (with L1 pallas kernels inlined) once at
+//! build time; here rust compiles the HLO and keeps every weight resident
+//! on device. Compiling HLO text requires the `xla-pjrt` backend; on the
+//! native backend loading reports a descriptive error and callers fall
+//! back to `runtime::netbuilder` synthetic models (the integration tests
+//! do exactly that).
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::{Engine, Executable, HostTensor};
+use super::{Buffer, Engine, Executable, HostTensor};
 use crate::decompose::{plan_from_json, Plan};
 use crate::util::json::Json;
 
@@ -67,8 +69,10 @@ fn parse_params(root: &Path, j: &Json) -> Result<Vec<ParamEntry>> {
 impl ArtifactLibrary {
     pub fn load(root: impl AsRef<Path>) -> Result<ArtifactLibrary> {
         let root = root.as_ref().to_path_buf();
-        let manifest = Json::parse_file(&root.join("manifest.json"))
-            .context("artifacts/manifest.json missing — run `make artifacts` first")?;
+        let manifest = Json::parse_file(&root.join("manifest.json")).context(
+            "artifacts/manifest.json missing — run \
+             `python python/compile/aot.py --out rust/artifacts` first",
+        )?;
         let mut specs = Vec::new();
         for e in manifest.get("artifacts")?.arr()? {
             specs.push(ArtifactSpec {
@@ -128,7 +132,7 @@ pub fn read_f32_bin(path: &Path, expect_len: usize) -> Result<Vec<f32>> {
         .collect())
 }
 
-fn upload_params(engine: &Engine, entries: &[ParamEntry]) -> Result<Vec<xla::PjRtBuffer>> {
+fn upload_params(engine: &Engine, entries: &[ParamEntry]) -> Result<Vec<Buffer>> {
     entries
         .iter()
         .map(|p| {
@@ -143,11 +147,11 @@ fn upload_params(engine: &Engine, entries: &[ParamEntry]) -> Result<Vec<xla::PjR
 // Forward artifacts
 // --------------------------------------------------------------------------
 
-/// A compiled forward artifact with weights resident on device.
+/// A compiled forward artifact with weights resident on the backend.
 pub struct ForwardModel {
     pub spec: ArtifactSpec,
     exe: Executable,
-    weights: Vec<xla::PjRtBuffer>,
+    weights: Vec<Buffer>,
     engine: Engine,
 }
 
@@ -203,17 +207,16 @@ impl ForwardModel {
         }
         let xb = self.engine.upload(&x.data, &x.dims)?;
         let out = self.infer_buffer(&xb)?;
-        let lit = out.to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // jax modules are lowered with return_tuple=True: unwrap the 1-tuple.
-        let mut parts = super::decompose_tuple(lit)?;
-        HostTensor::from_literal(&parts.remove(0))
+        // jax modules are lowered with return_tuple=True: `to_host`
+        // unwraps the 1-tuple.
+        out.to_host()
     }
 
-    /// Device-buffer hot path (used by the coordinator and benches).
-    /// NOTE: the returned buffer is the module's 1-tuple result; callers
-    /// unwrap at host-read time (`decompose_tuple`).
-    pub fn infer_buffer(&self, x: &xla::PjRtBuffer) -> Result<xla::PjRtBuffer> {
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
+    /// Backend-buffer hot path (used by the coordinator and benches).
+    /// NOTE: on PJRT the returned buffer is the module's 1-tuple result;
+    /// callers unwrap at host-read time (`Buffer::to_host`).
+    pub fn infer_buffer(&self, x: &Buffer) -> Result<Buffer> {
+        let mut args: Vec<&Buffer> = Vec::with_capacity(1 + self.weights.len());
         args.extend(self.weights.iter());
         args.push(x);
         let mut outs = self.exe.run_buffers(&args)?;
@@ -254,14 +257,14 @@ impl ForwardModel {
 // --------------------------------------------------------------------------
 
 /// A compiled train-step artifact holding the full optimizer state on
-/// device: trainable params, frozen params, momentum velocities.
+/// the backend: trainable params, frozen params, momentum velocities.
 /// Each `step` feeds buffers back in — python is long gone.
 pub struct TrainSession {
     pub spec: ArtifactSpec,
     exe: Executable,
-    trainable: Vec<xla::PjRtBuffer>,
-    frozen: Vec<xla::PjRtBuffer>,
-    velocity: Vec<xla::PjRtBuffer>,
+    trainable: Vec<Buffer>,
+    frozen: Vec<Buffer>,
+    velocity: Vec<Buffer>,
     engine: Engine,
     pub steps_done: usize,
 }
@@ -279,7 +282,8 @@ impl TrainSession {
             .iter()
             .map(|p| {
                 let n: usize = p.shape.iter().product();
-                engine.upload(&vec![0f32; n], &p.shape)
+                let zeros = vec![0f32; n];
+                engine.upload(&zeros, &p.shape)
             })
             .collect::<Result<Vec<_>>>()?;
         Ok(TrainSession {
@@ -301,7 +305,7 @@ impl TrainSession {
         params: &crate::decompose::params::Params,
     ) -> Result<TrainSession> {
         let mut sess = TrainSession::load(engine, spec)?;
-        let upload = |entries: &[ParamEntry]| -> Result<Vec<xla::PjRtBuffer>> {
+        let upload = |entries: &[ParamEntry]| -> Result<Vec<Buffer>> {
             entries
                 .iter()
                 .map(|p| {
@@ -330,10 +334,10 @@ impl TrainSession {
             .zip(self.trainable.iter())
             .chain(self.spec.frozen_params.iter().zip(self.frozen.iter()))
         {
-            let lit = buf
-                .to_literal_sync()
-                .map_err(|e| anyhow!("download {}: {e:?}", entry.name))?;
-            out.insert(entry.name.clone(), HostTensor::from_literal(&lit)?);
+            let t = buf
+                .to_host()
+                .map_err(|e| anyhow!("download {}: {e:#}", entry.name))?;
+            out.insert(entry.name.clone(), t);
         }
         Ok(out)
     }
@@ -348,10 +352,9 @@ impl TrainSession {
     ) -> Result<()> {
         for (i, entry) in self.spec.params.clone().iter().enumerate() {
             let Some(mask) = masks.get(&entry.name) else { continue };
-            let lit = self.trainable[i]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("download {}: {e:?}", entry.name))?;
-            let mut t = HostTensor::from_literal(&lit)?;
+            let mut t = self.trainable[i]
+                .to_host()
+                .map_err(|e| anyhow!("download {}: {e:#}", entry.name))?;
             let span: usize = t.dims.iter().skip(1).product();
             if mask.len() != t.dims[0] {
                 bail!("{}: mask len {} vs dim0 {}", entry.name, mask.len(), t.dims[0]);
@@ -383,19 +386,19 @@ impl TrainSession {
         let xb = self.engine.upload(x, &[b, 3, hw, hw])?;
         let yb = self.engine.upload_i32(y, &[b])?;
         let nt = self.trainable.len();
-        let mut args: Vec<&xla::PjRtBuffer> =
+        let mut args: Vec<&Buffer> =
             Vec::with_capacity(2 * nt + self.frozen.len() + 2);
         args.extend(self.trainable.iter());
         args.extend(self.frozen.iter());
         args.extend(self.velocity.iter());
         args.push(&xb);
         args.push(&yb);
-        // jax returns a single tuple buffer; decompose on host is wasteful,
-        // so the AOT module was lowered with return_tuple=True and PJRT
-        // "untuples" the result automatically into separate buffers.
+        // The AOT module was lowered with return_tuple=True; PJRT usually
+        // "untuples" the result into separate buffers, otherwise we pull
+        // the single tuple to the host and re-upload the state.
         let outs = self.exe.run_buffers(&args)?;
         if outs.len() == 2 * nt + 2 {
-            // tuple already flattened by PJRT
+            // tuple already flattened by the backend
             let mut it = outs.into_iter();
             self.trainable = (&mut it).take(nt).collect();
             self.velocity = (&mut it).take(nt).collect();
@@ -407,32 +410,30 @@ impl TrainSession {
             Ok((loss, acc))
         } else {
             // single tuple buffer: pull to host and re-upload state
-            let lit = outs[0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-            let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+            let parts = outs[0].to_host_all()?;
             if parts.len() != 2 * nt + 2 {
                 bail!("train step returned {} outputs, expected {}", parts.len(), 2 * nt + 2);
             }
             for (i, part) in parts.iter().take(nt).enumerate() {
-                let t = HostTensor::from_literal(part)?;
-                self.trainable[i] = self.engine.upload(&t.data, &t.dims)?;
+                self.trainable[i] = self.engine.upload(&part.data, &part.dims)?;
             }
             for (i, part) in parts.iter().skip(nt).take(nt).enumerate() {
-                let t = HostTensor::from_literal(part)?;
-                self.velocity[i] = self.engine.upload(&t.data, &t.dims)?;
+                self.velocity[i] = self.engine.upload(&part.data, &part.dims)?;
             }
-            let loss = HostTensor::from_literal(&parts[2 * nt])?.data[0];
-            let acc = HostTensor::from_literal(&parts[2 * nt + 1])?.data[0];
+            let loss = parts[2 * nt].data[0];
+            let acc = parts[2 * nt + 1].data[0];
             self.steps_done += 1;
             Ok((loss, acc))
         }
     }
 }
 
-fn scalar_f32(buf: &xla::PjRtBuffer) -> Result<f32> {
-    let lit = buf.to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
-    lit.get_first_element::<f32>().map_err(|e| anyhow!("scalar: {e:?}"))
+fn scalar_f32(buf: &Buffer) -> Result<f32> {
+    let t = buf.to_host()?;
+    t.data
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty scalar buffer"))
 }
 
 #[cfg(test)]
@@ -496,6 +497,22 @@ mod tests {
         std::fs::write(&f, [0u8; 8]).unwrap();
         assert!(read_f32_bin(&f, 2).is_ok());
         assert!(read_f32_bin(&f, 3).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn forward_model_load_fails_cleanly_on_native_backend() {
+        // On the native backend the HLO path must error descriptively, not
+        // panic — this is the signal the integration tests use to fall
+        // back to netbuilder synthetic models.
+        let dir = std::env::temp_dir().join(format!("lrdx_native_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let lib = ArtifactLibrary::load(&dir).unwrap();
+        let spec = lib.find("m1").unwrap();
+        let engine = Engine::native();
+        let err = ForwardModel::load(&engine, spec).err().expect("must fail");
+        assert!(format!("{err:#}").contains("xla-pjrt"));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

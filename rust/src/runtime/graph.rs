@@ -1,0 +1,479 @@
+//! Backend-neutral tensor-graph IR.
+//!
+//! `GraphBuilder`/`Op` mirror the small slice of the XlaBuilder API the
+//! layer factory and netbuilder need (pad/slice/concat/dot_general/
+//! transpose/broadcast/reduce + elementwise), with eager shape inference so
+//! construction errors surface at build time on every backend. A finished
+//! `Graph` is a flat, topologically-ordered node list that the `native`
+//! interpreter executes directly and the `xla-pjrt` backend translates
+//! 1:1 into an XlaBuilder computation.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+/// Index of a node inside its graph (nodes are append-only, so every
+/// node's inputs precede it — the node list is already a schedule).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct NodeId(pub usize);
+
+/// One operation. Output shape lives on the `Node`, not the op.
+#[derive(Clone, Debug)]
+pub enum OpKind {
+    /// Positional input `index` (the execute-time argument order).
+    Parameter { index: usize, name: String },
+    /// f32 scalar constant.
+    ConstScalar { value: f32 },
+    /// Scalar broadcast to the node's output shape.
+    Broadcast,
+    /// Map operand axis `i` to output axis `mapping[i]`; other output axes
+    /// are broadcast.
+    BroadcastInDim { mapping: Vec<usize> },
+    /// Concatenate all inputs along `dim`.
+    Concat { dim: usize },
+    /// Strided slice `start..stop` (exclusive) along `dim`.
+    Slice { dim: usize, start: usize, stop: usize, stride: usize },
+    Reshape,
+    /// Output axis `i` takes operand axis `perm[i]` (XLA convention).
+    Transpose { perm: Vec<usize> },
+    /// Contract `lhs_contract` dims of input 0 with `rhs_contract` dims of
+    /// input 1; output = lhs free dims ++ rhs free dims (no batch dims).
+    DotGeneral { lhs_contract: Vec<usize>, rhs_contract: Vec<usize> },
+    Add,
+    Mul,
+    /// Elementwise max (scalar operand broadcasts).
+    Max,
+    /// Mean over `dims`, which are removed from the shape.
+    ReduceMean { dims: Vec<usize> },
+    Sqrt,
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: OpKind,
+    pub inputs: Vec<NodeId>,
+    pub dims: Vec<usize>,
+}
+
+/// A finished computation: immutable, `Send`, backend-neutral.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    /// Number of `Parameter` nodes; their `index` fields cover 0..n_params.
+    pub n_params: usize,
+    pub root: NodeId,
+}
+
+impl Graph {
+    /// Shapes of the parameters in positional order.
+    pub fn param_dims(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.n_params];
+        for node in &self.nodes {
+            if let OpKind::Parameter { index, .. } = &node.op {
+                out[*index] = node.dims.clone();
+            }
+        }
+        out
+    }
+}
+
+struct Inner {
+    name: String,
+    nodes: Vec<Node>,
+    param_indices: Vec<usize>,
+}
+
+/// Graph under construction. Cheap to clone (shared handle).
+#[derive(Clone)]
+pub struct GraphBuilder {
+    inner: Rc<RefCell<Inner>>,
+}
+
+/// Handle to a node of a builder (the XlaOp analogue).
+#[derive(Clone)]
+pub struct Op {
+    builder: GraphBuilder,
+    id: NodeId,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> GraphBuilder {
+        GraphBuilder {
+            inner: Rc::new(RefCell::new(Inner {
+                name: name.to_string(),
+                nodes: Vec::new(),
+                param_indices: Vec::new(),
+            })),
+        }
+    }
+
+    fn push(&self, op: OpKind, inputs: Vec<NodeId>, dims: Vec<usize>) -> Op {
+        let mut inner = self.inner.borrow_mut();
+        inner.nodes.push(Node { op, inputs, dims });
+        Op { builder: self.clone(), id: NodeId(inner.nodes.len() - 1) }
+    }
+
+    fn dims_of(&self, id: NodeId) -> Vec<usize> {
+        self.inner.borrow().nodes[id.0].dims.clone()
+    }
+
+    /// Declare positional input `index` with the given shape.
+    pub fn parameter(&self, index: usize, dims: &[usize], name: &str) -> Result<Op> {
+        {
+            let inner = self.inner.borrow();
+            if inner.param_indices.contains(&index) {
+                bail!("{}: duplicate parameter index {index}", inner.name);
+            }
+        }
+        self.inner.borrow_mut().param_indices.push(index);
+        Ok(self.push(
+            OpKind::Parameter { index, name: name.to_string() },
+            vec![],
+            dims.to_vec(),
+        ))
+    }
+
+    /// f32 scalar constant (shape `[]`).
+    pub fn c0(&self, value: f32) -> Result<Op> {
+        Ok(self.push(OpKind::ConstScalar { value }, vec![], vec![]))
+    }
+
+    /// Finalize: validate the parameter list and freeze the node list.
+    pub fn build(&self, root: &Op) -> Result<Graph> {
+        if !Rc::ptr_eq(&self.inner, &root.builder.inner) {
+            bail!("build: root op belongs to a different builder");
+        }
+        let inner = self.inner.borrow();
+        let n_params = inner.param_indices.len();
+        let mut seen = vec![false; n_params];
+        for &i in &inner.param_indices {
+            if i >= n_params {
+                bail!(
+                    "{}: parameter indices not contiguous (index {i}, {n_params} params)",
+                    inner.name
+                );
+            }
+            seen[i] = true;
+        }
+        if seen.iter().any(|s| !s) {
+            bail!("{}: parameter indices not contiguous", inner.name);
+        }
+        Ok(Graph {
+            name: inner.name.clone(),
+            nodes: inner.nodes.clone(),
+            n_params,
+            root: root.id,
+        })
+    }
+}
+
+fn product(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+impl Op {
+    pub fn dims(&self) -> Vec<usize> {
+        self.builder.dims_of(self.id)
+    }
+
+    fn same_builder(&self, other: &Op, what: &str) -> Result<()> {
+        if !Rc::ptr_eq(&self.builder.inner, &other.builder.inner) {
+            bail!("{what}: operands belong to different builders");
+        }
+        Ok(())
+    }
+
+    /// Broadcast a scalar to `dims`.
+    pub fn broadcast(&self, dims: &[usize]) -> Result<Op> {
+        let d = self.dims();
+        if !d.is_empty() {
+            bail!("broadcast: operand must be scalar, got {d:?}");
+        }
+        Ok(self.builder.push(OpKind::Broadcast, vec![self.id], dims.to_vec()))
+    }
+
+    /// XLA `BroadcastInDim`: operand axis `i` maps to output axis
+    /// `mapping[i]`; sizes must match along mapped axes.
+    pub fn broadcast_in_dim(&self, out_dims: &[usize], mapping: &[usize]) -> Result<Op> {
+        let d = self.dims();
+        if mapping.len() != d.len() {
+            bail!("broadcast_in_dim: {} axes mapped for operand {d:?}", mapping.len());
+        }
+        for (i, &m) in mapping.iter().enumerate() {
+            if m >= out_dims.len() {
+                bail!("broadcast_in_dim: axis map {m} out of range for {out_dims:?}");
+            }
+            if d[i] != out_dims[m] {
+                bail!(
+                    "broadcast_in_dim: operand axis {i} ({}) != output axis {m} ({})",
+                    d[i],
+                    out_dims[m]
+                );
+            }
+        }
+        Ok(self.builder.push(
+            OpKind::BroadcastInDim { mapping: mapping.to_vec() },
+            vec![self.id],
+            out_dims.to_vec(),
+        ))
+    }
+
+    /// Concatenate `self` followed by `others` along `dim`.
+    pub fn concat_in_dim(&self, others: &[Op], dim: usize) -> Result<Op> {
+        let mut dims = self.dims();
+        if dim >= dims.len() {
+            bail!("concat: dim {dim} out of range for {dims:?}");
+        }
+        let mut inputs = vec![self.id];
+        for o in others {
+            self.same_builder(o, "concat")?;
+            let od = o.dims();
+            if od.len() != dims.len() {
+                bail!("concat: rank mismatch {dims:?} vs {od:?}");
+            }
+            for a in 0..dims.len() {
+                if a != dim && od[a] != dims[a] {
+                    bail!("concat: shape mismatch on axis {a}: {dims:?} vs {od:?}");
+                }
+            }
+            dims[dim] += od[dim];
+            inputs.push(o.id);
+        }
+        Ok(self.builder.push(OpKind::Concat { dim }, inputs, dims))
+    }
+
+    /// Strided slice `start..stop` (stop exclusive) along `dim`.
+    pub fn slice_in_dim(
+        &self,
+        start: usize,
+        stop: usize,
+        stride: usize,
+        dim: usize,
+    ) -> Result<Op> {
+        let d = self.dims();
+        if dim >= d.len() {
+            bail!("slice: dim {dim} out of range for {d:?}");
+        }
+        if stride == 0 || start >= stop || stop > d[dim] {
+            bail!("slice: bad range {start}..{stop} step {stride} on axis {dim} of {d:?}");
+        }
+        let count = (stop - start).div_ceil(stride);
+        let mut dims = d;
+        dims[dim] = count;
+        Ok(self
+            .builder
+            .push(OpKind::Slice { dim, start, stop, stride }, vec![self.id], dims))
+    }
+
+    /// Stride-1 slice.
+    pub fn slice_in_dim1(&self, start: usize, stop: usize, dim: usize) -> Result<Op> {
+        self.slice_in_dim(start, stop, 1, dim)
+    }
+
+    pub fn reshape(&self, dims: &[usize]) -> Result<Op> {
+        let d = self.dims();
+        if product(&d) != product(dims) {
+            bail!("reshape: {d:?} -> {dims:?} changes element count");
+        }
+        Ok(self.builder.push(OpKind::Reshape, vec![self.id], dims.to_vec()))
+    }
+
+    /// Output axis `i` takes operand axis `perm[i]`.
+    pub fn transpose(&self, perm: &[usize]) -> Result<Op> {
+        let d = self.dims();
+        if perm.len() != d.len() {
+            bail!("transpose: perm {perm:?} for shape {d:?}");
+        }
+        let mut seen = vec![false; d.len()];
+        let mut dims = Vec::with_capacity(d.len());
+        for &p in perm {
+            if p >= d.len() || seen[p] {
+                bail!("transpose: invalid perm {perm:?} for shape {d:?}");
+            }
+            seen[p] = true;
+            dims.push(d[p]);
+        }
+        Ok(self
+            .builder
+            .push(OpKind::Transpose { perm: perm.to_vec() }, vec![self.id], dims))
+    }
+
+    /// General contraction (no batch dims): output shape is the lhs free
+    /// dims followed by the rhs free dims, both in operand order.
+    pub fn dot_general(
+        &self,
+        rhs: &Op,
+        lhs_contract: &[usize],
+        rhs_contract: &[usize],
+    ) -> Result<Op> {
+        self.same_builder(rhs, "dot_general")?;
+        let (ld, rd) = (self.dims(), rhs.dims());
+        if lhs_contract.len() != rhs_contract.len() {
+            bail!("dot_general: contract arity mismatch");
+        }
+        for (&lc, &rc) in lhs_contract.iter().zip(rhs_contract.iter()) {
+            if lc >= ld.len() || rc >= rd.len() {
+                bail!("dot_general: contract dim out of range ({ld:?} x {rd:?})");
+            }
+            if ld[lc] != rd[rc] {
+                bail!(
+                    "dot_general: contracted extents differ: lhs[{lc}]={} rhs[{rc}]={}",
+                    ld[lc],
+                    rd[rc]
+                );
+            }
+        }
+        let mut dims = Vec::new();
+        for (i, &e) in ld.iter().enumerate() {
+            if !lhs_contract.contains(&i) {
+                dims.push(e);
+            }
+        }
+        for (i, &e) in rd.iter().enumerate() {
+            if !rhs_contract.contains(&i) {
+                dims.push(e);
+            }
+        }
+        Ok(self.builder.push(
+            OpKind::DotGeneral {
+                lhs_contract: lhs_contract.to_vec(),
+                rhs_contract: rhs_contract.to_vec(),
+            },
+            vec![self.id, rhs.id],
+            dims,
+        ))
+    }
+
+    fn binary(&self, other: &Op, op: OpKind, what: &str) -> Result<Op> {
+        self.same_builder(other, what)?;
+        let (a, b) = (self.dims(), other.dims());
+        let dims = if a == b {
+            a
+        } else if a.is_empty() {
+            b
+        } else if b.is_empty() {
+            a
+        } else {
+            bail!("{what}: shape mismatch {a:?} vs {b:?} (only scalar broadcast supported)");
+        };
+        Ok(self.builder.push(op, vec![self.id, other.id], dims))
+    }
+
+    pub fn max(&self, other: &Op) -> Result<Op> {
+        self.binary(other, OpKind::Max, "max")
+    }
+
+    /// Mean over `dims` (removed from the shape; keep_dims unsupported).
+    pub fn reduce_mean(&self, dims: &[usize], keep_dims: bool) -> Result<Op> {
+        if keep_dims {
+            bail!("reduce_mean: keep_dims not supported");
+        }
+        let d = self.dims();
+        let mut out = Vec::new();
+        for (i, &e) in d.iter().enumerate() {
+            if !dims.contains(&i) {
+                out.push(e);
+            }
+        }
+        for &r in dims {
+            if r >= d.len() {
+                bail!("reduce_mean: dim {r} out of range for {d:?}");
+            }
+        }
+        Ok(self
+            .builder
+            .push(OpKind::ReduceMean { dims: dims.to_vec() }, vec![self.id], out))
+    }
+
+    pub fn sqrt(&self) -> Result<Op> {
+        let dims = self.dims();
+        Ok(self.builder.push(OpKind::Sqrt, vec![self.id], dims))
+    }
+}
+
+impl std::ops::Add for Op {
+    type Output = Result<Op>;
+    fn add(self, rhs: Op) -> Result<Op> {
+        self.binary(&rhs, OpKind::Add, "add")
+    }
+}
+
+impl std::ops::Mul for Op {
+    type Output = Result<Op>;
+    fn mul(self, rhs: Op) -> Result<Op> {
+        self.binary(&rhs, OpKind::Mul, "mul")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_inference_conv_style() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[2, 3, 8, 8], "x").unwrap();
+        // strided window slice: start 1, stop 8, stride 2 -> ceil(7/2) = 4
+        let s = x.slice_in_dim(1, 8, 2, 2).unwrap();
+        assert_eq!(s.dims(), vec![2, 3, 4, 8]);
+        let t = s.transpose(&[1, 0, 2, 3]).unwrap();
+        assert_eq!(t.dims(), vec![3, 2, 4, 8]);
+        let w = b.parameter(1, &[5, 3], "w").unwrap();
+        // [5,3] x [3,2,4,8] contracting 3 -> [5,2,4,8]
+        let d = w.dot_general(&t, &[1], &[0]).unwrap();
+        assert_eq!(d.dims(), vec![5, 2, 4, 8]);
+        let m = d.reduce_mean(&[2, 3], false).unwrap();
+        assert_eq!(m.dims(), vec![5, 2]);
+    }
+
+    #[test]
+    fn concat_and_broadcast_shapes() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[1, 2, 4, 4], "x").unwrap();
+        let pad = b.c0(0.0).unwrap().broadcast(&[1, 2, 1, 4]).unwrap();
+        let y = pad.concat_in_dim(&[x.clone(), pad.clone()], 2).unwrap();
+        assert_eq!(y.dims(), vec![1, 2, 6, 4]);
+        let g = b.parameter(1, &[2], "g").unwrap();
+        let gb = g.broadcast_in_dim(&[1, 2, 6, 4], &[1]).unwrap();
+        let prod = (y * gb).unwrap();
+        assert_eq!(prod.dims(), vec![1, 2, 6, 4]);
+    }
+
+    #[test]
+    fn invalid_shapes_rejected() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[2, 3], "x").unwrap();
+        assert!(x.reshape(&[7]).is_err());
+        assert!(x.transpose(&[0, 0]).is_err());
+        assert!(x.slice_in_dim(2, 2, 1, 0).is_err());
+        let y = b.parameter(1, &[3, 2], "y").unwrap();
+        assert!((x.clone() + y.clone()).is_err());
+        assert!(x.dot_general(&y, &[0], &[0]).is_err()); // 2 != 3
+    }
+
+    #[test]
+    fn build_validates_parameters() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[2], "x").unwrap();
+        assert!(b.parameter(0, &[2], "dup").is_err());
+        let g = b.build(&x).unwrap();
+        assert_eq!(g.n_params, 1);
+        assert_eq!(g.param_dims(), vec![vec![2]]);
+
+        let b2 = GraphBuilder::new("gap");
+        let y = b2.parameter(3, &[1], "y").unwrap();
+        assert!(b2.build(&y).is_err(), "non-contiguous parameter indices");
+    }
+
+    #[test]
+    fn cross_builder_ops_rejected() {
+        let b1 = GraphBuilder::new("a");
+        let b2 = GraphBuilder::new("b");
+        let x = b1.parameter(0, &[2], "x").unwrap();
+        let y = b2.parameter(0, &[2], "y").unwrap();
+        assert!((x.clone() + y).is_err());
+        assert!(b2.build(&x).is_err());
+    }
+}

@@ -1,31 +1,29 @@
-//! XlaBuilder layer factory: constructs the computations of single layers
+//! Graph-IR layer factory: constructs the computations of single layers
 //! (original / SVD / Tucker / branched / merged) at ANY rank directly in
 //! rust, so the Algorithm 1 rank search and the Fig. 2/5 sweeps run with
 //! zero python involvement and an executable cache keyed by configuration.
+//! The graphs compile on every `runtime::Backend` (native CPU by default,
+//! XLA:CPU under `--features xla-pjrt`).
 //!
 //! Convolution strategy mirrors the L1 Pallas kernel (DESIGN.md
 //! §Hardware-Adaptation): pad, then k x k shifted strided slices, each
 //! contracted with the corresponding weight plane via `dot_general` — the
 //! same arithmetic as im2col without materialising the im2col matrix. The
-//! builder has no conv primitive, so this *is* our conv lowering.
+//! IR has no conv primitive, so this *is* our conv lowering.
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
-use super::{Engine, Executable};
+use super::graph::{Graph, GraphBuilder, Op};
+use super::{Buffer, Engine, Executable};
 use crate::decompose::rank_opt::LayerTimer;
 use crate::decompose::Scheme;
 use crate::model::ConvSite;
 use crate::profiler::Timer;
 use crate::util::rng::Rng;
 
-type B = xla::XlaBuilder;
-type Op = xla::XlaOp;
-
-fn err(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e:?}")
-}
+type B = GraphBuilder;
 
 // --------------------------------------------------------------------------
 // Op library (shared with netbuilder)
@@ -37,18 +35,12 @@ pub fn pad_hw(b: &B, x: &Op, dims: &[usize; 4], p: usize, fill: f32) -> Result<O
         return Ok(x.clone());
     }
     let (n, c, h, w) = (dims[0], dims[1], dims[2], dims[3]);
-    let scalar = b.c0(fill).map_err(err)?;
-    let pad_h = scalar
-        .broadcast(&[n as i64, c as i64, p as i64, w as i64])
-        .map_err(err)?;
-    let x = pad_h
-        .concat_in_dim(&[x.clone(), pad_h.clone()], 2)
-        .map_err(err)?;
+    let scalar = b.c0(fill)?;
+    let pad_h = scalar.broadcast(&[n, c, p, w])?;
+    let x = pad_h.concat_in_dim(&[x.clone(), pad_h.clone()], 2)?;
     let hp = h + 2 * p;
-    let pad_w = scalar
-        .broadcast(&[n as i64, c as i64, hp as i64, p as i64])
-        .map_err(err)?;
-    pad_w.concat_in_dim(&[x, pad_w.clone()], 3).map_err(err)
+    let pad_w = scalar.broadcast(&[n, c, hp, p])?;
+    pad_w.concat_in_dim(&[x, pad_w.clone()], 3)
 }
 
 /// NCHW conv via shifted-slice matmuls. `x`: [N,C,H,W] (already padded),
@@ -73,29 +65,24 @@ pub fn conv2d(
         for kw in 0..k {
             // strided window: [N, C, Ho, Wo]
             let xs = x
-                .slice_in_dim(kh as i64, (kh + (ho - 1) * stride + 1) as i64, stride as i64, 2)
-                .map_err(err)?
-                .slice_in_dim(kw as i64, (kw + (wo - 1) * stride + 1) as i64, stride as i64, 3)
-                .map_err(err)?;
+                .slice_in_dim(kh, kh + (ho - 1) * stride + 1, stride, 2)?
+                .slice_in_dim(kw, kw + (wo - 1) * stride + 1, stride, 3)?;
             // weight plane: [S, C]
             let wk = w
-                .slice_in_dim1(kh as i64, kh as i64 + 1, 2)
-                .map_err(err)?
-                .slice_in_dim1(kw as i64, kw as i64 + 1, 3)
-                .map_err(err)?
-                .reshape(&[s_ch as i64, c as i64])
-                .map_err(err)?;
+                .slice_in_dim1(kh, kh + 1, 2)?
+                .slice_in_dim1(kw, kw + 1, 3)?
+                .reshape(&[s_ch, c])?;
             // [S, C] x [N, C, Ho, Wo] contracting C -> [S, N, Ho, Wo]
-            let contrib = wk.dot_general(&xs, &[1], &[1], &[], &[]).map_err(err)?;
+            let contrib = wk.dot_general(&xs, &[1], &[1])?;
             acc = Some(match acc {
                 None => contrib,
-                Some(a) => (a + contrib).map_err(err)?,
+                Some(a) => (a + contrib)?,
             });
         }
     }
     let snhw = acc.unwrap();
     let _ = n;
-    snhw.transpose(&[1, 0, 2, 3]).map_err(err)
+    snhw.transpose(&[1, 0, 2, 3])
 }
 
 /// 1x1 conv as a channel contraction, with optional spatial stride
@@ -104,15 +91,13 @@ pub fn conv1x1(x: &Op, w: &Op, stride: usize) -> Result<Op> {
     let x = if stride == 1 {
         x.clone()
     } else {
-        let dims = x.dims().map_err(err)?;
-        x.slice_in_dim(0, dims[2] as i64, stride as i64, 2)
-            .map_err(err)?
-            .slice_in_dim(0, dims[3] as i64, stride as i64, 3)
-            .map_err(err)?
+        let dims = x.dims();
+        x.slice_in_dim(0, dims[2], stride, 2)?
+            .slice_in_dim(0, dims[3], stride, 3)?
     };
     // [S, C] x [N, C, H, W] -> [S, N, H, W] -> [N, S, H, W]
-    let out = w.dot_general(&x, &[1], &[1], &[], &[]).map_err(err)?;
-    out.transpose(&[1, 0, 2, 3]).map_err(err)
+    let out = w.dot_general(&x, &[1], &[1])?;
+    out.transpose(&[1, 0, 2, 3])
 }
 
 /// Grouped conv (Fig. 4): per-group channel slabs convolved independently,
@@ -135,34 +120,30 @@ pub fn grouped_conv2d(
     let (cg, sg) = (c / groups, s_ch / groups);
     let mut parts = Vec::with_capacity(groups);
     for g in 0..groups {
-        let xg = x
-            .slice_in_dim1((g * cg) as i64, ((g + 1) * cg) as i64, 1)
-            .map_err(err)?;
-        let wg = w
-            .slice_in_dim1((g * sg) as i64, ((g + 1) * sg) as i64, 0)
-            .map_err(err)?;
+        let xg = x.slice_in_dim1(g * cg, (g + 1) * cg, 1)?;
+        let wg = w.slice_in_dim1(g * sg, (g + 1) * sg, 0)?;
         parts.push(conv2d(b, &xg, &wg, &[n, cg, hp, wp], sg, k, stride)?);
     }
     let first = parts[0].clone();
-    first.concat_in_dim(&parts[1..], 1).map_err(err)
+    first.concat_in_dim(&parts[1..], 1)
 }
 
 /// Per-channel affine (inference-mode BN): `x * g[c] + b[c]`.
 pub fn bn_affine(x: &Op, gamma: &Op, beta: &Op, dims: &[usize; 4]) -> Result<Op> {
-    let out_dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    let g = gamma.broadcast_in_dim(&out_dims, &[1]).map_err(err)?;
-    let bta = beta.broadcast_in_dim(&out_dims, &[1]).map_err(err)?;
-    ((x.clone() * g).map_err(err)? + bta).map_err(err)
+    let out_dims: Vec<usize> = dims.to_vec();
+    let g = gamma.broadcast_in_dim(&out_dims, &[1])?;
+    let bta = beta.broadcast_in_dim(&out_dims, &[1])?;
+    (x.clone() * g)? + bta
 }
 
 /// ReLU: max(x, 0).
 pub fn relu(b: &B, x: &Op) -> Result<Op> {
-    let zero = b.c0(0f32).map_err(err)?;
-    x.max(&zero).map_err(err)
+    let zero = b.c0(0f32)?;
+    x.max(&zero)
 }
 
 /// 3x3/2 max-pool with padding 1 (the ResNet stem pool): -inf pad + shifted
-/// slice max (no reduce_window in this builder).
+/// slice max (no reduce_window in this IR).
 pub fn maxpool_3x3_s2(b: &B, x: &Op, dims: &[usize; 4]) -> Result<Op> {
     let padded = pad_hw(b, x, dims, 1, f32::NEG_INFINITY)?;
     let (hp, wp) = (dims[2] + 2, dims[3] + 2);
@@ -172,13 +153,11 @@ pub fn maxpool_3x3_s2(b: &B, x: &Op, dims: &[usize; 4]) -> Result<Op> {
     for kh in 0..3usize {
         for kw in 0..3usize {
             let xs = padded
-                .slice_in_dim(kh as i64, (kh + (ho - 1) * 2 + 1) as i64, 2, 2)
-                .map_err(err)?
-                .slice_in_dim(kw as i64, (kw + (wo - 1) * 2 + 1) as i64, 2, 3)
-                .map_err(err)?;
+                .slice_in_dim(kh, kh + (ho - 1) * 2 + 1, 2, 2)?
+                .slice_in_dim(kw, kw + (wo - 1) * 2 + 1, 2, 3)?;
             acc = Some(match acc {
                 None => xs,
-                Some(a) => a.max(&xs).map_err(err)?,
+                Some(a) => a.max(&xs)?,
             });
         }
     }
@@ -187,7 +166,7 @@ pub fn maxpool_3x3_s2(b: &B, x: &Op, dims: &[usize; 4]) -> Result<Op> {
 
 /// Global average pool: mean over H, W -> [N, C].
 pub fn gap(x: &Op) -> Result<Op> {
-    x.reduce_mean(&[2, 3], false).map_err(err)
+    x.reduce_mean(&[2, 3], false)
 }
 
 // --------------------------------------------------------------------------
@@ -196,25 +175,20 @@ pub fn gap(x: &Op) -> Result<Op> {
 
 /// Build the computation for one site under one scheme. Parameters:
 /// p0 = input [batch, C, hw, hw], then the weights in scheme order.
-/// Returns (computation, weight shapes in parameter order).
+/// Returns (graph, weight shapes in parameter order).
 pub fn build_layer(
     site: &ConvSite,
     scheme: &Scheme,
     batch: usize,
     hw: usize,
-) -> Result<(xla::XlaComputation, Vec<Vec<usize>>)> {
-    let b = B::new(&format!("{}_{:?}", site.name, scheme_tag(scheme)));
-    let x = b
-        .parameter(0, xla::ElementType::F32, &[batch as i64, site.c as i64, hw as i64, hw as i64], "x")
-        .map_err(err)?;
+) -> Result<(Graph, Vec<Vec<usize>>)> {
+    let b = B::new(&format!("{}_{}", site.name, scheme_tag(scheme)));
+    let x = b.parameter(0, &[batch, site.c, hw, hw], "x")?;
     let dims = [batch, site.c, hw, hw];
     let mut shapes: Vec<Vec<usize>> = Vec::new();
-    let mut pidx = 1i64;
+    let mut pidx = 1usize;
     let mut param = |b: &B, shape: Vec<usize>, name: &str| -> Result<Op> {
-        let dims_i: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        let p = b
-            .parameter(pidx, xla::ElementType::F32, &dims_i, name)
-            .map_err(err)?;
+        let p = b.parameter(pidx, &shape, name)?;
         pidx += 1;
         shapes.push(shape);
         Ok(p)
@@ -245,27 +219,13 @@ pub fn build_layer(
                     // For isolated timing of a merged core we declare the
                     // input at the reduced width instead.
                     let bb = B::new("merged_core");
-                    let x2 = bb
-                        .parameter(
-                            0,
-                            xla::ElementType::F32,
-                            &[batch as i64, ci as i64, hw as i64, hw as i64],
-                            "x",
-                        )
-                        .map_err(err)?;
-                    let w2 = bb
-                        .parameter(
-                            1,
-                            xla::ElementType::F32,
-                            &[co as i64, ci as i64, site.k as i64, site.k as i64],
-                            "w",
-                        )
-                        .map_err(err)?;
+                    let x2 = bb.parameter(0, &[batch, ci, hw, hw], "x")?;
+                    let w2 = bb.parameter(1, &[co, ci, site.k, site.k], "w")?;
                     let pd = [batch, ci, hw + 2 * site.padding, hw + 2 * site.padding];
                     let xp = pad_hw(&bb, &x2, &[batch, ci, hw, hw], site.padding, 0.0)?;
                     let o = conv2d(&bb, &xp, &w2, &pd, co, site.k, site.stride)?;
-                    let comp = bb.build(&o).map_err(err)?;
-                    return Ok((comp, vec![vec![co, ci, site.k, site.k]]));
+                    let graph = bb.build(&o)?;
+                    return Ok((graph, vec![vec![co, ci, site.k, site.k]]));
                 };
                 let xp = pad_hw(&b, &x, &dims, site.padding, 0.0)?;
                 let pd = [batch, ci, hw + 2 * site.padding, hw + 2 * site.padding];
@@ -305,8 +265,8 @@ pub fn build_layer(
         }
         Scheme::MergedInto { .. } => bail!("merged_into sites are timed via their peer"),
     };
-    let comp = b.build(&out).map_err(err)?;
-    Ok((comp, shapes))
+    let graph = b.build(&out)?;
+    Ok((graph, shapes))
 }
 
 fn scheme_tag(s: &Scheme) -> String {
@@ -321,13 +281,14 @@ fn scheme_tag(s: &Scheme) -> String {
 }
 
 // --------------------------------------------------------------------------
-// PJRT-backed LayerTimer with executable + buffer cache
+// Engine-backed LayerTimer with executable + buffer cache
 // --------------------------------------------------------------------------
 
-/// Times layer variants on the real XLA:CPU backend. Compiled executables
+/// Times layer variants on a real `runtime::Engine` (native CPU by
+/// default, XLA:CPU under the `xla-pjrt` feature). Compiled executables
 /// are cached by (site shape, scheme, batch, hw) so Algorithm 1 sweeps and
 /// repeated experiments don't recompile.
-pub struct PjrtLayerTimer {
+pub struct EngineLayerTimer {
     engine: Engine,
     pub timer: Timer,
     cache: HashMap<String, Executable>,
@@ -336,9 +297,9 @@ pub struct PjrtLayerTimer {
     pub cache_hits: usize,
 }
 
-impl PjrtLayerTimer {
-    pub fn new(engine: Engine) -> PjrtLayerTimer {
-        PjrtLayerTimer {
+impl EngineLayerTimer {
+    pub fn new(engine: Engine) -> EngineLayerTimer {
+        EngineLayerTimer {
             engine,
             timer: Timer::quick(),
             cache: HashMap::new(),
@@ -348,8 +309,8 @@ impl PjrtLayerTimer {
         }
     }
 
-    pub fn with_timer(engine: Engine, timer: Timer) -> PjrtLayerTimer {
-        PjrtLayerTimer { timer, ..PjrtLayerTimer::new(engine) }
+    pub fn with_timer(engine: Engine, timer: Timer) -> EngineLayerTimer {
+        EngineLayerTimer { timer, ..EngineLayerTimer::new(engine) }
     }
 
     fn key(site: &ConvSite, scheme: &Scheme, batch: usize, hw: usize) -> String {
@@ -372,12 +333,12 @@ impl PjrtLayerTimer {
         hw: usize,
     ) -> Result<(Executable, Vec<Vec<usize>>)> {
         let key = Self::key(site, scheme, batch, hw);
-        let (comp, shapes) = build_layer(site, scheme, batch, hw)?;
+        let (graph, shapes) = build_layer(site, scheme, batch, hw)?;
         if let Some(exe) = self.cache.get(&key) {
             self.cache_hits += 1;
             return Ok((exe.clone(), shapes));
         }
-        let exe = self.engine.compile_computation(&comp)?;
+        let exe = self.engine.compile(&graph)?;
         self.compiles += 1;
         self.cache.insert(key, exe.clone());
         Ok((exe, shapes))
@@ -400,28 +361,25 @@ impl PjrtLayerTimer {
         let x_host: Vec<f32> = (0..batch * cin * hw * hw)
             .map(|_| self.rng.normal_f32() * 0.1)
             .collect();
-        let mut bufs =
-            vec![self.engine.upload(&x_host, &[batch, cin, hw, hw])?];
+        let mut bufs = vec![self.engine.upload(&x_host, &[batch, cin, hw, hw])?];
         for shp in &shapes {
             let n: usize = shp.iter().product();
             let w = self.rng.he_weights(n, shp.iter().skip(1).product::<usize>().max(1));
             bufs.push(self.engine.upload(&w, shp)?);
         }
-        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let refs: Vec<&Buffer> = bufs.iter().collect();
         let summary = self.timer.measure(|| {
             let out = exe.run_buffers(&refs)?;
-            // Synchronise: bring a scalar-sized view back (cheap but forces
-            // completion of the async PJRT execution).
-            let _ = out[0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("sync: {e:?}"))?;
+            // Synchronise: forces completion of any asynchronous backend
+            // execution before the sample is recorded.
+            out[0].sync()?;
             Ok(())
         })?;
         Ok(summary.trimmed_mean)
     }
 }
 
-impl LayerTimer for PjrtLayerTimer {
+impl LayerTimer for EngineLayerTimer {
     fn time_layer(
         &mut self,
         site: &ConvSite,
@@ -459,21 +417,19 @@ mod tests {
         x: &[f32],
         weights: &[Vec<f32>],
     ) -> Vec<f32> {
-        let eng = Engine::cpu().unwrap();
-        let (comp, shapes) = build_layer(site, scheme, batch, hw).unwrap();
+        let eng = Engine::native();
+        let (graph, shapes) = build_layer(site, scheme, batch, hw).unwrap();
         assert_eq!(shapes.len(), weights.len());
-        let exe = eng.compile_computation(&comp).unwrap();
-        let mut lits = vec![HostTensor::new(vec![batch, site.c, hw, hw], x.to_vec())
-            .to_literal()
-            .unwrap()];
+        let exe = eng.compile(&graph).unwrap();
+        let mut args = vec![HostTensor::new(vec![batch, site.c, hw, hw], x.to_vec())];
         for (shp, w) in shapes.iter().zip(weights.iter()) {
-            lits.push(HostTensor::new(shp.clone(), w.clone()).to_literal().unwrap());
+            args.push(HostTensor::new(shp.clone(), w.clone()));
         }
-        let out = exe.run_literals(&lits).unwrap();
-        HostTensor::from_literal(&out[0]).unwrap().data
+        let out = exe.run_hosts(&args).unwrap();
+        out[0].data.clone()
     }
 
-    /// Reference NCHW conv on the host for cross-checking the builder conv.
+    /// Reference NCHW conv on the host for cross-checking the IR conv.
     fn ref_conv(
         x: &[f32],
         w: &[f32],
@@ -572,38 +528,66 @@ mod tests {
                 }
             }
         }
-        let eng = Engine::cpu().unwrap();
+        let eng = Engine::native();
         let b = B::new("g");
-        let x_op = b
-            .parameter(0, xla::ElementType::F32, &[1, c as i64, h as i64, h as i64], "x")
-            .unwrap();
-        let w_op = b
-            .parameter(
-                1,
-                xla::ElementType::F32,
-                &[s as i64, (c / g) as i64, k as i64, k as i64],
-                "w",
-            )
-            .unwrap();
+        let x_op = b.parameter(0, &[1, c, h, h], "x").unwrap();
+        let w_op = b.parameter(1, &[s, c / g, k, k], "w").unwrap();
         let xp = pad_hw(&b, &x_op, &[1, c, h, h], 1, 0.0).unwrap();
         let o = grouped_conv2d(&b, &xp, &w_op, &[1, c, h + 2, h + 2], s, k, 1, g).unwrap();
-        let exe = eng.compile_computation(&b.build(&o).unwrap()).unwrap();
-        let got = HostTensor::from_literal(
-            &exe.run_literals(&[
-                HostTensor::new(vec![1, c, h, h], x.clone()).to_literal().unwrap(),
-                HostTensor::new(vec![s, c / g, k, k], wg).to_literal().unwrap(),
+        let exe = eng.compile(&b.build(&o).unwrap()).unwrap();
+        let got = exe
+            .run_hosts(&[
+                HostTensor::new(vec![1, c, h, h], x.clone()),
+                HostTensor::new(vec![s, c / g, k, k], wg),
             ])
-            .unwrap()[0],
-        )
-        .unwrap();
+            .unwrap()
+            .remove(0);
         let want = ref_conv(&x, &wd, (n, c, h, h), (s, k, 1, 1));
         crate::util::check::assert_allclose(&got.data, &want, 1e-4, 1e-4);
     }
 
     #[test]
+    fn maxpool_matches_reference() {
+        let (n, c, h) = (1, 2, 6);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..n * c * h * h).map(|_| rng.normal_f32()).collect();
+        let b = B::new("mp");
+        let x_op = b.parameter(0, &[n, c, h, h], "x").unwrap();
+        let o = maxpool_3x3_s2(&b, &x_op, &[n, c, h, h]).unwrap();
+        let exe = Engine::native().compile(&b.build(&o).unwrap()).unwrap();
+        let got = exe
+            .run_hosts(&[HostTensor::new(vec![n, c, h, h], x.clone())])
+            .unwrap()
+            .remove(0);
+        let ho = (h + 2 - 3) / 2 + 1;
+        assert_eq!(got.dims, vec![n, c, ho, ho]);
+        // reference: -inf-padded 3x3/2 max
+        let mut want = vec![f32::NEG_INFINITY; n * c * ho * ho];
+        for ci in 0..c {
+            for oy in 0..ho {
+                for ox in 0..ho {
+                    let mut m = f32::NEG_INFINITY;
+                    for ky in 0..3 {
+                        for kx in 0..3 {
+                            let iy = (oy * 2 + ky) as isize - 1;
+                            let ix = (ox * 2 + kx) as isize - 1;
+                            if iy < 0 || ix < 0 || iy >= h as isize || ix >= h as isize {
+                                continue;
+                            }
+                            m = m.max(x[(ci * h + iy as usize) * h + ix as usize]);
+                        }
+                    }
+                    want[(ci * ho + oy) * ho + ox] = m;
+                }
+            }
+        }
+        crate::util::check::assert_allclose(&got.data, &want, 1e-6, 1e-6);
+    }
+
+    #[test]
     fn timer_caches_executables() {
-        let eng = Engine::cpu().unwrap();
-        let mut t = PjrtLayerTimer::new(eng);
+        let eng = Engine::native();
+        let mut t = EngineLayerTimer::new(eng);
         let s1 = site(8, 8, 3, 1);
         let sch = Scheme::Tucker { r1: 4, r2: 4 };
         t.measure(&s1, &sch, 1, 8).unwrap();

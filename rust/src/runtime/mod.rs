@@ -1,132 +1,37 @@
-//! PJRT runtime: the only layer that talks to XLA.
+//! Execution runtime: pluggable backends behind one `Engine` facade.
 //!
-//! * `Engine` wraps the PJRT CPU client (one per process, `Arc`-shared).
-//! * `Executable` wraps a compiled module with shape metadata and
-//!   buffer-based execution (weights stay on device across calls).
-//! * `artifacts` loads the python-AOT HLO-text artifacts + weights.
-//! * `layer_factory` constructs layer/network computations directly with
-//!   the XlaBuilder — the Algorithm 1 rank search and the fps tables never
-//!   touch python.
+//! * `graph` — backend-neutral tensor IR built by `layer_factory` and
+//!   `netbuilder` (the Algorithm 1 rank search and the fps tables never
+//!   touch python).
+//! * `native` — pure-rust CPU interpreter, the **default** backend: the
+//!   whole request path (register → batch → execute → metrics) runs on
+//!   stock `cargo test` with no external runtime library.
+//! * `xla_backend` (feature `xla-pjrt`) — translates the same IR to
+//!   XlaBuilder computations and compiles python-AOT HLO-text artifacts
+//!   with PJRT; selected with `LRDX_BACKEND=xla`.
+//! * `artifacts` — the python-AOT artifact library (HLO text + weights).
+//!
+//! The `Backend` trait covers engine identity, computation compilation,
+//! buffer upload and execution; everything above it (`coordinator`,
+//! `harness`, `decompose::rank_opt`, the bins and the integration tests)
+//! is backend-agnostic.
 
 pub mod artifacts;
+pub mod graph;
 pub mod layer_factory;
+pub mod native;
 pub mod netbuilder;
+#[cfg(feature = "xla-pjrt")]
+pub mod xla_backend;
 
+use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{bail, Result};
 
-/// Process-wide PJRT engine.
-#[derive(Clone)]
-pub struct Engine {
-    client: Arc<xla::PjRtClient>,
-}
+use graph::Graph;
 
-impl Engine {
-    /// Create a CPU PJRT engine. (GPU/TPU would be a one-line change here;
-    /// everything above this type is backend-agnostic.)
-    pub fn cpu() -> Result<Engine> {
-        let client =
-            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Engine { client: Arc::new(client) })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn client(&self) -> &xla::PjRtClient {
-        &self.client
-    }
-
-    /// Compile an HLO-text file (the python AOT interchange format — see
-    /// `python/compile/aot.py` for why text, not serialized proto).
-    pub fn compile_hlo_text_file(&self, path: &std::path::Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.compile_computation(&comp)
-    }
-
-    pub fn compile_computation(&self, comp: &xla::XlaComputation) -> Result<Executable> {
-        let exe = self
-            .client
-            .compile(comp)
-            .map_err(|e| anyhow!("XLA compile: {e:?}"))?;
-        Ok(Executable { exe: Arc::new(exe), engine: self.clone() })
-    }
-
-    /// Upload an f32 host buffer to the device.
-    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow!("upload {dims:?}: {e:?}"))
-    }
-
-    /// Upload an i32 host buffer to the device.
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
-    }
-}
-
-/// A compiled computation plus conveniences for literal/buffer execution.
-#[derive(Clone)]
-pub struct Executable {
-    exe: Arc<xla::PjRtLoadedExecutable>,
-    engine: Engine,
-}
-
-impl Executable {
-    pub fn engine(&self) -> &Engine {
-        &self.engine
-    }
-
-    /// Execute with on-device buffers (hot path — no host copies).
-    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
-        let mut outs = self
-            .exe
-            .execute_b(args)
-            .map_err(|e| anyhow!("execute_b: {e:?}"))?;
-        Ok(outs.swap_remove(0))
-    }
-
-    /// Execute with host literals (convenience / tests).
-    pub fn run_literals(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let outs = self
-            .exe
-            .execute::<xla::Literal>(args)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let lit = outs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        decompose_tuple(lit)
-    }
-
-    /// Execute with buffers and bring the (tuple) result back to the host.
-    pub fn run_to_host(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
-        let outs = self.run_buffers(args)?;
-        let lit = outs[0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        decompose_tuple(lit)
-    }
-}
-
-/// jax `return_tuple=True` modules return a single tuple literal; builder
-/// modules may return a plain array. Normalise both to a Vec<Literal>.
-pub(crate) fn decompose_tuple(lit: xla::Literal) -> Result<Vec<xla::Literal>> {
-    let shape = lit.shape().map_err(|e| anyhow!("shape: {e:?}"))?;
-    match shape {
-        xla::Shape::Tuple(_) => lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}")),
-        _ => Ok(vec![lit]),
-    }
-}
-
-/// Host-side f32 tensor handed around by the coordinator.
+/// Host-side f32 tensor handed around by the coordinator and the tests.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HostTensor {
     pub dims: Vec<usize>,
@@ -143,60 +48,246 @@ impl HostTensor {
         let n = dims.iter().product();
         HostTensor { dims, data: vec![0.0; n] }
     }
+}
 
-    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
-        let shape = lit.array_shape().map_err(|e| anyhow!("array_shape: {e:?}"))?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-        Ok(HostTensor::new(dims, data))
+/// A device-resident (or, for the native backend, host-resident) buffer.
+/// Cheap to clone: payloads are behind `Arc`s / backend handles.
+#[derive(Clone)]
+pub enum Buffer {
+    F32(Arc<HostTensor>),
+    I32 { dims: Vec<usize>, data: Arc<Vec<i32>> },
+    #[cfg(feature = "xla-pjrt")]
+    Pjrt(Arc<xla::PjRtBuffer>),
+}
+
+impl Buffer {
+    /// Bring the buffer to the host as f32. PJRT 1-tuple results are
+    /// unwrapped to their first element (jax `return_tuple=True` modules).
+    pub fn to_host(&self) -> Result<HostTensor> {
+        let mut parts = self.to_host_all()?;
+        if parts.is_empty() {
+            bail!("buffer decomposed to zero tensors");
+        }
+        Ok(parts.remove(0))
     }
 
-    pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
-        xla::Literal::vec1(&self.data)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("reshape: {e:?}"))
+    /// Host copies of every component (PJRT tuples flatten; native buffers
+    /// are always a single tensor).
+    pub fn to_host_all(&self) -> Result<Vec<HostTensor>> {
+        match self {
+            Buffer::F32(t) => Ok(vec![t.as_ref().clone()]),
+            Buffer::I32 { .. } => bail!("i32 buffer read back as f32"),
+            #[cfg(feature = "xla-pjrt")]
+            Buffer::Pjrt(b) => xla_backend::buffer_to_hosts(b),
+        }
+    }
+
+    /// Force completion of any asynchronous execution producing this
+    /// buffer (native: no-op; PJRT: device-to-host fence). Used by the
+    /// profiler so timed regions include the actual compute.
+    pub fn sync(&self) -> Result<()> {
+        match self {
+            Buffer::F32(_) | Buffer::I32 { .. } => Ok(()),
+            #[cfg(feature = "xla-pjrt")]
+            Buffer::Pjrt(b) => {
+                b.to_literal_sync()
+                    .map_err(|e| anyhow::anyhow!("sync: {e:?}"))
+                    .map(|_| ())
+            }
+        }
+    }
+}
+
+/// One execution backend: engine identity, compilation, upload, execute.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    fn compile_graph(&self, graph: &Graph) -> Result<Arc<dyn BackendExec>>;
+    fn compile_hlo_text_file(&self, path: &Path) -> Result<Arc<dyn BackendExec>>;
+    fn upload(&self, data: &[f32], dims: &[usize]) -> Result<Buffer>;
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer>;
+}
+
+/// A compiled computation, executable over backend buffers.
+pub trait BackendExec {
+    fn execute(&self, args: &[&Buffer]) -> Result<Vec<Buffer>>;
+}
+
+/// Process-facing engine handle (one backend instance, `Arc`-shared).
+///
+/// Backends are not required to be `Send` (PJRT wrapper types hold raw
+/// pointers), so threaded users — the coordinator's worker pool —
+/// construct one `Engine` per thread.
+#[derive(Clone)]
+pub struct Engine {
+    backend: Arc<dyn Backend>,
+}
+
+impl Engine {
+    /// The pure-rust CPU interpreter backend.
+    pub fn native() -> Engine {
+        Engine { backend: Arc::new(native::NativeBackend::new()) }
+    }
+
+    /// The PJRT/XLA backend (feature `xla-pjrt`).
+    #[cfg(feature = "xla-pjrt")]
+    pub fn xla() -> Result<Engine> {
+        Ok(Engine { backend: Arc::new(xla_backend::XlaBackend::cpu()?) })
+    }
+
+    /// Default CPU engine. `LRDX_BACKEND` selects `native` (default) or
+    /// `xla` (requires the `xla-pjrt` feature).
+    pub fn cpu() -> Result<Engine> {
+        let choice = std::env::var("LRDX_BACKEND").unwrap_or_else(|_| "native".to_string());
+        match choice.as_str() {
+            "native" => Ok(Engine::native()),
+            "xla" => Engine::xla_or_unavailable(),
+            other => bail!("unknown LRDX_BACKEND {other:?} (expected \"native\" or \"xla\")"),
+        }
+    }
+
+    #[cfg(feature = "xla-pjrt")]
+    fn xla_or_unavailable() -> Result<Engine> {
+        Engine::xla()
+    }
+
+    #[cfg(not(feature = "xla-pjrt"))]
+    fn xla_or_unavailable() -> Result<Engine> {
+        bail!("LRDX_BACKEND=xla requires building with --features xla-pjrt")
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend.name().to_string()
+    }
+
+    /// Compile a graph-IR computation.
+    pub fn compile(&self, graph: &Graph) -> Result<Executable> {
+        let raw = self.backend.compile_graph(graph)?;
+        Ok(Executable { raw, engine: self.clone() })
+    }
+
+    /// Compile an HLO-text file (the python AOT interchange format — see
+    /// `python/compile/aot.py` for why text, not serialized proto).
+    /// PJRT-only: the native backend reports a descriptive error.
+    pub fn compile_hlo_text_file(&self, path: &Path) -> Result<Executable> {
+        let raw = self.backend.compile_hlo_text_file(path)?;
+        Ok(Executable { raw, engine: self.clone() })
+    }
+
+    /// Upload an f32 host buffer to the backend.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        self.backend.upload(data, dims)
+    }
+
+    /// Upload an i32 host buffer (train-step labels).
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        self.backend.upload_i32(data, dims)
+    }
+}
+
+/// A compiled computation plus conveniences for host/buffer execution.
+#[derive(Clone)]
+pub struct Executable {
+    raw: Arc<dyn BackendExec>,
+    engine: Engine,
+}
+
+impl Executable {
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Execute with backend buffers (hot path — no host copies on PJRT).
+    pub fn run_buffers(&self, args: &[&Buffer]) -> Result<Vec<Buffer>> {
+        self.raw.execute(args)
+    }
+
+    /// Execute with buffers and bring every output to the host (PJRT
+    /// tuple results flatten).
+    pub fn run_to_host(&self, args: &[&Buffer]) -> Result<Vec<HostTensor>> {
+        let outs = self.run_buffers(args)?;
+        let mut hosts = Vec::with_capacity(outs.len());
+        for o in &outs {
+            hosts.extend(o.to_host_all()?);
+        }
+        Ok(hosts)
+    }
+
+    /// Execute with host tensors (convenience / tests).
+    pub fn run_hosts(&self, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let bufs = args
+            .iter()
+            .map(|t| self.engine.upload(&t.data, &t.dims))
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&Buffer> = bufs.iter().collect();
+        self.run_to_host(&refs)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::graph::GraphBuilder;
 
     fn engine() -> Engine {
-        Engine::cpu().expect("cpu engine")
+        Engine::native()
     }
 
     #[test]
     fn builder_roundtrip() {
         let eng = engine();
-        let b = xla::XlaBuilder::new("t");
-        let p = b.parameter(0, xla::ElementType::F32, &[2, 2], "x").unwrap();
+        let b = GraphBuilder::new("t");
+        let p = b.parameter(0, &[2, 2], "x").unwrap();
         let out = (p.clone() + p).unwrap();
-        let comp = b.build(&out).unwrap();
-        let exe = eng.compile_computation(&comp).unwrap();
+        let exe = eng.compile(&b.build(&out).unwrap()).unwrap();
         let x = HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
-        let res = exe.run_literals(&[x.to_literal().unwrap()]).unwrap();
-        let t = HostTensor::from_literal(&res[0]).unwrap();
-        assert_eq!(t.data, vec![2.0, 4.0, 6.0, 8.0]);
+        let res = exe.run_hosts(&[x]).unwrap();
+        assert_eq!(res[0].data, vec![2.0, 4.0, 6.0, 8.0]);
     }
 
     #[test]
     fn buffer_execution() {
         let eng = engine();
-        let b = xla::XlaBuilder::new("t2");
-        let p = b.parameter(0, xla::ElementType::F32, &[4], "x").unwrap();
-        let comp = b.build(&p.sqrt().unwrap()).unwrap();
-        let exe = eng.compile_computation(&comp).unwrap();
+        let b = GraphBuilder::new("t2");
+        let p = b.parameter(0, &[4], "x").unwrap();
+        let exe = eng.compile(&b.build(&p.sqrt().unwrap()).unwrap()).unwrap();
         let buf = eng.upload(&[1.0, 4.0, 9.0, 16.0], &[4]).unwrap();
         let out = exe.run_to_host(&[&buf]).unwrap();
-        let t = HostTensor::from_literal(&out[0]).unwrap();
-        assert_eq!(t.data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(out[0].data, vec![1.0, 2.0, 3.0, 4.0]);
     }
 
     #[test]
     fn host_tensor_shape_checked() {
         let r = std::panic::catch_unwind(|| HostTensor::new(vec![2, 3], vec![0.0; 5]));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn cpu_engine_defaults_to_native() {
+        // Only meaningful when the selector is unset — running the suite
+        // with LRDX_BACKEND=xla is a supported workflow and must not trip
+        // this unrelated assertion.
+        if std::env::var("LRDX_BACKEND").is_err() {
+            let eng = Engine::cpu().unwrap();
+            assert_eq!(eng.platform(), "native-cpu");
+        }
+    }
+
+    #[test]
+    fn hlo_compilation_reports_backend_requirement() {
+        let eng = engine();
+        let err = eng
+            .compile_hlo_text_file(Path::new("nope.hlo.txt"))
+            .err()
+            .expect("native backend cannot compile HLO");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("xla-pjrt"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn i32_upload_and_misuse() {
+        let eng = engine();
+        let b = eng.upload_i32(&[1, 2, 3], &[3]).unwrap();
+        assert!(b.to_host().is_err());
+        assert!(b.sync().is_ok());
     }
 }

@@ -1,0 +1,515 @@
+//! Pure-rust CPU backend: a reference interpreter for the graph IR.
+//!
+//! Executes a `Graph` node-by-node over host `f32` tensors. Contractions
+//! (`DotGeneral`) are lowered to a cache-friendly i-k-j matmul over
+//! permuted operands — the same arithmetic the conv lowering in
+//! `layer_factory` expresses as shifted-slice contractions, so the whole
+//! decomposed/original layer zoo runs hermetically on stock `cargo test`.
+//! Intermediates are freed at their last use, which keeps the resident set
+//! of a deep ResNet forward pass near its widest layer instead of the sum
+//! of all layers.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::graph::{Graph, OpKind};
+use super::{Backend, BackendExec, Buffer, HostTensor};
+
+/// The default engine: interprets graphs on the host CPU.
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native-cpu"
+    }
+
+    fn compile_graph(&self, graph: &Graph) -> Result<Arc<dyn BackendExec>> {
+        Ok(Arc::new(NativeExecutable::new(graph.clone())?))
+    }
+
+    fn compile_hlo_text_file(&self, path: &std::path::Path) -> Result<Arc<dyn BackendExec>> {
+        bail!(
+            "{}: HLO-text artifacts require the PJRT backend — rebuild with \
+             --features xla-pjrt and LRDX_BACKEND=xla (native models are built \
+             via runtime::netbuilder instead)",
+            path.display()
+        )
+    }
+
+    fn upload(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        if dims.iter().product::<usize>() != data.len() {
+            bail!("upload: {} elements for shape {dims:?}", data.len());
+        }
+        Ok(Buffer::F32(Arc::new(HostTensor::new(dims.to_vec(), data.to_vec()))))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        if dims.iter().product::<usize>() != data.len() {
+            bail!("upload_i32: {} elements for shape {dims:?}", data.len());
+        }
+        Ok(Buffer::I32 { dims: dims.to_vec(), data: Arc::new(data.to_vec()) })
+    }
+}
+
+/// A "compiled" graph: node list plus a per-node consumer count used to
+/// free intermediates at their last use.
+pub struct NativeExecutable {
+    graph: Graph,
+    use_counts: Vec<usize>,
+}
+
+impl NativeExecutable {
+    pub fn new(graph: Graph) -> Result<NativeExecutable> {
+        let mut use_counts = vec![0usize; graph.nodes.len()];
+        for node in &graph.nodes {
+            for inp in &node.inputs {
+                use_counts[inp.0] += 1;
+            }
+        }
+        use_counts[graph.root.0] += 1;
+        Ok(NativeExecutable { graph, use_counts })
+    }
+
+    /// Core evaluation over `Arc`'d tensors: parameters are refcount
+    /// bumps, not copies, so the per-call cost is the compute itself —
+    /// important for the layer timer and the fps harness, whose timed
+    /// regions run through here.
+    pub fn run(&self, args: &[Arc<HostTensor>]) -> Result<Arc<HostTensor>> {
+        let g = &self.graph;
+        if args.len() != g.n_params {
+            bail!("{}: {} args, expected {}", g.name, args.len(), g.n_params);
+        }
+        let mut remaining = self.use_counts.clone();
+        let mut values: Vec<Option<Arc<HostTensor>>> = vec![None; g.nodes.len()];
+        for (i, node) in g.nodes.iter().enumerate() {
+            if remaining[i] == 0 {
+                continue; // dead node (e.g. unused parameter)
+            }
+            let out = match &node.op {
+                OpKind::Parameter { index, name } => {
+                    let a = &args[*index];
+                    if a.dims != node.dims {
+                        bail!(
+                            "{}: parameter {index} ({name}) got {:?}, expects {:?}",
+                            g.name,
+                            a.dims,
+                            node.dims
+                        );
+                    }
+                    Arc::clone(a)
+                }
+                op => {
+                    let ins: Vec<&HostTensor> = node
+                        .inputs
+                        .iter()
+                        .map(|id| {
+                            values[id.0]
+                                .as_deref()
+                                .ok_or_else(|| anyhow!("{}: input freed early", g.name))
+                        })
+                        .collect::<Result<_>>()?;
+                    Arc::new(eval_op(op, &ins, &node.dims)?)
+                }
+            };
+            values[i] = Some(out);
+            for inp in &node.inputs {
+                remaining[inp.0] -= 1;
+                if remaining[inp.0] == 0 {
+                    values[inp.0] = None;
+                }
+            }
+        }
+        values[g.root.0]
+            .take()
+            .ok_or_else(|| anyhow!("{}: root value missing", g.name))
+    }
+
+    /// Convenience for tests: borrowed host tensors in, owned tensor out.
+    pub fn execute_hosts(&self, args: &[&HostTensor]) -> Result<HostTensor> {
+        let arcs: Vec<Arc<HostTensor>> =
+            args.iter().map(|t| Arc::new((*t).clone())).collect();
+        let out = self.run(&arcs)?;
+        Ok(Arc::try_unwrap(out).unwrap_or_else(|a| (*a).clone()))
+    }
+}
+
+impl BackendExec for NativeExecutable {
+    fn execute(&self, args: &[&Buffer]) -> Result<Vec<Buffer>> {
+        let arcs: Vec<Arc<HostTensor>> = args
+            .iter()
+            .map(|b| match b {
+                Buffer::F32(t) => Ok(Arc::clone(t)),
+                _ => Err(anyhow!("native backend takes f32 buffers")),
+            })
+            .collect::<Result<_>>()?;
+        Ok(vec![Buffer::F32(self.run(&arcs)?)])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Op kernels
+// ---------------------------------------------------------------------------
+
+fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+fn numel(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+fn eval_op(op: &OpKind, ins: &[&HostTensor], out_dims: &[usize]) -> Result<HostTensor> {
+    let out = match op {
+        OpKind::Parameter { .. } => unreachable!("parameters handled by the driver"),
+        OpKind::ConstScalar { value } => HostTensor::new(vec![], vec![*value]),
+        OpKind::Broadcast => {
+            HostTensor::new(out_dims.to_vec(), vec![ins[0].data[0]; numel(out_dims)])
+        }
+        OpKind::BroadcastInDim { mapping } => broadcast_in_dim(ins[0], out_dims, mapping),
+        OpKind::Concat { dim } => concat(ins, out_dims, *dim),
+        OpKind::Slice { dim, start, stop: _, stride } => {
+            slice(ins[0], out_dims, *dim, *start, *stride)
+        }
+        OpKind::Reshape => HostTensor::new(out_dims.to_vec(), ins[0].data.clone()),
+        OpKind::Transpose { perm } => transpose(ins[0], out_dims, perm),
+        OpKind::DotGeneral { lhs_contract, rhs_contract } => {
+            dot_general(ins[0], ins[1], lhs_contract, rhs_contract, out_dims)?
+        }
+        OpKind::Add => binary(ins[0], ins[1], out_dims, |a, b| a + b)?,
+        OpKind::Mul => binary(ins[0], ins[1], out_dims, |a, b| a * b)?,
+        OpKind::Max => binary(ins[0], ins[1], out_dims, f32::max)?,
+        OpKind::ReduceMean { dims } => reduce_mean(ins[0], out_dims, dims),
+        OpKind::Sqrt => HostTensor::new(
+            out_dims.to_vec(),
+            ins[0].data.iter().map(|x| x.sqrt()).collect(),
+        ),
+    };
+    Ok(out)
+}
+
+fn broadcast_in_dim(x: &HostTensor, out_dims: &[usize], mapping: &[usize]) -> HostTensor {
+    let out_strides = strides(out_dims);
+    let in_strides = strides(&x.dims);
+    let n = numel(out_dims);
+    let mut data = vec![0f32; n];
+    for (flat, slot) in data.iter_mut().enumerate() {
+        let mut src = 0usize;
+        for (axis_in, &axis_out) in mapping.iter().enumerate() {
+            let coord = (flat / out_strides[axis_out]) % out_dims[axis_out];
+            src += coord * in_strides[axis_in];
+        }
+        *slot = x.data[src];
+    }
+    HostTensor::new(out_dims.to_vec(), data)
+}
+
+fn concat(ins: &[&HostTensor], out_dims: &[usize], dim: usize) -> HostTensor {
+    let outer: usize = out_dims[..dim].iter().product();
+    let inner: usize = out_dims[dim + 1..].iter().product();
+    let total = out_dims[dim];
+    let mut data = vec![0f32; numel(out_dims)];
+    let mut offset = 0usize; // running position along the concat axis
+    for t in ins {
+        let mid = t.dims[dim];
+        for o in 0..outer {
+            let src = &t.data[o * mid * inner..(o + 1) * mid * inner];
+            let dst_base = (o * total + offset) * inner;
+            data[dst_base..dst_base + mid * inner].copy_from_slice(src);
+        }
+        offset += mid;
+    }
+    HostTensor::new(out_dims.to_vec(), data)
+}
+
+fn slice(
+    x: &HostTensor,
+    out_dims: &[usize],
+    dim: usize,
+    start: usize,
+    stride: usize,
+) -> HostTensor {
+    let outer: usize = x.dims[..dim].iter().product();
+    let mid_in = x.dims[dim];
+    let inner: usize = x.dims[dim + 1..].iter().product();
+    let mid_out = out_dims[dim];
+    let mut data = vec![0f32; numel(out_dims)];
+    for o in 0..outer {
+        for m in 0..mid_out {
+            let src = (o * mid_in + start + m * stride) * inner;
+            let dst = (o * mid_out + m) * inner;
+            data[dst..dst + inner].copy_from_slice(&x.data[src..src + inner]);
+        }
+    }
+    HostTensor::new(out_dims.to_vec(), data)
+}
+
+fn transpose(x: &HostTensor, out_dims: &[usize], perm: &[usize]) -> HostTensor {
+    let in_strides = strides(&x.dims);
+    let out_strides = strides(out_dims);
+    let n = numel(out_dims);
+    let mut data = vec![0f32; n];
+    for (flat, slot) in data.iter_mut().enumerate() {
+        let mut src = 0usize;
+        for (axis_out, &axis_in) in perm.iter().enumerate() {
+            let coord = (flat / out_strides[axis_out]) % out_dims[axis_out];
+            src += coord * in_strides[axis_in];
+        }
+        *slot = x.data[src];
+    }
+    HostTensor::new(out_dims.to_vec(), data)
+}
+
+fn binary(
+    a: &HostTensor,
+    b: &HostTensor,
+    out_dims: &[usize],
+    f: impl Fn(f32, f32) -> f32,
+) -> Result<HostTensor> {
+    let data = if a.dims == b.dims {
+        a.data.iter().zip(b.data.iter()).map(|(&x, &y)| f(x, y)).collect()
+    } else if a.dims.is_empty() {
+        let s = a.data[0];
+        b.data.iter().map(|&y| f(s, y)).collect()
+    } else if b.dims.is_empty() {
+        let s = b.data[0];
+        a.data.iter().map(|&x| f(x, s)).collect()
+    } else {
+        // GraphBuilder rejects this at construction time, but Graph is a
+        // pub type and the interpreter accepts arbitrary graphs.
+        bail!("elementwise op on mismatched shapes {:?} vs {:?}", a.dims, b.dims);
+    };
+    Ok(HostTensor::new(out_dims.to_vec(), data))
+}
+
+fn reduce_mean(x: &HostTensor, out_dims: &[usize], reduce: &[usize]) -> HostTensor {
+    let in_strides = strides(&x.dims);
+    let kept: Vec<usize> =
+        (0..x.dims.len()).filter(|i| !reduce.contains(i)).collect();
+    let out_strides = strides(out_dims);
+    let mut acc = vec![0f64; numel(out_dims)];
+    let count: usize = reduce.iter().map(|&r| x.dims[r]).product();
+    for (flat, &v) in x.data.iter().enumerate() {
+        let mut dst = 0usize;
+        for (slot, &axis) in kept.iter().enumerate() {
+            let coord = (flat / in_strides[axis]) % x.dims[axis];
+            dst += coord * out_strides[slot];
+        }
+        acc[dst] += v as f64;
+    }
+    let data = acc.iter().map(|&s| (s / count as f64) as f32).collect();
+    HostTensor::new(out_dims.to_vec(), data)
+}
+
+/// Contraction via permute-to-matrix + i-k-j matmul.
+fn dot_general(
+    lhs: &HostTensor,
+    rhs: &HostTensor,
+    lhs_contract: &[usize],
+    rhs_contract: &[usize],
+    out_dims: &[usize],
+) -> Result<HostTensor> {
+    let lhs_free: Vec<usize> =
+        (0..lhs.dims.len()).filter(|i| !lhs_contract.contains(i)).collect();
+    let rhs_free: Vec<usize> =
+        (0..rhs.dims.len()).filter(|i| !rhs_contract.contains(i)).collect();
+    let m: usize = lhs_free.iter().map(|&i| lhs.dims[i]).product();
+    let n: usize = rhs_free.iter().map(|&i| rhs.dims[i]).product();
+    let k: usize = lhs_contract.iter().map(|&i| lhs.dims[i]).product();
+    let k2: usize = rhs_contract.iter().map(|&i| rhs.dims[i]).product();
+    if k != k2 {
+        bail!("dot_general: contracted sizes differ ({k} vs {k2})");
+    }
+
+    // lhs as [M, K] (free-major), rhs as [K, N] (contract-major).
+    let mut l_perm: Vec<usize> = lhs_free.clone();
+    l_perm.extend_from_slice(lhs_contract);
+    let mut r_perm: Vec<usize> = rhs_contract.to_vec();
+    r_perm.extend_from_slice(&rhs_free);
+    let a = permuted(lhs, &l_perm);
+    let b = permuted(rhs, &r_perm);
+    let a: &[f32] = a.as_deref().unwrap_or(&lhs.data);
+    let b: &[f32] = b.as_deref().unwrap_or(&rhs.data);
+
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+    Ok(HostTensor::new(out_dims.to_vec(), out))
+}
+
+/// Materialize `x` with its axes permuted; `None` when `perm` is identity
+/// (caller reuses the original data).
+fn permuted(x: &HostTensor, perm: &[usize]) -> Option<Vec<f32>> {
+    if perm.iter().enumerate().all(|(i, &p)| i == p) {
+        return None;
+    }
+    let out_dims: Vec<usize> = perm.iter().map(|&p| x.dims[p]).collect();
+    Some(transpose(x, &out_dims, perm).data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::graph::GraphBuilder;
+    use crate::util::check::assert_allclose;
+
+    fn run1(g: &Graph, args: &[HostTensor]) -> HostTensor {
+        let exe = NativeExecutable::new(g.clone()).unwrap();
+        let refs: Vec<&HostTensor> = args.iter().collect();
+        exe.execute_hosts(&refs).unwrap()
+    }
+
+    #[test]
+    fn add_and_sqrt() {
+        let b = GraphBuilder::new("t");
+        let p = b.parameter(0, &[2, 2], "x").unwrap();
+        let s = (p.clone() + p).unwrap().sqrt().unwrap();
+        let g = b.build(&s).unwrap();
+        let x = HostTensor::new(vec![2, 2], vec![2.0, 8.0, 18.0, 32.0]);
+        let out = run1(&g, &[x]);
+        assert_eq!(out.data, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn dot_general_matches_manual_matmul() {
+        // [2,3] x [3,2] contracting the 3-dim
+        let b = GraphBuilder::new("mm");
+        let x = b.parameter(0, &[2, 3], "x").unwrap();
+        let y = b.parameter(1, &[3, 2], "y").unwrap();
+        let d = x.dot_general(&y, &[1], &[0]).unwrap();
+        let g = b.build(&d).unwrap();
+        let out = run1(
+            &g,
+            &[
+                HostTensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]),
+                HostTensor::new(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]),
+            ],
+        );
+        assert_eq!(out.dims, vec![2, 2]);
+        assert_eq!(out.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn dot_general_with_high_rank_rhs() {
+        // [S=2, C=2] x [N=1, C=2, H=2, W=2] contracting C -> [2, 1, 2, 2]
+        let b = GraphBuilder::new("conv1x1");
+        let w = b.parameter(0, &[2, 2], "w").unwrap();
+        let x = b.parameter(1, &[1, 2, 2, 2], "x").unwrap();
+        let d = w.dot_general(&x, &[1], &[1]).unwrap();
+        let g = b.build(&d).unwrap();
+        let xs = HostTensor::new(vec![1, 2, 2, 2], (1..=8).map(|v| v as f32).collect());
+        let ws = HostTensor::new(vec![2, 2], vec![1., 0., 1., 2.]);
+        let out = run1(&g, &[ws, xs]);
+        assert_eq!(out.dims, vec![2, 1, 2, 2]);
+        // channel out 0 = in ch 0; channel out 1 = ch0 + 2*ch1
+        assert_eq!(out.data[..4], [1., 2., 3., 4.]);
+        assert_eq!(out.data[4..], [1. + 10., 2. + 12., 3. + 14., 4. + 16.]);
+    }
+
+    #[test]
+    fn slice_concat_transpose_roundtrip() {
+        let b = GraphBuilder::new("sct");
+        let x = b.parameter(0, &[2, 4], "x").unwrap();
+        let lo = x.slice_in_dim1(0, 2, 1).unwrap();
+        let hi = x.slice_in_dim1(2, 4, 1).unwrap();
+        let back = lo.concat_in_dim(&[hi], 1).unwrap();
+        let g = b.build(&back).unwrap();
+        let x0 = HostTensor::new(vec![2, 4], (0..8).map(|v| v as f32).collect());
+        assert_eq!(run1(&g, &[x0.clone()]).data, x0.data);
+
+        let b2 = GraphBuilder::new("tr");
+        let y = b2.parameter(0, &[2, 3], "y").unwrap();
+        let t = y.transpose(&[1, 0]).unwrap();
+        let g2 = b2.build(&t).unwrap();
+        let y0 = HostTensor::new(vec![2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(run1(&g2, &[y0]).data, vec![0., 3., 1., 4., 2., 5.]);
+    }
+
+    #[test]
+    fn strided_slice_takes_every_other() {
+        let b = GraphBuilder::new("st");
+        let x = b.parameter(0, &[1, 6], "x").unwrap();
+        let s = x.slice_in_dim(1, 6, 2, 1).unwrap();
+        let g = b.build(&s).unwrap();
+        let x0 = HostTensor::new(vec![1, 6], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(run1(&g, &[x0]).data, vec![1., 3., 5.]);
+    }
+
+    #[test]
+    fn reduce_mean_over_spatial() {
+        let b = GraphBuilder::new("rm");
+        let x = b.parameter(0, &[1, 2, 2, 2], "x").unwrap();
+        let m = x.reduce_mean(&[2, 3], false).unwrap();
+        let g = b.build(&m).unwrap();
+        let x0 = HostTensor::new(vec![1, 2, 2, 2], (1..=8).map(|v| v as f32).collect());
+        let out = run1(&g, &[x0]);
+        assert_eq!(out.dims, vec![1, 2]);
+        assert_allclose(&out.data, &[2.5, 6.5], 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn broadcast_in_dim_per_channel() {
+        let b = GraphBuilder::new("bn");
+        let x = b.parameter(0, &[1, 2, 1, 2], "x").unwrap();
+        let gm = b.parameter(1, &[2], "g").unwrap();
+        let gb = gm.broadcast_in_dim(&[1, 2, 1, 2], &[1]).unwrap();
+        let y = (x * gb).unwrap();
+        let g = b.build(&y).unwrap();
+        let out = run1(
+            &g,
+            &[
+                HostTensor::new(vec![1, 2, 1, 2], vec![1., 2., 3., 4.]),
+                HostTensor::new(vec![2], vec![10., 100.]),
+            ],
+        );
+        assert_eq!(out.data, vec![10., 20., 300., 400.]);
+    }
+
+    #[test]
+    fn scalar_broadcast_max_is_relu() {
+        let b = GraphBuilder::new("relu");
+        let x = b.parameter(0, &[4], "x").unwrap();
+        let zero = b.c0(0.0).unwrap();
+        let y = x.max(&zero).unwrap();
+        let g = b.build(&y).unwrap();
+        let out = run1(&g, &[HostTensor::new(vec![4], vec![-1., 2., -3., 4.])]);
+        assert_eq!(out.data, vec![0., 2., 0., 4.]);
+    }
+
+    #[test]
+    fn shape_mismatch_at_execute_is_reported() {
+        let b = GraphBuilder::new("chk");
+        let x = b.parameter(0, &[2, 2], "x").unwrap();
+        let g = b.build(&x).unwrap();
+        let exe = NativeExecutable::new(g).unwrap();
+        let bad = HostTensor::new(vec![4], vec![0.0; 4]);
+        assert!(exe.execute_hosts(&[&bad]).is_err());
+    }
+}

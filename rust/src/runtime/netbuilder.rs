@@ -1,8 +1,10 @@
-//! Full-network XlaBuilder construction: the entire ResNet forward pass for
+//! Full-network graph construction: the entire ResNet forward pass for
 //! any (arch, plan) pair, weights as parameters. Used by the fps tables
-//! (Table 1/3, Fig. 5) so sweeping models/variants needs no python and no
-//! artifact explosion; numerics are cross-checked against the python AOT
-//! artifacts in the integration tests.
+//! (Table 1/3, Fig. 5), the coordinator's synthetic workers and the
+//! artifact-free integration tests, so sweeping models/variants needs no
+//! python and no artifact explosion; numerics are cross-checked against
+//! the python AOT artifacts in the integration tests when artifacts are
+//! present.
 //!
 //! BatchNorm is inference-mode (per-channel affine) here — the measured
 //! quantity is throughput, and affine-BN is exactly what a deployed
@@ -10,18 +12,14 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use super::graph::{Graph, GraphBuilder, Op};
 use super::layer_factory as lf;
-use super::{Engine, Executable};
+use super::{Buffer, Engine, Executable};
 use crate::decompose::{Plan, Scheme};
 use crate::model::{Arch, BlockKind, ConvSite, SiteKind};
 use crate::util::rng::Rng;
 
-type B = xla::XlaBuilder;
-type Op = xla::XlaOp;
-
-fn err(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e:?}")
-}
+type B = GraphBuilder;
 
 /// Parameter spec of a built network (order == parameter index - 1; the
 /// input image is always parameter 0).
@@ -34,16 +32,12 @@ pub struct ParamSpec {
 struct NetCtx<'a> {
     b: &'a B,
     specs: Vec<ParamSpec>,
-    next_idx: i64,
+    next_idx: usize,
 }
 
-impl<'a> NetCtx<'a> {
+impl NetCtx<'_> {
     fn param(&mut self, name: &str, shape: Vec<usize>) -> Result<Op> {
-        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-        let p = self
-            .b
-            .parameter(self.next_idx, xla::ElementType::F32, &dims, name)
-            .map_err(err)?;
+        let p = self.b.parameter(self.next_idx, &shape, name)?;
         self.next_idx += 1;
         self.specs.push(ParamSpec { name: name.to_string(), shape });
         Ok(p)
@@ -154,11 +148,9 @@ pub fn build_forward(
     plan: &Plan,
     batch: usize,
     hw: usize,
-) -> Result<(xla::XlaComputation, Vec<ParamSpec>)> {
+) -> Result<(Graph, Vec<ParamSpec>)> {
     let b = B::new(&format!("{}_fwd", arch.name));
-    let x = b
-        .parameter(0, xla::ElementType::F32, &[batch as i64, 3, hw as i64, hw as i64], "x")
-        .map_err(err)?;
+    let x = b.parameter(0, &[batch, 3, hw, hw], "x")?;
     let mut ctx = NetCtx { b: &b, specs: Vec::new(), next_idx: 1 };
     let sites = arch.sites();
     let by_name: std::collections::HashMap<String, ConvSite> =
@@ -197,7 +189,7 @@ pub fn build_forward(
                     apply_site(&mut ctx, ds, plan, &identity.0, batch, identity.2, identity.3)?;
                 idy = bn_relu(&mut ctx, &ds.name, &op, &[batch, cc, nh, nw], false)?;
             }
-            let sum = (hh.0 + idy).map_err(err)?;
+            let sum = (hh.0 + idy)?;
             y = lf::relu(&b, &sum)?;
             (c, h, w) = (hh.1, hh.2, hh.3);
         }
@@ -211,28 +203,26 @@ pub fn build_forward(
         Scheme::Svd { r } => {
             let w0 = ctx.param("fc.w0", vec![*r, fc.c])?;
             let w1 = ctx.param("fc.w1", vec![fc.s, *r])?;
-            let t = pooled.dot_general(&w0, &[1], &[1], &[], &[]).map_err(err)?;
-            t.dot_general(&w1, &[1], &[1], &[], &[]).map_err(err)?
+            let t = pooled.dot_general(&w0, &[1], &[1])?;
+            t.dot_general(&w1, &[1], &[1])?
         }
         _ => {
             let wp = ctx.param("fc.w", vec![fc.s, fc.c])?;
-            pooled.dot_general(&wp, &[1], &[1], &[], &[]).map_err(err)?
+            pooled.dot_general(&wp, &[1], &[1])?
         }
     };
     let bias = ctx.param("fc.b", vec![fc.s])?;
-    let bias = bias
-        .broadcast_in_dim(&[batch as i64, fc.s as i64], &[1])
-        .map_err(err)?;
-    let out = (logits + bias).map_err(err)?;
-    let comp = b.build(&out).map_err(err)?;
-    Ok((comp, ctx.specs))
+    let bias = bias.broadcast_in_dim(&[batch, fc.s], &[1])?;
+    let out = (logits + bias)?;
+    let graph = b.build(&out)?;
+    Ok((graph, ctx.specs))
 }
 
-/// A compiled network with random weights resident on device — the unit the
+/// A compiled network with weights resident on the backend — the unit the
 /// fps benchmarks (and the coordinator's synthetic workers) execute.
 pub struct BuiltNet {
     pub exe: Executable,
-    pub weight_bufs: Vec<xla::PjRtBuffer>,
+    pub weight_bufs: Vec<Buffer>,
     pub batch: usize,
     pub hw: usize,
     pub classes: usize,
@@ -248,8 +238,8 @@ impl BuiltNet {
         hw: usize,
         seed: u64,
     ) -> Result<BuiltNet> {
-        let (comp, specs) = build_forward(arch, plan, batch, hw)?;
-        let exe = engine.compile_computation(&comp)?;
+        let (graph, specs) = build_forward(arch, plan, batch, hw)?;
+        let exe = engine.compile(&graph)?;
         let mut rng = Rng::new(seed);
         let mut weight_bufs = Vec::with_capacity(specs.len());
         for spec in &specs {
@@ -277,8 +267,8 @@ impl BuiltNet {
         hw: usize,
         params: &crate::decompose::params::Params,
     ) -> Result<BuiltNet> {
-        let (comp, specs) = build_forward(arch, plan, batch, hw)?;
-        let exe = engine.compile_computation(&comp)?;
+        let (graph, specs) = build_forward(arch, plan, batch, hw)?;
+        let exe = engine.compile(&graph)?;
         let mut weight_bufs = Vec::with_capacity(specs.len());
         for spec in &specs {
             let t = params
@@ -293,8 +283,8 @@ impl BuiltNet {
     }
 
     /// Run one forward pass on an input buffer; returns the logits buffer.
-    pub fn forward(&self, x: &xla::PjRtBuffer) -> Result<xla::PjRtBuffer> {
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_bufs.len());
+    pub fn forward(&self, x: &Buffer) -> Result<Buffer> {
+        let mut args: Vec<&Buffer> = Vec::with_capacity(1 + self.weight_bufs.len());
         args.push(x);
         args.extend(self.weight_bufs.iter());
         let mut outs = self.exe.run_buffers(&args)?;
@@ -306,18 +296,16 @@ impl BuiltNet {
 mod tests {
     use super::*;
     use crate::decompose::{plan_variant, Variant};
-    use crate::runtime::HostTensor;
 
     fn forward_logits(variant: Variant) -> Vec<f32> {
-        let engine = Engine::cpu().unwrap();
+        let engine = Engine::native();
         let arch = Arch::by_name("resnet-mini").unwrap();
         let plan = plan_variant(&arch, variant, 2.0, 2, None).unwrap();
         let net = BuiltNet::compile(&engine, &arch, &plan, 2, 16, 7).unwrap();
         let x = crate::util::det_input(2, 16);
         let xb = engine.upload(&x, &[2, 3, 16, 16]).unwrap();
         let out = net.forward(&xb).unwrap();
-        let lit = out.to_literal_sync().unwrap();
-        HostTensor::from_literal(&lit).unwrap().data
+        out.to_host().unwrap().data
     }
 
     #[test]
@@ -337,11 +325,21 @@ mod tests {
     fn param_specs_unique_names() {
         let arch = Arch::by_name("resnet-mini").unwrap();
         let plan = plan_variant(&arch, Variant::Lrd, 2.0, 2, None).unwrap();
-        let (_comp, specs) = build_forward(&arch, &plan, 1, 16).unwrap();
+        let (_graph, specs) = build_forward(&arch, &plan, 1, 16).unwrap();
         let names: std::collections::HashSet<_> =
             specs.iter().map(|s| s.name.clone()).collect();
         assert_eq!(names.len(), specs.len());
         assert!(names.contains("layer1.0.conv2.core"));
         assert!(names.contains("fc.w0"));
+    }
+
+    #[test]
+    fn forward_is_deterministic_across_engines() {
+        // Two independently-constructed native engines must agree bit-wise
+        // on the same (arch, plan, seed) — the property the coordinator's
+        // per-worker engine construction relies on.
+        let a = forward_logits(Variant::Lrd);
+        let b = forward_logits(Variant::Lrd);
+        assert_eq!(a, b);
     }
 }

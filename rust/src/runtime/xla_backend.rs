@@ -1,0 +1,203 @@
+//! PJRT/XLA backend (feature `xla-pjrt`): translates the graph IR 1:1
+//! into XlaBuilder computations and compiles python-AOT HLO-text
+//! artifacts. This is the only module that talks to the `xla` crate; by
+//! default the build links the in-tree API stub (vendor/xla) so this
+//! translation layer stays type-checked offline — swap in the real xla-rs
+//! binding to execute (DESIGN.md §Backends).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::graph::{Graph, OpKind};
+use super::{Backend, BackendExec, Buffer, HostTensor};
+
+fn err(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e:?}")
+}
+
+fn i64s(dims: &[usize]) -> Vec<i64> {
+    dims.iter().map(|&d| d as i64).collect()
+}
+
+/// PJRT engine (XLA:CPU client).
+pub struct XlaBackend {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl XlaBackend {
+    pub fn cpu() -> Result<XlaBackend> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(XlaBackend { client: Arc::new(client) })
+    }
+}
+
+fn lookup<'a>(
+    ops: &'a [Option<xla::XlaOp>],
+    id: super::graph::NodeId,
+    name: &str,
+) -> Result<&'a xla::XlaOp> {
+    ops[id.0]
+        .as_ref()
+        .ok_or_else(|| anyhow!("{name}: untranslated input"))
+}
+
+/// Lower a graph to an XlaBuilder computation.
+fn translate(graph: &Graph) -> Result<xla::XlaComputation> {
+    let b = xla::XlaBuilder::new(&graph.name);
+    let nm = &graph.name;
+    let mut ops: Vec<Option<xla::XlaOp>> = Vec::with_capacity(graph.nodes.len());
+    for node in &graph.nodes {
+        let ins = &node.inputs;
+        let op = match &node.op {
+            OpKind::Parameter { index, name } => b
+                .parameter(*index as i64, xla::ElementType::F32, &i64s(&node.dims), name)
+                .map_err(err)?,
+            OpKind::ConstScalar { value } => b.c0(*value).map_err(err)?,
+            OpKind::Broadcast => lookup(&ops, ins[0], nm)?
+                .broadcast(&i64s(&node.dims))
+                .map_err(err)?,
+            OpKind::BroadcastInDim { mapping } => lookup(&ops, ins[0], nm)?
+                .broadcast_in_dim(&i64s(&node.dims), &i64s(mapping))
+                .map_err(err)?,
+            OpKind::Concat { dim } => {
+                let rest: Vec<xla::XlaOp> = ins[1..]
+                    .iter()
+                    .map(|id| lookup(&ops, *id, nm).map(|o| o.clone()))
+                    .collect::<Result<_>>()?;
+                lookup(&ops, ins[0], nm)?
+                    .concat_in_dim(&rest, *dim as i64)
+                    .map_err(err)?
+            }
+            OpKind::Slice { dim, start, stop, stride } => lookup(&ops, ins[0], nm)?
+                .slice_in_dim(*start as i64, *stop as i64, *stride as i64, *dim as i64)
+                .map_err(err)?,
+            OpKind::Reshape => lookup(&ops, ins[0], nm)?
+                .reshape(&i64s(&node.dims))
+                .map_err(err)?,
+            OpKind::Transpose { perm } => lookup(&ops, ins[0], nm)?
+                .transpose(&i64s(perm))
+                .map_err(err)?,
+            OpKind::DotGeneral { lhs_contract, rhs_contract } => {
+                let lhs = lookup(&ops, ins[0], nm)?;
+                let rhs = lookup(&ops, ins[1], nm)?;
+                lhs.dot_general(rhs, &i64s(lhs_contract), &i64s(rhs_contract), &[], &[])
+                    .map_err(err)?
+            }
+            OpKind::Add => {
+                let lhs = lookup(&ops, ins[0], nm)?.clone();
+                let rhs = lookup(&ops, ins[1], nm)?.clone();
+                (lhs + rhs).map_err(err)?
+            }
+            OpKind::Mul => {
+                let lhs = lookup(&ops, ins[0], nm)?.clone();
+                let rhs = lookup(&ops, ins[1], nm)?.clone();
+                (lhs * rhs).map_err(err)?
+            }
+            OpKind::Max => {
+                let lhs = lookup(&ops, ins[0], nm)?;
+                let rhs = lookup(&ops, ins[1], nm)?;
+                lhs.max(rhs).map_err(err)?
+            }
+            OpKind::ReduceMean { dims } => lookup(&ops, ins[0], nm)?
+                .reduce_mean(&i64s(dims), false)
+                .map_err(err)?,
+            OpKind::Sqrt => lookup(&ops, ins[0], nm)?.sqrt().map_err(err)?,
+        };
+        ops.push(Some(op));
+    }
+    let root = ops[graph.root.0]
+        .as_ref()
+        .ok_or_else(|| anyhow!("{}: missing root", graph.name))?;
+    b.build(root).map_err(err)
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn compile_graph(&self, graph: &Graph) -> Result<Arc<dyn BackendExec>> {
+        let comp = translate(graph)?;
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("XLA compile: {e:?}"))?;
+        Ok(Arc::new(XlaExec { exe }))
+    }
+
+    fn compile_hlo_text_file(&self, path: &std::path::Path) -> Result<Arc<dyn BackendExec>> {
+        let text_path = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text_file(text_path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("XLA compile: {e:?}"))?;
+        Ok(Arc::new(XlaExec { exe }))
+    }
+
+    fn upload(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        let buf = self
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload {dims:?}: {e:?}"))?;
+        Ok(Buffer::Pjrt(Arc::new(buf)))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        let buf = self
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))?;
+        Ok(Buffer::Pjrt(Arc::new(buf)))
+    }
+}
+
+struct XlaExec {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl BackendExec for XlaExec {
+    fn execute(&self, args: &[&Buffer]) -> Result<Vec<Buffer>> {
+        let raw: Vec<&xla::PjRtBuffer> = args
+            .iter()
+            .map(|b| match b {
+                Buffer::Pjrt(p) => Ok(p.as_ref()),
+                _ => Err(anyhow!("xla backend takes PJRT buffers")),
+            })
+            .collect::<Result<_>>()?;
+        let mut outs = self.exe.execute_b(&raw).map_err(|e| anyhow!("execute_b: {e:?}"))?;
+        if outs.is_empty() {
+            bail!("execute_b returned no result set");
+        }
+        Ok(outs
+            .swap_remove(0)
+            .into_iter()
+            .map(|b| Buffer::Pjrt(Arc::new(b)))
+            .collect())
+    }
+}
+
+/// Download a PJRT buffer, flattening jax `return_tuple=True` 1-tuples.
+pub(crate) fn buffer_to_hosts(buf: &xla::PjRtBuffer) -> Result<Vec<HostTensor>> {
+    let lit = buf.to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    literal_to_hosts(&lit)
+}
+
+fn literal_to_hosts(lit: &xla::Literal) -> Result<Vec<HostTensor>> {
+    let shape = lit.shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+    match shape {
+        xla::Shape::Tuple(_) => {
+            let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+            let mut out = Vec::with_capacity(parts.len());
+            for p in &parts {
+                out.extend(literal_to_hosts(p)?);
+            }
+            Ok(out)
+        }
+        _ => {
+            let ashape = lit.array_shape().map_err(|e| anyhow!("array_shape: {e:?}"))?;
+            let dims: Vec<usize> = ashape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            Ok(vec![HostTensor::new(dims, data)])
+        }
+    }
+}

@@ -2,7 +2,8 @@
 //! DESIGN.md §3): synthetic class-conditional image data, a from-scratch
 //! training run of the original model, one-shot decomposition of the
 //! trained weights, and per-variant fine-tuning through the AOT train-step
-//! artifacts. Everything after `make artifacts` is rust-only.
+//! artifacts. Everything after the python AOT step
+//! (`python python/compile/aot.py --out rust/artifacts`) is rust-only.
 
 pub mod data;
 

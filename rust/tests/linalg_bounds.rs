@@ -1,0 +1,133 @@
+//! Reconstruction-error bounds for the linalg substrate through its public
+//! API: SVD tail-energy identities, QR factorization residuals, Tucker-2
+//! monotonicity, and tensor4 unfold/fold round-trips. These are the
+//! numerical foundations the one-shot decomposition (eq. 1-6) and the
+//! native conv lowering rest on.
+
+use lrdx::linalg::{qr, svd, tucker2, Matrix, Tensor4};
+use lrdx::util::check::assert_allclose;
+use lrdx::util::rng::Rng;
+
+fn planted_low_rank(m: usize, n: usize, r: usize, rng: &mut Rng) -> Matrix {
+    Matrix::random(m, r, rng).matmul(&Matrix::random(r, n, rng))
+}
+
+#[test]
+fn svd_error_bounds_and_tail_energy() {
+    let mut rng = Rng::new(0xBEE5);
+    let a = Matrix::random(24, 16, &mut rng);
+    let d = svd(&a);
+    let full_norm = a.fro();
+    let mut prev_err = f64::INFINITY;
+    for r in [1usize, 2, 4, 8, 12, 16] {
+        let err = a.sub(&d.reconstruct(r)).fro();
+        // 1. any truncation error is bounded by the matrix norm
+        assert!(err <= full_norm + 1e-6, "r={r}: {err} > ||A|| {full_norm}");
+        // 2. error is monotone non-increasing in rank
+        assert!(err <= prev_err + 1e-6, "r={r}: error rose {prev_err} -> {err}");
+        prev_err = err;
+        // 3. Eckart–Young energy identity: ||A - A_r||_F^2 = Σ_{i>r} σ_i²
+        let tail: f64 = d.s[r.min(d.s.len())..]
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum();
+        assert!(
+            (err - tail.sqrt()).abs() < 1e-3 * full_norm.max(1.0),
+            "r={r}: residual {err} vs tail energy {}",
+            tail.sqrt()
+        );
+    }
+    // full rank is (numerically) exact
+    assert!(prev_err < 1e-3, "full-rank residual {prev_err}");
+}
+
+#[test]
+fn svd_recovers_planted_rank_exactly() {
+    let mut rng = Rng::new(0x10A);
+    let a = planted_low_rank(20, 12, 3, &mut rng);
+    let d = svd(&a);
+    // singular values beyond the planted rank are numerically zero
+    for (i, &s) in d.s.iter().enumerate().skip(3) {
+        assert!(s < 1e-3, "sigma[{i}] = {s} should vanish for a rank-3 matrix");
+    }
+    let err = a.sub(&d.reconstruct(3)).fro();
+    assert!(err < 1e-3 * a.fro().max(1.0), "rank-3 reconstruction residual {err}");
+}
+
+#[test]
+fn qr_factorization_bounds() {
+    let mut rng = Rng::new(0x9A);
+    for (m, n) in [(12usize, 8usize), (8, 8), (6, 10)] {
+        let a = Matrix::random(m, n, &mut rng);
+        let (q, r) = qr(&a);
+        let k = m.min(n);
+        assert_eq!((q.rows, q.cols), (m, k));
+        assert_eq!((r.rows, r.cols), (k, n));
+        // Q^T Q = I
+        let qtq = q.transpose().matmul(&q);
+        assert_allclose(&qtq.data, &Matrix::eye(k).data, 1e-4, 1e-4);
+        // R upper triangular
+        for i in 0..k {
+            for j in 0..n.min(i) {
+                assert!(r[(i, j)].abs() < 1e-4, "R[{i},{j}] = {} not zero", r[(i, j)]);
+            }
+        }
+        // residual ||A - QR|| ~ 0
+        let resid = a.sub(&q.matmul(&r)).fro();
+        assert!(resid < 1e-3 * a.fro().max(1.0), "({m},{n}): residual {resid}");
+    }
+}
+
+#[test]
+fn tucker_reconstruction_error_bounds() {
+    let mut rng = Rng::new(0x70C);
+    let w = Tensor4::random(12, 10, 3, 3, &mut rng);
+    let norm = w.fro();
+    let mut prev = f64::INFINITY;
+    for r in [2usize, 4, 6, 8, 10] {
+        let t = tucker2(&w, r.min(w.i), r.min(w.o));
+        let err = w.sub(&t.reconstruct()).fro();
+        assert!(err <= norm + 1e-6, "r={r}: error {err} above ||W|| {norm}");
+        assert!(err <= prev + 1e-6, "r={r}: error rose {prev} -> {err}");
+        prev = err;
+    }
+    // full ranks reconstruct exactly
+    let t = tucker2(&w, w.i, w.o);
+    let err = w.sub(&t.reconstruct()).fro();
+    assert!(err < 1e-3 * norm, "full-rank Tucker residual {err}");
+}
+
+#[test]
+fn tucker_truncation_bounded_by_mode_tails() {
+    // HOSVD bound: ||W - W_r||_F² ≤ Σ_modes Σ_{i>r_mode} σ_i² (mode
+    // unfolding singular values). Checked at a mid rank.
+    let mut rng = Rng::new(0x71C);
+    let w = Tensor4::random(8, 8, 3, 3, &mut rng);
+    let (r1, r2) = (4usize, 4usize);
+    let t = tucker2(&w, r1, r2);
+    let err2 = {
+        let e = w.sub(&t.reconstruct()).fro();
+        e * e
+    };
+    let tail = |m: &Matrix, r: usize| -> f64 {
+        svd(m).s[r..].iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+    };
+    let bound = tail(&w.unfold_i(), r1) + tail(&w.unfold_o(), r2);
+    assert!(
+        err2 <= bound * (1.0 + 1e-3) + 1e-6,
+        "HOSVD bound violated: err² {err2} > {bound}"
+    );
+}
+
+#[test]
+fn tensor4_unfold_fold_roundtrip_public_api() {
+    let mut rng = Rng::new(0x4D);
+    let t = Tensor4::random(5, 4, 3, 3, &mut rng);
+    let via_o = Tensor4::fold_o(&t.unfold_o(), t.i, t.h, t.w);
+    let via_i = Tensor4::fold_i(&t.unfold_i(), t.o, t.h, t.w);
+    assert_eq!(via_o, t, "mode-O unfold/fold is not the identity");
+    assert_eq!(via_i, t, "mode-I unfold/fold is not the identity");
+    // and unfolding preserves Frobenius norm (isometry)
+    assert!((t.unfold_o().fro() - t.fro()).abs() < 1e-9);
+    assert!((t.unfold_i().fro() - t.fro()).abs() < 1e-9);
+}

@@ -1,5 +1,6 @@
 //! Cross-checks of the rust-native model pipeline: linalg decomposition +
-//! XlaBuilder network construction, with no python involved.
+//! graph-IR network construction, with no python involved. Runs entirely
+//! on the default native backend.
 //!
 //! The strongest check: a FULL-RANK decomposition is mathematically exact,
 //! so the decomposed network must produce the same logits as the original
@@ -9,7 +10,7 @@ use lrdx::decompose::params::{decompose_params, init_orig_params};
 use lrdx::decompose::{plan_variant, Plan, Scheme, Variant};
 use lrdx::model::Arch;
 use lrdx::runtime::netbuilder::BuiltNet;
-use lrdx::runtime::{Engine, HostTensor};
+use lrdx::runtime::Engine;
 use lrdx::util::check::assert_allclose;
 use lrdx::util::rng::Rng;
 
@@ -24,9 +25,7 @@ fn logits(
     let net = BuiltNet::compile_with_params(engine, arch, plan, batch, hw, params).unwrap();
     let x = lrdx::util::det_input(batch, hw);
     let xb = engine.upload(&x, &[batch, 3, hw, hw]).unwrap();
-    let out = net.forward(&xb).unwrap();
-    let lit = out.to_literal_sync().unwrap();
-    HostTensor::from_literal(&lit).unwrap().data
+    net.forward(&xb).unwrap().to_host().unwrap().data
 }
 
 fn full_rank_plan(arch: &Arch, branched: bool) -> Plan {
@@ -92,8 +91,7 @@ fn truncated_decomposition_stays_close() {
     let net_rand = BuiltNet::compile(&engine, &arch, &plan, 2, 16, 999).unwrap();
     let x = lrdx::util::det_input(2, 16);
     let xb = engine.upload(&x, &[2, 3, 16, 16]).unwrap();
-    let lit = net_rand.forward(&xb).unwrap().to_literal_sync().unwrap();
-    let rand_logits = HostTensor::from_literal(&lit).unwrap().data;
+    let rand_logits = net_rand.forward(&xb).unwrap().to_host().unwrap().data;
     let (d_kd, d_rand) = (rel(&got, &want), rel(&rand_logits, &want));
     assert!(
         d_kd < d_rand,

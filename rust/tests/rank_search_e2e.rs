@@ -1,11 +1,13 @@
-//! Algorithm 1 against the REAL XLA:CPU backend: sweep ranks of a conv
-//! layer with the PJRT layer timer and check the decision is sane.
+//! Algorithm 1 against a REAL execution backend: sweep ranks of a conv
+//! layer with the engine-backed layer timer and check the decision is
+//! sane. Runs on the default native backend (and unchanged on XLA:CPU
+//! with `--features xla-pjrt` + `LRDX_BACKEND=xla`).
 
 use lrdx::decompose::rank_opt::{optimize_site, RankOptConfig};
 use lrdx::decompose::Scheme;
 use lrdx::model::{ConvSite, SiteKind};
 use lrdx::profiler::Timer;
-use lrdx::runtime::layer_factory::PjrtLayerTimer;
+use lrdx::runtime::layer_factory::EngineLayerTimer;
 use lrdx::runtime::Engine;
 
 fn site(c: usize, s: usize, k: usize) -> ConvSite {
@@ -23,7 +25,7 @@ fn site(c: usize, s: usize, k: usize) -> ConvSite {
 #[test]
 fn rank_search_on_real_backend_produces_valid_decision() {
     let engine = Engine::cpu().unwrap();
-    let mut timer = PjrtLayerTimer::with_timer(
+    let mut timer = EngineLayerTimer::with_timer(
         engine,
         Timer { warmup: 1, min_samples: 3, max_samples: 6, cv_target: 0.3 },
     );
@@ -42,7 +44,7 @@ fn rank_search_on_real_backend_produces_valid_decision() {
     assert!(!d.sweep.is_empty());
     // every sweep time is positive and finite
     for &(r, tsec) in &d.sweep {
-        assert!(r >= 19 && r <= 38, "rank {r} outside sweep bounds");
+        assert!((19..=38).contains(&r), "rank {r} outside sweep bounds");
         assert!(tsec.is_finite() && tsec > 0.0);
     }
     match d.chosen_rank {
@@ -70,7 +72,7 @@ fn rank_search_on_real_backend_produces_valid_decision() {
 fn scheme_construction_for_rectangular_sites() {
     // tucker r2 must scale with S/C (beta) for rectangular layers
     let engine = Engine::cpu().unwrap();
-    let mut timer = PjrtLayerTimer::with_timer(
+    let mut timer = EngineLayerTimer::with_timer(
         engine,
         Timer { warmup: 0, min_samples: 2, max_samples: 3, cv_target: 0.9 },
     );

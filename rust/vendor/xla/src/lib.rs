@@ -1,0 +1,291 @@
+//! API stub of the `xla-rs` PJRT binding.
+//!
+//! This crate mirrors exactly the slice of the `xla` API that
+//! `lrdx::runtime::xla_backend` uses, so `cargo check --features xla-pjrt`
+//! compiles the whole PJRT translation layer on machines without the XLA
+//! shared library. Every runtime entry point (`PjRtClient::cpu`) returns an
+//! error; builder calls construct inert handles. To execute on real XLA,
+//! replace this path dependency with the actual binding (see
+//! `rust/Cargo.toml` and DESIGN.md §Backends).
+
+/// Error type standing in for `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} is unavailable: the in-tree `xla` stub only type-checks the \
+         PJRT path; link the real xla-rs binding to execute (DESIGN.md §Backends)"
+    )))
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Marker trait for element types accepted by host-buffer uploads.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+// ---------------------------------------------------------------------------
+// Shapes and literals
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return stub("Literal::reshape with mismatched element count");
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape::Array(ArrayShape { dims: self.dims.clone() }))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        stub("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        stub("Literal::to_tuple")
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        stub("Literal::get_first_element")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct XlaBuilder {
+    _name: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct XlaOp {
+    _id: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub("HloModuleProto::from_text_file")
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+impl XlaBuilder {
+    pub fn new(name: &str) -> XlaBuilder {
+        XlaBuilder { _name: name.to_string() }
+    }
+
+    pub fn parameter(
+        &self,
+        _index: i64,
+        _ty: ElementType,
+        _dims: &[i64],
+        _name: &str,
+    ) -> Result<XlaOp> {
+        Ok(XlaOp { _id: 0 })
+    }
+
+    pub fn c0(&self, _value: f32) -> Result<XlaOp> {
+        Ok(XlaOp { _id: 0 })
+    }
+
+    pub fn build(&self, _root: &XlaOp) -> Result<XlaComputation> {
+        Ok(XlaComputation { _private: () })
+    }
+}
+
+impl XlaOp {
+    pub fn broadcast(&self, _dims: &[i64]) -> Result<XlaOp> {
+        Ok(self.clone())
+    }
+
+    pub fn broadcast_in_dim(&self, _out_dims: &[i64], _mapping: &[i64]) -> Result<XlaOp> {
+        Ok(self.clone())
+    }
+
+    pub fn concat_in_dim(&self, _others: &[XlaOp], _dim: i64) -> Result<XlaOp> {
+        Ok(self.clone())
+    }
+
+    pub fn slice_in_dim(
+        &self,
+        _start: i64,
+        _stop: i64,
+        _stride: i64,
+        _dim: i64,
+    ) -> Result<XlaOp> {
+        Ok(self.clone())
+    }
+
+    pub fn slice_in_dim1(&self, _start: i64, _stop: i64, _dim: i64) -> Result<XlaOp> {
+        Ok(self.clone())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<XlaOp> {
+        Ok(self.clone())
+    }
+
+    pub fn transpose(&self, _perm: &[i64]) -> Result<XlaOp> {
+        Ok(self.clone())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn dot_general(
+        &self,
+        _rhs: &XlaOp,
+        _lhs_contracting: &[i64],
+        _rhs_contracting: &[i64],
+        _lhs_batch: &[i64],
+        _rhs_batch: &[i64],
+    ) -> Result<XlaOp> {
+        Ok(self.clone())
+    }
+
+    pub fn max(&self, _other: &XlaOp) -> Result<XlaOp> {
+        Ok(self.clone())
+    }
+
+    pub fn reduce_mean(&self, _dims: &[i64], _keep_dims: bool) -> Result<XlaOp> {
+        Ok(self.clone())
+    }
+
+    pub fn sqrt(&self) -> Result<XlaOp> {
+        Ok(self.clone())
+    }
+}
+
+impl std::ops::Add<XlaOp> for XlaOp {
+    type Output = Result<XlaOp>;
+    fn add(self, _rhs: XlaOp) -> Result<XlaOp> {
+        Ok(self)
+    }
+}
+
+impl std::ops::Mul<XlaOp> for XlaOp {
+    type Output = Result<XlaOp>;
+    fn mul(self, _rhs: XlaOp) -> Result<XlaOp> {
+        Ok(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT runtime
+// ---------------------------------------------------------------------------
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        stub("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub("PjRtBuffer::to_literal_sync")
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute")
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub("PjRtLoadedExecutable::execute_b")
+    }
+}
