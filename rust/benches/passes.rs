@@ -1,0 +1,87 @@
+//! `cargo bench --bench passes` — O0 vs optimized forward latency per
+//! variant on the native backend, plus the pass-pipeline accounting.
+//! Seeds the perf trajectory: emits `BENCH_passes.json` next to the cwd.
+
+use lrdx::decompose::{plan_variant, Variant};
+use lrdx::model::Arch;
+use lrdx::profiler::Timer;
+use lrdx::runtime::netbuilder::BuiltNet;
+use lrdx::runtime::{CompileOptions, Engine, OptLevel};
+use lrdx::util::json::Json;
+
+fn measure(engine: &Engine, net: &BuiltNet, timer: &Timer) -> f64 {
+    let x = lrdx::util::det_input(net.batch, net.hw);
+    let xb = engine.upload(&x, &[net.batch, 3, net.hw, net.hw]).expect("upload");
+    timer
+        .measure(|| {
+            let out = net.forward(&xb)?;
+            out.sync()?;
+            Ok(())
+        })
+        .expect("measure")
+        .trimmed_mean
+}
+
+fn main() {
+    let engine = Engine::cpu().expect("engine");
+    let arch_name =
+        std::env::args().skip_while(|a| a != "--arch").nth(1).unwrap_or("resnet-mini".into());
+    let arch = Arch::by_name(&arch_name).expect("known arch");
+    let (batch, hw) = (4usize, 32usize);
+    let timer = Timer::default();
+
+    println!(
+        "pass-pipeline bench: {} on {} ({batch}x3x{hw}x{hw})",
+        arch.name,
+        engine.platform()
+    );
+    println!(
+        "{:10} {:>9} {:>9} {:>8} {:>11} {:>11} {:>8}",
+        "variant", "nodes O0", "nodes O2", "fusions", "O0 ms/fwd", "O2 ms/fwd", "speedup"
+    );
+    let mut jrows = Vec::new();
+    for variant in [Variant::Orig, Variant::Lrd, Variant::Merged, Variant::Branched] {
+        let plan = match plan_variant(&arch, variant, 2.0, 2, None) {
+            Ok(p) => p,
+            Err(_) => continue, // e.g. merged on basic-block archs
+        };
+        let o0 = CompileOptions::o0();
+        let o2 = CompileOptions::level(OptLevel::O2);
+        let net0 =
+            BuiltNet::compile(&engine, &arch, &plan, batch, hw, 0xBE7C, &o0).expect("O0");
+        let net2 =
+            BuiltNet::compile(&engine, &arch, &plan, batch, hw, 0xBE7C, &o2).expect("O2");
+        let (t0, t2) = (measure(&engine, &net0, &timer), measure(&engine, &net2, &timer));
+        let s0 = net0.pass_stats().clone();
+        let s2 = net2.pass_stats().clone();
+        println!(
+            "{:10} {:>9} {:>9} {:>8} {:>11.3} {:>11.3} {:>7.2}x",
+            variant.name(),
+            s0.nodes_after,
+            s2.nodes_after,
+            s2.fusions,
+            t0 * 1e3,
+            t2 * 1e3,
+            t0 / t2
+        );
+        jrows.push(Json::obj_from(vec![
+            ("variant", Json::Str(variant.name().into())),
+            ("nodes_o0", Json::Num(s0.nodes_after as f64)),
+            ("nodes_opt", Json::Num(s2.nodes_after as f64)),
+            ("fusions", Json::Num(s2.fusions as f64)),
+            ("secs_o0", Json::Num(t0)),
+            ("secs_opt", Json::Num(t2)),
+            ("speedup", Json::Num(t0 / t2)),
+            ("pass_wall_secs", Json::Num(s2.wall_secs)),
+        ]));
+    }
+    let doc = Json::obj_from(vec![
+        ("arch", Json::Str(arch.name.to_string())),
+        ("platform", Json::Str(engine.platform())),
+        ("batch", Json::Num(batch as f64)),
+        ("hw", Json::Num(hw as f64)),
+        ("rows", Json::Arr(jrows)),
+    ]);
+    std::fs::write("BENCH_passes.json", doc.render()).expect("write BENCH_passes.json");
+    println!("(saved BENCH_passes.json)");
+}

@@ -14,7 +14,7 @@ use crate::decompose::Scheme;
 use crate::model::{ConvSite, SiteKind};
 use crate::profiler::Timer;
 use crate::runtime::layer_factory::EngineLayerTimer;
-use crate::runtime::Engine;
+use crate::runtime::{CompileOptions, Engine};
 use crate::util::json::Json;
 
 pub struct Config {
@@ -27,6 +27,8 @@ pub struct Config {
     pub batch: usize,
     pub hw: usize,
     pub real: bool,
+    /// compile options for the `--real` engine timer (`--opt-level`)
+    pub opt: CompileOptions,
 }
 
 impl Default for Config {
@@ -41,6 +43,7 @@ impl Default for Config {
             batch: 2,
             hw: 16,
             real: false,
+            opt: CompileOptions::default(),
         }
     }
 }
@@ -58,9 +61,10 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
     let mut real_timer;
     let mut analytic_timer;
     let timer: &mut dyn LayerTimer = if cfg.real {
-        real_timer = EngineLayerTimer::with_timer(
+        real_timer = EngineLayerTimer::with_options(
             engine.clone(),
             Timer { warmup: 1, min_samples: 4, max_samples: 10, cv_target: 0.15 },
+            cfg.opt.clone(),
         );
         &mut real_timer
     } else {

@@ -10,7 +10,7 @@ use crate::decompose::{plan_variant, Variant};
 use crate::model::{cost, Arch};
 use crate::profiler::Timer;
 use crate::runtime::netbuilder::BuiltNet;
-use crate::runtime::Engine;
+use crate::runtime::{CompileOptions, Engine};
 use crate::util::json::Json;
 
 pub struct Config {
@@ -20,6 +20,8 @@ pub struct Config {
     pub batch: usize,
     pub alpha: f64,
     pub no_measure: bool,
+    /// compile options for the measured networks (`--opt-level`)
+    pub opt: CompileOptions,
 }
 
 impl Default for Config {
@@ -31,6 +33,7 @@ impl Default for Config {
             batch: 8,
             alpha: 2.0,
             no_measure: false,
+            opt: CompileOptions::default(),
         }
     }
 }
@@ -44,7 +47,7 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
     let fps0 = if cfg.no_measure {
         f64::NAN
     } else {
-        let net = BuiltNet::compile(engine, &arch, &plan0, cfg.batch, cfg.hw, 2)?;
+        let net = BuiltNet::compile(engine, &arch, &plan0, cfg.batch, cfg.hw, 2, &cfg.opt)?;
         measure_fps(engine, &net, &timer)?
     };
 
@@ -62,7 +65,8 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
         let fps = if cfg.no_measure {
             f64::NAN
         } else {
-            let net = BuiltNet::compile(engine, &arch, &plan, cfg.batch, cfg.hw, 2)?;
+            let net =
+                BuiltNet::compile(engine, &arch, &plan, cfg.batch, cfg.hw, 2, &cfg.opt)?;
             measure_fps(engine, &net, &timer)?
         };
         rows.push(vec![

@@ -15,7 +15,7 @@ use crate::decompose::{plan_variant, Variant};
 use crate::model::{cost, Arch};
 use crate::profiler::Timer;
 use crate::runtime::netbuilder::BuiltNet;
-use crate::runtime::Engine;
+use crate::runtime::{CompileOptions, Engine};
 use crate::util::json::Json;
 
 pub struct Config {
@@ -25,6 +25,8 @@ pub struct Config {
     pub alpha: f64,
     /// skip wall-clock measurement (analytic columns only)
     pub no_measure: bool,
+    /// compile options for the measured networks (`--opt-level`)
+    pub opt: CompileOptions,
 }
 
 impl Default for Config {
@@ -35,6 +37,7 @@ impl Default for Config {
             batch: 8,
             alpha: 2.0,
             no_measure: false,
+            opt: CompileOptions::default(),
         }
     }
 }
@@ -52,8 +55,9 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
             let fps = if cfg.no_measure {
                 f64::NAN
             } else {
-                let net =
-                    BuiltNet::compile(engine, &arch, &plan, cfg.batch, cfg.hw, 0xBEEF)?;
+                let net = BuiltNet::compile(
+                    engine, &arch, &plan, cfg.batch, cfg.hw, 0xBEEF, &cfg.opt,
+                )?;
                 measure_fps(engine, &net, &timer)?
             };
             let label = match variant {

@@ -15,7 +15,7 @@ use crate::decompose::rank_opt::{
 use crate::model::Arch;
 use crate::profiler::Timer;
 use crate::runtime::layer_factory::EngineLayerTimer;
-use crate::runtime::Engine;
+use crate::runtime::{CompileOptions, Engine};
 use crate::util::json::Json;
 
 pub struct Config {
@@ -26,6 +26,8 @@ pub struct Config {
     pub hw: usize,
     pub stride: usize,
     pub refine: usize,
+    /// compile options for the `--real` engine timer (`--opt-level`)
+    pub opt: CompileOptions,
 }
 
 impl Default for Config {
@@ -49,6 +51,7 @@ impl Default for Config {
             hw: 32,
             stride: 4,
             refine: 4,
+            opt: CompileOptions::default(),
         }
     }
 }
@@ -74,9 +77,10 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
     let mut real_timer;
     let mut analytic_timer;
     let timer: &mut dyn LayerTimer = if cfg.real {
-        real_timer = EngineLayerTimer::with_timer(
+        real_timer = EngineLayerTimer::with_options(
             engine.clone(),
             Timer { warmup: 1, min_samples: 4, max_samples: 10, cv_target: 0.15 },
+            cfg.opt.clone(),
         );
         &mut real_timer
     } else {

@@ -15,7 +15,7 @@ use crate::decompose::{plan_variant, Plan, Variant};
 use crate::model::{cost, Arch};
 use crate::profiler::Timer;
 use crate::runtime::netbuilder::BuiltNet;
-use crate::runtime::Engine;
+use crate::runtime::{CompileOptions, Engine};
 use crate::util::json::Json;
 
 pub struct Config {
@@ -27,6 +27,8 @@ pub struct Config {
     pub no_measure: bool,
     /// opt-variant rank overrides (e.g. from `lrdx rank-search`)
     pub opt_plans: std::collections::BTreeMap<String, Plan>,
+    /// compile options for the measured networks (`--opt-level`)
+    pub opt: CompileOptions,
 }
 
 impl Default for Config {
@@ -39,6 +41,7 @@ impl Default for Config {
             groups: 4,
             no_measure: false,
             opt_plans: Default::default(),
+            opt: CompileOptions::default(),
         }
     }
 }
@@ -66,7 +69,8 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
         let fps0 = if cfg.no_measure {
             f64::NAN
         } else {
-            let net = BuiltNet::compile(engine, &arch, &plan0, cfg.batch, cfg.hw, 1)?;
+            let net =
+                BuiltNet::compile(engine, &arch, &plan0, cfg.batch, cfg.hw, 1, &cfg.opt)?;
             measure_fps(engine, &net, &timer)?
         };
         rows.push(vec![
@@ -93,7 +97,8 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
             } else if let Some((_, f)) = measured.iter().find(|(p, _)| *p == plan) {
                 *f
             } else {
-                let net = BuiltNet::compile(engine, &arch, &plan, cfg.batch, cfg.hw, 1)?;
+                let net =
+                    BuiltNet::compile(engine, &arch, &plan, cfg.batch, cfg.hw, 1, &cfg.opt)?;
                 let f = measure_fps(engine, &net, &timer)?;
                 measured.push((plan.clone(), f));
                 f

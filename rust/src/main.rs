@@ -24,7 +24,8 @@ use lrdx::model::{cost, Arch};
 use lrdx::profiler::Timer;
 use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel, TrainSession};
 use lrdx::runtime::layer_factory::EngineLayerTimer;
-use lrdx::runtime::Engine;
+use lrdx::runtime::netbuilder::BuiltNet;
+use lrdx::runtime::{CompileOptions, Engine, OptLevel};
 use lrdx::trainsim::{self, data::SynthData};
 use lrdx::util::cli::Args;
 use lrdx::util::rng::Rng;
@@ -76,7 +77,24 @@ commands:
   bench         regenerate a paper table/figure:
                 table1 table2 table3 table456 fig2 fig5
 flags: --artifacts DIR  --reports DIR  --arch NAME  --hw N  --batch N
-       --alpha F  --groups N  --real  --full  --no-measure";
+       --alpha F  --groups N  --real  --full  --no-measure
+       --opt-level 0|1|2  IR pass pipeline for compiled graphs (default 2:
+                          cleanup + low-rank re-merge fusion; 0 = as built)
+       --lane N           lane width for the re-merge profitability gate";
+
+/// `--opt-level` / `--lane` → the `Engine::compile` options (serve, the
+/// table/fig benches and `rank-search --real` all honour them).
+fn compile_opts(args: &Args) -> Result<CompileOptions> {
+    let opt_level = match args.get("opt-level") {
+        Some(s) => OptLevel::parse(s)?,
+        None => OptLevel::TOP,
+    };
+    let lane = args.usize_or("lane", 16)?;
+    if lane == 0 {
+        bail!("--lane must be >= 1 (hardware lane width)");
+    }
+    Ok(CompileOptions { opt_level, lane })
+}
 
 fn artifacts_dir(args: &Args) -> std::path::PathBuf {
     std::path::PathBuf::from(args.get_or("artifacts", "artifacts"))
@@ -186,9 +204,10 @@ fn cmd_rank_search(args: &Args) -> Result<()> {
     let mut real;
     let mut analytic;
     let timer: &mut dyn LayerTimer = if args.bool("real") {
-        real = EngineLayerTimer::with_timer(
+        real = EngineLayerTimer::with_options(
             engine.clone(),
             Timer { warmup: 1, min_samples: 4, max_samples: 10, cv_target: 0.15 },
+            compile_opts(args)?,
         );
         &mut real
     } else {
@@ -289,22 +308,65 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map(|s| s.trim().to_string())
         .collect();
     let requests = args.usize_or("requests", 64)?;
-    let lib = ArtifactLibrary::load(&root)?;
-    let hw = lib
-        .find_by(&arch, &variants[0], "forward")
-        .ok_or_else(|| anyhow!("no {arch}/{} forward artifact", variants[0]))?
-        .hw;
+    let copts = compile_opts(args)?;
+
+    // A backend that can compile HLO serves the AOT artifacts (and a bad
+    // --artifacts dir is a hard error there, not a silent fallback); the
+    // native backend serves synthetic netbuilder models at --opt-level.
+    let engine_probe = Engine::cpu()?;
+    let artifact_lib = if engine_probe.platform() != "native-cpu" {
+        Some(ArtifactLibrary::load(&root)?)
+    } else {
+        None
+    };
 
     let mut coord = Coordinator::new(BatchPolicy::default());
-    for v in &variants {
-        let (root, arch, v2) = (root.clone(), arch.clone(), v.clone());
-        coord.register(v, hw, 1, move |eng| {
-            let lib = ArtifactLibrary::load(&root)?;
-            let spec = lib
-                .find_by(&arch, &v2, "forward")
-                .ok_or_else(|| anyhow!("no {arch}/{v2} forward artifact"))?;
-            Ok(Box::new(ForwardModel::load(eng, spec)?) as Box<dyn BatchModel>)
-        })?;
+    let hw;
+    match &artifact_lib {
+        Some(lib) => {
+            hw = lib
+                .find_by(&arch, &variants[0], "forward")
+                .ok_or_else(|| anyhow!("no {arch}/{} forward artifact", variants[0]))?
+                .hw;
+            for v in &variants {
+                let (root, arch, v2) = (root.clone(), arch.clone(), v.clone());
+                coord.register(v, hw, 1, move |eng| {
+                    let lib = ArtifactLibrary::load(&root)?;
+                    let spec = lib
+                        .find_by(&arch, &v2, "forward")
+                        .ok_or_else(|| anyhow!("no {arch}/{v2} forward artifact"))?;
+                    Ok(Box::new(ForwardModel::load(eng, spec)?) as Box<dyn BatchModel>)
+                })?;
+            }
+        }
+        None => {
+            hw = args.usize_or("hw", 32)?;
+            let batch = args.usize_or("batch", 8)?;
+            let a = Arch::by_name(&arch).ok_or_else(|| anyhow!("unknown --arch {arch}"))?;
+            println!(
+                "artifacts unavailable on {} — serving synthetic {arch} \
+                 netbuilder models ({})",
+                engine_probe.platform(),
+                copts.opt_level.name()
+            );
+            for v in &variants {
+                let variant = Variant::by_name(v)
+                    .ok_or_else(|| anyhow!("unknown variant {v:?}"))?;
+                let plan = plan_variant(&a, variant, args.f64_or("alpha", 2.0)?, 4, None)?;
+                // report what the pipeline does to this variant's graph
+                // (pipeline only — the worker compiles the real thing)
+                let (graph, _) =
+                    lrdx::runtime::netbuilder::build_forward(&a, &plan, batch, hw)?;
+                let (_, stats) = lrdx::runtime::passes::run_pipeline(&graph, &copts);
+                println!("  {v:10} {}", stats.summary());
+                let (a2, copts2) = (a.clone(), copts.clone());
+                coord.register(v, hw, 1, move |eng| {
+                    let net =
+                        BuiltNet::compile(eng, &a2, &plan, batch, hw, 0x5EED, &copts2)?;
+                    Ok(Box::new(net) as Box<dyn BatchModel>)
+                })?;
+            }
+        }
     }
     println!("serving {} variants of {arch}; {requests} requests each", variants.len());
     let gen = SynthData::new(hw, 10);
@@ -330,6 +392,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_bench(args: &Args) -> Result<()> {
     let engine = Engine::cpu()?;
+    let copts = compile_opts(args)?;
     let which = args
         .positional
         .get(1)
@@ -351,6 +414,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 batch: args.usize_or("batch", 8)?,
                 alpha: args.f64_or("alpha", 2.0)?,
                 no_measure: args.bool("no-measure"),
+                opt: copts.clone(),
             },
         )?,
         "table2" => harness::table2::run(
@@ -361,6 +425,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 hw: args.usize_or("hw", 32)?,
                 stride: args.usize_or("stride", 4)?,
                 refine: args.usize_or("refine", 4)?,
+                opt: copts.clone(),
                 ..Default::default()
             },
         )?,
@@ -373,6 +438,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 alpha: args.f64_or("alpha", 2.0)?,
                 groups: args.usize_or("groups", 4)?,
                 no_measure: args.bool("no-measure"),
+                opt: copts.clone(),
                 ..Default::default()
             },
         )?,
@@ -395,6 +461,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 step: args.usize_or("step", 4)?,
                 batch: args.usize_or("batch", 2)?,
                 hw: args.usize_or("hw", 16)?,
+                opt: copts.clone(),
                 ..Default::default()
             },
         )?,
@@ -405,6 +472,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 hw: args.usize_or("hw", 64)?,
                 batch: args.usize_or("batch", 8)?,
                 no_measure: args.bool("no-measure"),
+                opt: copts.clone(),
                 ..Default::default()
             },
         )?,

@@ -13,7 +13,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::{Buffer, Engine, Executable, HostTensor};
+use super::{Buffer, Compiled, Engine, HostTensor};
 use crate::decompose::{plan_from_json, Plan};
 use crate::util::json::Json;
 
@@ -150,7 +150,7 @@ fn upload_params(engine: &Engine, entries: &[ParamEntry]) -> Result<Vec<Buffer>>
 /// A compiled forward artifact with weights resident on the backend.
 pub struct ForwardModel {
     pub spec: ArtifactSpec,
-    exe: Executable,
+    exe: Compiled,
     weights: Vec<Buffer>,
     engine: Engine,
 }
@@ -261,7 +261,7 @@ impl ForwardModel {
 /// Each `step` feeds buffers back in — python is long gone.
 pub struct TrainSession {
     pub spec: ArtifactSpec,
-    exe: Executable,
+    exe: Compiled,
     trainable: Vec<Buffer>,
     frozen: Vec<Buffer>,
     velocity: Vec<Buffer>,

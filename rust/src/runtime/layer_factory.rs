@@ -16,7 +16,7 @@ use std::collections::HashMap;
 use anyhow::{bail, Result};
 
 use super::graph::{Graph, GraphBuilder, Op};
-use super::{Buffer, Engine, Executable};
+use super::{Buffer, Compiled, CompileOptions, Engine};
 use crate::decompose::rank_opt::LayerTimer;
 use crate::decompose::Scheme;
 use crate::model::ConvSite;
@@ -286,12 +286,19 @@ fn scheme_tag(s: &Scheme) -> String {
 
 /// Times layer variants on a real `runtime::Engine` (native CPU by
 /// default, XLA:CPU under the `xla-pjrt` feature). Compiled executables
-/// are cached by (site shape, scheme, batch, hw) so Algorithm 1 sweeps and
-/// repeated experiments don't recompile.
+/// are cached by (site shape, scheme, batch, hw, compile options) so
+/// Algorithm 1 sweeps and repeated experiments don't recompile.
+///
+/// The timer compiles through `Engine::compile` with its configured
+/// `CompileOptions` (top opt level by default), so Algorithm 1's
+/// engine-backed rank search times *optimized* graphs — including the
+/// re-merge fusion's verdict on unprofitable ranks — instead of naive
+/// factor chains.
 pub struct EngineLayerTimer {
     engine: Engine,
     pub timer: Timer,
-    cache: HashMap<String, Executable>,
+    opts: CompileOptions,
+    cache: HashMap<String, Compiled>,
     rng: Rng,
     pub compiles: usize,
     pub cache_hits: usize,
@@ -302,6 +309,7 @@ impl EngineLayerTimer {
         EngineLayerTimer {
             engine,
             timer: Timer::quick(),
+            opts: CompileOptions::default(),
             cache: HashMap::new(),
             rng: Rng::new(0xA11CE),
             compiles: 0,
@@ -313,15 +321,24 @@ impl EngineLayerTimer {
         EngineLayerTimer { timer, ..EngineLayerTimer::new(engine) }
     }
 
-    fn key(site: &ConvSite, scheme: &Scheme, batch: usize, hw: usize) -> String {
+    pub fn with_options(engine: Engine, timer: Timer, opts: CompileOptions) -> EngineLayerTimer {
+        EngineLayerTimer { timer, opts, ..EngineLayerTimer::new(engine) }
+    }
+
+    pub fn options(&self) -> &CompileOptions {
+        &self.opts
+    }
+
+    fn key(&self, site: &ConvSite, scheme: &Scheme, batch: usize, hw: usize) -> String {
         format!(
-            "{}x{}k{}s{}p{}/{}/b{batch}hw{hw}",
+            "{}x{}k{}s{}p{}/{}/b{batch}hw{hw}/{}",
             site.c,
             site.s,
             site.k,
             site.stride,
             site.padding,
-            scheme_tag(scheme)
+            scheme_tag(scheme),
+            self.opts.cache_key()
         )
     }
 
@@ -331,14 +348,14 @@ impl EngineLayerTimer {
         scheme: &Scheme,
         batch: usize,
         hw: usize,
-    ) -> Result<(Executable, Vec<Vec<usize>>)> {
-        let key = Self::key(site, scheme, batch, hw);
+    ) -> Result<(Compiled, Vec<Vec<usize>>)> {
+        let key = self.key(site, scheme, batch, hw);
         let (graph, shapes) = build_layer(site, scheme, batch, hw)?;
         if let Some(exe) = self.cache.get(&key) {
             self.cache_hits += 1;
             return Ok((exe.clone(), shapes));
         }
-        let exe = self.engine.compile(&graph)?;
+        let exe = self.engine.compile(&graph, &self.opts)?;
         self.compiles += 1;
         self.cache.insert(key, exe.clone());
         Ok((exe, shapes))
@@ -420,7 +437,7 @@ mod tests {
         let eng = Engine::native();
         let (graph, shapes) = build_layer(site, scheme, batch, hw).unwrap();
         assert_eq!(shapes.len(), weights.len());
-        let exe = eng.compile(&graph).unwrap();
+        let exe = eng.compile(&graph, &CompileOptions::default()).unwrap();
         let mut args = vec![HostTensor::new(vec![batch, site.c, hw, hw], x.to_vec())];
         for (shp, w) in shapes.iter().zip(weights.iter()) {
             args.push(HostTensor::new(shp.clone(), w.clone()));
@@ -534,7 +551,9 @@ mod tests {
         let w_op = b.parameter(1, &[s, c / g, k, k], "w").unwrap();
         let xp = pad_hw(&b, &x_op, &[1, c, h, h], 1, 0.0).unwrap();
         let o = grouped_conv2d(&b, &xp, &w_op, &[1, c, h + 2, h + 2], s, k, 1, g).unwrap();
-        let exe = eng.compile(&b.build(&o).unwrap()).unwrap();
+        let exe = eng
+            .compile(&b.build(&o).unwrap(), &CompileOptions::default())
+            .unwrap();
         let got = exe
             .run_hosts(&[
                 HostTensor::new(vec![1, c, h, h], x.clone()),
@@ -554,7 +573,9 @@ mod tests {
         let b = B::new("mp");
         let x_op = b.parameter(0, &[n, c, h, h], "x").unwrap();
         let o = maxpool_3x3_s2(&b, &x_op, &[n, c, h, h]).unwrap();
-        let exe = Engine::native().compile(&b.build(&o).unwrap()).unwrap();
+        let exe = Engine::native()
+            .compile(&b.build(&o).unwrap(), &CompileOptions::default())
+            .unwrap();
         let got = exe
             .run_hosts(&[HostTensor::new(vec![n, c, h, h], x.clone())])
             .unwrap()

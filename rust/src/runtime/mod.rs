@@ -3,6 +3,9 @@
 //! * `graph` — backend-neutral tensor IR built by `layer_factory` and
 //!   `netbuilder` (the Algorithm 1 rank search and the fps tables never
 //!   touch python).
+//! * `passes` — the opt-level-gated IR optimization pipeline behind
+//!   `Engine::compile`: cleanup (const fold, canonicalize, CSE, DCE) plus
+//!   the low-rank re-merge fusion (the paper's merged scheme as a rewrite).
 //! * `native` — pure-rust CPU interpreter, the **default** backend: the
 //!   whole request path (register → batch → execute → metrics) runs on
 //!   stock `cargo test` with no external runtime library.
@@ -12,15 +15,18 @@
 //! * `artifacts` — the python-AOT artifact library (HLO text + weights).
 //!
 //! The `Backend` trait covers engine identity, computation compilation,
-//! buffer upload and execution; everything above it (`coordinator`,
-//! `harness`, `decompose::rank_opt`, the bins and the integration tests)
-//! is backend-agnostic.
+//! buffer upload and execution, and is crate-internal: everything above
+//! the runtime (`coordinator`, `harness`, `decompose::rank_opt`, the bins
+//! and the integration tests) goes through `Engine::compile(graph,
+//! &CompileOptions)`, which runs the `passes` pipeline before the backend
+//! sees the graph and returns a `Compiled` handle carrying `PassStats`.
 
 pub mod artifacts;
 pub mod graph;
 pub mod layer_factory;
 pub mod native;
 pub mod netbuilder;
+pub mod passes;
 #[cfg(feature = "xla-pjrt")]
 pub mod xla_backend;
 
@@ -30,9 +36,14 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use graph::Graph;
+pub use passes::{CompileOptions, OptLevel, PassRecord, PassStats};
 
 /// Host-side f32 tensor handed around by the coordinator and the tests.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// Deliberately NOT `PartialEq`: exact f32 equality across graphs invites
+/// flaky comparisons — use [`HostTensor::approx_eq`] (or compare `.data`
+/// explicitly when bitwise identity is the point).
+#[derive(Clone, Debug)]
 pub struct HostTensor {
     pub dims: Vec<usize>,
     pub data: Vec<f32>,
@@ -47,6 +58,17 @@ impl HostTensor {
     pub fn zeros(dims: Vec<usize>) -> HostTensor {
         let n = dims.iter().product();
         HostTensor { dims, data: vec![0.0; n] }
+    }
+
+    /// Shape-exact, elementwise-within-`tol` comparison (absolute
+    /// tolerance; NaN never compares equal).
+    pub fn approx_eq(&self, other: &HostTensor, tol: f32) -> bool {
+        self.dims == other.dims
+            && self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .all(|(a, b)| (a - b).abs() <= tol)
     }
 }
 
@@ -69,6 +91,29 @@ impl Buffer {
             bail!("buffer decomposed to zero tensors");
         }
         Ok(parts.remove(0))
+    }
+
+    /// Typed i32 readback (label buffers from `trainsim::data`): returns
+    /// `(dims, data)`. The f32 path (`to_host`) rejects i32 buffers, and
+    /// vice versa — no silent reinterpretation.
+    pub fn to_host_i32(&self) -> Result<(Vec<usize>, Vec<i32>)> {
+        match self {
+            Buffer::I32 { dims, data } => Ok((dims.clone(), data.as_ref().clone())),
+            Buffer::F32(_) => bail!("f32 buffer read back as i32"),
+            #[cfg(feature = "xla-pjrt")]
+            Buffer::Pjrt(b) => {
+                let lit = b
+                    .to_literal_sync()
+                    .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+                let shape =
+                    lit.array_shape().map_err(|e| anyhow::anyhow!("array_shape: {e:?}"))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec<i32>: {e:?}"))?;
+                Ok((dims, data))
+            }
+        }
     }
 
     /// Host copies of every component (PJRT tuples flatten; native buffers
@@ -99,7 +144,11 @@ impl Buffer {
 }
 
 /// One execution backend: engine identity, compilation, upload, execute.
-pub trait Backend {
+///
+/// Crate-internal by design: `compile_graph` receives the graph exactly
+/// as the pass pipeline left it, so external callers must go through
+/// `Engine::compile` (the only place optimization levels are applied).
+pub(crate) trait Backend {
     fn name(&self) -> &'static str;
     fn compile_graph(&self, graph: &Graph) -> Result<Arc<dyn BackendExec>>;
     fn compile_hlo_text_file(&self, path: &Path) -> Result<Arc<dyn BackendExec>>;
@@ -108,7 +157,7 @@ pub trait Backend {
 }
 
 /// A compiled computation, executable over backend buffers.
-pub trait BackendExec {
+pub(crate) trait BackendExec {
     fn execute(&self, args: &[&Buffer]) -> Result<Vec<Buffer>>;
 }
 
@@ -159,18 +208,27 @@ impl Engine {
         self.backend.name().to_string()
     }
 
-    /// Compile a graph-IR computation.
-    pub fn compile(&self, graph: &Graph) -> Result<Executable> {
-        let raw = self.backend.compile_graph(graph)?;
-        Ok(Executable { raw, engine: self.clone() })
+    /// Compile a graph-IR computation: run the `passes` pipeline selected
+    /// by `opts` over the IR, hand the rewritten graph to the backend, and
+    /// return the executable together with its `PassStats`.
+    pub fn compile(&self, graph: &Graph, opts: &CompileOptions) -> Result<Compiled> {
+        let (optimized, stats) = passes::run_pipeline(graph, opts);
+        let raw = self.backend.compile_graph(&optimized)?;
+        Ok(Compiled { raw, engine: self.clone(), stats: Arc::new(stats) })
     }
 
     /// Compile an HLO-text file (the python AOT interchange format — see
     /// `python/compile/aot.py` for why text, not serialized proto).
-    /// PJRT-only: the native backend reports a descriptive error.
-    pub fn compile_hlo_text_file(&self, path: &Path) -> Result<Executable> {
+    /// PJRT-only: the native backend reports a descriptive error. The
+    /// returned handle carries empty (`external`) pass stats: HLO modules
+    /// bypass the IR pipeline and are optimized by XLA itself.
+    pub fn compile_hlo_text_file(&self, path: &Path) -> Result<Compiled> {
         let raw = self.backend.compile_hlo_text_file(path)?;
-        Ok(Executable { raw, engine: self.clone() })
+        Ok(Compiled {
+            raw,
+            engine: self.clone(),
+            stats: Arc::new(PassStats::external()),
+        })
     }
 
     /// Upload an f32 host buffer to the backend.
@@ -184,16 +242,24 @@ impl Engine {
     }
 }
 
-/// A compiled computation plus conveniences for host/buffer execution.
+/// A compiled computation plus conveniences for host/buffer execution and
+/// the record of what the pass pipeline did to its graph.
 #[derive(Clone)]
-pub struct Executable {
+pub struct Compiled {
     raw: Arc<dyn BackendExec>,
     engine: Engine,
+    stats: Arc<PassStats>,
 }
 
-impl Executable {
+impl Compiled {
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    /// Per-pass node counts, fusions applied and wall time. Empty
+    /// (`PassStats::external`) for HLO-text artifacts.
+    pub fn stats(&self) -> &PassStats {
+        &self.stats
     }
 
     /// Execute with backend buffers (hot path — no host copies on PJRT).
@@ -238,10 +304,13 @@ mod tests {
         let b = GraphBuilder::new("t");
         let p = b.parameter(0, &[2, 2], "x").unwrap();
         let out = (p.clone() + p).unwrap();
-        let exe = eng.compile(&b.build(&out).unwrap()).unwrap();
+        let exe = eng
+            .compile(&b.build(&out).unwrap(), &CompileOptions::default())
+            .unwrap();
         let x = HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
         let res = exe.run_hosts(&[x]).unwrap();
         assert_eq!(res[0].data, vec![2.0, 4.0, 6.0, 8.0]);
+        assert!(exe.stats().nodes_after <= exe.stats().nodes_before);
     }
 
     #[test]
@@ -249,10 +318,13 @@ mod tests {
         let eng = engine();
         let b = GraphBuilder::new("t2");
         let p = b.parameter(0, &[4], "x").unwrap();
-        let exe = eng.compile(&b.build(&p.sqrt().unwrap()).unwrap()).unwrap();
+        let exe = eng
+            .compile(&b.build(&p.sqrt().unwrap()).unwrap(), &CompileOptions::o0())
+            .unwrap();
         let buf = eng.upload(&[1.0, 4.0, 9.0, 16.0], &[4]).unwrap();
         let out = exe.run_to_host(&[&buf]).unwrap();
         assert_eq!(out[0].data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(exe.stats().passes.is_empty(), "O0 must run no passes");
     }
 
     #[test]
@@ -289,5 +361,32 @@ mod tests {
         let b = eng.upload_i32(&[1, 2, 3], &[3]).unwrap();
         assert!(b.to_host().is_err());
         assert!(b.sync().is_ok());
+    }
+
+    #[test]
+    fn i32_typed_readback() {
+        let eng = engine();
+        let labels = [3i32, 1, 4, 1, 5, 9];
+        let b = eng.upload_i32(&labels, &[2, 3]).unwrap();
+        let (dims, data) = b.to_host_i32().unwrap();
+        assert_eq!(dims, vec![2, 3]);
+        assert_eq!(data, labels);
+        // and the f32 buffer rejects the typed i32 readback
+        let f = eng.upload(&[1.0, 2.0], &[2]).unwrap();
+        assert!(f.to_host_i32().is_err());
+    }
+
+    #[test]
+    fn host_tensor_approx_eq() {
+        let a = HostTensor::new(vec![2], vec![1.0, 2.0]);
+        let b = HostTensor::new(vec![2], vec![1.0 + 5e-7, 2.0]);
+        assert!(a.approx_eq(&b, 1e-6));
+        assert!(!a.approx_eq(&b, 1e-8));
+        // shape mismatch is never approximately equal
+        let c = HostTensor::new(vec![1, 2], vec![1.0, 2.0]);
+        assert!(!a.approx_eq(&c, 1.0));
+        // NaN poisons equality
+        let d = HostTensor::new(vec![2], vec![f32::NAN, 2.0]);
+        assert!(!d.approx_eq(&d, 1.0));
     }
 }

@@ -14,7 +14,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::graph::{Graph, GraphBuilder, Op};
 use super::layer_factory as lf;
-use super::{Buffer, Engine, Executable};
+use super::{Buffer, Compiled, CompileOptions, Engine, PassStats};
 use crate::decompose::{Plan, Scheme};
 use crate::model::{Arch, BlockKind, ConvSite, SiteKind};
 use crate::util::rng::Rng;
@@ -221,7 +221,7 @@ pub fn build_forward(
 /// A compiled network with weights resident on the backend — the unit the
 /// fps benchmarks (and the coordinator's synthetic workers) execute.
 pub struct BuiltNet {
-    pub exe: Executable,
+    pub exe: Compiled,
     pub weight_bufs: Vec<Buffer>,
     pub batch: usize,
     pub hw: usize,
@@ -229,7 +229,7 @@ pub struct BuiltNet {
 }
 
 impl BuiltNet {
-    /// Compile (arch, plan) and upload He-initialised weights.
+    /// Compile (arch, plan) under `opts` and upload He-initialised weights.
     pub fn compile(
         engine: &Engine,
         arch: &Arch,
@@ -237,9 +237,10 @@ impl BuiltNet {
         batch: usize,
         hw: usize,
         seed: u64,
+        opts: &CompileOptions,
     ) -> Result<BuiltNet> {
         let (graph, specs) = build_forward(arch, plan, batch, hw)?;
-        let exe = engine.compile(&graph)?;
+        let exe = engine.compile(&graph, opts)?;
         let mut rng = Rng::new(seed);
         let mut weight_bufs = Vec::with_capacity(specs.len());
         for spec in &specs {
@@ -266,9 +267,10 @@ impl BuiltNet {
         batch: usize,
         hw: usize,
         params: &crate::decompose::params::Params,
+        opts: &CompileOptions,
     ) -> Result<BuiltNet> {
         let (graph, specs) = build_forward(arch, plan, batch, hw)?;
-        let exe = engine.compile(&graph)?;
+        let exe = engine.compile(&graph, opts)?;
         let mut weight_bufs = Vec::with_capacity(specs.len());
         for spec in &specs {
             let t = params
@@ -280,6 +282,11 @@ impl BuiltNet {
             weight_bufs.push(engine.upload(&t.data, &t.dims)?);
         }
         Ok(BuiltNet { exe, weight_bufs, batch, hw, classes: arch.classes })
+    }
+
+    /// What the pass pipeline did to this network's graph.
+    pub fn pass_stats(&self) -> &PassStats {
+        self.exe.stats()
     }
 
     /// Run one forward pass on an input buffer; returns the logits buffer.
@@ -301,7 +308,9 @@ mod tests {
         let engine = Engine::native();
         let arch = Arch::by_name("resnet-mini").unwrap();
         let plan = plan_variant(&arch, variant, 2.0, 2, None).unwrap();
-        let net = BuiltNet::compile(&engine, &arch, &plan, 2, 16, 7).unwrap();
+        let net =
+            BuiltNet::compile(&engine, &arch, &plan, 2, 16, 7, &CompileOptions::default())
+                .unwrap();
         let x = crate::util::det_input(2, 16);
         let xb = engine.upload(&x, &[2, 3, 16, 16]).unwrap();
         let out = net.forward(&xb).unwrap();

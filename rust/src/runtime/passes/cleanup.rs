@@ -1,0 +1,423 @@
+//! Cleanup passes: constant folding, reshape/transpose canonicalization,
+//! broadcast folding, CSE and DCE.
+//!
+//! All of these preserve outputs bitwise — they never reassociate f32
+//! arithmetic, only remove or alias redundant nodes. Every pass rebuilds
+//! the node list through the crate-internal `Rewriter`, which keeps the
+//! append-only topological invariant of `Graph` intact by construction.
+
+use std::collections::HashMap;
+
+use crate::runtime::graph::{Graph, Node, NodeId, OpKind};
+
+/// Node-list builder with an old-id → new-id map. Passes walk the source
+/// graph in order (inputs always precede users), so by the time a node is
+/// visited all of its inputs are already remapped.
+pub(crate) struct Rewriter {
+    nodes: Vec<Node>,
+    map: Vec<NodeId>,
+}
+
+impl Rewriter {
+    pub(crate) fn new(capacity: usize) -> Rewriter {
+        Rewriter { nodes: Vec::with_capacity(capacity), map: Vec::with_capacity(capacity) }
+    }
+
+    /// Append a node to the rewritten graph and return its id.
+    pub(crate) fn push(&mut self, op: OpKind, inputs: Vec<NodeId>, dims: Vec<usize>) -> NodeId {
+        self.nodes.push(Node { op, inputs, dims });
+        NodeId(self.nodes.len() - 1)
+    }
+
+    /// The already-rewritten node behind a new-space id.
+    pub(crate) fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    pub(crate) fn remap(&self, old: NodeId) -> NodeId {
+        self.map[old.0]
+    }
+
+    fn finish(self, g: &Graph) -> Graph {
+        let root = self.map[g.root.0];
+        Graph { name: g.name.clone(), nodes: self.nodes, n_params: g.n_params, root }
+    }
+}
+
+/// What a local rule decided for one (input-remapped) node.
+enum Decision {
+    /// Copy the node through unchanged (with remapped inputs).
+    Keep,
+    /// Point users at an existing new-space node instead.
+    Alias(NodeId),
+    /// Emit a replacement node.
+    Replace(Node),
+}
+
+/// Drive a local rewrite rule over the whole graph. The rule sees each
+/// node with inputs already remapped into the new space and may inspect
+/// prior rewritten nodes through the `Rewriter`.
+fn local_pass(
+    g: &Graph,
+    mut rule: impl FnMut(&Rewriter, &Node) -> Decision,
+) -> (Graph, usize) {
+    let mut rw = Rewriter::new(g.nodes.len());
+    let mut rewrites = 0usize;
+    for node in &g.nodes {
+        let remapped = Node {
+            op: node.op.clone(),
+            inputs: node.inputs.iter().map(|&i| rw.remap(i)).collect(),
+            dims: node.dims.clone(),
+        };
+        let id = match rule(&rw, &remapped) {
+            Decision::Keep => rw.push(remapped.op, remapped.inputs, remapped.dims),
+            Decision::Alias(id) => {
+                rewrites += 1;
+                id
+            }
+            Decision::Replace(n) => {
+                rewrites += 1;
+                rw.push(n.op, n.inputs, n.dims)
+            }
+        };
+        rw.map.push(id);
+    }
+    (rw.finish(g), rewrites)
+}
+
+fn const_of(rw: &Rewriter, id: NodeId) -> Option<f32> {
+    match rw.node(id).op {
+        OpKind::ConstScalar { value } => Some(value),
+        _ => None,
+    }
+}
+
+/// Scalar constant folding plus the `x * 1` identity (constants must be
+/// scalar: tensor-shaped constants do not exist in this IR).
+///
+/// Only *bitwise-exact* identities are applied: `x * 1.0` preserves
+/// `-0.0` and NaN exactly, whereas `x + 0.0` would flip `-0.0` to `+0.0`
+/// and `max(x, -inf)` would swallow NaN (the interpreter's
+/// `f32::max(NaN, -inf)` returns `-inf`) — those stay in the graph so O1
+/// keeps its bit-identity guarantee.
+pub fn fold_constants(g: &Graph) -> (Graph, usize) {
+    local_pass(g, |rw, node| {
+        match &node.op {
+            OpKind::Add | OpKind::Mul | OpKind::Max => {
+                let (a, b) = (node.inputs[0], node.inputs[1]);
+                let (ca, cb) = (const_of(rw, a), const_of(rw, b));
+                let f: fn(f32, f32) -> f32 = match node.op {
+                    OpKind::Add => |x, y| x + y,
+                    OpKind::Mul => |x, y| x * y,
+                    _ => f32::max,
+                };
+                if let (Some(x), Some(y)) = (ca, cb) {
+                    if node.dims.is_empty() {
+                        return Decision::Replace(Node {
+                            op: OpKind::ConstScalar { value: f(x, y) },
+                            inputs: vec![],
+                            dims: vec![],
+                        });
+                    }
+                }
+                if matches!(node.op, OpKind::Mul) {
+                    // `x * 1 == x` requires the surviving operand to carry
+                    // the output shape itself.
+                    if cb == Some(1.0) && rw.node(a).dims == node.dims {
+                        return Decision::Alias(a);
+                    }
+                    if ca == Some(1.0) && rw.node(b).dims == node.dims {
+                        return Decision::Alias(b);
+                    }
+                }
+                Decision::Keep
+            }
+            OpKind::Sqrt => match const_of(rw, node.inputs[0]) {
+                Some(v) if node.dims.is_empty() => Decision::Replace(Node {
+                    op: OpKind::ConstScalar { value: v.sqrt() },
+                    inputs: vec![],
+                    dims: vec![],
+                }),
+                _ => Decision::Keep,
+            },
+            _ => Decision::Keep,
+        }
+    })
+}
+
+fn is_identity_perm(perm: &[usize]) -> bool {
+    perm.iter().enumerate().all(|(i, &p)| i == p)
+}
+
+/// Reshape/transpose canonicalization + elimination and broadcast folding:
+/// * `transpose(transpose(x))` composes; identity transposes vanish
+/// * `reshape(reshape(x))` collapses; no-op reshapes vanish
+/// * identity `broadcast_in_dim` vanishes
+/// * a scalar broadcast feeding an elementwise op is replaced by the
+///   scalar itself (binary ops broadcast rank-0 operands natively)
+pub fn canonicalize(g: &Graph) -> (Graph, usize) {
+    local_pass(g, |rw, node| match &node.op {
+        OpKind::Transpose { perm } => {
+            let src = node.inputs[0];
+            if let OpKind::Transpose { perm: inner } = &rw.node(src).op {
+                // out axis i takes src axis perm[i], which takes grand-src
+                // axis inner[perm[i]]
+                let composed: Vec<usize> = perm.iter().map(|&p| inner[p]).collect();
+                let grand = rw.node(src).inputs[0];
+                if is_identity_perm(&composed) {
+                    return Decision::Alias(grand);
+                }
+                return Decision::Replace(Node {
+                    op: OpKind::Transpose { perm: composed },
+                    inputs: vec![grand],
+                    dims: node.dims.clone(),
+                });
+            }
+            if is_identity_perm(perm) {
+                return Decision::Alias(src);
+            }
+            Decision::Keep
+        }
+        OpKind::Reshape => {
+            let src = node.inputs[0];
+            if rw.node(src).dims == node.dims {
+                return Decision::Alias(src);
+            }
+            if matches!(rw.node(src).op, OpKind::Reshape) {
+                let grand = rw.node(src).inputs[0];
+                if rw.node(grand).dims == node.dims {
+                    return Decision::Alias(grand);
+                }
+                return Decision::Replace(Node {
+                    op: OpKind::Reshape,
+                    inputs: vec![grand],
+                    dims: node.dims.clone(),
+                });
+            }
+            Decision::Keep
+        }
+        OpKind::BroadcastInDim { mapping } => {
+            let src = node.inputs[0];
+            if rw.node(src).dims == node.dims && is_identity_perm(mapping) {
+                return Decision::Alias(src);
+            }
+            Decision::Keep
+        }
+        OpKind::Add | OpKind::Mul | OpKind::Max => {
+            // Fold `binary(x, broadcast(scalar))` to `binary(x, scalar)` —
+            // only one side, and only while the other operand still pins
+            // the output shape.
+            let (a, b) = (node.inputs[0], node.inputs[1]);
+            let scalar_source = |id: NodeId| -> Option<NodeId> {
+                match rw.node(id).op {
+                    OpKind::Broadcast => {
+                        let s = rw.node(id).inputs[0];
+                        rw.node(s).dims.is_empty().then_some(s)
+                    }
+                    _ => None,
+                }
+            };
+            if rw.node(a).dims == node.dims {
+                if let Some(s) = scalar_source(b) {
+                    return Decision::Replace(Node {
+                        op: node.op.clone(),
+                        inputs: vec![a, s],
+                        dims: node.dims.clone(),
+                    });
+                }
+            }
+            if rw.node(b).dims == node.dims {
+                if let Some(s) = scalar_source(a) {
+                    return Decision::Replace(Node {
+                        op: node.op.clone(),
+                        inputs: vec![s, b],
+                        dims: node.dims.clone(),
+                    });
+                }
+            }
+            Decision::Keep
+        }
+        _ => Decision::Keep,
+    })
+}
+
+/// Common-subexpression elimination: structurally identical nodes (same
+/// op, same rewritten inputs, same shape) collapse to the first
+/// occurrence. Sound because the IR is pure; parameters are naturally
+/// unique (duplicate indices are rejected at build time).
+pub fn cse(g: &Graph) -> (Graph, usize) {
+    let mut seen: HashMap<String, NodeId> = HashMap::new();
+    local_pass(g, move |rw, node| {
+        let key = format!("{:?}|{:?}|{:?}", node.op, node.inputs, node.dims);
+        match seen.get(&key) {
+            Some(&id) => Decision::Alias(id),
+            None => {
+                // the node about to be pushed gets the next free id; the
+                // driver pushes exactly one node on Keep
+                seen.insert(key, NodeId(rw.nodes.len()));
+                Decision::Keep
+            }
+        }
+    })
+}
+
+/// Dead-node elimination. Parameters are always kept — they define the
+/// positional call ABI (`n_params` and the execute-time argument list),
+/// and both backends already skip evaluating unused parameters.
+pub fn dce(g: &Graph) -> (Graph, usize) {
+    let mut live = vec![false; g.nodes.len()];
+    let mut stack = vec![g.root];
+    while let Some(id) = stack.pop() {
+        if live[id.0] {
+            continue;
+        }
+        live[id.0] = true;
+        stack.extend(g.nodes[id.0].inputs.iter().copied());
+    }
+    for (i, node) in g.nodes.iter().enumerate() {
+        if matches!(node.op, OpKind::Parameter { .. }) {
+            live[i] = true;
+        }
+    }
+
+    let removed = live.iter().filter(|l| !**l).count();
+    if removed == 0 {
+        return (g.clone(), 0);
+    }
+    let mut rw = Rewriter::new(g.nodes.len() - removed);
+    for (i, node) in g.nodes.iter().enumerate() {
+        let id = if live[i] {
+            let inputs = node.inputs.iter().map(|&x| rw.remap(x)).collect();
+            rw.push(node.op.clone(), inputs, node.dims.clone())
+        } else {
+            // dead: never referenced by a live node, so the placeholder
+            // mapping is unreachable
+            NodeId(usize::MAX)
+        };
+        rw.map.push(id);
+    }
+    (rw.finish(g), removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::graph::GraphBuilder;
+    use crate::runtime::native::NativeExecutable;
+    use crate::runtime::HostTensor;
+
+    fn run(g: &Graph, args: &[HostTensor]) -> Vec<f32> {
+        let exe = NativeExecutable::new(g.clone()).unwrap();
+        let refs: Vec<&HostTensor> = args.iter().collect();
+        exe.execute_hosts(&refs).unwrap().data
+    }
+
+    #[test]
+    fn transpose_pair_composes_away() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[2, 3], "x").unwrap();
+        let t = x.transpose(&[1, 0]).unwrap().transpose(&[1, 0]).unwrap();
+        let g = b.build(&t).unwrap();
+        let (g2, n) = canonicalize(&g);
+        assert!(n >= 1);
+        let (g3, _) = dce(&g2);
+        assert_eq!(g3.nodes.len(), 1, "only the parameter should survive");
+        let x0 = HostTensor::new(vec![2, 3], (0..6).map(|v| v as f32).collect());
+        assert_eq!(run(&g3, &[x0.clone()]), x0.data);
+    }
+
+    #[test]
+    fn reshape_chain_collapses() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[2, 3], "x").unwrap();
+        let r = x.reshape(&[6]).unwrap().reshape(&[3, 2]).unwrap();
+        let g = b.build(&r).unwrap();
+        let (g2, n) = canonicalize(&g);
+        assert_eq!(n, 1);
+        let (g3, _) = dce(&g2);
+        assert_eq!(g3.nodes.len(), 2); // parameter + one reshape
+    }
+
+    #[test]
+    fn scalar_constants_fold_and_dedupe() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[4], "x").unwrap();
+        let c1 = b.c0(2.0).unwrap();
+        let c2 = b.c0(2.0).unwrap();
+        let s = (c1 * c2).unwrap().sqrt().unwrap(); // sqrt(4) = 2
+        let y = (x * s).unwrap();
+        let g = b.build(&y).unwrap();
+        let (g2, folded) = fold_constants(&g);
+        assert!(folded >= 2, "mul-of-consts and sqrt-of-const must fold");
+        let (g3, _) = cse(&g2);
+        let (g4, _) = dce(&g3);
+        assert!(g4.nodes.len() < g.nodes.len());
+        let x0 = HostTensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(run(&g4, &[x0]), vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn mul_by_one_folds_but_inexact_identities_stay() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[3], "x").unwrap();
+        let zero = b.c0(0.0).unwrap();
+        let one = b.c0(1.0).unwrap();
+        let y = ((x + zero).unwrap() * one).unwrap();
+        let g = b.build(&y).unwrap();
+        let (g2, n) = fold_constants(&g);
+        // x*1 aliases away; x+0 must NOT fold (it would turn -0.0 into
+        // +0.0, breaking O1's bitwise guarantee)
+        assert_eq!(n, 1);
+        let (g3, _) = dce(&g2);
+        assert_eq!(g3.nodes.len(), 3); // param, const 0, add
+        let x0 = HostTensor::new(vec![3], vec![-0.0, 1.0, f32::NAN]);
+        let out = run(&g3, &[x0]);
+        assert_eq!(out[1], 1.0);
+        assert!(out[2].is_nan());
+    }
+
+    #[test]
+    fn broadcast_of_scalar_feeds_binary_directly() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[2, 2], "x").unwrap();
+        let big = b.c0(5.0).unwrap().broadcast(&[2, 2]).unwrap();
+        let y = x.max(&big).unwrap();
+        let g = b.build(&y).unwrap();
+        let (g2, n) = canonicalize(&g);
+        assert_eq!(n, 1);
+        let (g3, _) = dce(&g2);
+        // parameter, const, max — the broadcast is gone
+        assert_eq!(g3.nodes.len(), 3);
+        let x0 = HostTensor::new(vec![2, 2], vec![1.0, 9.0, 3.0, 7.0]);
+        assert_eq!(run(&g3, &[x0]), vec![5.0, 9.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn dce_keeps_unused_parameters() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[2], "x").unwrap();
+        let _unused = b.parameter(1, &[3], "w").unwrap();
+        let y = (x.clone() + x).unwrap();
+        let g = b.build(&y).unwrap();
+        let (g2, _) = dce(&g);
+        assert_eq!(g2.n_params, 2);
+        assert_eq!(g2.param_dims(), vec![vec![2], vec![3]]);
+    }
+
+    #[test]
+    fn cse_is_structural_not_accidental() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[2], "x").unwrap();
+        let a = x.slice_in_dim1(0, 1, 0).unwrap();
+        let bb = x.slice_in_dim1(0, 1, 0).unwrap(); // identical
+        let c = x.slice_in_dim1(1, 2, 0).unwrap(); // different
+        let y = ((a + bb).unwrap() + c).unwrap();
+        let g = b.build(&y).unwrap();
+        let (g2, merged) = cse(&g);
+        assert_eq!(merged, 1);
+        let (g3, _) = dce(&g2);
+        assert_eq!(g3.nodes.len(), g.nodes.len() - 1);
+        let x0 = HostTensor::new(vec![2], vec![3.0, 4.0]);
+        assert_eq!(run(&g3, &[x0]), vec![10.0]);
+    }
+}

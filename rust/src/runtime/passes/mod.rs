@@ -1,0 +1,257 @@
+//! IR optimization-pass pipeline behind `Engine::compile`.
+//!
+//! The paper's §2.3 observation is that naive low-rank decomposition more
+//! than doubles network depth, and the latency win only materialises once
+//! decomposed layers are merged back where the hardware says decomposition
+//! loses. `decompose::plan_variant` expresses that statically (the
+//! "merged" plan); this module expresses it dynamically, as a graph
+//! rewrite every backend benefits from: `Engine::compile(graph, options)`
+//! runs an opt-level-gated pipeline over the backend-neutral IR before the
+//! backend ever sees it, and returns the per-pass accounting in
+//! `PassStats`.
+//!
+//! Passes (see `cleanup` and `remerge`):
+//!
+//! | pass         | level | effect                                         |
+//! |--------------|-------|------------------------------------------------|
+//! | remerge      | O2    | contract adjacent low-rank factor pairs back   |
+//! |              |       | into one weight contraction where              |
+//! |              |       | `model::cost::rank_efficiency` says the        |
+//! |              |       | decomposed form loses at the configured lane   |
+//! | fold-const   | O1    | scalar const folding + `x·1` (bitwise-exact)   |
+//! | canonicalize | O1    | reshape/transpose composition + elimination,   |
+//! |              |       | broadcast folding                              |
+//! | cse          | O1    | common-subexpression elimination               |
+//! | dce          | O1    | dead-node elimination (parameters are kept:    |
+//! |              |       | they define the call ABI)                      |
+//!
+//! The cleanup family runs to a bounded fixpoint; `remerge` runs first so
+//! it matches the pristine shapes `layer_factory`/`netbuilder` emit, and
+//! cleanup then sweeps the factor nodes the fusion orphaned.
+
+pub mod cleanup;
+pub mod remerge;
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::graph::Graph;
+
+/// How aggressively `Engine::compile` rewrites the IR.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum OptLevel {
+    /// Compile the graph exactly as built (the numerical reference).
+    O0,
+    /// Cleanup only: constant folding, reshape/transpose canonicalization,
+    /// broadcast folding, CSE, DCE. Bitwise-identical outputs.
+    O1,
+    /// O1 plus low-rank re-merge fusion (may reassociate f32 sums).
+    O2,
+}
+
+impl OptLevel {
+    pub const ALL: [OptLevel; 3] = [OptLevel::O0, OptLevel::O1, OptLevel::O2];
+
+    /// Highest level (what `--opt-level` defaults to).
+    pub const TOP: OptLevel = OptLevel::O2;
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptLevel::O0 => "O0",
+            OptLevel::O1 => "O1",
+            OptLevel::O2 => "O2",
+        }
+    }
+
+    /// Parse a CLI spelling: `0`/`1`/`2` or `O0`/`o1`/...
+    pub fn parse(s: &str) -> Result<OptLevel> {
+        Ok(match s.trim_start_matches(|ch| ch == 'O' || ch == 'o') {
+            "0" => OptLevel::O0,
+            "1" => OptLevel::O1,
+            "2" => OptLevel::O2,
+            _ => bail!("bad opt level {s:?} (expected 0, 1 or 2)"),
+        })
+    }
+}
+
+/// Options for `Engine::compile`. Carries everything the pass pipeline
+/// needs; backends never see it (they receive the rewritten graph).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompileOptions {
+    pub opt_level: OptLevel,
+    /// Hardware lane width (8/16 = AVX, 128 = MXU) used by the re-merge
+    /// profitability gate — the same knob as `model::cost::tile_efficiency`.
+    pub lane: usize,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions { opt_level: OptLevel::TOP, lane: 16 }
+    }
+}
+
+impl CompileOptions {
+    /// No rewrites at all — the numerical reference configuration.
+    pub fn o0() -> CompileOptions {
+        CompileOptions { opt_level: OptLevel::O0, ..Default::default() }
+    }
+
+    pub fn level(opt_level: OptLevel) -> CompileOptions {
+        CompileOptions { opt_level, ..Default::default() }
+    }
+
+    /// Stable key fragment for executable caches (`EngineLayerTimer`).
+    pub fn cache_key(&self) -> String {
+        format!("{}l{}", self.opt_level.name(), self.lane)
+    }
+}
+
+/// One pipeline entry's accounting.
+#[derive(Clone, Debug)]
+pub struct PassRecord {
+    pub name: &'static str,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    /// Local rewrites applied (for `remerge`: fusions).
+    pub rewrites: usize,
+    pub wall_secs: f64,
+}
+
+/// What `Engine::compile` did to the graph, attached to every `Compiled`.
+#[derive(Clone, Debug, Default)]
+pub struct PassStats {
+    pub opt_level: Option<OptLevel>,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    /// Low-rank factor pairs contracted back by `remerge`.
+    pub fusions: usize,
+    pub wall_secs: f64,
+    pub passes: Vec<PassRecord>,
+}
+
+impl PassStats {
+    /// Stats for computations that never went through the IR pipeline
+    /// (HLO-text artifacts are compiled opaque).
+    pub fn external() -> PassStats {
+        PassStats::default()
+    }
+
+    pub fn nodes_removed(&self) -> usize {
+        self.nodes_before.saturating_sub(self.nodes_after)
+    }
+
+    /// One-line summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} -> {} nodes ({} fusions, {:.2} ms)",
+            self.opt_level.map(|l| l.name()).unwrap_or("external"),
+            self.nodes_before,
+            self.nodes_after,
+            self.fusions,
+            self.wall_secs * 1e3
+        )
+    }
+}
+
+/// Run the pipeline selected by `opts` and return the rewritten graph plus
+/// its accounting. O0 returns the input graph untouched.
+pub fn run_pipeline(graph: &Graph, opts: &CompileOptions) -> (Graph, PassStats) {
+    let t0 = Instant::now();
+    let mut stats = PassStats {
+        opt_level: Some(opts.opt_level),
+        nodes_before: graph.nodes.len(),
+        nodes_after: graph.nodes.len(),
+        ..Default::default()
+    };
+    if opts.opt_level == OptLevel::O0 {
+        stats.wall_secs = t0.elapsed().as_secs_f64();
+        return (graph.clone(), stats);
+    }
+
+    let mut g = graph.clone();
+    if opts.opt_level >= OptLevel::O2 {
+        let fusions = run_pass(&mut stats, "remerge", &mut g, |g| remerge::run(g, opts.lane));
+        stats.fusions = fusions;
+    }
+    // Cleanup to fixpoint. Each family member is individually idempotent
+    // but unlocks the others (fusion orphans feed DCE, composed transposes
+    // feed CSE, ...); the bound keeps pathological graphs from spinning.
+    // The final confirming round rebuilds the node list without changing
+    // it — accepted: graphs are a few hundred nodes, compile cost is
+    // dominated by the backend, and `EngineLayerTimer` caches results.
+    for _ in 0..4 {
+        let mut changed = 0;
+        changed += run_pass(&mut stats, "fold-const", &mut g, cleanup::fold_constants);
+        changed += run_pass(&mut stats, "canonicalize", &mut g, cleanup::canonicalize);
+        changed += run_pass(&mut stats, "cse", &mut g, cleanup::cse);
+        changed += run_pass(&mut stats, "dce", &mut g, cleanup::dce);
+        if changed == 0 {
+            break;
+        }
+    }
+    stats.nodes_after = g.nodes.len();
+    stats.wall_secs = t0.elapsed().as_secs_f64();
+    (g, stats)
+}
+
+fn run_pass(
+    stats: &mut PassStats,
+    name: &'static str,
+    g: &mut Graph,
+    pass: impl FnOnce(&Graph) -> (Graph, usize),
+) -> usize {
+    let t0 = Instant::now();
+    let before = g.nodes.len();
+    let (out, rewrites) = pass(g);
+    let record = PassRecord {
+        name,
+        nodes_before: before,
+        nodes_after: out.nodes.len(),
+        rewrites,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    };
+    *g = out;
+    stats.passes.push(record);
+    rewrites
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::graph::GraphBuilder;
+
+    #[test]
+    fn opt_level_parsing_and_order() {
+        assert_eq!(OptLevel::parse("0").unwrap(), OptLevel::O0);
+        assert_eq!(OptLevel::parse("O2").unwrap(), OptLevel::O2);
+        assert_eq!(OptLevel::parse("o1").unwrap(), OptLevel::O1);
+        assert!(OptLevel::parse("9").is_err());
+        assert!(OptLevel::O0 < OptLevel::O1 && OptLevel::O1 < OptLevel::O2);
+    }
+
+    #[test]
+    fn o0_is_identity() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[2], "x").unwrap();
+        let y = (x.clone() + x).unwrap();
+        let g = b.build(&y).unwrap();
+        let (out, stats) = run_pipeline(&g, &CompileOptions::o0());
+        assert_eq!(out.nodes.len(), g.nodes.len());
+        assert!(stats.passes.is_empty());
+        assert_eq!(stats.fusions, 0);
+    }
+
+    #[test]
+    fn cleanup_records_every_pass() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[2], "x").unwrap();
+        let g = b.build(&x).unwrap();
+        let (_, stats) = run_pipeline(&g, &CompileOptions::level(OptLevel::O1));
+        let names: Vec<_> = stats.passes.iter().map(|p| p.name).collect();
+        assert!(names.contains(&"dce") && names.contains(&"cse"));
+        assert!(!names.contains(&"remerge"));
+        let (_, stats2) = run_pipeline(&g, &CompileOptions::default());
+        assert_eq!(stats2.passes[0].name, "remerge");
+    }
+}

@@ -1,0 +1,392 @@
+//! Low-rank re-merge fusion (the paper's §2.3 merging scheme as an IR
+//! rewrite).
+//!
+//! `netbuilder`/`layer_factory` lower an SVD-decomposed 1×1 conv or fc
+//! layer to a factor chain: `y = W1 · (W0 · x)` with `W0: [r, c]`,
+//! `W1: [s, r]`. On hardware that processes `lane`-wide tiles a poorly
+//! aligned rank `r` wastes lanes in *both* factor contractions (Fig. 2's
+//! cliff), so the decomposed form can be slower than the dense layer it
+//! replaced. Where `model::cost::rank_efficiency` says the decomposed
+//! form loses, this pass contracts the pair back into a single weight
+//! contraction:
+//!
+//! ```text
+//! W = W1 · W0          (s×r×c MACs, once per execution)
+//! y = W · x            (dense: s×c MACs per output element)
+//! ```
+//!
+//! The gate charges the weight merge to the fused side, amortized over
+//! the execution's output elements — so a conv over a feature map fuses
+//! freely while a small-batch fc head keeps its factors even at an
+//! unaligned rank (merging there would recompute W per request for
+//! nothing).
+//!
+//! which is exactly the merged scheme of `decompose::plan_variant`, except
+//! it now applies to *every* variant's graph — Algorithm 1's engine-backed
+//! timer measures merged-where-profitable graphs instead of naive ones.
+//!
+//! Two concrete emissions are matched (both from `conv1x1` / the fc head):
+//!
+//! * **conv chain** `dot(W1, transpose(dot(W0, x), [1,0,2,3]))`, all
+//!   contractions on axis 1 — the [S,C]×[N,C,H,W] convention.
+//! * **fc chain** `dot(dot(x, W0), W1)` with 2-D `x` — the [B,C]×[R,C]
+//!   convention.
+//!
+//! Factors with other consumers are left alone (the intermediate
+//! activation is observable), and the rewrite is only applied when the
+//! fused output shape provably equals the original.
+
+use crate::model::cost::rank_efficiency;
+use crate::runtime::graph::{Graph, Node, NodeId, OpKind};
+
+/// `true` when the decomposed pair is not worth keeping at this lane
+/// width. Per output element the factors cost `r(c+s)` MACs discounted
+/// by the rank's tile efficiency; the fused form costs `cs` MACs *plus*
+/// the weight merge `src` amortized over the `free_elems` output
+/// elements of this execution (W = W1·W0 is a graph node, recomputed
+/// every forward — cheap across a feature map, dominant for a tiny fc
+/// batch). Ties merge — equal arithmetic with one less kernel launch
+/// and no intermediate.
+pub fn decomposed_loses(r: usize, c: usize, s: usize, lane: usize, free_elems: usize) -> bool {
+    // lane 0 would divide by zero inside tile_efficiency; clamp so a bad
+    // programmatic CompileOptions degrades to lane-1 (always efficient)
+    // instead of panicking mid-compile.
+    let eff = rank_efficiency(r, lane.max(1)).max(1e-9);
+    let decomposed = (r * (c + s)) as f64 / eff;
+    let merged = (c * s) as f64 + (s * r * c) as f64 / free_elems.max(1) as f64;
+    decomposed >= merged
+}
+
+/// One fusable factor chain, in source-graph ids.
+struct Chain {
+    w0: NodeId,
+    w1: NodeId,
+    x: NodeId,
+    /// contraction axis of `x` (the channel axis)
+    x_contract: usize,
+    /// (r, c, s) of the pair, for the profitability gate
+    dims: (usize, usize, usize),
+    /// `dot(W, x)` output layout (conv convention) vs `dot(x, W)` (fc)
+    conv_layout: bool,
+}
+
+fn axis1(v: &[usize]) -> bool {
+    v.len() == 1 && v[0] == 1
+}
+
+/// `Some(true)` when the node is a dot contracting axis 1 against axis 1
+/// (the only contraction convention `conv1x1` and the fc head emit).
+fn as_dot_axis1(node: &Node) -> Option<bool> {
+    match &node.op {
+        OpKind::DotGeneral { lhs_contract, rhs_contract } => {
+            Some(axis1(lhs_contract) && axis1(rhs_contract))
+        }
+        _ => None,
+    }
+}
+
+/// Match the factor chain ending at `g.nodes[i]` (the outer dot).
+fn match_chain(g: &Graph, uses: &[usize], i: usize) -> Option<Chain> {
+    let outer = &g.nodes[i];
+    if !as_dot_axis1(outer)? {
+        return None;
+    }
+    let (a, b) = (outer.inputs[0], outer.inputs[1]);
+
+    // conv chain: outer = dot(w1, transpose(dot(w0, x), [1,0,2,3]))
+    let conv = || -> Option<Chain> {
+        let w1 = a;
+        if g.nodes[w1.0].dims.len() != 2 {
+            return None;
+        }
+        let t = &g.nodes[b.0];
+        match &t.op {
+            OpKind::Transpose { perm } if *perm == [1, 0, 2, 3] => {}
+            _ => return None,
+        }
+        if uses[b.0] != 1 {
+            return None;
+        }
+        let d1 = t.inputs[0];
+        if uses[d1.0] != 1 || !as_dot_axis1(&g.nodes[d1.0])? {
+            return None;
+        }
+        let (w0, x) = (g.nodes[d1.0].inputs[0], g.nodes[d1.0].inputs[1]);
+        if g.nodes[w0.0].dims.len() != 2 || g.nodes[x.0].dims.len() != 4 {
+            return None;
+        }
+        let (r, c) = (g.nodes[w0.0].dims[0], g.nodes[w0.0].dims[1]);
+        let s = g.nodes[w1.0].dims[0];
+        if g.nodes[w1.0].dims[1] != r {
+            return None;
+        }
+        Some(Chain { w0, w1, x, x_contract: 1, dims: (r, c, s), conv_layout: true })
+    };
+
+    // fc chain: outer = dot(dot(x, w0), w1)
+    let fc = || -> Option<Chain> {
+        let w1 = b;
+        if g.nodes[w1.0].dims.len() != 2 || uses[a.0] != 1 {
+            return None;
+        }
+        if !as_dot_axis1(&g.nodes[a.0])? {
+            return None;
+        }
+        let (x, w0) = (g.nodes[a.0].inputs[0], g.nodes[a.0].inputs[1]);
+        if g.nodes[w0.0].dims.len() != 2 || g.nodes[x.0].dims.len() != 2 {
+            return None;
+        }
+        let (r, c) = (g.nodes[w0.0].dims[0], g.nodes[w0.0].dims[1]);
+        let s = g.nodes[w1.0].dims[0];
+        if g.nodes[w1.0].dims[1] != r {
+            return None;
+        }
+        Some(Chain { w0, w1, x, x_contract: 1, dims: (r, c, s), conv_layout: false })
+    };
+
+    conv().or_else(fc)
+}
+
+/// Output elements of one execution (`x` free dims): amortizes the
+/// weight-merge cost in the profitability gate.
+fn free_elems(g: &Graph, ch: &Chain) -> usize {
+    g.nodes[ch.x.0]
+        .dims
+        .iter()
+        .enumerate()
+        .filter(|(ax, _)| *ax != ch.x_contract)
+        .map(|(_, &e)| e)
+        .product()
+}
+
+/// Expected output shape of the fused contraction `dot(W, x)` (conv) or
+/// `dot(x, W)` (fc): must equal the original outer dot's shape.
+fn fused_dims(g: &Graph, ch: &Chain) -> Vec<usize> {
+    let s = g.nodes[ch.w1.0].dims[0];
+    let x = &g.nodes[ch.x.0].dims;
+    let free: Vec<usize> = x
+        .iter()
+        .enumerate()
+        .filter(|(ax, _)| *ax != ch.x_contract)
+        .map(|(_, &e)| e)
+        .collect();
+    if ch.conv_layout {
+        let mut d = vec![s];
+        d.extend(free);
+        d
+    } else {
+        let mut d = free;
+        d.push(s);
+        d
+    }
+}
+
+/// Apply re-merge fusion across the graph. Returns the rewritten graph
+/// and the number of factor pairs contracted.
+pub fn run(g: &Graph, lane: usize) -> (Graph, usize) {
+    let mut uses = vec![0usize; g.nodes.len()];
+    for node in &g.nodes {
+        for inp in &node.inputs {
+            uses[inp.0] += 1;
+        }
+    }
+    uses[g.root.0] += 1;
+
+    let mut nodes: Vec<Node> = Vec::with_capacity(g.nodes.len());
+    let mut map: Vec<NodeId> = Vec::with_capacity(g.nodes.len());
+    let mut fusions = 0usize;
+    for (i, node) in g.nodes.iter().enumerate() {
+        let fused = match_chain(g, &uses, i).and_then(|ch| {
+            let (r, c, s) = ch.dims;
+            if !decomposed_loses(r, c, s, lane, free_elems(g, &ch)) {
+                return None;
+            }
+            if fused_dims(g, &ch) != node.dims {
+                return None; // defensive: never change the output shape
+            }
+            // W = dot(W1, W0): [s, r] × [r, c] contracting r → [s, c]
+            nodes.push(Node {
+                op: OpKind::DotGeneral { lhs_contract: vec![1], rhs_contract: vec![0] },
+                inputs: vec![map[ch.w1.0], map[ch.w0.0]],
+                dims: vec![s, c],
+            });
+            let m = NodeId(nodes.len() - 1);
+            let (inputs, lhs_contract, rhs_contract) = if ch.conv_layout {
+                (vec![m, map[ch.x.0]], vec![1], vec![ch.x_contract])
+            } else {
+                (vec![map[ch.x.0], m], vec![ch.x_contract], vec![1])
+            };
+            nodes.push(Node {
+                op: OpKind::DotGeneral { lhs_contract, rhs_contract },
+                inputs,
+                dims: node.dims.clone(),
+            });
+            fusions += 1;
+            Some(NodeId(nodes.len() - 1))
+        });
+        let id = match fused {
+            Some(id) => id,
+            None => {
+                nodes.push(Node {
+                    op: node.op.clone(),
+                    inputs: node.inputs.iter().map(|&x| map[x.0]).collect(),
+                    dims: node.dims.clone(),
+                });
+                NodeId(nodes.len() - 1)
+            }
+        };
+        map.push(id);
+    }
+    let root = map[g.root.0];
+    (
+        Graph { name: g.name.clone(), nodes, n_params: g.n_params, root },
+        fusions,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::graph::GraphBuilder;
+    use crate::runtime::native::NativeExecutable;
+    use crate::runtime::passes::cleanup::dce;
+    use crate::runtime::HostTensor;
+    use crate::util::rng::Rng;
+
+    /// The exact conv1x1 factor chain `layer_factory::conv1x1` emits.
+    fn svd_conv_graph(n: usize, c: usize, r: usize, s: usize, hw: usize) -> Graph {
+        let b = GraphBuilder::new("svd1x1");
+        let x = b.parameter(0, &[n, c, hw, hw], "x").unwrap();
+        let w0 = b.parameter(1, &[r, c], "w0").unwrap();
+        let w1 = b.parameter(2, &[s, r], "w1").unwrap();
+        let t = w0.dot_general(&x, &[1], &[1]).unwrap().transpose(&[1, 0, 2, 3]).unwrap();
+        let y = w1.dot_general(&t, &[1], &[1]).unwrap().transpose(&[1, 0, 2, 3]).unwrap();
+        b.build(&y).unwrap()
+    }
+
+    fn run_graph(g: &Graph, args: &[HostTensor]) -> Vec<f32> {
+        let exe = NativeExecutable::new(g.clone()).unwrap();
+        let refs: Vec<&HostTensor> = args.iter().collect();
+        exe.execute_hosts(&refs).unwrap().data
+    }
+
+    fn rand_args(n: usize, c: usize, r: usize, s: usize, hw: usize) -> Vec<HostTensor> {
+        let mut rng = Rng::new(9);
+        let mk = |dims: Vec<usize>, rng: &mut Rng| {
+            let len = dims.iter().product();
+            HostTensor::new(dims, (0..len).map(|_| rng.normal_f32()).collect())
+        };
+        vec![
+            mk(vec![n, c, hw, hw], &mut rng),
+            mk(vec![r, c], &mut rng),
+            mk(vec![s, r], &mut rng),
+        ]
+    }
+
+    #[test]
+    fn profitability_gate_follows_rank_efficiency() {
+        // aligned rank at 2x compression: decomposition wins, keep it
+        assert!(!decomposed_loses(16, 64, 64, 16, 4096));
+        // misaligned rank over a feature map: the wasted lanes flip it
+        assert!(decomposed_loses(33, 64, 64, 16, 4096));
+        // tiny misaligned rank on a small layer (the mini-net case)
+        assert!(decomposed_loses(4, 16, 16, 16, 32));
+        // full-rank "decomposition" always loses
+        assert!(decomposed_loses(64, 64, 64, 16, 4096));
+        // ...but a tiny-batch fc keeps its factors even misaligned: the
+        // per-execution weight merge would dominate
+        assert!(!decomposed_loses(33, 64, 64, 16, 2));
+    }
+
+    #[test]
+    fn conv_chain_fuses_and_preserves_numerics() {
+        let (n, c, r, s, hw) = (2, 8, 7, 8, 4); // r=7 at lane 16 loses
+        let g = svd_conv_graph(n, c, r, s, hw);
+        let (g2, fusions) = run(&g, 16);
+        assert_eq!(fusions, 1);
+        let (g3, removed) = dce(&g2);
+        assert!(removed >= 2, "factor dot + transpose must die");
+        let args = rand_args(n, c, r, s, hw);
+        let want = run_graph(&g, &args);
+        let got = run_graph(&g3, &args);
+        crate::util::check::assert_allclose(&got, &want, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn profitable_decomposition_is_left_alone() {
+        // r=4, c=s=64: factor MACs 512 vs dense 4096, perfectly tiled at
+        // lane 4 — decomposition clearly wins, nothing must fuse
+        let g = svd_conv_graph(1, 64, 4, 64, 2);
+        let (_, fusions) = run(&g, 4);
+        assert_eq!(fusions, 0);
+    }
+
+    #[test]
+    fn fc_chain_fuses() {
+        let (bsz, c, r, s) = (3, 8, 7, 8);
+        let b = GraphBuilder::new("fc");
+        let x = b.parameter(0, &[bsz, c], "x").unwrap();
+        let w0 = b.parameter(1, &[r, c], "w0").unwrap();
+        let w1 = b.parameter(2, &[s, r], "w1").unwrap();
+        let t = x.dot_general(&w0, &[1], &[1]).unwrap();
+        let y = t.dot_general(&w1, &[1], &[1]).unwrap();
+        let g = b.build(&y).unwrap();
+        let (g2, fusions) = run(&g, 16);
+        assert_eq!(fusions, 1);
+        let mut rng = Rng::new(3);
+        let args = vec![
+            HostTensor::new(vec![bsz, c], (0..bsz * c).map(|_| rng.normal_f32()).collect()),
+            HostTensor::new(vec![r, c], (0..r * c).map(|_| rng.normal_f32()).collect()),
+            HostTensor::new(vec![s, r], (0..s * r).map(|_| rng.normal_f32()).collect()),
+        ];
+        let want = run_graph(&g, &args);
+        let got = run_graph(&g2, &args);
+        crate::util::check::assert_allclose(&got, &want, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn fc_chain_with_transposed_weight_fuses_in_fc_layout() {
+        // W1 arriving through a Transpose node is still a 2-D operand, so
+        // the fc matcher fires — the rewrite must keep the fc [B, S]
+        // layout (regression: with B == S a conv-layout rewrite would
+        // silently transpose the output).
+        let (bsz, c, r, s) = (8, 8, 7, 8); // bsz == s on purpose
+        let b = GraphBuilder::new("fct");
+        let x = b.parameter(0, &[bsz, c], "x").unwrap();
+        let w0 = b.parameter(1, &[r, c], "w0").unwrap();
+        let w1t = b.parameter(2, &[r, s], "w1t").unwrap();
+        let w1 = w1t.transpose(&[1, 0]).unwrap();
+        let t = x.dot_general(&w0, &[1], &[1]).unwrap();
+        let y = t.dot_general(&w1, &[1], &[1]).unwrap();
+        let g = b.build(&y).unwrap();
+        let (g2, fusions) = run(&g, 16);
+        assert_eq!(fusions, 1);
+        let mut rng = Rng::new(5);
+        let mut mk = |dims: Vec<usize>| {
+            let n: usize = dims.iter().product();
+            HostTensor::new(dims, (0..n).map(|_| rng.normal_f32()).collect())
+        };
+        let args = vec![mk(vec![bsz, c]), mk(vec![r, c]), mk(vec![r, s])];
+        let want = run_graph(&g, &args);
+        let got = run_graph(&g2, &args);
+        crate::util::check::assert_allclose(&got, &want, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn shared_intermediate_blocks_fusion() {
+        // the factor intermediate feeds a second consumer: observable, so
+        // the chain must not be rewritten
+        let (n, c, r, s, hw) = (1, 8, 7, 8, 2);
+        let b = GraphBuilder::new("shared");
+        let x = b.parameter(0, &[n, c, hw, hw], "x").unwrap();
+        let w0 = b.parameter(1, &[r, c], "w0").unwrap();
+        let w1 = b.parameter(2, &[s, r], "w1").unwrap();
+        let t = w0.dot_general(&x, &[1], &[1]).unwrap().transpose(&[1, 0, 2, 3]).unwrap();
+        let y = w1.dot_general(&t, &[1], &[1]).unwrap();
+        let side = t.reduce_mean(&[0, 1, 2, 3], false).unwrap();
+        let both = (y.reduce_mean(&[0, 1, 2, 3], false).unwrap() + side).unwrap();
+        let g = b.build(&both).unwrap();
+        let (_, fusions) = run(&g, 16);
+        assert_eq!(fusions, 0);
+    }
+}

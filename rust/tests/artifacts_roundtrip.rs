@@ -16,7 +16,7 @@ use lrdx::decompose::{plan_variant, Variant};
 use lrdx::model::Arch;
 use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel, TrainSession};
 use lrdx::runtime::netbuilder::BuiltNet;
-use lrdx::runtime::{Engine, HostTensor};
+use lrdx::runtime::{CompileOptions, Engine, HostTensor};
 use lrdx::util::rng::Rng;
 use lrdx::util::{det_input, det_labels};
 
@@ -46,7 +46,16 @@ fn native_mini(engine: &Engine, variant: Variant, batch: usize, hw: usize) -> Bu
     let orig = init_orig_params(&arch, &mut rng);
     let plan = plan_variant(&arch, variant, 2.0, 2, None).unwrap();
     let params = decompose_params(&arch, &plan, &orig).unwrap();
-    BuiltNet::compile_with_params(engine, &arch, &plan, batch, hw, &params).unwrap()
+    BuiltNet::compile_with_params(
+        engine,
+        &arch,
+        &plan,
+        batch,
+        hw,
+        &params,
+        &CompileOptions::default(),
+    )
+    .unwrap()
 }
 
 fn forward_det(engine: &Engine, net: &BuiltNet) -> Vec<f32> {
@@ -135,7 +144,7 @@ fn pallas_artifact_matches_jax_numerics() {
     let w: Vec<f32> = (0..s * c * k * k).map(|_| rng.normal_f32()).collect();
     let (graph, shapes) = build_layer(&site, &Scheme::Orig, n, h).unwrap();
     assert_eq!(shapes, vec![vec![s, c, k, k]]);
-    let exe = Engine::native().compile(&graph).unwrap();
+    let exe = Engine::native().compile(&graph, &CompileOptions::default()).unwrap();
     let got = exe
         .run_hosts(&[
             HostTensor::new(vec![n, c, h, h], x.clone()),
@@ -241,7 +250,16 @@ fn train_artifact_first_step_matches_recorded_loss() {
     }
     let engine = Engine::native();
     let net =
-        BuiltNet::compile_with_params(&engine, &arch, &plan, 2, 16, &params).unwrap();
+        BuiltNet::compile_with_params(
+            &engine,
+            &arch,
+            &plan,
+            2,
+            16,
+            &params,
+            &CompileOptions::default(),
+        )
+        .unwrap();
     let logits = forward_det(&engine, &net);
     assert!(logits.iter().all(|v| v.is_finite()));
 }
@@ -275,17 +293,44 @@ fn training_reduces_loss_over_repeated_batches() {
     let mut rng = Rng::new(0x11E51D);
     let orig = init_orig_params(&arch, &mut rng);
     let plan = plan_variant(&arch, Variant::Orig, 2.0, 2, None).unwrap();
-    let net = BuiltNet::compile_with_params(&engine, &arch, &plan, 1, 16, &orig).unwrap();
+    let net = BuiltNet::compile_with_params(
+        &engine,
+        &arch,
+        &plan,
+        1,
+        16,
+        &orig,
+        &CompileOptions::default(),
+    )
+    .unwrap();
     let base = forward_det(&engine, &net);
 
-    let same = BuiltNet::compile_with_params(&engine, &arch, &plan, 1, 16, &orig).unwrap();
+    let same = BuiltNet::compile_with_params(
+        &engine,
+        &arch,
+        &plan,
+        1,
+        16,
+        &orig,
+        &CompileOptions::default(),
+    )
+    .unwrap();
     assert_eq!(base, forward_det(&engine, &same), "identical weights, different logits");
 
     let mut bumped = orig.clone();
     let fcw = bumped.get_mut("fc.w").unwrap();
     fcw.data[0] += 1.0;
     let changed =
-        BuiltNet::compile_with_params(&engine, &arch, &plan, 1, 16, &bumped).unwrap();
+        BuiltNet::compile_with_params(
+            &engine,
+            &arch,
+            &plan,
+            1,
+            16,
+            &bumped,
+            &CompileOptions::default(),
+        )
+        .unwrap();
     assert_ne!(
         base,
         forward_det(&engine, &changed),
@@ -312,7 +357,9 @@ fn resnet50_artifacts_load_and_execute() {
     let engine = Engine::native();
     let arch = Arch::by_name("resnet50").unwrap();
     let plan = plan_variant(&arch, Variant::Lrd, 2.0, 4, None).unwrap();
-    let net = BuiltNet::compile(&engine, &arch, &plan, 1, 32, 0xBEEF).unwrap();
+    let net =
+        BuiltNet::compile(&engine, &arch, &plan, 1, 32, 0xBEEF, &CompileOptions::default())
+            .unwrap();
     let logits = forward_det(&engine, &net);
     assert_eq!(logits.len(), 1000);
     assert!(logits.iter().all(|v| v.is_finite()));

@@ -16,7 +16,7 @@ use lrdx::decompose::{plan_variant, Variant};
 use lrdx::model::Arch;
 use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel};
 use lrdx::runtime::netbuilder::BuiltNet;
-use lrdx::runtime::Engine;
+use lrdx::runtime::{CompileOptions, Engine};
 
 const HW: usize = 32;
 const BATCH: usize = 8;
@@ -50,7 +50,15 @@ fn model_factory(
             let arch = Arch::by_name("resnet-mini").expect("resnet-mini");
             let v = Variant::by_name(variant).expect("variant");
             let plan = plan_variant(&arch, v, 2.0, 2, None)?;
-            let net = BuiltNet::compile(engine, &arch, &plan, BATCH, HW, 0x5EED)?;
+            let net = BuiltNet::compile(
+                engine,
+                &arch,
+                &plan,
+                BATCH,
+                HW,
+                0x5EED,
+                &CompileOptions::default(),
+            )?;
             Ok(Box::new(net) as Box<dyn BatchModel>)
         }
     }

@@ -10,7 +10,7 @@ use lrdx::decompose::params::{decompose_params, init_orig_params};
 use lrdx::decompose::{plan_variant, Plan, Scheme, Variant};
 use lrdx::model::Arch;
 use lrdx::runtime::netbuilder::BuiltNet;
-use lrdx::runtime::Engine;
+use lrdx::runtime::{CompileOptions, Engine};
 use lrdx::util::check::assert_allclose;
 use lrdx::util::rng::Rng;
 
@@ -22,7 +22,16 @@ fn logits(
     batch: usize,
     hw: usize,
 ) -> Vec<f32> {
-    let net = BuiltNet::compile_with_params(engine, arch, plan, batch, hw, params).unwrap();
+    let net = BuiltNet::compile_with_params(
+        engine,
+        arch,
+        plan,
+        batch,
+        hw,
+        params,
+        &CompileOptions::o0(),
+    )
+    .unwrap();
     let x = lrdx::util::det_input(batch, hw);
     let xb = engine.upload(&x, &[batch, 3, hw, hw]).unwrap();
     net.forward(&xb).unwrap().to_host().unwrap().data
@@ -88,7 +97,8 @@ fn truncated_decomposition_stays_close() {
     };
     // The actual paper claim: one-shot-KD init is much closer to the
     // original function than a random re-init of the same architecture.
-    let net_rand = BuiltNet::compile(&engine, &arch, &plan, 2, 16, 999).unwrap();
+    let net_rand =
+        BuiltNet::compile(&engine, &arch, &plan, 2, 16, 999, &CompileOptions::o0()).unwrap();
     let x = lrdx::util::det_input(2, 16);
     let xb = engine.upload(&x, &[2, 3, 16, 16]).unwrap();
     let rand_logits = net_rand.forward(&xb).unwrap().to_host().unwrap().data;

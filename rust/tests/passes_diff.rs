@@ -1,0 +1,146 @@
+//! Differential suite for the IR pass pipeline: every (variant ×
+//! opt-level) compiled `resnet-mini` forward must match the O0 reference
+//! within 1e-5 on the native backend, and the pass stats must tell the
+//! structural story — node counts shrink for decomposed variants at the
+//! top level, and the low-rank re-merge fusion fires exactly when
+//! `model::cost::rank_efficiency` says a rank loses at the configured
+//! lane width.
+
+use lrdx::decompose::{plan_variant, Scheme, Variant};
+use lrdx::model::{Arch, ConvSite, SiteKind};
+use lrdx::runtime::layer_factory::build_layer;
+use lrdx::runtime::netbuilder::BuiltNet;
+use lrdx::runtime::{CompileOptions, Engine, OptLevel, PassStats};
+use lrdx::util::check::assert_allclose;
+use lrdx::util::det_input;
+
+const BATCH: usize = 2;
+const HW: usize = 16;
+
+fn forward(engine: &Engine, variant: Variant, opts: &CompileOptions) -> (Vec<f32>, PassStats) {
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    let plan = plan_variant(&arch, variant, 2.0, 2, None).unwrap();
+    let net = BuiltNet::compile(engine, &arch, &plan, BATCH, HW, 0xD1FF, opts).unwrap();
+    let x = det_input(BATCH, HW);
+    let xb = engine.upload(&x, &[BATCH, 3, HW, HW]).unwrap();
+    let logits = net.forward(&xb).unwrap().to_host().unwrap().data;
+    (logits, net.pass_stats().clone())
+}
+
+#[test]
+fn every_variant_and_level_matches_the_o0_reference() {
+    let engine = Engine::native();
+    for variant in [Variant::Orig, Variant::Lrd, Variant::Merged, Variant::Branched] {
+        let (want, s0) = forward(&engine, variant, &CompileOptions::o0());
+        assert!(s0.passes.is_empty(), "{variant:?}: O0 must run no passes");
+        assert_eq!(s0.nodes_before, s0.nodes_after);
+        for level in [OptLevel::O1, OptLevel::O2] {
+            let (got, stats) = forward(&engine, variant, &CompileOptions::level(level));
+            assert_allclose(&got, &want, 1e-5, 1e-5);
+            assert!(
+                stats.nodes_after <= stats.nodes_before,
+                "{variant:?}/{}: optimization must never grow the graph",
+                level.name()
+            );
+            assert!(!stats.passes.is_empty());
+        }
+    }
+}
+
+#[test]
+fn o1_cleanup_is_bitwise_identical() {
+    // O1 only removes or aliases nodes; it must not change a single bit.
+    let engine = Engine::native();
+    for variant in [Variant::Orig, Variant::Lrd] {
+        let (want, _) = forward(&engine, variant, &CompileOptions::o0());
+        let (got, _) = forward(&engine, variant, &CompileOptions::level(OptLevel::O1));
+        assert_eq!(got, want, "{variant:?}: O1 reassociated arithmetic");
+    }
+}
+
+#[test]
+fn lrd_node_count_strictly_decreases_at_top_level() {
+    let engine = Engine::native();
+    let (_, stats) = forward(&engine, Variant::Lrd, &CompileOptions::default());
+    assert!(
+        stats.nodes_after < stats.nodes_before,
+        "LRD at {}: {} -> {} nodes (expected a strict decrease)",
+        OptLevel::TOP.name(),
+        stats.nodes_before,
+        stats.nodes_after
+    );
+    // the mini net's small misaligned SVD ranks lose at lane 16, so the
+    // re-merge pass must contract at least one factor pair
+    assert!(stats.fusions >= 1, "expected re-merge fusions, stats: {stats:?}");
+}
+
+fn fc_site(c: usize, s: usize) -> ConvSite {
+    ConvSite { name: "t.fc".into(), c, s, k: 1, stride: 1, padding: 0, kind: SiteKind::Conv }
+}
+
+fn layer_stats_and_outputs(
+    engine: &Engine,
+    r: usize,
+    opts: &CompileOptions,
+) -> (Vec<f32>, PassStats) {
+    let site = fc_site(64, 64);
+    // 16x16 spatial: enough output elements that the gate's amortized
+    // weight-merge cost doesn't mask the rank-efficiency decision.
+    let (graph, shapes) = build_layer(&site, &Scheme::Svd { r }, 1, 16).unwrap();
+    let exe = engine.compile(&graph, opts).unwrap();
+    let mut rng = lrdx::util::rng::Rng::new(0xFA57);
+    let mut args =
+        vec![lrdx::runtime::HostTensor::new(vec![1, 64, 16, 16], {
+            (0..64 * 256).map(|_| rng.normal_f32()).collect()
+        })];
+    for shp in &shapes {
+        let n: usize = shp.iter().product();
+        args.push(lrdx::runtime::HostTensor::new(shp.clone(), {
+            (0..n).map(|_| rng.normal_f32() * 0.1).collect()
+        }));
+    }
+    let out = exe.run_hosts(&args).unwrap().remove(0);
+    (out.data, exe.stats().clone())
+}
+
+#[test]
+fn remerge_fires_when_rank_exceeds_the_lane_aligned_threshold() {
+    // 64x64 1x1 conv at lane 16: r=33 wastes most of a 16-lane tile in
+    // both factor contractions (33/48 efficiency) — decomposition loses,
+    // the pair must re-merge, and the output must still match O0.
+    let engine = Engine::native();
+    let opts = CompileOptions { opt_level: OptLevel::O2, lane: 16 };
+    let (want, _) = layer_stats_and_outputs(&engine, 33, &CompileOptions::o0());
+    let (got, stats) = layer_stats_and_outputs(&engine, 33, &opts);
+    assert!(stats.fusions >= 1, "r=33 must fuse at lane 16, stats: {stats:?}");
+    assert!(stats.nodes_after < stats.nodes_before);
+    assert_allclose(&got, &want, 1e-5, 1e-5);
+}
+
+#[test]
+fn remerge_keeps_profitable_lane_aligned_ranks() {
+    // r=16 is perfectly tiled and halves the MACs: the decomposed form
+    // wins and must be left alone.
+    let engine = Engine::native();
+    let opts = CompileOptions { opt_level: OptLevel::O2, lane: 16 };
+    let (_, stats) = layer_stats_and_outputs(&engine, 16, &opts);
+    assert_eq!(stats.fusions, 0, "aligned profitable rank must not fuse: {stats:?}");
+}
+
+#[test]
+fn opt_levels_compose_monotonically() {
+    // more optimization never yields more nodes than less optimization
+    let engine = Engine::native();
+    let mut prev = usize::MAX;
+    for level in OptLevel::ALL {
+        let (_, stats) = forward(&engine, Variant::Lrd, &CompileOptions::level(level));
+        assert!(
+            stats.nodes_after <= prev,
+            "{}: {} nodes, previous level had {}",
+            level.name(),
+            stats.nodes_after,
+            prev
+        );
+        prev = stats.nodes_after;
+    }
+}
