@@ -48,10 +48,10 @@ fn main() {
         max_wait: Duration::from_millis(2),
     });
     coord
-        .register("m", spec.hw, 1, move |eng| {
+        .register("m", spec.hw, 1, move |ctx| {
             let lib = ArtifactLibrary::load("artifacts")?;
             let spec = lib.find_by("resnet-mini", "lrd", "forward").unwrap();
-            Ok(Box::new(ForwardModel::load(eng, spec)?) as Box<dyn BatchModel>)
+            Ok(Box::new(ForwardModel::load(ctx.engine(), spec)?) as Box<dyn BatchModel>)
         })
         .unwrap();
     coord.infer_blocking("m", xflat[..img].to_vec()).unwrap();

@@ -1,0 +1,164 @@
+//! `cargo bench --bench native_exec [-- --smoke] [-- --arch NAME]` —
+//! prices the planned arena executor against the seed's per-node
+//! interpreter (`run_reference`): forward latency and throughput per
+//! variant × executor × thread count × batch on the same O0 graphs, so
+//! the delta is purely plan + arena + tiled parallel kernels. Emits
+//! `BENCH_native.json`; `--smoke` runs a single-iteration subset with
+//! the same schema (the CI schema gate).
+
+use std::sync::Arc;
+
+use lrdx::decompose::{plan_variant, Variant};
+use lrdx::model::Arch;
+use lrdx::profiler::Timer;
+use lrdx::runtime::native::NativeExecutable;
+use lrdx::runtime::netbuilder::build_forward;
+use lrdx::runtime::HostTensor;
+use lrdx::util::json::Json;
+use lrdx::util::rng::Rng;
+
+/// Network arguments initialised exactly as `BuiltNet::compile` would.
+fn make_args(
+    arch: &Arch,
+    variant: Variant,
+    batch: usize,
+    hw: usize,
+) -> (lrdx::runtime::graph::Graph, Vec<Arc<HostTensor>>) {
+    let plan = plan_variant(arch, variant, 2.0, 2, None).expect("plan");
+    let (graph, specs) = build_forward(arch, &plan, batch, hw).expect("build");
+    let mut rng = Rng::new(0xBE7C);
+    let mut args = vec![Arc::new(HostTensor::new(
+        vec![batch, 3, hw, hw],
+        lrdx::util::det_input(batch, hw),
+    ))];
+    for spec in &specs {
+        let host = lrdx::runtime::netbuilder::init_param_host(spec, &mut rng);
+        args.push(Arc::new(HostTensor::new(spec.shape.clone(), host)));
+    }
+    (graph, args)
+}
+
+struct Row {
+    variant: &'static str,
+    executor: &'static str,
+    threads: usize,
+    batch: usize,
+    secs: f64,
+    speedup: f64,
+    arena_peak: usize,
+    arena_naive: usize,
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let arch_name = argv
+        .iter()
+        .skip_while(|a| *a != "--arch")
+        .nth(1)
+        .cloned()
+        .unwrap_or_else(|| "resnet-mini".to_string());
+    let arch = Arch::by_name(&arch_name).expect("known arch");
+    let hw = 32usize;
+    let timer = if smoke {
+        Timer { warmup: 0, min_samples: 1, max_samples: 1, cv_target: f64::INFINITY }
+    } else {
+        Timer::default()
+    };
+    let variants: &[Variant] = if smoke {
+        &[Variant::Lrd]
+    } else {
+        &[Variant::Orig, Variant::Lrd, Variant::Merged]
+    };
+    let batches: &[usize] = if smoke { &[8] } else { &[1, 8] };
+    let thread_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+
+    println!(
+        "native executor bench: {} hw={hw} ({}) — seed interpreter vs planned arena",
+        arch.name,
+        if smoke { "smoke" } else { "full" }
+    );
+    println!(
+        "{:10} {:>5} {:>10} {:>7} {:>12} {:>12} {:>8}",
+        "variant", "batch", "executor", "threads", "ms/fwd", "img/s", "speedup"
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    for &variant in variants {
+        for &batch in batches {
+            let (graph, args) = make_args(&arch, variant, batch, hw);
+            // seed interpreter baseline (per-node alloc, serial)
+            let exe = NativeExecutable::new(graph.clone(), 1).expect("compile");
+            let ref_secs = timer
+                .measure(|| exe.run_reference(&args).map(|_| ()))
+                .expect("measure")
+                .trimmed_mean;
+            let stats = exe.arena_stats().clone();
+            rows.push(Row {
+                variant: variant.name(),
+                executor: "reference",
+                threads: 1,
+                batch,
+                secs: ref_secs,
+                speedup: 1.0,
+                // the reference interpreter allocates per node — its real
+                // resident footprint is the no-reuse total, not the plan
+                arena_peak: stats.naive_bytes,
+                arena_naive: stats.naive_bytes,
+            });
+            for &threads in thread_counts {
+                let exe = NativeExecutable::new(graph.clone(), threads).expect("compile");
+                let secs = timer
+                    .measure(|| exe.run(&args).map(|_| ()))
+                    .expect("measure")
+                    .trimmed_mean;
+                rows.push(Row {
+                    variant: variant.name(),
+                    executor: "planned",
+                    threads,
+                    batch,
+                    secs,
+                    speedup: ref_secs / secs,
+                    arena_peak: stats.peak_bytes,
+                    arena_naive: stats.naive_bytes,
+                });
+            }
+            for r in rows.iter().rev().take(thread_counts.len() + 1).rev() {
+                println!(
+                    "{:10} {:>5} {:>10} {:>7} {:>12.3} {:>12.1} {:>7.2}x",
+                    r.variant,
+                    r.batch,
+                    r.executor,
+                    r.threads,
+                    r.secs * 1e3,
+                    r.batch as f64 / r.secs,
+                    r.speedup
+                );
+            }
+        }
+    }
+
+    let jrows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj_from(vec![
+                ("variant", Json::Str(r.variant.to_string())),
+                ("executor", Json::Str(r.executor.to_string())),
+                ("threads", Json::Num(r.threads as f64)),
+                ("batch", Json::Num(r.batch as f64)),
+                ("secs_per_fwd", Json::Num(r.secs)),
+                ("imgs_per_sec", Json::Num(r.batch as f64 / r.secs)),
+                ("speedup_vs_reference", Json::Num(r.speedup)),
+                ("arena_peak_bytes", Json::Num(r.arena_peak as f64)),
+                ("arena_naive_bytes", Json::Num(r.arena_naive as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj_from(vec![
+        ("arch", Json::Str(arch.name.to_string())),
+        ("hw", Json::Num(hw as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(jrows)),
+    ]);
+    std::fs::write("BENCH_native.json", doc.render()).expect("write BENCH_native.json");
+    println!("(saved BENCH_native.json)");
+}

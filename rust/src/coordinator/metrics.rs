@@ -12,8 +12,12 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batch_items: AtomicU64,
     pub errors: AtomicU64,
-    /// end-to-end request latencies, seconds (bounded reservoir)
+    /// end-to-end request latencies, seconds (bounded reservoir); covers
+    /// BOTH successful and errored requests — a failed request still
+    /// occupied the queue and the worker for its full latency
     latencies: Mutex<Vec<f64>>,
+    /// latencies of errored requests only, seconds (bounded reservoir)
+    error_latencies: Mutex<Vec<f64>>,
     /// time spent inside model execution, seconds
     exec_time: Mutex<Vec<f64>>,
 }
@@ -46,12 +50,26 @@ impl Metrics {
         }
     }
 
-    pub fn record_error(&self) {
+    /// An errored request still has an end-to-end latency; dropping it
+    /// from the histogram (the seed behaviour) made tail latency look
+    /// better exactly when the system was failing. Records into both the
+    /// shared latency reservoir and the error-only reservoir.
+    pub fn record_error_response(&self, latency_secs: f64) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        if l.len() < RESERVOIR {
+            l.push(latency_secs);
+        }
+        drop(l);
+        let mut e = self.error_latencies.lock().unwrap();
+        if e.len() < RESERVOIR {
+            e.push(latency_secs);
+        }
     }
 
     pub fn snapshot(&self) -> MetricsReport {
         let latencies = self.latencies.lock().unwrap().clone();
+        let error_latencies = self.error_latencies.lock().unwrap().clone();
         let exec = self.exec_time.lock().unwrap().clone();
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batch_items.load(Ordering::Relaxed);
@@ -66,6 +84,8 @@ impl Metrics {
                 items as f64 / batches as f64
             },
             latency: (!latencies.is_empty()).then(|| Summary::of(&latencies)),
+            error_latency: (!error_latencies.is_empty())
+                .then(|| Summary::of(&error_latencies)),
             exec: (!exec.is_empty()).then(|| Summary::of(&exec)),
         }
     }
@@ -78,7 +98,10 @@ pub struct MetricsReport {
     pub errors: u64,
     pub batches: u64,
     pub mean_batch_occupancy: f64,
+    /// All completed requests, errored ones included.
     pub latency: Option<Summary>,
+    /// Errored requests only.
+    pub error_latency: Option<Summary>,
     pub exec: Option<Summary>,
 }
 
@@ -94,6 +117,13 @@ impl MetricsReport {
                 l.p50 * 1e3,
                 l.p90 * 1e3,
                 l.p99 * 1e3
+            ));
+        }
+        if let Some(e) = &self.error_latency {
+            s.push_str(&format!(
+                "\nerr-lat  p50={:.2}ms p99={:.2}ms",
+                e.p50 * 1e3,
+                e.p99 * 1e3
             ));
         }
         if let Some(e) = &self.exec {
@@ -127,8 +157,30 @@ mod tests {
     fn empty_snapshot_has_no_summaries() {
         let r = Metrics::new().snapshot();
         assert!(r.latency.is_none());
+        assert!(r.error_latency.is_none());
         assert!(r.exec.is_none());
         assert_eq!(r.mean_batch_occupancy, 0.0);
+    }
+
+    #[test]
+    fn errored_requests_stay_in_the_latency_histogram() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_request();
+        m.record_response(0.001);
+        m.record_error_response(0.250); // slow failure
+        let r = m.snapshot();
+        assert_eq!(r.errors, 1);
+        assert_eq!(r.responses, 1);
+        let lat = r.latency.expect("latency summary");
+        assert!(
+            lat.p99 > 0.2,
+            "slow errored request must dominate the tail, p99={}",
+            lat.p99
+        );
+        let el = r.error_latency.expect("error latency summary");
+        assert!(el.p50 > 0.2);
+        assert!(r.render().contains("err-lat"), "render must surface error latency");
     }
 
     #[test]

@@ -18,6 +18,15 @@
 //! thread via the factory closure — no unsafe, clean shutdown by dropping
 //! senders. The same code path serves native-backend synthetic models and
 //! PJRT artifact models.
+//!
+//! Factories receive a [`WorkerCtx`]: the worker's engine plus its share
+//! of the coordinator's **kernel-thread budget**. The budget is
+//! per-model: each `register` call splits it evenly across that model's
+//! replicas (`max(1, budget / replicas)`), so replica scale-out never
+//! oversubscribes the machine with `replicas × budget` executor
+//! threads. A caller serving several models concurrently divides its
+//! total budget across models before constructing the coordinator (see
+//! `lrdx serve`).
 
 pub mod batcher;
 pub mod metrics;
@@ -76,31 +85,75 @@ struct ModelEntry {
     hw: usize,
 }
 
+/// What a worker factory gets to build its model with: the thread-local
+/// engine and this worker's slice of the coordinator's thread budget
+/// (feed it into `CompileOptions::threads` for native models).
+pub struct WorkerCtx {
+    engine: Engine,
+    threads: usize,
+}
+
+impl WorkerCtx {
+    pub fn new(engine: Engine, threads: usize) -> WorkerCtx {
+        WorkerCtx { engine, threads: threads.max(1) }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Kernel threads this worker may use without oversubscribing.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
 /// The coordinator: owns the router table and all worker threads.
 pub struct Coordinator {
     models: HashMap<String, ModelEntry>,
     pub metrics: Arc<Metrics>,
     policy: BatchPolicy,
+    /// Native-executor threads granted to EACH registered model, split
+    /// across that model's replicas (callers serving several models
+    /// concurrently pre-divide their total budget — see `lrdx serve`).
+    thread_budget: usize,
 }
 
 impl Coordinator {
+    /// A coordinator whose kernel-thread budget is the machine's
+    /// available parallelism.
     pub fn new(policy: BatchPolicy) -> Coordinator {
-        Coordinator { models: HashMap::new(), metrics: Arc::new(Metrics::new()), policy }
+        Coordinator::with_thread_budget(policy, 0)
+    }
+
+    /// A coordinator with an explicit per-model kernel-thread budget
+    /// (`lrdx serve` passes its `--threads` total divided by the number
+    /// of served models; 0 means auto).
+    pub fn with_thread_budget(policy: BatchPolicy, budget: usize) -> Coordinator {
+        Coordinator {
+            models: HashMap::new(),
+            metrics: Arc::new(Metrics::new()),
+            policy,
+            thread_budget: crate::runtime::resolve_threads(budget),
+        }
     }
 
     /// Register a model under `name` with `replicas` worker threads. The
     /// factory runs inside each worker thread (backends need not be Send)
-    /// and must yield a model with consistent batch/hw.
+    /// and must yield a model with consistent batch/hw. The replicas
+    /// share the coordinator's thread budget evenly.
     pub fn register<F>(&mut self, name: &str, hw: usize, replicas: usize, factory: F) -> Result<()>
     where
-        F: Fn(&Engine) -> Result<Box<dyn BatchModel>> + Send + Sync + 'static,
+        F: Fn(&WorkerCtx) -> Result<Box<dyn BatchModel>> + Send + Sync + 'static,
     {
         if self.models.contains_key(name) {
             bail!("model {name:?} already registered");
         }
         let factory = Arc::new(factory);
+        let n_replicas = replicas.max(1);
+        let threads_per_worker = (self.thread_budget / n_replicas).max(1);
         let mut reps = Vec::new();
-        for ri in 0..replicas.max(1) {
+        for ri in 0..n_replicas {
             let (tx, rx) = mpsc::channel::<InferRequest>();
             let metrics = self.metrics.clone();
             let policy = self.policy.clone();
@@ -110,7 +163,9 @@ impl Coordinator {
             let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
             let handle = std::thread::Builder::new()
                 .name(format!("lrdx-worker-{nm}-{ri}"))
-                .spawn(move || worker_loop(rx, metrics, policy, factory, ready_tx))
+                .spawn(move || {
+                    worker_loop(rx, metrics, policy, factory, threads_per_worker, ready_tx)
+                })
                 .expect("spawn worker");
             ready_rx
                 .recv()
@@ -175,7 +230,8 @@ fn worker_loop(
     rx: Receiver<InferRequest>,
     metrics: Arc<Metrics>,
     policy: BatchPolicy,
-    factory: Arc<dyn Fn(&Engine) -> Result<Box<dyn BatchModel>> + Send + Sync>,
+    factory: Arc<dyn Fn(&WorkerCtx) -> Result<Box<dyn BatchModel>> + Send + Sync>,
+    threads: usize,
     ready: SyncSender<Result<()>>,
 ) {
     let engine = match Engine::cpu() {
@@ -185,7 +241,8 @@ fn worker_loop(
             return;
         }
     };
-    let model = match factory(&engine) {
+    let ctx = WorkerCtx::new(engine, threads);
+    let model = match factory(&ctx) {
         Ok(m) => m,
         Err(e) => {
             let _ = ready.send(Err(e));
@@ -232,9 +289,13 @@ fn worker_loop(
                 }
             }
             Err(e) => {
-                metrics.record_error();
+                // Errored requests keep their end-to-end latency: a
+                // failure that took 300 ms must show up in the tail, not
+                // vanish from the histogram (each failed request counts
+                // as one error).
                 let msg = format!("batch execution failed: {e:#}");
                 for req in requests {
+                    metrics.record_error_response(req.enqueued.elapsed().as_secs_f64());
                     let _ = req.resp.send(Err(anyhow!("{msg}")));
                 }
             }
@@ -327,7 +388,7 @@ mod tests {
             max_batch: batch,
             max_wait: Duration::from_millis(3),
         });
-        c.register("echo", 4, 1, move |_eng| {
+        c.register("echo", 4, 1, move |_ctx| {
             Ok(Box::new(EchoModel {
                 batch,
                 hw: 4,
@@ -384,8 +445,37 @@ mod tests {
     #[test]
     fn duplicate_registration_rejected() {
         let mut c = coord(2, 0);
-        let err = c.register("echo", 4, 1, |_eng| unreachable!());
+        let err = c.register("echo", 4, 1, |_ctx| unreachable!());
         assert!(err.is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn replicas_share_the_thread_budget() {
+        // budget 6 across 3 replicas -> 2 kernel threads per worker; a
+        // budget smaller than the replica count still grants 1 each
+        let mut c = Coordinator::with_thread_budget(
+            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+            6,
+        );
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let seen2 = seen.clone();
+        c.register("m", 4, 3, move |ctx| {
+            seen2.lock().unwrap().push(ctx.threads());
+            Ok(Box::new(EchoModel { batch: 1, hw: 4, delay: Duration::ZERO })
+                as Box<dyn BatchModel>)
+        })
+        .unwrap();
+        let seen3 = seen.clone();
+        c.register("starved", 4, 8, move |ctx| {
+            seen3.lock().unwrap().push(ctx.threads());
+            Ok(Box::new(EchoModel { batch: 1, hw: 4, delay: Duration::ZERO })
+                as Box<dyn BatchModel>)
+        })
+        .unwrap();
+        let got = seen.lock().unwrap().clone();
+        assert_eq!(&got[..3], &[2, 2, 2], "6-thread budget over 3 replicas");
+        assert_eq!(&got[3..], &[1; 8], "budget under-fill still grants 1");
         c.shutdown();
     }
 
@@ -395,7 +485,7 @@ mod tests {
             max_batch: 1,
             max_wait: Duration::from_millis(1),
         });
-        c.register("m", 4, 3, |_eng| {
+        c.register("m", 4, 3, |_ctx| {
             Ok(Box::new(EchoModel { batch: 1, hw: 4, delay: Duration::ZERO })
                 as Box<dyn BatchModel>)
         })
@@ -429,7 +519,7 @@ mod tests {
                 bail!("injected failure")
             }
         }
-        c.register("broken", 4, 1, |_eng| Ok(Box::new(Broken) as Box<dyn BatchModel>))
+        c.register("broken", 4, 1, |_ctx| Ok(Box::new(Broken) as Box<dyn BatchModel>))
             .unwrap();
         let rxs: Vec<_> = (0..4)
             .map(|_| c.infer("broken", vec![0.0; 48]).unwrap())
@@ -437,7 +527,13 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv().unwrap().is_err());
         }
-        assert!(c.metrics.snapshot().errors >= 1);
+        let snap = c.metrics.snapshot();
+        // every failed request counts, and none vanish from the histogram
+        assert_eq!(snap.errors, 4);
+        assert_eq!(snap.responses, 0);
+        let lat = snap.latency.expect("errored requests must record latency");
+        assert!(lat.n >= 4, "expected >= 4 latency samples, got {}", lat.n);
+        assert!(snap.error_latency.is_some());
         c.shutdown();
     }
 }

@@ -4,7 +4,7 @@
 //! Layers/params/FLOPs are analytic (`model::cost`, exact); fps is measured
 //! on XLA:CPU via the builder networks. The paper measured on GPU at
 //! 224x224; we default to 64x64 (channel structure — what LRD changes — is
-//! identical; see DESIGN.md §3). Train fps is estimated from infer fps via
+//! identical; see DESIGN.md §5). Train fps is estimated from infer fps via
 //! the standard fwd:fwd+bwd MAC ratio (~1:3), cross-calibrated on the mini
 //! train artifacts in table456.
 
@@ -52,12 +52,16 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
         for variant in [Variant::Orig, Variant::Lrd] {
             let plan = plan_variant(&arch, variant, cfg.alpha, 4, None)?;
             let rep = cost::report(&arch, &plan, 224); // paper-resolution FLOPs
+            let mut arena_peak = 0f64;
             let fps = if cfg.no_measure {
                 f64::NAN
             } else {
                 let net = BuiltNet::compile(
                     engine, &arch, &plan, cfg.batch, cfg.hw, 0xBEEF, &cfg.opt,
                 )?;
+                if let Some(a) = &net.pass_stats().arena {
+                    arena_peak = a.peak_bytes as f64;
+                }
                 measure_fps(engine, &net, &timer)?
             };
             let label = match variant {
@@ -79,6 +83,8 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
                 ("params", Json::Num(rep.params as f64)),
                 ("flops", Json::Num(2.0 * rep.macs as f64)),
                 ("infer_fps", Json::Num(fps)),
+                ("threads", Json::Num(cfg.opt.resolved_threads() as f64)),
+                ("arena_peak_bytes", Json::Num(arena_peak)),
             ]));
         }
     }
@@ -92,11 +98,13 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
         rows,
         notes: vec![
             format!(
-                "fps measured on {} at {}x{} batch {}; paper used GPU at 224 (DESIGN.md §3)",
+                "fps measured on {} at {}x{} batch {} ({} executor thread(s)); \
+                 paper used GPU at 224 (DESIGN.md §5)",
                 engine.platform(),
                 cfg.hw,
                 cfg.hw,
-                cfg.batch
+                cfg.batch,
+                cfg.opt.resolved_threads()
             ),
             "Train fps* estimated as infer fps / 3 (fwd:fwd+bwd MACs); measured train \
              throughput for the mini models is in table456"

@@ -1,7 +1,7 @@
 //! Tables 4-6: accuracy + efficiency of the LRD acceleration methods vs a
 //! pruning baseline.
 //!
-//! The ImageNet substitution (DESIGN.md §3): train the mini ResNet from
+//! The ImageNet substitution (DESIGN.md §5): train the mini ResNet from
 //! scratch on the synthetic class-grating dataset, one-shot-decompose the
 //! *trained* weights per variant, fine-tune each through its AOT train
 //! artifact, and evaluate through its AOT forward artifact. The magnitude
@@ -188,7 +188,7 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
     let mut notes = vec![
         format!(
             "protocol: {} scratch steps on synthetic data, one-shot decompose of the \
-             trained weights, {} fine-tune steps per variant (DESIGN.md §3 substitution \
+             trained weights, {} fine-tune steps per variant (DESIGN.md §5 substitution \
              for ImageNet)",
             cfg.train_steps, cfg.finetune_steps
         ),

@@ -80,10 +80,17 @@ flags: --artifacts DIR  --reports DIR  --arch NAME  --hw N  --batch N
        --alpha F  --groups N  --real  --full  --no-measure
        --opt-level 0|1|2  IR pass pipeline for compiled graphs (default 2:
                           cleanup + low-rank re-merge fusion; 0 = as built)
-       --lane N           lane width for the re-merge profitability gate";
+       --lane N           lane width for the re-merge profitability gate
+       --threads N        native executor kernel threads (bench/rank-search
+                          default 1; 0 = auto). serve defaults to auto and
+                          treats N as the TOTAL budget, split across models
+                          and then across each model's replicas; any N
+                          gives bitwise-identical outputs
+       --replicas N       serve: worker replicas per model (default 1)";
 
-/// `--opt-level` / `--lane` → the `Engine::compile` options (serve, the
-/// table/fig benches and `rank-search --real` all honour them).
+/// `--opt-level` / `--lane` / `--threads` → the `Engine::compile`
+/// options (serve, the table/fig benches and `rank-search --real` all
+/// honour them).
 fn compile_opts(args: &Args) -> Result<CompileOptions> {
     let opt_level = match args.get("opt-level") {
         Some(s) => OptLevel::parse(s)?,
@@ -93,7 +100,8 @@ fn compile_opts(args: &Args) -> Result<CompileOptions> {
     if lane == 0 {
         bail!("--lane must be >= 1 (hardware lane width)");
     }
-    Ok(CompileOptions { opt_level, lane })
+    let threads = args.usize_or("threads", 1)?;
+    Ok(CompileOptions { opt_level, lane, threads })
 }
 
 fn artifacts_dir(args: &Args) -> std::path::PathBuf {
@@ -320,7 +328,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None
     };
 
-    let mut coord = Coordinator::new(BatchPolicy::default());
+    // `--threads` (serve default: 0 = machine auto) is the TOTAL kernel-
+    // thread budget: divided across the served models here, then across
+    // each model's replicas by the coordinator (WorkerCtx::threads) — so
+    // the whole deployment never exceeds the budget.
+    let replicas = args.usize_or("replicas", 1)?;
+    let total_budget = lrdx::runtime::resolve_threads(args.usize_or("threads", 0)?);
+    let per_model_budget = (total_budget / variants.len().max(1)).max(1);
+    let mut coord =
+        Coordinator::with_thread_budget(BatchPolicy::default(), per_model_budget);
     let hw;
     match &artifact_lib {
         Some(lib) => {
@@ -330,12 +346,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .hw;
             for v in &variants {
                 let (root, arch, v2) = (root.clone(), arch.clone(), v.clone());
-                coord.register(v, hw, 1, move |eng| {
+                coord.register(v, hw, replicas, move |ctx| {
                     let lib = ArtifactLibrary::load(&root)?;
                     let spec = lib
                         .find_by(&arch, &v2, "forward")
                         .ok_or_else(|| anyhow!("no {arch}/{v2} forward artifact"))?;
-                    Ok(Box::new(ForwardModel::load(eng, spec)?) as Box<dyn BatchModel>)
+                    Ok(Box::new(ForwardModel::load(ctx.engine(), spec)?)
+                        as Box<dyn BatchModel>)
                 })?;
             }
         }
@@ -360,9 +377,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 let (_, stats) = lrdx::runtime::passes::run_pipeline(&graph, &copts);
                 println!("  {v:10} {}", stats.summary());
                 let (a2, copts2) = (a.clone(), copts.clone());
-                coord.register(v, hw, 1, move |eng| {
-                    let net =
-                        BuiltNet::compile(eng, &a2, &plan, batch, hw, 0x5EED, &copts2)?;
+                coord.register(v, hw, replicas, move |ctx| {
+                    // the worker's budget share, not the raw CLI value
+                    let copts = CompileOptions { threads: ctx.threads(), ..copts2.clone() };
+                    let net = BuiltNet::compile(
+                        ctx.engine(),
+                        &a2,
+                        &plan,
+                        batch,
+                        hw,
+                        0x5EED,
+                        &copts,
+                    )?;
                     Ok(Box::new(net) as Box<dyn BatchModel>)
                 })?;
             }

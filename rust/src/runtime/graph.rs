@@ -381,6 +381,10 @@ impl Op {
             if r >= d.len() {
                 bail!("reduce_mean: dim {r} out of range for {d:?}");
             }
+            if d[r] == 0 {
+                // a 0/0 mean: reject here instead of producing Inf/NaN
+                bail!("reduce_mean: axis {r} of {d:?} is zero-size (empty mean)");
+            }
         }
         Ok(self
             .builder

@@ -36,7 +36,9 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use graph::Graph;
-pub use passes::{CompileOptions, OptLevel, PassRecord, PassStats};
+pub use passes::{
+    resolve_threads, ArenaStats, CompileOptions, OptLevel, PassRecord, PassStats,
+};
 
 /// Host-side f32 tensor handed around by the coordinator and the tests.
 ///
@@ -150,7 +152,11 @@ impl Buffer {
 /// `Engine::compile` (the only place optimization levels are applied).
 pub(crate) trait Backend {
     fn name(&self) -> &'static str;
-    fn compile_graph(&self, graph: &Graph) -> Result<Arc<dyn BackendExec>>;
+    /// Compile an already-optimized graph. `opts` carries the execution
+    /// knobs a backend planner honours (today: `threads` for the native
+    /// executor); the IR rewrites selected by `opts.opt_level` have
+    /// already been applied by the caller.
+    fn compile_graph(&self, graph: &Graph, opts: &CompileOptions) -> Result<Arc<dyn BackendExec>>;
     fn compile_hlo_text_file(&self, path: &Path) -> Result<Arc<dyn BackendExec>>;
     fn upload(&self, data: &[f32], dims: &[usize]) -> Result<Buffer>;
     fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer>;
@@ -159,6 +165,12 @@ pub(crate) trait Backend {
 /// A compiled computation, executable over backend buffers.
 pub(crate) trait BackendExec {
     fn execute(&self, args: &[&Buffer]) -> Result<Vec<Buffer>>;
+
+    /// Buffer-arena accounting of the execution plan, if the backend
+    /// plans host memory itself (PJRT manages its own device memory).
+    fn arena(&self) -> Option<ArenaStats> {
+        None
+    }
 }
 
 /// Process-facing engine handle (one backend instance, `Arc`-shared).
@@ -212,8 +224,9 @@ impl Engine {
     /// by `opts` over the IR, hand the rewritten graph to the backend, and
     /// return the executable together with its `PassStats`.
     pub fn compile(&self, graph: &Graph, opts: &CompileOptions) -> Result<Compiled> {
-        let (optimized, stats) = passes::run_pipeline(graph, opts);
-        let raw = self.backend.compile_graph(&optimized)?;
+        let (optimized, mut stats) = passes::run_pipeline(graph, opts);
+        let raw = self.backend.compile_graph(&optimized, opts)?;
+        stats.arena = raw.arena();
         Ok(Compiled { raw, engine: self.clone(), stats: Arc::new(stats) })
     }
 

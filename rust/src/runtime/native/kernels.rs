@@ -1,0 +1,396 @@
+//! Parallel CPU kernels for the native executor.
+//!
+//! Every kernel writes into a caller-provided `out` slice. Parallel
+//! kernels partition the *output* into contiguous chunks across scoped
+//! worker threads, so each output element is produced by exactly one
+//! thread with a fixed, partition-independent accumulation order —
+//! results are bitwise identical for every thread count (the contract
+//! `tests/native_exec.rs` pins). Work below the `PAR_MIN_*` thresholds
+//! runs inline: spawning costs more than it saves there, and skipping
+//! the spawn cannot change a single bit.
+//!
+//! `dot_general` is the hot kernel: an i-k-j matmul blocked over N and K
+//! so the active B panel stays cache-resident across the rows of a
+//! thread's chunk, with rows (M) partitioned across threads. There is
+//! deliberately NO zero-operand fast path: `0 × NaN` and `0 × Inf` must
+//! produce NaN per IEEE 754 — the seed's `av == 0.0` skip silently
+//! swallowed poisoned activations inside decomposed W0·W1 chains.
+
+/// Row-major strides for `dims`.
+pub fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+pub fn numel(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+/// Minimum output elements before an elementwise/gather kernel fans out.
+const PAR_MIN_ELEMS: usize = 16 * 1024;
+/// Minimum M*N*K before `dot_general` fans out.
+const PAR_MIN_MACS: usize = 64 * 1024;
+/// N-dimension block: the B panel column strip kept hot in cache.
+const NB: usize = 256;
+/// K-dimension block: B panel rows per strip (NB*KB*4 B ≈ 128 KiB ≤ L2).
+const KB: usize = 128;
+
+/// Run `f(global_offset, chunk)` over `out` split into at most `threads`
+/// contiguous chunks. The first chunk runs on the calling thread; the
+/// rest on scoped workers. `f` must derive each element purely from its
+/// global index so the partition cannot affect values.
+pub fn par_map<F>(out: &mut [f32], threads: usize, min_elems: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let n = out.len();
+    if threads <= 1 || n < min_elems.max(2) {
+        f(0, out);
+        return;
+    }
+    let per = n.div_ceil(threads.min(n));
+    std::thread::scope(|s| {
+        let mut chunks = out.chunks_mut(per).enumerate();
+        let first = chunks.next();
+        for (ci, chunk) in chunks {
+            let f = &f;
+            s.spawn(move || f(ci * per, chunk));
+        }
+        if let Some((_, chunk)) = first {
+            f(0, chunk);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise
+// ---------------------------------------------------------------------------
+
+pub fn fill(out: &mut [f32], value: f32) {
+    out.fill(value);
+}
+
+/// `out[i] = f(a[i], b[i])` (shapes already equal).
+pub fn binary<F>(a: &[f32], b: &[f32], out: &mut [f32], threads: usize, f: F)
+where
+    F: Fn(f32, f32) -> f32 + Sync,
+{
+    par_map(out, threads, PAR_MIN_ELEMS, |off, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = f(a[off + i], b[off + i]);
+        }
+    });
+}
+
+/// `out[i] = f(out[i], b[i])` — in-place over a dying lhs slot.
+pub fn binary_inplace<F>(out: &mut [f32], b: &[f32], threads: usize, f: F)
+where
+    F: Fn(f32, f32) -> f32 + Sync,
+{
+    par_map(out, threads, PAR_MIN_ELEMS, |off, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = f(*o, b[off + i]);
+        }
+    });
+}
+
+/// `out[i] = f(out[i], out[i])` — both operands were the same dying slot.
+pub fn binary_inplace_self<F>(out: &mut [f32], threads: usize, f: F)
+where
+    F: Fn(f32, f32) -> f32 + Sync,
+{
+    par_map(out, threads, PAR_MIN_ELEMS, |_, chunk| {
+        for o in chunk.iter_mut() {
+            *o = f(*o, *o);
+        }
+    });
+}
+
+/// `out[i] = f(a[i], s)` (scalar rhs; pass `swap` to flip operand order).
+pub fn binary_scalar<F>(a: &[f32], s: f32, swap: bool, out: &mut [f32], threads: usize, f: F)
+where
+    F: Fn(f32, f32) -> f32 + Sync,
+{
+    par_map(out, threads, PAR_MIN_ELEMS, |off, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            let v = a[off + i];
+            *o = if swap { f(s, v) } else { f(v, s) };
+        }
+    });
+}
+
+/// `out[i] = f(out[i], s)` in place (`swap` flips operand order).
+pub fn binary_scalar_inplace<F>(out: &mut [f32], s: f32, swap: bool, threads: usize, f: F)
+where
+    F: Fn(f32, f32) -> f32 + Sync,
+{
+    par_map(out, threads, PAR_MIN_ELEMS, |_, chunk| {
+        for o in chunk.iter_mut() {
+            *o = if swap { f(s, *o) } else { f(*o, s) };
+        }
+    });
+}
+
+pub fn unary<F>(a: &[f32], out: &mut [f32], threads: usize, f: F)
+where
+    F: Fn(f32) -> f32 + Sync,
+{
+    par_map(out, threads, PAR_MIN_ELEMS, |off, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            *o = f(a[off + i]);
+        }
+    });
+}
+
+pub fn unary_inplace<F>(out: &mut [f32], threads: usize, f: F)
+where
+    F: Fn(f32) -> f32 + Sync,
+{
+    par_map(out, threads, PAR_MIN_ELEMS, |_, chunk| {
+        for o in chunk.iter_mut() {
+            *o = f(*o);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Gather (transpose / broadcast_in_dim share one addressing form)
+// ---------------------------------------------------------------------------
+
+/// One output axis of a gather: walk `out_extent` positions of stride
+/// `out_stride` in the flat output, advancing the source offset by
+/// `src_stride` per position (0 for broadcast axes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GatherAxis {
+    pub out_stride: usize,
+    pub out_extent: usize,
+    pub src_stride: usize,
+}
+
+/// `out[flat] = x[Σ_axis ((flat / out_stride) % out_extent) * src_stride]`.
+pub fn gather(x: &[f32], axes: &[GatherAxis], out: &mut [f32], threads: usize) {
+    par_map(out, threads, PAR_MIN_ELEMS, |off, chunk| {
+        for (i, slot) in chunk.iter_mut().enumerate() {
+            let flat = off + i;
+            let mut src = 0usize;
+            for ax in axes {
+                src += (flat / ax.out_stride) % ax.out_extent * ax.src_stride;
+            }
+            *slot = x[src];
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Data movement
+// ---------------------------------------------------------------------------
+
+pub fn copy(x: &[f32], out: &mut [f32]) {
+    out.copy_from_slice(x);
+}
+
+/// Copy one concat operand (`mid` wide along the concat axis) into its
+/// band of the output (`total` wide), starting at `offset`.
+pub fn concat_part(
+    x: &[f32],
+    outer: usize,
+    mid: usize,
+    inner: usize,
+    total: usize,
+    offset: usize,
+    out: &mut [f32],
+) {
+    for o in 0..outer {
+        let src = &x[o * mid * inner..(o + 1) * mid * inner];
+        let dst = (o * total + offset) * inner;
+        out[dst..dst + mid * inner].copy_from_slice(src);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn slice(
+    x: &[f32],
+    outer: usize,
+    mid_in: usize,
+    inner: usize,
+    start: usize,
+    stride: usize,
+    mid_out: usize,
+    out: &mut [f32],
+) {
+    for o in 0..outer {
+        for m in 0..mid_out {
+            let src = (o * mid_in + start + m * stride) * inner;
+            let dst = (o * mid_out + m) * inner;
+            out[dst..dst + inner].copy_from_slice(&x[src..src + inner]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Contraction
+// ---------------------------------------------------------------------------
+
+/// `out[m,n] = Σ_k a[m,k] · b[k,n]`, cache-tiled, rows partitioned
+/// across `threads`. Per output element the k-sum always runs in
+/// ascending k order, so tiling and threading never change a bit.
+pub fn dot_general(a: &[f32], b: &[f32], n: usize, k: usize, out: &mut [f32], threads: usize) {
+    if out.is_empty() {
+        return;
+    }
+    if k == 0 {
+        out.fill(0.0); // empty contraction: a sum over nothing
+        return;
+    }
+    let m = out.len() / n;
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let t = if m * n * k >= PAR_MIN_MACS { threads.min(m) } else { 1 };
+    if t <= 1 {
+        dot_rows(a, b, n, k, out);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|s| {
+        let mut ochunks = out.chunks_mut(rows_per * n).zip(a.chunks(rows_per * k));
+        let first = ochunks.next();
+        for (ochunk, achunk) in ochunks {
+            s.spawn(move || dot_rows(achunk, b, n, k, ochunk));
+        }
+        if let Some((ochunk, achunk)) = first {
+            dot_rows(achunk, b, n, k, ochunk);
+        }
+    });
+}
+
+/// Serial tiled core over a row block: i-k-j with N×K blocking.
+fn dot_rows(a: &[f32], b: &[f32], n: usize, k: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    if n == 0 || k == 0 || out.is_empty() {
+        return;
+    }
+    let rows = out.len() / n;
+    for jb in (0..n).step_by(NB) {
+        let je = (jb + NB).min(n);
+        for kb in (0..k).step_by(KB) {
+            let ke = (kb + KB).min(k);
+            for i in 0..rows {
+                let arow = &a[i * k + kb..i * k + ke];
+                let orow = &mut out[i * n + jb..i * n + je];
+                for (p, &av) in arow.iter().enumerate() {
+                    let brow = &b[(kb + p) * n + jb..(kb + p) * n + je];
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reduction
+// ---------------------------------------------------------------------------
+
+/// Precomputed geometry of a `reduce_mean`: kept axes address the base
+/// offset per output element; `red` is the (extent, stride) odometer of
+/// the reduced subspace; `contiguous` marks reductions over trailing
+/// axes, where the subspace is one dense run of `count` elements.
+#[derive(Clone, Debug)]
+pub struct ReduceGeom {
+    pub kept: Vec<GatherAxis>,
+    pub red: Vec<(usize, usize)>,
+    pub count: usize,
+    pub contiguous: bool,
+}
+
+/// Mean over the reduced subspace, one output element per thread-chunk
+/// slot, accumulated in f64 in a fixed order. `geom.count` must be
+/// non-zero (the planner and `GraphBuilder` reject 0/0 reductions).
+pub fn reduce_mean(x: &[f32], geom: &ReduceGeom, out: &mut [f32], threads: usize) {
+    debug_assert!(geom.count > 0, "reduce_mean over an empty subspace");
+    let inv = geom.count as f64;
+    par_map(out, threads, 1024, |off, chunk| {
+        for (i, slot) in chunk.iter_mut().enumerate() {
+            let flat = off + i;
+            let mut base = 0usize;
+            for ax in &geom.kept {
+                base += (flat / ax.out_stride) % ax.out_extent * ax.src_stride;
+            }
+            let mut acc = 0f64;
+            if geom.contiguous {
+                for &v in &x[base..base + geom.count] {
+                    acc += v as f64;
+                }
+            } else {
+                for r in 0..geom.count {
+                    let mut rem = r;
+                    let mut src = base;
+                    for &(extent, stride) in geom.red.iter().rev() {
+                        src += rem % extent * stride;
+                        rem /= extent;
+                    }
+                    acc += x[src] as f64;
+                }
+            }
+            *slot = (acc / inv) as f32;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_has_no_zero_skip() {
+        // 0-weight row meeting NaN/Inf activations must poison the output
+        let a = [0.0f32, 0.0];
+        let b = [f32::NAN, 1.0, f32::INFINITY, 2.0]; // [2, 2]
+        let mut out = [0f32; 2];
+        dot_general(&a, &b, 2, 2, &mut out, 1);
+        assert!(out[0].is_nan(), "0*NaN + 0*Inf must be NaN, got {}", out[0]);
+        assert_eq!(out[1], 0.0, "finite column stays exact");
+    }
+
+    #[test]
+    fn dot_matches_naive_bitwise_across_threads_and_tiles() {
+        let (m, n, k) = (7, 300, 190); // forces partial N/K tiles
+        let a: Vec<f32> = (0..m * k).map(|i| ((i * 37 % 97) as f32 - 48.0) * 0.37).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| ((i * 61 % 89) as f32 - 44.0) * 0.13).collect();
+        let mut naive = vec![0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p];
+                for j in 0..n {
+                    naive[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+        for threads in [1, 2, 5] {
+            let mut out = vec![0f32; m * n];
+            dot_general(&a, &b, n, k, &mut out, threads);
+            assert_eq!(out, naive, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_is_partition_invariant() {
+        let mut a = vec![0f32; 40_000];
+        let mut b = vec![0f32; 40_000];
+        par_map(&mut a, 1, 1, |off, c| {
+            for (i, o) in c.iter_mut().enumerate() {
+                *o = ((off + i) as f32).sin();
+            }
+        });
+        par_map(&mut b, 7, 1, |off, c| {
+            for (i, o) in c.iter_mut().enumerate() {
+                *o = ((off + i) as f32).sin();
+            }
+        });
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,581 @@
+//! Pure-rust CPU backend: a planned, arena-backed, multi-threaded
+//! executor for the graph IR.
+//!
+//! `NativeExecutable::new` runs the planner (`plan`) once at compile
+//! time: topological schedule, liveness-based buffer-arena slot
+//! assignment (in-place elementwise ops over dying inputs, aliasing
+//! reshapes, recycled dot-permute scratch) and all shape math. `run`
+//! then executes precomputed steps over persistent slot buffers — the
+//! steady state allocates nothing but the returned output tensor.
+//! Kernels (`kernels`) are cache-tiled and partition work across scoped
+//! worker threads with a partition-invariant accumulation order, so any
+//! `CompileOptions::threads` value produces bitwise-identical results.
+//!
+//! `run_reference` (`reference`) keeps the seed's per-node interpret
+//! loop — same kernels, serial, one fresh allocation per node — as the
+//! differential baseline for the arena-aliasing property suite and the
+//! "seed interpreter" rows of `benches/native_exec.rs`.
+
+pub mod kernels;
+pub mod plan;
+mod reference;
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::graph::Graph;
+use super::passes::ArenaStats;
+use super::{Backend, BackendExec, Buffer, CompileOptions, HostTensor};
+use plan::{ExecPlan, InPlace, Kernel, Step, ValueRef};
+
+/// The default engine: executes planned graphs on the host CPU.
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native-cpu"
+    }
+
+    fn compile_graph(
+        &self,
+        graph: &Graph,
+        opts: &CompileOptions,
+    ) -> Result<Arc<dyn BackendExec>> {
+        Ok(Arc::new(NativeExecutable::new(graph.clone(), opts.resolved_threads())?))
+    }
+
+    fn compile_hlo_text_file(&self, path: &std::path::Path) -> Result<Arc<dyn BackendExec>> {
+        bail!(
+            "{}: HLO-text artifacts require the PJRT backend — rebuild with \
+             --features xla-pjrt and LRDX_BACKEND=xla (native models are built \
+             via runtime::netbuilder instead)",
+            path.display()
+        )
+    }
+
+    fn upload(&self, data: &[f32], dims: &[usize]) -> Result<Buffer> {
+        if dims.iter().product::<usize>() != data.len() {
+            bail!("upload: {} elements for shape {dims:?}", data.len());
+        }
+        Ok(Buffer::F32(Arc::new(HostTensor::new(dims.to_vec(), data.to_vec()))))
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<Buffer> {
+        if dims.iter().product::<usize>() != data.len() {
+            bail!("upload_i32: {} elements for shape {dims:?}", data.len());
+        }
+        Ok(Buffer::I32 { dims: dims.to_vec(), data: Arc::new(data.to_vec()) })
+    }
+}
+
+/// A compiled graph: the execution plan plus its persistent arena.
+///
+/// The arena lives behind a `Mutex`: one `run` at a time per executable
+/// (concurrent serving replicas each compile their own — the
+/// coordinator's per-worker-engine design).
+pub struct NativeExecutable {
+    graph: Graph,
+    plan: ExecPlan,
+    threads: usize,
+    arena: Mutex<Vec<Vec<f32>>>,
+}
+
+impl NativeExecutable {
+    /// Plan `graph` for execution with `threads` workers (`>= 1`; pass 1
+    /// for the fully serial reference configuration). The arena is
+    /// allocated here, never during `run`.
+    pub fn new(graph: Graph, threads: usize) -> Result<NativeExecutable> {
+        let plan = plan::build_plan(&graph)?;
+        let arena = plan.slot_caps.iter().map(|&c| vec![0f32; c]).collect();
+        Ok(NativeExecutable { graph, plan, threads: threads.max(1), arena: Mutex::new(arena) })
+    }
+
+    /// The plan's buffer-arena accounting.
+    pub fn arena_stats(&self) -> &ArenaStats {
+        &self.plan.stats
+    }
+
+    /// Core evaluation over `Arc`'d tensors: parameters are refcount
+    /// bumps, not copies, and every intermediate writes into its planned
+    /// arena slot — the per-call cost is the compute plus one output
+    /// allocation.
+    pub fn run(&self, args: &[Arc<HostTensor>]) -> Result<Arc<HostTensor>> {
+        let g = &self.graph;
+        if args.len() != g.n_params {
+            bail!("{}: {} args, expected {}", g.name, args.len(), g.n_params);
+        }
+        for p in &self.plan.params {
+            let a = &args[p.index];
+            if a.dims != p.dims {
+                bail!(
+                    "{}: parameter {} ({}) got {:?}, expects {:?}",
+                    g.name,
+                    p.index,
+                    p.name,
+                    a.dims,
+                    p.dims
+                );
+            }
+        }
+        let mut guard = self
+            .arena
+            .lock()
+            .map_err(|_| anyhow!("{}: executor arena poisoned", g.name))?;
+        let bufs: &mut [Vec<f32>] = &mut guard[..];
+        for step in &self.plan.steps {
+            self.exec_step(step, args, bufs);
+        }
+        Ok(match self.plan.root {
+            ValueRef::Arg(i) => {
+                let a = &args[i];
+                if a.dims == self.plan.root_dims {
+                    Arc::clone(a)
+                } else {
+                    // root is a reshape-alias of an argument
+                    Arc::new(HostTensor::new(self.plan.root_dims.clone(), a.data.clone()))
+                }
+            }
+            ValueRef::Slot(s) => {
+                let n = kernels::numel(&self.plan.root_dims);
+                Arc::new(HostTensor::new(
+                    self.plan.root_dims.clone(),
+                    bufs[s][..n].to_vec(),
+                ))
+            }
+        })
+    }
+
+    fn exec_step(&self, step: &Step, args: &[Arc<HostTensor>], bufs: &mut [Vec<f32>]) {
+        let t = self.threads;
+        // Dot operand permutes gather into their scratch slots first
+        // (planner guarantees scratch ≠ inputs ≠ output).
+        if let Kernel::Dot { lhs_prep, rhs_prep, .. } = &step.kernel {
+            for (prep, &(vin, len)) in
+                [lhs_prep, rhs_prep].into_iter().zip(step.ins.iter())
+            {
+                if let Some(p) = prep {
+                    let mut scratch = std::mem::take(&mut bufs[p.slot]);
+                    kernels::gather(
+                        resolve(vin, len, args, bufs),
+                        &p.axes,
+                        &mut scratch[..p.len],
+                        t,
+                    );
+                    bufs[p.slot] = scratch;
+                }
+            }
+        }
+        // The output slot is taken out of the arena wholesale, so input
+        // reads borrow `bufs` freely; in-place steps find their dying
+        // input already sitting in `out`.
+        let mut out_buf = std::mem::take(&mut bufs[step.out]);
+        let out = &mut out_buf[..step.out_len];
+        let ins = &step.ins;
+        match &step.kernel {
+            Kernel::ConstFill { value } => kernels::fill(out, *value),
+            Kernel::Fill => {
+                kernels::fill(out, resolve(ins[0].0, 1, args, bufs)[0]);
+            }
+            Kernel::Gather { axes } => {
+                kernels::gather(resolve(ins[0].0, ins[0].1, args, bufs), axes, out, t);
+            }
+            Kernel::Concat { outer, inner, total, mids } => {
+                let mut offset = 0usize;
+                for (&(v, len), &mid) in ins.iter().zip(mids.iter()) {
+                    let x = resolve(v, len, args, bufs);
+                    kernels::concat_part(x, *outer, mid, *inner, *total, offset, out);
+                    offset += mid;
+                }
+            }
+            Kernel::Slice { outer, mid_in, inner, start, stride, mid_out } => {
+                let x = resolve(ins[0].0, ins[0].1, args, bufs);
+                kernels::slice(x, *outer, *mid_in, *inner, *start, *stride, *mid_out, out);
+            }
+            Kernel::Dot { n, k, lhs_prep, rhs_prep } => {
+                let a = match lhs_prep {
+                    Some(p) => &bufs[p.slot][..p.len],
+                    None => resolve(ins[0].0, ins[0].1, args, bufs),
+                };
+                let b = match rhs_prep {
+                    Some(p) => &bufs[p.slot][..p.len],
+                    None => resolve(ins[1].0, ins[1].1, args, bufs),
+                };
+                kernels::dot_general(a, b, *n, *k, out, t);
+            }
+            Kernel::Bin { op, in_place } => {
+                let op = *op;
+                match in_place {
+                    InPlace::No => kernels::binary(
+                        resolve(ins[0].0, ins[0].1, args, bufs),
+                        resolve(ins[1].0, ins[1].1, args, bufs),
+                        out,
+                        t,
+                        |a, b| op.apply(a, b),
+                    ),
+                    // `out` holds the lhs: cur is the lhs operand
+                    InPlace::Lhs => kernels::binary_inplace(
+                        out,
+                        resolve(ins[0].0, ins[0].1, args, bufs),
+                        t,
+                        |cur, other| op.apply(cur, other),
+                    ),
+                    // `out` holds the rhs: keep operand order exact
+                    InPlace::Rhs => kernels::binary_inplace(
+                        out,
+                        resolve(ins[0].0, ins[0].1, args, bufs),
+                        t,
+                        |cur, other| op.apply(other, cur),
+                    ),
+                    InPlace::Both => {
+                        kernels::binary_inplace_self(out, t, |a, b| op.apply(a, b))
+                    }
+                }
+            }
+            Kernel::BinScalar { op, swap, in_place } => {
+                let op = *op;
+                if *in_place {
+                    let s = resolve(ins[0].0, 1, args, bufs)[0];
+                    kernels::binary_scalar_inplace(out, s, *swap, t, |a, b| op.apply(a, b));
+                } else {
+                    let x = resolve(ins[0].0, ins[0].1, args, bufs);
+                    let s = resolve(ins[1].0, 1, args, bufs)[0];
+                    kernels::binary_scalar(x, s, *swap, out, t, |a, b| op.apply(a, b));
+                }
+            }
+            Kernel::Sqrt { in_place } => {
+                if *in_place {
+                    kernels::unary_inplace(out, t, |x| x.sqrt());
+                } else {
+                    kernels::unary(
+                        resolve(ins[0].0, ins[0].1, args, bufs),
+                        out,
+                        t,
+                        |x| x.sqrt(),
+                    );
+                }
+            }
+            Kernel::ReduceMean { geom } => {
+                kernels::reduce_mean(resolve(ins[0].0, ins[0].1, args, bufs), geom, out, t);
+            }
+        }
+        bufs[step.out] = out_buf;
+    }
+
+    /// Convenience for tests: borrowed host tensors in, owned tensor out.
+    pub fn execute_hosts(&self, args: &[&HostTensor]) -> Result<HostTensor> {
+        let arcs: Vec<Arc<HostTensor>> =
+            args.iter().map(|t| Arc::new((*t).clone())).collect();
+        let out = self.run(&arcs)?;
+        Ok(Arc::try_unwrap(out).unwrap_or_else(|a| (*a).clone()))
+    }
+}
+
+fn resolve<'a>(
+    v: ValueRef,
+    len: usize,
+    args: &'a [Arc<HostTensor>],
+    bufs: &'a [Vec<f32>],
+) -> &'a [f32] {
+    match v {
+        ValueRef::Arg(i) => &args[i].data[..len],
+        ValueRef::Slot(s) => &bufs[s][..len],
+    }
+}
+
+impl BackendExec for NativeExecutable {
+    fn execute(&self, args: &[&Buffer]) -> Result<Vec<Buffer>> {
+        let arcs: Vec<Arc<HostTensor>> = args
+            .iter()
+            .map(|b| match b {
+                Buffer::F32(t) => Ok(Arc::clone(t)),
+                _ => Err(anyhow!("native backend takes f32 buffers")),
+            })
+            .collect::<Result<_>>()?;
+        Ok(vec![Buffer::F32(self.run(&arcs)?)])
+    }
+
+    fn arena(&self) -> Option<ArenaStats> {
+        Some(self.plan.stats.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::graph::{GraphBuilder, Node, NodeId, OpKind};
+    use crate::util::check::assert_allclose;
+
+    fn run1(g: &Graph, args: &[HostTensor]) -> HostTensor {
+        let exe = NativeExecutable::new(g.clone(), 1).unwrap();
+        let refs: Vec<&HostTensor> = args.iter().collect();
+        exe.execute_hosts(&refs).unwrap()
+    }
+
+    /// Planned (at 1 and 3 threads) and reference execution agree
+    /// bitwise — run every fixture through all three.
+    fn run_all_ways(g: &Graph, args: &[HostTensor]) -> HostTensor {
+        let arcs: Vec<Arc<HostTensor>> =
+            args.iter().map(|t| Arc::new(t.clone())).collect();
+        let exe1 = NativeExecutable::new(g.clone(), 1).unwrap();
+        let exe3 = NativeExecutable::new(g.clone(), 3).unwrap();
+        let planned = exe1.run(&arcs).unwrap();
+        let threaded = exe3.run(&arcs).unwrap();
+        let reference = exe1.run_reference(&arcs).unwrap();
+        assert_eq!(planned.data, reference.data, "planned vs reference");
+        assert_eq!(planned.data, threaded.data, "1 vs 3 threads");
+        assert_eq!(planned.dims, reference.dims);
+        (*planned).clone()
+    }
+
+    #[test]
+    fn add_and_sqrt() {
+        let b = GraphBuilder::new("t");
+        let p = b.parameter(0, &[2, 2], "x").unwrap();
+        let s = (p.clone() + p).unwrap().sqrt().unwrap();
+        let g = b.build(&s).unwrap();
+        let x = HostTensor::new(vec![2, 2], vec![2.0, 8.0, 18.0, 32.0]);
+        let out = run_all_ways(&g, &[x]);
+        assert_eq!(out.data, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn dot_general_matches_manual_matmul() {
+        // [2,3] x [3,2] contracting the 3-dim
+        let b = GraphBuilder::new("mm");
+        let x = b.parameter(0, &[2, 3], "x").unwrap();
+        let y = b.parameter(1, &[3, 2], "y").unwrap();
+        let d = x.dot_general(&y, &[1], &[0]).unwrap();
+        let g = b.build(&d).unwrap();
+        let out = run_all_ways(
+            &g,
+            &[
+                HostTensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]),
+                HostTensor::new(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]),
+            ],
+        );
+        assert_eq!(out.dims, vec![2, 2]);
+        assert_eq!(out.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn dot_general_with_high_rank_rhs() {
+        // [S=2, C=2] x [N=1, C=2, H=2, W=2] contracting C -> [2, 1, 2, 2]
+        let b = GraphBuilder::new("conv1x1");
+        let w = b.parameter(0, &[2, 2], "w").unwrap();
+        let x = b.parameter(1, &[1, 2, 2, 2], "x").unwrap();
+        let d = w.dot_general(&x, &[1], &[1]).unwrap();
+        let g = b.build(&d).unwrap();
+        let xs = HostTensor::new(vec![1, 2, 2, 2], (1..=8).map(|v| v as f32).collect());
+        let ws = HostTensor::new(vec![2, 2], vec![1., 0., 1., 2.]);
+        let out = run_all_ways(&g, &[ws, xs]);
+        assert_eq!(out.dims, vec![2, 1, 2, 2]);
+        // channel out 0 = in ch 0; channel out 1 = ch0 + 2*ch1
+        assert_eq!(out.data[..4], [1., 2., 3., 4.]);
+        assert_eq!(out.data[4..], [1. + 10., 2. + 12., 3. + 14., 4. + 16.]);
+    }
+
+    #[test]
+    fn dot_general_zero_weight_times_nan_is_nan() {
+        // THE seed bug: the `av == 0.0` skip turned 0 × NaN into 0. A
+        // poisoned activation hitting a zero weight row must stay NaN.
+        let b = GraphBuilder::new("ieee");
+        let x = b.parameter(0, &[1, 2], "x").unwrap();
+        let w = b.parameter(1, &[2, 2], "w").unwrap();
+        let d = x.dot_general(&w, &[1], &[0]).unwrap();
+        let g = b.build(&d).unwrap();
+        let x0 = HostTensor::new(vec![1, 2], vec![0.0, 0.0]);
+        let w0 = HostTensor::new(vec![2, 2], vec![f32::NAN, 1.0, f32::INFINITY, 2.0]);
+        let out = run1(&g, &[x0, w0]);
+        assert!(out.data[0].is_nan(), "0*NaN + 0*Inf must be NaN, got {}", out.data[0]);
+        assert_eq!(out.data[1], 0.0);
+    }
+
+    #[test]
+    fn slice_concat_transpose_roundtrip() {
+        let b = GraphBuilder::new("sct");
+        let x = b.parameter(0, &[2, 4], "x").unwrap();
+        let lo = x.slice_in_dim1(0, 2, 1).unwrap();
+        let hi = x.slice_in_dim1(2, 4, 1).unwrap();
+        let back = lo.concat_in_dim(&[hi], 1).unwrap();
+        let g = b.build(&back).unwrap();
+        let x0 = HostTensor::new(vec![2, 4], (0..8).map(|v| v as f32).collect());
+        assert_eq!(run_all_ways(&g, &[x0.clone()]).data, x0.data);
+
+        let b2 = GraphBuilder::new("tr");
+        let y = b2.parameter(0, &[2, 3], "y").unwrap();
+        let t = y.transpose(&[1, 0]).unwrap();
+        let g2 = b2.build(&t).unwrap();
+        let y0 = HostTensor::new(vec![2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(run_all_ways(&g2, &[y0]).data, vec![0., 3., 1., 4., 2., 5.]);
+    }
+
+    #[test]
+    fn strided_slice_takes_every_other() {
+        let b = GraphBuilder::new("st");
+        let x = b.parameter(0, &[1, 6], "x").unwrap();
+        let s = x.slice_in_dim(1, 6, 2, 1).unwrap();
+        let g = b.build(&s).unwrap();
+        let x0 = HostTensor::new(vec![1, 6], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(run_all_ways(&g, &[x0]).data, vec![1., 3., 5.]);
+    }
+
+    #[test]
+    fn reduce_mean_over_spatial() {
+        let b = GraphBuilder::new("rm");
+        let x = b.parameter(0, &[1, 2, 2, 2], "x").unwrap();
+        let m = x.reduce_mean(&[2, 3], false).unwrap();
+        let g = b.build(&m).unwrap();
+        let x0 = HostTensor::new(vec![1, 2, 2, 2], (1..=8).map(|v| v as f32).collect());
+        let out = run_all_ways(&g, &[x0]);
+        assert_eq!(out.dims, vec![1, 2]);
+        assert_allclose(&out.data, &[2.5, 6.5], 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn reduce_mean_over_interior_axis() {
+        // exercises the non-contiguous (odometer) reduce path
+        let b = GraphBuilder::new("rmi");
+        let x = b.parameter(0, &[2, 3, 2], "x").unwrap();
+        let m = x.reduce_mean(&[1], false).unwrap();
+        let g = b.build(&m).unwrap();
+        let x0 = HostTensor::new(vec![2, 3, 2], (0..12).map(|v| v as f32).collect());
+        let out = run_all_ways(&g, &[x0]);
+        assert_eq!(out.dims, vec![2, 2]);
+        assert_allclose(&out.data, &[2.0, 3.0, 8.0, 9.0], 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn reduce_mean_over_zero_size_axis_is_a_shape_error() {
+        // 0/0 must be a compile-time error, not Inf/NaN. GraphBuilder
+        // rejects it too; hand-build the node list to hit the planner.
+        let g = Graph {
+            name: "zrm".into(),
+            nodes: vec![
+                Node {
+                    op: OpKind::Parameter { index: 0, name: "x".into() },
+                    inputs: vec![],
+                    dims: vec![2, 0],
+                },
+                Node {
+                    op: OpKind::ReduceMean { dims: vec![1] },
+                    inputs: vec![NodeId(0)],
+                    dims: vec![2],
+                },
+            ],
+            n_params: 1,
+            root: NodeId(1),
+        };
+        let err = NativeExecutable::new(g, 1).err().expect("0/0 mean must not compile");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("zero-size"), "unhelpful error: {msg}");
+    }
+
+    #[test]
+    fn broadcast_in_dim_per_channel() {
+        let b = GraphBuilder::new("bn");
+        let x = b.parameter(0, &[1, 2, 1, 2], "x").unwrap();
+        let gm = b.parameter(1, &[2], "g").unwrap();
+        let gb = gm.broadcast_in_dim(&[1, 2, 1, 2], &[1]).unwrap();
+        let y = (x * gb).unwrap();
+        let g = b.build(&y).unwrap();
+        let out = run_all_ways(
+            &g,
+            &[
+                HostTensor::new(vec![1, 2, 1, 2], vec![1., 2., 3., 4.]),
+                HostTensor::new(vec![2], vec![10., 100.]),
+            ],
+        );
+        assert_eq!(out.data, vec![10., 20., 300., 400.]);
+    }
+
+    #[test]
+    fn scalar_broadcast_max_is_relu() {
+        let b = GraphBuilder::new("relu");
+        let x = b.parameter(0, &[4], "x").unwrap();
+        let zero = b.c0(0.0).unwrap();
+        let y = x.max(&zero).unwrap();
+        let g = b.build(&y).unwrap();
+        let out = run_all_ways(&g, &[HostTensor::new(vec![4], vec![-1., 2., -3., 4.])]);
+        assert_eq!(out.data, vec![0., 2., 0., 4.]);
+    }
+
+    #[test]
+    fn reshape_aliases_and_root_reshape_of_param() {
+        let b = GraphBuilder::new("rs");
+        let x = b.parameter(0, &[2, 3], "x").unwrap();
+        let r = x.reshape(&[3, 2]).unwrap();
+        let g = b.build(&r).unwrap();
+        let x0 = HostTensor::new(vec![2, 3], (0..6).map(|v| v as f32).collect());
+        let out = run_all_ways(&g, &[x0.clone()]);
+        assert_eq!(out.dims, vec![3, 2]);
+        assert_eq!(out.data, x0.data);
+    }
+
+    #[test]
+    fn repeated_runs_reuse_the_arena_bitwise() {
+        // the same executable run twice must not read stale slot data
+        let b = GraphBuilder::new("rep");
+        let x = b.parameter(0, &[4, 4], "x").unwrap();
+        let y = b.parameter(1, &[4, 4], "y").unwrap();
+        let d = x.dot_general(&y, &[1], &[0]).unwrap();
+        let s = (d.clone() + d).unwrap().sqrt().unwrap();
+        let g = b.build(&s).unwrap();
+        let exe = NativeExecutable::new(g, 2).unwrap();
+        let mk = |seed: u64| {
+            let mut rng = crate::util::rng::Rng::new(seed);
+            Arc::new(HostTensor::new(
+                vec![4, 4],
+                (0..16).map(|_| rng.normal_f32().abs()).collect(),
+            ))
+        };
+        let (a1, b1) = (mk(1), mk(2));
+        let first = exe.run(&[a1.clone(), b1.clone()]).unwrap();
+        // different inputs in between dirty every slot
+        exe.run(&[mk(7), mk(8)]).unwrap();
+        let again = exe.run(&[a1, b1]).unwrap();
+        assert_eq!(first.data, again.data);
+    }
+
+    #[test]
+    fn arena_reuses_slots_below_naive_total() {
+        // a chain of same-shape elementwise ops must fold into O(1) slots
+        let b = GraphBuilder::new("chain");
+        let x = b.parameter(0, &[32, 32], "x").unwrap();
+        let mut y = x.sqrt().unwrap();
+        for _ in 0..8 {
+            y = (y.clone() + y).unwrap().sqrt().unwrap();
+        }
+        let g = b.build(&y).unwrap();
+        let exe = NativeExecutable::new(g, 1).unwrap();
+        let stats = exe.arena_stats();
+        assert!(
+            stats.peak_bytes < stats.naive_bytes,
+            "arena never reused a slot: {stats:?}"
+        );
+        assert!(stats.in_place_steps > 0, "elementwise chain never ran in place");
+        assert!(stats.slots <= 3, "17 same-shape nodes need at most 3 slots: {stats:?}");
+    }
+
+    #[test]
+    fn shape_mismatch_at_execute_is_reported() {
+        let b = GraphBuilder::new("chk");
+        let x = b.parameter(0, &[2, 2], "x").unwrap();
+        let g = b.build(&x).unwrap();
+        let exe = NativeExecutable::new(g, 1).unwrap();
+        let bad = HostTensor::new(vec![4], vec![0.0; 4]);
+        assert!(exe.execute_hosts(&[&bad]).is_err());
+    }
+}

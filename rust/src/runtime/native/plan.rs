@@ -1,0 +1,590 @@
+//! Compile-time execution planning for the native backend.
+//!
+//! `build_plan` turns a (topologically ordered) `Graph` into a flat step
+//! list plus a **buffer arena**: every live node's output is assigned a
+//! physical slot by a liveness scan — a slot is recycled as soon as the
+//! last consumer of its tenant has run, elementwise steps whose input
+//! dies at that very step write in place, and `Reshape` never moves data
+//! at all (it aliases its input's slot or argument). All shape math —
+//! gather strides, contraction M/N/K and operand permutes, reduce
+//! geometry — is resolved here, once, so `run` executes precomputed
+//! steps with zero per-step shape work and zero steady-state tensor
+//! allocation (permuted dot operands get arena *scratch* slots, freed
+//! within the step that used them).
+//!
+//! The planner never consults the thread count: the plan (and therefore
+//! every in-place/aliasing decision) is identical for all `threads`
+//! values, which is one half of the bitwise-determinism contract; the
+//! other half is the kernels' partition-invariant accumulation order.
+
+use anyhow::{bail, Result};
+
+use super::super::graph::{Graph, OpKind};
+use super::super::passes::ArenaStats;
+use super::kernels::{self, GatherAxis, ReduceGeom};
+
+/// Where a node's value lives at execution time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValueRef {
+    /// The caller's positional argument (parameters and their aliases).
+    Arg(usize),
+    /// An arena slot.
+    Slot(usize),
+}
+
+/// Elementwise binary operator (the only ops eligible for in-place).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Mul,
+    Max,
+}
+
+impl BinOp {
+    #[inline]
+    pub fn apply(self, a: f32, b: f32) -> f32 {
+        match self {
+            BinOp::Add => a + b,
+            BinOp::Mul => a * b,
+            BinOp::Max => a.max(b),
+        }
+    }
+}
+
+/// How an elementwise step aliases its output over a dying input slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InPlace {
+    No,
+    /// Output slot is the lhs input's slot.
+    Lhs,
+    /// Output slot is the rhs input's slot (commutative ops only).
+    Rhs,
+    /// Both inputs were the same dying slot (`x ⊕ x`).
+    Both,
+}
+
+/// A permuted dot operand: gather `axes` into arena slot `slot` first.
+#[derive(Clone, Debug)]
+pub struct DotPrep {
+    pub slot: usize,
+    pub len: usize,
+    pub axes: Vec<GatherAxis>,
+}
+
+/// One executable step with all shape math pre-resolved.
+#[derive(Clone, Debug)]
+pub enum Kernel {
+    /// Write the constant (1 element).
+    ConstFill { value: f32 },
+    /// Broadcast the scalar input over the output.
+    Fill,
+    /// transpose / broadcast_in_dim.
+    Gather { axes: Vec<GatherAxis> },
+    /// Per-input (mid extent, source offset along the concat axis).
+    Concat { outer: usize, inner: usize, total: usize, mids: Vec<usize> },
+    Slice { outer: usize, mid_in: usize, inner: usize, start: usize, stride: usize, mid_out: usize },
+    Dot { n: usize, k: usize, lhs_prep: Option<DotPrep>, rhs_prep: Option<DotPrep> },
+    Bin { op: BinOp, in_place: InPlace },
+    /// `f(scalar-broadcast)` variant: `swap` means the scalar is the lhs.
+    BinScalar { op: BinOp, swap: bool, in_place: bool },
+    Sqrt { in_place: bool },
+    ReduceMean { geom: ReduceGeom },
+}
+
+#[derive(Clone, Debug)]
+pub struct Step {
+    pub kernel: Kernel,
+    /// Resolved inputs with their exact element counts (in-place steps
+    /// omit the aliased input — it is already in the output slot).
+    pub ins: Vec<(ValueRef, usize)>,
+    pub out: usize,
+    pub out_len: usize,
+}
+
+/// Shape of one declared (live) parameter, validated per `run`.
+#[derive(Clone, Debug)]
+pub struct ParamCheck {
+    pub index: usize,
+    pub name: String,
+    pub dims: Vec<usize>,
+}
+
+/// The planned executable: steps + arena layout + root routing.
+#[derive(Clone, Debug)]
+pub struct ExecPlan {
+    pub steps: Vec<Step>,
+    /// Capacity (elements) of each arena slot.
+    pub slot_caps: Vec<usize>,
+    pub params: Vec<ParamCheck>,
+    pub root: ValueRef,
+    pub root_dims: Vec<usize>,
+    pub stats: ArenaStats,
+}
+
+// ---------------------------------------------------------------------------
+// Shared shape-resolution helpers (the reference interpreter reuses these
+// so both executors run arithmetically identical kernels)
+// ---------------------------------------------------------------------------
+
+/// Gather axes of `transpose(perm)`: out axis i reads in axis perm[i].
+pub fn transpose_axes(in_dims: &[usize], out_dims: &[usize], perm: &[usize]) -> Vec<GatherAxis> {
+    let in_strides = kernels::strides(in_dims);
+    let out_strides = kernels::strides(out_dims);
+    perm.iter()
+        .enumerate()
+        .map(|(axis_out, &axis_in)| GatherAxis {
+            out_stride: out_strides[axis_out],
+            out_extent: out_dims[axis_out],
+            src_stride: in_strides[axis_in],
+        })
+        .collect()
+}
+
+/// Gather axes of `broadcast_in_dim(mapping)`: in axis i feeds out axis
+/// mapping[i]; unmapped output axes replicate (no gather entry needed).
+pub fn broadcast_axes(in_dims: &[usize], out_dims: &[usize], mapping: &[usize]) -> Vec<GatherAxis> {
+    let in_strides = kernels::strides(in_dims);
+    let out_strides = kernels::strides(out_dims);
+    mapping
+        .iter()
+        .enumerate()
+        .map(|(axis_in, &axis_out)| GatherAxis {
+            out_stride: out_strides[axis_out],
+            out_extent: out_dims[axis_out],
+            src_stride: in_strides[axis_in],
+        })
+        .collect()
+}
+
+/// Resolved contraction: operand permutes (None when already laid out)
+/// plus the matmul extents.
+pub struct DotShape {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Permutation bringing lhs to [M, K] row-major, if needed.
+    pub lhs_perm: Option<Vec<usize>>,
+    /// Permutation bringing rhs to [K, N] row-major, if needed.
+    pub rhs_perm: Option<Vec<usize>>,
+}
+
+pub fn dot_shape(
+    lhs_dims: &[usize],
+    rhs_dims: &[usize],
+    lhs_contract: &[usize],
+    rhs_contract: &[usize],
+) -> Result<DotShape> {
+    let lhs_free: Vec<usize> =
+        (0..lhs_dims.len()).filter(|i| !lhs_contract.contains(i)).collect();
+    let rhs_free: Vec<usize> =
+        (0..rhs_dims.len()).filter(|i| !rhs_contract.contains(i)).collect();
+    let m: usize = lhs_free.iter().map(|&i| lhs_dims[i]).product();
+    let n: usize = rhs_free.iter().map(|&i| rhs_dims[i]).product();
+    let k: usize = lhs_contract.iter().map(|&i| lhs_dims[i]).product();
+    let k2: usize = rhs_contract.iter().map(|&i| rhs_dims[i]).product();
+    if k != k2 {
+        bail!("dot_general: contracted sizes differ ({k} vs {k2})");
+    }
+    let mut l_perm: Vec<usize> = lhs_free;
+    l_perm.extend_from_slice(lhs_contract);
+    let mut r_perm: Vec<usize> = rhs_contract.to_vec();
+    r_perm.extend_from_slice(&rhs_free);
+    let identity = |p: &[usize]| p.iter().enumerate().all(|(i, &v)| i == v);
+    Ok(DotShape {
+        m,
+        n,
+        k,
+        lhs_perm: (!identity(&l_perm)).then_some(l_perm),
+        rhs_perm: (!identity(&r_perm)).then_some(r_perm),
+    })
+}
+
+/// (outer, inner, total-mid) of a concat/slice axis split.
+pub fn axis_split(dims: &[usize], dim: usize) -> (usize, usize, usize) {
+    let outer: usize = dims[..dim].iter().product();
+    let inner: usize = dims[dim + 1..].iter().product();
+    (outer, inner, dims[dim])
+}
+
+/// Reduce geometry; errors on an empty reduce subspace (0/0 mean).
+pub fn reduce_geom(in_dims: &[usize], out_dims: &[usize], reduce: &[usize]) -> Result<ReduceGeom> {
+    let count: usize = reduce.iter().map(|&r| in_dims[r]).product();
+    if count == 0 {
+        bail!(
+            "reduce_mean over zero-size axes {reduce:?} of shape {in_dims:?} \
+             is an empty mean (0/0)"
+        );
+    }
+    let in_strides = kernels::strides(in_dims);
+    let out_strides = kernels::strides(out_dims);
+    let kept_axes: Vec<usize> =
+        (0..in_dims.len()).filter(|i| !reduce.contains(i)).collect();
+    let kept = kept_axes
+        .iter()
+        .enumerate()
+        .map(|(slot, &axis)| GatherAxis {
+            out_stride: out_strides[slot],
+            out_extent: out_dims[slot],
+            src_stride: in_strides[axis],
+        })
+        .collect();
+    let mut sorted = reduce.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let trailing = sorted.len() == reduce.len()
+        && sorted
+            .iter()
+            .enumerate()
+            .all(|(i, &ax)| ax == in_dims.len() - sorted.len() + i);
+    let red = reduce.iter().map(|&r| (in_dims[r], in_strides[r])).collect();
+    Ok(ReduceGeom { kept, red, count, contiguous: trailing })
+}
+
+// ---------------------------------------------------------------------------
+// The planner
+// ---------------------------------------------------------------------------
+
+struct Arena {
+    caps: Vec<usize>,
+    /// Outstanding consumptions per slot (sum of remaining uses of every
+    /// node aliasing it); 0 once allocated-but-unassigned.
+    refs: Vec<usize>,
+    free: Vec<usize>,
+}
+
+impl Arena {
+    /// Best-fit allocate: smallest free slot that already fits, else grow
+    /// the largest free slot (cheaper than a fresh allocation), else a
+    /// new slot.
+    fn alloc(&mut self, need: usize) -> usize {
+        let fit = self
+            .free
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| self.caps[s] >= need)
+            .min_by_key(|(_, &s)| self.caps[s])
+            .map(|(i, _)| i);
+        let pos = fit.or_else(|| {
+            self.free
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &s)| self.caps[s])
+                .map(|(i, _)| i)
+        });
+        match pos {
+            Some(i) => {
+                let s = self.free.swap_remove(i);
+                self.caps[s] = self.caps[s].max(need);
+                s
+            }
+            None => {
+                self.caps.push(need);
+                self.refs.push(0);
+                self.caps.len() - 1
+            }
+        }
+    }
+
+    fn release(&mut self, slot: usize) {
+        debug_assert_eq!(self.refs[slot], 0);
+        self.free.push(slot);
+    }
+}
+
+pub fn build_plan(g: &Graph) -> Result<ExecPlan> {
+    let n = g.nodes.len();
+    // Live set: reverse reachability from the root. Dead nodes (unused
+    // parameters, orphans) get no step and pin no memory.
+    let mut live = vec![false; n];
+    let mut stack = vec![g.root.0];
+    while let Some(i) = stack.pop() {
+        if live[i] {
+            continue;
+        }
+        live[i] = true;
+        stack.extend(g.nodes[i].inputs.iter().map(|id| id.0));
+    }
+    // Remaining consumptions per live node (+1 for the root readout).
+    let mut remaining = vec![0usize; n];
+    for (i, node) in g.nodes.iter().enumerate() {
+        if live[i] {
+            for inp in &node.inputs {
+                remaining[inp.0] += 1;
+            }
+        }
+    }
+    remaining[g.root.0] += 1;
+
+    let mut arena = Arena { caps: Vec::new(), refs: Vec::new(), free: Vec::new() };
+    let mut values: Vec<Option<ValueRef>> = vec![None; n];
+    let mut steps: Vec<Step> = Vec::new();
+    let mut params: Vec<ParamCheck> = Vec::new();
+    let mut naive_bytes = 0usize;
+    let mut in_place_steps = 0usize;
+
+    for (i, node) in g.nodes.iter().enumerate() {
+        if !live[i] {
+            continue;
+        }
+        let out_len = kernels::numel(&node.dims);
+        // Inline helpers (macros, not closures: they must not hold
+        // borrows across the arena mutations below).
+        macro_rules! in_dims {
+            ($slot:expr) => {
+                &g.nodes[node.inputs[$slot].0].dims[..]
+            };
+        }
+        macro_rules! in_len {
+            ($slot:expr) => {
+                kernels::numel(in_dims!($slot))
+            };
+        }
+        macro_rules! val {
+            ($slot:expr) => {
+                values[node.inputs[$slot].0]
+                    .expect("topological order guarantees inputs")
+            };
+        }
+
+        match &node.op {
+            OpKind::Parameter { index, name } => {
+                params.push(ParamCheck {
+                    index: *index,
+                    name: name.clone(),
+                    dims: node.dims.clone(),
+                });
+                values[i] = Some(ValueRef::Arg(*index));
+                continue;
+            }
+            OpKind::Reshape => {
+                // Pure alias: same bytes, new dims. The slot (if any)
+                // first inherits this node's future uses, then sheds the
+                // edge being consumed — never dipping to 0 in between.
+                let v = val!(0);
+                let id = node.inputs[0].0;
+                if let ValueRef::Slot(s) = v {
+                    arena.refs[s] += remaining[i];
+                    arena.refs[s] -= 1;
+                    if arena.refs[s] == 0 {
+                        arena.release(s);
+                    }
+                }
+                remaining[id] -= 1;
+                values[i] = Some(v);
+                naive_bytes += out_len * 4; // the old interpreter copied
+                continue;
+            }
+            _ => {}
+        }
+
+        naive_bytes += out_len * 4;
+
+        // In-place candidates: elementwise ops over a dying input slot of
+        // the same extent. `dying` means every outstanding use of the
+        // slot is an edge into this very node.
+        macro_rules! dying_slot {
+            ($v:expr, $len:expr) => {{
+                match $v {
+                    ValueRef::Slot(s)
+                        if $len == out_len
+                            && arena.refs[s]
+                                == node
+                                    .inputs
+                                    .iter()
+                                    .filter(|id| {
+                                        values[id.0] == Some(ValueRef::Slot(s))
+                                    })
+                                    .count() =>
+                    {
+                        Some(s)
+                    }
+                    _ => None,
+                }
+            }};
+        }
+
+        let (kernel, ins, out_slot) = match &node.op {
+            OpKind::Parameter { .. } | OpKind::Reshape => unreachable!("handled above"),
+            OpKind::ConstScalar { value } => {
+                (Kernel::ConstFill { value: *value }, vec![], None)
+            }
+            OpKind::Broadcast => {
+                (Kernel::Fill, vec![(val!(0), 1)], None)
+            }
+            OpKind::BroadcastInDim { mapping } => (
+                Kernel::Gather { axes: broadcast_axes(in_dims!(0), &node.dims, mapping) },
+                vec![(val!(0), in_len!(0))],
+                None,
+            ),
+            OpKind::Transpose { perm } => (
+                Kernel::Gather { axes: transpose_axes(in_dims!(0), &node.dims, perm) },
+                vec![(val!(0), in_len!(0))],
+                None,
+            ),
+            OpKind::Concat { dim } => {
+                let (outer, inner, total) = axis_split(&node.dims, *dim);
+                let mids: Vec<usize> =
+                    (0..node.inputs.len()).map(|p| in_dims!(p)[*dim]).collect();
+                let ins = (0..node.inputs.len()).map(|p| (val!(p), in_len!(p))).collect();
+                (Kernel::Concat { outer, inner, total, mids }, ins, None)
+            }
+            OpKind::Slice { dim, start, stop: _, stride } => {
+                let (outer, inner, _) = axis_split(in_dims!(0), *dim);
+                (
+                    Kernel::Slice {
+                        outer,
+                        mid_in: in_dims!(0)[*dim],
+                        inner,
+                        start: *start,
+                        stride: *stride,
+                        mid_out: node.dims[*dim],
+                    },
+                    vec![(val!(0), in_len!(0))],
+                    None,
+                )
+            }
+            OpKind::DotGeneral { lhs_contract, rhs_contract } => {
+                let shape = dot_shape(in_dims!(0), in_dims!(1), lhs_contract, rhs_contract)?;
+                // Scratch for permuted operands: allocated while the
+                // inputs are live, released before the output below so a
+                // LATER step can reuse them — never this step's output.
+                let mut mk_prep = |perm: Option<Vec<usize>>, which: usize| -> Option<DotPrep> {
+                    perm.map(|p| {
+                        let len = in_len!(which);
+                        let pdims: Vec<usize> =
+                            p.iter().map(|&ax| in_dims!(which)[ax]).collect();
+                        let axes = transpose_axes(in_dims!(which), &pdims, &p);
+                        naive_bytes += len * 4;
+                        DotPrep { slot: arena.alloc(len), len, axes }
+                    })
+                };
+                let lhs_prep = mk_prep(shape.lhs_perm, 0);
+                let rhs_prep = mk_prep(shape.rhs_perm, 1);
+                (
+                    Kernel::Dot { n: shape.n, k: shape.k, lhs_prep, rhs_prep },
+                    vec![(val!(0), in_len!(0)), (val!(1), in_len!(1))],
+                    None,
+                )
+            }
+            OpKind::Add | OpKind::Mul | OpKind::Max => {
+                let op = match &node.op {
+                    OpKind::Add => BinOp::Add,
+                    OpKind::Mul => BinOp::Mul,
+                    _ => BinOp::Max,
+                };
+                let (ld, rd) = (in_dims!(0), in_dims!(1));
+                if ld == rd {
+                    let (a, b) = (val!(0), val!(1));
+                    if let Some(s) = dying_slot!(a, in_len!(0)) {
+                        let ip = if a == b { InPlace::Both } else { InPlace::Lhs };
+                        in_place_steps += 1;
+                        let ins = if a == b { vec![] } else { vec![(b, in_len!(1))] };
+                        (Kernel::Bin { op, in_place: ip }, ins, Some(s))
+                    } else if let Some(s) = dying_slot!(b, in_len!(1)) {
+                        in_place_steps += 1;
+                        (
+                            Kernel::Bin { op, in_place: InPlace::Rhs },
+                            vec![(a, in_len!(0))],
+                            Some(s),
+                        )
+                    } else {
+                        (
+                            Kernel::Bin { op, in_place: InPlace::No },
+                            vec![(a, in_len!(0)), (b, in_len!(1))],
+                            None,
+                        )
+                    }
+                } else {
+                    // GraphBuilder rejects this at construction time, but
+                    // Graph is a pub type and the planner accepts any graph.
+                    if !ld.is_empty() && !rd.is_empty() {
+                        bail!("elementwise op on mismatched shapes {ld:?} vs {rd:?}");
+                    }
+                    let scalar_is_lhs = ld.is_empty();
+                    let (sc, tensor, tlen) = if scalar_is_lhs {
+                        (val!(0), val!(1), in_len!(1))
+                    } else {
+                        (val!(1), val!(0), in_len!(0))
+                    };
+                    // `sc == tensor` (a scalar reshape-aliasing the tensor
+                    // slot) must not go in place: the executor would read
+                    // the scalar out of the already-taken output buffer.
+                    if let Some(s) = dying_slot!(tensor, tlen).filter(|_| sc != tensor) {
+                        in_place_steps += 1;
+                        (
+                            Kernel::BinScalar { op, swap: scalar_is_lhs, in_place: true },
+                            vec![(sc, 1)],
+                            Some(s),
+                        )
+                    } else {
+                        (
+                            Kernel::BinScalar { op, swap: scalar_is_lhs, in_place: false },
+                            vec![(tensor, tlen), (sc, 1)],
+                            None,
+                        )
+                    }
+                }
+            }
+            OpKind::Sqrt => {
+                let a = val!(0);
+                if let Some(s) = dying_slot!(a, in_len!(0)) {
+                    in_place_steps += 1;
+                    (Kernel::Sqrt { in_place: true }, vec![], Some(s))
+                } else {
+                    (Kernel::Sqrt { in_place: false }, vec![(a, in_len!(0))], None)
+                }
+            }
+            OpKind::ReduceMean { dims } => (
+                Kernel::ReduceMean { geom: reduce_geom(in_dims!(0), &node.dims, dims)? },
+                vec![(val!(0), in_len!(0))],
+                None,
+            ),
+        };
+
+        // Allocate the output while inputs and dot scratch are still
+        // held, so it can alias neither; only then hand the scratch
+        // slots back to the free list for LATER steps to reuse.
+        let out = match out_slot {
+            Some(s) => s, // in-place: slot stays allocated, refs adjusted below
+            None => arena.alloc(out_len),
+        };
+        if let Kernel::Dot { lhs_prep, rhs_prep, .. } = &kernel {
+            for p in [lhs_prep, rhs_prep].into_iter().flatten() {
+                arena.release(p.slot);
+            }
+        }
+        // Consume the input edges (for in-place steps this drives the
+        // reused slot's refs to 0 without releasing it — we immediately
+        // re-assign it to this node's output below).
+        for inp in &node.inputs {
+            let id = inp.0;
+            remaining[id] -= 1;
+            if let Some(ValueRef::Slot(s)) = values[id] {
+                arena.refs[s] -= 1;
+                if arena.refs[s] == 0 && Some(s) != out_slot {
+                    arena.release(s);
+                }
+            }
+        }
+        arena.refs[out] += remaining[i];
+        values[i] = Some(ValueRef::Slot(out));
+        steps.push(Step { kernel, ins, out, out_len });
+    }
+
+    let root = values[g.root.0].expect("root is live");
+    let peak_bytes = arena.caps.iter().sum::<usize>() * 4;
+    let stats = ArenaStats {
+        slots: arena.caps.len(),
+        peak_bytes,
+        naive_bytes,
+        in_place_steps,
+    };
+    Ok(ExecPlan {
+        steps,
+        slot_caps: arena.caps,
+        params,
+        root,
+        root_dims: g.nodes[g.root.0].dims.clone(),
+        stats,
+    })
+}

@@ -1,0 +1,164 @@
+//! The seed interpreter, kept as a differential baseline.
+//!
+//! `run_reference` executes the graph node by node with one fresh heap
+//! allocation per node and no worker threads — exactly the PR 1
+//! execution model — but through the *same* kernels as the planned
+//! path, so the arena-aliasing property suite can demand bitwise
+//! equality between the two executors, and `benches/native_exec.rs` can
+//! price the plan + arena + threading against the seed honestly.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::super::graph::OpKind;
+use super::super::HostTensor;
+use super::plan::{self, BinOp};
+use super::{kernels, NativeExecutable};
+
+impl NativeExecutable {
+    /// Interpret the graph the way the seed backend did: per-node output
+    /// allocation, intermediates freed at last use, fully serial.
+    pub fn run_reference(&self, args: &[Arc<HostTensor>]) -> Result<Arc<HostTensor>> {
+        let g = &self.graph;
+        if args.len() != g.n_params {
+            bail!("{}: {} args, expected {}", g.name, args.len(), g.n_params);
+        }
+        let mut remaining = vec![0usize; g.nodes.len()];
+        for node in &g.nodes {
+            for inp in &node.inputs {
+                remaining[inp.0] += 1;
+            }
+        }
+        remaining[g.root.0] += 1;
+        let mut values: Vec<Option<Arc<HostTensor>>> = vec![None; g.nodes.len()];
+        for (i, node) in g.nodes.iter().enumerate() {
+            if remaining[i] == 0 {
+                continue; // dead node (e.g. unused parameter)
+            }
+            let out = match &node.op {
+                OpKind::Parameter { index, name } => {
+                    let a = &args[*index];
+                    if a.dims != node.dims {
+                        bail!(
+                            "{}: parameter {index} ({name}) got {:?}, expects {:?}",
+                            g.name,
+                            a.dims,
+                            node.dims
+                        );
+                    }
+                    Arc::clone(a)
+                }
+                op => {
+                    let ins: Vec<&HostTensor> = node
+                        .inputs
+                        .iter()
+                        .map(|id| {
+                            values[id.0]
+                                .as_deref()
+                                .ok_or_else(|| anyhow!("{}: input freed early", g.name))
+                        })
+                        .collect::<Result<_>>()?;
+                    Arc::new(eval_op(op, &ins, &node.dims)?)
+                }
+            };
+            values[i] = Some(out);
+            for inp in &node.inputs {
+                remaining[inp.0] -= 1;
+                if remaining[inp.0] == 0 {
+                    values[inp.0] = None;
+                }
+            }
+        }
+        values[g.root.0]
+            .take()
+            .ok_or_else(|| anyhow!("{}: root value missing", g.name))
+    }
+}
+
+fn eval_op(op: &OpKind, ins: &[&HostTensor], out_dims: &[usize]) -> Result<HostTensor> {
+    let n = kernels::numel(out_dims);
+    let mut data = vec![0f32; n];
+    match op {
+        OpKind::Parameter { .. } => unreachable!("parameters handled by the driver"),
+        OpKind::ConstScalar { value } => kernels::fill(&mut data, *value),
+        OpKind::Broadcast => kernels::fill(&mut data, ins[0].data[0]),
+        OpKind::BroadcastInDim { mapping } => {
+            let axes = plan::broadcast_axes(&ins[0].dims, out_dims, mapping);
+            kernels::gather(&ins[0].data, &axes, &mut data, 1);
+        }
+        OpKind::Concat { dim } => {
+            let (outer, inner, total) = plan::axis_split(out_dims, *dim);
+            let mut offset = 0usize;
+            for t in ins {
+                let mid = t.dims[*dim];
+                kernels::concat_part(&t.data, outer, mid, inner, total, offset, &mut data);
+                offset += mid;
+            }
+        }
+        OpKind::Slice { dim, start, stop: _, stride } => {
+            let (outer, inner, _) = plan::axis_split(&ins[0].dims, *dim);
+            kernels::slice(
+                &ins[0].data,
+                outer,
+                ins[0].dims[*dim],
+                inner,
+                *start,
+                *stride,
+                out_dims[*dim],
+                &mut data,
+            );
+        }
+        OpKind::Reshape => kernels::copy(&ins[0].data, &mut data),
+        OpKind::Transpose { perm } => {
+            let axes = plan::transpose_axes(&ins[0].dims, out_dims, perm);
+            kernels::gather(&ins[0].data, &axes, &mut data, 1);
+        }
+        OpKind::DotGeneral { lhs_contract, rhs_contract } => {
+            let (lhs, rhs) = (ins[0], ins[1]);
+            let shape = plan::dot_shape(&lhs.dims, &rhs.dims, lhs_contract, rhs_contract)?;
+            let a = permuted(lhs, shape.lhs_perm.as_deref());
+            let b = permuted(rhs, shape.rhs_perm.as_deref());
+            let a: &[f32] = a.as_deref().unwrap_or(&lhs.data);
+            let b: &[f32] = b.as_deref().unwrap_or(&rhs.data);
+            kernels::dot_general(a, b, shape.n, shape.k, &mut data, 1);
+        }
+        OpKind::Add | OpKind::Mul | OpKind::Max => {
+            let op = match op {
+                OpKind::Add => BinOp::Add,
+                OpKind::Mul => BinOp::Mul,
+                _ => BinOp::Max,
+            };
+            let (a, b) = (ins[0], ins[1]);
+            if a.dims == b.dims {
+                kernels::binary(&a.data, &b.data, &mut data, 1, |x, y| op.apply(x, y));
+            } else if a.dims.is_empty() {
+                kernels::binary_scalar(&b.data, a.data[0], true, &mut data, 1, |x, y| {
+                    op.apply(x, y)
+                });
+            } else if b.dims.is_empty() {
+                kernels::binary_scalar(&a.data, b.data[0], false, &mut data, 1, |x, y| {
+                    op.apply(x, y)
+                });
+            } else {
+                bail!("elementwise op on mismatched shapes {:?} vs {:?}", a.dims, b.dims);
+            }
+        }
+        OpKind::ReduceMean { dims } => {
+            let geom = plan::reduce_geom(&ins[0].dims, out_dims, dims)?;
+            kernels::reduce_mean(&ins[0].data, &geom, &mut data, 1);
+        }
+        OpKind::Sqrt => kernels::unary(&ins[0].data, &mut data, 1, |x| x.sqrt()),
+    }
+    Ok(HostTensor::new(out_dims.to_vec(), data))
+}
+
+/// Materialize `x` with its axes permuted; `None` for the identity.
+fn permuted(x: &HostTensor, perm: Option<&[usize]>) -> Option<Vec<f32>> {
+    let perm = perm?;
+    let out_dims: Vec<usize> = perm.iter().map(|&p| x.dims[p]).collect();
+    let axes = plan::transpose_axes(&x.dims, &out_dims, perm);
+    let mut data = vec![0f32; x.data.len()];
+    kernels::gather(&x.data, &axes, &mut data, 1);
+    Some(data)
+}

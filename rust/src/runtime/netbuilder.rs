@@ -218,6 +218,22 @@ pub fn build_forward(
     Ok((graph, ctx.specs))
 }
 
+/// Host-side initial value for one named parameter: BN scales start at
+/// 1, biases at 0, everything else He-initialised. The single source of
+/// the name-suffix rules — `BuiltNet::compile` and `benches/native_exec`
+/// must agree on what network they run.
+pub fn init_param_host(spec: &ParamSpec, rng: &mut Rng) -> Vec<f32> {
+    let n: usize = spec.shape.iter().product();
+    let fan_in = spec.shape.iter().skip(1).product::<usize>().max(1);
+    if spec.name.ends_with(".bn.g") {
+        vec![1.0f32; n]
+    } else if spec.name.ends_with(".bn.b") || spec.name == "fc.b" {
+        vec![0.0f32; n]
+    } else {
+        rng.he_weights(n, fan_in)
+    }
+}
+
 /// A compiled network with weights resident on the backend — the unit the
 /// fps benchmarks (and the coordinator's synthetic workers) execute.
 pub struct BuiltNet {
@@ -244,15 +260,7 @@ impl BuiltNet {
         let mut rng = Rng::new(seed);
         let mut weight_bufs = Vec::with_capacity(specs.len());
         for spec in &specs {
-            let n: usize = spec.shape.iter().product();
-            let fan_in = spec.shape.iter().skip(1).product::<usize>().max(1);
-            let host = if spec.name.ends_with(".bn.g") {
-                vec![1.0f32; n]
-            } else if spec.name.ends_with(".bn.b") || spec.name == "fc.b" {
-                vec![0.0f32; n]
-            } else {
-                rng.he_weights(n, fan_in)
-            };
+            let host = init_param_host(spec, &mut rng);
             weight_bufs.push(engine.upload(&host, &spec.shape)?);
         }
         Ok(BuiltNet { exe, weight_bufs, batch, hw, classes: arch.classes })

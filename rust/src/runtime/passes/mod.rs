@@ -76,18 +76,24 @@ impl OptLevel {
 }
 
 /// Options for `Engine::compile`. Carries everything the pass pipeline
-/// needs; backends never see it (they receive the rewritten graph).
+/// and the backend planner need.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CompileOptions {
     pub opt_level: OptLevel,
     /// Hardware lane width (8/16 = AVX, 128 = MXU) used by the re-merge
     /// profitability gate — the same knob as `model::cost::tile_efficiency`.
     pub lane: usize,
+    /// Worker threads for the native executor's parallel kernels.
+    /// `1` (the default) is the fully serial reference; `0` resolves to
+    /// the machine's available parallelism at compile time. Any thread
+    /// count produces bitwise-identical outputs: kernels partition work
+    /// so every output element is accumulated in the same order.
+    pub threads: usize,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        CompileOptions { opt_level: OptLevel::TOP, lane: 16 }
+        CompileOptions { opt_level: OptLevel::TOP, lane: 16, threads: 1 }
     }
 }
 
@@ -103,7 +109,22 @@ impl CompileOptions {
 
     /// Stable key fragment for executable caches (`EngineLayerTimer`).
     pub fn cache_key(&self) -> String {
-        format!("{}l{}", self.opt_level.name(), self.lane)
+        format!("{}l{}t{}", self.opt_level.name(), self.lane, self.threads)
+    }
+
+    /// Resolve `threads == 0` ("auto") to the machine's parallelism.
+    pub fn resolved_threads(&self) -> usize {
+        resolve_threads(self.threads)
+    }
+}
+
+/// The one definition of the `0 = auto` thread-count convention, shared
+/// by `CompileOptions`, the coordinator's budget, and the CLI.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
     }
 }
 
@@ -118,6 +139,33 @@ pub struct PassRecord {
     pub wall_secs: f64,
 }
 
+/// Accounting for a backend's execution-plan buffer arena (today: the
+/// native executor's liveness-planned slot allocator). `None` on
+/// `PassStats` when the backend plans its own memory (PJRT).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ArenaStats {
+    /// Physical buffer slots in the arena.
+    pub slots: usize,
+    /// Steady-state resident bytes: the sum of all slot capacities.
+    pub peak_bytes: usize,
+    /// What a no-reuse executor would allocate: the sum of every
+    /// intermediate tensor's size (scratch included).
+    pub naive_bytes: usize,
+    /// How many plan steps write their output in place over a dying input.
+    pub in_place_steps: usize,
+}
+
+impl ArenaStats {
+    /// naive / peak — how many logical tensors each physical slot serves.
+    pub fn reuse_ratio(&self) -> f64 {
+        if self.peak_bytes == 0 {
+            1.0
+        } else {
+            self.naive_bytes as f64 / self.peak_bytes as f64
+        }
+    }
+}
+
 /// What `Engine::compile` did to the graph, attached to every `Compiled`.
 #[derive(Clone, Debug, Default)]
 pub struct PassStats {
@@ -128,6 +176,8 @@ pub struct PassStats {
     pub fusions: usize,
     pub wall_secs: f64,
     pub passes: Vec<PassRecord>,
+    /// Buffer-arena accounting from the backend's execution plan.
+    pub arena: Option<ArenaStats>,
 }
 
 impl PassStats {
@@ -143,14 +193,23 @@ impl PassStats {
 
     /// One-line summary for CLI output.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{}: {} -> {} nodes ({} fusions, {:.2} ms)",
             self.opt_level.map(|l| l.name()).unwrap_or("external"),
             self.nodes_before,
             self.nodes_after,
             self.fusions,
             self.wall_secs * 1e3
-        )
+        );
+        if let Some(a) = &self.arena {
+            s.push_str(&format!(
+                ", arena {} slots {:.1} KiB ({:.1}x reuse)",
+                a.slots,
+                a.peak_bytes as f64 / 1024.0,
+                a.reuse_ratio()
+            ));
+        }
+        s
     }
 }
 

@@ -265,7 +265,7 @@ mod tests {
     }
 
     fn run_graph(g: &Graph, args: &[HostTensor]) -> Vec<f32> {
-        let exe = NativeExecutable::new(g.clone()).unwrap();
+        let exe = NativeExecutable::new(g.clone(), 1).unwrap();
         let refs: Vec<&HostTensor> = args.iter().collect();
         exe.execute_hosts(&refs).unwrap().data
     }

@@ -117,7 +117,11 @@ impl Backend for XlaBackend {
         "xla-pjrt"
     }
 
-    fn compile_graph(&self, graph: &Graph) -> Result<Arc<dyn BackendExec>> {
+    fn compile_graph(
+        &self,
+        graph: &Graph,
+        _opts: &super::CompileOptions,
+    ) -> Result<Arc<dyn BackendExec>> {
         let comp = translate(graph)?;
         let exe = self.client.compile(&comp).map_err(|e| anyhow!("XLA compile: {e:?}"))?;
         Ok(Arc::new(XlaExec { exe }))

@@ -1,5 +1,5 @@
 //! Synthetic class-conditional image data (the ImageNet substitute,
-//! DESIGN.md §3): each class is a distinct oriented sinusoidal grating with
+//! DESIGN.md §5): each class is a distinct oriented sinusoidal grating with
 //! a class-keyed colour bias, plus Gaussian noise and a random phase.
 //! Linear models score near chance; small CNNs separate the classes well —
 //! enough signal to rank the LRD variants' accuracy recovery.

@@ -1,5 +1,5 @@
 //! Fine-tuning simulation driver (the Tables 4-6 substitute workload —
-//! DESIGN.md §3): synthetic class-conditional image data, a from-scratch
+//! DESIGN.md §5): synthetic class-conditional image data, a from-scratch
 //! training run of the original model, one-shot decomposition of the
 //! trained weights, and per-variant fine-tuning through the AOT train-step
 //! artifacts. Everything after the python AOT step

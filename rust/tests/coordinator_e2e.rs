@@ -11,7 +11,7 @@
 use std::time::Duration;
 
 use lrdx::coordinator::batcher::BatchPolicy;
-use lrdx::coordinator::{BatchModel, Coordinator};
+use lrdx::coordinator::{BatchModel, Coordinator, WorkerCtx};
 use lrdx::decompose::{plan_variant, Variant};
 use lrdx::model::Arch;
 use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel};
@@ -33,32 +33,26 @@ fn artifacts_root() -> Option<std::path::PathBuf> {
 }
 
 /// Worker factory for one variant: the AOT artifact when available,
-/// otherwise a synthetic netbuilder model on the worker's engine.
+/// otherwise a synthetic netbuilder model on the worker's engine, sized
+/// to the worker's share of the coordinator's thread budget.
 fn model_factory(
     variant: &'static str,
-) -> impl Fn(&Engine) -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static {
+) -> impl Fn(&WorkerCtx) -> anyhow::Result<Box<dyn BatchModel>> + Send + Sync + 'static {
     let root = artifacts_root();
-    move |engine: &Engine| match &root {
+    move |ctx: &WorkerCtx| match &root {
         Some(root) => {
             let lib = ArtifactLibrary::load(root)?;
             let spec = lib
                 .find_by("resnet-mini", variant, "forward")
                 .ok_or_else(|| anyhow::anyhow!("missing resnet-mini/{variant} artifact"))?;
-            Ok(Box::new(ForwardModel::load(engine, spec)?) as Box<dyn BatchModel>)
+            Ok(Box::new(ForwardModel::load(ctx.engine(), spec)?) as Box<dyn BatchModel>)
         }
         None => {
             let arch = Arch::by_name("resnet-mini").expect("resnet-mini");
             let v = Variant::by_name(variant).expect("variant");
             let plan = plan_variant(&arch, v, 2.0, 2, None)?;
-            let net = BuiltNet::compile(
-                engine,
-                &arch,
-                &plan,
-                BATCH,
-                HW,
-                0x5EED,
-                &CompileOptions::default(),
-            )?;
+            let opts = CompileOptions { threads: ctx.threads(), ..Default::default() };
+            let net = BuiltNet::compile(ctx.engine(), &arch, &plan, BATCH, HW, 0x5EED, &opts)?;
             Ok(Box::new(net) as Box<dyn BatchModel>)
         }
     }
@@ -114,7 +108,7 @@ fn coordinator_overhead_is_small_vs_direct_calls() {
     // tiny mini model makes fixed overheads most visible so the gate here
     // is looser).
     let engine = Engine::cpu().unwrap();
-    let direct = model_factory("lrd")(&engine).unwrap();
+    let direct = model_factory("lrd")(&WorkerCtx::new(engine, 1)).unwrap();
     let b = direct.batch();
     let hw = direct.hw();
     let img = 3 * hw * hw;

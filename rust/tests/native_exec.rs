@@ -1,0 +1,234 @@
+//! Determinism and arena-aliasing suite for the planned native executor.
+//!
+//! Contract under test (DESIGN.md §3):
+//! 1. the thread count is bitwise-irrelevant — `threads ∈ {1, 2, 8}`
+//!    produce identical bits, as do repeated runs of one executable
+//!    (the arena never leaks state between runs);
+//! 2. the planned, arena-backed executor is bitwise-equal to the
+//!    per-node reference interpreter on randomized graphs (the property
+//!    suite that would catch a slot aliased while still live);
+//! 3. IEEE zero-times-NaN propagates through decomposed W0·W1 chains at
+//!    every opt level — the seed's `av == 0.0` skip in `dot_general`
+//!    silently dropped poisoned activations.
+
+use std::sync::Arc;
+
+use lrdx::decompose::{plan_variant, Scheme, Variant};
+use lrdx::model::{Arch, ConvSite, SiteKind};
+use lrdx::runtime::graph::{Graph, GraphBuilder, Op};
+use lrdx::runtime::layer_factory::build_layer;
+use lrdx::runtime::native::NativeExecutable;
+use lrdx::runtime::netbuilder::BuiltNet;
+use lrdx::runtime::{CompileOptions, Engine, HostTensor, OptLevel};
+use lrdx::util::det_input;
+use lrdx::util::rng::Rng;
+
+const BATCH: usize = 2;
+const HW: usize = 16;
+
+fn mini_logits(threads: usize, runs: usize) -> Vec<Vec<f32>> {
+    let engine = Engine::native();
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    let plan = plan_variant(&arch, Variant::Lrd, 2.0, 2, None).unwrap();
+    let opts = CompileOptions { threads, ..Default::default() };
+    let net = BuiltNet::compile(&engine, &arch, &plan, BATCH, HW, 0xD7, &opts).unwrap();
+    let x = det_input(BATCH, HW);
+    let xb = engine.upload(&x, &[BATCH, 3, HW, HW]).unwrap();
+    (0..runs)
+        .map(|_| net.forward(&xb).unwrap().to_host().unwrap().data)
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn thread_count_and_repetition_are_bitwise_irrelevant() {
+    let runs_t1 = mini_logits(1, 3);
+    assert_eq!(bits(&runs_t1[0]), bits(&runs_t1[1]), "run 1 vs 2 differ at threads=1");
+    assert_eq!(bits(&runs_t1[0]), bits(&runs_t1[2]), "run 1 vs 3 differ at threads=1");
+    for threads in [2usize, 8] {
+        let runs = mini_logits(threads, 2);
+        assert_eq!(
+            bits(&runs_t1[0]),
+            bits(&runs[0]),
+            "threads={threads} changed bits vs threads=1"
+        );
+        assert_eq!(bits(&runs[0]), bits(&runs[1]), "threads={threads} repeat differs");
+    }
+}
+
+#[test]
+fn nan_propagates_through_decomposed_chains_at_every_opt_level() {
+    // A zero weight pair meeting NaN activations: the merged (O2) and
+    // factored (O0/O1) forms must BOTH produce NaN — 0 × NaN is NaN, and
+    // the seed's zero-skip turned it into 0 silently.
+    let engine = Engine::native();
+    let site = ConvSite {
+        name: "t.fc".into(),
+        c: 8,
+        s: 8,
+        k: 1,
+        stride: 1,
+        padding: 0,
+        kind: SiteKind::Conv,
+    };
+    let (graph, shapes) = build_layer(&site, &Scheme::Svd { r: 7 }, 1, 4).unwrap();
+    for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+        for threads in [1usize, 4] {
+            let opts = CompileOptions {
+                opt_level: level,
+                threads,
+                ..Default::default()
+            };
+            let exe = engine.compile(&graph, &opts).unwrap();
+            let mut args =
+                vec![HostTensor::new(vec![1, 8, 4, 4], vec![f32::NAN; 8 * 16])];
+            for shp in &shapes {
+                let n: usize = shp.iter().product();
+                args.push(HostTensor::new(shp.clone(), vec![0.0; n]));
+            }
+            let out = exe.run_hosts(&args).unwrap().remove(0);
+            assert!(
+                out.data.iter().all(|v| v.is_nan()),
+                "{}/t{threads}: poisoned activations leaked through a zero \
+                 weight chain: {:?}",
+                level.name(),
+                &out.data[..4.min(out.data.len())]
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Arena-aliasing property suite: randomized graphs, planned vs reference
+// ---------------------------------------------------------------------------
+
+/// Grow a random graph over a pool of ops; returns it with random inputs.
+fn random_graph(rng: &mut Rng, case: usize) -> (Graph, Vec<HostTensor>) {
+    let b = GraphBuilder::new(&format!("prop{case}"));
+    let n_params = 1 + rng.below(2);
+    let mut pool: Vec<Op> = Vec::new();
+    let mut inputs: Vec<HostTensor> = Vec::new();
+    for pi in 0..n_params {
+        let rank = 1 + rng.below(3);
+        let dims: Vec<usize> = (0..rank).map(|_| 1 + rng.below(4)).collect();
+        let n: usize = dims.iter().product();
+        pool.push(b.parameter(pi, &dims, &format!("p{pi}")).unwrap());
+        inputs.push(HostTensor::new(
+            dims,
+            (0..n).map(|_| rng.normal_f32() * 0.5).collect(),
+        ));
+    }
+    for _ in 0..(3 + rng.below(9)) {
+        let x = pool[rng.below(pool.len())].clone();
+        let d = x.dims();
+        let next = match rng.below(8) {
+            0 => (x.clone() + x).unwrap(),
+            1 => {
+                // pair with any same-shape pool member (often a dying
+                // intermediate — the in-place + liveness stress case)
+                let same: Vec<&Op> =
+                    pool.iter().filter(|o| o.dims() == d).collect();
+                let y = same[rng.below(same.len())];
+                (x.clone() + y.clone()).unwrap()
+            }
+            2 => {
+                let c = b.c0(rng.normal_f32()).unwrap();
+                x.max(&c).unwrap()
+            }
+            3 if !d.is_empty() => {
+                let mut perm: Vec<usize> = (0..d.len()).collect();
+                for k in (1..perm.len()).rev() {
+                    let j = rng.below(k + 1);
+                    perm.swap(k, j);
+                }
+                x.transpose(&perm).unwrap()
+            }
+            4 if !d.is_empty() => {
+                let n: usize = d.iter().product();
+                x.reshape(&[n]).unwrap()
+            }
+            5 if !d.is_empty() && d[0] >= 2 => {
+                x.slice_in_dim1(0, 1 + rng.below(d[0]), 0).unwrap()
+            }
+            6 if !d.is_empty() => x.reduce_mean(&[d.len() - 1], false).unwrap(),
+            7 => {
+                let c = b.c0(0.25 + rng.next_f32().abs()).unwrap();
+                (x.clone() * c).unwrap()
+            }
+            // guard-failure fallback; growth stays far from f32::MAX so
+            // the bitwise comparison below never meets Inf/NaN
+            _ => (x.clone() + x).unwrap(),
+        };
+        pool.push(next);
+    }
+    // Try to land one contraction between pool members with a matching
+    // axis extent (exercises the dot scratch slots).
+    for _ in 0..12 {
+        let (i, j) = (rng.below(pool.len()), rng.below(pool.len()));
+        let (dx, dy) = (pool[i].dims(), pool[j].dims());
+        if dx.is_empty() || dy.is_empty() {
+            continue;
+        }
+        let (a, c) = (rng.below(dx.len()), rng.below(dy.len()));
+        if dx[a] == dy[c] {
+            let dot = pool[i].dot_general(&pool[j], &[a], &[c]).unwrap();
+            pool.push(dot);
+            break;
+        }
+    }
+    let root = pool.last().unwrap().clone();
+    (b.build(&root).unwrap(), inputs)
+}
+
+#[test]
+fn planned_executor_matches_reference_on_random_graphs() {
+    let mut rng = Rng::new(0xA11A5);
+    for case in 0..60 {
+        let (graph, inputs) = random_graph(&mut rng, case);
+        let args: Vec<Arc<HostTensor>> =
+            inputs.iter().map(|t| Arc::new(t.clone())).collect();
+        let exe1 = NativeExecutable::new(graph.clone(), 1).unwrap();
+        let exe2 = NativeExecutable::new(graph.clone(), 2).unwrap();
+        let reference = exe1.run_reference(&args).unwrap();
+        let planned1 = exe1.run(&args).unwrap();
+        let planned2 = exe2.run(&args).unwrap();
+        // run again to catch cross-run arena contamination
+        let planned1b = exe1.run(&args).unwrap();
+        assert_eq!(reference.dims, planned1.dims, "case {case} ({})", graph.name);
+        for (what, got) in
+            [("t1", &planned1), ("t2", &planned2), ("t1-rerun", &planned1b)]
+        {
+            assert_eq!(
+                bits(&reference.data),
+                bits(&got.data),
+                "case {case} ({}): {what} diverged from the reference \
+                 interpreter",
+                graph.name
+            );
+        }
+    }
+}
+
+#[test]
+fn arena_stats_surface_through_compile() {
+    // Engine::compile must attach the native arena plan to PassStats and
+    // peak must undercut the naive total on a real network.
+    let engine = Engine::native();
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    let plan = plan_variant(&arch, Variant::Lrd, 2.0, 2, None).unwrap();
+    let net =
+        BuiltNet::compile(&engine, &arch, &plan, 4, HW, 0xD7, &CompileOptions::default())
+            .unwrap();
+    let stats = net.pass_stats();
+    let arena = stats.arena.as_ref().expect("native backend reports arena stats");
+    assert!(arena.slots > 0);
+    assert!(
+        arena.peak_bytes < arena.naive_bytes,
+        "liveness planning must beat per-node allocation: {arena:?}"
+    );
+    assert!(arena.in_place_steps > 0, "a ResNet forward has in-place elementwise steps");
+    assert!(arena.reuse_ratio() > 1.0);
+}

@@ -1,10 +1,12 @@
-//! Differential suite for the IR pass pipeline: every (variant ×
-//! opt-level) compiled `resnet-mini` forward must match the O0 reference
-//! within 1e-5 on the native backend, and the pass stats must tell the
-//! structural story — node counts shrink for decomposed variants at the
-//! top level, and the low-rank re-merge fusion fires exactly when
-//! `model::cost::rank_efficiency` says a rank loses at the configured
-//! lane width.
+//! Differential suite for the IR pass pipeline and the planned native
+//! executor: every (variant × opt-level × thread-count) compiled
+//! `resnet-mini` forward must match the single-threaded O0 reference
+//! within 1e-5 (threads are bitwise-irrelevant; O1 is bitwise-exact),
+//! and the pass stats must tell the structural story — node counts
+//! shrink for decomposed variants at the top level, the low-rank
+//! re-merge fusion fires exactly when `model::cost::rank_efficiency`
+//! says a rank loses at the configured lane width, and the executor's
+//! buffer arena stays strictly below the no-reuse intermediate total.
 
 use lrdx::decompose::{plan_variant, Scheme, Variant};
 use lrdx::model::{Arch, ConvSite, SiteKind};
@@ -28,21 +30,42 @@ fn forward(engine: &Engine, variant: Variant, opts: &CompileOptions) -> (Vec<f32
 }
 
 #[test]
-fn every_variant_and_level_matches_the_o0_reference() {
+fn every_variant_level_and_thread_count_matches_the_o0_reference() {
     let engine = Engine::native();
     for variant in [Variant::Orig, Variant::Lrd, Variant::Merged, Variant::Branched] {
         let (want, s0) = forward(&engine, variant, &CompileOptions::o0());
         assert!(s0.passes.is_empty(), "{variant:?}: O0 must run no passes");
         assert_eq!(s0.nodes_before, s0.nodes_after);
-        for level in [OptLevel::O1, OptLevel::O2] {
-            let (got, stats) = forward(&engine, variant, &CompileOptions::level(level));
-            assert_allclose(&got, &want, 1e-5, 1e-5);
-            assert!(
-                stats.nodes_after <= stats.nodes_before,
-                "{variant:?}/{}: optimization must never grow the graph",
-                level.name()
-            );
-            assert!(!stats.passes.is_empty());
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+            let mut t1_logits: Option<Vec<f32>> = None;
+            for threads in [1usize, 4] {
+                let opts = CompileOptions { threads, ..CompileOptions::level(level) };
+                let (got, stats) = forward(&engine, variant, &opts);
+                assert_allclose(&got, &want, 1e-5, 1e-5);
+                assert!(
+                    stats.nodes_after <= stats.nodes_before,
+                    "{variant:?}/{}: optimization must never grow the graph",
+                    level.name()
+                );
+                // the native executor always reports its arena plan
+                let arena = stats.arena.as_ref().expect("native arena stats");
+                assert!(
+                    arena.peak_bytes < arena.naive_bytes,
+                    "{variant:?}/{}/t{threads}: arena peak {} !< naive {}",
+                    level.name(),
+                    threads,
+                    arena.peak_bytes,
+                    arena.naive_bytes
+                );
+                match &t1_logits {
+                    None => t1_logits = Some(got),
+                    Some(t1) => assert_eq!(
+                        t1, &got,
+                        "{variant:?}/{}: thread count changed bits",
+                        level.name()
+                    ),
+                }
+            }
         }
     }
 }
@@ -109,7 +132,7 @@ fn remerge_fires_when_rank_exceeds_the_lane_aligned_threshold() {
     // both factor contractions (33/48 efficiency) — decomposition loses,
     // the pair must re-merge, and the output must still match O0.
     let engine = Engine::native();
-    let opts = CompileOptions { opt_level: OptLevel::O2, lane: 16 };
+    let opts = CompileOptions { opt_level: OptLevel::O2, lane: 16, ..Default::default() };
     let (want, _) = layer_stats_and_outputs(&engine, 33, &CompileOptions::o0());
     let (got, stats) = layer_stats_and_outputs(&engine, 33, &opts);
     assert!(stats.fusions >= 1, "r=33 must fuse at lane 16, stats: {stats:?}");
@@ -122,7 +145,7 @@ fn remerge_keeps_profitable_lane_aligned_ranks() {
     // r=16 is perfectly tiled and halves the MACs: the decomposed form
     // wins and must be left alone.
     let engine = Engine::native();
-    let opts = CompileOptions { opt_level: OptLevel::O2, lane: 16 };
+    let opts = CompileOptions { opt_level: OptLevel::O2, lane: 16, ..Default::default() };
     let (_, stats) = layer_stats_and_outputs(&engine, 16, &opts);
     assert_eq!(stats.fusions, 0, "aligned profitable rank must not fuse: {stats:?}");
 }
