@@ -1,0 +1,153 @@
+//! `cargo bench --bench train_step [-- --smoke] [-- --arch NAME]` —
+//! prices the native autograd train step: one full fwd+bwd+SGD-update
+//! graph per (variant × opt level × thread count), all compiled through
+//! `Engine::compile_train` and executed by the planned arena executor
+//! with the persistent worker pool. The O0-vs-O2 delta shows what the
+//! pass pipeline (including the backward re-merge fusion) buys on
+//! *training*, not just inference; the freeze variant is where the
+//! backward fusions fire. Emits `BENCH_train.json`; `--smoke` runs a
+//! single-iteration subset with the same schema (the CI schema gate).
+
+use lrdx::decompose::{plan_variant, Variant};
+use lrdx::model::Arch;
+use lrdx::profiler::Timer;
+use lrdx::runtime::{CompileOptions, Engine, OptLevel};
+use lrdx::train::{NativeTrainSession, SgdHyper};
+use lrdx::trainsim::data::SynthData;
+use lrdx::util::json::Json;
+use lrdx::util::rng::Rng;
+
+struct Row {
+    variant: &'static str,
+    opt_level: &'static str,
+    threads: usize,
+    batch: usize,
+    secs_per_step: f64,
+    steps_per_sec: f64,
+    nodes_after: usize,
+    fusions_fwd: usize,
+    fusions_bwd: usize,
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let arch_name = argv
+        .iter()
+        .skip_while(|a| *a != "--arch")
+        .nth(1)
+        .cloned()
+        .unwrap_or_else(|| "resnet-mini".to_string());
+    let arch = Arch::by_name(&arch_name).expect("known arch");
+    let (hw, batch) = if smoke { (12, 4) } else { (24, 16) };
+    let timer = if smoke {
+        Timer { warmup: 0, min_samples: 1, max_samples: 1, cv_target: f64::INFINITY }
+    } else {
+        Timer { warmup: 2, min_samples: 5, max_samples: 20, cv_target: 0.10 }
+    };
+    let variants: &[Variant] = if smoke {
+        &[Variant::Freeze]
+    } else {
+        &[Variant::Lrd, Variant::Freeze]
+    };
+    let levels = [OptLevel::O0, OptLevel::O2];
+    let thread_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 4] };
+
+    let engine = Engine::native();
+    println!(
+        "native train-step bench: {} hw={hw} batch={batch} ({})",
+        arch.name,
+        if smoke { "smoke" } else { "full" }
+    );
+    println!(
+        "{:8} {:>4} {:>8} {:>10} {:>10} {:>7} {:>10}",
+        "variant", "opt", "threads", "ms/step", "steps/s", "nodes", "fus f/b"
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    for &variant in variants {
+        let plan = plan_variant(&arch, variant, 2.0, 2, None).expect("plan");
+        for level in levels {
+            for &threads in thread_counts {
+                let opts = CompileOptions {
+                    opt_level: level,
+                    threads,
+                    ..Default::default()
+                };
+                let mut sess = NativeTrainSession::new(
+                    &engine,
+                    &arch,
+                    &plan,
+                    batch,
+                    hw,
+                    variant == Variant::Freeze,
+                    &SgdHyper::default(),
+                    &opts,
+                    None,
+                    0xBE7C,
+                )
+                .expect("session");
+                let stats = sess.pass_stats().clone();
+                let gen = SynthData::new(hw, arch.classes);
+                let mut rng = Rng::new(7);
+                let (x, y) = gen.batch(&mut rng, batch);
+                let secs = timer
+                    .measure(|| sess.step(&x, &y).map(|_| ()))
+                    .expect("measure")
+                    .trimmed_mean;
+                let (ff, fb) = stats
+                    .train
+                    .as_ref()
+                    .map(|t| (t.fusions_fwd, t.fusions_bwd))
+                    .unwrap_or((0, 0));
+                println!(
+                    "{:8} {:>4} {:>8} {:>10.3} {:>10.2} {:>7} {:>6}/{}",
+                    variant.name(),
+                    level.name(),
+                    threads,
+                    secs * 1e3,
+                    1.0 / secs,
+                    stats.nodes_after,
+                    ff,
+                    fb
+                );
+                rows.push(Row {
+                    variant: variant.name(),
+                    opt_level: level.name(),
+                    threads,
+                    batch,
+                    secs_per_step: secs,
+                    steps_per_sec: 1.0 / secs,
+                    nodes_after: stats.nodes_after,
+                    fusions_fwd: ff,
+                    fusions_bwd: fb,
+                });
+            }
+        }
+    }
+
+    let jrows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj_from(vec![
+                ("variant", Json::Str(r.variant.to_string())),
+                ("opt_level", Json::Str(r.opt_level.to_string())),
+                ("threads", Json::Num(r.threads as f64)),
+                ("batch", Json::Num(r.batch as f64)),
+                ("secs_per_step", Json::Num(r.secs_per_step)),
+                ("steps_per_sec", Json::Num(r.steps_per_sec)),
+                ("nodes_after", Json::Num(r.nodes_after as f64)),
+                ("fusions_fwd", Json::Num(r.fusions_fwd as f64)),
+                ("fusions_bwd", Json::Num(r.fusions_bwd as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj_from(vec![
+        ("arch", Json::Str(arch.name.to_string())),
+        ("hw", Json::Num(hw as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(jrows)),
+    ]);
+    std::fs::write("BENCH_train.json", doc.render()).expect("write BENCH_train.json");
+    println!("(saved BENCH_train.json)");
+}

@@ -9,9 +9,11 @@
 //! * **L3 (this crate)** — the runtime: a pluggable `runtime::Backend`
 //!   (pure-rust `native` interpreter by default, PJRT execution of the AOT
 //!   artifacts under `--features xla-pjrt`), a graph-IR layer/network
-//!   factory for rank sweeps, the Algorithm 1 rank optimizer, the serving
-//!   coordinator, the fine-tuning driver, and the benchmark harness that
-//!   regenerates every table/figure of the paper.
+//!   factory for rank sweeps, reverse-mode autodiff (`runtime::autograd`)
+//!   with a fully native training subsystem (`train`), the Algorithm 1
+//!   rank optimizer, the serving coordinator, the fine-tuning driver, and
+//!   the benchmark harness that regenerates every table/figure of the
+//!   paper.
 //!
 //! Python never runs on the request path: the native backend is fully
 //! self-contained, and after the AOT step the PJRT path is too.
@@ -27,5 +29,6 @@ pub mod linalg;
 pub mod model;
 pub mod profiler;
 pub mod runtime;
+pub mod train;
 pub mod trainsim;
 pub mod util;

@@ -72,7 +72,9 @@ commands:
   plan          emit a decomposition plan JSON (--arch, --variant, --out)
   rank-search   Algorithm 1 over a model (--arch, [--real], [--out])
   verify        execute every artifact and check recorded numerics
-  train         fine-tuning simulation (--variant, --steps)
+  train         training simulation (--variant, --steps, [--smoke]): fully
+                rust-native autograd train step on the native engine (no
+                artifacts), AOT artifacts on a PJRT engine
   serve         serving demo through the coordinator (--variants a,b)
   bench         regenerate a paper table/figure:
                 table1 table2 table3 table456 fig2 fig5
@@ -286,15 +288,66 @@ fn cmd_verify(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let engine = Engine::cpu()?;
-    let lib = ArtifactLibrary::load(artifacts_dir(args))?;
-    let arch = args.get_or("arch", "resnet-mini");
-    let variant = args.get_or("variant", "lrd");
-    let steps = args.usize_or("steps", 150)?;
-    let gen = SynthData::new(32, 10);
+    let smoke = args.bool("smoke");
+    let arch_name = args.get_or("arch", "resnet-mini");
+    let variant_name = args.get_or("variant", "lrd");
+    let steps = args.usize_or("steps", if smoke { 8 } else { 150 })?;
     let mut rng = Rng::new(args.usize_or("seed", 1)? as u64);
-    println!("fine-tuning {arch}/{variant} for {steps} steps on synthetic data");
-    let report =
-        trainsim::finetune_variant(&engine, &lib, arch, variant, None, &gen, &mut rng, steps)?;
+
+    // A PJRT engine fine-tunes through the AOT artifacts; the native
+    // engine runs the fully rust-native autograd train step — zero
+    // python, zero artifacts.
+    if engine.platform() != "native-cpu" {
+        let lib = ArtifactLibrary::load(artifacts_dir(args))?;
+        let gen = SynthData::new(32, 10);
+        println!(
+            "fine-tuning {arch_name}/{variant_name} for {steps} steps via AOT artifacts"
+        );
+        let report = trainsim::finetune_variant(
+            &engine, &lib, arch_name, variant_name, None, &gen, &mut rng, steps,
+        )?;
+        return finish_train(&report);
+    }
+
+    let copts = compile_opts(args)?;
+    let arch =
+        Arch::by_name(arch_name).ok_or_else(|| anyhow!("unknown --arch {arch_name}"))?;
+    let variant = Variant::by_name(variant_name)
+        .ok_or_else(|| anyhow!("unknown --variant {variant_name}"))?;
+    let hw = args.usize_or("hw", if smoke { 12 } else { 24 })?;
+    let batch = args.usize_or("batch", if smoke { 8 } else { 16 })?;
+    let gen = SynthData::new(hw, arch.classes);
+    println!(
+        "training {arch_name}/{variant_name} natively for {steps} steps \
+         (hw {hw}, batch {batch}, {}, threads {}) — no python, no artifacts",
+        copts.opt_level.name(),
+        copts.resolved_threads(),
+    );
+    let plan = plan_variant(
+        &arch,
+        variant,
+        args.f64_or("alpha", 2.0)?,
+        args.usize_or("groups", 2)?,
+        None,
+    )?;
+    let (report, stats) = trainsim::finetune_variant_native(
+        &engine,
+        &arch,
+        variant,
+        &plan,
+        None,
+        &gen,
+        &mut rng,
+        steps,
+        batch,
+        8,
+        &copts,
+    )?;
+    println!("  step graph: {}", stats.summary());
+    finish_train(&report)
+}
+
+fn finish_train(report: &trainsim::TrainReport) -> Result<()> {
     for (s, l) in &report.loss_curve {
         println!("  step {s:>5}  loss {l:.4}");
     }
@@ -475,6 +528,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 train_steps: args.usize_or("train-steps", 250)?,
                 finetune_steps: args.usize_or("finetune-steps", 200)?,
                 prune_fraction: args.f64_or("prune", 0.3)?,
+                batch: args.usize_or("batch", 16)?,
+                alpha: args.f64_or("alpha", 2.0)?,
+                groups: args.usize_or("groups", 2)?,
+                opt: copts.clone(),
                 ..Default::default()
             },
         )?,

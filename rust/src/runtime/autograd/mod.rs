@@ -1,0 +1,924 @@
+//! Reverse-mode autodiff over the graph IR.
+//!
+//! Given a forward `Graph` whose root is a scalar loss, `loss_and_grads`
+//! appends per-op VJP (vector-Jacobian product) nodes for the requested
+//! parameters and returns one **joint graph** whose root packs
+//! `[loss, grad(p) for p in wrt]` into a flat vector. The joint graph is
+//! a plain `Graph`: it runs through the same `passes` pipeline (constant
+//! folding, CSE, DCE, **low-rank re-merge** — which recognises the
+//! backward `W0ᵀ·(W1ᵀ·δ)` factor chains this module emits) and the same
+//! planned arena executor as any forward computation. `train::`
+//! builds the full fwd+bwd+SGD-update step on top of the same [`Tape`].
+//!
+//! Emission style matters for the optimizer: the tape peepholes
+//! transpose-of-transpose and reshape-of-reshape away *at emission time*,
+//! so the gradient flowing through a `conv1x1` factor pair comes out as
+//! the pristine chain `dot(W0, dot(W1, δ, [0],[0]), [0],[0])` that
+//! `passes::remerge` pattern-matches (the paper's merged training
+//! scheme). `Gt` is non-differentiable by construction — `needs_grad`
+//! treats it as a constant mask, so relu backward is `δ · gt(x, 0)` with
+//! no dead adjoint chains behind the mask.
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
+
+use super::graph::{Graph, Node, NodeId, OpKind};
+
+// ---------------------------------------------------------------------------
+// Tape: append-only node builder over an existing graph
+// ---------------------------------------------------------------------------
+
+/// A `Graph` being extended in place. Unlike `GraphBuilder` this works on
+/// raw `Node`s (no `Rc` handles), can adopt a finished graph, and
+/// peepholes the transpose/reshape compositions autograd emits in bulk.
+pub struct Tape {
+    name: String,
+    nodes: Vec<Node>,
+    n_params: usize,
+}
+
+impl Tape {
+    /// Adopt a finished graph; returns the tape and the old root.
+    pub fn from_graph(g: &Graph) -> (Tape, NodeId) {
+        (
+            Tape {
+                name: g.name.clone(),
+                nodes: g.nodes.clone(),
+                n_params: g.n_params,
+            },
+            g.root,
+        )
+    }
+
+    pub fn dims(&self, id: NodeId) -> &[usize] {
+        &self.nodes[id.0].dims
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    pub fn push(&mut self, op: OpKind, inputs: Vec<NodeId>, dims: Vec<usize>) -> NodeId {
+        self.nodes.push(Node { op, inputs, dims });
+        NodeId(self.nodes.len() - 1)
+    }
+
+    /// Declare a fresh positional parameter (index allocated at the end
+    /// of the current parameter list).
+    pub fn param(&mut self, dims: &[usize], name: &str) -> NodeId {
+        let index = self.n_params;
+        self.n_params += 1;
+        self.push(
+            OpKind::Parameter { index, name: name.to_string() },
+            vec![],
+            dims.to_vec(),
+        )
+    }
+
+    pub fn scalar(&mut self, value: f32) -> NodeId {
+        self.push(OpKind::ConstScalar { value }, vec![], vec![])
+    }
+
+    /// Node id of the parameter with positional `index`, if declared.
+    pub fn param_node(&self, index: usize) -> Option<NodeId> {
+        self.nodes
+            .iter()
+            .position(|n| matches!(&n.op, OpKind::Parameter { index: i, .. } if *i == index))
+            .map(NodeId)
+    }
+
+    /// Zero tensor of `dims` (scalar const broadcast).
+    pub fn zeros(&mut self, dims: &[usize]) -> NodeId {
+        let z = self.scalar(0.0);
+        if dims.is_empty() {
+            return z;
+        }
+        self.push(OpKind::Broadcast, vec![z], dims.to_vec())
+    }
+
+    fn binary(&mut self, op: OpKind, a: NodeId, b: NodeId) -> NodeId {
+        let (da, db) = (self.dims(a).to_vec(), self.dims(b).to_vec());
+        let dims = if da == db {
+            da
+        } else if da.is_empty() {
+            db
+        } else {
+            debug_assert!(db.is_empty(), "tape binary: {da:?} vs {db:?}");
+            da
+        };
+        self.push(op, vec![a, b], dims)
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(OpKind::Add, a, b)
+    }
+
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(OpKind::Sub, a, b)
+    }
+
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(OpKind::Mul, a, b)
+    }
+
+    pub fn max(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(OpKind::Max, a, b)
+    }
+
+    pub fn gt(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(OpKind::Gt, a, b)
+    }
+
+    pub fn select(&mut self, pred: NodeId, t: NodeId, f: NodeId) -> NodeId {
+        let dims = self.dims(pred).to_vec();
+        debug_assert_eq!(self.dims(t), &dims[..]);
+        debug_assert_eq!(self.dims(f), &dims[..]);
+        self.push(OpKind::Select, vec![pred, t, f], dims)
+    }
+
+    fn unary(&mut self, op: OpKind, a: NodeId) -> NodeId {
+        let dims = self.dims(a).to_vec();
+        self.push(op, vec![a], dims)
+    }
+
+    pub fn neg(&mut self, a: NodeId) -> NodeId {
+        self.unary(OpKind::Neg, a)
+    }
+
+    pub fn exp(&mut self, a: NodeId) -> NodeId {
+        self.unary(OpKind::Exp, a)
+    }
+
+    pub fn log(&mut self, a: NodeId) -> NodeId {
+        self.unary(OpKind::Log, a)
+    }
+
+    pub fn sqrt(&mut self, a: NodeId) -> NodeId {
+        self.unary(OpKind::Sqrt, a)
+    }
+
+    pub fn recip(&mut self, a: NodeId) -> NodeId {
+        self.unary(OpKind::Recip, a)
+    }
+
+    /// Transpose with composition peephole: `transpose(transpose(x))`
+    /// composes at emission time and identities vanish — this is what
+    /// keeps the backward factor chains in the pristine shape the
+    /// re-merge pass matches.
+    pub fn transpose(&mut self, a: NodeId, perm: &[usize]) -> NodeId {
+        let (src, composed): (NodeId, Vec<usize>) = match &self.node(a).op {
+            OpKind::Transpose { perm: inner } => {
+                (self.node(a).inputs[0], perm.iter().map(|&p| inner[p]).collect())
+            }
+            _ => (a, perm.to_vec()),
+        };
+        if composed.iter().enumerate().all(|(i, &p)| i == p) {
+            return src;
+        }
+        let dims: Vec<usize> =
+            composed.iter().map(|&p| self.dims(src)[p]).collect();
+        self.push(OpKind::Transpose { perm: composed }, vec![src], dims)
+    }
+
+    /// Reshape with elision: no-op reshapes vanish, reshape-of-reshape
+    /// collapses to one.
+    pub fn reshape(&mut self, a: NodeId, dims: &[usize]) -> NodeId {
+        let src = match &self.node(a).op {
+            OpKind::Reshape => self.node(a).inputs[0],
+            _ => a,
+        };
+        if self.dims(src) == dims {
+            return src;
+        }
+        debug_assert_eq!(
+            self.dims(src).iter().product::<usize>(),
+            dims.iter().product::<usize>()
+        );
+        self.push(OpKind::Reshape, vec![src], dims.to_vec())
+    }
+
+    pub fn broadcast_in_dim(
+        &mut self,
+        a: NodeId,
+        out_dims: &[usize],
+        mapping: &[usize],
+    ) -> NodeId {
+        debug_assert_eq!(mapping.len(), self.dims(a).len());
+        self.push(
+            OpKind::BroadcastInDim { mapping: mapping.to_vec() },
+            vec![a],
+            out_dims.to_vec(),
+        )
+    }
+
+    pub fn reduce_sum(&mut self, a: NodeId, rdims: &[usize]) -> NodeId {
+        let d = self.dims(a).to_vec();
+        let out: Vec<usize> = d
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !rdims.contains(i))
+            .map(|(_, &e)| e)
+            .collect();
+        self.push(OpKind::ReduceSum { dims: rdims.to_vec() }, vec![a], out)
+    }
+
+    pub fn reduce_mean(&mut self, a: NodeId, rdims: &[usize]) -> NodeId {
+        let d = self.dims(a).to_vec();
+        let out: Vec<usize> = d
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !rdims.contains(i))
+            .map(|(_, &e)| e)
+            .collect();
+        self.push(OpKind::ReduceMean { dims: rdims.to_vec() }, vec![a], out)
+    }
+
+    /// Stride-1 slice along `dim`.
+    pub fn slice1(&mut self, a: NodeId, start: usize, stop: usize, dim: usize) -> NodeId {
+        self.slice(a, start, stop, 1, dim)
+    }
+
+    pub fn slice(
+        &mut self,
+        a: NodeId,
+        start: usize,
+        stop: usize,
+        stride: usize,
+        dim: usize,
+    ) -> NodeId {
+        let mut dims = self.dims(a).to_vec();
+        debug_assert!(stride >= 1 && start < stop && stop <= dims[dim]);
+        dims[dim] = (stop - start).div_ceil(stride);
+        self.push(OpKind::Slice { dim, start, stop, stride }, vec![a], dims)
+    }
+
+    pub fn concat(&mut self, parts: &[NodeId], dim: usize) -> NodeId {
+        debug_assert!(!parts.is_empty());
+        if parts.len() == 1 {
+            return parts[0];
+        }
+        let mut dims = self.dims(parts[0]).to_vec();
+        dims[dim] = parts.iter().map(|&p| self.dims(p)[dim]).sum();
+        self.push(OpKind::Concat { dim }, parts.to_vec(), dims)
+    }
+
+    pub fn dot(
+        &mut self,
+        lhs: NodeId,
+        rhs: NodeId,
+        lhs_contract: &[usize],
+        rhs_contract: &[usize],
+    ) -> NodeId {
+        let (ld, rd) = (self.dims(lhs).to_vec(), self.dims(rhs).to_vec());
+        let mut dims = Vec::new();
+        for (i, &e) in ld.iter().enumerate() {
+            if !lhs_contract.contains(&i) {
+                dims.push(e);
+            }
+        }
+        for (i, &e) in rd.iter().enumerate() {
+            if !rhs_contract.contains(&i) {
+                dims.push(e);
+            }
+        }
+        self.push(
+            OpKind::DotGeneral {
+                lhs_contract: lhs_contract.to_vec(),
+                rhs_contract: rhs_contract.to_vec(),
+            },
+            vec![lhs, rhs],
+            dims,
+        )
+    }
+
+    /// Freeze the tape into a graph rooted at `root`.
+    pub fn into_graph(self, root: NodeId) -> Graph {
+        Graph { name: self.name, nodes: self.nodes, n_params: self.n_params, root }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packing multiple logical outputs into the single-root IR
+// ---------------------------------------------------------------------------
+
+/// Where each logical output lives inside the packed flat root vector.
+#[derive(Clone, Debug)]
+pub struct PackEntry {
+    pub dims: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Flatten every output to 1-D and concatenate: the IR has a single
+/// root, so multi-output computations (loss + grads, train steps) ship
+/// as one vector the host splits by this layout.
+pub fn pack(tape: &mut Tape, outputs: &[NodeId]) -> (NodeId, Vec<PackEntry>) {
+    let mut entries = Vec::with_capacity(outputs.len());
+    let mut flats = Vec::with_capacity(outputs.len());
+    let mut offset = 0usize;
+    for &o in outputs {
+        let dims = tape.dims(o).to_vec();
+        let len = dims.iter().product::<usize>();
+        flats.push(tape.reshape(o, &[len]));
+        entries.push(PackEntry { dims, offset, len });
+        offset += len;
+    }
+    (tape.concat(&flats, 0), entries)
+}
+
+// ---------------------------------------------------------------------------
+// Reverse sweep
+// ---------------------------------------------------------------------------
+
+/// Append the reverse-mode sweep for `loss` (must be scalar) onto the
+/// tape and return one gradient node per `wrt` entry (same order).
+/// Parameters the loss does not depend on get explicit zero tensors.
+pub fn append_backward(
+    tape: &mut Tape,
+    loss: NodeId,
+    wrt: &[NodeId],
+) -> Result<Vec<NodeId>> {
+    if !tape.dims(loss).is_empty() {
+        bail!(
+            "autograd: loss must be scalar, got shape {:?}",
+            tape.dims(loss)
+        );
+    }
+    let n = tape.len();
+    let wrt_set: HashSet<usize> = wrt.iter().map(|id| id.0).collect();
+
+    // needs[i]: does node i lie on a differentiable path out of a wrt
+    // parameter? `Gt` has zero derivative everywhere it has one at all,
+    // so it blocks propagation (a relu mask is a constant to the sweep).
+    let mut needs = vec![false; n];
+    for i in 0..n {
+        needs[i] = wrt_set.contains(&i)
+            || (!matches!(tape.nodes[i].op, OpKind::Gt)
+                && tape.nodes[i].inputs.iter().any(|id| needs[id.0]));
+    }
+
+    let mut adjoint: Vec<Option<NodeId>> = vec![None; n];
+    if needs[loss.0] {
+        let one = tape.scalar(1.0);
+        adjoint[loss.0] = Some(one);
+    }
+
+    for i in (0..=loss.0).rev() {
+        let Some(g) = adjoint[i] else { continue };
+        let node = tape.nodes[i].clone();
+        let mut contribs: Vec<(NodeId, NodeId)> = Vec::new(); // (input, grad)
+        match &node.op {
+            OpKind::Parameter { .. } | OpKind::ConstScalar { .. } | OpKind::Gt => {}
+            OpKind::Broadcast => {
+                let input = node.inputs[0];
+                if needs[input.0] {
+                    let all: Vec<usize> = (0..node.dims.len()).collect();
+                    let s = if all.is_empty() { g } else { tape.reduce_sum(g, &all) };
+                    contribs.push((input, s));
+                }
+            }
+            OpKind::BroadcastInDim { mapping } => {
+                let input = node.inputs[0];
+                if needs[input.0] {
+                    let reduce_dims: Vec<usize> = (0..node.dims.len())
+                        .filter(|d| !mapping.contains(d))
+                        .collect();
+                    let red = if reduce_dims.is_empty() {
+                        g
+                    } else {
+                        tape.reduce_sum(g, &reduce_dims)
+                    };
+                    // `red` lists the mapped axes in increasing output
+                    // order; permute back to operand axis order.
+                    let mut order: Vec<usize> = (0..mapping.len()).collect();
+                    order.sort_by_key(|&j| mapping[j]);
+                    let mut perm = vec![0usize; mapping.len()];
+                    for (pos, &axis) in order.iter().enumerate() {
+                        perm[axis] = pos;
+                    }
+                    contribs.push((input, tape.transpose(red, &perm)));
+                }
+            }
+            OpKind::Concat { dim } => {
+                let mut offset = 0usize;
+                for &input in &node.inputs {
+                    let mid = tape.dims(input)[*dim];
+                    if needs[input.0] {
+                        let part = tape.slice1(g, offset, offset + mid, *dim);
+                        contribs.push((input, part));
+                    }
+                    offset += mid;
+                }
+            }
+            OpKind::Slice { dim, start, stop: _, stride } => {
+                let input = node.inputs[0];
+                if needs[input.0] {
+                    let in_dims = tape.dims(input).to_vec();
+                    let scattered = slice_vjp(
+                        tape,
+                        g,
+                        &in_dims,
+                        *dim,
+                        *start,
+                        *stride,
+                        node.dims[*dim],
+                    );
+                    contribs.push((input, scattered));
+                }
+            }
+            OpKind::Reshape => {
+                let input = node.inputs[0];
+                if needs[input.0] {
+                    let d = tape.dims(input).to_vec();
+                    contribs.push((input, tape.reshape(g, &d)));
+                }
+            }
+            OpKind::Transpose { perm } => {
+                let input = node.inputs[0];
+                if needs[input.0] {
+                    let mut inv = vec![0usize; perm.len()];
+                    for (o, &p) in perm.iter().enumerate() {
+                        inv[p] = o;
+                    }
+                    contribs.push((input, tape.transpose(g, &inv)));
+                }
+            }
+            OpKind::DotGeneral { lhs_contract, rhs_contract } => {
+                let (lhs, rhs) = (node.inputs[0], node.inputs[1]);
+                let (gl, gr) = dot_vjp(
+                    tape,
+                    g,
+                    lhs,
+                    rhs,
+                    lhs_contract,
+                    rhs_contract,
+                    needs[lhs.0],
+                    needs[rhs.0],
+                );
+                if let Some(v) = gl {
+                    contribs.push((lhs, v));
+                }
+                if let Some(v) = gr {
+                    contribs.push((rhs, v));
+                }
+            }
+            OpKind::Add | OpKind::Sub => {
+                let negate_rhs = matches!(node.op, OpKind::Sub);
+                for (slot, &input) in node.inputs.iter().enumerate() {
+                    if !needs[input.0] {
+                        continue;
+                    }
+                    let mut v = g;
+                    if tape.dims(input).is_empty() && !node.dims.is_empty() {
+                        let all: Vec<usize> = (0..node.dims.len()).collect();
+                        v = tape.reduce_sum(v, &all);
+                    }
+                    if negate_rhs && slot == 1 {
+                        v = tape.neg(v);
+                    }
+                    contribs.push((input, v));
+                }
+            }
+            OpKind::Mul => {
+                let (a, b) = (node.inputs[0], node.inputs[1]);
+                for (input, other) in [(a, b), (b, a)] {
+                    if !needs[input.0] {
+                        continue;
+                    }
+                    let mut v = tape.mul(g, other);
+                    if tape.dims(input).is_empty() && !node.dims.is_empty() {
+                        let all: Vec<usize> = (0..node.dims.len()).collect();
+                        v = tape.reduce_sum(v, &all);
+                    }
+                    contribs.push((input, v));
+                }
+            }
+            OpKind::Max => {
+                // subgradient: ties route to the rhs, matching the
+                // kernel's `a.max(b)` (which returns b unless a > b)
+                let (a, b) = (node.inputs[0], node.inputs[1]);
+                let mask = tape.gt(a, b); // 1 where lhs wins
+                let one = tape.scalar(1.0);
+                let inv_mask = tape.sub(one, mask);
+                for (input, m) in [(a, mask), (b, inv_mask)] {
+                    if !needs[input.0] {
+                        continue;
+                    }
+                    let mut v = tape.mul(g, m);
+                    if tape.dims(input).is_empty() && !node.dims.is_empty() {
+                        let all: Vec<usize> = (0..node.dims.len()).collect();
+                        v = tape.reduce_sum(v, &all);
+                    }
+                    contribs.push((input, v));
+                }
+            }
+            OpKind::Select => {
+                // the predicate is a non-differentiable routing input —
+                // it gets no contribution
+                let (pred, t, f) = (node.inputs[0], node.inputs[1], node.inputs[2]);
+                if needs[t.0] || needs[f.0] {
+                    let z = tape.zeros(&node.dims);
+                    if needs[t.0] {
+                        contribs.push((t, tape.select(pred, g, z)));
+                    }
+                    if needs[f.0] {
+                        contribs.push((f, tape.select(pred, z, g)));
+                    }
+                }
+            }
+            OpKind::ReduceMean { dims } | OpKind::ReduceSum { dims } => {
+                let input = node.inputs[0];
+                if needs[input.0] {
+                    let in_dims = tape.dims(input).to_vec();
+                    let kept: Vec<usize> = (0..in_dims.len())
+                        .filter(|i| !dims.contains(i))
+                        .collect();
+                    let mut v = tape.broadcast_in_dim(g, &in_dims, &kept);
+                    if matches!(node.op, OpKind::ReduceMean { .. }) {
+                        let count: usize = dims.iter().map(|&r| in_dims[r]).product();
+                        let inv = tape.scalar(1.0 / count as f32);
+                        v = tape.mul(v, inv);
+                    }
+                    contribs.push((input, v));
+                }
+            }
+            OpKind::Sqrt => {
+                let input = node.inputs[0];
+                if needs[input.0] {
+                    // d√x = 1 / (2√x), reusing the forward output
+                    let this = NodeId(i);
+                    let r = tape.recip(this);
+                    let half = tape.scalar(0.5);
+                    let hr = tape.mul(r, half);
+                    contribs.push((input, tape.mul(g, hr)));
+                }
+            }
+            OpKind::Neg => {
+                let input = node.inputs[0];
+                if needs[input.0] {
+                    contribs.push((input, tape.neg(g)));
+                }
+            }
+            OpKind::Exp => {
+                let input = node.inputs[0];
+                if needs[input.0] {
+                    let this = NodeId(i);
+                    contribs.push((input, tape.mul(g, this)));
+                }
+            }
+            OpKind::Log => {
+                let input = node.inputs[0];
+                if needs[input.0] {
+                    let r = tape.recip(input);
+                    contribs.push((input, tape.mul(g, r)));
+                }
+            }
+            OpKind::Recip => {
+                let input = node.inputs[0];
+                if needs[input.0] {
+                    // d(1/x) = -1/x² — reuse the forward output squared
+                    let this = NodeId(i);
+                    let sq = tape.mul(this, this);
+                    let gv = tape.mul(g, sq);
+                    contribs.push((input, tape.neg(gv)));
+                }
+            }
+        }
+        for (input, v) in contribs {
+            adjoint[input.0] = Some(match adjoint[input.0] {
+                Some(prev) => tape.add(prev, v),
+                None => v,
+            });
+        }
+    }
+
+    Ok(wrt
+        .iter()
+        .map(|&p| {
+            adjoint[p.0].unwrap_or_else(|| {
+                // unreachable from the loss: the gradient is exactly zero
+                let d = tape.dims(p).to_vec();
+                tape.zeros(&d)
+            })
+        })
+        .collect())
+}
+
+/// VJP of `out = dot(lhs, rhs, CL, CR)`:
+/// * `∂lhs = transpose(dot(g, rhs, FRpos(g), FR))` back into lhs layout,
+/// * `∂rhs = transpose(dot(lhs, g, FL, FLpos(g)))` back into rhs layout,
+/// where FL/FR are the free axes and the transposes route each
+/// contracted axis back to its operand position (identity permutations
+/// are elided by the tape, which is what leaves the backward factor
+/// chains in re-merge-matchable shape).
+#[allow(clippy::too_many_arguments)]
+fn dot_vjp(
+    tape: &mut Tape,
+    g: NodeId,
+    lhs: NodeId,
+    rhs: NodeId,
+    lhs_contract: &[usize],
+    rhs_contract: &[usize],
+    want_lhs: bool,
+    want_rhs: bool,
+) -> (Option<NodeId>, Option<NodeId>) {
+    let ld = tape.dims(lhs).to_vec();
+    let rd = tape.dims(rhs).to_vec();
+    let fl: Vec<usize> =
+        (0..ld.len()).filter(|i| !lhs_contract.contains(i)).collect();
+    let fr: Vec<usize> =
+        (0..rd.len()).filter(|i| !rhs_contract.contains(i)).collect();
+
+    let gl = want_lhs.then(|| {
+        // contract g's rhs-free positions against rhs's free axes
+        let g_axes: Vec<usize> = (fl.len()..fl.len() + fr.len()).collect();
+        let x = tape.dot(g, rhs, &g_axes, &fr);
+        // x = [ld[f] for f in fl] ++ [rd[c] for c in sorted(CR)]
+        let mut cr_sorted = rhs_contract.to_vec();
+        cr_sorted.sort_unstable();
+        let mut perm = vec![0usize; ld.len()];
+        for (pos, &axis) in fl.iter().enumerate() {
+            perm[axis] = pos;
+        }
+        for (k, &axis) in lhs_contract.iter().enumerate() {
+            let slot = cr_sorted.iter().position(|&v| v == rhs_contract[k]).unwrap();
+            perm[axis] = fl.len() + slot;
+        }
+        tape.transpose(x, &perm)
+    });
+
+    let gr = want_rhs.then(|| {
+        // contract lhs's free axes against g's lhs-free positions
+        let g_axes: Vec<usize> = (0..fl.len()).collect();
+        let x = tape.dot(lhs, g, &fl, &g_axes);
+        // x = [ld[c] for c in sorted(CL)] ++ [rd[f] for f in fr]
+        let mut cl_sorted = lhs_contract.to_vec();
+        cl_sorted.sort_unstable();
+        let mut perm = vec![0usize; rd.len()];
+        for (k, &axis) in rhs_contract.iter().enumerate() {
+            let slot = cl_sorted.iter().position(|&v| v == lhs_contract[k]).unwrap();
+            perm[axis] = slot;
+        }
+        for (pos, &axis) in fr.iter().enumerate() {
+            perm[axis] = cl_sorted.len() + pos;
+        }
+        tape.transpose(x, &perm)
+    });
+
+    (gl, gr)
+}
+
+/// Scatter-adjoint of a (possibly strided) slice: place `g`'s entries at
+/// `start + i·stride` along `dim` of a zero tensor shaped like the
+/// slice's input. Strided slices interleave via a reshape/concat trick
+/// (the IR has no scatter): `[.., mid_out, ..] → [.., mid_out, 1, ..]`,
+/// concat `stride - 1` zeros on the new axis, flatten to
+/// `mid_out·stride`, trim to the covered span and pad both ends.
+fn slice_vjp(
+    tape: &mut Tape,
+    g: NodeId,
+    in_dims: &[usize],
+    dim: usize,
+    start: usize,
+    stride: usize,
+    mid_out: usize,
+) -> NodeId {
+    let mid_in = in_dims[dim];
+    let g_dims = tape.dims(g).to_vec();
+
+    let (body, body_w) = if stride == 1 {
+        (g, mid_out)
+    } else {
+        // interleave stride-1 zeros behind every entry
+        let mut split = g_dims.clone();
+        split[dim] = mid_out;
+        split.insert(dim + 1, 1);
+        let g_split = tape.reshape(g, &split);
+        let mut zdims = split.clone();
+        zdims[dim + 1] = stride - 1;
+        let z = tape.zeros(&zdims);
+        let cat = tape.concat(&[g_split, z], dim + 1);
+        let mut flat = g_dims.clone();
+        flat[dim] = mid_out * stride;
+        let flat_node = tape.reshape(cat, &flat);
+        // the interleave overshoots the input by up to stride-1: trim
+        let avail = mid_in - start;
+        if mid_out * stride > avail {
+            (tape.slice1(flat_node, 0, avail, dim), avail)
+        } else {
+            (flat_node, mid_out * stride)
+        }
+    };
+
+    let mut parts: Vec<NodeId> = Vec::with_capacity(3);
+    if start > 0 {
+        let mut zdims = g_dims.clone();
+        zdims[dim] = start;
+        parts.push(tape.zeros(&zdims));
+    }
+    parts.push(body);
+    let tail = mid_in - start - body_w;
+    if tail > 0 {
+        let mut zdims = g_dims.clone();
+        zdims[dim] = tail;
+        parts.push(tape.zeros(&zdims));
+    }
+    tape.concat(&parts, dim)
+}
+
+// ---------------------------------------------------------------------------
+// Public entry point
+// ---------------------------------------------------------------------------
+
+/// Layout of the packed `[loss, grads...]` joint graph.
+#[derive(Clone, Debug)]
+pub struct GradLayout {
+    /// entry 0 = the scalar loss, then one entry per `wrt` parameter
+    pub entries: Vec<PackEntry>,
+    /// node count of the forward segment (`Engine::compile_train`'s
+    /// boundary)
+    pub fwd_nodes: usize,
+}
+
+impl GradLayout {
+    /// Split a packed flat output back into per-entry tensors.
+    pub fn unpack(&self, flat: &[f32]) -> Vec<super::HostTensor> {
+        self.entries
+            .iter()
+            .map(|e| {
+                super::HostTensor::new(
+                    e.dims.clone(),
+                    flat[e.offset..e.offset + e.len].to_vec(),
+                )
+            })
+            .collect()
+    }
+}
+
+/// Build the joint forward+backward graph for `fwd` (root = scalar
+/// loss): the new root packs `[loss, grad(param) for param in wrt]`
+/// (parameter positional indices) into one flat vector.
+pub fn loss_and_grads(fwd: &Graph, wrt: &[usize]) -> Result<(Graph, GradLayout)> {
+    let param_nodes = param_node_ids(fwd, wrt)?;
+    let (mut tape, loss) = Tape::from_graph(fwd);
+    let fwd_nodes = tape.len();
+    let grads = append_backward(&mut tape, loss, &param_nodes)?;
+    let mut outputs = vec![loss];
+    outputs.extend(grads);
+    let (root, entries) = pack(&mut tape, &outputs);
+    Ok((tape.into_graph(root), GradLayout { entries, fwd_nodes }))
+}
+
+/// Node ids of the given parameter indices.
+fn param_node_ids(g: &Graph, wrt: &[usize]) -> Result<Vec<NodeId>> {
+    let mut by_index = vec![None; g.n_params];
+    for (i, node) in g.nodes.iter().enumerate() {
+        if let OpKind::Parameter { index, .. } = &node.op {
+            by_index[*index] = Some(NodeId(i));
+        }
+    }
+    wrt.iter()
+        .map(|&p| {
+            by_index
+                .get(p)
+                .copied()
+                .flatten()
+                .ok_or_else(|| anyhow::anyhow!("no parameter with index {p}"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::graph::GraphBuilder;
+    use crate::runtime::{CompileOptions, Engine, HostTensor};
+    use crate::util::check::assert_allclose;
+
+    fn grads_of(
+        g: &Graph,
+        wrt: &[usize],
+        args: &[HostTensor],
+    ) -> (f32, Vec<HostTensor>) {
+        let (joint, layout) = loss_and_grads(g, wrt).unwrap();
+        let exe = Engine::native().compile(&joint, &CompileOptions::o0()).unwrap();
+        let out = exe.run_hosts(args).unwrap().remove(0);
+        let mut parts = layout.unpack(&out.data);
+        let loss = parts.remove(0).data[0];
+        (loss, parts)
+    }
+
+    #[test]
+    fn grad_of_dot_matches_hand_derivation() {
+        // loss = sum(x · w), x: [2,3], w: [3] → ∂x[i,j] = w[j], ∂w[j] = Σ_i x[i,j]
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[2, 3], "x").unwrap();
+        let w = b.parameter(1, &[3], "w").unwrap();
+        let y = x.dot_general(&w, &[1], &[0]).unwrap(); // [2]
+        let loss = y.reduce_sum(&[0], false).unwrap();
+        let g = b.build(&loss).unwrap();
+        let xs = HostTensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let ws = HostTensor::new(vec![3], vec![10., 20., 30.]);
+        let (loss_v, grads) = grads_of(&g, &[0, 1], &[xs, ws]);
+        assert_allclose(&[loss_v], &[140. + 320.], 1e-4, 1e-4);
+        assert_eq!(grads[0].dims, vec![2, 3]);
+        assert_allclose(&grads[0].data, &[10., 20., 30., 10., 20., 30.], 1e-4, 1e-4);
+        assert_allclose(&grads[1].data, &[5., 7., 9.], 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn grad_of_relu_masks_negative_side() {
+        let b = GraphBuilder::new("relu");
+        let x = b.parameter(0, &[4], "x").unwrap();
+        let zero = b.c0(0.0).unwrap();
+        let y = x.max(&zero).unwrap();
+        let loss = y.reduce_sum(&[0], false).unwrap();
+        let g = b.build(&loss).unwrap();
+        let xs = HostTensor::new(vec![4], vec![-1., 2., -3., 4.]);
+        let (loss_v, grads) = grads_of(&g, &[0], &[xs]);
+        assert_allclose(&[loss_v], &[6.0], 1e-5, 1e-5);
+        assert_eq!(grads[0].data, vec![0., 1., 0., 1.]);
+    }
+
+    #[test]
+    fn grad_of_strided_slice_scatters_with_zeros() {
+        // x: [6]; slice 1..6 step 2 → picks x[1], x[3], x[5]
+        let b = GraphBuilder::new("sl");
+        let x = b.parameter(0, &[6], "x").unwrap();
+        let s = x.slice_in_dim(1, 6, 2, 0).unwrap();
+        let w = b.parameter(1, &[3], "w").unwrap();
+        let loss = (s * w).unwrap().reduce_sum(&[0], false).unwrap();
+        let g = b.build(&loss).unwrap();
+        let xs = HostTensor::new(vec![6], vec![0., 1., 2., 3., 4., 5.]);
+        let ws = HostTensor::new(vec![3], vec![7., 11., 13.]);
+        let (_, grads) = grads_of(&g, &[0], &[xs, ws]);
+        assert_eq!(grads[0].data, vec![0., 7., 0., 11., 0., 13.]);
+    }
+
+    #[test]
+    fn unreached_parameter_gets_zero_grad() {
+        let b = GraphBuilder::new("z");
+        let x = b.parameter(0, &[2], "x").unwrap();
+        let u = b.parameter(1, &[3], "unused").unwrap();
+        let _ = &u;
+        let loss = x.reduce_sum(&[0], false).unwrap();
+        let g = b.build(&loss).unwrap();
+        let (_, grads) = grads_of(
+            &g,
+            &[0, 1],
+            &[
+                HostTensor::new(vec![2], vec![1., 2.]),
+                HostTensor::new(vec![3], vec![9., 9., 9.]),
+            ],
+        );
+        assert_eq!(grads[0].data, vec![1., 1.]);
+        assert_eq!(grads[1].data, vec![0., 0., 0.]);
+    }
+
+    #[test]
+    fn backward_through_factor_pair_is_premerged_shape() {
+        // conv1x1 factor chain: the ∂x chain must come out as
+        // dot(w0, dot(w1, δ, [0],[0]), [0],[0]) — no transpose pairs in
+        // between — so remerge can fire on it when factors are frozen.
+        let (n, c, r, s, hw) = (1, 4, 3, 4, 2);
+        let b = GraphBuilder::new("pre");
+        let x = b.parameter(0, &[n, c, hw, hw], "x").unwrap();
+        let w0 = b.parameter(1, &[r, c], "w0").unwrap();
+        let w1 = b.parameter(2, &[s, r], "w1").unwrap();
+        let t = w0.dot_general(&x, &[1], &[1]).unwrap().transpose(&[1, 0, 2, 3]).unwrap();
+        let y = w1.dot_general(&t, &[1], &[1]).unwrap().transpose(&[1, 0, 2, 3]).unwrap();
+        let loss = y.reduce_sum(&[0, 1, 2, 3], false).unwrap();
+        let g = b.build(&loss).unwrap();
+        // differentiate wrt x ONLY (the frozen-factor shape)
+        let (joint, _) = loss_and_grads(&g, &[0]).unwrap();
+        let fwd_len = g.nodes.len();
+        let bwd_dots: Vec<&crate::runtime::graph::Node> = joint.nodes[fwd_len..]
+            .iter()
+            .filter(|nd| matches!(nd.op, OpKind::DotGeneral { .. }))
+            .collect();
+        assert_eq!(bwd_dots.len(), 2, "∂x needs exactly the two factor dots");
+        for nd in bwd_dots {
+            match &nd.op {
+                OpKind::DotGeneral { lhs_contract, rhs_contract } => {
+                    assert_eq!((lhs_contract.as_slice(), rhs_contract.as_slice()),
+                        ([0usize].as_slice(), [0usize].as_slice()),
+                        "backward factor dot not in transposed-weight form");
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+}

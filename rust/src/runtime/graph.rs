@@ -41,12 +41,27 @@ pub enum OpKind {
     /// input 1; output = lhs free dims ++ rhs free dims (no batch dims).
     DotGeneral { lhs_contract: Vec<usize>, rhs_contract: Vec<usize> },
     Add,
+    /// Elementwise subtraction (scalar operand broadcasts).
+    Sub,
     Mul,
     /// Elementwise max (scalar operand broadcasts).
     Max,
+    /// Elementwise `lhs > rhs` as 0.0/1.0 (scalar operand broadcasts).
+    /// Non-differentiable: autograd treats it as a constant mask.
+    Gt,
+    /// `select(pred, on_true, on_false)`: 3 same-shape inputs; where the
+    /// predicate is non-zero take `on_true`, else `on_false`.
+    Select,
     /// Mean over `dims`, which are removed from the shape.
     ReduceMean { dims: Vec<usize> },
+    /// Sum over `dims`, which are removed from the shape.
+    ReduceSum { dims: Vec<usize> },
     Sqrt,
+    Neg,
+    Exp,
+    Log,
+    /// Elementwise reciprocal `1 / x`.
+    Recip,
 }
 
 #[derive(Clone, Debug)]
@@ -365,10 +380,30 @@ impl Op {
         self.binary(other, OpKind::Max, "max")
     }
 
-    /// Mean over `dims` (removed from the shape; keep_dims unsupported).
-    pub fn reduce_mean(&self, dims: &[usize], keep_dims: bool) -> Result<Op> {
+    /// Elementwise `self > other` as a 0.0/1.0 mask (the relu-gradient
+    /// mask; scalar operands broadcast like the other binaries).
+    pub fn gt(&self, other: &Op) -> Result<Op> {
+        self.binary(other, OpKind::Gt, "gt")
+    }
+
+    /// `select(self, on_true, on_false)`: `self` is the predicate mask;
+    /// all three operands must share one shape.
+    pub fn select(&self, on_true: &Op, on_false: &Op) -> Result<Op> {
+        self.same_builder(on_true, "select")?;
+        self.same_builder(on_false, "select")?;
+        let (p, t, f) = (self.dims(), on_true.dims(), on_false.dims());
+        if p != t || p != f {
+            bail!("select: shapes differ (pred {p:?}, true {t:?}, false {f:?})");
+        }
+        Ok(self
+            .builder
+            .push(OpKind::Select, vec![self.id, on_true.id, on_false.id], p))
+    }
+
+    fn reduce(&self, dims: &[usize], keep_dims: bool, mean: bool) -> Result<Op> {
+        let what = if mean { "reduce_mean" } else { "reduce_sum" };
         if keep_dims {
-            bail!("reduce_mean: keep_dims not supported");
+            bail!("{what}: keep_dims not supported");
         }
         let d = self.dims();
         let mut out = Vec::new();
@@ -379,21 +414,55 @@ impl Op {
         }
         for &r in dims {
             if r >= d.len() {
-                bail!("reduce_mean: dim {r} out of range for {d:?}");
+                bail!("{what}: dim {r} out of range for {d:?}");
             }
             if d[r] == 0 {
-                // a 0/0 mean: reject here instead of producing Inf/NaN
-                bail!("reduce_mean: axis {r} of {d:?} is zero-size (empty mean)");
+                // a 0/0 mean (and a degenerate sum): reject at build time
+                bail!("{what}: axis {r} of {d:?} is zero-size (empty reduce)");
             }
         }
-        Ok(self
-            .builder
-            .push(OpKind::ReduceMean { dims: dims.to_vec() }, vec![self.id], out))
+        let op = if mean {
+            OpKind::ReduceMean { dims: dims.to_vec() }
+        } else {
+            OpKind::ReduceSum { dims: dims.to_vec() }
+        };
+        Ok(self.builder.push(op, vec![self.id], out))
+    }
+
+    /// Mean over `dims` (removed from the shape; keep_dims unsupported).
+    pub fn reduce_mean(&self, dims: &[usize], keep_dims: bool) -> Result<Op> {
+        self.reduce(dims, keep_dims, true)
+    }
+
+    /// Sum over `dims` (removed from the shape; keep_dims unsupported).
+    pub fn reduce_sum(&self, dims: &[usize], keep_dims: bool) -> Result<Op> {
+        self.reduce(dims, keep_dims, false)
+    }
+
+    fn unary(&self, op: OpKind) -> Op {
+        let dims = self.dims();
+        self.builder.push(op, vec![self.id], dims)
     }
 
     pub fn sqrt(&self) -> Result<Op> {
-        let dims = self.dims();
-        Ok(self.builder.push(OpKind::Sqrt, vec![self.id], dims))
+        Ok(self.unary(OpKind::Sqrt))
+    }
+
+    pub fn neg(&self) -> Result<Op> {
+        Ok(self.unary(OpKind::Neg))
+    }
+
+    pub fn exp(&self) -> Result<Op> {
+        Ok(self.unary(OpKind::Exp))
+    }
+
+    pub fn log(&self) -> Result<Op> {
+        Ok(self.unary(OpKind::Log))
+    }
+
+    /// Elementwise reciprocal `1 / x` (the missing half of `a / b`).
+    pub fn recip(&self) -> Result<Op> {
+        Ok(self.unary(OpKind::Recip))
     }
 }
 
@@ -401,6 +470,13 @@ impl std::ops::Add for Op {
     type Output = Result<Op>;
     fn add(self, rhs: Op) -> Result<Op> {
         self.binary(&rhs, OpKind::Add, "add")
+    }
+}
+
+impl std::ops::Sub for Op {
+    type Output = Result<Op>;
+    fn sub(self, rhs: Op) -> Result<Op> {
+        self.binary(&rhs, OpKind::Sub, "sub")
     }
 }
 
@@ -469,6 +545,31 @@ mod tests {
         let b2 = GraphBuilder::new("gap");
         let y = b2.parameter(3, &[1], "y").unwrap();
         assert!(b2.build(&y).is_err(), "non-contiguous parameter indices");
+    }
+
+    #[test]
+    fn training_op_shapes() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[2, 3], "x").unwrap();
+        let y = b.parameter(1, &[2, 3], "y").unwrap();
+        let d = (x.clone() - y.clone()).unwrap();
+        assert_eq!(d.dims(), vec![2, 3]);
+        assert_eq!(d.exp().unwrap().dims(), vec![2, 3]);
+        assert_eq!(x.log().unwrap().recip().unwrap().neg().unwrap().dims(), vec![2, 3]);
+        let mask = x.gt(&y).unwrap();
+        assert_eq!(mask.select(&x, &y).unwrap().dims(), vec![2, 3]);
+        let s = x.reduce_sum(&[0, 1], false).unwrap();
+        assert_eq!(s.dims(), Vec::<usize>::new());
+        // scalar broadcast works for sub/gt like the other binaries
+        let c = b.c0(1.0).unwrap();
+        assert_eq!((x.clone() - c.clone()).unwrap().dims(), vec![2, 3]);
+        assert_eq!(x.gt(&c).unwrap().dims(), vec![2, 3]);
+        // select demands one shape
+        let z = b.parameter(2, &[3, 2], "z").unwrap();
+        assert!(mask.select(&x, &z).is_err());
+        // empty reduces rejected for sum too
+        let e = b.parameter(3, &[2, 0], "e").unwrap();
+        assert!(e.reduce_sum(&[1], false).is_err());
     }
 
     #[test]

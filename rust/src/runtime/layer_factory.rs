@@ -136,6 +136,25 @@ pub fn bn_affine(x: &Op, gamma: &Op, beta: &Op, dims: &[usize; 4]) -> Result<Op>
     (x.clone() * g)? + bta
 }
 
+/// Batch-statistics BN (training-mode, matching the python train graphs'
+/// `_bn`): normalise with the batch mean/variance over (N, H, W), then
+/// the per-channel affine. Fully differentiable through `autograd` —
+/// mean, variance and rsqrt all get VJPs.
+pub fn bn_batchstats(b: &B, x: &Op, gamma: &Op, beta: &Op, dims: &[usize; 4]) -> Result<Op> {
+    let out_dims: Vec<usize> = dims.to_vec();
+    let mu = x.reduce_mean(&[0, 2, 3], false)?; // [C]
+    let mu_b = mu.broadcast_in_dim(&out_dims, &[1])?;
+    let centered = (x.clone() - mu_b)?;
+    let var = (centered.clone() * centered.clone())?.reduce_mean(&[0, 2, 3], false)?;
+    let eps = b.c0(1e-5)?;
+    let rstd = ((var + eps)?.sqrt()?).recip()?; // [C]
+    let rstd_b = rstd.broadcast_in_dim(&out_dims, &[1])?;
+    let xn = (centered * rstd_b)?;
+    let g = gamma.broadcast_in_dim(&out_dims, &[1])?;
+    let bta = beta.broadcast_in_dim(&out_dims, &[1])?;
+    (xn * g)? + bta
+}
+
 /// ReLU: max(x, 0).
 pub fn relu(b: &B, x: &Op) -> Result<Op> {
     let zero = b.c0(0f32)?;

@@ -22,6 +22,7 @@
 //! sees the graph and returns a `Compiled` handle carrying `PassStats`.
 
 pub mod artifacts;
+pub mod autograd;
 pub mod graph;
 pub mod layer_factory;
 pub mod native;
@@ -38,6 +39,7 @@ use anyhow::{bail, Result};
 use graph::Graph;
 pub use passes::{
     resolve_threads, ArenaStats, CompileOptions, OptLevel, PassRecord, PassStats,
+    TrainSegments,
 };
 
 /// Host-side f32 tensor handed around by the coordinator and the tests.
@@ -225,6 +227,26 @@ impl Engine {
     /// return the executable together with its `PassStats`.
     pub fn compile(&self, graph: &Graph, opts: &CompileOptions) -> Result<Compiled> {
         let (optimized, mut stats) = passes::run_pipeline(graph, opts);
+        let raw = self.backend.compile_graph(&optimized, opts)?;
+        stats.arena = raw.arena();
+        Ok(Compiled { raw, engine: self.clone(), stats: Arc::new(stats) })
+    }
+
+    /// `compile` for autograd-joint training graphs: `fwd_boundary` is
+    /// the node count of the forward segment (everything the graph held
+    /// before `runtime::autograd` appended gradients and updates). The
+    /// boundary is tracked through the pass pipeline so the returned
+    /// `PassStats::train` splits node counts and re-merge fusions into
+    /// forward vs backward — the evidence for where a training speedup
+    /// comes from.
+    pub fn compile_train(
+        &self,
+        graph: &Graph,
+        opts: &CompileOptions,
+        fwd_boundary: usize,
+    ) -> Result<Compiled> {
+        let (optimized, mut stats) =
+            passes::run_pipeline_seg(graph, opts, Some(fwd_boundary));
         let raw = self.backend.compile_graph(&optimized, opts)?;
         stats.arena = raw.arena();
         Ok(Compiled { raw, engine: self.clone(), stats: Arc::new(stats) })

@@ -1,20 +1,25 @@
 //! Parallel CPU kernels for the native executor.
 //!
 //! Every kernel writes into a caller-provided `out` slice. Parallel
-//! kernels partition the *output* into contiguous chunks across scoped
-//! worker threads, so each output element is produced by exactly one
-//! thread with a fixed, partition-independent accumulation order —
-//! results are bitwise identical for every thread count (the contract
-//! `tests/native_exec.rs` pins). Work below the `PAR_MIN_*` thresholds
-//! runs inline: spawning costs more than it saves there, and skipping
-//! the spawn cannot change a single bit.
+//! kernels partition the *output* into contiguous chunks and dispatch
+//! them over the executable's persistent [`WorkerPool`], so each output
+//! element is produced by exactly one lane with a fixed,
+//! partition-independent accumulation order — results are bitwise
+//! identical for every thread count (the contract `tests/native_exec.rs`
+//! pins). The chunking is computed from the pool's *thread count* alone,
+//! never from scheduling, so which worker executes which chunk cannot
+//! change a bit either. Work below the `PAR_MIN_*` thresholds runs
+//! inline: dispatch costs more than it saves there, and skipping it
+//! cannot change a single bit.
 //!
 //! `dot_general` is the hot kernel: an i-k-j matmul blocked over N and K
 //! so the active B panel stays cache-resident across the rows of a
-//! thread's chunk, with rows (M) partitioned across threads. There is
+//! thread's chunk, with rows (M) partitioned across lanes. There is
 //! deliberately NO zero-operand fast path: `0 × NaN` and `0 × Inf` must
 //! produce NaN per IEEE 754 — the seed's `av == 0.0` skip silently
 //! swallowed poisoned activations inside decomposed W0·W1 chains.
+
+use super::pool::{SendPtr, WorkerPool};
 
 /// Row-major strides for `dims`.
 pub fn strides(dims: &[usize]) -> Vec<usize> {
@@ -38,30 +43,30 @@ const NB: usize = 256;
 /// K-dimension block: B panel rows per strip (NB*KB*4 B ≈ 128 KiB ≤ L2).
 const KB: usize = 128;
 
-/// Run `f(global_offset, chunk)` over `out` split into at most `threads`
-/// contiguous chunks. The first chunk runs on the calling thread; the
-/// rest on scoped workers. `f` must derive each element purely from its
-/// global index so the partition cannot affect values.
-pub fn par_map<F>(out: &mut [f32], threads: usize, min_elems: usize, f: F)
+/// Run `f(global_offset, chunk)` over `out` split into at most
+/// `pool.threads()` contiguous chunks, dispatched over the pool. `f`
+/// must derive each element purely from its global index so the
+/// partition cannot affect values.
+pub fn par_map<F>(out: &mut [f32], pool: &WorkerPool, min_elems: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
     let n = out.len();
+    let threads = pool.threads();
     if threads <= 1 || n < min_elems.max(2) {
         f(0, out);
         return;
     }
     let per = n.div_ceil(threads.min(n));
-    std::thread::scope(|s| {
-        let mut chunks = out.chunks_mut(per).enumerate();
-        let first = chunks.next();
-        for (ci, chunk) in chunks {
-            let f = &f;
-            s.spawn(move || f(ci * per, chunk));
-        }
-        if let Some((_, chunk)) = first {
-            f(0, chunk);
-        }
+    let chunks = n.div_ceil(per);
+    let base = SendPtr(out.as_mut_ptr());
+    pool.run(chunks, &|ci| {
+        let start = ci * per;
+        let len = per.min(n - start);
+        // SAFETY: chunk index ranges are disjoint sub-slices of `out`,
+        // which the issuing `run` keeps borrowed until every chunk is done.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
+        f(start, chunk);
     });
 }
 
@@ -74,11 +79,11 @@ pub fn fill(out: &mut [f32], value: f32) {
 }
 
 /// `out[i] = f(a[i], b[i])` (shapes already equal).
-pub fn binary<F>(a: &[f32], b: &[f32], out: &mut [f32], threads: usize, f: F)
+pub fn binary<F>(a: &[f32], b: &[f32], out: &mut [f32], pool: &WorkerPool, f: F)
 where
     F: Fn(f32, f32) -> f32 + Sync,
 {
-    par_map(out, threads, PAR_MIN_ELEMS, |off, chunk| {
+    par_map(out, pool, PAR_MIN_ELEMS, |off, chunk| {
         for (i, o) in chunk.iter_mut().enumerate() {
             *o = f(a[off + i], b[off + i]);
         }
@@ -86,11 +91,11 @@ where
 }
 
 /// `out[i] = f(out[i], b[i])` — in-place over a dying lhs slot.
-pub fn binary_inplace<F>(out: &mut [f32], b: &[f32], threads: usize, f: F)
+pub fn binary_inplace<F>(out: &mut [f32], b: &[f32], pool: &WorkerPool, f: F)
 where
     F: Fn(f32, f32) -> f32 + Sync,
 {
-    par_map(out, threads, PAR_MIN_ELEMS, |off, chunk| {
+    par_map(out, pool, PAR_MIN_ELEMS, |off, chunk| {
         for (i, o) in chunk.iter_mut().enumerate() {
             *o = f(*o, b[off + i]);
         }
@@ -98,11 +103,11 @@ where
 }
 
 /// `out[i] = f(out[i], out[i])` — both operands were the same dying slot.
-pub fn binary_inplace_self<F>(out: &mut [f32], threads: usize, f: F)
+pub fn binary_inplace_self<F>(out: &mut [f32], pool: &WorkerPool, f: F)
 where
     F: Fn(f32, f32) -> f32 + Sync,
 {
-    par_map(out, threads, PAR_MIN_ELEMS, |_, chunk| {
+    par_map(out, pool, PAR_MIN_ELEMS, |_, chunk| {
         for o in chunk.iter_mut() {
             *o = f(*o, *o);
         }
@@ -110,11 +115,17 @@ where
 }
 
 /// `out[i] = f(a[i], s)` (scalar rhs; pass `swap` to flip operand order).
-pub fn binary_scalar<F>(a: &[f32], s: f32, swap: bool, out: &mut [f32], threads: usize, f: F)
-where
+pub fn binary_scalar<F>(
+    a: &[f32],
+    s: f32,
+    swap: bool,
+    out: &mut [f32],
+    pool: &WorkerPool,
+    f: F,
+) where
     F: Fn(f32, f32) -> f32 + Sync,
 {
-    par_map(out, threads, PAR_MIN_ELEMS, |off, chunk| {
+    par_map(out, pool, PAR_MIN_ELEMS, |off, chunk| {
         for (i, o) in chunk.iter_mut().enumerate() {
             let v = a[off + i];
             *o = if swap { f(s, v) } else { f(v, s) };
@@ -123,35 +134,45 @@ where
 }
 
 /// `out[i] = f(out[i], s)` in place (`swap` flips operand order).
-pub fn binary_scalar_inplace<F>(out: &mut [f32], s: f32, swap: bool, threads: usize, f: F)
+pub fn binary_scalar_inplace<F>(out: &mut [f32], s: f32, swap: bool, pool: &WorkerPool, f: F)
 where
     F: Fn(f32, f32) -> f32 + Sync,
 {
-    par_map(out, threads, PAR_MIN_ELEMS, |_, chunk| {
+    par_map(out, pool, PAR_MIN_ELEMS, |_, chunk| {
         for o in chunk.iter_mut() {
             *o = if swap { f(s, *o) } else { f(*o, s) };
         }
     });
 }
 
-pub fn unary<F>(a: &[f32], out: &mut [f32], threads: usize, f: F)
+pub fn unary<F>(a: &[f32], out: &mut [f32], pool: &WorkerPool, f: F)
 where
     F: Fn(f32) -> f32 + Sync,
 {
-    par_map(out, threads, PAR_MIN_ELEMS, |off, chunk| {
+    par_map(out, pool, PAR_MIN_ELEMS, |off, chunk| {
         for (i, o) in chunk.iter_mut().enumerate() {
             *o = f(a[off + i]);
         }
     });
 }
 
-pub fn unary_inplace<F>(out: &mut [f32], threads: usize, f: F)
+pub fn unary_inplace<F>(out: &mut [f32], pool: &WorkerPool, f: F)
 where
     F: Fn(f32) -> f32 + Sync,
 {
-    par_map(out, threads, PAR_MIN_ELEMS, |_, chunk| {
+    par_map(out, pool, PAR_MIN_ELEMS, |_, chunk| {
         for o in chunk.iter_mut() {
             *o = f(*o);
+        }
+    });
+}
+
+/// `out[i] = if p[i] != 0 { t[i] } else { f[i] }` — the `Select` op.
+pub fn select(p: &[f32], t: &[f32], f: &[f32], out: &mut [f32], pool: &WorkerPool) {
+    par_map(out, pool, PAR_MIN_ELEMS, |off, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            let j = off + i;
+            *o = if p[j] != 0.0 { t[j] } else { f[j] };
         }
     });
 }
@@ -171,8 +192,8 @@ pub struct GatherAxis {
 }
 
 /// `out[flat] = x[Σ_axis ((flat / out_stride) % out_extent) * src_stride]`.
-pub fn gather(x: &[f32], axes: &[GatherAxis], out: &mut [f32], threads: usize) {
-    par_map(out, threads, PAR_MIN_ELEMS, |off, chunk| {
+pub fn gather(x: &[f32], axes: &[GatherAxis], out: &mut [f32], pool: &WorkerPool) {
+    par_map(out, pool, PAR_MIN_ELEMS, |off, chunk| {
         for (i, slot) in chunk.iter_mut().enumerate() {
             let flat = off + i;
             let mut src = 0usize;
@@ -235,9 +256,16 @@ pub fn slice(
 // ---------------------------------------------------------------------------
 
 /// `out[m,n] = Σ_k a[m,k] · b[k,n]`, cache-tiled, rows partitioned
-/// across `threads`. Per output element the k-sum always runs in
+/// across the pool's lanes. Per output element the k-sum always runs in
 /// ascending k order, so tiling and threading never change a bit.
-pub fn dot_general(a: &[f32], b: &[f32], n: usize, k: usize, out: &mut [f32], threads: usize) {
+pub fn dot_general(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+    pool: &WorkerPool,
+) {
     if out.is_empty() {
         return;
     }
@@ -248,21 +276,22 @@ pub fn dot_general(a: &[f32], b: &[f32], n: usize, k: usize, out: &mut [f32], th
     let m = out.len() / n;
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
-    let t = if m * n * k >= PAR_MIN_MACS { threads.min(m) } else { 1 };
+    let t = if m * n * k >= PAR_MIN_MACS { pool.threads().min(m) } else { 1 };
     if t <= 1 {
         dot_rows(a, b, n, k, out);
         return;
     }
     let rows_per = m.div_ceil(t);
-    std::thread::scope(|s| {
-        let mut ochunks = out.chunks_mut(rows_per * n).zip(a.chunks(rows_per * k));
-        let first = ochunks.next();
-        for (ochunk, achunk) in ochunks {
-            s.spawn(move || dot_rows(achunk, b, n, k, ochunk));
-        }
-        if let Some((ochunk, achunk)) = first {
-            dot_rows(achunk, b, n, k, ochunk);
-        }
+    let chunks = m.div_ceil(rows_per);
+    let base = SendPtr(out.as_mut_ptr());
+    pool.run(chunks, &|ci| {
+        let r0 = ci * rows_per;
+        let rows = rows_per.min(m - r0);
+        // SAFETY: row ranges are disjoint; `out` stays borrowed by the
+        // issuing `run` until every chunk completes.
+        let ochunk =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * n), rows * n) };
+        dot_rows(&a[r0 * k..(r0 + rows) * k], b, n, k, ochunk);
     });
 }
 
@@ -295,7 +324,7 @@ fn dot_rows(a: &[f32], b: &[f32], n: usize, k: usize, out: &mut [f32]) {
 // Reduction
 // ---------------------------------------------------------------------------
 
-/// Precomputed geometry of a `reduce_mean`: kept axes address the base
+/// Precomputed geometry of a reduction: kept axes address the base
 /// offset per output element; `red` is the (extent, stride) odometer of
 /// the reduced subspace; `contiguous` marks reductions over trailing
 /// axes, where the subspace is one dense run of `count` elements.
@@ -307,13 +336,14 @@ pub struct ReduceGeom {
     pub contiguous: bool,
 }
 
-/// Mean over the reduced subspace, one output element per thread-chunk
-/// slot, accumulated in f64 in a fixed order. `geom.count` must be
-/// non-zero (the planner and `GraphBuilder` reject 0/0 reductions).
-pub fn reduce_mean(x: &[f32], geom: &ReduceGeom, out: &mut [f32], threads: usize) {
-    debug_assert!(geom.count > 0, "reduce_mean over an empty subspace");
+/// Sum (and for `mean` the average) over the reduced subspace, one
+/// output element per chunk slot, accumulated in f64 in a fixed order.
+/// `geom.count` must be non-zero (the planner and `GraphBuilder` reject
+/// empty reduces).
+pub fn reduce(x: &[f32], geom: &ReduceGeom, mean: bool, out: &mut [f32], pool: &WorkerPool) {
+    debug_assert!(geom.count > 0, "reduce over an empty subspace");
     let inv = geom.count as f64;
-    par_map(out, threads, 1024, |off, chunk| {
+    par_map(out, pool, 1024, |off, chunk| {
         for (i, slot) in chunk.iter_mut().enumerate() {
             let flat = off + i;
             let mut base = 0usize;
@@ -336,7 +366,7 @@ pub fn reduce_mean(x: &[f32], geom: &ReduceGeom, out: &mut [f32], threads: usize
                     acc += x[src] as f64;
                 }
             }
-            *slot = (acc / inv) as f32;
+            *slot = if mean { (acc / inv) as f32 } else { acc as f32 };
         }
     });
 }
@@ -345,13 +375,17 @@ pub fn reduce_mean(x: &[f32], geom: &ReduceGeom, out: &mut [f32], threads: usize
 mod tests {
     use super::*;
 
+    fn pool(threads: usize) -> WorkerPool {
+        WorkerPool::new(threads)
+    }
+
     #[test]
     fn dot_has_no_zero_skip() {
         // 0-weight row meeting NaN/Inf activations must poison the output
         let a = [0.0f32, 0.0];
         let b = [f32::NAN, 1.0, f32::INFINITY, 2.0]; // [2, 2]
         let mut out = [0f32; 2];
-        dot_general(&a, &b, 2, 2, &mut out, 1);
+        dot_general(&a, &b, 2, 2, &mut out, &pool(1));
         assert!(out[0].is_nan(), "0*NaN + 0*Inf must be NaN, got {}", out[0]);
         assert_eq!(out[1], 0.0, "finite column stays exact");
     }
@@ -372,7 +406,7 @@ mod tests {
         }
         for threads in [1, 2, 5] {
             let mut out = vec![0f32; m * n];
-            dot_general(&a, &b, n, k, &mut out, threads);
+            dot_general(&a, &b, n, k, &mut out, &pool(threads));
             assert_eq!(out, naive, "threads={threads}");
         }
     }
@@ -381,16 +415,44 @@ mod tests {
     fn par_map_is_partition_invariant() {
         let mut a = vec![0f32; 40_000];
         let mut b = vec![0f32; 40_000];
-        par_map(&mut a, 1, 1, |off, c| {
+        par_map(&mut a, &pool(1), 1, |off, c| {
             for (i, o) in c.iter_mut().enumerate() {
                 *o = ((off + i) as f32).sin();
             }
         });
-        par_map(&mut b, 7, 1, |off, c| {
+        par_map(&mut b, &pool(7), 1, |off, c| {
             for (i, o) in c.iter_mut().enumerate() {
                 *o = ((off + i) as f32).sin();
             }
         });
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn select_picks_by_mask() {
+        let p = [1.0f32, 0.0, 2.0, 0.0];
+        let t = [10f32, 20.0, 30.0, 40.0];
+        let f = [-1f32, -2.0, -3.0, -4.0];
+        let mut out = [0f32; 4];
+        select(&p, &t, &f, &mut out, &pool(2));
+        assert_eq!(out, [10.0, -2.0, 30.0, -4.0]);
+    }
+
+    #[test]
+    fn reduce_sum_and_mean_agree_up_to_count() {
+        // [2, 3] reduced over axis 1
+        let x = [1f32, 2.0, 3.0, 10.0, 20.0, 30.0];
+        let geom = ReduceGeom {
+            kept: vec![GatherAxis { out_stride: 1, out_extent: 2, src_stride: 3 }],
+            red: vec![(3, 1)],
+            count: 3,
+            contiguous: true,
+        };
+        let mut sum = [0f32; 2];
+        let mut mean = [0f32; 2];
+        reduce(&x, &geom, false, &mut sum, &pool(1));
+        reduce(&x, &geom, true, &mut mean, &pool(1));
+        assert_eq!(sum, [6.0, 60.0]);
+        assert_eq!(mean, [2.0, 20.0]);
     }
 }

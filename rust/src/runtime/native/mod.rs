@@ -15,9 +15,18 @@
 //! loop — same kernels, serial, one fresh allocation per node — as the
 //! differential baseline for the arena-aliasing property suite and the
 //! "seed interpreter" rows of `benches/native_exec.rs`.
+//!
+//! Parallel kernels dispatch over a **persistent per-executable worker
+//! pool** (`pool`): the `threads - 1` workers are spawned once — lazily,
+//! on the executable's first above-threshold op — and parked between
+//! steps, so parallel ops pay a condvar wake instead of the old per-op
+//! `std::thread::scope` spawn/join (~20–50 µs each), and executables
+//! that never fan out never pin OS threads (the ROADMAP worker-pool
+//! item).
 
 pub mod kernels;
 pub mod plan;
+pub mod pool;
 mod reference;
 
 use std::sync::{Arc, Mutex};
@@ -28,6 +37,7 @@ use super::graph::Graph;
 use super::passes::ArenaStats;
 use super::{Backend, BackendExec, Buffer, CompileOptions, HostTensor};
 use plan::{ExecPlan, InPlace, Kernel, Step, ValueRef};
+use pool::WorkerPool;
 
 /// The default engine: executes planned graphs on the host CPU.
 pub struct NativeBackend;
@@ -89,18 +99,26 @@ impl Backend for NativeBackend {
 pub struct NativeExecutable {
     graph: Graph,
     plan: ExecPlan,
-    threads: usize,
+    /// Persistent worker pool: `threads - 1` parked OS threads, spawned
+    /// lazily on the first parallel dispatch and reused by every
+    /// above-threshold kernel of every run.
+    pool: WorkerPool,
     arena: Mutex<Vec<Vec<f32>>>,
 }
 
 impl NativeExecutable {
-    /// Plan `graph` for execution with `threads` workers (`>= 1`; pass 1
-    /// for the fully serial reference configuration). The arena is
-    /// allocated here, never during `run`.
+    /// Plan `graph` for execution with `threads` lanes (`>= 1`; pass 1
+    /// for the fully serial reference configuration). The arena and the
+    /// worker pool are allocated here, never during `run`.
     pub fn new(graph: Graph, threads: usize) -> Result<NativeExecutable> {
         let plan = plan::build_plan(&graph)?;
         let arena = plan.slot_caps.iter().map(|&c| vec![0f32; c]).collect();
-        Ok(NativeExecutable { graph, plan, threads: threads.max(1), arena: Mutex::new(arena) })
+        Ok(NativeExecutable {
+            graph,
+            plan,
+            pool: WorkerPool::new(threads.max(1)),
+            arena: Mutex::new(arena),
+        })
     }
 
     /// The plan's buffer-arena accounting.
@@ -159,7 +177,7 @@ impl NativeExecutable {
     }
 
     fn exec_step(&self, step: &Step, args: &[Arc<HostTensor>], bufs: &mut [Vec<f32>]) {
-        let t = self.threads;
+        let t = &self.pool;
         // Dot operand permutes gather into their scratch slots first
         // (planner guarantees scratch ≠ inputs ≠ output).
         if let Kernel::Dot { lhs_prep, rhs_prep, .. } = &step.kernel {
@@ -255,20 +273,36 @@ impl NativeExecutable {
                     kernels::binary_scalar(x, s, *swap, out, t, |a, b| op.apply(a, b));
                 }
             }
-            Kernel::Sqrt { in_place } => {
+            Kernel::Unary { op, in_place } => {
+                let op = *op;
                 if *in_place {
-                    kernels::unary_inplace(out, t, |x| x.sqrt());
+                    kernels::unary_inplace(out, t, |x| op.apply(x));
                 } else {
                     kernels::unary(
                         resolve(ins[0].0, ins[0].1, args, bufs),
                         out,
                         t,
-                        |x| x.sqrt(),
+                        |x| op.apply(x),
                     );
                 }
             }
-            Kernel::ReduceMean { geom } => {
-                kernels::reduce_mean(resolve(ins[0].0, ins[0].1, args, bufs), geom, out, t);
+            Kernel::Select => {
+                kernels::select(
+                    resolve(ins[0].0, ins[0].1, args, bufs),
+                    resolve(ins[1].0, ins[1].1, args, bufs),
+                    resolve(ins[2].0, ins[2].1, args, bufs),
+                    out,
+                    t,
+                );
+            }
+            Kernel::Reduce { geom, mean } => {
+                kernels::reduce(
+                    resolve(ins[0].0, ins[0].1, args, bufs),
+                    geom,
+                    *mean,
+                    out,
+                    t,
+                );
             }
         }
         bufs[step.out] = out_buf;

@@ -33,11 +33,15 @@ pub enum ValueRef {
 }
 
 /// Elementwise binary operator (the only ops eligible for in-place).
+/// The executor preserves operand order through every in-place variant,
+/// so non-commutative members (`Sub`, `Gt`) are first-class citizens.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BinOp {
     Add,
+    Sub,
     Mul,
     Max,
+    Gt,
 }
 
 impl BinOp {
@@ -45,8 +49,33 @@ impl BinOp {
     pub fn apply(self, a: f32, b: f32) -> f32 {
         match self {
             BinOp::Add => a + b,
+            BinOp::Sub => a - b,
             BinOp::Mul => a * b,
             BinOp::Max => a.max(b),
+            BinOp::Gt => (a > b) as u32 as f32,
+        }
+    }
+}
+
+/// Elementwise unary operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    Sqrt,
+    Neg,
+    Exp,
+    Log,
+    Recip,
+}
+
+impl UnOp {
+    #[inline]
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            UnOp::Sqrt => x.sqrt(),
+            UnOp::Neg => -x,
+            UnOp::Exp => x.exp(),
+            UnOp::Log => x.ln(),
+            UnOp::Recip => 1.0 / x,
         }
     }
 }
@@ -57,7 +86,9 @@ pub enum InPlace {
     No,
     /// Output slot is the lhs input's slot.
     Lhs,
-    /// Output slot is the rhs input's slot (commutative ops only).
+    /// Output slot is the rhs input's slot; the executor swaps the
+    /// operand order back, so non-commutative ops (`Sub`, `Gt`) are
+    /// eligible too.
     Rhs,
     /// Both inputs were the same dying slot (`x ⊕ x`).
     Both,
@@ -87,8 +118,11 @@ pub enum Kernel {
     Bin { op: BinOp, in_place: InPlace },
     /// `f(scalar-broadcast)` variant: `swap` means the scalar is the lhs.
     BinScalar { op: BinOp, swap: bool, in_place: bool },
-    Sqrt { in_place: bool },
-    ReduceMean { geom: ReduceGeom },
+    Unary { op: UnOp, in_place: bool },
+    /// `select(pred, on_true, on_false)` — three same-shape inputs.
+    Select,
+    /// Sum (`mean == false`) or mean over the reduced subspace.
+    Reduce { geom: ReduceGeom, mean: bool },
 }
 
 #[derive(Clone, Debug)]
@@ -211,8 +245,8 @@ pub fn reduce_geom(in_dims: &[usize], out_dims: &[usize], reduce: &[usize]) -> R
     let count: usize = reduce.iter().map(|&r| in_dims[r]).product();
     if count == 0 {
         bail!(
-            "reduce_mean over zero-size axes {reduce:?} of shape {in_dims:?} \
-             is an empty mean (0/0)"
+            "reduce over zero-size axes {reduce:?} of shape {in_dims:?} \
+             is an empty reduce (0/0 mean)"
         );
     }
     let in_strides = kernels::strides(in_dims);
@@ -466,11 +500,13 @@ pub fn build_plan(g: &Graph) -> Result<ExecPlan> {
                     None,
                 )
             }
-            OpKind::Add | OpKind::Mul | OpKind::Max => {
+            OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Max | OpKind::Gt => {
                 let op = match &node.op {
                     OpKind::Add => BinOp::Add,
+                    OpKind::Sub => BinOp::Sub,
                     OpKind::Mul => BinOp::Mul,
-                    _ => BinOp::Max,
+                    OpKind::Max => BinOp::Max,
+                    _ => BinOp::Gt,
                 };
                 let (ld, rd) = (in_dims!(0), in_dims!(1));
                 if ld == rd {
@@ -525,17 +561,35 @@ pub fn build_plan(g: &Graph) -> Result<ExecPlan> {
                     }
                 }
             }
-            OpKind::Sqrt => {
+            OpKind::Sqrt | OpKind::Neg | OpKind::Exp | OpKind::Log | OpKind::Recip => {
+                let op = match &node.op {
+                    OpKind::Sqrt => UnOp::Sqrt,
+                    OpKind::Neg => UnOp::Neg,
+                    OpKind::Exp => UnOp::Exp,
+                    OpKind::Log => UnOp::Log,
+                    _ => UnOp::Recip,
+                };
                 let a = val!(0);
                 if let Some(s) = dying_slot!(a, in_len!(0)) {
                     in_place_steps += 1;
-                    (Kernel::Sqrt { in_place: true }, vec![], Some(s))
+                    (Kernel::Unary { op, in_place: true }, vec![], Some(s))
                 } else {
-                    (Kernel::Sqrt { in_place: false }, vec![(a, in_len!(0))], None)
+                    (Kernel::Unary { op, in_place: false }, vec![(a, in_len!(0))], None)
                 }
             }
-            OpKind::ReduceMean { dims } => (
-                Kernel::ReduceMean { geom: reduce_geom(in_dims!(0), &node.dims, dims)? },
+            OpKind::Select => {
+                // Not in-place: a 3-operand in-place kernel variant isn't
+                // worth its complexity for the few selects a relu backward
+                // emits (they are elementwise, so it would be sound).
+                let ins: Vec<(ValueRef, usize)> =
+                    (0..3).map(|p| (val!(p), in_len!(p))).collect();
+                (Kernel::Select, ins, None)
+            }
+            OpKind::ReduceMean { dims } | OpKind::ReduceSum { dims } => (
+                Kernel::Reduce {
+                    geom: reduce_geom(in_dims!(0), &node.dims, dims)?,
+                    mean: matches!(node.op, OpKind::ReduceMean { .. }),
+                },
                 vec![(val!(0), in_len!(0))],
                 None,
             ),

@@ -1,0 +1,303 @@
+//! Persistent per-executable worker pool.
+//!
+//! The PR 3 kernels fanned out with `std::thread::scope` **per
+//! above-threshold op**, paying the ~20–50 µs spawn/join for every dot /
+//! elementwise step of every forward (and now backward) pass — which caps
+//! the threading win on small models (ROADMAP item, quantified by
+//! `benches/native_exec.rs`). This pool spawns its `threads - 1` workers
+//! once — lazily, at the first dispatch that actually fans out — parks
+//! them between jobs and reuses them for every step of every run until
+//! the executable drops.
+//!
+//! Dispatch is chunk-indexed: a job is a borrowed `Fn(usize)` closure plus
+//! a chunk count; workers (and the calling thread, which always
+//! participates) pull chunk indices from a shared cursor. The *partition*
+//! of work into chunks is computed by the kernels exactly as before — from
+//! the pool's thread count, never from scheduling — so which worker runs
+//! which chunk cannot affect a single bit (the determinism contract of
+//! `tests/native_exec.rs`).
+//!
+//! Safety: `run` type-erases the borrowed closure to a raw pointer so the
+//! long-lived workers can call it. The pointer is only dereferenced
+//! between the moment `run` publishes the job and the moment `run`
+//! returns, and `run` blocks until every chunk has finished (panics in
+//! workers are caught, counted and re-thrown on the caller) — the borrow
+//! therefore always outlives its uses.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased pointer to the job closure. Only ever dereferenced while
+/// the issuing `run` call is blocked waiting for completion.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (bound on `run`), and the pool's
+// completion barrier guarantees it outlives every dereference.
+unsafe impl Send for JobPtr {}
+
+struct Slot {
+    job: Option<JobPtr>,
+    /// Total chunks of the current job.
+    chunks: usize,
+    /// Next chunk index to hand out.
+    next: usize,
+    /// Chunks not yet finished (executed or panicked).
+    pending: usize,
+    /// Chunks whose closure panicked in a worker.
+    panicked: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Workers wait here for a job (or shutdown).
+    work: Condvar,
+    /// The caller waits here for `pending == 0`.
+    done: Condvar,
+}
+
+/// A fixed-size pool of parked worker threads. `threads == 1` (or 0)
+/// never spawns and `run` executes inline — the serial reference
+/// configuration costs exactly what it did before the pool existed.
+/// Workers are spawned **lazily**, on the first dispatch that actually
+/// fans out: executables whose ops all stay under the parallel
+/// thresholds (small rank-search layers, of which `EngineLayerTimer`
+/// caches hundreds) never pin OS threads.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: std::sync::Mutex<Vec<JoinHandle<()>>>,
+    spawned: std::sync::atomic::AtomicBool,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Pool executing jobs with `threads` total lanes (the caller counts
+    /// as one, so up to `threads - 1` OS threads are spawned on first
+    /// use).
+    pub fn new(threads: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                job: None,
+                chunks: 0,
+                next: 0,
+                pending: 0,
+                panicked: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        WorkerPool {
+            shared,
+            handles: std::sync::Mutex::new(Vec::new()),
+            spawned: std::sync::atomic::AtomicBool::new(false),
+            threads: threads.max(1),
+        }
+    }
+
+    /// The no-thread pool (inline execution), for the reference
+    /// interpreter and other strictly serial callers.
+    pub fn serial() -> WorkerPool {
+        WorkerPool::new(1)
+    }
+
+    /// Total execution lanes (workers + the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn ensure_spawned(&self) {
+        use std::sync::atomic::Ordering;
+        if self.spawned.load(Ordering::Acquire) {
+            return;
+        }
+        let mut handles = self.handles.lock().expect("pool handles lock");
+        if handles.is_empty() {
+            for _ in 1..self.threads {
+                let shared = Arc::clone(&self.shared);
+                handles.push(std::thread::spawn(move || worker_loop(&shared)));
+            }
+        }
+        self.spawned.store(true, Ordering::Release);
+    }
+
+    /// Execute `f(0), f(1), .., f(chunks - 1)` across the pool, blocking
+    /// until all chunks completed. Chunks must be independent; `f` must
+    /// derive everything from the chunk index (see module docs).
+    pub fn run(&self, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        if self.threads <= 1 || chunks == 1 {
+            for ci in 0..chunks {
+                f(ci);
+            }
+            return;
+        }
+        self.ensure_spawned();
+        // Publish the job. The raw pointer stays valid until we observe
+        // pending == 0 below, which is after the last dereference.
+        {
+            let mut s = self.shared.slot.lock().expect("pool lock");
+            debug_assert!(s.job.is_none(), "pool jobs never overlap");
+            s.job = Some(JobPtr(f as *const _));
+            s.chunks = chunks;
+            s.next = 0;
+            s.pending = chunks;
+            s.panicked = 0;
+            self.shared.work.notify_all();
+        }
+        // The caller participates instead of idling. Its chunks are
+        // caught like the workers' so the completion barrier (and with it
+        // the pointer's validity window) holds even across panics.
+        loop {
+            let ci = {
+                let mut s = self.shared.slot.lock().expect("pool lock");
+                if s.next >= s.chunks {
+                    break;
+                }
+                s.next += 1;
+                s.next - 1
+            };
+            let outcome =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(ci)));
+            let mut s = self.shared.slot.lock().expect("pool lock");
+            if outcome.is_err() {
+                s.panicked += 1;
+            }
+            s.pending -= 1;
+            if s.pending == 0 {
+                self.shared.done.notify_all();
+            }
+        }
+        // Wait for workers to drain their in-flight chunks, then retire
+        // the job so the stale pointer can never be picked up again.
+        let mut s = self.shared.slot.lock().expect("pool lock");
+        while s.pending > 0 {
+            s = self.shared.done.wait(s).expect("pool wait");
+        }
+        let panicked = s.panicked;
+        s.job = None;
+        drop(s);
+        assert!(panicked == 0, "{panicked} pool chunk(s) panicked");
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let (job, ci) = {
+            let mut s = shared.slot.lock().expect("pool lock");
+            loop {
+                if s.shutdown {
+                    return;
+                }
+                let grabbed = s.job.filter(|_| s.next < s.chunks);
+                match grabbed {
+                    Some(job) => {
+                        s.next += 1;
+                        break (job, s.next - 1);
+                    }
+                    None => s = shared.work.wait(s).expect("pool wait"),
+                }
+            }
+        };
+        // Catch panics so `pending` always reaches 0 and the caller can
+        // re-throw instead of deadlocking.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: the issuing `run` is blocked until pending == 0.
+            (unsafe { &*job.0 })(ci)
+        }));
+        let mut s = shared.slot.lock().expect("pool lock");
+        if outcome.is_err() {
+            s.panicked += 1;
+        }
+        s.pending -= 1;
+        if s.pending == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut s = self.shared.slot.lock().expect("pool lock");
+            s.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        let handles = std::mem::take(self.handles.get_mut().expect("pool handles lock"));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw mutable base pointer smuggled into `Fn(usize)` chunk closures;
+/// chunks address disjoint ranges, so concurrent writes never alias.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub *mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_every_chunk_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for chunks in [1usize, 2, 3, 7, 64] {
+            let hits: Vec<AtomicUsize> =
+                (0..chunks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(chunks, &|ci| {
+                hits[ci].fetch_add(1, Ordering::SeqCst);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1), "{chunks} chunks");
+        }
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = WorkerPool::serial();
+        assert_eq!(pool.threads(), 1);
+        let count = AtomicUsize::new(0);
+        pool.run(5, &|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn pool_survives_many_jobs() {
+        // the persistence property: one pool, thousands of dispatches
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..2000 {
+            pool.run(4, &|ci| {
+                total.fetch_add(ci + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 2000 * (1 + 2 + 3 + 4));
+    }
+
+    #[test]
+    fn worker_panic_reaches_the_caller() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, &|ci| {
+                if ci % 2 == 1 {
+                    panic!("chunk {ci}");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panicking chunks must not be swallowed");
+        // and the pool is still usable afterwards
+        let n = AtomicUsize::new(0);
+        pool.run(3, &|_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 3);
+    }
+}

@@ -13,7 +13,8 @@ use anyhow::{anyhow, bail, Result};
 
 use super::super::graph::OpKind;
 use super::super::HostTensor;
-use super::plan::{self, BinOp};
+use super::plan::{self, BinOp, UnOp};
+use super::pool::WorkerPool;
 use super::{kernels, NativeExecutable};
 
 impl NativeExecutable {
@@ -31,6 +32,9 @@ impl NativeExecutable {
             }
         }
         remaining[g.root.0] += 1;
+        // One inline-executing pool for the whole run — strictly serial,
+        // exactly the seed's per-node execution model.
+        let serial = WorkerPool::serial();
         let mut values: Vec<Option<Arc<HostTensor>>> = vec![None; g.nodes.len()];
         for (i, node) in g.nodes.iter().enumerate() {
             if remaining[i] == 0 {
@@ -59,7 +63,7 @@ impl NativeExecutable {
                                 .ok_or_else(|| anyhow!("{}: input freed early", g.name))
                         })
                         .collect::<Result<_>>()?;
-                    Arc::new(eval_op(op, &ins, &node.dims)?)
+                    Arc::new(eval_op(op, &ins, &node.dims, &serial)?)
                 }
             };
             values[i] = Some(out);
@@ -76,7 +80,12 @@ impl NativeExecutable {
     }
 }
 
-fn eval_op(op: &OpKind, ins: &[&HostTensor], out_dims: &[usize]) -> Result<HostTensor> {
+fn eval_op(
+    op: &OpKind,
+    ins: &[&HostTensor],
+    out_dims: &[usize],
+    serial: &WorkerPool,
+) -> Result<HostTensor> {
     let n = kernels::numel(out_dims);
     let mut data = vec![0f32; n];
     match op {
@@ -85,7 +94,7 @@ fn eval_op(op: &OpKind, ins: &[&HostTensor], out_dims: &[usize]) -> Result<HostT
         OpKind::Broadcast => kernels::fill(&mut data, ins[0].data[0]),
         OpKind::BroadcastInDim { mapping } => {
             let axes = plan::broadcast_axes(&ins[0].dims, out_dims, mapping);
-            kernels::gather(&ins[0].data, &axes, &mut data, 1);
+            kernels::gather(&ins[0].data, &axes, &mut data, serial);
         }
         OpKind::Concat { dim } => {
             let (outer, inner, total) = plan::axis_split(out_dims, *dim);
@@ -112,53 +121,68 @@ fn eval_op(op: &OpKind, ins: &[&HostTensor], out_dims: &[usize]) -> Result<HostT
         OpKind::Reshape => kernels::copy(&ins[0].data, &mut data),
         OpKind::Transpose { perm } => {
             let axes = plan::transpose_axes(&ins[0].dims, out_dims, perm);
-            kernels::gather(&ins[0].data, &axes, &mut data, 1);
+            kernels::gather(&ins[0].data, &axes, &mut data, serial);
         }
         OpKind::DotGeneral { lhs_contract, rhs_contract } => {
             let (lhs, rhs) = (ins[0], ins[1]);
             let shape = plan::dot_shape(&lhs.dims, &rhs.dims, lhs_contract, rhs_contract)?;
-            let a = permuted(lhs, shape.lhs_perm.as_deref());
-            let b = permuted(rhs, shape.rhs_perm.as_deref());
+            let a = permuted(lhs, shape.lhs_perm.as_deref(), serial);
+            let b = permuted(rhs, shape.rhs_perm.as_deref(), serial);
             let a: &[f32] = a.as_deref().unwrap_or(&lhs.data);
             let b: &[f32] = b.as_deref().unwrap_or(&rhs.data);
-            kernels::dot_general(a, b, shape.n, shape.k, &mut data, 1);
+            kernels::dot_general(a, b, shape.n, shape.k, &mut data, serial);
         }
-        OpKind::Add | OpKind::Mul | OpKind::Max => {
+        OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Max | OpKind::Gt => {
             let op = match op {
                 OpKind::Add => BinOp::Add,
+                OpKind::Sub => BinOp::Sub,
                 OpKind::Mul => BinOp::Mul,
-                _ => BinOp::Max,
+                OpKind::Max => BinOp::Max,
+                _ => BinOp::Gt,
             };
             let (a, b) = (ins[0], ins[1]);
             if a.dims == b.dims {
-                kernels::binary(&a.data, &b.data, &mut data, 1, |x, y| op.apply(x, y));
+                kernels::binary(&a.data, &b.data, &mut data, serial, |x, y| op.apply(x, y));
             } else if a.dims.is_empty() {
-                kernels::binary_scalar(&b.data, a.data[0], true, &mut data, 1, |x, y| {
+                kernels::binary_scalar(&b.data, a.data[0], true, &mut data, serial, |x, y| {
                     op.apply(x, y)
                 });
             } else if b.dims.is_empty() {
-                kernels::binary_scalar(&a.data, b.data[0], false, &mut data, 1, |x, y| {
+                kernels::binary_scalar(&a.data, b.data[0], false, &mut data, serial, |x, y| {
                     op.apply(x, y)
                 });
             } else {
                 bail!("elementwise op on mismatched shapes {:?} vs {:?}", a.dims, b.dims);
             }
         }
-        OpKind::ReduceMean { dims } => {
-            let geom = plan::reduce_geom(&ins[0].dims, out_dims, dims)?;
-            kernels::reduce_mean(&ins[0].data, &geom, &mut data, 1);
+        OpKind::Select => {
+            kernels::select(&ins[0].data, &ins[1].data, &ins[2].data, &mut data, serial);
         }
-        OpKind::Sqrt => kernels::unary(&ins[0].data, &mut data, 1, |x| x.sqrt()),
+        OpKind::ReduceMean { dims } | OpKind::ReduceSum { dims } => {
+            let geom = plan::reduce_geom(&ins[0].dims, out_dims, dims)?;
+            let mean = matches!(op, OpKind::ReduceMean { .. });
+            kernels::reduce(&ins[0].data, &geom, mean, &mut data, serial);
+        }
+        OpKind::Sqrt | OpKind::Neg | OpKind::Exp | OpKind::Log | OpKind::Recip => {
+            let op = match op {
+                OpKind::Sqrt => UnOp::Sqrt,
+                OpKind::Neg => UnOp::Neg,
+                OpKind::Exp => UnOp::Exp,
+                OpKind::Log => UnOp::Log,
+                _ => UnOp::Recip,
+            };
+            kernels::unary(&ins[0].data, &mut data, serial, |x| op.apply(x));
+        }
     }
     Ok(HostTensor::new(out_dims.to_vec(), data))
 }
 
 /// Materialize `x` with its axes permuted; `None` for the identity.
-fn permuted(x: &HostTensor, perm: Option<&[usize]>) -> Option<Vec<f32>> {
+fn permuted(x: &HostTensor, perm: Option<&[usize]>, serial: &WorkerPool) -> Option<Vec<f32>> {
     let perm = perm?;
     let out_dims: Vec<usize> = perm.iter().map(|&p| x.dims[p]).collect();
     let axes = plan::transpose_axes(&x.dims, &out_dims, perm);
     let mut data = vec![0f32; x.data.len()];
-    kernels::gather(&x.data, &axes, &mut data, 1);
+    kernels::gather(&x.data, &axes, &mut data, serial);
     Some(data)
 }

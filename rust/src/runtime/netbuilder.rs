@@ -123,17 +123,33 @@ fn apply_site(
     })
 }
 
-/// BN affine + optional ReLU on an NCHW op.
+/// How BatchNorm lowers in a built network.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BnMode {
+    /// Inference-mode per-channel affine — what a deployed graph folds
+    /// to; the throughput benchmarks measure this.
+    Affine,
+    /// Batch-statistics normalisation + affine — what the python train
+    /// graphs compute; the native training subsystem differentiates
+    /// through it.
+    BatchStats,
+}
+
+/// BN (per `mode`) + optional ReLU on an NCHW op.
 fn bn_relu(
     ctx: &mut NetCtx,
     name: &str,
     x: &Op,
     dims: &[usize; 4],
     relu: bool,
+    mode: BnMode,
 ) -> Result<Op> {
     let g = ctx.param(&format!("{name}.bn.g"), vec![dims[1]])?;
     let bta = ctx.param(&format!("{name}.bn.b"), vec![dims[1]])?;
-    let y = lf::bn_affine(x, &g, &bta, dims)?;
+    let y = match mode {
+        BnMode::Affine => lf::bn_affine(x, &g, &bta, dims)?,
+        BnMode::BatchStats => lf::bn_batchstats(ctx.b, x, &g, &bta, dims)?,
+    };
     if relu {
         lf::relu(ctx.b, &y)
     } else {
@@ -141,13 +157,28 @@ fn bn_relu(
     }
 }
 
-/// Build the full forward computation. Parameter 0 is the input image
-/// [batch, 3, hw, hw]; the returned specs describe parameters 1..N.
+/// Build the full forward computation with inference-mode (affine) BN.
+/// Parameter 0 is the input image [batch, 3, hw, hw]; the returned specs
+/// describe parameters 1..N.
 pub fn build_forward(
     arch: &Arch,
     plan: &Plan,
     batch: usize,
     hw: usize,
+) -> Result<(Graph, Vec<ParamSpec>)> {
+    build_forward_mode(arch, plan, batch, hw, BnMode::Affine)
+}
+
+/// `build_forward` with an explicit BN lowering mode. The parameter
+/// names and order are identical across modes — only the BN body
+/// differs — so weights trained through `BnMode::BatchStats` load
+/// straight into an affine inference graph.
+pub fn build_forward_mode(
+    arch: &Arch,
+    plan: &Plan,
+    batch: usize,
+    hw: usize,
+    bn: BnMode,
 ) -> Result<(Graph, Vec<ParamSpec>)> {
     let b = B::new(&format!("{}_fwd", arch.name));
     let x = b.parameter(0, &[batch, 3, hw, hw], "x")?;
@@ -159,7 +190,7 @@ pub fn build_forward(
     // Stem
     let stem = &by_name["stem.conv"];
     let (mut y, mut c, mut h, mut w) = apply_site(&mut ctx, stem, plan, &x, batch, hw, hw)?;
-    y = bn_relu(&mut ctx, "stem.conv", &y, &[batch, c, h, w], true)?;
+    y = bn_relu(&mut ctx, "stem.conv", &y, &[batch, c, h, w], true, bn)?;
     y = lf::maxpool_3x3_s2(&b, &y, &[batch, c, h, w])?;
     h = (h + 2 - 3) / 2 + 1;
     w = (w + 2 - 3) / 2 + 1;
@@ -180,14 +211,14 @@ pub fn build_forward(
                 let (op, cc, nh, nw) =
                     apply_site(&mut ctx, site, plan, &hh.0, batch, hh.2, hh.3)?;
                 let last = i == names.len() - 1;
-                let op = bn_relu(&mut ctx, nm, &op, &[batch, cc, nh, nw], !last)?;
+                let op = bn_relu(&mut ctx, nm, &op, &[batch, cc, nh, nw], !last, bn)?;
                 hh = (op, cc, nh, nw);
             }
             let (mut idy, _idc, _idh, _idw) = identity.clone();
             if let Some(ds) = by_name.get(&format!("{pre}.downsample")) {
                 let (op, cc, nh, nw) =
                     apply_site(&mut ctx, ds, plan, &identity.0, batch, identity.2, identity.3)?;
-                idy = bn_relu(&mut ctx, &ds.name, &op, &[batch, cc, nh, nw], false)?;
+                idy = bn_relu(&mut ctx, &ds.name, &op, &[batch, cc, nh, nw], false, bn)?;
             }
             let sum = (hh.0 + idy)?;
             y = lf::relu(&b, &sum)?;
@@ -277,7 +308,33 @@ impl BuiltNet {
         params: &crate::decompose::params::Params,
         opts: &CompileOptions,
     ) -> Result<BuiltNet> {
-        let (graph, specs) = build_forward(arch, plan, batch, hw)?;
+        BuiltNet::compile_with_params_mode(
+            engine,
+            arch,
+            plan,
+            batch,
+            hw,
+            params,
+            opts,
+            BnMode::Affine,
+        )
+    }
+
+    /// `compile_with_params` with an explicit BN mode — the native
+    /// training path evaluates through `BnMode::BatchStats` so eval
+    /// normalisation matches how the train-step graph normalised.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compile_with_params_mode(
+        engine: &Engine,
+        arch: &Arch,
+        plan: &Plan,
+        batch: usize,
+        hw: usize,
+        params: &crate::decompose::params::Params,
+        opts: &CompileOptions,
+        bn: BnMode,
+    ) -> Result<BuiltNet> {
+        let (graph, specs) = build_forward_mode(arch, plan, batch, hw, bn)?;
         let exe = engine.compile(&graph, opts)?;
         let mut weight_bufs = Vec::with_capacity(specs.len());
         for spec in &specs {

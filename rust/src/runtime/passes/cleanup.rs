@@ -10,6 +10,31 @@ use std::collections::HashMap;
 
 use crate::runtime::graph::{Graph, Node, NodeId, OpKind};
 
+/// A pass result carrying the old-id → new-id map (`None` for nodes DCE
+/// dropped), so the pipeline driver can track positions — concretely the
+/// forward/backward boundary of autograd-joint training graphs — through
+/// every rewrite.
+pub(crate) struct Traced {
+    pub graph: Graph,
+    pub rewrites: usize,
+    pub map: Vec<Option<NodeId>>,
+}
+
+impl Traced {
+    /// Remap a node-count boundary (nodes `0..b` are "forward") into the
+    /// rewritten graph: the forward segment ends after the last surviving
+    /// image of a pre-boundary node. Passes preserve relative order, so
+    /// this is exact up to CSE aliasing a later node onto an earlier one.
+    pub fn remap_boundary(&self, b: usize) -> usize {
+        self.map[..b.min(self.map.len())]
+            .iter()
+            .flatten()
+            .map(|id| id.0 + 1)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
 /// Node-list builder with an old-id → new-id map. Passes walk the source
 /// graph in order (inputs always precede users), so by the time a node is
 /// visited all of its inputs are already remapped.
@@ -60,7 +85,7 @@ enum Decision {
 fn local_pass(
     g: &Graph,
     mut rule: impl FnMut(&Rewriter, &Node) -> Decision,
-) -> (Graph, usize) {
+) -> Traced {
     let mut rw = Rewriter::new(g.nodes.len());
     let mut rewrites = 0usize;
     for node in &g.nodes {
@@ -82,7 +107,8 @@ fn local_pass(
         };
         rw.map.push(id);
     }
-    (rw.finish(g), rewrites)
+    let map = rw.map.iter().map(|&id| Some(id)).collect();
+    Traced { graph: rw.finish(g), rewrites, map }
 }
 
 fn const_of(rw: &Rewriter, id: NodeId) -> Option<f32> {
@@ -92,23 +118,32 @@ fn const_of(rw: &Rewriter, id: NodeId) -> Option<f32> {
     }
 }
 
-/// Scalar constant folding plus the `x * 1` identity (constants must be
-/// scalar: tensor-shaped constants do not exist in this IR).
+/// Scalar constant folding plus the `x * 1` / `x - 0` identities
+/// (constants must be scalar: tensor-shaped constants do not exist in
+/// this IR).
 ///
-/// Only *bitwise-exact* identities are applied: `x * 1.0` preserves
-/// `-0.0` and NaN exactly, whereas `x + 0.0` would flip `-0.0` to `+0.0`
-/// and `max(x, -inf)` would swallow NaN (the interpreter's
-/// `f32::max(NaN, -inf)` returns `-inf`) — those stay in the graph so O1
-/// keeps its bit-identity guarantee.
+/// Only *bitwise-exact* identities are applied: `x * 1.0` and
+/// `x - (+0.0)` preserve `-0.0` and NaN exactly, whereas `x + 0.0` would
+/// flip `-0.0` to `+0.0` (and `x - (-0.0)` likewise) and `max(x, -inf)`
+/// would swallow NaN (the interpreter's `f32::max(NaN, -inf)` returns
+/// `-inf`) — those stay in the graph so O1 keeps its bit-identity
+/// guarantee.
 pub fn fold_constants(g: &Graph) -> (Graph, usize) {
+    let t = fold_constants_t(g);
+    (t.graph, t.rewrites)
+}
+
+pub(crate) fn fold_constants_t(g: &Graph) -> Traced {
     local_pass(g, |rw, node| {
         match &node.op {
-            OpKind::Add | OpKind::Mul | OpKind::Max => {
+            OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Max | OpKind::Gt => {
                 let (a, b) = (node.inputs[0], node.inputs[1]);
                 let (ca, cb) = (const_of(rw, a), const_of(rw, b));
                 let f: fn(f32, f32) -> f32 = match node.op {
                     OpKind::Add => |x, y| x + y,
+                    OpKind::Sub => |x, y| x - y,
                     OpKind::Mul => |x, y| x * y,
+                    OpKind::Gt => |x, y| (x > y) as u32 as f32,
                     _ => f32::max,
                 };
                 if let (Some(x), Some(y)) = (ca, cb) {
@@ -130,16 +165,35 @@ pub fn fold_constants(g: &Graph) -> (Graph, usize) {
                         return Decision::Alias(b);
                     }
                 }
+                if matches!(node.op, OpKind::Sub) {
+                    // `x - (+0.0) == x` for every x (NaN included); the
+                    // bit check excludes -0.0, where the identity would
+                    // flip `-0.0 - (-0.0) = +0.0`.
+                    if cb.map(f32::to_bits) == Some(0f32.to_bits())
+                        && rw.node(a).dims == node.dims
+                    {
+                        return Decision::Alias(a);
+                    }
+                }
                 Decision::Keep
             }
-            OpKind::Sqrt => match const_of(rw, node.inputs[0]) {
-                Some(v) if node.dims.is_empty() => Decision::Replace(Node {
-                    op: OpKind::ConstScalar { value: v.sqrt() },
-                    inputs: vec![],
-                    dims: vec![],
-                }),
-                _ => Decision::Keep,
-            },
+            OpKind::Sqrt | OpKind::Neg | OpKind::Exp | OpKind::Log | OpKind::Recip => {
+                let f: fn(f32) -> f32 = match node.op {
+                    OpKind::Sqrt => |x| x.sqrt(),
+                    OpKind::Neg => |x| -x,
+                    OpKind::Exp => |x| x.exp(),
+                    OpKind::Log => |x| x.ln(),
+                    _ => |x| 1.0 / x,
+                };
+                match const_of(rw, node.inputs[0]) {
+                    Some(v) if node.dims.is_empty() => Decision::Replace(Node {
+                        op: OpKind::ConstScalar { value: f(v) },
+                        inputs: vec![],
+                        dims: vec![],
+                    }),
+                    _ => Decision::Keep,
+                }
+            }
             _ => Decision::Keep,
         }
     })
@@ -152,10 +206,17 @@ fn is_identity_perm(perm: &[usize]) -> bool {
 /// Reshape/transpose canonicalization + elimination and broadcast folding:
 /// * `transpose(transpose(x))` composes; identity transposes vanish
 /// * `reshape(reshape(x))` collapses; no-op reshapes vanish
+/// * `neg(neg(x))` vanishes (bitwise-exact: negation only flips the sign
+///   bit)
 /// * identity `broadcast_in_dim` vanishes
 /// * a scalar broadcast feeding an elementwise op is replaced by the
 ///   scalar itself (binary ops broadcast rank-0 operands natively)
 pub fn canonicalize(g: &Graph) -> (Graph, usize) {
+    let t = canonicalize_t(g);
+    (t.graph, t.rewrites)
+}
+
+pub(crate) fn canonicalize_t(g: &Graph) -> Traced {
     local_pass(g, |rw, node| match &node.op {
         OpKind::Transpose { perm } => {
             let src = node.inputs[0];
@@ -196,6 +257,13 @@ pub fn canonicalize(g: &Graph) -> (Graph, usize) {
             }
             Decision::Keep
         }
+        OpKind::Neg => {
+            let src = node.inputs[0];
+            if matches!(rw.node(src).op, OpKind::Neg) {
+                return Decision::Alias(rw.node(src).inputs[0]);
+            }
+            Decision::Keep
+        }
         OpKind::BroadcastInDim { mapping } => {
             let src = node.inputs[0];
             if rw.node(src).dims == node.dims && is_identity_perm(mapping) {
@@ -203,7 +271,7 @@ pub fn canonicalize(g: &Graph) -> (Graph, usize) {
             }
             Decision::Keep
         }
-        OpKind::Add | OpKind::Mul | OpKind::Max => {
+        OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Max | OpKind::Gt => {
             // Fold `binary(x, broadcast(scalar))` to `binary(x, scalar)` —
             // only one side, and only while the other operand still pins
             // the output shape.
@@ -246,6 +314,11 @@ pub fn canonicalize(g: &Graph) -> (Graph, usize) {
 /// occurrence. Sound because the IR is pure; parameters are naturally
 /// unique (duplicate indices are rejected at build time).
 pub fn cse(g: &Graph) -> (Graph, usize) {
+    let t = cse_t(g);
+    (t.graph, t.rewrites)
+}
+
+pub(crate) fn cse_t(g: &Graph) -> Traced {
     let mut seen: HashMap<String, NodeId> = HashMap::new();
     local_pass(g, move |rw, node| {
         let key = format!("{:?}|{:?}|{:?}", node.op, node.inputs, node.dims);
@@ -265,6 +338,11 @@ pub fn cse(g: &Graph) -> (Graph, usize) {
 /// positional call ABI (`n_params` and the execute-time argument list),
 /// and both backends already skip evaluating unused parameters.
 pub fn dce(g: &Graph) -> (Graph, usize) {
+    let t = dce_t(g);
+    (t.graph, t.rewrites)
+}
+
+pub(crate) fn dce_t(g: &Graph) -> Traced {
     let mut live = vec![false; g.nodes.len()];
     let mut stack = vec![g.root];
     while let Some(id) = stack.pop() {
@@ -282,9 +360,11 @@ pub fn dce(g: &Graph) -> (Graph, usize) {
 
     let removed = live.iter().filter(|l| !**l).count();
     if removed == 0 {
-        return (g.clone(), 0);
+        let map = (0..g.nodes.len()).map(|i| Some(NodeId(i))).collect();
+        return Traced { graph: g.clone(), rewrites: 0, map };
     }
     let mut rw = Rewriter::new(g.nodes.len() - removed);
+    let mut map: Vec<Option<NodeId>> = Vec::with_capacity(g.nodes.len());
     for (i, node) in g.nodes.iter().enumerate() {
         let id = if live[i] {
             let inputs = node.inputs.iter().map(|&x| rw.remap(x)).collect();
@@ -295,8 +375,9 @@ pub fn dce(g: &Graph) -> (Graph, usize) {
             NodeId(usize::MAX)
         };
         rw.map.push(id);
+        map.push(live[i].then_some(id));
     }
-    (rw.finish(g), removed)
+    Traced { graph: rw.finish(g), rewrites: removed, map }
 }
 
 #[cfg(test)]
@@ -390,6 +471,48 @@ mod tests {
         assert_eq!(g3.nodes.len(), 3);
         let x0 = HostTensor::new(vec![2, 2], vec![1.0, 9.0, 3.0, 7.0]);
         assert_eq!(run(&g3, &[x0]), vec![5.0, 9.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn training_ops_fold_and_canonicalize() {
+        let b = GraphBuilder::new("t");
+        let x = b.parameter(0, &[3], "x").unwrap();
+        // scalar const folding through the new unaries: exp(log(2)) ~ 2
+        let two = b.c0(2.0).unwrap();
+        let e = two.log().unwrap().exp().unwrap();
+        // x - 0 aliases away; x - (-0.0) must NOT (it flips -0.0)
+        let z = b.c0(0.0).unwrap();
+        let nz = b.c0(-0.0).unwrap();
+        let y = ((x.clone() - z).unwrap() - nz).unwrap();
+        // neg(neg(y)) vanishes
+        let n2 = y.neg().unwrap().neg().unwrap();
+        let out = (n2 * e).unwrap();
+        let g = b.build(&out).unwrap();
+        let (g2, folded) = fold_constants(&g);
+        assert!(folded >= 3, "log, exp and x-0 must fold, got {folded}");
+        let (g3, canon) = canonicalize(&g2);
+        assert!(canon >= 1, "neg(neg(x)) must vanish");
+        let (g4, _) = dce(&g3);
+        assert!(g4.nodes.len() < g.nodes.len());
+        let x0 = HostTensor::new(vec![3], vec![-0.0, 1.0, f32::NAN]);
+        let outv = run(&g4, &[x0]);
+        // -0.0 - (-0.0) = +0.0, times exp(log 2) = 2 → +0.0
+        assert_eq!(outv[0], 0.0);
+        crate::util::check::assert_allclose(&outv[1..2], &[2.0], 1e-6, 1e-6);
+        assert!(outv[2].is_nan());
+    }
+
+    #[test]
+    fn gt_scalar_folds() {
+        let b = GraphBuilder::new("t");
+        let hi = b.c0(3.0).unwrap();
+        let lo = b.c0(1.0).unwrap();
+        let m = hi.gt(&lo).unwrap();
+        let g = b.build(&m).unwrap();
+        let (g2, n) = fold_constants(&g);
+        assert_eq!(n, 1);
+        let (g3, _) = dce(&g2);
+        assert_eq!(g3.nodes.len(), 1, "gt(3, 1) folds to the constant 1.0");
     }
 
     #[test]

@@ -166,6 +166,23 @@ impl ArenaStats {
     }
 }
 
+/// Forward-vs-backward accounting for autograd-joint training graphs,
+/// tracked through every pass by remapping the node-list boundary that
+/// `runtime::autograd` records when it appends the gradient segment.
+/// This is how the harness shows *where* a training speedup comes from:
+/// a merged backward chain moves `fusions_bwd`, not `fusions_fwd`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TrainSegments {
+    pub fwd_nodes_before: usize,
+    pub bwd_nodes_before: usize,
+    pub fwd_nodes_after: usize,
+    pub bwd_nodes_after: usize,
+    /// Re-merge fusions in the forward segment.
+    pub fusions_fwd: usize,
+    /// Re-merge fusions in the backward/update segment.
+    pub fusions_bwd: usize,
+}
+
 /// What `Engine::compile` did to the graph, attached to every `Compiled`.
 #[derive(Clone, Debug, Default)]
 pub struct PassStats {
@@ -178,6 +195,9 @@ pub struct PassStats {
     pub passes: Vec<PassRecord>,
     /// Buffer-arena accounting from the backend's execution plan.
     pub arena: Option<ArenaStats>,
+    /// Forward/backward segment accounting (training graphs only —
+    /// populated by `Engine::compile_train`).
+    pub train: Option<TrainSegments>,
 }
 
 impl PassStats {
@@ -209,6 +229,17 @@ impl PassStats {
                 a.reuse_ratio()
             ));
         }
+        if let Some(t) = &self.train {
+            s.push_str(&format!(
+                ", fwd {} -> {} / bwd {} -> {} nodes, fusions fwd {} bwd {}",
+                t.fwd_nodes_before,
+                t.fwd_nodes_after,
+                t.bwd_nodes_before,
+                t.bwd_nodes_after,
+                t.fusions_fwd,
+                t.fusions_bwd
+            ));
+        }
         s
     }
 }
@@ -216,11 +247,32 @@ impl PassStats {
 /// Run the pipeline selected by `opts` and return the rewritten graph plus
 /// its accounting. O0 returns the input graph untouched.
 pub fn run_pipeline(graph: &Graph, opts: &CompileOptions) -> (Graph, PassStats) {
+    run_pipeline_seg(graph, opts, None)
+}
+
+/// `run_pipeline` with an optional forward/backward boundary: nodes
+/// `0..boundary` are the forward computation, the rest the autograd
+/// gradient + optimizer-update segment. The boundary is remapped through
+/// every pass so `PassStats::train` reports where nodes went and where
+/// the re-merge fusions fired.
+pub fn run_pipeline_seg(
+    graph: &Graph,
+    opts: &CompileOptions,
+    boundary: Option<usize>,
+) -> (Graph, PassStats) {
     let t0 = Instant::now();
+    let n0 = graph.nodes.len();
     let mut stats = PassStats {
         opt_level: Some(opts.opt_level),
-        nodes_before: graph.nodes.len(),
-        nodes_after: graph.nodes.len(),
+        nodes_before: n0,
+        nodes_after: n0,
+        train: boundary.map(|b| TrainSegments {
+            fwd_nodes_before: b.min(n0),
+            bwd_nodes_before: n0 - b.min(n0),
+            fwd_nodes_after: b.min(n0),
+            bwd_nodes_after: n0 - b.min(n0),
+            ..Default::default()
+        }),
         ..Default::default()
     };
     if opts.opt_level == OptLevel::O0 {
@@ -229,9 +281,22 @@ pub fn run_pipeline(graph: &Graph, opts: &CompileOptions) -> (Graph, PassStats) 
     }
 
     let mut g = graph.clone();
+    let mut b = boundary.map(|b| b.min(n0));
     if opts.opt_level >= OptLevel::O2 {
-        let fusions = run_pass(&mut stats, "remerge", &mut g, |g| remerge::run(g, opts.lane));
-        stats.fusions = fusions;
+        let t0p = Instant::now();
+        let before = g.nodes.len();
+        let (traced, fus_fwd, fus_bwd) =
+            remerge::run_t(&g, opts.lane, b.unwrap_or(before));
+        stats.fusions = traced.rewrites;
+        if let Some(t) = stats.train.as_mut() {
+            t.fusions_fwd = fus_fwd;
+            t.fusions_bwd = fus_bwd;
+        }
+        record_pass(&mut stats, "remerge", before, &traced, t0p);
+        if let Some(bv) = b.as_mut() {
+            *bv = traced.remap_boundary(*bv);
+        }
+        g = traced.graph;
     }
     // Cleanup to fixpoint. Each family member is individually idempotent
     // but unlocks the others (fusion orphans feed DCE, composed transposes
@@ -239,40 +304,52 @@ pub fn run_pipeline(graph: &Graph, opts: &CompileOptions) -> (Graph, PassStats) 
     // The final confirming round rebuilds the node list without changing
     // it — accepted: graphs are a few hundred nodes, compile cost is
     // dominated by the backend, and `EngineLayerTimer` caches results.
+    let family: [(&'static str, fn(&Graph) -> cleanup::Traced); 4] = [
+        ("fold-const", cleanup::fold_constants_t),
+        ("canonicalize", cleanup::canonicalize_t),
+        ("cse", cleanup::cse_t),
+        ("dce", cleanup::dce_t),
+    ];
     for _ in 0..4 {
         let mut changed = 0;
-        changed += run_pass(&mut stats, "fold-const", &mut g, cleanup::fold_constants);
-        changed += run_pass(&mut stats, "canonicalize", &mut g, cleanup::canonicalize);
-        changed += run_pass(&mut stats, "cse", &mut g, cleanup::cse);
-        changed += run_pass(&mut stats, "dce", &mut g, cleanup::dce);
+        for (name, pass) in family {
+            let t0p = Instant::now();
+            let before = g.nodes.len();
+            let traced = pass(&g);
+            changed += traced.rewrites;
+            record_pass(&mut stats, name, before, &traced, t0p);
+            if let Some(bv) = b.as_mut() {
+                *bv = traced.remap_boundary(*bv);
+            }
+            g = traced.graph;
+        }
         if changed == 0 {
             break;
         }
     }
     stats.nodes_after = g.nodes.len();
+    if let (Some(t), Some(bv)) = (stats.train.as_mut(), b) {
+        t.fwd_nodes_after = bv.min(g.nodes.len());
+        t.bwd_nodes_after = g.nodes.len() - bv.min(g.nodes.len());
+    }
     stats.wall_secs = t0.elapsed().as_secs_f64();
     (g, stats)
 }
 
-fn run_pass(
+fn record_pass(
     stats: &mut PassStats,
     name: &'static str,
-    g: &mut Graph,
-    pass: impl FnOnce(&Graph) -> (Graph, usize),
-) -> usize {
-    let t0 = Instant::now();
-    let before = g.nodes.len();
-    let (out, rewrites) = pass(g);
-    let record = PassRecord {
+    nodes_before: usize,
+    traced: &cleanup::Traced,
+    t0: Instant,
+) {
+    stats.passes.push(PassRecord {
         name,
-        nodes_before: before,
-        nodes_after: out.nodes.len(),
-        rewrites,
+        nodes_before,
+        nodes_after: traced.graph.nodes.len(),
+        rewrites: traced.rewrites,
         wall_secs: t0.elapsed().as_secs_f64(),
-    };
-    *g = out;
-    stats.passes.push(record);
-    rewrites
+    });
 }
 
 #[cfg(test)]

@@ -25,17 +25,32 @@
 //! it now applies to *every* variant's graph — Algorithm 1's engine-backed
 //! timer measures merged-where-profitable graphs instead of naive ones.
 //!
-//! Two concrete emissions are matched (both from `conv1x1` / the fc head):
+//! Four concrete emissions are matched — the two forward chains from
+//! `conv1x1` / the fc head, and the two **backward** chains
+//! `runtime::autograd` emits for the gradient flowing *through* a factor
+//! pair (`∂L/∂x = W0ᵀ · (W1ᵀ · δ)`, the paper's merged *training* scheme):
 //!
 //! * **conv chain** `dot(W1, transpose(dot(W0, x), [1,0,2,3]))`, all
 //!   contractions on axis 1 — the [S,C]×[N,C,H,W] convention.
 //! * **fc chain** `dot(dot(x, W0), W1)` with 2-D `x` — the [B,C]×[R,C]
 //!   convention.
+//! * **conv backward chain** `dot(W0, dot(W1, δ, [0],[0]), [0],[0])`
+//!   with `W0: [R,C]`, `W1: [S,R]`, `δ: [S,N,H,W]` — each dot contracts
+//!   the weight's *output* axis, i.e. the weights act transposed.
+//! * **fc backward chain** `dot(dot(δ, W1, [1],[0]), W0, [1],[0])` with
+//!   `δ: [B,S]`.
+//!
+//! In a joint train-step graph the backward chains only stay single-use
+//! (and therefore fusable) when the factor weights are **frozen** — full
+//! fine-tuning consumes the factor intermediates again for the weight
+//! gradients, which is exactly the paper's observation that Layer
+//! Freezing is what unlocks the merged backward pass.
 //!
 //! Factors with other consumers are left alone (the intermediate
 //! activation is observable), and the rewrite is only applied when the
 //! fused output shape provably equals the original.
 
+use super::cleanup::Traced;
 use crate::model::cost::rank_efficiency;
 use crate::runtime::graph::{Graph, Node, NodeId, OpKind};
 
@@ -57,46 +72,67 @@ pub fn decomposed_loses(r: usize, c: usize, s: usize, lane: usize, free_elems: u
     decomposed >= merged
 }
 
-/// One fusable factor chain, in source-graph ids.
+/// How a matched chain is laid out — which emission produced it and how
+/// the fused contraction must be wired.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Layout {
+    /// `dot(W1, transpose(dot(W0, x), [1,0,2,3]))`, contractions [1]×[1].
+    ConvFwd,
+    /// `dot(dot(x, W0), W1)`, contractions [1]×[1].
+    FcFwd,
+    /// `dot(W0, dot(W1, δ, [0],[0]), [0],[0])` — the autograd chain for
+    /// the gradient through a conv factor pair (weights act transposed).
+    ConvBwd,
+    /// `dot(dot(δ, W1, [1],[0]), W0, [1],[0])` — ditto for the fc head.
+    FcBwd,
+}
+
+/// One fusable factor chain, in source-graph ids. `w1`/`w0` are stored so
+/// the merged weight is always `M = dot(w1, w0, [1],[0])` with
+/// `w1: [s, r]`, `w0: [r, c]` → `M: [s, c]`.
 struct Chain {
     w0: NodeId,
     w1: NodeId,
     x: NodeId,
-    /// contraction axis of `x` (the channel axis)
+    /// contraction axis of `x` (the channel axis / the δ weight axis)
     x_contract: usize,
     /// (r, c, s) of the pair, for the profitability gate
     dims: (usize, usize, usize),
-    /// `dot(W, x)` output layout (conv convention) vs `dot(x, W)` (fc)
-    conv_layout: bool,
+    layout: Layout,
 }
 
-fn axis1(v: &[usize]) -> bool {
-    v.len() == 1 && v[0] == 1
+fn axes(v: &[usize], want: usize) -> bool {
+    v.len() == 1 && v[0] == want
 }
 
-/// `Some(true)` when the node is a dot contracting axis 1 against axis 1
-/// (the only contraction convention `conv1x1` and the fc head emit).
-fn as_dot_axis1(node: &Node) -> Option<bool> {
+/// The (lhs, rhs) single contraction axes of a dot node, if it is one.
+fn dot_axes(node: &Node) -> Option<(usize, usize)> {
     match &node.op {
-        OpKind::DotGeneral { lhs_contract, rhs_contract } => {
-            Some(axis1(lhs_contract) && axis1(rhs_contract))
+        OpKind::DotGeneral { lhs_contract, rhs_contract }
+            if lhs_contract.len() == 1 && rhs_contract.len() == 1 =>
+        {
+            Some((lhs_contract[0], rhs_contract[0]))
         }
         _ => None,
     }
 }
 
+fn is_dot(node: &Node, lhs_axis: usize, rhs_axis: usize) -> bool {
+    matches!(&node.op, OpKind::DotGeneral { lhs_contract, rhs_contract }
+        if axes(lhs_contract, lhs_axis) && axes(rhs_contract, rhs_axis))
+}
+
 /// Match the factor chain ending at `g.nodes[i]` (the outer dot).
 fn match_chain(g: &Graph, uses: &[usize], i: usize) -> Option<Chain> {
     let outer = &g.nodes[i];
-    if !as_dot_axis1(outer)? {
-        return None;
-    }
+    let (la, ra) = dot_axes(outer)?;
     let (a, b) = (outer.inputs[0], outer.inputs[1]);
+    let dims_of = |id: NodeId| &g.nodes[id.0].dims;
 
     // conv chain: outer = dot(w1, transpose(dot(w0, x), [1,0,2,3]))
     let conv = || -> Option<Chain> {
         let w1 = a;
-        if g.nodes[w1.0].dims.len() != 2 {
+        if dims_of(w1).len() != 2 {
             return None;
         }
         let t = &g.nodes[b.0];
@@ -108,43 +144,109 @@ fn match_chain(g: &Graph, uses: &[usize], i: usize) -> Option<Chain> {
             return None;
         }
         let d1 = t.inputs[0];
-        if uses[d1.0] != 1 || !as_dot_axis1(&g.nodes[d1.0])? {
+        if uses[d1.0] != 1 || !is_dot(&g.nodes[d1.0], 1, 1) {
             return None;
         }
         let (w0, x) = (g.nodes[d1.0].inputs[0], g.nodes[d1.0].inputs[1]);
-        if g.nodes[w0.0].dims.len() != 2 || g.nodes[x.0].dims.len() != 4 {
+        if dims_of(w0).len() != 2 || dims_of(x).len() != 4 {
             return None;
         }
-        let (r, c) = (g.nodes[w0.0].dims[0], g.nodes[w0.0].dims[1]);
-        let s = g.nodes[w1.0].dims[0];
-        if g.nodes[w1.0].dims[1] != r {
+        let (r, c) = (dims_of(w0)[0], dims_of(w0)[1]);
+        let s = dims_of(w1)[0];
+        if dims_of(w1)[1] != r {
             return None;
         }
-        Some(Chain { w0, w1, x, x_contract: 1, dims: (r, c, s), conv_layout: true })
+        Some(Chain { w0, w1, x, x_contract: 1, dims: (r, c, s), layout: Layout::ConvFwd })
     };
 
     // fc chain: outer = dot(dot(x, w0), w1)
     let fc = || -> Option<Chain> {
         let w1 = b;
-        if g.nodes[w1.0].dims.len() != 2 || uses[a.0] != 1 {
+        if dims_of(w1).len() != 2 || uses[a.0] != 1 {
             return None;
         }
-        if !as_dot_axis1(&g.nodes[a.0])? {
+        if !is_dot(&g.nodes[a.0], 1, 1) {
             return None;
         }
         let (x, w0) = (g.nodes[a.0].inputs[0], g.nodes[a.0].inputs[1]);
-        if g.nodes[w0.0].dims.len() != 2 || g.nodes[x.0].dims.len() != 2 {
+        if dims_of(w0).len() != 2 || dims_of(x).len() != 2 {
             return None;
         }
-        let (r, c) = (g.nodes[w0.0].dims[0], g.nodes[w0.0].dims[1]);
-        let s = g.nodes[w1.0].dims[0];
-        if g.nodes[w1.0].dims[1] != r {
+        let (r, c) = (dims_of(w0)[0], dims_of(w0)[1]);
+        let s = dims_of(w1)[0];
+        if dims_of(w1)[1] != r {
             return None;
         }
-        Some(Chain { w0, w1, x, x_contract: 1, dims: (r, c, s), conv_layout: false })
+        Some(Chain { w0, w1, x, x_contract: 1, dims: (r, c, s), layout: Layout::FcFwd })
     };
 
-    conv().or_else(fc)
+    // conv backward chain: outer = dot(w0, dot(w1, δ, [0],[0]), [0],[0])
+    // with w0: [R,C] (outer weight), w1: [S,R] (inner weight), δ rank-4.
+    // Merged: M[S,C] = dot(w1, w0, [1],[0]); out = dot(M, δ, [0],[0]).
+    let conv_bwd = || -> Option<Chain> {
+        let w0 = a;
+        if dims_of(w0).len() != 2 || uses[b.0] != 1 {
+            return None;
+        }
+        if !is_dot(&g.nodes[b.0], 0, 0) {
+            return None;
+        }
+        let (w1, delta) = (g.nodes[b.0].inputs[0], g.nodes[b.0].inputs[1]);
+        if dims_of(w1).len() != 2 || dims_of(delta).len() != 4 {
+            return None;
+        }
+        let r = dims_of(w0)[0];
+        if dims_of(w1)[1] != r {
+            return None;
+        }
+        // gate roles: rank r, input side S (δ's width), output side C
+        let (c, s) = (dims_of(w1)[0], dims_of(w0)[1]);
+        Some(Chain {
+            w0,
+            w1,
+            x: delta,
+            x_contract: 0,
+            dims: (r, c, s),
+            layout: Layout::ConvBwd,
+        })
+    };
+
+    // fc backward chain: outer = dot(dot(δ, w1, [1],[0]), w0, [1],[0])
+    // with δ: [B,S], w1: [S,R], w0: [R,C].
+    // Merged: M[S,C] = dot(w1, w0, [1],[0]); out = dot(δ, M, [1],[0]).
+    let fc_bwd = || -> Option<Chain> {
+        let w0 = b;
+        if dims_of(w0).len() != 2 || uses[a.0] != 1 {
+            return None;
+        }
+        if !is_dot(&g.nodes[a.0], 1, 0) {
+            return None;
+        }
+        let (delta, w1) = (g.nodes[a.0].inputs[0], g.nodes[a.0].inputs[1]);
+        if dims_of(w1).len() != 2 || dims_of(delta).len() != 2 {
+            return None;
+        }
+        let r = dims_of(w1)[1];
+        if dims_of(w0)[0] != r {
+            return None;
+        }
+        let (c, s) = (dims_of(w1)[0], dims_of(w0)[1]);
+        Some(Chain {
+            w0,
+            w1,
+            x: delta,
+            x_contract: 1,
+            dims: (r, c, s),
+            layout: Layout::FcBwd,
+        })
+    };
+
+    match (la, ra) {
+        (1, 1) => conv().or_else(fc),
+        (0, 0) => conv_bwd(),
+        (1, 0) => fc_bwd(),
+        _ => None,
+    }
 }
 
 /// Output elements of one execution (`x` free dims): amortizes the
@@ -159,10 +261,11 @@ fn free_elems(g: &Graph, ch: &Chain) -> usize {
         .product()
 }
 
-/// Expected output shape of the fused contraction `dot(W, x)` (conv) or
-/// `dot(x, W)` (fc): must equal the original outer dot's shape.
+/// Expected output shape of the fused contraction: must equal the
+/// original outer dot's shape. Conv layouts put the merged-weight free
+/// axis first; fc layouts put it last.
 fn fused_dims(g: &Graph, ch: &Chain) -> Vec<usize> {
-    let s = g.nodes[ch.w1.0].dims[0];
+    let s = ch.dims.2;
     let x = &g.nodes[ch.x.0].dims;
     let free: Vec<usize> = x
         .iter()
@@ -170,20 +273,30 @@ fn fused_dims(g: &Graph, ch: &Chain) -> Vec<usize> {
         .filter(|(ax, _)| *ax != ch.x_contract)
         .map(|(_, &e)| e)
         .collect();
-    if ch.conv_layout {
-        let mut d = vec![s];
-        d.extend(free);
-        d
-    } else {
-        let mut d = free;
-        d.push(s);
-        d
+    match ch.layout {
+        Layout::ConvFwd | Layout::ConvBwd => {
+            let mut d = vec![s];
+            d.extend(free);
+            d
+        }
+        Layout::FcFwd | Layout::FcBwd => {
+            let mut d = free;
+            d.push(s);
+            d
+        }
     }
 }
 
 /// Apply re-merge fusion across the graph. Returns the rewritten graph
 /// and the number of factor pairs contracted.
 pub fn run(g: &Graph, lane: usize) -> (Graph, usize) {
+    let (t, _, _) = run_t(g, lane, g.nodes.len());
+    (t.graph, t.rewrites)
+}
+
+/// Traced variant: nodes `0..boundary` count as the forward segment.
+/// Returns the rewrite trace plus (forward fusions, backward fusions).
+pub(crate) fn run_t(g: &Graph, lane: usize, boundary: usize) -> (Traced, usize, usize) {
     let mut uses = vec![0usize; g.nodes.len()];
     for node in &g.nodes {
         for inp in &node.inputs {
@@ -195,6 +308,7 @@ pub fn run(g: &Graph, lane: usize) -> (Graph, usize) {
     let mut nodes: Vec<Node> = Vec::with_capacity(g.nodes.len());
     let mut map: Vec<NodeId> = Vec::with_capacity(g.nodes.len());
     let mut fusions = 0usize;
+    let (mut fus_fwd, mut fus_bwd) = (0usize, 0usize);
     for (i, node) in g.nodes.iter().enumerate() {
         let fused = match_chain(g, &uses, i).and_then(|ch| {
             let (r, c, s) = ch.dims;
@@ -204,17 +318,24 @@ pub fn run(g: &Graph, lane: usize) -> (Graph, usize) {
             if fused_dims(g, &ch) != node.dims {
                 return None; // defensive: never change the output shape
             }
-            // W = dot(W1, W0): [s, r] × [r, c] contracting r → [s, c]
+            // M = dot(W1, W0): [s, r] × [r, c] contracting r → [s, c]
+            // (for backward chains [s, c] is [S, C] — the weights' roles
+            // swap but the merged product is the same W1·W0)
             nodes.push(Node {
                 op: OpKind::DotGeneral { lhs_contract: vec![1], rhs_contract: vec![0] },
                 inputs: vec![map[ch.w1.0], map[ch.w0.0]],
-                dims: vec![s, c],
+                dims: vec![
+                    g.nodes[ch.w1.0].dims[0],
+                    g.nodes[ch.w0.0].dims[1],
+                ],
             });
             let m = NodeId(nodes.len() - 1);
-            let (inputs, lhs_contract, rhs_contract) = if ch.conv_layout {
-                (vec![m, map[ch.x.0]], vec![1], vec![ch.x_contract])
-            } else {
-                (vec![map[ch.x.0], m], vec![ch.x_contract], vec![1])
+            let x = map[ch.x.0];
+            let (inputs, lhs_contract, rhs_contract) = match ch.layout {
+                Layout::ConvFwd => (vec![m, x], vec![1], vec![1]),
+                Layout::FcFwd => (vec![x, m], vec![1], vec![1]),
+                Layout::ConvBwd => (vec![m, x], vec![0], vec![0]),
+                Layout::FcBwd => (vec![x, m], vec![1], vec![0]),
             };
             nodes.push(Node {
                 op: OpKind::DotGeneral { lhs_contract, rhs_contract },
@@ -222,6 +343,11 @@ pub fn run(g: &Graph, lane: usize) -> (Graph, usize) {
                 dims: node.dims.clone(),
             });
             fusions += 1;
+            if i < boundary {
+                fus_fwd += 1;
+            } else {
+                fus_bwd += 1;
+            }
             Some(NodeId(nodes.len() - 1))
         });
         let id = match fused {
@@ -238,10 +364,12 @@ pub fn run(g: &Graph, lane: usize) -> (Graph, usize) {
         map.push(id);
     }
     let root = map[g.root.0];
-    (
-        Graph { name: g.name.clone(), nodes, n_params: g.n_params, root },
-        fusions,
-    )
+    let traced = Traced {
+        graph: Graph { name: g.name.clone(), nodes, n_params: g.n_params, root },
+        rewrites: fusions,
+        map: map.into_iter().map(Some).collect(),
+    };
+    (traced, fus_fwd, fus_bwd)
 }
 
 #[cfg(test)]
@@ -370,6 +498,58 @@ mod tests {
         let want = run_graph(&g, &args);
         let got = run_graph(&g2, &args);
         crate::util::check::assert_allclose(&got, &want, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn conv_backward_chain_fuses_and_preserves_numerics() {
+        // the autograd emission for ∂L/∂x through a conv factor pair:
+        // dot(w0, dot(w1, δ, [0],[0]), [0],[0]) — weights act transposed
+        let (s, r, c, n, hw) = (8, 7, 8, 2, 4);
+        let b = GraphBuilder::new("convbwd");
+        let delta = b.parameter(0, &[s, n, hw, hw], "delta").unwrap();
+        let w1 = b.parameter(1, &[s, r], "w1").unwrap();
+        let w0 = b.parameter(2, &[r, c], "w0").unwrap();
+        let inner = w1.dot_general(&delta, &[0], &[0]).unwrap(); // [r,n,h,w]
+        let outer = w0.dot_general(&inner, &[0], &[0]).unwrap(); // [c,n,h,w]
+        let g = b.build(&outer).unwrap();
+        let (g2, fusions) = run(&g, 16);
+        assert_eq!(fusions, 1, "r=7 at lane 16 must fuse the backward chain");
+        let mut rng = Rng::new(11);
+        let mut mk = |dims: Vec<usize>| {
+            let len: usize = dims.iter().product();
+            HostTensor::new(dims, (0..len).map(|_| rng.normal_f32()).collect())
+        };
+        let args = vec![mk(vec![s, n, hw, hw]), mk(vec![s, r]), mk(vec![r, c])];
+        let want = run_graph(&g, &args);
+        let got = run_graph(&g2, &args);
+        crate::util::check::assert_allclose(&got, &want, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn fc_backward_chain_fuses_and_preserves_numerics() {
+        // dot(dot(δ, w1, [1],[0]), w0, [1],[0]) with δ: [B,S]
+        let (bsz, s, r, c) = (3, 8, 7, 8);
+        let b = GraphBuilder::new("fcbwd");
+        let delta = b.parameter(0, &[bsz, s], "delta").unwrap();
+        let w1 = b.parameter(1, &[s, r], "w1").unwrap();
+        let w0 = b.parameter(2, &[r, c], "w0").unwrap();
+        let inner = delta.dot_general(&w1, &[1], &[0]).unwrap(); // [B, r]
+        let outer = inner.dot_general(&w0, &[1], &[0]).unwrap(); // [B, c]
+        let g = b.build(&outer).unwrap();
+        let (g2, fusions) = run(&g, 16);
+        assert_eq!(fusions, 1);
+        let mut rng = Rng::new(13);
+        let mut mk = |dims: Vec<usize>| {
+            let len: usize = dims.iter().product();
+            HostTensor::new(dims, (0..len).map(|_| rng.normal_f32()).collect())
+        };
+        let args = vec![mk(vec![bsz, s]), mk(vec![s, r]), mk(vec![r, c])];
+        let want = run_graph(&g, &args);
+        let got = run_graph(&g2, &args);
+        crate::util::check::assert_allclose(&got, &want, 1e-4, 1e-4);
+        // the boundary split attributes the fusion to the backward side
+        let (_, fwd, bwd) = run_t(&g, 16, 2);
+        assert_eq!((fwd, bwd), (0, 1));
     }
 
     #[test]

@@ -89,6 +89,11 @@ fn translate(graph: &Graph) -> Result<xla::XlaComputation> {
                 let rhs = lookup(&ops, ins[1], nm)?.clone();
                 (lhs + rhs).map_err(err)?
             }
+            OpKind::Sub => {
+                let lhs = lookup(&ops, ins[0], nm)?.clone();
+                let rhs = lookup(&ops, ins[1], nm)?.clone();
+                (lhs - rhs).map_err(err)?
+            }
             OpKind::Mul => {
                 let lhs = lookup(&ops, ins[0], nm)?.clone();
                 let rhs = lookup(&ops, ins[1], nm)?.clone();
@@ -99,10 +104,31 @@ fn translate(graph: &Graph) -> Result<xla::XlaComputation> {
                 let rhs = lookup(&ops, ins[1], nm)?;
                 lhs.max(rhs).map_err(err)?
             }
+            OpKind::Gt => {
+                let lhs = lookup(&ops, ins[0], nm)?;
+                let rhs = lookup(&ops, ins[1], nm)?;
+                lhs.gt(rhs).map_err(err)?
+            }
+            OpKind::Select => {
+                let pred = lookup(&ops, ins[0], nm)?;
+                let on_true = lookup(&ops, ins[1], nm)?;
+                let on_false = lookup(&ops, ins[2], nm)?;
+                pred.select(on_true, on_false).map_err(err)?
+            }
             OpKind::ReduceMean { dims } => lookup(&ops, ins[0], nm)?
                 .reduce_mean(&i64s(dims), false)
                 .map_err(err)?,
+            OpKind::ReduceSum { dims } => lookup(&ops, ins[0], nm)?
+                .reduce_sum(&i64s(dims), false)
+                .map_err(err)?,
             OpKind::Sqrt => lookup(&ops, ins[0], nm)?.sqrt().map_err(err)?,
+            OpKind::Neg => lookup(&ops, ins[0], nm)?.neg().map_err(err)?,
+            OpKind::Exp => lookup(&ops, ins[0], nm)?.exp().map_err(err)?,
+            OpKind::Log => lookup(&ops, ins[0], nm)?.log().map_err(err)?,
+            OpKind::Recip => {
+                let one = b.c0(1.0).map_err(err)?;
+                (one / lookup(&ops, ins[0], nm)?.clone()).map_err(err)?
+            }
         };
         ops.push(Some(op));
     }

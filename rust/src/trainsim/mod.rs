@@ -1,17 +1,26 @@
 //! Fine-tuning simulation driver (the Tables 4-6 substitute workload —
 //! DESIGN.md §5): synthetic class-conditional image data, a from-scratch
 //! training run of the original model, one-shot decomposition of the
-//! trained weights, and per-variant fine-tuning through the AOT train-step
-//! artifacts. Everything after the python AOT step
-//! (`python python/compile/aot.py --out rust/artifacts`) is rust-only.
+//! trained weights, and per-variant fine-tuning.
+//!
+//! Two interchangeable training paths implement [`TrainStep`]:
+//! * the python-AOT artifacts (`runtime::artifacts::TrainSession`,
+//!   PJRT-only), and
+//! * the fully rust-native `train::NativeTrainSession` — graph-IR
+//!   autograd + SGD through the pass pipeline and the planned executor,
+//!   **zero artifacts** (`finetune_variant_native`).
 
 pub mod data;
 
 use anyhow::{anyhow, Result};
 
 use crate::decompose::params::Params;
+use crate::decompose::{Plan, Variant};
+use crate::model::Arch;
 use crate::runtime::artifacts::{ArtifactLibrary, ForwardModel, TrainSession};
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::netbuilder::{BnMode, BuiltNet};
+use crate::runtime::{CompileOptions, Engine, HostTensor, PassStats};
+use crate::train::{NativeTrainSession, SgdHyper};
 use crate::util::rng::Rng;
 use data::SynthData;
 
@@ -26,13 +35,42 @@ pub struct TrainReport {
     pub train_secs: f64,
     /// final train-set accuracy proxy (last-step batch accuracies averaged)
     pub train_acc: f32,
-    /// held-out accuracy measured through the forward artifact
+    /// held-out accuracy measured through the forward graph/artifact
     pub eval_acc: f32,
+}
+
+/// The common train-step surface of the AOT artifact session and the
+/// native session, so one training loop drives both.
+pub trait TrainStep {
+    /// One SGD step on a host batch; returns (loss, batch accuracy).
+    fn step(&mut self, x: &[f32], y: &[i32]) -> Result<(f32, f32)>;
+    /// The step graph's fixed batch size.
+    fn batch(&self) -> usize;
+}
+
+impl TrainStep for TrainSession {
+    fn step(&mut self, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        TrainSession::step(self, x, y)
+    }
+
+    fn batch(&self) -> usize {
+        self.spec.batch
+    }
+}
+
+impl TrainStep for NativeTrainSession {
+    fn step(&mut self, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        NativeTrainSession::step(self, x, y)
+    }
+
+    fn batch(&self) -> usize {
+        self.layout().batch
+    }
 }
 
 /// Train a session for `steps` steps on synthetic data; returns the curve.
 pub fn run_training(
-    sess: &mut TrainSession,
+    sess: &mut dyn TrainStep,
     gen: &SynthData,
     rng: &mut Rng,
     steps: usize,
@@ -42,7 +80,7 @@ pub fn run_training(
     let mut accs = Vec::new();
     let t0 = std::time::Instant::now();
     for step in 0..steps {
-        let (x, y) = gen.batch(rng, sess.spec.batch);
+        let (x, y) = gen.batch(rng, sess.batch());
         let (loss, acc) = sess.step(&x, &y)?;
         if step % log_every == 0 || step + 1 == steps {
             curve.push((step, loss));
@@ -56,26 +94,23 @@ pub fn run_training(
     Ok((curve, train_secs, train_acc))
 }
 
-/// Evaluate accuracy through a forward artifact (batch-stat BN semantics —
-/// consistent with how the train graphs normalise).
-pub fn evaluate(
-    model: &ForwardModel,
+/// Accuracy over `batches` synthetic batches through any logits
+/// function: `infer(x: [batch,3,hw,hw]) -> [batch, classes]`.
+pub fn evaluate_with(
+    mut infer: impl FnMut(&HostTensor) -> Result<HostTensor>,
     gen: &SynthData,
     rng: &mut Rng,
     batches: usize,
+    batch: usize,
+    classes: usize,
 ) -> Result<f32> {
-    let b = model.spec.batch;
     let mut correct = 0usize;
     let mut total = 0usize;
     for _ in 0..batches {
-        let (x, y) = gen.batch(rng, b);
-        let logits = model.infer(&HostTensor::new(
-            vec![b, 3, model.spec.hw, model.spec.hw],
-            x,
-        ))?;
-        let c = model.spec.classes;
+        let (x, y) = gen.batch(rng, batch);
+        let logits = infer(&HostTensor::new(vec![batch, 3, gen.hw, gen.hw], x))?;
         for (i, &label) in y.iter().enumerate() {
-            let row = &logits.data[i * c..(i + 1) * c];
+            let row = &logits.data[i * classes..(i + 1) * classes];
             let pred = row
                 .iter()
                 .enumerate()
@@ -89,6 +124,40 @@ pub fn evaluate(
         }
     }
     Ok(correct as f32 / total as f32)
+}
+
+/// Evaluate accuracy through a forward artifact (batch-stat BN semantics —
+/// consistent with how the train graphs normalise).
+pub fn evaluate(
+    model: &ForwardModel,
+    gen: &SynthData,
+    rng: &mut Rng,
+    batches: usize,
+) -> Result<f32> {
+    let (b, c) = (model.spec.batch, model.spec.classes);
+    evaluate_with(|x| model.infer(x), gen, rng, batches, b, c)
+}
+
+/// Evaluate accuracy through a compiled netbuilder graph.
+pub fn evaluate_built(
+    engine: &Engine,
+    net: &BuiltNet,
+    gen: &SynthData,
+    rng: &mut Rng,
+    batches: usize,
+) -> Result<f32> {
+    let (b, c) = (net.batch, net.classes);
+    evaluate_with(
+        |x| {
+            let xb = engine.upload(&x.data, &x.dims)?;
+            net.forward(&xb)?.to_host()
+        },
+        gen,
+        rng,
+        batches,
+        b,
+        c,
+    )
 }
 
 /// End-to-end fine-tuning experiment for one variant:
@@ -134,4 +203,66 @@ pub fn finetune_variant(
         train_acc,
         eval_acc,
     })
+}
+
+/// Fully native counterpart of [`finetune_variant`]: build the variant's
+/// train-step graph with `runtime::autograd` over the GIVEN `plan`,
+/// fine-tune (or train from scratch when `init` is `None`), then
+/// evaluate `eval_batches` held-out batches through a batch-stat-BN
+/// netbuilder forward — **no python, no AOT artifacts**. Also returns
+/// the step graph's `PassStats` (forward/backward segment split
+/// included) so callers can show where the training speedup comes from.
+#[allow(clippy::too_many_arguments)]
+pub fn finetune_variant_native(
+    engine: &Engine,
+    arch: &Arch,
+    variant: Variant,
+    plan: &Plan,
+    init: Option<&Params>,
+    gen: &SynthData,
+    rng: &mut Rng,
+    steps: usize,
+    batch: usize,
+    eval_batches: usize,
+    opts: &CompileOptions,
+) -> Result<(TrainReport, PassStats)> {
+    let mut sess = NativeTrainSession::new(
+        engine,
+        arch,
+        plan,
+        batch,
+        gen.hw,
+        variant == Variant::Freeze,
+        &SgdHyper::default(),
+        opts,
+        init,
+        0x5EED,
+    )?;
+    let stats = sess.pass_stats().clone();
+    let (loss_curve, train_secs, train_acc) =
+        run_training(&mut sess, gen, rng, steps, (steps / 20).max(1))?;
+    let tuned = sess.export_params()?;
+    let net = BuiltNet::compile_with_params_mode(
+        engine,
+        arch,
+        plan,
+        batch,
+        gen.hw,
+        &tuned,
+        opts,
+        BnMode::BatchStats,
+    )?;
+    let mut eval_rng = Rng::new(0xE7A1);
+    let eval_acc = evaluate_built(engine, &net, gen, &mut eval_rng, eval_batches)?;
+    Ok((
+        TrainReport {
+            variant: variant.name().to_string(),
+            steps,
+            loss_curve,
+            train_secs,
+            train_acc,
+            eval_acc,
+        },
+        stats,
+    ))
 }

@@ -1,0 +1,495 @@
+//! Gradient correctness suite for `runtime::autograd` and the native
+//! training subsystem.
+//!
+//! Contract under test:
+//! 1. every differentiable op's VJP matches central finite differences,
+//!    at O0 and O2 and at 1 and 4 threads (the pass pipeline and the
+//!    threaded executor must not change gradients beyond f32 noise);
+//! 2. `Gt` is non-differentiable by design — gradients do not flow
+//!    through masks;
+//! 3. every decomposition variant's full softmax-CE loss graph
+//!    grad-checks against finite differences on sampled parameters;
+//! 4. the acceptance criterion: at O2 the joint train-step graph has
+//!    strictly fewer nodes than at O0, and for the freeze variant the
+//!    re-merge fusion fires on **backward** factor chains
+//!    (`PassStats::train.fusions_bwd > 0`).
+
+use lrdx::decompose::{plan_variant, Variant};
+use lrdx::model::Arch;
+use lrdx::runtime::autograd::loss_and_grads;
+use lrdx::runtime::graph::{Graph, GraphBuilder, Op};
+use lrdx::runtime::{CompileOptions, Engine, HostTensor, OptLevel};
+use lrdx::train::{build_loss_graph, build_train_step, SgdHyper};
+use lrdx::util::rng::Rng;
+
+const EPS: f32 = 1e-2;
+const TOL: f32 = 1e-2;
+
+fn opt_matrix() -> Vec<CompileOptions> {
+    let mut out = Vec::new();
+    for level in [OptLevel::O0, OptLevel::O2] {
+        for threads in [1usize, 4] {
+            out.push(CompileOptions {
+                opt_level: level,
+                threads,
+                ..Default::default()
+            });
+        }
+    }
+    out
+}
+
+/// Check the analytic gradients of `fwd` (scalar root) wrt `wrt`
+/// parameter indices against central differences, under every compile
+/// configuration in `opt_matrix`. `probe_limit` caps how many entries
+/// per tensor are perturbed (0 = all).
+fn grad_check(fwd: &Graph, wrt: &[usize], args: &[HostTensor], probe_limit: usize) {
+    let engine = Engine::native();
+    // FD oracle: the forward graph compiled once at O0/serial
+    let oracle = engine.compile(fwd, &CompileOptions::o0()).unwrap();
+    let loss_of =
+        |args: &[HostTensor]| oracle.run_hosts(args).unwrap().remove(0).data[0];
+    let mut fd: Vec<Vec<(usize, f32)>> = Vec::new();
+    for &p in wrt {
+        let n = args[p].data.len();
+        let probes: Vec<usize> = if probe_limit == 0 || n <= probe_limit {
+            (0..n).collect()
+        } else {
+            // deterministic spread across the tensor
+            (0..probe_limit).map(|k| k * n / probe_limit).collect()
+        };
+        let mut rows = Vec::new();
+        for &e in &probes {
+            let mut up = args.to_vec();
+            up[p].data[e] += EPS;
+            let mut dn = args.to_vec();
+            dn[p].data[e] -= EPS;
+            let d = (loss_of(&up) - loss_of(&dn)) / (2.0 * EPS);
+            rows.push((e, d));
+        }
+        fd.push(rows);
+    }
+
+    let (joint, layout) = loss_and_grads(fwd, wrt).unwrap();
+    for opts in opt_matrix() {
+        let exe = engine.compile(&joint, &opts).unwrap();
+        let out = exe.run_hosts(args).unwrap().remove(0);
+        let parts = layout.unpack(&out.data);
+        for (slot, rows) in fd.iter().enumerate() {
+            let g = &parts[slot + 1]; // entry 0 is the loss
+            assert_eq!(g.dims, args[wrt[slot]].dims, "grad shape mismatch");
+            for &(e, want) in rows {
+                let got = g.data[e];
+                let err = (got - want).abs();
+                assert!(
+                    err <= TOL + TOL * want.abs(),
+                    "{}/{} t{}: param {} entry {e}: analytic {got} vs fd {want}",
+                    fwd.name,
+                    opts.opt_level.name(),
+                    opts.threads,
+                    wrt[slot]
+                );
+            }
+        }
+    }
+}
+
+fn tensor(rng: &mut Rng, dims: &[usize], lo: f32, hi: f32) -> HostTensor {
+    let n: usize = dims.iter().product();
+    HostTensor::new(
+        dims.to_vec(),
+        (0..n).map(|_| lo + (hi - lo) * rng.next_f32().abs().min(1.0)).collect(),
+    )
+}
+
+/// Weighted scalar loss: sum(out * proj) with `proj` a non-differentiated
+/// parameter — position-dependent weights catch layout/permutation bugs
+/// a plain sum would miss.
+fn weighted_loss(b: &GraphBuilder, out: &Op, proj_index: usize) -> Op {
+    let d = out.dims();
+    let proj = b.parameter(proj_index, &d, "proj").unwrap();
+    let prod = (out.clone() * proj).unwrap();
+    let all: Vec<usize> = (0..d.len()).collect();
+    if all.is_empty() {
+        prod
+    } else {
+        prod.reduce_sum(&all, false).unwrap()
+    }
+}
+
+fn proj_tensor(rng: &mut Rng, dims: &[usize]) -> HostTensor {
+    tensor(rng, dims, 0.5, 1.5)
+}
+
+#[test]
+fn grad_check_elementwise_binaries() {
+    let mut rng = Rng::new(0xAD01);
+    for op in ["add", "sub", "mul", "max"] {
+        let b = GraphBuilder::new(&format!("gc_{op}"));
+        let x = b.parameter(0, &[2, 3], "x").unwrap();
+        let y = b.parameter(1, &[2, 3], "y").unwrap();
+        let out = match op {
+            "add" => (x.clone() + y.clone()).unwrap(),
+            "sub" => (x.clone() - y.clone()).unwrap(),
+            "mul" => (x.clone() * y.clone()).unwrap(),
+            _ => x.max(&y).unwrap(),
+        };
+        let loss = weighted_loss(&b, &out, 2);
+        let g = b.build(&loss).unwrap();
+        // max: keep operands far apart so FD never crosses the kink
+        let xs = tensor(&mut rng, &[2, 3], 1.0, 2.0);
+        let mut ys = tensor(&mut rng, &[2, 3], 3.0, 4.0);
+        if op == "max" {
+            // alternate which side wins, with a wide margin
+            for (i, v) in ys.data.iter_mut().enumerate() {
+                *v = if i % 2 == 0 { 5.0 + i as f32 } else { -5.0 - i as f32 };
+            }
+        }
+        let proj = proj_tensor(&mut rng, &[2, 3]);
+        grad_check(&g, &[0, 1], &[xs, ys, proj], 0);
+    }
+}
+
+#[test]
+fn grad_check_scalar_broadcast_operand() {
+    // a rank-0 parameter exercises the reduce-to-scalar adjoint path
+    let mut rng = Rng::new(0xAD02);
+    let b = GraphBuilder::new("gc_scalar");
+    let x = b.parameter(0, &[2, 2], "x").unwrap();
+    let s = b.parameter(1, &[], "s").unwrap();
+    let out = ((x.clone() * s.clone()).unwrap() + s.clone()).unwrap();
+    let loss = weighted_loss(&b, &out, 2);
+    let g = b.build(&loss).unwrap();
+    let xs = tensor(&mut rng, &[2, 2], 0.5, 1.5);
+    let ss = HostTensor::new(vec![], vec![0.7]);
+    let proj = proj_tensor(&mut rng, &[2, 2]);
+    grad_check(&g, &[0, 1], &[xs, ss, proj], 0);
+}
+
+#[test]
+fn grad_check_unaries() {
+    let mut rng = Rng::new(0xAD03);
+    for op in ["neg", "exp", "log", "recip", "sqrt"] {
+        let b = GraphBuilder::new(&format!("gc_{op}"));
+        let x = b.parameter(0, &[5], "x").unwrap();
+        let out = match op {
+            "neg" => x.neg().unwrap(),
+            "exp" => x.exp().unwrap(),
+            "log" => x.log().unwrap(),
+            "recip" => x.recip().unwrap(),
+            _ => x.sqrt().unwrap(),
+        };
+        let loss = weighted_loss(&b, &out, 1);
+        let g = b.build(&loss).unwrap();
+        // keep inputs well away from the singularities at 0
+        let xs = tensor(&mut rng, &[5], 1.0, 2.0);
+        let proj = proj_tensor(&mut rng, &[5]);
+        grad_check(&g, &[0], &[xs, proj], 0);
+    }
+}
+
+#[test]
+fn grad_check_select_and_gt_blocks_gradient() {
+    let mut rng = Rng::new(0xAD04);
+    let b = GraphBuilder::new("gc_select");
+    let m = b.parameter(0, &[4], "m").unwrap();
+    let t = b.parameter(1, &[4], "t").unwrap();
+    let f = b.parameter(2, &[4], "f").unwrap();
+    let half = b.c0(0.5).unwrap();
+    let mask = m.gt(&half).unwrap();
+    let out = mask.select(&t, &f).unwrap();
+    let loss = weighted_loss(&b, &out, 3);
+    let g = b.build(&loss).unwrap();
+    let ms = HostTensor::new(vec![4], vec![0.1, 0.9, 0.2, 0.8]);
+    let ts = tensor(&mut rng, &[4], 1.0, 2.0);
+    let fs = tensor(&mut rng, &[4], -2.0, -1.0);
+    let proj = proj_tensor(&mut rng, &[4]);
+    grad_check(&g, &[1, 2], &[ms.clone(), ts.clone(), fs.clone(), proj.clone()], 0);
+
+    // the mask input is non-differentiable: its gradient is exactly zero
+    let (joint, layout) = loss_and_grads(&g, &[0]).unwrap();
+    let exe = Engine::native().compile(&joint, &CompileOptions::o0()).unwrap();
+    let out = exe.run_hosts(&[ms, ts, fs, proj]).unwrap().remove(0);
+    let parts = layout.unpack(&out.data);
+    assert!(parts[1].data.iter().all(|&v| v == 0.0), "Gt must block gradients");
+}
+
+#[test]
+fn grad_check_shape_ops() {
+    let mut rng = Rng::new(0xAD05);
+    // transpose (3-d), reshape, broadcast, broadcast_in_dim (unordered
+    // mapping), concat, stride-1 and strided slices
+    {
+        let b = GraphBuilder::new("gc_transpose");
+        let x = b.parameter(0, &[2, 3, 2], "x").unwrap();
+        let out = x.transpose(&[2, 0, 1]).unwrap();
+        let loss = weighted_loss(&b, &out, 1);
+        let g = b.build(&loss).unwrap();
+        let xs = tensor(&mut rng, &[2, 3, 2], 0.5, 1.5);
+        let proj = proj_tensor(&mut rng, &[2, 2, 3]);
+        grad_check(&g, &[0], &[xs, proj], 0);
+    }
+    {
+        let b = GraphBuilder::new("gc_reshape");
+        let x = b.parameter(0, &[2, 6], "x").unwrap();
+        let out = x.reshape(&[3, 4]).unwrap();
+        let loss = weighted_loss(&b, &out, 1);
+        let g = b.build(&loss).unwrap();
+        let xs = tensor(&mut rng, &[2, 6], 0.5, 1.5);
+        let proj = proj_tensor(&mut rng, &[3, 4]);
+        grad_check(&g, &[0], &[xs, proj], 0);
+    }
+    {
+        let b = GraphBuilder::new("gc_broadcast");
+        let s = b.parameter(0, &[], "s").unwrap();
+        let out = s.broadcast(&[2, 3]).unwrap();
+        let loss = weighted_loss(&b, &out, 1);
+        let g = b.build(&loss).unwrap();
+        let ss = HostTensor::new(vec![], vec![0.9]);
+        let proj = proj_tensor(&mut rng, &[2, 3]);
+        grad_check(&g, &[0], &[ss, proj], 0);
+    }
+    {
+        // mapping [2, 0]: operand axes land OUT OF ORDER in the output —
+        // the VJP must permute the reduced adjoint back
+        let b = GraphBuilder::new("gc_bid");
+        let x = b.parameter(0, &[2, 3], "x").unwrap();
+        let out = x.broadcast_in_dim(&[3, 5, 2], &[2, 0]).unwrap();
+        let loss = weighted_loss(&b, &out, 1);
+        let g = b.build(&loss).unwrap();
+        let xs = tensor(&mut rng, &[2, 3], 0.5, 1.5);
+        let proj = proj_tensor(&mut rng, &[3, 5, 2]);
+        grad_check(&g, &[0], &[xs, proj], 0);
+    }
+    {
+        let b = GraphBuilder::new("gc_concat");
+        let x = b.parameter(0, &[2, 2], "x").unwrap();
+        let y = b.parameter(1, &[2, 3], "y").unwrap();
+        let out = x.concat_in_dim(&[y.clone()], 1).unwrap();
+        let loss = weighted_loss(&b, &out, 2);
+        let g = b.build(&loss).unwrap();
+        let xs = tensor(&mut rng, &[2, 2], 0.5, 1.5);
+        let ys = tensor(&mut rng, &[2, 3], 0.5, 1.5);
+        let proj = proj_tensor(&mut rng, &[2, 5]);
+        grad_check(&g, &[0, 1], &[xs, ys, proj], 0);
+    }
+    for (start, stop, stride) in [(0usize, 4usize, 1usize), (1, 6, 2), (2, 7, 3)] {
+        let b = GraphBuilder::new("gc_slice");
+        let x = b.parameter(0, &[2, 7], "x").unwrap();
+        let out = x.slice_in_dim(start, stop, stride, 1).unwrap();
+        let loss = weighted_loss(&b, &out, 1);
+        let g = b.build(&loss).unwrap();
+        let xs = tensor(&mut rng, &[2, 7], 0.5, 1.5);
+        let proj = proj_tensor(&mut rng, &out.dims());
+        grad_check(&g, &[0], &[xs, proj], 0);
+    }
+}
+
+#[test]
+fn grad_check_reductions() {
+    let mut rng = Rng::new(0xAD06);
+    for (what, dims) in [("interior", vec![1usize]), ("all", vec![0, 1, 2])] {
+        for mean in [false, true] {
+            let b = GraphBuilder::new(&format!("gc_red_{what}_{mean}"));
+            let x = b.parameter(0, &[2, 3, 2], "x").unwrap();
+            let red = if mean {
+                x.reduce_mean(&dims, false).unwrap()
+            } else {
+                x.reduce_sum(&dims, false).unwrap()
+            };
+            let loss = weighted_loss(&b, &red, 1);
+            let g = b.build(&loss).unwrap();
+            let xs = tensor(&mut rng, &[2, 3, 2], 0.5, 1.5);
+            let proj = proj_tensor(&mut rng, &red.dims());
+            grad_check(&g, &[0], &[xs, proj], 0);
+        }
+    }
+}
+
+#[test]
+fn grad_check_dot_general_layouts() {
+    let mut rng = Rng::new(0xAD07);
+    // plain matmul [B,K]x[K,N]
+    {
+        let b = GraphBuilder::new("gc_mm");
+        let x = b.parameter(0, &[2, 3], "x").unwrap();
+        let w = b.parameter(1, &[3, 4], "w").unwrap();
+        let out = x.dot_general(&w, &[1], &[0]).unwrap();
+        let loss = weighted_loss(&b, &out, 2);
+        let g = b.build(&loss).unwrap();
+        let xs = tensor(&mut rng, &[2, 3], 0.5, 1.5);
+        let ws = tensor(&mut rng, &[3, 4], 0.5, 1.5);
+        let proj = proj_tensor(&mut rng, &[2, 4]);
+        grad_check(&g, &[0, 1], &[xs, ws, proj], 0);
+    }
+    // conv1x1 convention: [S,C] x [N,C,H,W] contracting axis 1 both sides
+    {
+        let b = GraphBuilder::new("gc_conv1x1");
+        let w = b.parameter(0, &[3, 2], "w").unwrap();
+        let x = b.parameter(1, &[2, 2, 2, 2], "x").unwrap();
+        let out = w.dot_general(&x, &[1], &[1]).unwrap();
+        let loss = weighted_loss(&b, &out, 2);
+        let g = b.build(&loss).unwrap();
+        let ws = tensor(&mut rng, &[3, 2], 0.5, 1.5);
+        let xs = tensor(&mut rng, &[2, 2, 2, 2], 0.5, 1.5);
+        let proj = proj_tensor(&mut rng, &[3, 2, 2, 2]);
+        grad_check(&g, &[0, 1], &[ws, xs, proj], 0);
+    }
+    // multi-axis contraction [2,3,4] x [3,4,5] over [1,2]x[0,1]
+    {
+        let b = GraphBuilder::new("gc_multi");
+        let x = b.parameter(0, &[2, 3, 4], "x").unwrap();
+        let w = b.parameter(1, &[3, 4, 5], "w").unwrap();
+        let out = x.dot_general(&w, &[1, 2], &[0, 1]).unwrap();
+        let loss = weighted_loss(&b, &out, 2);
+        let g = b.build(&loss).unwrap();
+        let xs = tensor(&mut rng, &[2, 3, 4], 0.2, 0.8);
+        let ws = tensor(&mut rng, &[3, 4, 5], 0.2, 0.8);
+        let proj = proj_tensor(&mut rng, &[2, 5]);
+        grad_check(&g, &[0, 1], &[xs, ws, proj], 1);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full loss graphs per decomposition variant
+// ---------------------------------------------------------------------------
+
+fn variant_loss_fixture(
+    variant: Variant,
+) -> (Graph, Vec<HostTensor>, Vec<usize>) {
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    let plan = plan_variant(&arch, variant, 2.0, 2, None).unwrap();
+    let (batch, hw) = (2usize, 8usize);
+    let (graph, specs) = build_loss_graph(&arch, &plan, batch, hw).unwrap();
+    let mut rng = Rng::new(0x5EED ^ variant as u64);
+    let mut args = vec![tensor(&mut rng, &[batch, 3, hw, hw], -1.0, 1.0)];
+    for spec in &specs {
+        args.push(HostTensor::new(
+            spec.shape.clone(),
+            lrdx::runtime::netbuilder::init_param_host(spec, &mut rng),
+        ));
+    }
+    // one-hot labels
+    let classes = arch.classes;
+    let mut onehot = vec![0f32; batch * classes];
+    for i in 0..batch {
+        onehot[i * classes + (i * 3) % classes] = 1.0;
+    }
+    args.push(HostTensor::new(vec![batch, classes], onehot));
+    // probe a spread of parameters: a conv weight, a bn scale, the head
+    let probe: Vec<usize> = {
+        let find = |suffix: &str| {
+            specs
+                .iter()
+                .position(|s| s.name.ends_with(suffix))
+                .map(|i| i + 1) // param index = spec index + 1
+        };
+        ["stem.conv.w", ".bn.g", "fc.b"]
+            .into_iter()
+            .filter_map(find)
+            .collect()
+    };
+    (graph, args, probe)
+}
+
+#[test]
+fn variant_loss_graphs_grad_check() {
+    for variant in
+        [Variant::Orig, Variant::Lrd, Variant::Merged, Variant::Branched]
+    {
+        let (graph, args, probe) = variant_loss_fixture(variant);
+        assert!(!probe.is_empty(), "{variant:?}: no probe params found");
+        grad_check(&graph, &probe, &args, 3);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: the joint train-step graph through the pipeline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn joint_train_graph_shrinks_at_o2_with_backward_fusions() {
+    let engine = Engine::native();
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    let plan = plan_variant(&arch, Variant::Freeze, 2.0, 2, None).unwrap();
+    let (graph, layout) =
+        build_train_step(&arch, &plan, 2, 8, true, &SgdHyper::default()).unwrap();
+    assert!(layout.fwd_nodes < graph.nodes.len(), "backward segment must exist");
+
+    let o0 = engine
+        .compile_train(&graph, &CompileOptions::o0(), layout.fwd_nodes)
+        .unwrap();
+    let o2 = engine
+        .compile_train(&graph, &CompileOptions::default(), layout.fwd_nodes)
+        .unwrap();
+    assert_eq!(o0.stats().nodes_after, graph.nodes.len());
+    assert!(
+        o2.stats().nodes_after < o0.stats().nodes_after,
+        "O2 must strictly shrink the joint graph: {} vs {}",
+        o2.stats().nodes_after,
+        o0.stats().nodes_after
+    );
+    let train = o2.stats().train.as_ref().expect("segment stats");
+    assert!(
+        train.fusions_bwd > 0,
+        "freeze variant must re-merge backward factor chains: {train:?}"
+    );
+    assert_eq!(
+        train.fwd_nodes_after + train.bwd_nodes_after,
+        o2.stats().nodes_after,
+        "segments must partition the graph: {train:?}"
+    );
+}
+
+#[test]
+fn joint_train_graph_runs_identically_across_levels_and_threads() {
+    // numerics: one native train step produces the same loss at every
+    // (level, threads) — O2 within f32 tolerance, threads bitwise
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    let plan = plan_variant(&arch, Variant::Freeze, 2.0, 2, None).unwrap();
+    let engine = Engine::native();
+    let gen = lrdx::trainsim::data::SynthData::new(8, arch.classes);
+    let mut losses = Vec::new();
+    for opts in opt_matrix() {
+        let mut sess = lrdx::train::NativeTrainSession::new(
+            &engine,
+            &arch,
+            &plan,
+            4,
+            8,
+            true,
+            &SgdHyper::default(),
+            &opts,
+            None,
+            0x11,
+        )
+        .unwrap();
+        let mut rng = Rng::new(42);
+        let (x, y) = gen.batch(&mut rng, 4);
+        let (loss, acc) = sess.step(&x, &y).unwrap();
+        assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+        losses.push((opts, loss));
+    }
+    let o0_loss = losses[0].1;
+    assert_eq!(losses[0].0.opt_level, OptLevel::O0);
+    for (opts, loss) in &losses {
+        // same level at different thread counts: bitwise identical
+        let peer = losses
+            .iter()
+            .find(|(o, _)| o.opt_level == opts.opt_level)
+            .unwrap()
+            .1;
+        assert_eq!(
+            loss.to_bits(),
+            peer.to_bits(),
+            "{}: thread count changed training bits",
+            opts.opt_level.name()
+        );
+        // O2 reassociates sums: close to O0, not bitwise
+        assert!(
+            (loss - o0_loss).abs() <= 1e-3 * (1.0 + o0_loss.abs()),
+            "{} loss {loss} vs O0 {o0_loss}",
+            opts.opt_level.name()
+        );
+    }
+}

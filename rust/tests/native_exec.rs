@@ -213,6 +213,55 @@ fn planned_executor_matches_reference_on_random_graphs() {
 }
 
 #[test]
+fn persistent_pool_is_bitwise_stable_across_runs_and_executables() {
+    // The per-executable worker pool replaces per-op thread spawning:
+    // many runs reuse the same parked workers, and two pooled
+    // executables driven concurrently from different OS threads must
+    // still be bitwise identical to the serial reference.
+    let engine = Engine::native();
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    let plan = plan_variant(&arch, Variant::Lrd, 2.0, 2, None).unwrap();
+    let build = |threads: usize| {
+        let opts = CompileOptions { threads, ..Default::default() };
+        BuiltNet::compile(&engine, &arch, &plan, BATCH, HW, 0x9001, &opts).unwrap()
+    };
+    let reference = build(1);
+    let x = det_input(BATCH, HW);
+    let xb = engine.upload(&x, &[BATCH, 3, HW, HW]).unwrap();
+    let want = bits(&reference.forward(&xb).unwrap().to_host().unwrap().data);
+
+    // 20 back-to-back runs through one pooled executable: the parked
+    // workers are reused every time and never leak state
+    let pooled = build(4);
+    for run in 0..20 {
+        let got = bits(&pooled.forward(&xb).unwrap().to_host().unwrap().data);
+        assert_eq!(want, got, "pooled run {run} diverged");
+    }
+
+    // two pooled executables hammered from two OS threads at once
+    // (compiled per-thread — engines are deliberately not Send): the
+    // pools are per-executable, so there is no cross-talk
+    std::thread::scope(|s| {
+        for threads in [2usize, 4] {
+            let (x, want, arch, plan) = (&x, &want, &arch, &plan);
+            s.spawn(move || {
+                let eng = Engine::native();
+                let opts = CompileOptions { threads, ..Default::default() };
+                let net =
+                    BuiltNet::compile(&eng, arch, plan, BATCH, HW, 0x9001, &opts)
+                        .unwrap();
+                let xb = eng.upload(x, &[BATCH, 3, HW, HW]).unwrap();
+                for _ in 0..10 {
+                    let got =
+                        bits(&net.forward(&xb).unwrap().to_host().unwrap().data);
+                    assert_eq!(want, &got, "concurrent pooled executable diverged");
+                }
+            });
+        }
+    });
+}
+
+#[test]
 fn arena_stats_surface_through_compile() {
     // Engine::compile must attach the native arena plan to PassStats and
     // peak must undercut the naive total on a real network.

@@ -1,0 +1,156 @@
+//! The native training subsystem end-to-end, plus the differential test
+//! against the python-AOT `TrainSession` artifacts.
+//!
+//! The artifact comparison needs a backend that can compile HLO text
+//! (`--features xla-pjrt` with a real XLA, plus generated artifacts); in
+//! the default native configuration it skips gracefully — the native
+//! path itself must always run, with **zero** artifacts on disk.
+
+use lrdx::decompose::Variant;
+use lrdx::model::Arch;
+use lrdx::runtime::artifacts::{ArtifactLibrary, TrainSession};
+use lrdx::runtime::{CompileOptions, Engine};
+use lrdx::train::{NativeTrainSession, SgdHyper};
+use lrdx::trainsim::{self, data::SynthData};
+use lrdx::util::rng::Rng;
+
+#[test]
+fn native_finetune_runs_with_zero_artifacts() {
+    // the full trainsim protocol — train, export, evaluate — on a tiny
+    // configuration, with nothing but the native engine
+    let engine = Engine::native();
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    let gen = SynthData::new(8, arch.classes);
+    let mut rng = Rng::new(9);
+    let plan = lrdx::decompose::plan_variant(&arch, Variant::Lrd, 2.0, 2, None).unwrap();
+    let (report, stats) = trainsim::finetune_variant_native(
+        &engine,
+        &arch,
+        Variant::Lrd,
+        &plan,
+        None,
+        &gen,
+        &mut rng,
+        6,
+        4,
+        2,
+        &CompileOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(report.steps, 6);
+    assert_eq!(report.loss_curve.len(), 6); // log_every = 1 at 6 steps
+    assert!(report.loss_curve.iter().all(|(_, l)| l.is_finite()));
+    assert!((0.0..=1.0).contains(&report.eval_acc));
+    // the step graph went through the segmented pipeline
+    let train = stats.train.expect("train-step graphs carry segment stats");
+    assert!(train.fwd_nodes_before > 0 && train.bwd_nodes_before > 0);
+}
+
+#[test]
+fn freeze_trains_fewer_tensors_and_keeps_frozen_factors_bitwise() {
+    let engine = Engine::native();
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    let plan =
+        lrdx::decompose::plan_variant(&arch, Variant::Freeze, 2.0, 2, None).unwrap();
+    let mut sess = NativeTrainSession::new(
+        &engine,
+        &arch,
+        &plan,
+        4,
+        8,
+        true,
+        &SgdHyper::default(),
+        &CompileOptions::default(),
+        None,
+        77,
+    )
+    .unwrap();
+    let before = sess.export_params().unwrap();
+    let gen = SynthData::new(8, arch.classes);
+    let mut rng = Rng::new(1);
+    for _ in 0..3 {
+        let (x, y) = gen.batch(&mut rng, 4);
+        sess.step(&x, &y).unwrap();
+    }
+    let after = sess.export_params().unwrap();
+    let mut frozen_checked = 0;
+    let mut trained_moved = 0;
+    for (name, t0) in &before {
+        let t1 = &after[name];
+        let same = t0.data == t1.data;
+        if lrdx::train::is_frozen_param(name) {
+            assert!(same, "{name} is frozen but moved");
+            frozen_checked += 1;
+        } else if !same {
+            trained_moved += 1;
+        }
+    }
+    assert!(frozen_checked > 0, "freeze plan must have frozen factors");
+    assert!(trained_moved > 0, "training must move trainable weights");
+}
+
+#[test]
+fn native_loss_curve_matches_artifact_trainsession_when_available() {
+    // Differential: identical init, identical batches → loss curves
+    // within tolerance. Skips (cleanly, with a message) when the AOT
+    // artifacts or an HLO-capable backend are absent.
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping artifact differential: no engine ({e:#})");
+            return;
+        }
+    };
+    let lib = match ArtifactLibrary::load("artifacts") {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("skipping artifact differential: no artifacts ({e:#})");
+            return;
+        }
+    };
+    let Some(tspec) = lib.find_by("resnet-mini", "lrd", "train") else {
+        eprintln!("skipping artifact differential: no resnet-mini/lrd train artifact");
+        return;
+    };
+    let mut art_sess = match TrainSession::load(&engine, tspec) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!(
+                "skipping artifact differential: backend cannot compile HLO ({e:#})"
+            );
+            return;
+        }
+    };
+    // identical starting point: the artifact's own weights
+    let init = art_sess.export_params().unwrap();
+    let arch = Arch::by_name(&tspec.arch).unwrap();
+    let native_engine = Engine::native();
+    let mut nat_sess = NativeTrainSession::new(
+        &native_engine,
+        &arch,
+        &tspec.plan,
+        tspec.batch,
+        tspec.hw,
+        tspec.variant == "freeze",
+        &SgdHyper::default(),
+        &CompileOptions::default(),
+        Some(&init),
+        0,
+    )
+    .unwrap();
+
+    let gen = SynthData::new(tspec.hw, tspec.classes);
+    let mut rng_a = Rng::new(0xD1FF);
+    let mut rng_b = Rng::new(0xD1FF);
+    for step in 0..10 {
+        let (xa, ya) = gen.batch(&mut rng_a, tspec.batch);
+        let (xb, yb) = gen.batch(&mut rng_b, tspec.batch);
+        assert_eq!(ya, yb);
+        let (la, _) = art_sess.step(&xa, &ya).unwrap();
+        let (lb, _) = nat_sess.step(&xb, &yb).unwrap();
+        assert!(
+            (la - lb).abs() <= 0.05 * (1.0 + la.abs()),
+            "step {step}: artifact loss {la} vs native loss {lb}"
+        );
+    }
+}
