@@ -11,7 +11,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 use lrdx::coordinator::batcher::BatchPolicy;
-use lrdx::coordinator::{BatchModel, Coordinator};
+use lrdx::coordinator::{Coordinator, ServableModel};
 use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel};
 use lrdx::trainsim::data::SynthData;
 use lrdx::util::cli::Args;
@@ -38,15 +38,17 @@ fn main() -> Result<()> {
     let mut coord = Coordinator::new(BatchPolicy {
         max_batch: 8,
         max_wait: Duration::from_millis(5),
+        ..Default::default()
     });
     for v in &variants {
         let (root2, arch2, v2) = (root.clone(), arch.clone(), v.clone());
-        coord.register(v, hw, 1, move |eng| {
+        coord.register(v, hw, 1, move |ctx| {
             let lib = ArtifactLibrary::load(&root2)?;
             let spec = lib
                 .find_by(&arch2, &v2, "forward")
                 .ok_or_else(|| anyhow!("no {arch2}/{v2} forward artifact"))?;
-            Ok(Box::new(ForwardModel::load(eng, spec)?) as Box<dyn BatchModel>)
+            Ok(Box::new(ForwardModel::load(ctx.engine(), spec)?)
+                as Box<dyn ServableModel>)
         })?;
         println!("registered {arch}/{v}");
     }

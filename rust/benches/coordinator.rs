@@ -1,81 +1,201 @@
-//! `cargo bench --bench coordinator` — serving-stack overhead + batching
-//! characteristics (the L3 §Perf gate): direct executable calls vs the
-//! full router/batcher path, and latency percentiles under load.
+//! `cargo bench --bench coordinator [-- --smoke]` — serving-stack bench:
+//! fixed-batch padding vs the shape-bucketed executable ladder on the
+//! merged O2 variant (synthetic resnet-mini netbuilder models, so no
+//! artifacts are needed and CI can run the smoke subset).
+//!
+//! Two load shapes per mode:
+//! * `light`     — sequential single blocking requests: the case a fixed
+//!                 batch-8 executable answers by burning 8× the FLOPs on
+//!                 padding, and a bucket ladder answers at batch 1;
+//! * `saturated` — a concurrent closed-loop burst: both modes batch up,
+//!                 so throughput should be comparable.
+//!
+//! Emits `BENCH_serve.json` (p50/p99 latency, throughput, padding-waste
+//! ratio, occupancy, sheds per mode × load); `--smoke` runs a small
+//! subset with the same schema (the CI schema gate).
+
 use std::time::{Duration, Instant};
 
 use lrdx::coordinator::batcher::BatchPolicy;
-use lrdx::coordinator::{BatchModel, Coordinator};
-use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel};
-use lrdx::runtime::Engine;
-use lrdx::trainsim::data::SynthData;
-use lrdx::util::rng::Rng;
+use lrdx::coordinator::{Coordinator, ServableModel};
+use lrdx::decompose::{plan_variant, Variant};
+use lrdx::model::Arch;
+use lrdx::runtime::netbuilder::{pow2_ladder, ServableNet};
+use lrdx::runtime::CompileOptions;
+use lrdx::util::json::Json;
 use lrdx::util::stats::Summary;
 
-fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("SKIP coordinator bench: run `python python/compile/aot.py --out rust/artifacts` first");
-        return;
-    }
-    let engine = Engine::cpu().expect("engine");
-    let lib = ArtifactLibrary::load("artifacts").expect("manifest");
-    let spec = lib.find_by("resnet-mini", "lrd", "forward").expect("artifact");
-    let direct = ForwardModel::load(&engine, spec).expect("load");
-    let b = spec.batch;
-    let img = 3 * spec.hw * spec.hw;
-    let gen = SynthData::new(spec.hw, spec.classes);
-    let mut rng = Rng::new(3);
-    let (xflat, _) = gen.batch(&mut rng, b);
+const HW: usize = 32;
+const BATCH: usize = 8;
 
-    // direct path
-    let n_batches = 40;
-    for _ in 0..4 {
-        direct.run_batch(&xflat).unwrap();
-    }
-    let t0 = Instant::now();
-    for _ in 0..n_batches {
-        direct.run_batch(&xflat).unwrap();
-    }
-    let direct_secs = t0.elapsed().as_secs_f64();
-    println!(
-        "direct:      {:>8.1} img/s ({:.3} ms/batch)",
-        (n_batches * b) as f64 / direct_secs,
-        direct_secs / n_batches as f64 * 1e3
+struct Row {
+    mode: &'static str,
+    load: &'static str,
+    p50_ms: f64,
+    p99_ms: f64,
+    req_per_sec: f64,
+    padding_waste: f64,
+    occupancy: f64,
+    sheds: u64,
+}
+
+/// One single-replica coordinator serving resnet-mini/merged at O2:
+/// `fixed` = one ceiling bucket (the pre-ladder pad-to-8 world),
+/// `bucketed` = the power-of-two ladder.
+fn build_coord(mode: &'static str) -> Coordinator {
+    let buckets = if mode == "fixed" { vec![BATCH] } else { pow2_ladder(BATCH) };
+    let mut coord = Coordinator::with_thread_budget(
+        BatchPolicy {
+            max_batch: BATCH,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+        1, // one kernel thread: stable, comparable timings
     );
-
-    // coordinated path, saturated
-    let mut coord = Coordinator::new(BatchPolicy {
-        max_batch: b,
-        max_wait: Duration::from_millis(2),
-    });
     coord
-        .register("m", spec.hw, 1, move |ctx| {
-            let lib = ArtifactLibrary::load("artifacts")?;
-            let spec = lib.find_by("resnet-mini", "lrd", "forward").unwrap();
-            Ok(Box::new(ForwardModel::load(ctx.engine(), spec)?) as Box<dyn BatchModel>)
+        .register("m", HW, 1, move |ctx| {
+            let arch = Arch::by_name("resnet-mini").expect("arch");
+            let plan = plan_variant(&arch, Variant::Merged, 2.0, 2, None)?;
+            let opts = CompileOptions { threads: ctx.threads(), ..Default::default() };
+            let mut net = ServableNet::compile(
+                ctx.engine(),
+                &arch,
+                &plan,
+                &buckets,
+                HW,
+                0x5EED,
+                &opts,
+            )?;
+            // pay every bucket's compile at registration: the measured
+            // windows must price serving, not lazy compilation
+            net.precompile_all()?;
+            Ok(Box::new(net) as Box<dyn ServableModel>)
         })
-        .unwrap();
-    coord.infer_blocking("m", xflat[..img].to_vec()).unwrap();
-    let t0 = Instant::now();
-    let pending: Vec<_> = (0..n_batches * b)
-        .map(|i| coord.infer("m", xflat[(i % b) * img..(i % b + 1) * img].to_vec()).unwrap())
-        .collect();
-    let mut lats = Vec::new();
-    for rx in pending {
-        lats.push(rx.recv().unwrap().unwrap().latency);
+        .expect("register");
+    coord
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let light_n = if smoke { 8 } else { 40 };
+    let sat_n = if smoke { 3 * BATCH } else { 15 * BATCH };
+    println!(
+        "serve bench: resnet-mini/merged O2 hw={HW} ceiling={BATCH} ({})",
+        if smoke { "smoke" } else { "full" }
+    );
+    println!(
+        "{:9} {:>10} {:>9} {:>9} {:>9} {:>7} {:>6} {:>6}",
+        "mode", "load", "p50 ms", "p99 ms", "req/s", "waste", "occ", "sheds"
+    );
+
+    let img = lrdx::util::det_input(1, HW);
+    let mut rows: Vec<Row> = Vec::new();
+    for mode in ["fixed", "bucketed"] {
+        for load in ["light", "saturated"] {
+            let coord = build_coord(mode);
+            // warmup: compiles the single-request path of either mode
+            for _ in 0..3 {
+                coord.infer_blocking("m", img.clone()).expect("warmup");
+            }
+            // baseline snapshot so every reported field covers ONLY the
+            // measured window (warmup batches excluded via deltas)
+            let base = coord.metrics.snapshot();
+            let mut lats = Vec::with_capacity(light_n.max(sat_n));
+            let t0 = Instant::now();
+            let served = match load {
+                "light" => {
+                    for _ in 0..light_n {
+                        let r = coord.infer_blocking("m", img.clone()).expect("infer");
+                        lats.push(r.latency);
+                    }
+                    light_n
+                }
+                _ => {
+                    let pending: Vec<_> = (0..sat_n)
+                        .map(|_| coord.infer("m", img.clone()).expect("infer"))
+                        .collect();
+                    for rx in pending {
+                        lats.push(rx.recv().expect("response").expect("ok").latency);
+                    }
+                    sat_n
+                }
+            };
+            let secs = t0.elapsed().as_secs_f64();
+            let snap = coord.metrics.snapshot();
+            let d_items = snap.batch_items - base.batch_items;
+            let d_cap = snap.bucket_capacity - base.bucket_capacity;
+            let d_batches = snap.batches - base.batches;
+            let s = Summary::of(&lats);
+            let row = Row {
+                mode,
+                load,
+                p50_ms: s.p50 * 1e3,
+                p99_ms: s.p99 * 1e3,
+                req_per_sec: served as f64 / secs,
+                padding_waste: if d_cap == 0 {
+                    0.0
+                } else {
+                    1.0 - d_items as f64 / d_cap as f64
+                },
+                occupancy: if d_batches == 0 {
+                    0.0
+                } else {
+                    d_items as f64 / d_batches as f64
+                },
+                sheds: snap.sheds - base.sheds,
+            };
+            println!(
+                "{:9} {:>10} {:>9.2} {:>9.2} {:>9.1} {:>6.1}% {:>6.2} {:>6}",
+                row.mode,
+                row.load,
+                row.p50_ms,
+                row.p99_ms,
+                row.req_per_sec,
+                row.padding_waste * 100.0,
+                row.occupancy,
+                row.sheds
+            );
+            rows.push(row);
+            coord.shutdown();
+        }
     }
-    let coord_secs = t0.elapsed().as_secs_f64();
-    let s = Summary::of(&lats);
-    println!(
-        "coordinated: {:>8.1} img/s (overhead {:+.1}%)",
-        (n_batches * b) as f64 / coord_secs,
-        (coord_secs / direct_secs - 1.0) * 100.0
-    );
-    println!(
-        "latency: p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
-        s.p50 * 1e3,
-        s.p90 * 1e3,
-        s.p99 * 1e3
-    );
-    println!("{}", coord.metrics.snapshot().render());
-    coord.shutdown();
+
+    let fixed_light = rows.iter().find(|r| r.mode == "fixed" && r.load == "light");
+    let bucketed_light = rows.iter().find(|r| r.mode == "bucketed" && r.load == "light");
+    if let (Some(f), Some(b)) = (fixed_light, bucketed_light) {
+        println!(
+            "single-request p50: bucketed {:.2} ms vs fixed-batch-{BATCH} {:.2} ms ({:.2}x)",
+            b.p50_ms,
+            f.p50_ms,
+            f.p50_ms / b.p50_ms
+        );
+    }
+
+    let jrows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj_from(vec![
+                ("mode", Json::Str(r.mode.to_string())),
+                ("load", Json::Str(r.load.to_string())),
+                ("p50_ms", Json::Num(r.p50_ms)),
+                ("p99_ms", Json::Num(r.p99_ms)),
+                ("req_per_sec", Json::Num(r.req_per_sec)),
+                ("padding_waste", Json::Num(r.padding_waste)),
+                ("occupancy", Json::Num(r.occupancy)),
+                ("sheds", Json::Num(r.sheds as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj_from(vec![
+        ("arch", Json::Str("resnet-mini".to_string())),
+        ("variant", Json::Str("merged".to_string())),
+        ("opt_level", Json::Str("O2".to_string())),
+        ("hw", Json::Num(HW as f64)),
+        ("ceiling_batch", Json::Num(BATCH as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("rows", Json::Arr(jrows)),
+    ]);
+    std::fs::write("BENCH_serve.json", doc.render()).expect("write BENCH_serve.json");
+    println!("(saved BENCH_serve.json)");
 }

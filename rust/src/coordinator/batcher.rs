@@ -1,6 +1,8 @@
 //! Dynamic batching policy: collect up to `max_batch` requests, waiting at
 //! most `max_wait` after the first arrival (size-or-deadline flush — the
-//! standard serving policy, cf. vllm router / TF-Serving batcher).
+//! standard serving policy, cf. vllm router / TF-Serving batcher), with
+//! **bucket-aware** early flushing for workers that hold an executable
+//! ladder instead of one fixed-batch executable.
 //!
 //! Pure std-mpsc logic, fully testable without XLA.
 
@@ -11,11 +13,19 @@ use std::time::{Duration, Instant};
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Bound on queued requests per replica. `Coordinator::infer` sheds
+    /// load with an explicit error instead of letting a queue grow
+    /// without bound when a replica is this far behind.
+    pub queue_cap: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 1024,
+        }
     }
 }
 
@@ -28,8 +38,30 @@ pub enum Collected<T> {
 }
 
 /// Block for the first item, then keep collecting until the batch is full
-/// or `max_wait` has elapsed since the first item arrived.
+/// or `max_wait` has elapsed since the first item arrived. Equivalent to
+/// [`collect_bucketed`] with the single bucket `[max_batch]`.
 pub fn collect<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Collected<T> {
+    collect_bucketed(rx, policy, &[policy.max_batch])
+}
+
+/// Bucket-aware collection for a worker holding an executable ladder.
+///
+/// Inside a bucket the pending set pads up to the covering bucket anyway,
+/// so growing it is free: wait out the deadline exactly like `collect` —
+/// and once the deadline has expired, still take whatever is *already
+/// queued* (non-blocking) up to the boundary, since dispatching a padded
+/// slot while a real request sits in the queue helps no one. *At* a
+/// bucket boundary the set already dispatches with zero padding, and one
+/// more request would jump to the next bucket — roughly doubling the
+/// batch's compute; paying deadline wait for that is only worth it when
+/// arrivals are already outpacing the ladder, in which case they are
+/// sitting in the queue. So at a boundary we likewise only drain what is
+/// queued and flush the moment the queue runs dry.
+pub fn collect_bucketed<T>(
+    rx: &Receiver<T>,
+    policy: &BatchPolicy,
+    buckets: &[usize],
+) -> Collected<T> {
     let first = match rx.recv() {
         Ok(item) => item,
         Err(_) => return Collected::Closed,
@@ -39,12 +71,18 @@ pub fn collect<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Collected<T> {
     batch.push(first);
     while batch.len() < policy.max_batch {
         let now = Instant::now();
-        if now >= deadline {
-            break;
+        if buckets.contains(&batch.len()) || now >= deadline {
+            // boundary or expired deadline: free fills only — never wait
+            match rx.try_recv() {
+                Ok(item) => batch.push(item),
+                Err(_) => break,
+            }
+            continue;
         }
         match rx.recv_timeout(deadline - now) {
             Ok(item) => batch.push(item),
-            Err(RecvTimeoutError::Timeout) => break,
+            // re-check: the expired-deadline branch drains the queue
+            Err(RecvTimeoutError::Timeout) => continue,
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
@@ -62,7 +100,11 @@ mod tests {
         for i in 0..20 {
             tx.send(i).unwrap();
         }
-        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) };
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(50),
+            ..Default::default()
+        };
         match collect(&rx, &policy) {
             Collected::Batch(b) => {
                 assert_eq!(b, (0..8).collect::<Vec<_>>());
@@ -81,7 +123,11 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         tx.send(1).unwrap();
         tx.send(2).unwrap();
-        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) };
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(10),
+            ..Default::default()
+        };
         let t0 = Instant::now();
         match collect(&rx, &policy) {
             Collected::Batch(b) => {
@@ -105,7 +151,11 @@ mod tests {
     #[test]
     fn late_arrivals_join_within_window() {
         let (tx, rx) = mpsc::channel();
-        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(60) };
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(60),
+            ..Default::default()
+        };
         let sender = std::thread::spawn(move || {
             tx.send(1).unwrap();
             std::thread::sleep(Duration::from_millis(15));
@@ -128,7 +178,11 @@ mod tests {
         for i in 0..4 {
             tx.send(i).unwrap();
         }
-        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(250) };
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(250),
+            ..Default::default()
+        };
         let t0 = Instant::now();
         match collect(&rx, &policy) {
             Collected::Batch(b) => assert_eq!(b.len(), 4),
@@ -147,7 +201,11 @@ mod tests {
         // deadline never applies.
         let (tx, rx) = mpsc::channel();
         tx.send(7).unwrap();
-        let policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_secs(10) };
+        let policy = BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_secs(10),
+            ..Default::default()
+        };
         let t0 = Instant::now();
         match collect(&rx, &policy) {
             Collected::Batch(b) => assert_eq!(b, vec![7]),
@@ -162,7 +220,11 @@ mod tests {
         // 1-batch once max_wait has elapsed (not hang for more items).
         let (tx, rx) = mpsc::channel();
         tx.send(42).unwrap();
-        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(15) };
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(15),
+            ..Default::default()
+        };
         let t0 = Instant::now();
         match collect(&rx, &policy) {
             Collected::Batch(b) => assert_eq!(b, vec![42]),
@@ -172,6 +234,79 @@ mod tests {
         assert!(waited >= Duration::from_millis(14), "flushed early: {waited:?}");
         assert!(waited < Duration::from_secs(2), "deadline overshot: {waited:?}");
         drop(tx);
+    }
+
+    #[test]
+    fn bucket_boundary_flushes_without_deadline_wait() {
+        // two queued items on ladder [1, 2, 4, 8]: the drain stops at the
+        // 2-bucket boundary immediately, despite a huge max_wait — the
+        // set already dispatches with zero padding.
+        let (tx, rx) = mpsc::channel();
+        tx.send(0).unwrap();
+        tx.send(1).unwrap();
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        match collect_bucketed(&rx, &policy, &[1, 2, 4, 8]) {
+            Collected::Batch(b) => assert_eq!(b, vec![0, 1]),
+            Collected::Closed => panic!(),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(1), "boundary must not wait");
+        drop(tx);
+    }
+
+    #[test]
+    fn inside_a_bucket_waits_for_the_deadline() {
+        // one item strictly inside the 4-bucket of ladder [4, 8]: the pad
+        // slots are free, so collect honours max_wait for late arrivals.
+        let (tx, rx) = mpsc::channel();
+        tx.send(7).unwrap();
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        match collect_bucketed(&rx, &policy, &[4, 8]) {
+            Collected::Batch(b) => assert_eq!(b, vec![7]),
+            Collected::Closed => panic!(),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(19));
+        drop(tx);
+    }
+
+    #[test]
+    fn bucketed_collection_never_exceeds_max_batch_property() {
+        crate::util::check::property(20, |rng| {
+            let (tx, rx) = mpsc::channel();
+            let n = rng.range(1, 40);
+            for i in 0..n {
+                tx.send(i).unwrap();
+            }
+            let max_batch = rng.range(1, 12);
+            // random strictly-ascending ladder ending at max_batch
+            let mut buckets: Vec<usize> =
+                (1..max_batch).filter(|_| rng.range(0, 1) == 0).collect();
+            buckets.push(max_batch);
+            let policy = BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            };
+            match collect_bucketed(&rx, &policy, &buckets) {
+                Collected::Batch(b) => {
+                    assert!(!b.is_empty() && b.len() <= max_batch);
+                    // FIFO order preserved
+                    for w in b.windows(2) {
+                        assert!(w[0] < w[1]);
+                    }
+                }
+                Collected::Closed => panic!(),
+            }
+        });
     }
 
     #[test]
@@ -185,6 +320,7 @@ mod tests {
             let policy = BatchPolicy {
                 max_batch: rng.range(1, 12),
                 max_wait: Duration::from_millis(1),
+                ..Default::default()
             };
             match collect(&rx, &policy) {
                 Collected::Batch(b) => {

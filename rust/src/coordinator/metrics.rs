@@ -1,5 +1,10 @@
-//! Serving metrics: lock-free counters + a sampled latency reservoir.
+//! Serving metrics: lock-free counters + a sampled latency reservoir,
+//! plus the bucketed-serving instrumentation: per-bucket occupancy, the
+//! padding-waste ratio (real requests vs dispatched bucket capacity), a
+//! queue-depth gauge sampled at admission, and load-shed / replica-death
+//! counters.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -12,17 +17,43 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batch_items: AtomicU64,
     pub errors: AtomicU64,
+    /// Requests rejected at admission because the target replica's
+    /// bounded queue was full.
+    pub sheds: AtomicU64,
+    /// Worker threads that died (panicked) while serving.
+    pub replica_deaths: AtomicU64,
+    /// Σ bucket capacity over all dispatched batches (`batch_items /
+    /// bucket_capacity` is the fill ratio; `1 -` it the padding waste).
+    bucket_capacity: AtomicU64,
+    /// Deepest queue observed at admission (queued + executing).
+    max_queue_depth: AtomicU64,
+    /// bucket size -> (batches dispatched, real requests carried)
+    bucket_counts: Mutex<BTreeMap<usize, (u64, u64)>>,
+    /// queue depth of the chosen replica at each admission. A RING (the
+    /// `usize` is the overwrite cursor), not a first-N reservoir: depth
+    /// is a time-varying gauge, so the summary must track the most
+    /// recent window — a first-N capture would freeze on a quiet warmup
+    /// period and report p99≈0 during the saturation that matters.
+    queue_depths: Mutex<(Vec<f64>, usize)>,
     /// end-to-end request latencies, seconds (bounded reservoir); covers
     /// BOTH successful and errored requests — a failed request still
     /// occupied the queue and the worker for its full latency
     latencies: Mutex<Vec<f64>>,
-    /// latencies of errored requests only, seconds (bounded reservoir)
+    /// latencies of errored requests only, seconds (bounded reservoir);
+    /// shed requests land here too (their latency is the admission time)
     error_latencies: Mutex<Vec<f64>>,
     /// time spent inside model execution, seconds
     exec_time: Mutex<Vec<f64>>,
 }
 
 const RESERVOIR: usize = 65_536;
+
+fn push_bounded(reservoir: &Mutex<Vec<f64>>, sample: f64) {
+    let mut r = reservoir.lock().unwrap();
+    if r.len() < RESERVOIR {
+        r.push(sample);
+    }
+}
 
 impl Metrics {
     pub fn new() -> Metrics {
@@ -33,21 +64,37 @@ impl Metrics {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn record_batch(&self, items: usize, exec_secs: f64) {
+    /// One dispatched batch: `items` real requests carried by a `bucket`-
+    /// sized executable (`bucket - items` slots were padding).
+    pub fn record_batch(&self, items: usize, bucket: usize, exec_secs: f64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_items.fetch_add(items as u64, Ordering::Relaxed);
-        let mut t = self.exec_time.lock().unwrap();
-        if t.len() < RESERVOIR {
-            t.push(exec_secs);
+        self.bucket_capacity.fetch_add(bucket as u64, Ordering::Relaxed);
+        {
+            let mut bc = self.bucket_counts.lock().unwrap();
+            let e = bc.entry(bucket).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += items as u64;
         }
+        push_bounded(&self.exec_time, exec_secs);
+    }
+
+    /// Queue depth of the replica a request was just admitted to.
+    pub fn record_queue_depth(&self, depth: usize) {
+        self.max_queue_depth.fetch_max(depth as u64, Ordering::Relaxed);
+        let mut q = self.queue_depths.lock().unwrap();
+        let (buf, cursor) = &mut *q;
+        if buf.len() < RESERVOIR {
+            buf.push(depth as f64);
+        } else {
+            buf[*cursor % RESERVOIR] = depth as f64;
+        }
+        *cursor = cursor.wrapping_add(1);
     }
 
     pub fn record_response(&self, latency_secs: f64) {
         self.responses.fetch_add(1, Ordering::Relaxed);
-        let mut l = self.latencies.lock().unwrap();
-        if l.len() < RESERVOIR {
-            l.push(latency_secs);
-        }
+        push_bounded(&self.latencies, latency_secs);
     }
 
     /// An errored request still has an end-to-end latency; dropping it
@@ -56,33 +103,81 @@ impl Metrics {
     /// shared latency reservoir and the error-only reservoir.
     pub fn record_error_response(&self, latency_secs: f64) {
         self.errors.fetch_add(1, Ordering::Relaxed);
-        let mut l = self.latencies.lock().unwrap();
-        if l.len() < RESERVOIR {
-            l.push(latency_secs);
-        }
-        drop(l);
-        let mut e = self.error_latencies.lock().unwrap();
-        if e.len() < RESERVOIR {
-            e.push(latency_secs);
-        }
+        push_bounded(&self.latencies, latency_secs);
+        push_bounded(&self.error_latencies, latency_secs);
+    }
+
+    /// A request shed at admission (bounded queue full). The rejection is
+    /// an explicit error the caller sees, so it lands in the error-latency
+    /// reservoir — but NOT in the shared latency histogram: a
+    /// microsecond-latency rejection would flatter p50 exactly when the
+    /// system is saturated.
+    pub fn record_shed(&self, latency_secs: f64) {
+        self.sheds.fetch_add(1, Ordering::Relaxed);
+        push_bounded(&self.error_latencies, latency_secs);
+    }
+
+    /// A request rejected at admission for a reason other than a full
+    /// queue (today: every replica of the model is dead). Counts as an
+    /// error the caller saw — keeping requests == responses + errors +
+    /// sheds — with the same histogram treatment as a shed: error-latency
+    /// reservoir only, never the shared latency histogram.
+    pub fn record_rejected(&self, latency_secs: f64) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        push_bounded(&self.error_latencies, latency_secs);
+    }
+
+    /// A worker thread died (panicked) while serving.
+    pub fn record_replica_death(&self) {
+        self.replica_deaths.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> MetricsReport {
         let latencies = self.latencies.lock().unwrap().clone();
         let error_latencies = self.error_latencies.lock().unwrap().clone();
         let exec = self.exec_time.lock().unwrap().clone();
+        let queue_depths = self.queue_depths.lock().unwrap().0.clone();
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batch_items.load(Ordering::Relaxed);
+        let capacity = self.bucket_capacity.load(Ordering::Relaxed);
+        let buckets = self
+            .bucket_counts
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&bucket, &(n, carried))| BucketStat {
+                bucket,
+                batches: n,
+                items: carried,
+                fill: if n == 0 {
+                    0.0
+                } else {
+                    carried as f64 / (n * bucket as u64) as f64
+                },
+            })
+            .collect();
         MetricsReport {
             requests: self.requests.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            sheds: self.sheds.load(Ordering::Relaxed),
+            replica_deaths: self.replica_deaths.load(Ordering::Relaxed),
             batches,
+            batch_items: items,
+            bucket_capacity: capacity,
             mean_batch_occupancy: if batches == 0 {
                 0.0
             } else {
                 items as f64 / batches as f64
             },
+            padding_waste: if capacity == 0 {
+                0.0
+            } else {
+                1.0 - items as f64 / capacity as f64
+            },
+            buckets,
+            max_queue_depth: self.max_queue_depth.load(Ordering::Relaxed),
+            queue_depth: (!queue_depths.is_empty()).then(|| Summary::of(&queue_depths)),
             latency: (!latencies.is_empty()).then(|| Summary::of(&latencies)),
             error_latency: (!error_latencies.is_empty())
                 .then(|| Summary::of(&error_latencies)),
@@ -91,16 +186,44 @@ impl Metrics {
     }
 }
 
+/// Per-bucket dispatch accounting.
+#[derive(Clone, Debug)]
+pub struct BucketStat {
+    pub bucket: usize,
+    /// Batches dispatched at this bucket size.
+    pub batches: u64,
+    /// Real requests those batches carried.
+    pub items: u64,
+    /// `items / (batches * bucket)` — 1.0 means zero padding.
+    pub fill: f64,
+}
+
 #[derive(Debug)]
 pub struct MetricsReport {
     pub requests: u64,
     pub responses: u64,
     pub errors: u64,
+    pub sheds: u64,
+    pub replica_deaths: u64,
     pub batches: u64,
+    /// Σ real requests over all dispatched batches (raw counter — lets
+    /// callers diff two snapshots, e.g. to exclude warmup traffic).
+    pub batch_items: u64,
+    /// Σ dispatched bucket capacity (raw counter, ditto).
+    pub bucket_capacity: u64,
     pub mean_batch_occupancy: f64,
-    /// All completed requests, errored ones included.
+    /// Fraction of dispatched bucket slots that carried padding instead
+    /// of a real request (0.0 = every slot was real work).
+    pub padding_waste: f64,
+    /// Occupancy histogram per bucket size, ascending.
+    pub buckets: Vec<BucketStat>,
+    /// Deepest replica queue observed at admission.
+    pub max_queue_depth: u64,
+    /// Queue depth of the chosen replica at each admission.
+    pub queue_depth: Option<Summary>,
+    /// All completed requests, errored ones included (shed excluded).
     pub latency: Option<Summary>,
-    /// Errored requests only.
+    /// Errored requests, shed ones included.
     pub error_latency: Option<Summary>,
     pub exec: Option<Summary>,
 }
@@ -108,9 +231,34 @@ pub struct MetricsReport {
 impl MetricsReport {
     pub fn render(&self) -> String {
         let mut s = format!(
-            "requests={} responses={} errors={} batches={} occupancy={:.2}",
-            self.requests, self.responses, self.errors, self.batches, self.mean_batch_occupancy
+            "requests={} responses={} errors={} sheds={} deaths={} \
+             batches={} occupancy={:.2} padding-waste={:.1}%",
+            self.requests,
+            self.responses,
+            self.errors,
+            self.sheds,
+            self.replica_deaths,
+            self.batches,
+            self.mean_batch_occupancy,
+            self.padding_waste * 100.0
         );
+        if !self.buckets.is_empty() {
+            s.push_str("\nbuckets ");
+            for b in &self.buckets {
+                s.push_str(&format!(
+                    " {}: {} batches (fill {:.0}%)",
+                    b.bucket,
+                    b.batches,
+                    b.fill * 100.0
+                ));
+            }
+        }
+        if let Some(q) = &self.queue_depth {
+            s.push_str(&format!(
+                "\nqueue    p50={:.1} p99={:.1} max={}",
+                q.p50, q.p99, self.max_queue_depth
+            ));
+        }
         if let Some(l) = &self.latency {
             s.push_str(&format!(
                 "\nlatency  p50={:.2}ms p90={:.2}ms p99={:.2}ms",
@@ -142,13 +290,15 @@ mod tests {
         let m = Metrics::new();
         m.record_request();
         m.record_request();
-        m.record_batch(2, 0.010);
+        m.record_batch(2, 2, 0.010);
         m.record_response(0.011);
         m.record_response(0.013);
         let r = m.snapshot();
         assert_eq!(r.requests, 2);
         assert_eq!(r.responses, 2);
         assert_eq!(r.batches, 1);
+        assert_eq!(r.batch_items, 2);
+        assert_eq!(r.bucket_capacity, 2);
         assert_eq!(r.mean_batch_occupancy, 2.0);
         assert!(r.latency.unwrap().p50 > 0.010);
     }
@@ -159,7 +309,10 @@ mod tests {
         assert!(r.latency.is_none());
         assert!(r.error_latency.is_none());
         assert!(r.exec.is_none());
+        assert!(r.queue_depth.is_none());
+        assert!(r.buckets.is_empty());
         assert_eq!(r.mean_batch_occupancy, 0.0);
+        assert_eq!(r.padding_waste, 0.0);
     }
 
     #[test]
@@ -184,6 +337,62 @@ mod tests {
     }
 
     #[test]
+    fn bucket_histogram_and_padding_waste() {
+        let m = Metrics::new();
+        // 3 real requests in a 4-bucket, 1 in a 1-bucket: 1 padded slot
+        // over 5 dispatched -> 20% waste
+        m.record_batch(3, 4, 0.010);
+        m.record_batch(1, 1, 0.002);
+        let r = m.snapshot();
+        assert_eq!(r.batches, 2);
+        assert!((r.padding_waste - 0.2).abs() < 1e-12, "waste {}", r.padding_waste);
+        assert_eq!(r.buckets.len(), 2);
+        assert_eq!(r.buckets[0].bucket, 1);
+        assert_eq!(r.buckets[0].fill, 1.0);
+        assert_eq!(r.buckets[1].bucket, 4);
+        assert_eq!(r.buckets[1].batches, 1);
+        assert!((r.buckets[1].fill - 0.75).abs() < 1e-12);
+        assert!(r.render().contains("buckets"));
+    }
+
+    #[test]
+    fn sheds_are_errors_the_caller_sees_but_not_latency_samples() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_shed(0.0001);
+        let r = m.snapshot();
+        assert_eq!(r.sheds, 1);
+        assert_eq!(r.responses, 0);
+        assert!(r.latency.is_none(), "a shed must not flatter the latency histogram");
+        assert!(r.error_latency.is_some(), "...but it IS an explicit error");
+        assert!(r.render().contains("sheds=1"));
+    }
+
+    #[test]
+    fn queue_depth_gauge_tracks_max() {
+        let m = Metrics::new();
+        m.record_queue_depth(1);
+        m.record_queue_depth(7);
+        m.record_queue_depth(3);
+        let r = m.snapshot();
+        assert_eq!(r.max_queue_depth, 7);
+        assert_eq!(r.queue_depth.unwrap().n, 3);
+        m.record_replica_death();
+        assert_eq!(m.snapshot().replica_deaths, 1);
+        // the gauge is a ring: once full, fresh samples overwrite the
+        // oldest instead of being dropped (depth is a time-varying gauge
+        // — the summary must describe the recent window)
+        for _ in 0..65_546 {
+            m.record_queue_depth(0);
+        }
+        m.record_queue_depth(42);
+        let r = m.snapshot();
+        let q = r.queue_depth.unwrap();
+        assert_eq!(q.n, 65_536);
+        assert_eq!(q.max, 42.0, "the newest sample must be present");
+    }
+
+    #[test]
     fn render_contains_key_fields() {
         let m = Metrics::new();
         m.record_request();
@@ -191,5 +400,6 @@ mod tests {
         let s = m.snapshot().render();
         assert!(s.contains("requests=1"));
         assert!(s.contains("latency"));
+        assert!(s.contains("padding-waste"));
     }
 }

@@ -1,23 +1,43 @@
-//! L3 serving coordinator: request router + dynamic batcher + worker pool.
+//! L3 serving coordinator: request router + dynamic batcher + worker pool,
+//! built around a **shape-bucketed executable cache**.
 //!
 //! Architecture (threads + channels; no async runtime available offline):
 //!
 //! ```text
 //!  clients ── Coordinator::infer(model, image)
-//!                │  route by model name (replicas: round-robin)
+//!                │  route by model name; replicas: least-loaded (queue
+//!                │  depth), tie-broken by rotation; dead replicas skipped
 //!                ▼
-//!        mpsc queue per worker ── batcher::collect (size-or-deadline)
+//!        bounded mpsc queue per worker ── admission sheds load with an
+//!                │                        explicit error when full
 //!                ▼
-//!        worker thread (owns Engine + compiled model, weights on device)
+//!        batcher::collect_bucketed (size-or-deadline, flushes early at
+//!                │                  bucket boundaries)
 //!                ▼
+//!        worker thread (owns Engine + a ServableModel: ONE weight set
+//!                │      shared by a ladder of executables — batch 1, 2,
+//!                │      4, …, max — compiled lazily; each collected
+//!                ▼      batch pads only to its smallest covering bucket)
 //!        per-request responses (logits + timing) via oneshot channels
 //! ```
 //!
+//! The ladder is the point: a fixed-batch executable answers a single
+//! request by padding it to the full device batch — the merged low-rank
+//! model's latency win burned as padding FLOPs. With the bucket ladder a
+//! 1-request batch runs the batch-1 executable, and all buckets share the
+//! weights uploaded at worker construction (`netbuilder::ServableNet`).
+//!
 //! Backends are not required to be `Send` (the PJRT wrapper types hold raw
-//! pointers), so each worker constructs its own `Engine` + model inside its
-//! thread via the factory closure — no unsafe, clean shutdown by dropping
-//! senders. The same code path serves native-backend synthetic models and
-//! PJRT artifact models.
+//! pointers), so each worker constructs its own `Engine` + model inside
+//! its thread via the factory closure — no unsafe, clean shutdown by
+//! dropping senders. Fixed-batch models (HLO-text artifacts) implement
+//! [`ServableModel`] with a one-bucket ladder and keep the pad-to-ceiling
+//! behaviour.
+//!
+//! A replica that panics mid-execution is detected (its `alive` flag
+//! flips before the thread exits), counted in the metrics, and excluded
+//! from routing; callers get a "replica died" error instead of a bare
+//! channel disconnect.
 //!
 //! Factories receive a [`WorkerCtx`]: the worker's engine plus its share
 //! of the coordinator's **kernel-thread budget**. The budget is
@@ -32,8 +52,8 @@ pub mod batcher;
 pub mod metrics;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -43,16 +63,29 @@ use crate::runtime::Engine;
 use batcher::{BatchPolicy, Collected};
 use metrics::Metrics;
 
-/// A model a worker can execute batch-at-a-time.
-pub trait BatchModel {
-    /// fixed device batch size
-    fn batch(&self) -> usize;
+/// A model a worker can execute over a ladder of batch buckets.
+///
+/// `buckets()` is ascending and ends at `max_batch()`; the worker
+/// dispatches every collected batch to its smallest covering bucket and
+/// pads only the bucket's free slots. Fixed-batch models (the HLO-text
+/// artifacts) keep the default one-bucket ladder, which reproduces the
+/// old pad-to-device-batch behaviour. `run_bucket` takes `&mut self` so
+/// implementations may compile a bucket's executable lazily on first use.
+pub trait ServableModel {
+    /// Largest batch the worker may collect — the bucket-ladder ceiling.
+    fn max_batch(&self) -> usize;
+    /// Ascending executable bucket sizes; the last entry must equal
+    /// `max_batch()`. Default: a single fixed bucket.
+    fn buckets(&self) -> Vec<usize> {
+        vec![self.max_batch()]
+    }
     /// input spatial size
     fn hw(&self) -> usize;
     fn classes(&self) -> usize;
-    /// `x` is a full device batch [batch, 3, hw, hw] flattened; returns
-    /// flattened logits [batch, classes].
-    fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>>;
+    /// `x` is a padded bucket `[bucket, 3, hw, hw]` flattened, where
+    /// `bucket` is one of `buckets()`; returns flattened logits
+    /// `[bucket, classes]`.
+    fn run_bucket(&mut self, x: &[f32], bucket: usize) -> Result<Vec<f32>>;
 }
 
 /// One inference request: a single image [3, hw, hw], flattened.
@@ -72,15 +105,32 @@ pub struct InferResponse {
     pub exec: f64,
     /// how many real requests shared the batch
     pub batch_size: usize,
+    /// the executable bucket that carried the batch (`>= batch_size`)
+    pub bucket: usize,
+    /// index of the replica that served the request
+    pub replica: usize,
+}
+
+/// Shared router-visible state of one worker replica.
+struct ReplicaState {
+    /// replica index within its model entry (telemetry)
+    index: usize,
+    /// queued + executing requests — the least-loaded routing signal
+    depth: AtomicUsize,
+    /// flipped off when the worker thread dies; the router skips it
+    alive: AtomicBool,
 }
 
 struct Replica {
-    tx: Sender<InferRequest>,
+    tx: SyncSender<InferRequest>,
+    state: Arc<ReplicaState>,
     handle: std::thread::JoinHandle<()>,
 }
 
 struct ModelEntry {
     replicas: Vec<Replica>,
+    /// rotation counter — breaks least-loaded ties so equal-depth
+    /// replicas still interleave
     next: AtomicUsize,
     hw: usize,
 }
@@ -140,11 +190,11 @@ impl Coordinator {
 
     /// Register a model under `name` with `replicas` worker threads. The
     /// factory runs inside each worker thread (backends need not be Send)
-    /// and must yield a model with consistent batch/hw. The replicas
+    /// and must yield a model with consistent buckets/hw. The replicas
     /// share the coordinator's thread budget evenly.
     pub fn register<F>(&mut self, name: &str, hw: usize, replicas: usize, factory: F) -> Result<()>
     where
-        F: Fn(&WorkerCtx) -> Result<Box<dyn BatchModel>> + Send + Sync + 'static,
+        F: Fn(&WorkerCtx) -> Result<Box<dyn ServableModel>> + Send + Sync + 'static,
     {
         if self.models.contains_key(name) {
             bail!("model {name:?} already registered");
@@ -154,23 +204,29 @@ impl Coordinator {
         let threads_per_worker = (self.thread_budget / n_replicas).max(1);
         let mut reps = Vec::new();
         for ri in 0..n_replicas {
-            let (tx, rx) = mpsc::channel::<InferRequest>();
+            let (tx, rx) = mpsc::sync_channel::<InferRequest>(self.policy.queue_cap.max(1));
+            let state = Arc::new(ReplicaState {
+                index: ri,
+                depth: AtomicUsize::new(0),
+                alive: AtomicBool::new(true),
+            });
             let metrics = self.metrics.clone();
             let policy = self.policy.clone();
             let factory = factory.clone();
             let nm = name.to_string();
+            let wstate = state.clone();
             // report factory failure back synchronously
             let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
             let handle = std::thread::Builder::new()
                 .name(format!("lrdx-worker-{nm}-{ri}"))
                 .spawn(move || {
-                    worker_loop(rx, metrics, policy, factory, threads_per_worker, ready_tx)
+                    worker_loop(rx, metrics, policy, factory, threads_per_worker, wstate, ready_tx)
                 })
                 .expect("spawn worker");
             ready_rx
                 .recv()
                 .map_err(|_| anyhow!("worker {nm}-{ri} died during init"))??;
-            reps.push(Replica { tx, handle });
+            reps.push(Replica { tx, state, handle });
         }
         self.models.insert(
             name.to_string(),
@@ -185,7 +241,21 @@ impl Coordinator {
         v
     }
 
+    /// Current queue depths (queued + executing) per replica of a model —
+    /// the router's least-loaded signal, exposed for tests and telemetry.
+    pub fn queue_depths(&self, model: &str) -> Option<Vec<usize>> {
+        self.models.get(model).map(|e| {
+            e.replicas.iter().map(|r| r.state.depth.load(Ordering::Relaxed)).collect()
+        })
+    }
+
     /// Submit one image; returns a receiver for the response (async-style).
+    ///
+    /// Routing is least-loaded over the model's live replicas (rotation
+    /// breaks ties). A full replica queue sheds the request with an
+    /// explicit "overloaded" error instead of queueing without bound; a
+    /// replica found dead is skipped (and the request rerouted) — when
+    /// every replica has died the error says so.
     pub fn infer(
         &self,
         model: &str,
@@ -199,20 +269,80 @@ impl Coordinator {
         if image.len() != expect {
             bail!("image has {} floats, model {model:?} expects {}", image.len(), expect);
         }
-        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
-        let idx = entry.next.fetch_add(1, Ordering::Relaxed) % entry.replicas.len();
         self.metrics.record_request();
-        entry.replicas[idx]
-            .tx
-            .send(InferRequest { image, enqueued: Instant::now(), resp: resp_tx })
-            .map_err(|_| anyhow!("worker for {model:?} is gone"))?;
-        Ok(resp_rx)
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        let mut req = InferRequest { image, enqueued: Instant::now(), resp: resp_tx };
+        let n = entry.replicas.len();
+        let start = entry.next.fetch_add(1, Ordering::Relaxed);
+        // Replicas whose queue we already found full this admission; a
+        // request sheds only once every LIVE replica is full too.
+        let mut full = vec![false; n];
+        let mut any_full = false;
+        loop {
+            let mut best: Option<(usize, usize)> = None;
+            for off in 0..n {
+                let i = (start + off) % n;
+                let r = &entry.replicas[i];
+                if full[i] || !r.state.alive.load(Ordering::Relaxed) {
+                    continue;
+                }
+                let d = r.state.depth.load(Ordering::Relaxed);
+                let better = match best {
+                    Some((_, bd)) => d < bd,
+                    None => true,
+                };
+                if better {
+                    best = Some((i, d));
+                }
+            }
+            let Some((i, _)) = best else {
+                if any_full {
+                    self.metrics.record_shed(req.enqueued.elapsed().as_secs_f64());
+                    bail!(
+                        "model {model:?} overloaded: every live replica queue is \
+                         full (cap {}), request shed",
+                        self.policy.queue_cap
+                    );
+                }
+                // the caller sees an error either way: count it, so
+                // requests == responses + errors + sheds stays true
+                self.metrics.record_rejected(req.enqueued.elapsed().as_secs_f64());
+                bail!("all {n} replica(s) of model {model:?} died; request not routed");
+            };
+            let r = &entry.replicas[i];
+            // count the request before sending so the worker can never
+            // decrement a depth that was not yet incremented
+            r.state.depth.fetch_add(1, Ordering::Relaxed);
+            match r.tx.try_send(req) {
+                Ok(()) => {
+                    self.metrics
+                        .record_queue_depth(r.state.depth.load(Ordering::Relaxed));
+                    return Ok(resp_rx);
+                }
+                Err(TrySendError::Full(back)) => {
+                    r.state.depth.fetch_sub(1, Ordering::Relaxed);
+                    full[i] = true;
+                    any_full = true;
+                    req = back; // try the next-best live replica first
+                }
+                Err(TrySendError::Disconnected(back)) => {
+                    r.state.depth.fetch_sub(1, Ordering::Relaxed);
+                    r.state.alive.store(false, Ordering::Relaxed);
+                    req = back; // replica died under us: reroute
+                }
+            }
+        }
     }
 
     /// Submit and wait.
     pub fn infer_blocking(&self, model: &str, image: Vec<f32>) -> Result<InferResponse> {
         let rx = self.infer(model, image)?;
-        rx.recv().map_err(|_| anyhow!("response channel closed"))?
+        match rx.recv() {
+            Ok(result) => result,
+            // the worker dropped the response channel without answering —
+            // it panicked with this request queued or in flight
+            Err(_) => bail!("replica serving {model:?} died while the request was in flight"),
+        }
     }
 
     /// Drop queues and join workers.
@@ -226,12 +356,30 @@ impl Coordinator {
     }
 }
 
+/// Flips the replica's `alive` flag when the worker thread exits, and
+/// counts a replica death unless the exit was a clean shutdown.
+struct DeathWatch {
+    state: Arc<ReplicaState>,
+    metrics: Arc<Metrics>,
+    armed: bool,
+}
+
+impl Drop for DeathWatch {
+    fn drop(&mut self) {
+        self.state.alive.store(false, Ordering::Relaxed);
+        if self.armed {
+            self.metrics.record_replica_death();
+        }
+    }
+}
+
 fn worker_loop(
     rx: Receiver<InferRequest>,
     metrics: Arc<Metrics>,
     policy: BatchPolicy,
-    factory: Arc<dyn Fn(&WorkerCtx) -> Result<Box<dyn BatchModel>> + Send + Sync>,
+    factory: Arc<dyn Fn(&WorkerCtx) -> Result<Box<dyn ServableModel>> + Send + Sync>,
     threads: usize,
+    state: Arc<ReplicaState>,
     ready: SyncSender<Result<()>>,
 ) {
     let engine = match Engine::cpu() {
@@ -242,41 +390,96 @@ fn worker_loop(
         }
     };
     let ctx = WorkerCtx::new(engine, threads);
-    let model = match factory(&ctx) {
+    let mut model = match factory(&ctx) {
         Ok(m) => m,
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
         }
     };
-    let device_batch = model.batch();
+    let max_batch = model.max_batch();
+    let buckets = model.buckets();
+    // the ladder rules live in netbuilder::validate_ladder; the worker
+    // only adds its own contract (the ceiling is the collect bound)
+    let ladder_check =
+        crate::runtime::netbuilder::validate_ladder(&buckets).and_then(|b| {
+            if *b.last().unwrap() != max_batch {
+                bail!("bucket ladder {b:?} must end at max_batch {max_batch}");
+            }
+            Ok(())
+        });
+    if let Err(e) = ladder_check {
+        let _ = ready.send(Err(e));
+        return;
+    }
     let img_len = 3 * model.hw() * model.hw();
     let classes = model.classes();
-    let policy = BatchPolicy { max_batch: device_batch, ..policy };
+    let policy = BatchPolicy { max_batch, ..policy };
     let _ = ready.send(Ok(()));
+    // From here the replica is routable: if this thread dies (a panic in
+    // model execution), the watch flips `alive` so the router stops
+    // sending work, and the death is counted in the metrics.
+    let mut watch = DeathWatch { state, metrics: metrics.clone(), armed: true };
 
     // Reused batch assembly buffer — no allocation in the steady state.
-    let mut xbatch = vec![0f32; device_batch * img_len];
+    let mut xbatch = vec![0f32; max_batch * img_len];
     loop {
-        let requests = match batcher::collect(&rx, &policy) {
+        let requests = match batcher::collect_bucketed(&rx, &policy, &buckets) {
             Collected::Batch(b) => b,
-            Collected::Closed => return,
+            Collected::Closed => {
+                watch.armed = false; // clean shutdown, not a death
+                return;
+            }
         };
         let n = requests.len();
+        // smallest covering bucket; collect_bucketed caps n at the ladder
+        // ceiling, so the find always succeeds
+        let bucket = buckets.iter().copied().find(|&b| b >= n).unwrap_or(max_batch);
         for (i, req) in requests.iter().enumerate() {
             xbatch[i * img_len..(i + 1) * img_len].copy_from_slice(&req.image);
         }
-        // Pad by repeating the first image (device batch is fixed).
-        for i in n..device_batch {
+        // Pad only the bucket's free slots by repeating the first image.
+        for i in n..bucket {
             let (head, tail) = xbatch.split_at_mut(i * img_len);
             tail[..img_len].copy_from_slice(&head[..img_len]);
         }
         let t0 = Instant::now();
-        let result = model.run_batch(&xbatch);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            model.run_bucket(&xbatch[..bucket * img_len], bucket)
+        }));
         let exec = t0.elapsed().as_secs_f64();
-        metrics.record_batch(n, exec);
+        metrics.record_batch(n, bucket, exec);
+        // the batch left the replica: the router sees it free before the
+        // responses land
+        watch.state.depth.fetch_sub(n, Ordering::Relaxed);
+        let result = match result {
+            Ok(r) => r,
+            Err(panic) => {
+                // The model panicked: this replica is done. Every admitted
+                // request must still end as a response, an error or a shed
+                // — so fail the carried batch AND whatever is still queued
+                // (best-effort: `alive` flips first to stop new sends),
+                // then exit; the armed watch counts the death.
+                watch.state.alive.store(false, Ordering::Relaxed);
+                let what = panic
+                    .downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| panic.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                let msg = format!("replica died: model panicked: {what}");
+                fail_batch(&metrics, requests, &msg);
+                let mut stranded = 0usize;
+                while let Ok(req) = rx.try_recv() {
+                    stranded += 1;
+                    metrics.record_error_response(req.enqueued.elapsed().as_secs_f64());
+                    let _ = req.resp.send(Err(anyhow!("{msg}")));
+                }
+                watch.state.depth.fetch_sub(stranded, Ordering::Relaxed);
+                return;
+            }
+        };
         match result {
-            Ok(logits) => {
+            Ok(logits) if logits.len() == bucket * classes => {
                 for (i, req) in requests.into_iter().enumerate() {
                     let latency = req.enqueued.elapsed().as_secs_f64();
                     metrics.record_response(latency);
@@ -285,30 +488,47 @@ fn worker_loop(
                         latency,
                         exec,
                         batch_size: n,
+                        bucket,
+                        replica: watch.state.index,
                     }));
                 }
             }
+            Ok(logits) => {
+                // defensive: a malformed model must error the batch, not
+                // panic the worker on a short slice
+                let msg = format!(
+                    "model returned {} logits for bucket {bucket} ({} expected)",
+                    logits.len(),
+                    bucket * classes
+                );
+                fail_batch(&metrics, requests, &msg);
+            }
             Err(e) => {
-                // Errored requests keep their end-to-end latency: a
-                // failure that took 300 ms must show up in the tail, not
-                // vanish from the histogram (each failed request counts
-                // as one error).
                 let msg = format!("batch execution failed: {e:#}");
-                for req in requests {
-                    metrics.record_error_response(req.enqueued.elapsed().as_secs_f64());
-                    let _ = req.resp.send(Err(anyhow!("{msg}")));
-                }
+                fail_batch(&metrics, requests, &msg);
             }
         }
     }
 }
 
+/// Errored requests keep their end-to-end latency: a failure that took
+/// 300 ms must show up in the tail, not vanish from the histogram (each
+/// failed request counts as one error).
+fn fail_batch(metrics: &Metrics, requests: Vec<InferRequest>, msg: &str) {
+    for req in requests {
+        metrics.record_error_response(req.enqueued.elapsed().as_secs_f64());
+        let _ = req.resp.send(Err(anyhow!("{msg}")));
+    }
+}
+
 // --------------------------------------------------------------------------
-// BatchModel impls for the two runtime backends
+// ServableModel impls for the runtime backends
 // --------------------------------------------------------------------------
 
-impl BatchModel for crate::runtime::artifacts::ForwardModel {
-    fn batch(&self) -> usize {
+/// HLO-text artifacts are lowered at one fixed batch: a one-bucket ladder
+/// (the worker pads every collected batch to the ceiling).
+impl ServableModel for crate::runtime::artifacts::ForwardModel {
+    fn max_batch(&self) -> usize {
         self.spec.batch
     }
     fn hw(&self) -> usize {
@@ -317,7 +537,14 @@ impl BatchModel for crate::runtime::artifacts::ForwardModel {
     fn classes(&self) -> usize {
         self.spec.classes
     }
-    fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+    fn run_bucket(&mut self, x: &[f32], bucket: usize) -> Result<Vec<f32>> {
+        if bucket != self.spec.batch {
+            bail!(
+                "{}: HLO artifact is fixed at batch {}, got bucket {bucket}",
+                self.spec.name,
+                self.spec.batch
+            );
+        }
         let t = crate::runtime::HostTensor::new(
             vec![self.spec.batch, 3, self.spec.hw, self.spec.hw],
             x.to_vec(),
@@ -326,8 +553,10 @@ impl BatchModel for crate::runtime::artifacts::ForwardModel {
     }
 }
 
-impl BatchModel for crate::runtime::netbuilder::BuiltNet {
-    fn batch(&self) -> usize {
+/// A `BuiltNet` is compiled at one fixed batch — the fixed-batch baseline
+/// the serve bench compares the ladder against.
+impl ServableModel for crate::runtime::netbuilder::BuiltNet {
+    fn max_batch(&self) -> usize {
         self.batch
     }
     fn hw(&self) -> usize {
@@ -336,11 +565,34 @@ impl BatchModel for crate::runtime::netbuilder::BuiltNet {
     fn classes(&self) -> usize {
         self.classes
     }
-    fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+    fn run_bucket(&mut self, x: &[f32], bucket: usize) -> Result<Vec<f32>> {
+        if bucket != self.batch {
+            bail!("BuiltNet is fixed at batch {}, got bucket {bucket}", self.batch);
+        }
         let eng = self.exe.engine().clone();
         let xb = eng.upload(x, &[self.batch, 3, self.hw, self.hw])?;
         let out = self.forward(&xb)?;
         Ok(out.to_host()?.data)
+    }
+}
+
+/// The real ladder: lazily compiled per-bucket executables over one
+/// weight upload.
+impl ServableModel for crate::runtime::netbuilder::ServableNet {
+    fn max_batch(&self) -> usize {
+        *self.buckets().last().unwrap()
+    }
+    fn buckets(&self) -> Vec<usize> {
+        crate::runtime::netbuilder::ServableNet::buckets(self).to_vec()
+    }
+    fn hw(&self) -> usize {
+        self.hw
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn run_bucket(&mut self, x: &[f32], bucket: usize) -> Result<Vec<f32>> {
+        crate::runtime::netbuilder::ServableNet::run_bucket(self, x, bucket)
     }
 }
 
@@ -351,14 +603,25 @@ impl BatchModel for crate::runtime::netbuilder::BuiltNet {
 #[cfg(test)]
 pub(crate) struct EchoModel {
     pub batch: usize,
+    pub buckets: Vec<usize>,
     pub hw: usize,
     pub delay: std::time::Duration,
 }
 
 #[cfg(test)]
-impl BatchModel for EchoModel {
-    fn batch(&self) -> usize {
+impl EchoModel {
+    fn fixed(batch: usize, hw: usize, delay: std::time::Duration) -> EchoModel {
+        EchoModel { batch, buckets: vec![batch], hw, delay }
+    }
+}
+
+#[cfg(test)]
+impl ServableModel for EchoModel {
+    fn max_batch(&self) -> usize {
         self.batch
+    }
+    fn buckets(&self) -> Vec<usize> {
+        self.buckets.clone()
     }
     fn hw(&self) -> usize {
         self.hw
@@ -366,10 +629,10 @@ impl BatchModel for EchoModel {
     fn classes(&self) -> usize {
         2
     }
-    fn run_batch(&self, x: &[f32]) -> Result<Vec<f32>> {
+    fn run_bucket(&mut self, x: &[f32], bucket: usize) -> Result<Vec<f32>> {
         std::thread::sleep(self.delay);
         let img = 3 * self.hw * self.hw;
-        Ok((0..self.batch)
+        Ok((0..bucket)
             .flat_map(|i| {
                 let s: f32 = x[i * img..(i + 1) * img].iter().sum();
                 [s, -s]
@@ -387,13 +650,11 @@ mod tests {
         let mut c = Coordinator::new(BatchPolicy {
             max_batch: batch,
             max_wait: Duration::from_millis(3),
+            ..Default::default()
         });
         c.register("echo", 4, 1, move |_ctx| {
-            Ok(Box::new(EchoModel {
-                batch,
-                hw: 4,
-                delay: Duration::from_millis(delay_ms),
-            }) as Box<dyn BatchModel>)
+            Ok(Box::new(EchoModel::fixed(batch, 4, Duration::from_millis(delay_ms)))
+                as Box<dyn ServableModel>)
         })
         .unwrap();
         c
@@ -406,6 +667,7 @@ mod tests {
         let r = c.infer_blocking("echo", img).unwrap();
         assert_eq!(r.logits, vec![48.0, -48.0]);
         assert_eq!(r.batch_size, 1);
+        assert_eq!(r.bucket, 4, "fixed one-bucket ladder pads to the ceiling");
         c.shutdown();
     }
 
@@ -425,6 +687,45 @@ mod tests {
         let snap = c.metrics.snapshot();
         assert_eq!(snap.responses, 16);
         assert!(snap.batches < 16, "each request got its own batch");
+        c.shutdown();
+    }
+
+    #[test]
+    fn bucketed_worker_dispatches_smallest_covering_bucket() {
+        // ladder [1, 2, 4, 8]: three requests queued behind a busy worker
+        // must come back as one batch in the 4-bucket — not padded to 8.
+        let mut c = Coordinator::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        });
+        c.register("echo", 4, 1, |_ctx| {
+            Ok(Box::new(EchoModel {
+                batch: 8,
+                buckets: vec![1, 2, 4, 8],
+                hw: 4,
+                delay: Duration::from_millis(50),
+            }) as Box<dyn ServableModel>)
+        })
+        .unwrap();
+        // warmup request keeps the worker busy for 50 ms...
+        let warm = c.infer("echo", vec![1.0; 48]).unwrap();
+        // (let the worker collect it alone before loading the queue)
+        std::thread::sleep(Duration::from_millis(10));
+        // ...while three more queue up behind it
+        let rxs: Vec<_> =
+            (0..3).map(|i| c.infer("echo", vec![i as f32; 48]).unwrap()).collect();
+        let w = warm.recv().unwrap().unwrap();
+        assert_eq!(w.batch_size, 1);
+        assert_eq!(w.bucket, 1, "lone request must ride the 1-bucket");
+        for rx in rxs {
+            let r = rx.recv().unwrap().unwrap();
+            assert_eq!(r.batch_size, 3);
+            assert_eq!(r.bucket, 4, "3 requests must ride the 4-bucket");
+        }
+        let snap = c.metrics.snapshot();
+        assert!(snap.padding_waste > 0.0, "the 4-bucket carried one pad slot");
+        assert_eq!(snap.buckets.iter().map(|b| b.batches).sum::<u64>(), 2);
         c.shutdown();
     }
 
@@ -451,26 +752,47 @@ mod tests {
     }
 
     #[test]
+    fn invalid_bucket_ladder_rejected_at_register() {
+        let mut c = Coordinator::new(BatchPolicy::default());
+        let err = c.register("bad", 4, 1, |_ctx| {
+            Ok(Box::new(EchoModel {
+                batch: 8,
+                buckets: vec![4, 2, 8], // not ascending
+                hw: 4,
+                delay: Duration::ZERO,
+            }) as Box<dyn ServableModel>)
+        });
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("ladder"), "unhelpful error: {msg}");
+        c.shutdown();
+    }
+
+    #[test]
     fn replicas_share_the_thread_budget() {
         // budget 6 across 3 replicas -> 2 kernel threads per worker; a
         // budget smaller than the replica count still grants 1 each
         let mut c = Coordinator::with_thread_budget(
-            BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
             6,
         );
         let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
         let seen2 = seen.clone();
         c.register("m", 4, 3, move |ctx| {
             seen2.lock().unwrap().push(ctx.threads());
-            Ok(Box::new(EchoModel { batch: 1, hw: 4, delay: Duration::ZERO })
-                as Box<dyn BatchModel>)
+            Ok(Box::new(EchoModel::fixed(1, 4, Duration::ZERO))
+                as Box<dyn ServableModel>)
         })
         .unwrap();
         let seen3 = seen.clone();
         c.register("starved", 4, 8, move |ctx| {
             seen3.lock().unwrap().push(ctx.threads());
-            Ok(Box::new(EchoModel { batch: 1, hw: 4, delay: Duration::ZERO })
-                as Box<dyn BatchModel>)
+            Ok(Box::new(EchoModel::fixed(1, 4, Duration::ZERO))
+                as Box<dyn ServableModel>)
         })
         .unwrap();
         let got = seen.lock().unwrap().clone();
@@ -480,14 +802,15 @@ mod tests {
     }
 
     #[test]
-    fn replicas_round_robin() {
+    fn sequential_requests_are_served_correctly_by_replicas() {
         let mut c = Coordinator::new(BatchPolicy {
             max_batch: 1,
             max_wait: Duration::from_millis(1),
+            ..Default::default()
         });
         c.register("m", 4, 3, |_ctx| {
-            Ok(Box::new(EchoModel { batch: 1, hw: 4, delay: Duration::ZERO })
-                as Box<dyn BatchModel>)
+            Ok(Box::new(EchoModel::fixed(1, 4, Duration::ZERO))
+                as Box<dyn ServableModel>)
         })
         .unwrap();
         for i in 0..9 {
@@ -495,6 +818,153 @@ mod tests {
             assert_eq!(r.logits[0], 48.0 * i as f32);
         }
         assert_eq!(c.metrics.snapshot().responses, 9);
+        assert_eq!(c.queue_depths("m"), Some(vec![0, 0, 0]));
+        c.shutdown();
+    }
+
+    #[test]
+    fn least_loaded_routes_around_a_busy_replica() {
+        // per-request delay model: x[0] milliseconds
+        struct VarDelay;
+        impl ServableModel for VarDelay {
+            fn max_batch(&self) -> usize {
+                1
+            }
+            fn hw(&self) -> usize {
+                4
+            }
+            fn classes(&self) -> usize {
+                2
+            }
+            fn run_bucket(&mut self, x: &[f32], _bucket: usize) -> Result<Vec<f32>> {
+                std::thread::sleep(Duration::from_millis(x[0] as u64));
+                let s: f32 = x.iter().sum();
+                Ok(vec![s, -s])
+            }
+        }
+        let mut c = Coordinator::new(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        });
+        c.register("m", 4, 2, |_ctx| Ok(Box::new(VarDelay) as Box<dyn ServableModel>))
+            .unwrap();
+        // a slow request occupies one replica (depth 1) for ~150 ms...
+        let mut slow_img = vec![0.0f32; 48];
+        slow_img[0] = 150.0;
+        let slow = c.infer("m", slow_img).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        // ...so least-loaded must steer every fast request to the other
+        let mut fast_replicas = Vec::new();
+        for _ in 0..4 {
+            let mut img = vec![0.0f32; 48];
+            img[0] = 1.0;
+            fast_replicas.push(c.infer_blocking("m", img).unwrap().replica);
+        }
+        let slow_replica = slow.recv().unwrap().unwrap().replica;
+        assert!(
+            fast_replicas.iter().all(|&r| r == fast_replicas[0]),
+            "fast requests split across replicas: {fast_replicas:?}"
+        );
+        assert_ne!(
+            fast_replicas[0], slow_replica,
+            "a fast request queued behind the slow replica"
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn bounded_queue_sheds_load_instead_of_growing() {
+        let mut c = Coordinator::new(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 2,
+        });
+        c.register("m", 4, 1, |_ctx| {
+            Ok(Box::new(EchoModel::fixed(1, 4, Duration::from_millis(20)))
+                as Box<dyn ServableModel>)
+        })
+        .unwrap();
+        let mut accepted = Vec::new();
+        let mut shed = 0u64;
+        for i in 0..20 {
+            match c.infer("m", vec![i as f32; 48]) {
+                Ok(rx) => accepted.push(rx),
+                Err(e) => {
+                    shed += 1;
+                    let msg = format!("{e:#}");
+                    assert!(msg.contains("overloaded"), "unhelpful shed error: {msg}");
+                }
+            }
+        }
+        assert!(shed > 0, "a 20-deep burst into cap 2 must shed");
+        let n_accepted = accepted.len() as u64;
+        for rx in accepted {
+            rx.recv_timeout(Duration::from_secs(30))
+                .expect("accepted request must still complete")
+                .expect("inference ok");
+        }
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.sheds, shed);
+        assert_eq!(snap.responses, n_accepted);
+        assert_eq!(snap.requests, 20);
+        assert!(
+            snap.max_queue_depth <= 2 + 1,
+            "queue grew past cap + in-flight: {}",
+            snap.max_queue_depth
+        );
+        assert!(snap.error_latency.is_some(), "sheds must hit the error histogram");
+        c.shutdown();
+    }
+
+    #[test]
+    fn dead_replica_is_reported_and_unrouted() {
+        struct PanicModel;
+        impl ServableModel for PanicModel {
+            fn max_batch(&self) -> usize {
+                1
+            }
+            fn hw(&self) -> usize {
+                4
+            }
+            fn classes(&self) -> usize {
+                2
+            }
+            fn run_bucket(&mut self, _x: &[f32], _bucket: usize) -> Result<Vec<f32>> {
+                panic!("injected worker death");
+            }
+        }
+        let mut c = Coordinator::new(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        });
+        c.register("p", 4, 1, |_ctx| Ok(Box::new(PanicModel) as Box<dyn ServableModel>))
+            .unwrap();
+        let err = c.infer_blocking("p", vec![0.0; 48]).expect_err("must fail");
+        assert!(format!("{err:#}").contains("died"), "unclear death error: {err:#}");
+        // give the unwinding worker a moment to flip its alive flag
+        std::thread::sleep(Duration::from_millis(100));
+        let err = match c.infer("p", vec![0.0; 48]) {
+            Err(e) => e,
+            Ok(rx) => {
+                // raced the flag flip: the queued request must still fail
+                assert!(rx.recv().unwrap_or(Err(anyhow!("dropped"))).is_err());
+                c.infer("p", vec![0.0; 48]).expect_err("dead replica must unroute")
+            }
+        };
+        assert!(format!("{err:#}").contains("died"), "unclear routing error: {err:#}");
+        let snap = c.metrics.snapshot();
+        assert_eq!(snap.replica_deaths, 1);
+        // no request vanishes from the accounting: the batch carried by
+        // the panic is an error, and so is the all-replicas-dead
+        // rejection of the second request (requests == responses +
+        // errors + sheds)
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.errors, 2);
+        assert_eq!(snap.responses, 0);
+        assert_eq!(snap.sheds, 0);
+        assert!(snap.error_latency.is_some());
         c.shutdown();
     }
 
@@ -503,10 +973,11 @@ mod tests {
         let mut c = Coordinator::new(BatchPolicy {
             max_batch: 4,
             max_wait: Duration::from_millis(2),
+            ..Default::default()
         });
         struct Broken;
-        impl BatchModel for Broken {
-            fn batch(&self) -> usize {
+        impl ServableModel for Broken {
+            fn max_batch(&self) -> usize {
                 4
             }
             fn hw(&self) -> usize {
@@ -515,11 +986,11 @@ mod tests {
             fn classes(&self) -> usize {
                 2
             }
-            fn run_batch(&self, _x: &[f32]) -> Result<Vec<f32>> {
+            fn run_bucket(&mut self, _x: &[f32], _bucket: usize) -> Result<Vec<f32>> {
                 bail!("injected failure")
             }
         }
-        c.register("broken", 4, 1, |_ctx| Ok(Box::new(Broken) as Box<dyn BatchModel>))
+        c.register("broken", 4, 1, |_ctx| Ok(Box::new(Broken) as Box<dyn ServableModel>))
             .unwrap();
         let rxs: Vec<_> = (0..4)
             .map(|_| c.infer("broken", vec![0.0; 48]).unwrap())
@@ -531,9 +1002,41 @@ mod tests {
         // every failed request counts, and none vanish from the histogram
         assert_eq!(snap.errors, 4);
         assert_eq!(snap.responses, 0);
+        // a model that *errors* (vs panics) keeps its replica alive
+        assert_eq!(snap.replica_deaths, 0);
         let lat = snap.latency.expect("errored requests must record latency");
         assert!(lat.n >= 4, "expected >= 4 latency samples, got {}", lat.n);
         assert!(snap.error_latency.is_some());
+        c.shutdown();
+    }
+
+    #[test]
+    fn short_logits_error_the_batch_without_killing_the_worker() {
+        struct Short;
+        impl ServableModel for Short {
+            fn max_batch(&self) -> usize {
+                2
+            }
+            fn hw(&self) -> usize {
+                4
+            }
+            fn classes(&self) -> usize {
+                2
+            }
+            fn run_bucket(&mut self, _x: &[f32], _bucket: usize) -> Result<Vec<f32>> {
+                Ok(vec![1.0]) // malformed: too short for any bucket
+            }
+        }
+        let mut c = Coordinator::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        });
+        c.register("s", 4, 1, |_ctx| Ok(Box::new(Short) as Box<dyn ServableModel>))
+            .unwrap();
+        let err = c.infer_blocking("s", vec![0.0; 48]).expect_err("must fail");
+        assert!(format!("{err:#}").contains("logits"), "unclear error: {err:#}");
+        assert_eq!(c.metrics.snapshot().replica_deaths, 0);
         c.shutdown();
     }
 }

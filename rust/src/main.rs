@@ -16,7 +16,7 @@
 
 use anyhow::{anyhow, bail, Result};
 use lrdx::coordinator::batcher::BatchPolicy;
-use lrdx::coordinator::{BatchModel, Coordinator};
+use lrdx::coordinator::{Coordinator, ServableModel};
 use lrdx::decompose::rank_opt::{optimize_model, AnalyticTimer, LayerTimer, RankOptConfig};
 use lrdx::decompose::{plan_to_json, plan_variant, Variant};
 use lrdx::harness::{self, Report};
@@ -24,7 +24,7 @@ use lrdx::model::{cost, Arch};
 use lrdx::profiler::Timer;
 use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel, TrainSession};
 use lrdx::runtime::layer_factory::EngineLayerTimer;
-use lrdx::runtime::netbuilder::BuiltNet;
+use lrdx::runtime::netbuilder::{pow2_ladder, ServableNet};
 use lrdx::runtime::{CompileOptions, Engine, OptLevel};
 use lrdx::trainsim::{self, data::SynthData};
 use lrdx::util::cli::Args;
@@ -88,7 +88,17 @@ flags: --artifacts DIR  --reports DIR  --arch NAME  --hw N  --batch N
                           treats N as the TOTAL budget, split across models
                           and then across each model's replicas; any N
                           gives bitwise-identical outputs
-       --replicas N       serve: worker replicas per model (default 1)";
+       --replicas N       serve: worker replicas per model (default 1)
+       --buckets A,B,..   serve: executable bucket ladder per worker
+                          (ascending, last = max batch; default: powers of
+                          two up to --batch). Each collected batch runs on
+                          its smallest covering bucket instead of padding
+                          to a fixed device batch
+       --queue-cap N      serve: bound on queued requests per replica;
+                          admission sheds load with an explicit error when
+                          a queue is full (default 1024)
+       --max-wait MS      serve: batcher deadline after the first request
+                          of a batch arrives (default 5 ms)";
 
 /// `--opt-level` / `--lane` / `--threads` → the `Engine::compile`
 /// options (serve, the table/fig benches and `rank-search --real` all
@@ -103,7 +113,7 @@ fn compile_opts(args: &Args) -> Result<CompileOptions> {
         bail!("--lane must be >= 1 (hardware lane width)");
     }
     let threads = args.usize_or("threads", 1)?;
-    Ok(CompileOptions { opt_level, lane, threads })
+    Ok(CompileOptions { opt_level, lane, threads, amortize: None })
 }
 
 fn artifacts_dir(args: &Args) -> std::path::PathBuf {
@@ -388,8 +398,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let replicas = args.usize_or("replicas", 1)?;
     let total_budget = lrdx::runtime::resolve_threads(args.usize_or("threads", 0)?);
     let per_model_budget = (total_budget / variants.len().max(1)).max(1);
-    let mut coord =
-        Coordinator::with_thread_budget(BatchPolicy::default(), per_model_budget);
+    let policy = BatchPolicy {
+        max_wait: std::time::Duration::from_millis(args.usize_or("max-wait", 5)? as u64),
+        queue_cap: args.usize_or("queue-cap", 1024)?,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::with_thread_budget(policy, per_model_budget);
     let hw;
     match &artifact_lib {
         Some(lib) => {
@@ -397,6 +411,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .find_by(&arch, &variants[0], "forward")
                 .ok_or_else(|| anyhow!("no {arch}/{} forward artifact", variants[0]))?
                 .hw;
+            println!(
+                "serving AOT HLO artifacts: fixed-batch executables \
+                 (one-bucket ladder per worker)"
+            );
             for v in &variants {
                 let (root, arch, v2) = (root.clone(), arch.clone(), v.clone());
                 coord.register(v, hw, replicas, move |ctx| {
@@ -405,44 +423,61 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         .find_by(&arch, &v2, "forward")
                         .ok_or_else(|| anyhow!("no {arch}/{v2} forward artifact"))?;
                     Ok(Box::new(ForwardModel::load(ctx.engine(), spec)?)
-                        as Box<dyn BatchModel>)
+                        as Box<dyn ServableModel>)
                 })?;
             }
         }
         None => {
             hw = args.usize_or("hw", 32)?;
             let batch = args.usize_or("batch", 8)?;
+            let buckets: Vec<usize> = match args.get("buckets") {
+                Some(s) => {
+                    let mut v = Vec::new();
+                    for part in s.split(',') {
+                        v.push(part.trim().parse::<usize>().map_err(|_| {
+                            anyhow!("--buckets expects comma-separated sizes, got {s:?}")
+                        })?);
+                    }
+                    v
+                }
+                None => pow2_ladder(batch),
+            };
             let a = Arch::by_name(&arch).ok_or_else(|| anyhow!("unknown --arch {arch}"))?;
             println!(
                 "artifacts unavailable on {} — serving synthetic {arch} \
-                 netbuilder models ({})",
+                 netbuilder models ({}), bucket ladder {buckets:?}",
                 engine_probe.platform(),
                 copts.opt_level.name()
             );
+            let ceiling = buckets.last().copied().unwrap_or(batch);
             for v in &variants {
                 let variant = Variant::by_name(v)
                     .ok_or_else(|| anyhow!("unknown variant {v:?}"))?;
                 let plan = plan_variant(&a, variant, args.f64_or("alpha", 2.0)?, 4, None)?;
-                // report what the pipeline does to this variant's graph
-                // (pipeline only — the worker compiles the real thing)
+                // report what the pipeline does to this variant's
+                // ceiling-bucket graph (pipeline only — the workers
+                // compile their ladders lazily)
                 let (graph, _) =
-                    lrdx::runtime::netbuilder::build_forward(&a, &plan, batch, hw)?;
+                    lrdx::runtime::netbuilder::build_forward(&a, &plan, ceiling, hw)?;
                 let (_, stats) = lrdx::runtime::passes::run_pipeline(&graph, &copts);
                 println!("  {v:10} {}", stats.summary());
-                let (a2, copts2) = (a.clone(), copts.clone());
+                let (a2, copts2, buckets2) = (a.clone(), copts.clone(), buckets.clone());
                 coord.register(v, hw, replicas, move |ctx| {
                     // the worker's budget share, not the raw CLI value
                     let copts = CompileOptions { threads: ctx.threads(), ..copts2.clone() };
-                    let net = BuiltNet::compile(
+                    let mut net = ServableNet::compile(
                         ctx.engine(),
                         &a2,
                         &plan,
-                        batch,
+                        &buckets2,
                         hw,
                         0x5EED,
                         &copts,
                     )?;
-                    Ok(Box::new(net) as Box<dyn BatchModel>)
+                    // pay every bucket's compile at registration so no
+                    // serving request eats a first-use compile spike
+                    net.precompile_all()?;
+                    Ok(Box::new(net) as Box<dyn ServableModel>)
                 })?;
             }
         }

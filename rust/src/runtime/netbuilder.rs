@@ -364,6 +364,187 @@ impl BuiltNet {
     }
 }
 
+// --------------------------------------------------------------------------
+// Shape-bucketed serving network
+// --------------------------------------------------------------------------
+
+/// Power-of-two bucket ladder `1, 2, 4, …` capped at — and always
+/// containing — `max`: the default executable ladder for bucketed serving.
+pub fn pow2_ladder(max: usize) -> Vec<usize> {
+    let max = max.max(1);
+    let mut v = Vec::new();
+    let mut b = 1usize;
+    while b < max {
+        v.push(b);
+        b *= 2;
+    }
+    v.push(max);
+    v
+}
+
+/// Compile/upload accounting of a [`ServableNet`] — the evidence that a
+/// worker's whole bucket ladder shares one weight set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeCacheStats {
+    /// Graphs compiled so far (== distinct buckets `run_bucket` touched).
+    pub compiles: usize,
+    /// Weight buffers resident on the engine — uploaded exactly once, at
+    /// construction, no matter how many buckets ever compile.
+    pub weight_uploads: usize,
+    /// Buckets holding a compiled executable, ascending.
+    pub compiled_buckets: Vec<usize>,
+}
+
+/// A batch-parametric serving network: ONE weight set shared by a ladder
+/// of compiled executables (batch 1, 2, 4, …, ceiling), each compiled
+/// lazily on the first batch that lands in it. Parameter specs are
+/// batch-invariant (weights never carry the batch dimension), so a
+/// collected batch of `n` requests dispatches to the smallest covering
+/// bucket instead of padding to a fixed device batch.
+///
+/// Bitwise contract: the re-merge amortization is pinned to the ladder
+/// ceiling (`CompileOptions::amortize`), so every bucket makes identical
+/// fusion decisions and the logits for one request are bitwise-identical
+/// whichever bucket carries it (`tests/serve_buckets.rs`).
+pub struct ServableNet {
+    engine: Engine,
+    arch: Arch,
+    plan: Plan,
+    opts: CompileOptions,
+    buckets: Vec<usize>,
+    weight_bufs: Vec<Buffer>,
+    compiled: std::collections::HashMap<usize, Compiled>,
+    compiles: usize,
+    pub hw: usize,
+    pub classes: usize,
+}
+
+impl ServableNet {
+    /// Upload He-initialised weights for (arch, plan) once and prepare a
+    /// lazy executable ladder over `buckets` (strictly ascending; the
+    /// last entry is the serving ceiling).
+    pub fn compile(
+        engine: &Engine,
+        arch: &Arch,
+        plan: &Plan,
+        buckets: &[usize],
+        hw: usize,
+        seed: u64,
+        opts: &CompileOptions,
+    ) -> Result<ServableNet> {
+        let buckets = validate_ladder(buckets)?;
+        let ceiling = *buckets.last().unwrap();
+        let (_graph, specs) = build_forward(arch, plan, ceiling, hw)?;
+        let mut rng = Rng::new(seed);
+        let mut weight_bufs = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            let host = init_param_host(spec, &mut rng);
+            weight_bufs.push(engine.upload(&host, &spec.shape)?);
+        }
+        Ok(ServableNet {
+            engine: engine.clone(),
+            arch: arch.clone(),
+            plan: plan.clone(),
+            opts: opts.clone(),
+            buckets,
+            weight_bufs,
+            compiled: std::collections::HashMap::new(),
+            compiles: 0,
+            hw,
+            classes: arch.classes,
+        })
+    }
+
+    /// The executable ladder, ascending; the last entry is the ceiling.
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Smallest bucket covering a batch of `n` real requests.
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= n)
+    }
+
+    pub fn cache_stats(&self) -> ServeCacheStats {
+        let mut compiled_buckets: Vec<usize> = self.compiled.keys().copied().collect();
+        compiled_buckets.sort_unstable();
+        ServeCacheStats {
+            compiles: self.compiles,
+            weight_uploads: self.weight_bufs.len(),
+            compiled_buckets,
+        }
+    }
+
+    /// Pass-pipeline accounting for one bucket's executable, if that
+    /// bucket has compiled.
+    pub fn pass_stats(&self, bucket: usize) -> Option<&PassStats> {
+        self.compiled.get(&bucket).map(|e| e.stats())
+    }
+
+    /// Compile every bucket of the ladder now. Lazy compile-on-first-use
+    /// is the default, but a first-request compile spike is unacceptable
+    /// in benchmarks and latency-sensitive deployments — call this at
+    /// worker construction to pay it all up front.
+    pub fn precompile_all(&mut self) -> Result<()> {
+        for b in self.buckets.clone() {
+            self.executable(b)?;
+        }
+        Ok(())
+    }
+
+    fn executable(&mut self, bucket: usize) -> Result<Compiled> {
+        if let Some(exe) = self.compiled.get(&bucket) {
+            return Ok(exe.clone());
+        }
+        let (graph, _) = build_forward(&self.arch, &self.plan, bucket, self.hw)?;
+        let ceiling = *self.buckets.last().unwrap();
+        let opts =
+            CompileOptions { amortize: Some((bucket, ceiling)), ..self.opts.clone() };
+        let exe = self.engine.compile(&graph, &opts)?;
+        self.compiles += 1;
+        self.compiled.insert(bucket, exe.clone());
+        Ok(exe)
+    }
+
+    /// Run one padded batch on the bucket's executable (compiled on
+    /// first use): `x` is `[bucket, 3, hw, hw]` flattened; returns
+    /// flattened logits `[bucket, classes]`.
+    pub fn run_bucket(&mut self, x: &[f32], bucket: usize) -> Result<Vec<f32>> {
+        if !self.buckets.contains(&bucket) {
+            bail!("bucket {bucket} not in ladder {:?}", self.buckets);
+        }
+        let expect = bucket * 3 * self.hw * self.hw;
+        if x.len() != expect {
+            bail!("bucket {bucket} expects {expect} floats, got {}", x.len());
+        }
+        let exe = self.executable(bucket)?;
+        let xb = self.engine.upload(x, &[bucket, 3, self.hw, self.hw])?;
+        let mut args: Vec<&Buffer> = Vec::with_capacity(1 + self.weight_bufs.len());
+        args.push(&xb);
+        args.extend(self.weight_bufs.iter());
+        let mut outs = exe.run_buffers(&args)?;
+        Ok(outs.swap_remove(0).to_host()?.data)
+    }
+}
+
+/// Validate an executable ladder: non-empty, strictly ascending, all ≥ 1.
+/// The single source of the ladder rules — `ServableNet::compile` and the
+/// coordinator's worker both apply it.
+pub fn validate_ladder(buckets: &[usize]) -> Result<Vec<usize>> {
+    if buckets.is_empty() {
+        bail!("bucket ladder must not be empty");
+    }
+    if buckets[0] == 0 {
+        bail!("bucket sizes must be >= 1, got {buckets:?}");
+    }
+    for w in buckets.windows(2) {
+        if w[0] >= w[1] {
+            bail!("bucket ladder must be strictly ascending, got {buckets:?}");
+        }
+    }
+    Ok(buckets.to_vec())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -405,6 +586,71 @@ mod tests {
         assert_eq!(names.len(), specs.len());
         assert!(names.contains("layer1.0.conv2.core"));
         assert!(names.contains("fc.w0"));
+    }
+
+    #[test]
+    fn pow2_ladder_shapes() {
+        assert_eq!(pow2_ladder(8), vec![1, 2, 4, 8]);
+        assert_eq!(pow2_ladder(6), vec![1, 2, 4, 6]);
+        assert_eq!(pow2_ladder(1), vec![1]);
+        assert_eq!(pow2_ladder(0), vec![1], "0 clamps to a 1-bucket ladder");
+    }
+
+    #[test]
+    fn ladder_validation() {
+        assert!(validate_ladder(&[]).is_err());
+        assert!(validate_ladder(&[0, 2]).is_err());
+        assert!(validate_ladder(&[2, 2]).is_err());
+        assert!(validate_ladder(&[4, 2]).is_err());
+        assert_eq!(validate_ladder(&[1, 2, 4]).unwrap(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn servable_net_lazy_cache_and_shared_weights() {
+        let engine = Engine::native();
+        let arch = Arch::by_name("resnet-mini").unwrap();
+        let plan = plan_variant(&arch, Variant::Lrd, 2.0, 2, None).unwrap();
+        let mut net = ServableNet::compile(
+            &engine,
+            &arch,
+            &plan,
+            &[1, 2, 4],
+            16,
+            7,
+            &CompileOptions::default(),
+        )
+        .unwrap();
+        let uploads = net.cache_stats().weight_uploads;
+        assert!(uploads > 0);
+        assert_eq!(net.cache_stats().compiles, 0, "compilation must be lazy");
+        assert_eq!(net.bucket_for(3), Some(4));
+        assert_eq!(net.bucket_for(5), None);
+
+        let x1 = crate::util::det_input(1, 16);
+        let l1 = net.run_bucket(&x1, 1).unwrap();
+        assert_eq!(l1.len(), 10);
+        let after_first = net.cache_stats();
+        assert_eq!(after_first.compiles, 1);
+        assert_eq!(after_first.weight_uploads, uploads);
+        assert_eq!(after_first.compiled_buckets, vec![1]);
+        // second hit on the same bucket: no recompile, bitwise-stable
+        let l1b = net.run_bucket(&x1, 1).unwrap();
+        assert_eq!(l1, l1b);
+        assert_eq!(net.cache_stats().compiles, 1);
+
+        let x4 = crate::util::det_input(4, 16);
+        let l4 = net.run_bucket(&x4, 4).unwrap();
+        assert_eq!(l4.len(), 40);
+        let stats = net.cache_stats();
+        assert_eq!(stats.compiles, 2);
+        assert_eq!(stats.compiled_buckets, vec![1, 4]);
+        assert_eq!(
+            stats.weight_uploads, uploads,
+            "every bucket must share the construction-time weight upload"
+        );
+        // wrong bucket / wrong length are build errors, not panics
+        assert!(net.run_bucket(&x1, 3).is_err());
+        assert!(net.run_bucket(&x1, 2).is_err());
     }
 
     #[test]

@@ -89,11 +89,20 @@ pub struct CompileOptions {
     /// count produces bitwise-identical outputs: kernels partition work
     /// so every output element is accumulated in the same order.
     pub threads: usize,
+    /// Re-merge amortization pin for shape-bucketed serving.
+    /// `Some((batch, ceiling))` makes the profitability gate amortize the
+    /// per-execution weight-merge cost as if the graph's batch dimension
+    /// were `ceiling` instead of `batch`, so every bucket of an
+    /// executable ladder makes the *ceiling's* fusion decisions — the
+    /// prerequisite for bitwise-identical logits across buckets (a fused
+    /// chain reassociates f32 sums). `None` (the default) amortizes over
+    /// the graph's own shapes.
+    pub amortize: Option<(usize, usize)>,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        CompileOptions { opt_level: OptLevel::TOP, lane: 16, threads: 1 }
+        CompileOptions { opt_level: OptLevel::TOP, lane: 16, threads: 1, amortize: None }
     }
 }
 
@@ -107,9 +116,14 @@ impl CompileOptions {
         CompileOptions { opt_level, ..Default::default() }
     }
 
-    /// Stable key fragment for executable caches (`EngineLayerTimer`).
+    /// Stable key fragment for executable caches (`EngineLayerTimer`,
+    /// `netbuilder::ServableNet`'s bucket ladder).
     pub fn cache_key(&self) -> String {
-        format!("{}l{}t{}", self.opt_level.name(), self.lane, self.threads)
+        let amort = match self.amortize {
+            Some((b, ceil)) => format!("a{b}-{ceil}"),
+            None => String::new(),
+        };
+        format!("{}l{}t{}{amort}", self.opt_level.name(), self.lane, self.threads)
     }
 
     /// Resolve `threads == 0` ("auto") to the machine's parallelism.
@@ -286,7 +300,7 @@ pub fn run_pipeline_seg(
         let t0p = Instant::now();
         let before = g.nodes.len();
         let (traced, fus_fwd, fus_bwd) =
-            remerge::run_t(&g, opts.lane, b.unwrap_or(before));
+            remerge::run_t(&g, opts.lane, b.unwrap_or(before), opts.amortize);
         stats.fusions = traced.rewrites;
         if let Some(t) = stats.train.as_mut() {
             t.fusions_fwd = fus_fwd;

@@ -290,13 +290,24 @@ fn fused_dims(g: &Graph, ch: &Chain) -> Vec<usize> {
 /// Apply re-merge fusion across the graph. Returns the rewritten graph
 /// and the number of factor pairs contracted.
 pub fn run(g: &Graph, lane: usize) -> (Graph, usize) {
-    let (t, _, _) = run_t(g, lane, g.nodes.len());
+    let (t, _, _) = run_t(g, lane, g.nodes.len(), None);
     (t.graph, t.rewrites)
 }
 
 /// Traced variant: nodes `0..boundary` count as the forward segment.
-/// Returns the rewrite trace plus (forward fusions, backward fusions).
-pub(crate) fn run_t(g: &Graph, lane: usize, boundary: usize) -> (Traced, usize, usize) {
+/// `amortize = Some((batch, ceiling))` rescales each chain's
+/// output-element amortization to a bucket-ladder ceiling
+/// (`CompileOptions::amortize`): `free_elems` is linear in the graph's
+/// batch dimension for every matched layout, so scaling by
+/// `ceiling / batch` reproduces the ceiling graph's gate decisions
+/// exactly. Returns the rewrite trace plus (forward fusions, backward
+/// fusions).
+pub(crate) fn run_t(
+    g: &Graph,
+    lane: usize,
+    boundary: usize,
+    amortize: Option<(usize, usize)>,
+) -> (Traced, usize, usize) {
     let mut uses = vec![0usize; g.nodes.len()];
     for node in &g.nodes {
         for inp in &node.inputs {
@@ -312,7 +323,15 @@ pub(crate) fn run_t(g: &Graph, lane: usize, boundary: usize) -> (Traced, usize, 
     for (i, node) in g.nodes.iter().enumerate() {
         let fused = match_chain(g, &uses, i).and_then(|ch| {
             let (r, c, s) = ch.dims;
-            if !decomposed_loses(r, c, s, lane, free_elems(g, &ch)) {
+            let fe = match amortize {
+                // multiply before dividing: free_elems is a multiple of
+                // `batch` for every layout, so this is exact
+                Some((batch, ceiling)) => {
+                    free_elems(g, &ch) * ceiling.max(1) / batch.max(1)
+                }
+                None => free_elems(g, &ch),
+            };
+            if !decomposed_loses(r, c, s, lane, fe) {
                 return None;
             }
             if fused_dims(g, &ch) != node.dims {
@@ -447,6 +466,29 @@ mod tests {
         let g = svd_conv_graph(1, 64, 4, 64, 2);
         let (_, fusions) = run(&g, 4);
         assert_eq!(fusions, 0);
+    }
+
+    #[test]
+    fn amortize_pin_reproduces_ceiling_decisions() {
+        // fc chain at batch 1: the per-execution weight merge dominates
+        // and the factors survive; pinned to a ladder ceiling of 4096
+        // output elements, the same batch-1 graph makes the ceiling's
+        // merge decision (the bucket-ladder invariance ServableNet needs).
+        let (c, r, s) = (64usize, 33, 64);
+        let b = GraphBuilder::new("fc1");
+        let x = b.parameter(0, &[1, c], "x").unwrap();
+        let w0 = b.parameter(1, &[r, c], "w0").unwrap();
+        let w1 = b.parameter(2, &[s, r], "w1").unwrap();
+        let y = x
+            .dot_general(&w0, &[1], &[1])
+            .unwrap()
+            .dot_general(&w1, &[1], &[1])
+            .unwrap();
+        let g = b.build(&y).unwrap();
+        let (t, _, _) = run_t(&g, 16, g.nodes.len(), None);
+        assert_eq!(t.rewrites, 0, "batch-1 fc must keep its factors");
+        let (t, _, _) = run_t(&g, 16, g.nodes.len(), Some((1, 4096)));
+        assert_eq!(t.rewrites, 1, "pinned to the ceiling the chain fuses");
     }
 
     #[test]

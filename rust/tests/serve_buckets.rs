@@ -1,0 +1,149 @@
+//! Bucketed-serving properties on real netbuilder models:
+//!
+//! * every batch size 1..=ceiling picks the smallest covering bucket;
+//! * the SAME request produces bitwise-identical logits whichever bucket
+//!   carries it (the re-merge amortization is pinned to the ladder
+//!   ceiling, and the native kernels' accumulation order is
+//!   batch-position-invariant);
+//! * one weight upload serves the whole ladder (compile/cache stats);
+//! * a saturated bounded queue sheds load with explicit errors instead of
+//!   growing without bound, and every accepted request still completes.
+
+use std::time::Duration;
+
+use lrdx::coordinator::batcher::BatchPolicy;
+use lrdx::coordinator::{Coordinator, ServableModel};
+use lrdx::decompose::{plan_variant, Variant};
+use lrdx::model::Arch;
+use lrdx::runtime::netbuilder::{pow2_ladder, ServableNet};
+use lrdx::runtime::{CompileOptions, Engine};
+
+const HW: usize = 16;
+
+fn mini_net(variant: Variant, buckets: &[usize]) -> ServableNet {
+    let engine = Engine::native();
+    let arch = Arch::by_name("resnet-mini").expect("resnet-mini");
+    let plan = plan_variant(&arch, variant, 2.0, 2, None).expect("plan");
+    ServableNet::compile(
+        &engine,
+        &arch,
+        &plan,
+        buckets,
+        HW,
+        0x5EED,
+        &CompileOptions::default(),
+    )
+    .expect("compile")
+}
+
+#[test]
+fn every_batch_size_picks_the_smallest_covering_bucket() {
+    lrdx::util::check::property(8, |rng| {
+        let max = rng.range(2, 10);
+        // random strictly-ascending ladder ending at the ceiling
+        let mut ladder: Vec<usize> =
+            (1..max).filter(|_| rng.range(0, 1) == 0).collect();
+        ladder.push(max);
+        let net = mini_net(Variant::Lrd, &ladder);
+        for n in 1..=max {
+            let want = ladder.iter().copied().find(|&b| b >= n).unwrap();
+            assert_eq!(net.bucket_for(n), Some(want), "n={n} ladder={ladder:?}");
+        }
+        assert_eq!(net.bucket_for(max + 1), None, "past the ceiling is not served");
+    });
+}
+
+#[test]
+fn logits_bitwise_identical_across_buckets() {
+    for variant in [Variant::Lrd, Variant::Merged] {
+        let mut net = mini_net(variant, &[1, 2, 4, 8]);
+        let uploads_at_construction = net.cache_stats().weight_uploads;
+        let img = lrdx::util::det_input(1, HW);
+        let classes = net.classes;
+        let base = net.run_bucket(&img, 1).expect("bucket 1");
+        assert_eq!(base.len(), classes);
+        let mut rng = lrdx::util::rng::Rng::new(42);
+        for &bucket in &[2usize, 4, 8] {
+            // slot 0 carries the request; the other slots hold noise so
+            // cross-slot contamination would be visible
+            let mut x = img.clone();
+            for _ in 1..bucket {
+                x.extend((0..img.len()).map(|_| rng.normal_f32() * 0.3));
+            }
+            let logits = net.run_bucket(&x, bucket).expect("bucketed run");
+            assert_eq!(logits.len(), bucket * classes);
+            assert_eq!(
+                &logits[..classes],
+                &base[..],
+                "{variant:?}: bucket {bucket} changed the bits of slot 0"
+            );
+        }
+        // the whole ladder compiled (4 executables) off ONE weight upload
+        let stats = net.cache_stats();
+        assert_eq!(stats.compiled_buckets, vec![1, 2, 4, 8]);
+        assert_eq!(stats.compiles, 4);
+        assert_eq!(
+            stats.weight_uploads, uploads_at_construction,
+            "{variant:?}: running buckets must not re-upload weights"
+        );
+    }
+}
+
+#[test]
+fn saturated_bounded_queue_sheds_and_recovers() {
+    let mut coord = Coordinator::new(BatchPolicy {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_cap: 4,
+    });
+    coord
+        .register("mini", HW, 1, |ctx| {
+            let arch = Arch::by_name("resnet-mini").expect("resnet-mini");
+            let plan = plan_variant(&arch, Variant::Lrd, 2.0, 2, None)?;
+            let opts = CompileOptions { threads: ctx.threads(), ..Default::default() };
+            let net = ServableNet::compile(
+                ctx.engine(),
+                &arch,
+                &plan,
+                &pow2_ladder(4),
+                HW,
+                1,
+                &opts,
+            )?;
+            Ok(Box::new(net) as Box<dyn ServableModel>)
+        })
+        .expect("register");
+
+    let img = lrdx::util::det_input(1, HW);
+    let mut accepted = Vec::new();
+    let mut shed = 0u64;
+    for _ in 0..64 {
+        match coord.infer("mini", img.clone()) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                shed += 1;
+                let msg = format!("{e:#}");
+                assert!(msg.contains("overloaded"), "unhelpful shed error: {msg}");
+            }
+        }
+    }
+    let n_accepted = accepted.len() as u64;
+    for rx in accepted {
+        rx.recv_timeout(Duration::from_secs(120))
+            .expect("accepted request must complete")
+            .expect("inference ok");
+    }
+    let snap = coord.metrics.snapshot();
+    eprintln!("{}", snap.render());
+    assert!(shed > 0, "a 64-burst into a 4-deep queue must shed");
+    assert_eq!(snap.sheds, shed);
+    assert_eq!(snap.requests, 64);
+    assert_eq!(snap.responses, n_accepted);
+    assert!(
+        snap.max_queue_depth <= 4 + 4,
+        "queue grew past cap + one in-flight bucket: {}",
+        snap.max_queue_depth
+    );
+    assert!(snap.error_latency.is_some(), "sheds must land in the error histogram");
+    coord.shutdown();
+}
