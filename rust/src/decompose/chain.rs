@@ -1,0 +1,203 @@
+//! Factor-chain descriptor: the N-factor generalization of the paper's
+//! `W = W1*W0` pair. A chain is an ordered list of factors from input to
+//! output, each with its parameter shape, its link channels, and the
+//! per-pixel MAC/gate data the analytic cost model needs. One descriptor
+//! feeds `model::cost`, `decompose::params` count checks and the
+//! `rank_opt::AnalyticTimer` so the three can never disagree about what a
+//! scheme costs.
+
+use crate::model::{ConvSite, SiteKind};
+
+use super::Scheme;
+
+/// One factor of a chain, in application order (input side first).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Factor {
+    /// parameter-name suffix (`.u`, `.core`, `.kh`, `.kw`, `.w0`, `.w1`, `.v`)
+    pub suffix: &'static str,
+    /// stored parameter tensor shape
+    pub shape: Vec<usize>,
+    /// channels entering this factor
+    pub in_ch: usize,
+    /// channels leaving this factor (the link rank to the next factor)
+    pub out_ch: usize,
+    /// MACs per output pixel contributed by this factor
+    pub macs_per_px: usize,
+    /// the dimension whose tile efficiency gates this factor's contraction
+    pub gate_dim: usize,
+}
+
+impl Factor {
+    pub fn params(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Ordered factor chain for one site under one scheme.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FactorChain {
+    pub factors: Vec<Factor>,
+}
+
+impl FactorChain {
+    /// The chain a scheme lowers to at `site`, or `None` for schemes that
+    /// are not a per-site factor chain (`Orig`, the merged-bottleneck pair).
+    pub fn of(site: &ConvSite, scheme: &Scheme) -> Option<FactorChain> {
+        let (c, s, k) = (site.c, site.s, site.k);
+        let f = |suffix, shape: Vec<usize>, in_ch, out_ch, macs, gate| Factor {
+            suffix,
+            shape,
+            in_ch,
+            out_ch,
+            macs_per_px: macs,
+            gate_dim: gate,
+        };
+        let factors = match scheme {
+            Scheme::Orig | Scheme::Merged { .. } | Scheme::MergedInto { .. } => {
+                return None
+            }
+            Scheme::Svd { r } => vec![
+                f("w0", vec![*r, c], c, *r, r * c, *r),
+                f("w1", vec![s, *r], *r, s, s * r, s),
+            ],
+            Scheme::Tucker { r1, r2 } | Scheme::Tucker2 { r1, r2 } => {
+                let core_shape = if k == 1 && site.kind != SiteKind::Stem {
+                    // 1x1 convs and the fc head store a 2-d core
+                    vec![*r2, *r1]
+                } else {
+                    vec![*r2, *r1, k, k]
+                };
+                vec![
+                    f("u", vec![*r1, c], c, *r1, r1 * c, *r1),
+                    f("core", core_shape, *r1, *r2, r2 * r1 * k * k, *r2),
+                    f("v", vec![s, *r2], *r2, s, s * r2, s),
+                ]
+            }
+            Scheme::Branched { r1, r2, groups } => vec![
+                f("u", vec![*r1, c], c, *r1, r1 * c, *r1),
+                f(
+                    "core",
+                    vec![*r2, r1 / groups, k, k],
+                    *r1,
+                    *r2,
+                    r2 * (r1 / groups) * k * k,
+                    *r2,
+                ),
+                f("v", vec![s, *r2], *r2, s, s * r2, s),
+            ],
+            Scheme::Cp { r } => {
+                if k == 1 {
+                    vec![
+                        f("w0", vec![*r, c], c, *r, r * c, *r),
+                        f("w1", vec![s, *r], *r, s, s * r, s),
+                    ]
+                } else {
+                    vec![
+                        f("u", vec![*r, c], c, *r, r * c, *r),
+                        f("kh", vec![*r, k], *r, *r, r * k, *r),
+                        f("kw", vec![*r, k], *r, *r, r * k, *r),
+                        f("w1", vec![s, *r], *r, s, s * r, s),
+                    ]
+                }
+            }
+        };
+        Some(FactorChain { factors })
+    }
+
+    pub fn len(&self) -> usize {
+        self.factors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.factors.is_empty()
+    }
+
+    /// Total stored parameters of the chain (excluding BN / bias).
+    pub fn params(&self) -> usize {
+        self.factors.iter().map(Factor::params).sum()
+    }
+
+    /// Channel widths of the links BETWEEN factors (len = factors - 1).
+    pub fn link_ranks(&self) -> Vec<usize> {
+        self.factors[..self.factors.len().saturating_sub(1)]
+            .iter()
+            .map(|f| f.out_ch)
+            .collect()
+    }
+
+    /// Total MACs over `area` output pixels.
+    pub fn macs(&self, area: usize) -> usize {
+        self.factors.iter().map(|f| f.macs_per_px * area).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SiteKind;
+
+    fn conv(c: usize, s: usize, k: usize) -> ConvSite {
+        ConvSite {
+            name: "t".into(),
+            c,
+            s,
+            k,
+            stride: 1,
+            padding: if k > 1 { 1 } else { 0 },
+            kind: SiteKind::Conv,
+        }
+    }
+
+    #[test]
+    fn svd_chain_params_hand_computed() {
+        let t = conv(64, 64, 1);
+        let ch = FactorChain::of(&t, &Scheme::Svd { r: 16 }).unwrap();
+        assert_eq!(ch.len(), 2);
+        // 16*64 + 64*16 = 2048
+        assert_eq!(ch.params(), 2048);
+        assert_eq!(ch.link_ranks(), vec![16]);
+    }
+
+    #[test]
+    fn tucker2_chain_params_hand_computed() {
+        // kxk conv: 64*38 + 38*38*9 + 38*64 = 2432 + 12996 + 2432 = 17860
+        let t = conv(64, 64, 3);
+        let ch = FactorChain::of(&t, &Scheme::Tucker2 { r1: 38, r2: 38 }).unwrap();
+        assert_eq!(ch.len(), 3);
+        assert_eq!(ch.params(), 17860);
+        assert_eq!(ch.link_ranks(), vec![38, 38]);
+        // 1x1 conv: 64*16 + 16*16 + 16*64 = 1024 + 256 + 1024 = 2304
+        let t1 = conv(64, 64, 1);
+        let ch1 = FactorChain::of(&t1, &Scheme::Tucker2 { r1: 16, r2: 16 }).unwrap();
+        assert_eq!(ch1.params(), 2304);
+        assert_eq!(ch1.factors[1].shape, vec![16, 16]);
+    }
+
+    #[test]
+    fn cp_chain_params_hand_computed() {
+        // kxk conv: 137*64 + 137*3 + 137*3 + 64*137 = 8768+411+411+8768 = 18358
+        let t = conv(64, 64, 3);
+        let ch = FactorChain::of(&t, &Scheme::Cp { r: 137 }).unwrap();
+        assert_eq!(ch.len(), 4);
+        assert_eq!(ch.params(), 18358);
+        assert_eq!(ch.link_ranks(), vec![137, 137, 137]);
+        // 1x1 degenerates to the SVD pair
+        let t1 = conv(64, 64, 1);
+        let ch1 = FactorChain::of(&t1, &Scheme::Cp { r: 16 }).unwrap();
+        assert_eq!(ch1.len(), 2);
+        assert_eq!(ch1.params(), 2048);
+    }
+
+    #[test]
+    fn macs_scale_with_area_and_orig_is_none() {
+        let t = conv(64, 64, 3);
+        let ch = FactorChain::of(&t, &Scheme::Tucker { r1: 38, r2: 38 }).unwrap();
+        assert_eq!(ch.macs(1) * 7, ch.macs(7));
+        assert!(FactorChain::of(&t, &Scheme::Orig).is_none());
+        assert!(FactorChain::of(
+            &t,
+            &Scheme::MergedInto { peer: "x".into() }
+        )
+        .is_none());
+    }
+}

@@ -2,6 +2,7 @@
 //! five variants. Weight-level transforms live in `weights.rs`; the
 //! Algorithm 1 rank optimizer in `rank_opt.rs`.
 
+pub mod chain;
 pub mod params;
 pub mod rank_opt;
 pub mod weights;
@@ -25,6 +26,12 @@ pub enum Scheme {
     Merged { r1: usize, r2: usize },
     /// conv1/conv3 of a merged bottleneck: carries the folded 1x1 product
     MergedInto { peer: String },
+    /// explicit three-factor chain u[r1,C] -> core[r2,r1,k,k] -> v[S,r2];
+    /// unlike `Tucker` it also applies to 1x1 convs and the fc head
+    Tucker2 { r1: usize, r2: usize },
+    /// CP / Lebedev chain: rank-r two-factor split for 1x1/fc sites, and
+    /// the four-factor 1x1 -> kx1 -> 1xk -> 1x1 chain for kxk convs
+    Cp { r: usize },
 }
 
 pub type Plan = BTreeMap<String, Scheme>;
@@ -43,6 +50,10 @@ pub enum Variant {
     Merged,
     /// branching Tucker (§2.4, Fig. 4)
     Branched,
+    /// Lrd-shaped plan forced to the Tucker-2 three-factor chain family
+    Tucker2,
+    /// Lrd-shaped plan forced to the CP chain family
+    Cp,
 }
 
 impl Variant {
@@ -54,6 +65,8 @@ impl Variant {
             "freeze" => Variant::Freeze,
             "merged" => Variant::Merged,
             "branched" => Variant::Branched,
+            "tucker2" => Variant::Tucker2,
+            "cp" => Variant::Cp,
             _ => return None,
         })
     }
@@ -66,6 +79,8 @@ impl Variant {
             Variant::Freeze => "freeze",
             Variant::Merged => "merged",
             Variant::Branched => "branched",
+            Variant::Tucker2 => "tucker2",
+            Variant::Cp => "cp",
         }
     }
 
@@ -77,7 +92,42 @@ impl Variant {
             Variant::Freeze,
             Variant::Merged,
             Variant::Branched,
+            Variant::Tucker2,
+            Variant::Cp,
         ]
+    }
+}
+
+/// Which factor-chain family rank selection lowers a site into. The CLI's
+/// `--scheme` flag picks one; `Svd` reproduces the paper's convention
+/// (SVD pair for 1x1/fc, Tucker sandwich for kxk).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeFamily {
+    Svd,
+    Tucker2,
+    Cp,
+}
+
+impl SchemeFamily {
+    pub fn by_name(s: &str) -> Option<SchemeFamily> {
+        Some(match s {
+            "svd" => SchemeFamily::Svd,
+            "tucker2" => SchemeFamily::Tucker2,
+            "cp" => SchemeFamily::Cp,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchemeFamily::Svd => "svd",
+            SchemeFamily::Tucker2 => "tucker2",
+            SchemeFamily::Cp => "cp",
+        }
+    }
+
+    pub fn all() -> &'static [SchemeFamily] {
+        &[SchemeFamily::Svd, SchemeFamily::Tucker2, SchemeFamily::Cp]
     }
 }
 
@@ -120,12 +170,39 @@ pub fn quantize_ranks(r1: usize, r2: usize, groups: usize) -> (usize, usize) {
     )
 }
 
+/// CP rank giving `alpha`x parameter compression. For 1x1/fc sites the CP
+/// chain degenerates to the SVD pair; for kxk convs the Lebedev chain costs
+/// R*(C + S + 2k) parameters against the original C*S*k^2.
+pub fn cp_rank_for_ratio(c: usize, s: usize, k: usize, alpha: f64) -> usize {
+    if k <= 1 {
+        return svd_rank_for_ratio(c, s, alpha);
+    }
+    let denom = alpha * (c + s + 2 * k) as f64;
+    let r = (c as f64 * s as f64 * (k * k) as f64 / denom) as usize;
+    // CP rank may legitimately exceed min(C,S); cap at the separable bound
+    r.clamp(1, c.min(s) * k * k)
+}
+
 fn ratio_scheme(t: &ConvSite, alpha: f64) -> Scheme {
     if t.k == 1 {
         Scheme::Svd { r: svd_rank_for_ratio(t.c, t.s, alpha) }
     } else {
         let (r1, r2) = tucker_rank_for_ratio(t.c, t.s, t.k, alpha, None);
         Scheme::Tucker { r1, r2 }
+    }
+}
+
+/// Family-aware rank selection at compression ratio `alpha`.
+pub fn ratio_scheme_with(t: &ConvSite, alpha: f64, family: SchemeFamily) -> Scheme {
+    match family {
+        SchemeFamily::Svd => ratio_scheme(t, alpha),
+        SchemeFamily::Tucker2 => {
+            // the k=1 case solves the same quadratic with k^2 = 1, i.e. the
+            // exact three-matrix chain C*r1 + r1*r2 + r2*S
+            let (r1, r2) = tucker_rank_for_ratio(t.c, t.s, t.k.max(1), alpha, None);
+            Scheme::Tucker2 { r1, r2 }
+        }
+        SchemeFamily::Cp => Scheme::Cp { r: cp_rank_for_ratio(t.c, t.s, t.k, alpha) },
     }
 }
 
@@ -143,6 +220,25 @@ pub fn plan_variant(
     groups: usize,
     overrides: Option<&Plan>,
 ) -> Result<Plan> {
+    plan_variant_with(arch, variant, SchemeFamily::Svd, alpha, groups, overrides)
+}
+
+/// `plan_variant` with an explicit factor-chain family. `Variant::Tucker2`
+/// and `Variant::Cp` force their own family; everything else lowers via
+/// `family` (the CLI's `--scheme` flag lands here).
+pub fn plan_variant_with(
+    arch: &Arch,
+    variant: Variant,
+    family: SchemeFamily,
+    alpha: f64,
+    groups: usize,
+    overrides: Option<&Plan>,
+) -> Result<Plan> {
+    let family = match variant {
+        Variant::Tucker2 => SchemeFamily::Tucker2,
+        Variant::Cp => SchemeFamily::Cp,
+        _ => family,
+    };
     let mut plan = Plan::new();
     let sites = arch.sites();
     for t in &sites {
@@ -151,10 +247,14 @@ pub fn plan_variant(
         } else {
             match variant {
                 Variant::Orig => unreachable!(),
-                Variant::Lrd | Variant::Freeze | Variant::Merged => ratio_scheme(t, alpha),
+                Variant::Lrd
+                | Variant::Freeze
+                | Variant::Merged
+                | Variant::Tucker2
+                | Variant::Cp => ratio_scheme_with(t, alpha, family),
                 Variant::Opt => overrides
                     .and_then(|o| o.get(&t.name).cloned())
-                    .unwrap_or_else(|| ratio_scheme(t, alpha)),
+                    .unwrap_or_else(|| ratio_scheme_with(t, alpha, family)),
                 Variant::Branched => {
                     if t.k > 1 {
                         // Branch the alpha-compression ranks (Table 6 compounds
@@ -224,6 +324,12 @@ impl Scheme {
             Scheme::MergedInto { peer } => {
                 vec![Json::Str("merged_into".into()), Json::Str(peer.clone())]
             }
+            Scheme::Tucker2 { r1, r2 } => vec![
+                Json::Str("tucker2".into()),
+                Json::Num(*r1 as f64),
+                Json::Num(*r2 as f64),
+            ],
+            Scheme::Cp { r } => vec![Json::Str("cp".into()), Json::Num(*r as f64)],
         };
         Json::Arr(arr)
     }
@@ -246,6 +352,10 @@ impl Scheme {
                 Scheme::Merged { r1: a[1].int()? as usize, r2: a[2].int()? as usize }
             }
             "merged_into" => Scheme::MergedInto { peer: a[1].str()?.to_string() },
+            "tucker2" => {
+                Scheme::Tucker2 { r1: a[1].int()? as usize, r2: a[2].int()? as usize }
+            }
+            "cp" => Scheme::Cp { r: a[1].int()? as usize },
             _ => bail!("unknown scheme tag {tag:?}"),
         })
     }
@@ -356,6 +466,67 @@ mod tests {
             let plan = plan_variant(&arch, *v, 2.0, 2, None).unwrap();
             let back = plan_from_json(&plan_to_json(&plan)).unwrap();
             assert_eq!(back, plan, "variant {v:?}");
+        }
+    }
+
+    #[test]
+    fn cp_rank_achieves_ratio() {
+        for (c, s, k) in [(64usize, 64usize, 3usize), (128, 256, 3), (64, 64, 1)] {
+            for alpha in [1.5f64, 2.0, 4.0] {
+                let r = cp_rank_for_ratio(c, s, k, alpha);
+                let orig = c * s * k * k;
+                let dec = if k == 1 { r * (c + s) } else { r * (c + s + 2 * k) };
+                assert!(
+                    (dec as f64) <= orig as f64 / alpha * 1.05,
+                    "({c},{s},{k})@{alpha}: {dec} vs {orig}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn family_plans_cover_every_non_stem_site() {
+        let arch = Arch::by_name("resnet-mini").unwrap();
+        let t2 = plan_variant(&arch, Variant::Tucker2, 2.0, 2, None).unwrap();
+        let cp = plan_variant(&arch, Variant::Cp, 2.0, 2, None).unwrap();
+        assert_eq!(t2["stem.conv"], Scheme::Orig);
+        assert_eq!(cp["stem.conv"], Scheme::Orig);
+        for (name, s) in &t2 {
+            if name != "stem.conv" {
+                assert!(matches!(s, Scheme::Tucker2 { .. }), "{name}: {s:?}");
+            }
+        }
+        for (name, s) in &cp {
+            if name != "stem.conv" {
+                assert!(matches!(s, Scheme::Cp { .. }), "{name}: {s:?}");
+            }
+        }
+        // plumbing an explicit family through an Lrd-shaped variant matches
+        let via_family =
+            plan_variant_with(&arch, Variant::Lrd, SchemeFamily::Tucker2, 2.0, 2, None)
+                .unwrap();
+        assert_eq!(via_family, t2);
+    }
+
+    #[test]
+    fn tucker2_k1_ranks_solve_the_three_matrix_chain() {
+        // 64x64 1x1 @ 2x: C*r1 + r1*r2 + r2*S must be <= 4096/2
+        let site = ConvSite {
+            name: "t".into(),
+            c: 64,
+            s: 64,
+            k: 1,
+            stride: 1,
+            padding: 0,
+            kind: SiteKind::Conv,
+        };
+        match ratio_scheme_with(&site, 2.0, SchemeFamily::Tucker2) {
+            Scheme::Tucker2 { r1, r2 } => {
+                let dec = 64 * r1 + r1 * r2 + r2 * 64;
+                assert!(dec <= 64 * 64 / 2 + 64, "{r1}x{r2} -> {dec}");
+                assert!(r1 >= 1 && r2 >= 1);
+            }
+            other => panic!("unexpected {other:?}"),
         }
     }
 

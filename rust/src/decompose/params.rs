@@ -9,9 +9,9 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use super::weights::{branch_tucker, merge_bottleneck, svd_split, tucker_stack};
+use super::weights::{branch_tucker, cp_stack, merge_bottleneck, svd_split, tucker_stack, CpStack};
 use super::{Plan, Scheme};
-use crate::linalg::{Matrix, Tensor4};
+use crate::linalg::{Matrix, Tensor4, Tucker2};
 use crate::model::{Arch, SiteKind};
 use crate::runtime::HostTensor;
 use crate::util::rng::Rng;
@@ -138,18 +138,129 @@ pub fn decompose_params(arch: &Arch, plan: &Plan, orig: &Params) -> Result<Param
                 out.insert(format!("{}.bn.b", t.name), HostTensor::zeros(vec![*r2]));
             }
             Scheme::MergedInto { .. } => {} // written by the peer conv2
+            Scheme::Tucker2 { r1, r2 } => {
+                // three-factor chain for every site shape: kxk convs keep the
+                // 4-d core, 1x1 convs and the fc head store a 2-d [r2, r1] core
+                if w.dims.len() == 4 {
+                    let f = tucker_stack(&as_t4(w), *r1, *r2);
+                    out.insert(format!("{}.u", t.name), ht_mat(&f.u));
+                    out.insert(format!("{}.core", t.name), ht_t4(&f.core));
+                    out.insert(format!("{}.v", t.name), ht_mat(&f.v));
+                } else {
+                    let w4 =
+                        Tensor4::from_vec(w.dims[0], w.dims[1], 1, 1, w.data.clone());
+                    let f = tucker_stack(&w4, *r1, *r2);
+                    out.insert(format!("{}.u", t.name), ht_mat(&f.u));
+                    out.insert(
+                        format!("{}.core", t.name),
+                        HostTensor::new(vec![*r2, *r1], f.core.data.clone()),
+                    );
+                    out.insert(format!("{}.v", t.name), ht_mat(&f.v));
+                }
+                if t.kind == SiteKind::Fc {
+                    out.insert(format!("{}.b", t.name), orig[&format!("{}.b", t.name)].clone());
+                }
+            }
+            Scheme::Cp { r } => {
+                if t.k == 1 {
+                    // CP of a matrix degenerates to the SVD pair
+                    let (w0, w1) = svd_split(&as_mat(w), *r);
+                    out.insert(format!("{}.w0", t.name), ht_mat(&w0));
+                    out.insert(format!("{}.w1", t.name), ht_mat(&w1));
+                    if t.kind == SiteKind::Fc {
+                        out.insert(
+                            format!("{}.b", t.name),
+                            orig[&format!("{}.b", t.name)].clone(),
+                        );
+                    }
+                } else {
+                    let f = cp_stack(&as_t4(w), *r);
+                    out.insert(format!("{}.u", t.name), ht_mat(&f.u));
+                    out.insert(format!("{}.kh", t.name), ht_mat(&f.kh));
+                    out.insert(format!("{}.kw", t.name), ht_mat(&f.kw));
+                    out.insert(format!("{}.w1", t.name), ht_mat(&f.w1));
+                }
+            }
         }
     }
     Ok(out)
 }
 
+/// Dense re-composition of chain-decomposed params back into `Orig`-style
+/// weights — the oracle for the "decomposed forward == original forward of
+/// the reconstruction" equivalence tests.
+pub fn reconstruct_params(arch: &Arch, plan: &Plan, dec: &Params) -> Result<Params> {
+    let mut out = Params::new();
+    for t in arch.sites() {
+        let scheme = plan.get(&t.name).unwrap_or(&Scheme::Orig);
+        if t.kind != SiteKind::Fc {
+            out.insert(
+                format!("{}.bn.g", t.name),
+                dec[&format!("{}.bn.g", t.name)].clone(),
+            );
+            out.insert(
+                format!("{}.bn.b", t.name),
+                dec[&format!("{}.bn.b", t.name)].clone(),
+            );
+        } else if let Some(b) = dec.get(&format!("{}.b", t.name)) {
+            out.insert(format!("{}.b", t.name), b.clone());
+        }
+        let name = |suf: &str| format!("{}.{suf}", t.name);
+        let w = match scheme {
+            Scheme::Orig => dec[&name("w")].clone(),
+            Scheme::Svd { .. } => {
+                let w0 = as_mat(&dec[&name("w0")]);
+                let w1 = as_mat(&dec[&name("w1")]);
+                ht_mat(&w1.matmul(&w0))
+            }
+            Scheme::Tucker { .. } | Scheme::Tucker2 { .. } => {
+                let u = as_mat(&dec[&name("u")]);
+                let v = as_mat(&dec[&name("v")]);
+                let core = &dec[&name("core")];
+                if core.dims.len() == 4 {
+                    let f = Tucker2 { u, core: as_t4(core), v };
+                    ht_t4(&f.reconstruct())
+                } else {
+                    let cm = as_mat(core);
+                    ht_mat(&v.matmul(&cm).matmul(&u))
+                }
+            }
+            Scheme::Cp { .. } => {
+                if t.k == 1 {
+                    let w0 = as_mat(&dec[&name("w0")]);
+                    let w1 = as_mat(&dec[&name("w1")]);
+                    ht_mat(&w1.matmul(&w0))
+                } else {
+                    let f = CpStack {
+                        u: as_mat(&dec[&name("u")]),
+                        kh: as_mat(&dec[&name("kh")]),
+                        kw: as_mat(&dec[&name("kw")]),
+                        w1: as_mat(&dec[&name("w1")]),
+                    };
+                    ht_t4(&f.reconstruct())
+                }
+            }
+            Scheme::Branched { .. } | Scheme::Merged { .. } | Scheme::MergedInto { .. } => {
+                bail!("no dense per-site reconstruction for {scheme:?} at {}", t.name)
+            }
+        };
+        out.insert(name("w"), w);
+    }
+    Ok(out)
+}
+
 /// Paper §2.2 freeze mask over decomposed params: the SVD/Tucker 1x1
-/// factor weights are frozen (false = frozen).
+/// factor weights and the CP depthwise taps are frozen (false = frozen);
+/// the core / last factor stays trainable.
 pub fn freeze_mask(params: &Params) -> BTreeMap<String, bool> {
     params
         .keys()
         .map(|k| {
-            let frozen = k.ends_with(".w0") || k.ends_with(".u") || k.ends_with(".v");
+            let frozen = k.ends_with(".w0")
+                || k.ends_with(".u")
+                || k.ends_with(".v")
+                || k.ends_with(".kh")
+                || k.ends_with(".kw");
             (k.clone(), !frozen)
         })
         .collect()
@@ -166,7 +277,13 @@ mod tests {
         let arch = Arch::by_name("resnet-mini").unwrap();
         let mut rng = Rng::new(1);
         let orig = init_orig_params(&arch, &mut rng);
-        for v in [Variant::Lrd, Variant::Merged, Variant::Branched] {
+        for v in [
+            Variant::Lrd,
+            Variant::Merged,
+            Variant::Branched,
+            Variant::Tucker2,
+            Variant::Cp,
+        ] {
             let plan = plan_variant(&arch, v, 2.0, 2, None).unwrap();
             let params = decompose_params(&arch, &plan, &orig).unwrap();
             let all: usize = params.values().map(|t| t.data.len()).sum();
@@ -176,19 +293,92 @@ mod tests {
     }
 
     #[test]
+    fn chain_descriptor_matches_stored_factor_shapes() {
+        // the chain descriptor and the actual decomposition must agree on
+        // every factor's suffix and shape for the new families
+        use crate::decompose::chain::FactorChain;
+        let arch = Arch::by_name("resnet-mini").unwrap();
+        let mut rng = Rng::new(9);
+        let orig = init_orig_params(&arch, &mut rng);
+        for v in [Variant::Tucker2, Variant::Cp] {
+            let plan = plan_variant(&arch, v, 2.0, 2, None).unwrap();
+            let params = decompose_params(&arch, &plan, &orig).unwrap();
+            for t in arch.sites() {
+                let scheme = &plan[&t.name];
+                let Some(chain) = FactorChain::of(&t, scheme) else { continue };
+                let mut stored = 0usize;
+                for f in &chain.factors {
+                    let p = &params[&format!("{}.{}", t.name, f.suffix)];
+                    assert_eq!(p.dims, f.shape, "{} .{}", t.name, f.suffix);
+                    stored += p.data.len();
+                }
+                assert_eq!(stored, chain.params(), "{}", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn reconstruct_params_inverts_exact_decompositions() {
+        // at full rank every chain reconstructs its original weight, so
+        // reconstruct_params returns the original params (up to f32 noise)
+        use crate::decompose::Plan;
+        use crate::model::SiteKind;
+        use crate::util::check::assert_allclose;
+        let arch = Arch::by_name("resnet-mini").unwrap();
+        let mut rng = Rng::new(10);
+        let orig = init_orig_params(&arch, &mut rng);
+        let mut plan = Plan::new();
+        for t in arch.sites() {
+            let scheme = if t.kind == SiteKind::Stem {
+                Scheme::Orig
+            } else if t.k == 1 {
+                Scheme::Tucker2 { r1: t.c.min(t.s), r2: t.c.min(t.s) }
+            } else {
+                Scheme::Tucker2 { r1: t.c, r2: t.s }
+            };
+            plan.insert(t.name.clone(), scheme);
+        }
+        let dec = decompose_params(&arch, &plan, &orig).unwrap();
+        let back = reconstruct_params(&arch, &plan, &dec).unwrap();
+        for (k, v) in &orig {
+            assert_eq!(back[k].dims, v.dims, "{k}");
+            if k.ends_with(".w") {
+                assert_allclose(&back[k].data, &v.data, 1e-2, 1e-2);
+            }
+        }
+    }
+
+    #[test]
     fn freeze_mask_targets_factors() {
         let arch = Arch::by_name("resnet-mini").unwrap();
         let mut rng = Rng::new(2);
         let orig = init_orig_params(&arch, &mut rng);
-        let plan = plan_variant(&arch, Variant::Lrd, 2.0, 2, None).unwrap();
-        let params = decompose_params(&arch, &plan, &orig).unwrap();
-        let mask = freeze_mask(&params);
-        let frozen: Vec<_> = mask.iter().filter(|(_, &t)| !t).map(|(k, _)| k).collect();
-        assert!(!frozen.is_empty());
-        for k in frozen {
-            assert!(k.ends_with(".w0") || k.ends_with(".u") || k.ends_with(".v"));
+        for v in [Variant::Lrd, Variant::Cp] {
+            let plan = plan_variant(&arch, v, 2.0, 2, None).unwrap();
+            let params = decompose_params(&arch, &plan, &orig).unwrap();
+            let mask = freeze_mask(&params);
+            let frozen: Vec<_> =
+                mask.iter().filter(|(_, &t)| !t).map(|(k, _)| k).collect();
+            assert!(!frozen.is_empty());
+            for k in frozen {
+                assert!(
+                    k.ends_with(".w0")
+                        || k.ends_with(".u")
+                        || k.ends_with(".v")
+                        || k.ends_with(".kh")
+                        || k.ends_with(".kw"),
+                    "{k} frozen unexpectedly"
+                );
+            }
+            if v == Variant::Lrd {
+                assert!(mask["layer1.0.conv2.core"]);
+            } else {
+                // CP chain: depthwise taps frozen, the out 1x1 trainable
+                assert!(!mask["layer1.0.conv2.kh"]);
+                assert!(!mask["layer1.0.conv2.kw"]);
+                assert!(mask["layer1.0.conv2.w1"]);
+            }
         }
-        assert!(mask["layer1.0.conv2.core"]);
     }
 
     #[test]

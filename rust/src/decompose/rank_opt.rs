@@ -16,7 +16,11 @@
 
 use anyhow::Result;
 
-use super::{svd_rank_for_ratio, tucker_rank_for_ratio, Plan, Scheme};
+use super::chain::FactorChain;
+use super::{
+    cp_rank_for_ratio, svd_rank_for_ratio, tucker_rank_for_ratio, Plan, Scheme, SchemeFamily,
+};
+use crate::linalg::{svd, Matrix, Tensor4};
 use crate::model::{Arch, ConvSite, SiteKind};
 
 /// Wall-clock oracle for one layer configuration (seconds per execution).
@@ -37,11 +41,22 @@ pub struct RankOptConfig {
     pub refine: usize,
     pub batch: usize,
     pub hw: usize,
+    /// factor-chain family candidate ranks are lowered to during the
+    /// sweep (Svd = the paper's two-factor convention)
+    pub family: SchemeFamily,
 }
 
 impl Default for RankOptConfig {
     fn default() -> Self {
-        RankOptConfig { alpha: 2.0, rmin_frac: 0.5, stride: 4, refine: 4, batch: 8, hw: 64 }
+        RankOptConfig {
+            alpha: 2.0,
+            rmin_frac: 0.5,
+            stride: 4,
+            refine: 4,
+            batch: 8,
+            hw: 64,
+            family: SchemeFamily::Svd,
+        }
     }
 }
 
@@ -61,21 +76,15 @@ pub struct SiteDecision {
     pub t_chosen: f64,
     /// (rank, time) samples from the sweep, ascending rank
     pub sweep: Vec<(usize, f64)>,
+    /// family the sweep's candidate schemes were drawn from
+    pub family: SchemeFamily,
 }
 
 impl SiteDecision {
     pub fn scheme(&self, site: &ConvSite) -> Scheme {
         match self.chosen_rank {
             None => Scheme::Orig,
-            Some(r) => {
-                if site.k == 1 {
-                    Scheme::Svd { r }
-                } else {
-                    let beta = site.s as f64 / site.c as f64;
-                    let r2 = ((beta * r as f64) as usize).clamp(1, site.s);
-                    Scheme::Tucker { r1: r, r2 }
-                }
-            }
+            Some(r) => scheme_at_rank(site, r, self.family),
         }
     }
 
@@ -85,22 +94,49 @@ impl SiteDecision {
     }
 }
 
-fn scheme_at_rank(site: &ConvSite, r: usize) -> Scheme {
-    if site.k == 1 {
-        Scheme::Svd { r }
-    } else {
-        let beta = site.s as f64 / site.c as f64;
-        let r2 = ((beta * r as f64) as usize).clamp(1, site.s);
-        Scheme::Tucker { r1: r, r2 }
+/// The concrete scheme a candidate rank lowers to under a chain family.
+/// The Svd family keeps the paper's convention (SVD pair for matrices,
+/// Tucker stack for spatial convs); Tucker2 forces the explicit
+/// three-factor chain everywhere; Cp uses the rank-`r` separable chain.
+fn scheme_at_rank(site: &ConvSite, r: usize, family: SchemeFamily) -> Scheme {
+    let beta = site.s as f64 / site.c as f64;
+    let r2 = ((beta * r as f64) as usize).clamp(1, site.s);
+    match family {
+        SchemeFamily::Svd => {
+            if site.k == 1 {
+                Scheme::Svd { r }
+            } else {
+                Scheme::Tucker { r1: r, r2 }
+            }
+        }
+        SchemeFamily::Tucker2 => {
+            if site.k == 1 {
+                Scheme::Tucker2 { r1: r, r2: r.min(site.s) }
+            } else {
+                Scheme::Tucker2 { r1: r, r2 }
+            }
+        }
+        SchemeFamily::Cp => Scheme::Cp { r },
     }
 }
 
 /// Initial rank from the desired compression ratio.
 pub fn initial_rank(site: &ConvSite, alpha: f64) -> usize {
-    if site.k == 1 {
-        svd_rank_for_ratio(site.c, site.s, alpha)
-    } else {
-        tucker_rank_for_ratio(site.c, site.s, site.k, alpha, None).0
+    initial_rank_for(site, alpha, SchemeFamily::Svd)
+}
+
+/// Family-aware eq. (7): the rank achieving the target compression under
+/// the chosen chain family's parameter count.
+pub fn initial_rank_for(site: &ConvSite, alpha: f64, family: SchemeFamily) -> usize {
+    match family {
+        SchemeFamily::Cp => cp_rank_for_ratio(site.c, site.s, site.k, alpha),
+        SchemeFamily::Svd | SchemeFamily::Tucker2 => {
+            if site.k == 1 {
+                svd_rank_for_ratio(site.c, site.s, alpha)
+            } else {
+                tucker_rank_for_ratio(site.c, site.s, site.k, alpha, None).0
+            }
+        }
     }
 }
 
@@ -110,7 +146,7 @@ pub fn optimize_site(
     site: &ConvSite,
     cfg: &RankOptConfig,
 ) -> Result<SiteDecision> {
-    let r_init = initial_rank(site, cfg.alpha);
+    let r_init = initial_rank_for(site, cfg.alpha, cfg.family);
     let r_min = ((r_init as f64 * cfg.rmin_frac) as usize).max(1);
     let t_orig = timer.time_layer(site, &Scheme::Orig, cfg.batch, cfg.hw)?;
 
@@ -118,7 +154,7 @@ pub fn optimize_site(
     let mut sweep: Vec<(usize, f64)> = Vec::new();
     let mut r = r_init;
     loop {
-        let t = timer.time_layer(site, &scheme_at_rank(site, r), cfg.batch, cfg.hw)?;
+        let t = timer.time_layer(site, &scheme_at_rank(site, r, cfg.family), cfg.batch, cfg.hw)?;
         sweep.push((r, t));
         if r <= r_min || r < cfg.stride {
             break;
@@ -151,7 +187,8 @@ pub fn optimize_site(
             if sweep.iter().any(|&(rr, _)| rr == r) {
                 continue;
             }
-            let t = timer.time_layer(site, &scheme_at_rank(site, r), cfg.batch, cfg.hw)?;
+            let t =
+                timer.time_layer(site, &scheme_at_rank(site, r, cfg.family), cfg.batch, cfg.hw)?;
             sweep.push((r, t));
         }
         sweep.sort_by_key(|&(r, _)| r);
@@ -191,6 +228,7 @@ pub fn optimize_site(
         t_initial,
         t_chosen,
         sweep,
+        family: cfg.family,
     })
 }
 
@@ -257,6 +295,12 @@ impl AnalyticTimer {
             ],
             Scheme::Merged { r1, r2 } => vec![(r1 * r2 * k2, *r2)],
             Scheme::MergedInto { .. } => vec![(site.c * site.s, site.s)],
+            s @ (Scheme::Tucker2 { .. } | Scheme::Cp { .. }) => FactorChain::of(site, s)
+                .expect("chain scheme")
+                .factors
+                .iter()
+                .map(|f| (f.macs_per_px, f.gate_dim))
+                .collect(),
         }
     }
 }
@@ -277,6 +321,109 @@ impl LayerTimer for AnalyticTimer {
             t += flops / (self.flops_per_sec * eff) + self.overhead;
         }
         Ok(t)
+    }
+}
+
+// --------------------------------------------------------------------------
+// EVBMF — automatic rank selection from the weight spectrum (no timing)
+// --------------------------------------------------------------------------
+
+fn evb_tau(x: f64, alpha: f64) -> f64 {
+    let d = x - (1.0 + alpha);
+    0.5 * (d + (d * d - 4.0 * alpha).max(0.0).sqrt())
+}
+
+/// VB free energy of an `l x m` matrix at noise variance `sigma2`, up to
+/// sigma2-independent terms (Nakajima et al. 2013, eq. 27 as implemented
+/// by the musco/VBMF line of work).
+fn evb_free_energy(sigma2: f64, l: usize, m: usize, s: &[f64], xubar: f64) -> f64 {
+    let alpha = l as f64 / m as f64;
+    let mut obj = 0.0;
+    for &sv in s {
+        let x = (sv * sv / (m as f64 * sigma2)).max(1e-300);
+        if x > xubar {
+            let t = evb_tau(x, alpha);
+            obj += x - t + ((t + 1.0) / x).ln() + alpha * (t / alpha + 1.0).ln();
+        } else {
+            obj += x - x.ln();
+        }
+    }
+    obj
+}
+
+/// Empirical Variational Bayes MF rank of an `l x m` (`l <= m`) matrix
+/// from its descending singular values: the unknown noise variance is
+/// found by golden-section search on the VB free energy, then the rank
+/// is the number of singular values above the analytic EVB threshold.
+/// This is the musco-style automatic selector — no timed sweeps, one
+/// SVD per site.
+pub fn evbmf_rank(s: &[f64], l: usize, m: usize) -> usize {
+    assert!(l <= m, "evbmf_rank wants l <= m, got {l} x {m}");
+    assert!(!s.is_empty());
+    let (lf, mf) = (l as f64, m as f64);
+    let alpha = lf / mf;
+    let tauubar = 2.5129 * alpha.sqrt();
+    let xubar = (1.0 + tauubar) * (1.0 + alpha / tauubar);
+    // sigma2 bracket: everything-is-noise above, the spectrum tail below
+    let sum_sq: f64 = s.iter().map(|&x| x * x).sum();
+    let upper = (sum_sq / (lf * mf)).max(1e-30);
+    let idx = (((lf / (1.0 + alpha)).ceil() - 1.0).max(0.0) as usize).min(s.len() - 1);
+    let tail_mean =
+        s[idx..].iter().map(|&x| x * x).sum::<f64>() / (s.len() - idx) as f64;
+    let lower = (s[idx] * s[idx] / (mf * xubar)).max(tail_mean / mf).max(1e-30);
+    let (mut a, mut b) = (lower.ln(), upper.max(lower * (1.0 + 1e-9)).ln());
+    let phi = (5f64.sqrt() - 1.0) / 2.0;
+    let f = |ls: f64| evb_free_energy(ls.exp(), l, m, s, xubar);
+    let (mut c, mut d) = (b - phi * (b - a), a + phi * (b - a));
+    let (mut fc, mut fd) = (f(c), f(d));
+    for _ in 0..100 {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - phi * (b - a);
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + phi * (b - a);
+            fd = f(d);
+        }
+    }
+    let sigma2 = ((a + b) / 2.0).exp();
+    let threshold = (mf * sigma2 * (1.0 + tauubar) * (1.0 + alpha / tauubar)).sqrt();
+    s.iter().filter(|&&sv| sv > threshold).count()
+}
+
+/// EVBMF rank of a weight matrix (orientation-free: the spectrum of the
+/// transpose is identical, so `l`/`m` are just sorted dims).
+pub fn vbmf_matrix_rank(w: &Matrix) -> usize {
+    let (l, m) = (w.rows.min(w.cols), w.rows.max(w.cols));
+    let sv: Vec<f64> = svd(w).s.iter().map(|&x| x as f64).collect();
+    let n = sv.len().min(l);
+    evbmf_rank(&sv[..n], l, m)
+}
+
+/// EVBMF ranks of a conv weight's two channel-mode unfoldings — the
+/// Tucker-2 `(r1, r2)` pair.
+pub fn vbmf_ranks(w: &Tensor4) -> (usize, usize) {
+    let r1 = vbmf_matrix_rank(&w.unfold_i()).max(1);
+    let r2 = vbmf_matrix_rank(&w.unfold_o()).max(1);
+    (r1, r2)
+}
+
+/// Map a site's VBMF ranks onto the paper's scheme convention (SVD pair
+/// for 1x1/fc, Tucker stack for spatial convs) — the drop-in automatic
+/// alternative to `optimize_site`'s timed sweep: one SVD per site, no
+/// layer timing at all.
+pub fn vbmf_scheme(site: &ConvSite, w: &Tensor4) -> Scheme {
+    if site.k == 1 {
+        let r = vbmf_matrix_rank(&w.unfold_o()).clamp(1, site.c.min(site.s));
+        Scheme::Svd { r }
+    } else {
+        let (r1, r2) = vbmf_ranks(w);
+        Scheme::Tucker { r1: r1.clamp(1, site.c), r2: r2.clamp(1, site.s) }
     }
 }
 
@@ -356,6 +503,76 @@ mod tests {
         assert!(!d.sweep.is_empty());
         for w in d.sweep.windows(2) {
             assert!(w[0].0 < w[1].0);
+        }
+    }
+
+    #[test]
+    fn family_sweeps_lower_to_their_own_schemes() {
+        for (family, k) in [
+            (SchemeFamily::Tucker2, 1),
+            (SchemeFamily::Tucker2, 3),
+            (SchemeFamily::Cp, 1),
+            (SchemeFamily::Cp, 3),
+        ] {
+            let mut timer = AnalyticTimer { lane: 8, ..Default::default() };
+            let c = RankOptConfig { family, ..cfg() };
+            let t = site(64, 64, k);
+            let d = optimize_site(&mut timer, &t, &c).unwrap();
+            assert_eq!(d.family, family);
+            match (family, d.scheme(&t)) {
+                (_, Scheme::Orig) => {}
+                (SchemeFamily::Tucker2, Scheme::Tucker2 { r1, r2 }) => {
+                    assert!(r1 >= 1 && r2 >= 1 && r1 <= 64 && r2 <= 64);
+                }
+                (SchemeFamily::Cp, Scheme::Cp { r }) => assert!(r >= 1),
+                (f, s) => panic!("family {f:?} produced scheme {s:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn evbmf_recovers_planted_rank() {
+        let mut rng = crate::util::rng::Rng::new(21);
+        let a = Matrix::random(64, 12, &mut rng);
+        let b = Matrix::random(12, 64, &mut rng);
+        let mut w = a.matmul(&b);
+        for x in w.data.iter_mut() {
+            *x += 1e-3 * rng.normal_f32();
+        }
+        assert_eq!(vbmf_matrix_rank(&w), 12);
+    }
+
+    #[test]
+    fn evbmf_full_noise_finds_no_rank() {
+        // pure iid noise: every singular value is explained by sigma2,
+        // nothing survives the threshold
+        let mut rng = crate::util::rng::Rng::new(22);
+        let w = Matrix::random(48, 64, &mut rng);
+        assert_eq!(vbmf_matrix_rank(&w), 0);
+    }
+
+    #[test]
+    fn vbmf_scheme_maps_both_kernel_shapes() {
+        let mut rng = crate::util::rng::Rng::new(23);
+        // k=1: planted rank-8 channel mixing
+        let a = Matrix::random(32, 8, &mut rng);
+        let b = Matrix::random(8, 32, &mut rng);
+        let mut m = a.matmul(&b);
+        for x in m.data.iter_mut() {
+            *x += 1e-3 * rng.normal_f32();
+        }
+        let w1 = Tensor4::from_vec(32, 32, 1, 1, m.data.clone());
+        match vbmf_scheme(&site(32, 32, 1), &w1) {
+            Scheme::Svd { r } => assert_eq!(r, 8),
+            s => panic!("k=1 must map to Svd, got {s:?}"),
+        }
+        // k=3: a random conv has full-ish mode ranks; just check mapping
+        let w3 = Tensor4::random(16, 16, 3, 3, &mut rng);
+        match vbmf_scheme(&site(16, 16, 3), &w3) {
+            Scheme::Tucker { r1, r2 } => {
+                assert!((1..=16).contains(&r1) && (1..=16).contains(&r2));
+            }
+            s => panic!("k=3 must map to Tucker, got {s:?}"),
         }
     }
 }

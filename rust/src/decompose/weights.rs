@@ -17,6 +17,148 @@ pub fn tucker_stack(w: &Tensor4, r1: usize, r2: usize) -> Tucker2 {
     tucker2(w, r1, r2)
 }
 
+/// CP / Lebedev chain weights in application order:
+/// `u` [R, C] (1x1 in), `kh` [R, k] (kx1 depthwise), `kw` [R, k]
+/// (1xk depthwise), `w1` [S, R] (1x1 out).
+#[derive(Clone, Debug)]
+pub struct CpStack {
+    pub u: Matrix,
+    pub kh: Matrix,
+    pub kw: Matrix,
+    pub w1: Matrix,
+}
+
+/// Rank-1 separable projection of a [C, kh, kw] slab by alternating power
+/// iterations: slab ~= a (x) b (x) c with b, c unit and a carrying scale.
+fn separate_rank1(slab: &[f32], c: usize, kh: usize, kw: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let at = |ci: usize, hi: usize, wi: usize| slab[(ci * kh + hi) * kw + wi];
+    let mut a = vec![0.0f32; c];
+    let mut b = vec![1.0f32; kh];
+    let mut cc = vec![1.0f32; kw];
+    let norm1 = |v: &mut [f32]| {
+        let n = v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32;
+        if n > 1e-20 {
+            for x in v.iter_mut() {
+                *x /= n;
+            }
+        } else if let Some(first) = v.first_mut() {
+            *first = 1.0;
+        }
+    };
+    norm1(&mut b);
+    norm1(&mut cc);
+    for _ in 0..8 {
+        for (ci, av) in a.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (hi, &bv) in b.iter().enumerate() {
+                for (wi, &cv) in cc.iter().enumerate() {
+                    acc += at(ci, hi, wi) * bv * cv;
+                }
+            }
+            *av = acc;
+        }
+        let an = a.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32;
+        if an <= 1e-20 {
+            break;
+        }
+        for (hi, bv) in b.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (ci, &av) in a.iter().enumerate() {
+                for (wi, &cv) in cc.iter().enumerate() {
+                    acc += at(ci, hi, wi) * av * cv;
+                }
+            }
+            *bv = acc / (an * an);
+        }
+        norm1(&mut b);
+        for (wi, cv) in cc.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (ci, &av) in a.iter().enumerate() {
+                for (hi, &bv) in b.iter().enumerate() {
+                    acc += at(ci, hi, wi) * av * bv;
+                }
+            }
+            *cv = acc / (an * an);
+        }
+        norm1(&mut cc);
+    }
+    (a, b, cc)
+}
+
+/// Deterministic CP chain construction: top-`r` SVD components of the
+/// mode-O unfolding, each right singular vector projected to a separable
+/// [C] (x) [kh] (x) [kw] triple. Cheaper than full ALS at paper-scale
+/// layers (one Jacobi SVD, like `tucker_stack`); `linalg::cp_als` remains
+/// the reference for small tensors. Components beyond the unfolding rank
+/// are zero-padded so the factor shapes always match the requested rank.
+pub fn cp_stack(w: &Tensor4, r: usize) -> CpStack {
+    let (s_ch, c_ch, kh, kw) = (w.o, w.i, w.h, w.w);
+    let dec = svd(&w.unfold_o());
+    let r_eff = r.min(dec.s.len());
+    let mut u = Matrix::zeros(r, c_ch);
+    let mut kh_m = Matrix::zeros(r, kh);
+    let mut kw_m = Matrix::zeros(r, kw);
+    let mut w1 = Matrix::zeros(s_ch, r);
+    for j in 0..r_eff {
+        let sig = dec.s[j].max(0.0);
+        let root = sig.sqrt();
+        for si in 0..s_ch {
+            w1[(si, j)] = dec.u[(si, j)] * root;
+        }
+        let slab: Vec<f32> = dec.vt.row(j).to_vec();
+        let (a, b, c) = separate_rank1(&slab, c_ch, kh, kw);
+        for (ci, &av) in a.iter().enumerate() {
+            u[(j, ci)] = av * root;
+        }
+        for (hi, &bv) in b.iter().enumerate() {
+            kh_m[(j, hi)] = bv;
+        }
+        for (wi, &cv) in c.iter().enumerate() {
+            kw_m[(j, wi)] = cv;
+        }
+    }
+    CpStack { u, kh: kh_m, kw: kw_m, w1 }
+}
+
+impl CpStack {
+    /// Dense OIHW reconstruction of the chain (for error reporting and the
+    /// lowering equivalence tests).
+    pub fn reconstruct(&self) -> Tensor4 {
+        let (r, c_ch) = (self.u.rows, self.u.cols);
+        let (s_ch, kh, kw) = (self.w1.rows, self.kh.cols, self.kw.cols);
+        let mut out = Tensor4::zeros(s_ch, c_ch, kh, kw);
+        for j in 0..r {
+            for si in 0..s_ch {
+                let ws = self.w1[(si, j)];
+                if ws == 0.0 {
+                    continue;
+                }
+                for ci in 0..c_ch {
+                    let wc = ws * self.u[(j, ci)];
+                    if wc == 0.0 {
+                        continue;
+                    }
+                    for hi in 0..kh {
+                        let wh = wc * self.kh[(j, hi)];
+                        for wi in 0..kw {
+                            *out.at_mut(si, ci, hi, wi) += wh * self.kw[(j, wi)];
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Exact parameter count of the four factors.
+    pub fn params(&self) -> usize {
+        self.u.rows * self.u.cols
+            + self.kh.rows * self.kh.cols
+            + self.kw.rows * self.kw.cols
+            + self.w1.rows * self.w1.cols
+    }
+}
+
 /// Fig. 3 merged bottleneck weights.
 #[derive(Clone, Debug)]
 pub struct MergedBottleneck {
@@ -93,6 +235,44 @@ mod tests {
         let w = Matrix::random(12, 8, &mut rng);
         let (w0, w1) = svd_split(&w, 8);
         assert_allclose(&w1.matmul(&w0).data, &w.data, 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn cp_stack_shapes_and_zero_padding() {
+        let mut rng = Rng::new(7);
+        let w = Tensor4::random(6, 5, 3, 3, &mut rng);
+        // r beyond the unfolding rank (6): extra components are zero
+        let s = cp_stack(&w, 9);
+        assert_eq!((s.u.rows, s.u.cols), (9, 5));
+        assert_eq!((s.kh.rows, s.kh.cols), (9, 3));
+        assert_eq!((s.kw.rows, s.kw.cols), (9, 3));
+        assert_eq!((s.w1.rows, s.w1.cols), (6, 9));
+        assert_eq!(s.params(), 9 * 5 + 9 * 3 + 9 * 3 + 6 * 9);
+        for j in 6..9 {
+            assert!(s.u.row(j).iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn cp_stack_recovers_separable_tensor() {
+        // W[s,c,h,w] = f[s] g[c] p[h] q[w] is exactly CP rank 1
+        let (s_ch, c_ch, k) = (5usize, 4usize, 3usize);
+        let f: Vec<f32> = (0..s_ch).map(|i| 0.5 + i as f32).collect();
+        let g: Vec<f32> = (0..c_ch).map(|i| 1.0 - 0.1 * i as f32).collect();
+        let p = [0.2f32, 1.0, 0.4];
+        let q = [0.9f32, -0.3, 0.1];
+        let mut w = Tensor4::zeros(s_ch, c_ch, k, k);
+        for si in 0..s_ch {
+            for ci in 0..c_ch {
+                for hi in 0..k {
+                    for wi in 0..k {
+                        *w.at_mut(si, ci, hi, wi) = f[si] * g[ci] * p[hi] * q[wi];
+                    }
+                }
+            }
+        }
+        let s = cp_stack(&w, 1);
+        assert_allclose(&s.reconstruct().data, &w.data, 1e-3, 1e-4);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use super::Report;
 use crate::decompose::rank_opt::{
     optimize_site, AnalyticTimer, LayerTimer, RankOptConfig,
 };
+use crate::decompose::SchemeFamily;
 use crate::model::Arch;
 use crate::profiler::Timer;
 use crate::runtime::layer_factory::EngineLayerTimer;
@@ -26,6 +27,8 @@ pub struct Config {
     pub hw: usize,
     pub stride: usize,
     pub refine: usize,
+    /// decomposition family the sweep lowers candidates to (`--scheme`)
+    pub family: SchemeFamily,
     /// compile options for the `--real` engine timer (`--opt-level`)
     pub opt: CompileOptions,
 }
@@ -51,6 +54,7 @@ impl Default for Config {
             hw: 32,
             stride: 4,
             refine: 4,
+            family: SchemeFamily::Svd,
             opt: CompileOptions::default(),
         }
     }
@@ -94,6 +98,7 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
         refine: cfg.refine,
         batch: cfg.batch,
         hw: cfg.hw,
+        family: cfg.family,
     };
 
     let mut rows = Vec::new();

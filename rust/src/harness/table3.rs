@@ -54,6 +54,8 @@ fn label(v: Variant) -> &'static str {
         Variant::Freeze => "Layer Freezing",
         Variant::Merged => "Layer Merging",
         Variant::Branched => "Layer Branching",
+        Variant::Tucker2 => "Tucker-2 Chain",
+        Variant::Cp => "CP Chain",
     }
 }
 
@@ -188,6 +190,19 @@ pub fn frozen_param_fraction(arch: &Arch, plan: &Plan) -> Result<f64> {
             Scheme::Branched { r1, r2, groups } => {
                 total += t.c * r1 + (r1 / groups) * (r2 / groups) * k2 * groups + r2 * t.s;
                 frozen += t.c * r1 + r2 * t.s;
+            }
+            Scheme::Tucker2 { r1, r2 } => {
+                total += t.c * r1 + r1 * r2 * k2 + r2 * t.s;
+                frozen += t.c * r1 + r2 * t.s; // u and v
+            }
+            Scheme::Cp { r } => {
+                if t.k == 1 {
+                    total += r * (t.c + t.s);
+                    frozen += r * t.c; // u
+                } else {
+                    total += r * (t.c + t.s + 2 * t.k);
+                    frozen += r * (t.c + 2 * t.k); // u, kh, kw
+                }
             }
             Scheme::Merged { r1, r2 } => total += r1 * r2 * k2,
             Scheme::MergedInto { .. } => {} // counted via peer's merged cost

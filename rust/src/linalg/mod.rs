@@ -2,11 +2,13 @@
 //! row-major matrices, QR, one-sided Jacobi SVD and Tucker-2 HOSVD over
 //! OIHW tensors. Sized for the paper's layers (up to 2048 x 512 factors).
 
+pub mod cp;
 pub mod qr;
 pub mod svd;
 pub mod tensor4;
 pub mod tucker;
 
+pub use cp::{cp_als, CpFactors};
 pub use qr::qr;
 pub use svd::{svd, Svd};
 pub use tensor4::Tensor4;

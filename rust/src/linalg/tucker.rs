@@ -160,6 +160,46 @@ mod tests {
     }
 
     #[test]
+    fn property_full_rank_round_trip() {
+        // rank sweep endpoint: at (C, S) the projection is exact for any
+        // random tensor and kernel size
+        property(4, |rng| {
+            let k = rng.range(1, 3);
+            let w = Tensor4::random(rng.range(3, 7), rng.range(3, 7), k, k, rng);
+            let t = tucker2(&w, w.i, w.o);
+            assert_allclose(&t.reconstruct().data, &w.data, 1e-3, 1e-3);
+        });
+    }
+
+    #[test]
+    fn property_error_bounded_by_truncated_spectra() {
+        // HOSVD projection bound: ||W - W_hat||^2 <= tail_I^2 + tail_O^2,
+        // the truncated singular-value tails of the two mode unfoldings
+        property(4, |rng| {
+            let w = Tensor4::random(rng.range(4, 9), rng.range(4, 9), 3, 3, rng);
+            let si = svd(&w.unfold_i()).s;
+            let so = svd(&w.unfold_o()).s;
+            let r1 = rng.range(1, w.i);
+            let r2 = rng.range(1, w.o);
+            let t = tucker2(&w, r1, r2);
+            let err = w.sub(&t.reconstruct()).fro();
+            let tail: f64 = si[r1..]
+                .iter()
+                .chain(so[r2..].iter())
+                .map(|&x| (x as f64) * (x as f64))
+                .sum();
+            assert!(
+                err * err <= tail * 1.05 + 1e-6,
+                "({},{})@({r1},{r2}): err^2 {} > spectral tail {}",
+                w.o,
+                w.i,
+                err * err,
+                tail
+            );
+        });
+    }
+
+    #[test]
     fn params_formula() {
         let mut rng = Rng::new(4);
         let w = Tensor4::random(16, 8, 3, 3, &mut rng);

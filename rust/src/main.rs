@@ -18,7 +18,7 @@ use anyhow::{anyhow, bail, Result};
 use lrdx::coordinator::batcher::BatchPolicy;
 use lrdx::coordinator::{Coordinator, ServableModel};
 use lrdx::decompose::rank_opt::{optimize_model, AnalyticTimer, LayerTimer, RankOptConfig};
-use lrdx::decompose::{plan_to_json, plan_variant, Variant};
+use lrdx::decompose::{plan_to_json, plan_variant, plan_variant_with, SchemeFamily, Variant};
 use lrdx::harness::{self, Report};
 use lrdx::model::{cost, Arch};
 use lrdx::profiler::Timer;
@@ -80,6 +80,11 @@ commands:
                 table1 table2 table3 table456 fig2 fig5
 flags: --artifacts DIR  --reports DIR  --arch NAME  --hw N  --batch N
        --alpha F  --groups N  --real  --full  --no-measure
+       --scheme svd|tucker2|cp  factor-chain family decomposed layers lower
+                          to (default svd: the paper's two-factor pair;
+                          tucker2 = 1x1 -> core -> 1x1 sandwich; cp =
+                          separable depthwise chain). bench/rank-search/
+                          train honour it
        --opt-level 0|1|2  IR pass pipeline for compiled graphs (default 2:
                           cleanup + low-rank re-merge fusion; 0 = as built)
        --lane N           lane width for the re-merge profitability gate
@@ -114,6 +119,13 @@ fn compile_opts(args: &Args) -> Result<CompileOptions> {
     }
     let threads = args.usize_or("threads", 1)?;
     Ok(CompileOptions { opt_level, lane, threads, amortize: None })
+}
+
+/// `--scheme svd|tucker2|cp` → the factor-chain family (default svd).
+fn scheme_family(args: &Args) -> Result<SchemeFamily> {
+    let name = args.get_or("scheme", "svd");
+    SchemeFamily::by_name(name)
+        .ok_or_else(|| anyhow!("unknown --scheme {name:?} (svd|tucker2|cp)"))
 }
 
 fn artifacts_dir(args: &Args) -> std::path::PathBuf {
@@ -220,6 +232,7 @@ fn cmd_rank_search(args: &Args) -> Result<()> {
         refine: args.usize_or("refine", 4)?,
         batch: args.usize_or("batch", 4)?,
         hw: args.usize_or("hw", 32)?,
+        family: scheme_family(args)?,
     };
     let mut real;
     let mut analytic;
@@ -333,9 +346,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         copts.opt_level.name(),
         copts.resolved_threads(),
     );
-    let plan = plan_variant(
+    let plan = plan_variant_with(
         &arch,
         variant,
+        scheme_family(args)?,
         args.f64_or("alpha", 2.0)?,
         args.usize_or("groups", 2)?,
         None,
@@ -539,6 +553,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 hw: args.usize_or("hw", 32)?,
                 stride: args.usize_or("stride", 4)?,
                 refine: args.usize_or("refine", 4)?,
+                family: scheme_family(args)?,
                 opt: copts.clone(),
                 ..Default::default()
             },

@@ -6,6 +6,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::decompose::chain::FactorChain;
 use crate::decompose::{Plan, Scheme};
 use crate::model::{Arch, BlockKind, SiteKind};
 
@@ -70,7 +71,14 @@ pub fn count_layers(arch: &Arch, plan: &Plan) -> usize {
         .map(|t| match plan.get(&t.name).unwrap_or(&Scheme::Orig) {
             Scheme::Orig | Scheme::Merged { .. } | Scheme::MergedInto { .. } => 1,
             Scheme::Svd { .. } => 2,
-            Scheme::Tucker { .. } | Scheme::Branched { .. } => 3,
+            Scheme::Tucker { .. } | Scheme::Branched { .. } | Scheme::Tucker2 { .. } => 3,
+            Scheme::Cp { .. } => {
+                if t.k == 1 {
+                    2
+                } else {
+                    4
+                }
+            }
         })
         .sum()
 }
@@ -110,6 +118,11 @@ pub fn count_params_split(arch: &Arch, plan: &Plan) -> (usize, usize) {
                 } else {
                     r2 * t.s
                 }
+            }
+            s @ (Scheme::Tucker2 { .. } | Scheme::Cp { .. }) => {
+                // exact three/four-factor chain counts via the descriptor
+                FactorChain::of(t, s).expect("chain scheme").params()
+                    + if t.kind == SiteKind::Fc { t.s } else { 0 }
             }
         };
         // BN affine (gamma + beta) on the site's output channels; merging
@@ -157,6 +170,9 @@ pub fn count_macs(arch: &Arch, plan: &Plan, hw: usize) -> usize {
                     } else {
                         a * r2 * t.s
                     }
+                }
+                s @ (Scheme::Tucker2 { .. } | Scheme::Cp { .. }) => {
+                    FactorChain::of(t, s).expect("chain scheme").macs(a)
                 }
             }
         })
@@ -281,6 +297,41 @@ mod tests {
         let a = arch("resnet50");
         let p = plan_variant(&a, Variant::Merged, 2.0, 4, None).unwrap();
         assert_eq!(count_layers(&a, &p), 50);
+    }
+
+    #[test]
+    fn chain_variant_counts_hand_computed() {
+        // one 64x64x3x3 conv site under each new scheme, checked against
+        // closed-form counts (satellite of the factor-chain refactor)
+        use crate::model::ConvSite;
+        let t = ConvSite {
+            name: "t".into(),
+            c: 64,
+            s: 64,
+            k: 3,
+            stride: 1,
+            padding: 1,
+            kind: SiteKind::Conv,
+        };
+        let t2 = FactorChain::of(&t, &Scheme::Tucker2 { r1: 38, r2: 38 }).unwrap();
+        assert_eq!(t2.params(), 64 * 38 + 38 * 38 * 9 + 38 * 64);
+        assert_eq!(t2.macs(49), 49 * (64 * 38 + 38 * 38 * 9 + 38 * 64));
+        let cp = FactorChain::of(&t, &Scheme::Cp { r: 137 }).unwrap();
+        assert_eq!(cp.params(), 137 * (64 + 64 + 2 * 3));
+        assert_eq!(cp.macs(49), 49 * 137 * (64 + 64 + 2 * 3));
+    }
+
+    #[test]
+    fn chain_variants_compress_params_near_alpha() {
+        // the family plans must land near the requested 2x on whole nets
+        let a = arch("resnet50");
+        let orig =
+            count_params(&a, &plan_variant(&a, Variant::Orig, 2.0, 4, None).unwrap());
+        for v in [Variant::Tucker2, Variant::Cp] {
+            let p = count_params(&a, &plan_variant(&a, v, 2.0, 4, None).unwrap());
+            let ratio = orig as f64 / p as f64;
+            assert!((1.5..2.6).contains(&ratio), "{v:?}: ratio {ratio}");
+        }
     }
 
     #[test]

@@ -43,6 +43,56 @@ pub fn pad_hw(b: &B, x: &Op, dims: &[usize; 4], p: usize, fill: f32) -> Result<O
     pad_w.concat_in_dim(&[x, pad_w.clone()], 3)
 }
 
+/// Zero-pad ONE spatial axis (2 = H, 3 = W) of an NCHW op by `p` on each
+/// side — the CP chain pads per depthwise stage instead of both at once.
+pub fn pad_axis(b: &B, x: &Op, dims: &[usize; 4], p: usize, axis: usize) -> Result<Op> {
+    if p == 0 {
+        return Ok(x.clone());
+    }
+    let mut pad_dims = *dims;
+    pad_dims[axis] = p;
+    let scalar = b.c0(0f32)?;
+    let pad = scalar.broadcast(&pad_dims)?;
+    pad.concat_in_dim(&[x.clone(), pad.clone()], axis)
+}
+
+/// Depthwise 1-D conv along `axis` (2 = H, 3 = W): channel `j` of the
+/// output is a k-tap FIR of channel `j` of the input with taps `taps[j,:]`
+/// ([R, k]). `dims` are x's dims, already padded along `axis`. This is the
+/// kx1 / 1xk stage of the CP (Lebedev) chain, built from slice +
+/// broadcast-multiply + add so every node already has a VJP.
+pub fn depthwise_1d(
+    x: &Op,
+    taps: &Op,
+    dims: &[usize; 4],
+    k: usize,
+    stride: usize,
+    axis: usize,
+) -> Result<Op> {
+    let r = dims[1];
+    let len = dims[axis];
+    if len < k {
+        bail!("axis extent {len} smaller than kernel {k}");
+    }
+    let o = (len - k) / stride + 1;
+    let mut out_dims = dims.to_vec();
+    out_dims[axis] = o;
+    let mut acc: Option<Op> = None;
+    for j in 0..k {
+        let xs = x.slice_in_dim(j, j + (o - 1) * stride + 1, stride, axis)?;
+        let tap = taps
+            .slice_in_dim1(j, j + 1, 1)?
+            .reshape(&[r])?
+            .broadcast_in_dim(&out_dims, &[1])?;
+        let contrib = (xs * tap)?;
+        acc = Some(match acc {
+            None => contrib,
+            Some(a) => (a + contrib)?,
+        });
+    }
+    Ok(acc.unwrap())
+}
+
 /// NCHW conv via shifted-slice matmuls. `x`: [N,C,H,W] (already padded),
 /// `w`: [S,C,k,k]. Returns [N,S,Ho,Wo].
 pub fn conv2d(
@@ -282,6 +332,51 @@ pub fn build_layer(
             let t = grouped_conv2d(&b, &tp, &core, &pd, *r2, site.k, site.stride, *groups)?;
             conv1x1(&t, &v, 1)?
         }
+        Scheme::Tucker2 { r1, r2 } => {
+            let u = param(&b, vec![*r1, site.c], "u")?;
+            if site.k == 1 {
+                // three chained 1x1s; stride rides on the first factor
+                let core = param(&b, vec![*r2, *r1], "core")?;
+                let v = param(&b, vec![site.s, *r2], "v")?;
+                let t = conv1x1(&x, &u, site.stride)?;
+                let t = conv1x1(&t, &core, 1)?;
+                conv1x1(&t, &v, 1)?
+            } else {
+                let core = param(&b, vec![*r2, *r1, site.k, site.k], "core")?;
+                let v = param(&b, vec![site.s, *r2], "v")?;
+                let t = conv1x1(&x, &u, 1)?;
+                let tdims = [batch, *r1, hw, hw];
+                let tp = pad_hw(&b, &t, &tdims, site.padding, 0.0)?;
+                let pd = [batch, *r1, hw + 2 * site.padding, hw + 2 * site.padding];
+                let t = conv2d(&b, &tp, &core, &pd, *r2, site.k, site.stride)?;
+                conv1x1(&t, &v, 1)?
+            }
+        }
+        Scheme::Cp { r } => {
+            if site.k == 1 {
+                // the CP chain of a matrix is the SVD pair
+                let w0 = param(&b, vec![*r, site.c], "w0")?;
+                let w1 = param(&b, vec![site.s, *r], "w1")?;
+                let t = conv1x1(&x, &w0, site.stride)?;
+                conv1x1(&t, &w1, 1)?
+            } else {
+                // Lebedev chain: 1x1 -> kx1 depthwise -> 1xk depthwise -> 1x1
+                let u = param(&b, vec![*r, site.c], "u")?;
+                let kh = param(&b, vec![*r, site.k], "kh")?;
+                let kw = param(&b, vec![*r, site.k], "kw")?;
+                let w1 = param(&b, vec![site.s, *r], "w1")?;
+                let t = conv1x1(&x, &u, 1)?;
+                let tdims = [batch, *r, hw, hw];
+                let tp = pad_axis(&b, &t, &tdims, site.padding, 2)?;
+                let hp = hw + 2 * site.padding;
+                let t = depthwise_1d(&tp, &kh, &[batch, *r, hp, hw], site.k, site.stride, 2)?;
+                let ho = (hp - site.k) / site.stride + 1;
+                let tp = pad_axis(&b, &t, &[batch, *r, ho, hw], site.padding, 3)?;
+                let wp = hw + 2 * site.padding;
+                let t = depthwise_1d(&tp, &kw, &[batch, *r, ho, wp], site.k, site.stride, 3)?;
+                conv1x1(&t, &w1, 1)?
+            }
+        }
         Scheme::MergedInto { .. } => bail!("merged_into sites are timed via their peer"),
     };
     let graph = b.build(&out)?;
@@ -296,6 +391,8 @@ fn scheme_tag(s: &Scheme) -> String {
         Scheme::Branched { r1, r2, groups } => format!("br{r1}x{r2}g{groups}"),
         Scheme::Merged { r1, r2 } => format!("mg{r1}x{r2}"),
         Scheme::MergedInto { .. } => "mgi".into(),
+        Scheme::Tucker2 { r1, r2 } => format!("tk2_{r1}x{r2}"),
+        Scheme::Cp { r } => format!("cp{r}"),
     }
 }
 
@@ -622,6 +719,84 @@ mod tests {
             }
         }
         crate::util::check::assert_allclose(&got.data, &want, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn tucker2_1x1_chain_matches_composition() {
+        // three-matrix chain on a 1x1 site == dense conv with v @ core @ u
+        let (n, c, s, r1, r2, h) = (2, 6, 8, 3, 4, 4);
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..n * c * h * h).map(|_| rng.normal_f32()).collect();
+        let u: Vec<f32> = (0..r1 * c).map(|_| rng.normal_f32()).collect();
+        let core: Vec<f32> = (0..r2 * r1).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..s * r2).map(|_| rng.normal_f32()).collect();
+        for stride in [1usize, 2] {
+            let t = site(c, s, 1, stride);
+            let got = run_layer(
+                &t,
+                &Scheme::Tucker2 { r1, r2 },
+                n,
+                h,
+                &x,
+                &[u.clone(), core.clone(), v.clone()],
+            );
+            let mut w = vec![0f32; s * c];
+            for si in 0..s {
+                for ci in 0..c {
+                    for j in 0..r2 {
+                        for i in 0..r1 {
+                            w[si * c + ci] +=
+                                v[si * r2 + j] * core[j * r1 + i] * u[i * c + ci];
+                        }
+                    }
+                }
+            }
+            let want = ref_conv(&x, &w, (n, c, h, h), (s, 1, stride, 0));
+            crate::util::check::assert_allclose(&got, &want, 1e-3, 1e-3);
+        }
+    }
+
+    #[test]
+    fn cp_chain_matches_dense_composition() {
+        // 1x1 -> kx1 -> 1xk -> 1x1 == dense conv with the rank-R sum
+        // W[s,c,ky,kx] = sum_j w1[s,j] u[j,c] kh[j,ky] kw[j,kx]
+        let (n, c, s, r, h, k) = (2, 4, 5, 3, 6, 3);
+        let mut rng = Rng::new(8);
+        let x: Vec<f32> = (0..n * c * h * h).map(|_| rng.normal_f32()).collect();
+        let u: Vec<f32> = (0..r * c).map(|_| rng.normal_f32()).collect();
+        let kh: Vec<f32> = (0..r * k).map(|_| rng.normal_f32()).collect();
+        let kw: Vec<f32> = (0..r * k).map(|_| rng.normal_f32()).collect();
+        let w1: Vec<f32> = (0..s * r).map(|_| rng.normal_f32()).collect();
+        for stride in [1usize, 2] {
+            let t = site(c, s, k, stride);
+            let got = run_layer(
+                &t,
+                &Scheme::Cp { r },
+                n,
+                h,
+                &x,
+                &[u.clone(), kh.clone(), kw.clone(), w1.clone()],
+            );
+            let mut w = vec![0f32; s * c * k * k];
+            for si in 0..s {
+                for ci in 0..c {
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let mut acc = 0f32;
+                            for j in 0..r {
+                                acc += w1[si * r + j]
+                                    * u[j * c + ci]
+                                    * kh[j * k + ky]
+                                    * kw[j * k + kx];
+                            }
+                            w[((si * c + ci) * k + ky) * k + kx] = acc;
+                        }
+                    }
+                }
+            }
+            let want = ref_conv(&x, &w, (n, c, h, h), (s, k, stride, 1));
+            crate::util::check::assert_allclose(&got, &want, 1e-3, 1e-3);
+        }
     }
 
     #[test]

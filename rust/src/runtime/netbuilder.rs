@@ -111,6 +111,49 @@ fn apply_site(
             let pd = [n, *r1, h + 2 * site.padding, w + 2 * site.padding];
             (lf::conv2d(ctx.b, &xp, &core, &pd, *r2, site.k, site.stride)?, *r2, ho, wo)
         }
+        Scheme::Tucker2 { r1, r2 } => {
+            let u = ctx.param(&format!("{nm}.u"), vec![*r1, site.c])?;
+            if site.k == 1 {
+                // explicit three-matrix chain: stride rides the first 1x1
+                let core = ctx.param(&format!("{nm}.core"), vec![*r2, *r1])?;
+                let v = ctx.param(&format!("{nm}.v"), vec![site.s, *r2])?;
+                let t = lf::conv1x1(x, &u, site.stride)?;
+                let t = lf::conv1x1(&t, &core, 1)?;
+                (lf::conv1x1(&t, &v, 1)?, site.s, ho, wo)
+            } else {
+                let core =
+                    ctx.param(&format!("{nm}.core"), vec![*r2, *r1, site.k, site.k])?;
+                let v = ctx.param(&format!("{nm}.v"), vec![site.s, *r2])?;
+                let t = lf::conv1x1(x, &u, 1)?;
+                let tp = lf::pad_hw(ctx.b, &t, &[n, *r1, h, w], site.padding, 0.0)?;
+                let pd = [n, *r1, h + 2 * site.padding, w + 2 * site.padding];
+                let t = lf::conv2d(ctx.b, &tp, &core, &pd, *r2, site.k, site.stride)?;
+                (lf::conv1x1(&t, &v, 1)?, site.s, ho, wo)
+            }
+        }
+        Scheme::Cp { r } => {
+            if site.k == 1 {
+                // the CP chain of a matrix degenerates to the SVD pair
+                let w0 = ctx.param(&format!("{nm}.w0"), vec![*r, site.c])?;
+                let w1 = ctx.param(&format!("{nm}.w1"), vec![site.s, *r])?;
+                let t = lf::conv1x1(x, &w0, site.stride)?;
+                (lf::conv1x1(&t, &w1, 1)?, site.s, ho, wo)
+            } else {
+                // Lebedev chain: 1x1 -> kx1 depthwise -> 1xk depthwise -> 1x1
+                let u = ctx.param(&format!("{nm}.u"), vec![*r, site.c])?;
+                let kh = ctx.param(&format!("{nm}.kh"), vec![*r, site.k])?;
+                let kw = ctx.param(&format!("{nm}.kw"), vec![*r, site.k])?;
+                let w1 = ctx.param(&format!("{nm}.w1"), vec![site.s, *r])?;
+                let t = lf::conv1x1(x, &u, 1)?;
+                let tp = lf::pad_axis(ctx.b, &t, &[n, *r, h, w], site.padding, 2)?;
+                let hp = h + 2 * site.padding;
+                let t = lf::depthwise_1d(&tp, &kh, &[n, *r, hp, w], site.k, site.stride, 2)?;
+                let tp = lf::pad_axis(ctx.b, &t, &[n, *r, ho, w], site.padding, 3)?;
+                let wp = w + 2 * site.padding;
+                let t = lf::depthwise_1d(&tp, &kw, &[n, *r, ho, wp], site.k, site.stride, 3)?;
+                (lf::conv1x1(&t, &w1, 1)?, site.s, ho, wo)
+            }
+        }
         Scheme::MergedInto { peer } => {
             let (r1, r2) = match plan.get(peer) {
                 Some(Scheme::Merged { r1, r2 }) => (*r1, *r2),
@@ -231,11 +274,19 @@ pub fn build_forward_mode(
     let fc = sites.last().unwrap();
     assert_eq!(fc.kind, SiteKind::Fc);
     let logits = match plan.get("fc").unwrap_or(&Scheme::Orig) {
-        Scheme::Svd { r } => {
+        Scheme::Svd { r } | Scheme::Cp { r } => {
             let w0 = ctx.param("fc.w0", vec![*r, fc.c])?;
             let w1 = ctx.param("fc.w1", vec![fc.s, *r])?;
             let t = pooled.dot_general(&w0, &[1], &[1])?;
             t.dot_general(&w1, &[1], &[1])?
+        }
+        Scheme::Tucker2 { r1, r2 } => {
+            let u = ctx.param("fc.u", vec![*r1, fc.c])?;
+            let core = ctx.param("fc.core", vec![*r2, *r1])?;
+            let v = ctx.param("fc.v", vec![fc.s, *r2])?;
+            let t = pooled.dot_general(&u, &[1], &[1])?;
+            let t = t.dot_general(&core, &[1], &[1])?;
+            t.dot_general(&v, &[1], &[1])?
         }
         _ => {
             let wp = ctx.param("fc.w", vec![fc.s, fc.c])?;
@@ -565,9 +616,14 @@ mod tests {
 
     #[test]
     fn builds_and_runs_all_variants() {
-        for v in
-            [Variant::Orig, Variant::Lrd, Variant::Merged, Variant::Branched]
-        {
+        for v in [
+            Variant::Orig,
+            Variant::Lrd,
+            Variant::Merged,
+            Variant::Branched,
+            Variant::Tucker2,
+            Variant::Cp,
+        ] {
             let logits = forward_logits(v);
             assert_eq!(logits.len(), 2 * 10, "{v:?}");
             assert!(logits.iter().all(|x| x.is_finite()), "{v:?}: {logits:?}");

@@ -99,6 +99,11 @@ struct Chain {
     /// (r, c, s) of the pair, for the profitability gate
     dims: (usize, usize, usize),
     layout: Layout,
+    /// interior nodes the rewrite consumes (inner dot + conv transpose):
+    /// two chains sharing any of these overlap and must not both fuse in
+    /// one scan — the longer chain's remaining pair waits for the next
+    /// fixpoint iteration.
+    inner: Vec<NodeId>,
 }
 
 fn axes(v: &[usize], want: usize) -> bool {
@@ -156,7 +161,15 @@ fn match_chain(g: &Graph, uses: &[usize], i: usize) -> Option<Chain> {
         if dims_of(w1)[1] != r {
             return None;
         }
-        Some(Chain { w0, w1, x, x_contract: 1, dims: (r, c, s), layout: Layout::ConvFwd })
+        Some(Chain {
+            w0,
+            w1,
+            x,
+            x_contract: 1,
+            dims: (r, c, s),
+            layout: Layout::ConvFwd,
+            inner: vec![b, d1],
+        })
     };
 
     // fc chain: outer = dot(dot(x, w0), w1)
@@ -177,7 +190,15 @@ fn match_chain(g: &Graph, uses: &[usize], i: usize) -> Option<Chain> {
         if dims_of(w1)[1] != r {
             return None;
         }
-        Some(Chain { w0, w1, x, x_contract: 1, dims: (r, c, s), layout: Layout::FcFwd })
+        Some(Chain {
+            w0,
+            w1,
+            x,
+            x_contract: 1,
+            dims: (r, c, s),
+            layout: Layout::FcFwd,
+            inner: vec![a],
+        })
     };
 
     // conv backward chain: outer = dot(w0, dot(w1, δ, [0],[0]), [0],[0])
@@ -208,6 +229,7 @@ fn match_chain(g: &Graph, uses: &[usize], i: usize) -> Option<Chain> {
             x_contract: 0,
             dims: (r, c, s),
             layout: Layout::ConvBwd,
+            inner: vec![b],
         })
     };
 
@@ -238,6 +260,7 @@ fn match_chain(g: &Graph, uses: &[usize], i: usize) -> Option<Chain> {
             x_contract: 1,
             dims: (r, c, s),
             layout: Layout::FcBwd,
+            inner: vec![a],
         })
     };
 
@@ -302,12 +325,60 @@ pub fn run(g: &Graph, lane: usize) -> (Graph, usize) {
 /// `ceiling / batch` reproduces the ceiling graph's gate decisions
 /// exactly. Returns the rewrite trace plus (forward fusions, backward
 /// fusions).
+///
+/// The rewrite runs to a **fixpoint**: one scan contracts disjoint
+/// profitable pairs; a chain longer than two factors (the Tucker-2 / CP
+/// lowerings) surfaces its remaining adjacent pair to the next scan.
+/// Each pair is gated independently on its own link rank, so a chain
+/// with one losing link contracts only that pair (*partial* re-merge)
+/// while a fully losing chain collapses pair-by-pair into a single
+/// dense contraction.
 pub(crate) fn run_t(
     g: &Graph,
     lane: usize,
     boundary: usize,
     amortize: Option<(usize, usize)>,
 ) -> (Traced, usize, usize) {
+    let mut cur = g.clone();
+    let mut total: Vec<NodeId> = (0..g.nodes.len()).map(NodeId).collect();
+    let mut bnd = boundary.min(g.nodes.len());
+    let (mut fusions, mut fus_fwd, mut fus_bwd) = (0usize, 0usize, 0usize);
+    // Each scan contracts at least one live pair and a chain of d factor
+    // dots supports at most d-1 contractions, so this terminates; the cap
+    // is a backstop far above any real chain depth.
+    for _ in 0..64 {
+        let (next, map, n, nf, nb) = run_once(&cur, lane, bnd, amortize);
+        if n == 0 {
+            break;
+        }
+        fusions += n;
+        fus_fwd += nf;
+        fus_bwd += nb;
+        // the scan appends nodes in source order, so `map` is strictly
+        // increasing and the forward/backward boundary remaps exactly
+        bnd = if bnd == 0 { 0 } else { map[bnd - 1].0 + 1 };
+        for t in total.iter_mut() {
+            *t = map[t.0];
+        }
+        cur = next;
+    }
+    let traced = Traced {
+        graph: cur,
+        rewrites: fusions,
+        map: total.into_iter().map(Some).collect(),
+    };
+    (traced, fus_fwd, fus_bwd)
+}
+
+/// One scan: contract every profitable, pairwise-disjoint factor chain.
+/// Returns the rewritten graph, the old→new node map, and
+/// (fusions, forward fusions, backward fusions).
+fn run_once(
+    g: &Graph,
+    lane: usize,
+    boundary: usize,
+    amortize: Option<(usize, usize)>,
+) -> (Graph, Vec<NodeId>, usize, usize, usize) {
     let mut uses = vec![0usize; g.nodes.len()];
     for node in &g.nodes {
         for inp in &node.inputs {
@@ -318,10 +389,16 @@ pub(crate) fn run_t(
 
     let mut nodes: Vec<Node> = Vec::with_capacity(g.nodes.len());
     let mut map: Vec<NodeId> = Vec::with_capacity(g.nodes.len());
+    let mut taken = vec![false; g.nodes.len()];
     let mut fusions = 0usize;
     let (mut fus_fwd, mut fus_bwd) = (0usize, 0usize);
     for (i, node) in g.nodes.iter().enumerate() {
         let fused = match_chain(g, &uses, i).and_then(|ch| {
+            // overlap guard: a chain touching nodes an earlier fusion in
+            // this scan already consumed defers to the next iteration
+            if taken[ch.x.0] || ch.inner.iter().any(|n| taken[n.0]) {
+                return None;
+            }
             let (r, c, s) = ch.dims;
             let fe = match amortize {
                 // multiply before dividing: free_elems is a multiple of
@@ -367,6 +444,10 @@ pub(crate) fn run_t(
             } else {
                 fus_bwd += 1;
             }
+            taken[i] = true;
+            for n in &ch.inner {
+                taken[n.0] = true;
+            }
             Some(NodeId(nodes.len() - 1))
         });
         let id = match fused {
@@ -383,12 +464,8 @@ pub(crate) fn run_t(
         map.push(id);
     }
     let root = map[g.root.0];
-    let traced = Traced {
-        graph: Graph { name: g.name.clone(), nodes, n_params: g.n_params, root },
-        rewrites: fusions,
-        map: map.into_iter().map(Some).collect(),
-    };
-    (traced, fus_fwd, fus_bwd)
+    let graph = Graph { name: g.name.clone(), nodes, n_params: g.n_params, root };
+    (graph, map, fusions, fus_fwd, fus_bwd)
 }
 
 #[cfg(test)]
@@ -590,8 +667,116 @@ mod tests {
         let got = run_graph(&g2, &args);
         crate::util::check::assert_allclose(&got, &want, 1e-4, 1e-4);
         // the boundary split attributes the fusion to the backward side
-        let (_, fwd, bwd) = run_t(&g, 16, 2);
+        let (_, fwd, bwd) = run_t(&g, 16, 2, None);
         assert_eq!((fwd, bwd), (0, 1));
+    }
+
+    /// The three-factor 1x1 chain `layer_factory` lowers a k=1 Tucker-2
+    /// site to: u [r1,c] -> core [r2,r1] -> v [s,r2], each via conv1x1.
+    fn tucker2_conv_graph(
+        n: usize,
+        c: usize,
+        r1: usize,
+        r2: usize,
+        s: usize,
+        hw: usize,
+    ) -> Graph {
+        let b = GraphBuilder::new("tk2chain");
+        let x = b.parameter(0, &[n, c, hw, hw], "x").unwrap();
+        let u = b.parameter(1, &[r1, c], "u").unwrap();
+        let core = b.parameter(2, &[r2, r1], "core").unwrap();
+        let v = b.parameter(3, &[s, r2], "v").unwrap();
+        let t = u.dot_general(&x, &[1], &[1]).unwrap().transpose(&[1, 0, 2, 3]).unwrap();
+        let t = core.dot_general(&t, &[1], &[1]).unwrap().transpose(&[1, 0, 2, 3]).unwrap();
+        let y = v.dot_general(&t, &[1], &[1]).unwrap().transpose(&[1, 0, 2, 3]).unwrap();
+        b.build(&y).unwrap()
+    }
+
+    fn tucker2_args(n: usize, c: usize, r1: usize, r2: usize, s: usize, hw: usize) -> Vec<HostTensor> {
+        let mut rng = Rng::new(17);
+        let mut mk = |dims: Vec<usize>| {
+            let len: usize = dims.iter().product();
+            HostTensor::new(dims, (0..len).map(|_| rng.normal_f32()).collect())
+        };
+        vec![
+            mk(vec![n, c, hw, hw]),
+            mk(vec![r1, c]),
+            mk(vec![r2, r1]),
+            mk(vec![s, r2]),
+        ]
+    }
+
+    #[test]
+    fn partial_remerge_contracts_only_the_losing_link() {
+        // Tucker2 {16, 33} at lane 16 on a 64x64 site: the aligned r1=16
+        // link wins, the misaligned r2=33 link loses — exactly one pair
+        // (core, v) must contract, and u's 1x1 must survive.
+        let (n, c, r1, r2, s, hw) = (2, 64, 16, 33, 64, 8);
+        let g = tucker2_conv_graph(n, c, r1, r2, s, hw);
+        let (g2, fusions) = run(&g, 16);
+        assert_eq!(fusions, 1, "only the losing link may contract");
+        let (g3, _) = dce(&g2);
+        // the surviving chain is u, M = v*core, plus the fused dot
+        let dots = g3
+            .nodes
+            .iter()
+            .filter(|nd| matches!(nd.op, OpKind::DotGeneral { .. }))
+            .count();
+        assert_eq!(dots, 3, "u-dot + weight merge + fused dot");
+        let args = tucker2_args(n, c, r1, r2, s, hw);
+        let want = run_graph(&g, &args);
+        let got = run_graph(&g3, &args);
+        crate::util::check::assert_allclose(&got, &want, 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn fully_losing_chain_collapses_pair_by_pair() {
+        // Tucker2 {33, 33} at lane 16: both links lose. The first scan
+        // contracts (u, core); the second contracts the survivor with v —
+        // two fusions, and the chain ends as one dense contraction.
+        let (n, c, r1, r2, s, hw) = (2, 64, 33, 33, 64, 8);
+        let g = tucker2_conv_graph(n, c, r1, r2, s, hw);
+        let (g2, fusions) = run(&g, 16);
+        assert_eq!(fusions, 2, "both links must contract across scans");
+        let (g3, _) = dce(&g2);
+        // two weight merges + the single data contraction
+        let dots = g3
+            .nodes
+            .iter()
+            .filter(|nd| matches!(nd.op, OpKind::DotGeneral { .. }))
+            .count();
+        assert_eq!(dots, 3);
+        assert!(g3.nodes.len() < g.nodes.len(), "collapse must shrink the graph");
+        let args = tucker2_args(n, c, r1, r2, s, hw);
+        let want = run_graph(&g, &args);
+        let got = run_graph(&g3, &args);
+        crate::util::check::assert_allclose(&got, &want, 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn starved_fc_chain_keeps_factors_until_amortize_pin() {
+        // batch-1 fc three-factor chain: every link's weight merge would
+        // be recomputed per request, so nothing fuses — but pinned to a
+        // ladder ceiling the same graph collapses pair by pair, exactly
+        // like the two-factor amortize_pin case.
+        let (c, r1, r2, s) = (64usize, 33, 33, 64);
+        let b = GraphBuilder::new("fctk2");
+        let x = b.parameter(0, &[1, c], "x").unwrap();
+        let u = b.parameter(1, &[r1, c], "u").unwrap();
+        let core = b.parameter(2, &[r2, r1], "core").unwrap();
+        let v = b.parameter(3, &[s, r2], "v").unwrap();
+        let y = x
+            .dot_general(&u, &[1], &[1])
+            .unwrap()
+            .dot_general(&core, &[1], &[1])
+            .unwrap()
+            .dot_general(&v, &[1], &[1])
+            .unwrap();
+        let g = b.build(&y).unwrap();
+        let (t, _, _) = run_t(&g, 16, g.nodes.len(), None);
+        assert_eq!(t.rewrites, 0, "batch-1 fc must keep the whole chain");
+        let (t, _, _) = run_t(&g, 16, g.nodes.len(), Some((1, 4096)));
+        assert_eq!(t.rewrites, 2, "pinned to the ceiling both links fuse");
     }
 
     #[test]

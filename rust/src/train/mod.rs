@@ -54,9 +54,15 @@ impl Default for SgdHyper {
 }
 
 /// Paper §2.2 Layer Freezing: the SVD `w0` and Tucker `u`/`v` factors
-/// are fixed transformation bases — everything else trains.
+/// are fixed transformation bases — everything else trains. CP chains
+/// extend the convention: the separable `kh`/`kw` taps freeze with `u`,
+/// leaving only the output projection (`w1`) and Tucker cores trainable.
 pub fn is_frozen_param(name: &str) -> bool {
-    name.ends_with(".w0") || name.ends_with(".u") || name.ends_with(".v")
+    name.ends_with(".w0")
+        || name.ends_with(".u")
+        || name.ends_with(".v")
+        || name.ends_with(".kh")
+        || name.ends_with(".kw")
 }
 
 /// How the packed step output and the positional parameters are laid out.

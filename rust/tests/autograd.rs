@@ -384,7 +384,9 @@ fn variant_loss_fixture(
                 .position(|s| s.name.ends_with(suffix))
                 .map(|i| i + 1) // param index = spec index + 1
         };
-        ["stem.conv.w", ".bn.g", "fc.b"]
+        // `.core` probes a Tucker-2 interior factor, `.kh` a CP
+        // separable tap — absent suffixes just filter out per variant
+        ["stem.conv.w", ".bn.g", "fc.b", ".core", ".kh"]
             .into_iter()
             .filter_map(find)
             .collect()
@@ -394,13 +396,85 @@ fn variant_loss_fixture(
 
 #[test]
 fn variant_loss_graphs_grad_check() {
-    for variant in
-        [Variant::Orig, Variant::Lrd, Variant::Merged, Variant::Branched]
-    {
+    for variant in [
+        Variant::Orig,
+        Variant::Lrd,
+        Variant::Merged,
+        Variant::Branched,
+        Variant::Tucker2,
+        Variant::Cp,
+    ] {
         let (graph, args, probe) = variant_loss_fixture(variant);
         assert!(!probe.is_empty(), "{variant:?}: no probe params found");
         grad_check(&graph, &probe, &args, 3);
     }
+}
+
+#[test]
+fn grad_check_depthwise_separable_chain() {
+    // The CP k>1 lowering in isolation: 1x1 -> pad -> kx1 depthwise ->
+    // pad -> 1xk depthwise -> 1x1, every factor differentiated. This is
+    // the one chain whose VJPs route through the strided-slice scatter,
+    // concat and broadcast_in_dim adjoints all at once.
+    use lrdx::runtime::layer_factory as lf;
+    let mut rng = Rng::new(0xAD08);
+    let (n, c, r, s, h, k, stride, pad) = (1usize, 2usize, 2usize, 3usize, 5, 3, 2, 1);
+    let b = GraphBuilder::new("gc_cp_chain");
+    let x = b.parameter(0, &[n, c, h, h], "x").unwrap();
+    let u = b.parameter(1, &[r, c], "u").unwrap();
+    let kh = b.parameter(2, &[r, k], "kh").unwrap();
+    let kw = b.parameter(3, &[r, k], "kw").unwrap();
+    let w1 = b.parameter(4, &[s, r], "w1").unwrap();
+    let t = lf::conv1x1(&x, &u, 1).unwrap();
+    let tp = lf::pad_axis(&b, &t, &[n, r, h, h], pad, 2).unwrap();
+    let hp = h + 2 * pad;
+    let ho = (hp - k) / stride + 1;
+    let t = lf::depthwise_1d(&tp, &kh, &[n, r, hp, h], k, stride, 2).unwrap();
+    let tp = lf::pad_axis(&b, &t, &[n, r, ho, h], pad, 3).unwrap();
+    let wp = h + 2 * pad;
+    let t = lf::depthwise_1d(&tp, &kw, &[n, r, ho, wp], k, stride, 3).unwrap();
+    let out = lf::conv1x1(&t, &w1, 1).unwrap();
+    let loss = weighted_loss(&b, &out, 5);
+    let g = b.build(&loss).unwrap();
+    let args = vec![
+        tensor(&mut rng, &[n, c, h, h], -1.0, 1.0),
+        tensor(&mut rng, &[r, c], 0.2, 0.8),
+        tensor(&mut rng, &[r, k], 0.2, 0.8),
+        tensor(&mut rng, &[r, k], 0.2, 0.8),
+        tensor(&mut rng, &[s, r], 0.2, 0.8),
+        proj_tensor(&mut rng, &out.dims()),
+    ];
+    grad_check(&g, &[0, 1, 2, 3, 4], &args, 0);
+}
+
+#[test]
+fn grad_check_tucker2_1x1_chain_frozen_factors() {
+    // Frozen-factor backward: differentiate the three-matrix chain wrt
+    // the INPUT only — the adjoint is W0ᵀ·(Gᵀ·(W1ᵀ·δ)), the shape
+    // `passes::remerge` matches during frozen training.
+    let mut rng = Rng::new(0xAD09);
+    let (n, c, r1, r2, s, hw) = (2usize, 4usize, 2usize, 3usize, 4usize, 3);
+    let b = GraphBuilder::new("gc_tk2_frozen");
+    let x = b.parameter(0, &[n, c, hw, hw], "x").unwrap();
+    let u = b.parameter(1, &[r1, c], "u").unwrap();
+    let core = b.parameter(2, &[r2, r1], "core").unwrap();
+    let v = b.parameter(3, &[s, r2], "v").unwrap();
+    use lrdx::runtime::layer_factory as lf;
+    let t = lf::conv1x1(&x, &u, 1).unwrap();
+    let t = lf::conv1x1(&t, &core, 1).unwrap();
+    let out = lf::conv1x1(&t, &v, 1).unwrap();
+    let loss = weighted_loss(&b, &out, 4);
+    let g = b.build(&loss).unwrap();
+    let args = vec![
+        tensor(&mut rng, &[n, c, hw, hw], -1.0, 1.0),
+        tensor(&mut rng, &[r1, c], 0.2, 0.8),
+        tensor(&mut rng, &[r2, r1], 0.2, 0.8),
+        tensor(&mut rng, &[s, r2], 0.2, 0.8),
+        proj_tensor(&mut rng, &[n, s, hw, hw]),
+    ];
+    // x only (frozen factors), then every factor too
+    grad_check(&g, &[0], &args, 0);
+    grad_check(&g, &[1, 2, 3], &args, 0);
 }
 
 // ---------------------------------------------------------------------------

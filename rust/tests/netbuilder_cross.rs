@@ -6,7 +6,7 @@
 //! so the decomposed network must produce the same logits as the original
 //! network with the same weights — through every variant's code path.
 
-use lrdx::decompose::params::{decompose_params, init_orig_params};
+use lrdx::decompose::params::{decompose_params, init_orig_params, reconstruct_params};
 use lrdx::decompose::{plan_variant, Plan, Scheme, Variant};
 use lrdx::model::Arch;
 use lrdx::runtime::netbuilder::BuiltNet;
@@ -111,12 +111,35 @@ fn truncated_decomposition_stays_close() {
 }
 
 #[test]
+fn chain_variants_match_their_reconstruction_oracle_at_o0() {
+    // A Tucker-2 / CP net and an ORIGINAL net loaded with the dense
+    // re-merge of the SAME stored factors compute the same function —
+    // the decomposition is lossy vs the pre-truncation weights, but the
+    // factor chain vs its own reconstruction is exact up to f32 order.
+    let engine = Engine::cpu().unwrap();
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    let plan_orig = plan_variant(&arch, Variant::Orig, 2.0, 2, None).unwrap();
+    for v in [Variant::Tucker2, Variant::Cp] {
+        let mut rng = Rng::new(46);
+        let orig_params = init_orig_params(&arch, &mut rng);
+        let plan = plan_variant(&arch, v, 2.0, 2, None).unwrap();
+        let params = decompose_params(&arch, &plan, &orig_params).unwrap();
+        let got = logits(&engine, &arch, &plan, &params, 2, 16);
+        let recon = reconstruct_params(&arch, &plan, &params).unwrap();
+        let want = logits(&engine, &arch, &plan_orig, &recon, 2, 16);
+        assert_allclose(&got, &want, 1e-4, 1e-4);
+    }
+}
+
+#[test]
 fn all_variants_execute_with_decomposed_weights() {
     let engine = Engine::cpu().unwrap();
     let arch = Arch::by_name("resnet-mini").unwrap();
     let mut rng = Rng::new(44);
     let orig_params = init_orig_params(&arch, &mut rng);
-    for v in [Variant::Lrd, Variant::Merged, Variant::Branched] {
+    for v in
+        [Variant::Lrd, Variant::Merged, Variant::Branched, Variant::Tucker2, Variant::Cp]
+    {
         let plan = plan_variant(&arch, v, 2.0, 2, None).unwrap();
         let params = decompose_params(&arch, &plan, &orig_params).unwrap();
         let l = logits(&engine, &arch, &plan, &params, 2, 16);

@@ -32,7 +32,14 @@ fn forward(engine: &Engine, variant: Variant, opts: &CompileOptions) -> (Vec<f32
 #[test]
 fn every_variant_level_and_thread_count_matches_the_o0_reference() {
     let engine = Engine::native();
-    for variant in [Variant::Orig, Variant::Lrd, Variant::Merged, Variant::Branched] {
+    for variant in [
+        Variant::Orig,
+        Variant::Lrd,
+        Variant::Merged,
+        Variant::Branched,
+        Variant::Tucker2,
+        Variant::Cp,
+    ] {
         let (want, s0) = forward(&engine, variant, &CompileOptions::o0());
         assert!(s0.passes.is_empty(), "{variant:?}: O0 must run no passes");
         assert_eq!(s0.nodes_before, s0.nodes_after);
@@ -138,6 +145,45 @@ fn remerge_fires_when_rank_exceeds_the_lane_aligned_threshold() {
     assert!(stats.fusions >= 1, "r=33 must fuse at lane 16, stats: {stats:?}");
     assert!(stats.nodes_after < stats.nodes_before);
     assert_allclose(&got, &want, 1e-5, 1e-5);
+}
+
+#[test]
+fn partial_remerge_contracts_only_the_losing_link_of_a_three_factor_chain() {
+    // Tucker-2 {16, 33} on a 64x64 1x1 site at lane 16: the r2=33 link
+    // wastes most of a tile (33/48 efficiency) while the r1=16 link is
+    // perfectly aligned — the pass must contract exactly the losing
+    // adjacent pair and leave the aligned factor standing, and the
+    // partially-merged layer must still match the O0 reference.
+    let engine = Engine::native();
+    let site = fc_site(64, 64);
+    let scheme = Scheme::Tucker2 { r1: 16, r2: 33 };
+    let (graph, shapes) = build_layer(&site, &scheme, 1, 16).unwrap();
+    let mut rng = lrdx::util::rng::Rng::new(0xFA58);
+    let mut args = vec![lrdx::runtime::HostTensor::new(vec![1, 64, 16, 16], {
+        (0..64 * 256).map(|_| rng.normal_f32()).collect()
+    })];
+    for shp in &shapes {
+        let n: usize = shp.iter().product();
+        args.push(lrdx::runtime::HostTensor::new(shp.clone(), {
+            (0..n).map(|_| rng.normal_f32() * 0.1).collect()
+        }));
+    }
+    let want = engine
+        .compile(&graph, &CompileOptions::o0())
+        .unwrap()
+        .run_hosts(&args)
+        .unwrap()
+        .remove(0);
+    let opts = CompileOptions { opt_level: OptLevel::O2, lane: 16, ..Default::default() };
+    let exe = engine.compile(&graph, &opts).unwrap();
+    let got = exe.run_hosts(&args).unwrap().remove(0);
+    let stats = exe.stats().clone();
+    assert_eq!(
+        stats.fusions, 1,
+        "exactly the losing r2 link must contract: {stats:?}"
+    );
+    assert!(stats.nodes_after < stats.nodes_before);
+    assert_allclose(&got.data, &want.data, 1e-5, 1e-5);
 }
 
 #[test]

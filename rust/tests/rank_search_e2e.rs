@@ -36,6 +36,7 @@ fn rank_search_on_real_backend_produces_valid_decision() {
         refine: 2,
         batch: 2,
         hw: 16,
+        ..Default::default()
     };
     let t = site(64, 64, 3);
     let d = optimize_site(&mut timer, &t, &cfg).unwrap();
@@ -83,6 +84,7 @@ fn scheme_construction_for_rectangular_sites() {
         refine: 0,
         batch: 1,
         hw: 8,
+        ..Default::default()
     };
     let t = site(32, 64, 3);
     let d = optimize_site(&mut timer, &t, &cfg).unwrap();
