@@ -1,0 +1,147 @@
+//! `cargo bench --bench sparse_residual [-- --smoke]` — dense vs pure
+//! chain vs chain+S on a planted spiky-low-rank site.
+//!
+//! The setting the sparse-residual subsystem exists for: a 64x64 1x1
+//! weight that is genuinely rank-16 EXCEPT for a few large outliers
+//! (5% "spikes" — the salient-weight structure quantization/pruning
+//! papers keep finding). A pure factor chain must spend rank on the
+//! spikes, so reaching the composed model's error costs it almost the
+//! full dense budget; `W ~= chain + S` absorbs them at nnz extra MACs.
+//! Per density the bench fits the alternating refit, scores analytic
+//! MACs/output-pixel for the composition AND for the same-error pure
+//! chain (smallest truncation rank whose SVD tail error matches), and
+//! wall-clocks the lowered layer on the native engine. Emits
+//! `BENCH_sparse.json`; `--smoke` shrinks timer samples, same schema
+//! (the CI gate asserts chain+S@5% beats the same-error pure chain).
+
+use lrdx::decompose::rank_opt::LayerTimer;
+use lrdx::decompose::sparse::fit_site;
+use lrdx::decompose::Scheme;
+use lrdx::linalg::{svd, Matrix};
+use lrdx::model::{ConvSite, SiteKind};
+use lrdx::profiler::Timer;
+use lrdx::runtime::layer_factory::EngineLayerTimer;
+use lrdx::runtime::{Engine, HostTensor};
+use lrdx::util::json::Json;
+use lrdx::util::rng::Rng;
+
+const BATCH: usize = 4;
+const HW: usize = 16;
+const C: usize = 64;
+const S: usize = 64;
+const RANK: usize = 16;
+const DENSITIES: [f64; 4] = [0.0, 0.01, 0.05, 0.10];
+
+/// W = lowrank(RANK) + 5% spikes + iid noise: the planted structure.
+fn planted_weight(rng: &mut Rng) -> HostTensor {
+    let a = Matrix::random(S, RANK, rng);
+    let b = Matrix::random(RANK, C, rng);
+    let mut w = a.matmul(&b).data;
+    let spikes = S * C / 20;
+    for j in 0..spikes {
+        // stride 37 is odd, so positions are distinct mod the 4096 slots
+        let pos = (j * 37) % (S * C);
+        w[pos] += if j % 2 == 0 { 25.0 } else { -25.0 };
+    }
+    for x in w.iter_mut() {
+        *x += 1e-2 * rng.normal_f32();
+    }
+    HostTensor::new(vec![S, C], w)
+}
+
+/// Relative Frobenius error of the best rank-`r` approximation, read off
+/// the singular-value tail (exact for SVD truncation).
+fn svd_tail_err(sv: &[f32], r: usize) -> f64 {
+    let total: f64 = sv.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let tail: f64 = sv[r.min(sv.len())..].iter().map(|&x| (x as f64) * (x as f64)).sum();
+    (tail / total.max(1e-300)).sqrt()
+}
+
+/// Smallest truncation rank whose SVD tail error is <= `err`.
+fn equivalent_rank(sv: &[f32], err: f64) -> usize {
+    (0..=sv.len()).find(|&r| svd_tail_err(sv, r) <= err).unwrap_or(sv.len())
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let samples = if smoke {
+        Timer { warmup: 0, min_samples: 1, max_samples: 1, cv_target: f64::INFINITY }
+    } else {
+        Timer { warmup: 1, min_samples: 3, max_samples: 8, cv_target: 0.2 }
+    };
+    let site = ConvSite {
+        name: "planted.64x64".into(),
+        c: C,
+        s: S,
+        k: 1,
+        stride: 1,
+        padding: 0,
+        kind: SiteKind::Conv,
+    };
+    let mut rng = Rng::new(0x5BA2);
+    let w = planted_weight(&mut rng);
+    let sv = svd(&Matrix::from_vec(S, C, w.data.clone())).s;
+
+    let engine = Engine::cpu().expect("engine");
+    let mut timer = EngineLayerTimer::with_timer(engine, samples);
+    let t_dense = timer.time_layer(&site, &Scheme::Orig, BATCH, HW).expect("dense");
+
+    println!(
+        "dense vs chain vs chain+S on planted spiky rank-{RANK} {S}x{C} ({})",
+        if smoke { "smoke" } else { "full" }
+    );
+    println!("dense: {:.3} ms/fwd, {} MACs/px", t_dense * 1e3, C * S);
+    println!(
+        "{:>8} {:>6} {:>9} {:>9} {:>10} {:>11} {:>10} {:>9}",
+        "density", "nnz", "rel err", "MACs/px", "equiv rank", "equiv MACs", "ms/fwd", "speedup"
+    );
+    let chain_macs = RANK * (C + S);
+    let mut jrows = Vec::new();
+    for &density in &DENSITIES {
+        let (scheme, nnz, rel_err) = if density == 0.0 {
+            (Scheme::Svd { r: RANK }, 0usize, svd_tail_err(&sv, RANK))
+        } else {
+            let ppm = (density * 1e6).round() as u32;
+            let fit = fit_site(&site, &Scheme::Svd { r: RANK }, &w, ppm, 3).expect("fit");
+            let scheme = Scheme::Sparse { base: Box::new(Scheme::Svd { r: RANK }), ppm };
+            (scheme, fit.sparse.nnz(), fit.rel_err)
+        };
+        let macs = chain_macs + nnz;
+        let equiv_rank = equivalent_rank(&sv, rel_err);
+        let equiv_macs = equiv_rank * (C + S);
+        let secs = timer.time_layer(&site, &scheme, BATCH, HW).expect("layer");
+        println!(
+            "{:>7.0}% {:>6} {:>9.4} {:>9} {:>10} {:>11} {:>10.3} {:>8.2}x",
+            density * 100.0,
+            nnz,
+            rel_err,
+            macs,
+            equiv_rank,
+            equiv_macs,
+            secs * 1e3,
+            t_dense / secs
+        );
+        jrows.push(Json::obj_from(vec![
+            ("density", Json::Num(density)),
+            ("nnz", Json::Num(nnz as f64)),
+            ("rel_err", Json::Num(rel_err)),
+            ("macs_per_px", Json::Num(macs as f64)),
+            ("equiv_rank", Json::Num(equiv_rank as f64)),
+            ("equiv_macs_per_px", Json::Num(equiv_macs as f64)),
+            ("secs_per_fwd", Json::Num(secs)),
+            ("speedup_vs_dense", Json::Num(t_dense / secs)),
+        ]));
+    }
+    let doc = Json::obj_from(vec![
+        ("smoke", Json::Bool(smoke)),
+        ("batch", Json::Num(BATCH as f64)),
+        ("hw", Json::Num(HW as f64)),
+        ("site", Json::Str(site.name.clone())),
+        ("chain_rank", Json::Num(RANK as f64)),
+        ("dense_macs_per_px", Json::Num((C * S) as f64)),
+        ("t_dense_secs", Json::Num(t_dense)),
+        ("rows", Json::Arr(jrows)),
+    ]);
+    std::fs::write("BENCH_sparse.json", doc.render()).expect("write BENCH_sparse.json");
+    println!("(saved BENCH_sparse.json)");
+}

@@ -38,7 +38,10 @@ pub fn magnitude_masks(arch: &Arch, params: &Params, fraction: f64) -> FilterMas
                 (n, o)
             })
             .collect();
-        norms.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // total order with an index tie-break: equal-norm filters (common
+        // right after synthetic init) must mask identically on every run
+        // and every platform, so fine-tune trajectories are replayable
+        norms.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let drop = ((s as f64) * fraction) as usize;
         let mut keep = vec![true; s];
         for &(_, o) in norms.iter().take(drop.min(s.saturating_sub(1))) {
@@ -89,6 +92,31 @@ pub fn sparsity(params: &Params, masks: &FilterMasks) -> f64 {
         }
     }
     zeroed as f64 / total as f64
+}
+
+/// Achieved per-site and overall weight density after masking, measured
+/// on the actual tensors (`HostTensor::density`) rather than the
+/// requested fraction — `floor(s·fraction)` rounding and weights that
+/// were already zero make the two differ.
+pub struct DensityStats {
+    /// weight name -> achieved nonzero fraction of that tensor
+    pub per_site: BTreeMap<String, f64>,
+    /// nonzero fraction across all masked weight tensors
+    pub overall: f64,
+}
+
+pub fn density_stats(params: &Params, masks: &FilterMasks) -> DensityStats {
+    let mut per_site = BTreeMap::new();
+    let (mut nnz, mut total) = (0usize, 0usize);
+    for name in masks.keys() {
+        if let Some(w) = params.get(name) {
+            per_site.insert(name.clone(), w.density());
+            nnz += w.nnz();
+            total += w.data.len();
+        }
+    }
+    let overall = if total == 0 { 1.0 } else { nnz as f64 / total as f64 };
+    DensityStats { per_site, overall }
 }
 
 /// FLOPs/params a *structured* implementation of these masks would save:
@@ -157,6 +185,39 @@ mod tests {
         }
         let s = sparsity(&p, &masks);
         assert!((0.2..0.6).contains(&s), "sparsity {s}");
+    }
+
+    #[test]
+    fn tied_norms_break_deterministically_by_index() {
+        let (arch, mut p) = setup();
+        // all filters of this conv get identical norms: every comparison
+        // is a tie, so the mask is pure tie-break territory
+        let w = p.get_mut("layer1.0.conv2.w").unwrap();
+        w.data.fill(0.25);
+        let masks = magnitude_masks(&arch, &p, 0.5);
+        let keep = &masks["layer1.0.conv2.w"];
+        let dropped: Vec<usize> =
+            keep.iter().enumerate().filter(|(_, k)| !**k).map(|(i, _)| i).collect();
+        let expect: Vec<usize> = (0..dropped.len()).collect();
+        assert_eq!(dropped, expect, "ties must drop the lowest filter indices");
+        // mask pinning: a rerun reproduces every mask bit-for-bit
+        let again = magnitude_masks(&arch, &p.clone(), 0.5);
+        assert_eq!(again, masks);
+    }
+
+    #[test]
+    fn density_stats_measure_achieved_masking() {
+        let (arch, mut p) = setup();
+        let masks = magnitude_masks(&arch, &p, 0.5);
+        apply_masks(&mut p, &masks);
+        let stats = density_stats(&p, &masks);
+        assert_eq!(stats.per_site.len(), masks.len());
+        for (name, keep) in &masks {
+            let kept = keep.iter().filter(|k| **k).count() as f64 / keep.len() as f64;
+            let d = stats.per_site[name];
+            assert!((d - kept).abs() < 1e-6, "{name}: density {d} vs kept fraction {kept}");
+        }
+        assert!((0.4..0.8).contains(&stats.overall), "overall {}", stats.overall);
     }
 
     #[test]

@@ -56,6 +56,9 @@ impl FactorChain {
             Scheme::Orig | Scheme::Merged { .. } | Scheme::MergedInto { .. } => {
                 return None
             }
+            // the chain of a sparse-composed site is its base's chain; the
+            // residual arm is costed separately (`Scheme::sparse_nnz`)
+            Scheme::Sparse { base, .. } => return FactorChain::of(site, base),
             Scheme::Svd { r } => vec![
                 f("w0", vec![*r, c], c, *r, r * c, *r),
                 f("w1", vec![s, *r], *r, s, s * r, s),

@@ -5,6 +5,7 @@
 pub mod chain;
 pub mod params;
 pub mod rank_opt;
+pub mod sparse;
 pub mod weights;
 
 use std::collections::BTreeMap;
@@ -32,6 +33,38 @@ pub enum Scheme {
     /// CP / Lebedev chain: rank-r two-factor split for 1x1/fc sites, and
     /// the four-factor 1x1 -> kx1 -> 1xk -> 1x1 chain for kxk convs
     Cp { r: usize },
+    /// sparse-residual composition W ~= chain + S: `base` is any chain
+    /// scheme, `ppm` the residual density in parts-per-million (integer so
+    /// `Eq` stays derivable; 50_000 = 5%). S holds the largest-magnitude
+    /// entries of W - reconstruct(chain) and is mask-frozen in training.
+    Sparse { base: Box<Scheme>, ppm: u32 },
+}
+
+impl Scheme {
+    /// Strip one sparse wrapper: (base scheme, residual density ppm if any).
+    pub fn split_sparse(&self) -> (&Scheme, Option<u32>) {
+        match self {
+            Scheme::Sparse { base, ppm } => (base, Some(*ppm)),
+            s => (s, None),
+        }
+    }
+
+    /// Whether the scheme lowers to a per-site factor chain — the set a
+    /// sparse residual arm can compose onto.
+    pub fn chainlike(&self) -> bool {
+        matches!(
+            self,
+            Scheme::Svd { .. } | Scheme::Tucker { .. } | Scheme::Tucker2 { .. } | Scheme::Cp { .. }
+        )
+    }
+
+    /// Residual size for a `[s, c, k, k]` site at `ppm` density: at least
+    /// one entry, computable from shape alone (fitters must hit it exactly
+    /// so planned parameter shapes never depend on weight values).
+    pub fn sparse_nnz(c: usize, s: usize, k: usize, ppm: u32) -> usize {
+        let dense = c * s * k * k;
+        ((dense as u64 * ppm as u64) / 1_000_000).max(1) as usize
+    }
 }
 
 pub type Plan = BTreeMap<String, Scheme>;
@@ -220,12 +253,29 @@ pub fn plan_variant(
     groups: usize,
     overrides: Option<&Plan>,
 ) -> Result<Plan> {
-    plan_variant_with(arch, variant, SchemeFamily::Svd, alpha, groups, overrides)
+    plan_variant_with(arch, variant, SchemeFamily::Svd, alpha, groups, overrides, None)
+}
+
+/// Compose a sparse residual arm onto every chain-decomposed site of an
+/// existing plan (e.g. an Algorithm 1 result); other sites are untouched.
+pub fn sparsify_plan(plan: Plan, ppm: u32) -> Plan {
+    plan.into_iter()
+        .map(|(name, scheme)| {
+            let scheme = if scheme.chainlike() {
+                Scheme::Sparse { base: Box::new(scheme), ppm }
+            } else {
+                scheme
+            };
+            (name, scheme)
+        })
+        .collect()
 }
 
 /// `plan_variant` with an explicit factor-chain family. `Variant::Tucker2`
 /// and `Variant::Cp` force their own family; everything else lowers via
-/// `family` (the CLI's `--scheme` flag lands here).
+/// `family` (the CLI's `--scheme` flag lands here). `sparse_ppm` composes a
+/// sparse residual arm onto every chain-decomposed site (the CLI's
+/// `--sparse-density`); Orig/Branched/Merged sites are left untouched.
 pub fn plan_variant_with(
     arch: &Arch,
     variant: Variant,
@@ -233,6 +283,7 @@ pub fn plan_variant_with(
     alpha: f64,
     groups: usize,
     overrides: Option<&Plan>,
+    sparse_ppm: Option<u32>,
 ) -> Result<Plan> {
     let family = match variant {
         Variant::Tucker2 => SchemeFamily::Tucker2,
@@ -267,6 +318,12 @@ pub fn plan_variant_with(
                     }
                 }
             }
+        };
+        let scheme = match sparse_ppm {
+            Some(ppm) if scheme.chainlike() => {
+                Scheme::Sparse { base: Box::new(scheme), ppm }
+            }
+            _ => scheme,
         };
         plan.insert(t.name.clone(), scheme);
     }
@@ -330,6 +387,9 @@ impl Scheme {
                 Json::Num(*r2 as f64),
             ],
             Scheme::Cp { r } => vec![Json::Str("cp".into()), Json::Num(*r as f64)],
+            Scheme::Sparse { base, ppm } => {
+                vec![Json::Str("sparse".into()), Json::Num(*ppm as f64), base.to_json()]
+            }
         };
         Json::Arr(arr)
     }
@@ -356,6 +416,10 @@ impl Scheme {
                 Scheme::Tucker2 { r1: a[1].int()? as usize, r2: a[2].int()? as usize }
             }
             "cp" => Scheme::Cp { r: a[1].int()? as usize },
+            "sparse" => Scheme::Sparse {
+                ppm: a[1].int()? as u32,
+                base: Box::new(Scheme::from_json(&a[2])?),
+            },
             _ => bail!("unknown scheme tag {tag:?}"),
         })
     }
@@ -503,9 +567,55 @@ mod tests {
         }
         // plumbing an explicit family through an Lrd-shaped variant matches
         let via_family =
-            plan_variant_with(&arch, Variant::Lrd, SchemeFamily::Tucker2, 2.0, 2, None)
+            plan_variant_with(&arch, Variant::Lrd, SchemeFamily::Tucker2, 2.0, 2, None, None)
                 .unwrap();
         assert_eq!(via_family, t2);
+    }
+
+    #[test]
+    fn sparse_ppm_wraps_chain_sites_only() {
+        let arch = Arch::by_name("resnet-mini").unwrap();
+        let plan = plan_variant_with(
+            &arch,
+            Variant::Lrd,
+            SchemeFamily::Svd,
+            2.0,
+            2,
+            None,
+            Some(50_000),
+        )
+        .unwrap();
+        assert_eq!(plan["stem.conv"], Scheme::Orig);
+        for (name, s) in &plan {
+            if name == "stem.conv" {
+                continue;
+            }
+            match s {
+                Scheme::Sparse { base, ppm } => {
+                    assert_eq!(*ppm, 50_000, "{name}");
+                    assert!(
+                        matches!(**base, Scheme::Svd { .. } | Scheme::Tucker { .. }),
+                        "{name}: {base:?}"
+                    );
+                }
+                other => panic!("{name}: expected sparse wrapper, got {other:?}"),
+            }
+        }
+        // roundtrips through the JSON interchange, including the nesting
+        let back = plan_from_json(&plan_to_json(&plan)).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn sparse_nnz_floor_and_scaling() {
+        assert_eq!(Scheme::sparse_nnz(64, 64, 1, 50_000), 204);
+        assert_eq!(Scheme::sparse_nnz(64, 64, 3, 50_000), 1843);
+        assert_eq!(Scheme::sparse_nnz(2, 2, 1, 1), 1); // floor: never empty
+        let s = Scheme::Sparse { base: Box::new(Scheme::Svd { r: 16 }), ppm: 50_000 };
+        let (base, ppm) = s.split_sparse();
+        assert_eq!(*base, Scheme::Svd { r: 16 });
+        assert_eq!(ppm, Some(50_000));
+        assert_eq!(Scheme::Orig.split_sparse(), (&Scheme::Orig, None));
     }
 
     #[test]

@@ -9,10 +9,11 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+use super::sparse::{self, SparseResidual};
 use super::weights::{branch_tucker, cp_stack, merge_bottleneck, svd_split, tucker_stack, CpStack};
 use super::{Plan, Scheme};
 use crate::linalg::{Matrix, Tensor4, Tucker2};
-use crate::model::{Arch, SiteKind};
+use crate::model::{Arch, ConvSite, SiteKind};
 use crate::runtime::HostTensor;
 use crate::util::rng::Rng;
 
@@ -181,6 +182,18 @@ pub fn decompose_params(arch: &Arch, plan: &Plan, orig: &Params) -> Result<Param
                     out.insert(format!("{}.w1", t.name), ht_mat(&f.w1));
                 }
             }
+            Scheme::Sparse { base, ppm } => {
+                let fit = sparse::fit_site(&t, base, w, *ppm, 2)?;
+                for (suffix, tensor) in fit.factors {
+                    out.insert(format!("{}.{suffix}", t.name), tensor);
+                }
+                let (vals, idx) = fit.sparse.to_tensors();
+                out.insert(format!("{}.s", t.name), vals);
+                out.insert(format!("{}.s_idx", t.name), idx);
+                if t.kind == SiteKind::Fc {
+                    out.insert(format!("{}.b", t.name), orig[&format!("{}.b", t.name)].clone());
+                }
+            }
         }
     }
     Ok(out)
@@ -205,53 +218,69 @@ pub fn reconstruct_params(arch: &Arch, plan: &Plan, dec: &Params) -> Result<Para
         } else if let Some(b) = dec.get(&format!("{}.b", t.name)) {
             out.insert(format!("{}.b", t.name), b.clone());
         }
-        let name = |suf: &str| format!("{}.{suf}", t.name);
-        let w = match scheme {
-            Scheme::Orig => dec[&name("w")].clone(),
-            Scheme::Svd { .. } => {
-                let w0 = as_mat(&dec[&name("w0")]);
-                let w1 = as_mat(&dec[&name("w1")]);
-                ht_mat(&w1.matmul(&w0))
-            }
-            Scheme::Tucker { .. } | Scheme::Tucker2 { .. } => {
-                let u = as_mat(&dec[&name("u")]);
-                let v = as_mat(&dec[&name("v")]);
-                let core = &dec[&name("core")];
-                if core.dims.len() == 4 {
-                    let f = Tucker2 { u, core: as_t4(core), v };
-                    ht_t4(&f.reconstruct())
-                } else {
-                    let cm = as_mat(core);
-                    ht_mat(&v.matmul(&cm).matmul(&u))
-                }
-            }
-            Scheme::Cp { .. } => {
-                if t.k == 1 {
-                    let w0 = as_mat(&dec[&name("w0")]);
-                    let w1 = as_mat(&dec[&name("w1")]);
-                    ht_mat(&w1.matmul(&w0))
-                } else {
-                    let f = CpStack {
-                        u: as_mat(&dec[&name("u")]),
-                        kh: as_mat(&dec[&name("kh")]),
-                        kw: as_mat(&dec[&name("kw")]),
-                        w1: as_mat(&dec[&name("w1")]),
-                    };
-                    ht_t4(&f.reconstruct())
-                }
-            }
-            Scheme::Branched { .. } | Scheme::Merged { .. } | Scheme::MergedInto { .. } => {
-                bail!("no dense per-site reconstruction for {scheme:?} at {}", t.name)
-            }
-        };
-        out.insert(name("w"), w);
+        out.insert(format!("{}.w", t.name), recon_site(&t, scheme, dec)?);
     }
     Ok(out)
 }
 
+/// Dense reconstruction of one site's weight from its decomposed factors
+/// (recursing through a sparse wrapper by scattering S onto the base).
+fn recon_site(t: &ConvSite, scheme: &Scheme, dec: &Params) -> Result<HostTensor> {
+    let name = |suf: &str| format!("{}.{suf}", t.name);
+    Ok(match scheme {
+        Scheme::Orig => dec[&name("w")].clone(),
+        Scheme::Svd { .. } => {
+            let w0 = as_mat(&dec[&name("w0")]);
+            let w1 = as_mat(&dec[&name("w1")]);
+            ht_mat(&w1.matmul(&w0))
+        }
+        Scheme::Tucker { .. } | Scheme::Tucker2 { .. } => {
+            let u = as_mat(&dec[&name("u")]);
+            let v = as_mat(&dec[&name("v")]);
+            let core = &dec[&name("core")];
+            if core.dims.len() == 4 {
+                let f = Tucker2 { u, core: as_t4(core), v };
+                ht_t4(&f.reconstruct())
+            } else {
+                let cm = as_mat(core);
+                ht_mat(&v.matmul(&cm).matmul(&u))
+            }
+        }
+        Scheme::Cp { .. } => {
+            if t.k == 1 {
+                let w0 = as_mat(&dec[&name("w0")]);
+                let w1 = as_mat(&dec[&name("w1")]);
+                ht_mat(&w1.matmul(&w0))
+            } else {
+                let f = CpStack {
+                    u: as_mat(&dec[&name("u")]),
+                    kh: as_mat(&dec[&name("kh")]),
+                    kw: as_mat(&dec[&name("kw")]),
+                    w1: as_mat(&dec[&name("w1")]),
+                };
+                ht_t4(&f.reconstruct())
+            }
+        }
+        Scheme::Sparse { base, .. } => {
+            let mut w = recon_site(t, base, dec)?;
+            let sr =
+                SparseResidual::from_tensors(&w.dims, &dec[&name("s")], &dec[&name("s_idx")])?;
+            for (j, &fi) in sr.idx.iter().enumerate() {
+                w.data[fi as usize] += sr.vals[j];
+            }
+            w
+        }
+        Scheme::Branched { .. } | Scheme::Merged { .. } | Scheme::MergedInto { .. } => {
+            bail!("no dense per-site reconstruction for {scheme:?} at {}", t.name)
+        }
+    })
+}
+
 /// Paper §2.2 freeze mask over decomposed params: the SVD/Tucker 1x1
 /// factor weights and the CP depthwise taps are frozen (false = frozen);
-/// the core / last factor stays trainable.
+/// the core / last factor stays trainable. The sparse residual (`.s`
+/// values and `.s_idx` pattern) is mask-frozen too — autograd rejects
+/// gradients w.r.t. CSR values, so S must never land in `wrt`.
 pub fn freeze_mask(params: &Params) -> BTreeMap<String, bool> {
     params
         .keys()
@@ -260,7 +289,9 @@ pub fn freeze_mask(params: &Params) -> BTreeMap<String, bool> {
                 || k.ends_with(".u")
                 || k.ends_with(".v")
                 || k.ends_with(".kh")
-                || k.ends_with(".kw");
+                || k.ends_with(".kw")
+                || k.ends_with(".s")
+                || k.ends_with(".s_idx");
             (k.clone(), !frozen)
         })
         .collect()

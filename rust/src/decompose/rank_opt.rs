@@ -301,6 +301,13 @@ impl AnalyticTimer {
                 .iter()
                 .map(|f| (f.macs_per_px, f.gate_dim))
                 .collect(),
+            Scheme::Sparse { base, ppm } => {
+                // chain sub-layers plus the residual arm: nnz MACs/px at
+                // scalar rate (gate dim 1 -> tile efficiency 1/lane)
+                let mut v = self.dims_of(site, base);
+                v.push((Scheme::sparse_nnz(site.c, site.s, site.k, *ppm), 1));
+                v
+            }
         }
     }
 }

@@ -12,7 +12,7 @@ use super::Report;
 use crate::decompose::rank_opt::{
     optimize_site, AnalyticTimer, LayerTimer, RankOptConfig,
 };
-use crate::decompose::SchemeFamily;
+use crate::decompose::{Scheme, SchemeFamily};
 use crate::model::Arch;
 use crate::profiler::Timer;
 use crate::runtime::layer_factory::EngineLayerTimer;
@@ -31,6 +31,10 @@ pub struct Config {
     pub family: SchemeFamily,
     /// compile options for the `--real` engine timer (`--opt-level`)
     pub opt: CompileOptions,
+    /// when set, each optimized site also times its sparse-residual
+    /// composition (W ~= chain + S at this density) as a companion
+    /// `{site}+s` row (`--sparse-density`)
+    pub sparse_density: Option<f64>,
 }
 
 impl Default for Config {
@@ -56,6 +60,7 @@ impl Default for Config {
             refine: 4,
             family: SchemeFamily::Svd,
             opt: CompileOptions::default(),
+            sparse_density: None,
         }
     }
 }
@@ -150,6 +155,27 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
                 ),
             ),
         ]));
+        // companion row: the chosen chain composed with a sparse residual
+        if let (Some(density), Some(_)) = (cfg.sparse_density, d.chosen_rank) {
+            let ppm = (density * 1e6).round() as u32;
+            let sch = Scheme::Sparse { base: Box::new(d.scheme(site)), ppm };
+            let t_sparse = timer.time_layer(site, &sch, b, hw)?;
+            rows.push(vec![
+                format!("{name}+s"),
+                site.c.to_string(),
+                site.s.to_string(),
+                "-".into(),
+                chosen.clone(),
+                "-".into(),
+                format!("{:.2}x", d.t_orig / t_sparse),
+            ]);
+            jrows.push(Json::obj_from(vec![
+                ("site", Json::Str(format!("{name}+s"))),
+                ("density", Json::Num(density)),
+                ("t_sparse", Json::Num(t_sparse)),
+                ("speedup", Json::Num(d.t_orig / t_sparse)),
+            ]));
+        }
     }
     Ok(Report {
         id: "table2".into(),
@@ -213,6 +239,27 @@ mod tests {
         if big != "ORG" {
             let v: usize = big.parse().unwrap();
             assert_eq!(v % 16, 0, "512-wide core should snap to lane 16, got {v}");
+        }
+    }
+
+    #[test]
+    fn sparse_density_adds_companion_rows() {
+        let engine = Engine::cpu().unwrap();
+        let cfg = Config {
+            stride: 1,
+            refine: 0,
+            sparse_density: Some(0.05),
+            ..Default::default()
+        };
+        let rep = run(&engine, &cfg).unwrap();
+        let base: Vec<_> = rep.rows.iter().filter(|r| !r[0].ends_with("+s")).collect();
+        let sparse: Vec<_> = rep.rows.iter().filter(|r| r[0].ends_with("+s")).collect();
+        assert_eq!(base.len(), 7);
+        // every decomposed site gains exactly one `{site}+s` companion
+        let n_org = base.iter().filter(|r| r[4] == "ORG").count();
+        assert_eq!(sparse.len(), 7 - n_org);
+        for r in &sparse {
+            assert!(r[6].ends_with('x'), "{}: speedup cell {:?}", r[0], r[6]);
         }
     }
 }

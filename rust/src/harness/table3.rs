@@ -11,7 +11,7 @@
 use anyhow::Result;
 
 use super::{fmt_pct, measure_fps, pct_delta, Report};
-use crate::decompose::{plan_variant, Plan, Variant};
+use crate::decompose::{plan_variant, sparsify_plan, Plan, Variant};
 use crate::model::{cost, Arch};
 use crate::profiler::Timer;
 use crate::runtime::netbuilder::BuiltNet;
@@ -29,6 +29,10 @@ pub struct Config {
     pub opt_plans: std::collections::BTreeMap<String, Plan>,
     /// compile options for the measured networks (`--opt-level`)
     pub opt: CompileOptions,
+    /// when set, append sparse-residual composed rows (`svd+s`,
+    /// `tucker2+s`, `cp+s`) AFTER the paper's five methods
+    /// (`--sparse-density`)
+    pub sparse_density: Option<f64>,
 }
 
 impl Default for Config {
@@ -42,6 +46,7 @@ impl Default for Config {
             no_measure: false,
             opt_plans: Default::default(),
             opt: CompileOptions::default(),
+            sparse_density: None,
         }
     }
 }
@@ -144,6 +149,46 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
                 ("delta_train_pct", Json::Num(dtrain)),
             ]));
         }
+        // composed chain+S rows ride AFTER the paper's five methods so
+        // positional consumers of the original rows stay valid
+        if let Some(density) = cfg.sparse_density {
+            let ppm = (density * 1e6).round() as u32;
+            for (variant, tag) in
+                [(Variant::Lrd, "svd"), (Variant::Tucker2, "tucker2"), (Variant::Cp, "cp")]
+            {
+                let base = plan_variant(&arch, variant, cfg.alpha, cfg.groups, None)?;
+                let plan = sparsify_plan(base, ppm);
+                let rep = cost::report(&arch, &plan, 224);
+                let fps = if cfg.no_measure {
+                    f64::NAN
+                } else {
+                    let net = BuiltNet::compile(
+                        engine, &arch, &plan, cfg.batch, cfg.hw, 1, &cfg.opt,
+                    )?;
+                    measure_fps(engine, &net, &timer)?
+                };
+                let dparams = pct_delta(rep.params as f64, rep0.params as f64);
+                let dflops = pct_delta(rep.macs as f64, rep0.macs as f64);
+                let dinfer = if fps.is_nan() { f64::NAN } else { pct_delta(fps, fps0) };
+                rows.push(vec![
+                    format!("{tag}+s"),
+                    rep.layers.to_string(),
+                    fmt_pct(dparams),
+                    fmt_pct(dflops),
+                    if dinfer.is_nan() { "-".into() } else { fmt_pct(dinfer) },
+                    if dinfer.is_nan() { "-".into() } else { fmt_pct(dinfer) },
+                ]);
+                jrows.push(Json::obj_from(vec![
+                    ("arch", Json::Str(arch_name.clone())),
+                    ("variant", Json::Str(format!("{tag}+s"))),
+                    ("density", Json::Num(density)),
+                    ("layers", Json::Num(rep.layers as f64)),
+                    ("delta_params_pct", Json::Num(dparams)),
+                    ("delta_flops_pct", Json::Num(dflops)),
+                    ("delta_infer_pct", Json::Num(dinfer)),
+                ]));
+            }
+        }
     }
     Ok(Report {
         id: "table3".into(),
@@ -177,7 +222,15 @@ pub fn frozen_param_fraction(arch: &Arch, plan: &Plan) -> Result<f64> {
     let mut total = 0usize;
     for t in arch.sites() {
         let k2 = t.k * t.k;
-        match plan.get(&t.name).unwrap_or(&Scheme::Orig) {
+        let (scheme, sparse_ppm) =
+            plan.get(&t.name).unwrap_or(&Scheme::Orig).split_sparse();
+        if let Some(ppm) = sparse_ppm {
+            // residual vals + indices are mask-frozen on top of the chain
+            let nnz = Scheme::sparse_nnz(t.c, t.s, t.k, ppm);
+            frozen += 2 * nnz;
+            total += 2 * nnz;
+        }
+        match scheme {
             Scheme::Orig => total += t.c * t.s * k2,
             Scheme::Svd { r } => {
                 total += r * (t.c + t.s);
@@ -206,6 +259,7 @@ pub fn frozen_param_fraction(arch: &Arch, plan: &Plan) -> Result<f64> {
             }
             Scheme::Merged { r1, r2 } => total += r1 * r2 * k2,
             Scheme::MergedInto { .. } => {} // counted via peer's merged cost
+            Scheme::Sparse { .. } => unreachable!("split_sparse strips the wrapper"),
         }
     }
     Ok(frozen as f64 / total as f64)
@@ -235,6 +289,28 @@ mod tests {
         assert!(branched < lrd, "branching must save more than vanilla");
         // merged restores original depth
         assert_eq!(rep.rows[4][1], "152");
+    }
+
+    #[test]
+    fn sparse_rows_append_after_the_five_methods() {
+        let engine = Engine::cpu().unwrap();
+        let cfg = Config {
+            archs: vec!["resnet152".into()],
+            no_measure: true,
+            sparse_density: Some(0.05),
+            ..Default::default()
+        };
+        let rep = run(&engine, &cfg).unwrap();
+        // header(arch) + five methods + three composed rows
+        assert_eq!(rep.rows.len(), 9);
+        assert_eq!(rep.rows[4][1], "152", "positional rows must not shift");
+        assert_eq!(rep.rows[6][0], "svd+s");
+        assert_eq!(rep.rows[7][0], "tucker2+s");
+        assert_eq!(rep.rows[8][0], "cp+s");
+        // the residual arm adds params/FLOPs on top of its pure chain
+        let pct = |s: &str| s.parse::<f64>().unwrap();
+        assert!(pct(&rep.rows[6][3]) > pct(&rep.rows[1][3]), "svd+s must cost more FLOPs");
+        assert!(pct(&rep.rows[6][3]) < 0.0, "chain+S must still beat the original");
     }
 
     #[test]

@@ -71,6 +71,9 @@ struct MethodResult {
     loss_curve: Vec<(usize, f32)>,
     /// native path: (fwd fusions, bwd fusions) of the train-step graph
     fusions: Option<(usize, usize)>,
+    /// pruning rows: achieved weight density after masking (measured on
+    /// the tensors, not the requested fraction)
+    density: Option<f64>,
 }
 
 pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
@@ -135,6 +138,7 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
             dflops: pct_delta(macs as f64, orig_macs as f64),
             loss_curve: curve,
             fusions: None,
+            density: None,
         });
     }
 
@@ -143,6 +147,7 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
         let masks = pruning::magnitude_masks(&arch, &trained, cfg.prune_fraction);
         let mut pruned = trained.clone();
         pruning::apply_masks(&mut pruned, &masks);
+        let achieved = pruning::density_stats(&pruned, &masks).overall;
         let oneshot_fwd = ForwardModel::load_with_params(engine, orig_fwd_spec, &pruned)?;
         let mut er = Rng::new(0xE7A1);
         let oneshot_acc = evaluate(&oneshot_fwd, &gen, &mut er, 25)?;
@@ -171,6 +176,7 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
             dflops: -pruning::pruned_cost_fraction(cfg.prune_fraction) * 100.0,
             loss_curve: curve,
             fusions: None,
+            density: Some(achieved),
         });
     }
 
@@ -254,6 +260,7 @@ fn run_native(engine: &Engine, cfg: &Config) -> Result<Report> {
             dflops: pct_delta(macs as f64, orig_macs as f64),
             loss_curve: report.loss_curve,
             fusions: stats.train.as_ref().map(|t| (t.fusions_fwd, t.fusions_bwd)),
+            density: None,
         });
     }
 
@@ -262,6 +269,7 @@ fn run_native(engine: &Engine, cfg: &Config) -> Result<Report> {
         let masks = pruning::magnitude_masks(&arch, &trained, cfg.prune_fraction);
         let mut pruned = trained.clone();
         pruning::apply_masks(&mut pruned, &masks);
+        let achieved = pruning::density_stats(&pruned, &masks).overall;
         let oneshot_acc = eval(&orig_plan, &pruned)?;
 
         let mut sess = NativeTrainSession::new(
@@ -297,6 +305,7 @@ fn run_native(engine: &Engine, cfg: &Config) -> Result<Report> {
             dflops: -pruning::pruned_cost_fraction(cfg.prune_fraction) * 100.0,
             loss_curve: curve,
             fusions: None,
+            density: Some(achieved),
         });
     }
 
@@ -349,6 +358,9 @@ fn render_report(
             fields.push(("remerge_fusions_fwd", Json::Num(fwd as f64)));
             fields.push(("remerge_fusions_bwd", Json::Num(bwd as f64)));
         }
+        if let Some(d) = r.density {
+            fields.push(("achieved_density", Json::Num(d)));
+        }
         jrows.push(Json::obj_from(fields));
     }
 
@@ -379,6 +391,14 @@ fn render_report(
                  the native train-step graph (backward fusions are the merged \
                  training scheme — frozen factors unlock them)",
                 r.name
+            ));
+        }
+        if let Some(d) = r.density {
+            notes.push(format!(
+                "{}: achieved weight density {:.1}% after masking (measured on the \
+                 tensors; differs from the requested fraction by mask rounding)",
+                r.name,
+                d * 100.0
             ));
         }
     }

@@ -85,6 +85,10 @@ flags: --artifacts DIR  --reports DIR  --arch NAME  --hw N  --batch N
                           tucker2 = 1x1 -> core -> 1x1 sandwich; cp =
                           separable depthwise chain). bench/rank-search/
                           train honour it
+       --sparse-density F compose a sparse residual arm (W ~= chain + S)
+                          onto every chain-decomposed site at density F
+                          (fraction of dense entries, e.g. 0.05). honoured
+                          by train, rank-search and bench table2/table3
        --opt-level 0|1|2  IR pass pipeline for compiled graphs (default 2:
                           cleanup + low-rank re-merge fusion; 0 = as built)
        --lane N           lane width for the re-merge profitability gate
@@ -126,6 +130,29 @@ fn scheme_family(args: &Args) -> Result<SchemeFamily> {
     let name = args.get_or("scheme", "svd");
     SchemeFamily::by_name(name)
         .ok_or_else(|| anyhow!("unknown --scheme {name:?} (svd|tucker2|cp)"))
+}
+
+/// `--sparse-density F` → fraction of dense entries the residual keeps
+/// (e.g. 0.05), or None when no sparse arm was requested.
+fn sparse_density(args: &Args) -> Result<Option<f64>> {
+    match args.get("sparse-density") {
+        None => Ok(None),
+        Some(s) => {
+            let f: f64 = s
+                .parse()
+                .map_err(|_| anyhow!("--sparse-density expects a number, got {s:?}"))?;
+            if !(f > 0.0 && f < 1.0) {
+                bail!("--sparse-density must be in (0, 1), got {f}");
+            }
+            Ok(Some(f))
+        }
+    }
+}
+
+/// `--sparse-density` in the integer parts-per-million `Scheme::Sparse`
+/// carries.
+fn sparse_ppm(args: &Args) -> Result<Option<u32>> {
+    Ok(sparse_density(args)?.map(|f| (f * 1e6).round() as u32))
 }
 
 fn artifacts_dir(args: &Args) -> std::path::PathBuf {
@@ -263,6 +290,16 @@ fn cmd_rank_search(args: &Args) -> Result<()> {
     })?;
     let kept = decisions.iter().filter(|d| d.chosen_rank.is_none()).count();
     println!("{} sites, {} kept original", decisions.len(), kept);
+    let plan = match sparse_ppm(args)? {
+        Some(ppm) => {
+            println!(
+                "composing sparse residual at {:.2}% density onto chain sites",
+                ppm as f64 / 1e4
+            );
+            lrdx::decompose::sparsify_plan(plan, ppm)
+        }
+        None => plan,
+    };
     if let Some(path) = args.get("out") {
         std::fs::write(path, plan_to_json(&plan).render())?;
         println!("wrote {path}");
@@ -353,6 +390,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         args.f64_or("alpha", 2.0)?,
         args.usize_or("groups", 2)?,
         None,
+        sparse_ppm(args)?,
     )?;
     let (report, stats) = trainsim::finetune_variant_native(
         &engine,
@@ -555,6 +593,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 refine: args.usize_or("refine", 4)?,
                 family: scheme_family(args)?,
                 opt: copts.clone(),
+                sparse_density: sparse_density(args)?,
                 ..Default::default()
             },
         )?,
@@ -568,6 +607,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 groups: args.usize_or("groups", 4)?,
                 no_measure: args.bool("no-measure"),
                 opt: copts.clone(),
+                sparse_density: sparse_density(args)?,
                 ..Default::default()
             },
         )?,

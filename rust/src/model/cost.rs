@@ -68,16 +68,20 @@ pub fn count_layers(arch: &Arch, plan: &Plan) -> usize {
     arch.sites()
         .iter()
         .filter(|t| t.kind != SiteKind::Downsample)
-        .map(|t| match plan.get(&t.name).unwrap_or(&Scheme::Orig) {
-            Scheme::Orig | Scheme::Merged { .. } | Scheme::MergedInto { .. } => 1,
-            Scheme::Svd { .. } => 2,
-            Scheme::Tucker { .. } | Scheme::Branched { .. } | Scheme::Tucker2 { .. } => 3,
-            Scheme::Cp { .. } => {
-                if t.k == 1 {
-                    2
-                } else {
-                    4
+        .map(|t| {
+            // a sparse arm is a branch of its site, not an extra layer
+            match plan.get(&t.name).unwrap_or(&Scheme::Orig).split_sparse().0 {
+                Scheme::Orig | Scheme::Merged { .. } | Scheme::MergedInto { .. } => 1,
+                Scheme::Svd { .. } => 2,
+                Scheme::Tucker { .. } | Scheme::Branched { .. } | Scheme::Tucker2 { .. } => 3,
+                Scheme::Cp { .. } => {
+                    if t.k == 1 {
+                        2
+                    } else {
+                        4
+                    }
                 }
+                Scheme::Sparse { .. } => unreachable!("split_sparse strips the wrapper"),
             }
         })
         .sum()
@@ -97,7 +101,12 @@ pub fn count_params_split(arch: &Arch, plan: &Plan) -> (usize, usize) {
     let mut bn = 0usize;
     for t in by_name.values() {
         let k2 = t.k * t.k;
-        let scheme = plan.get(&t.name).unwrap_or(&Scheme::Orig);
+        let (scheme, sparse_ppm) = plan.get(&t.name).unwrap_or(&Scheme::Orig).split_sparse();
+        // the residual arm stores vals [nnz] plus the f32-encoded index
+        // pattern [nnz] — both counted (honest artifact size accounting)
+        if let Some(ppm) = sparse_ppm {
+            weights += 2 * Scheme::sparse_nnz(t.c, t.s, t.k, ppm);
+        }
         weights += match scheme {
             Scheme::Orig => t.c * t.s * k2 + if t.kind == SiteKind::Fc { t.s } else { 0 },
             Scheme::Svd { r } => {
@@ -124,6 +133,7 @@ pub fn count_params_split(arch: &Arch, plan: &Plan) -> (usize, usize) {
                 FactorChain::of(t, s).expect("chain scheme").params()
                     + if t.kind == SiteKind::Fc { t.s } else { 0 }
             }
+            Scheme::Sparse { .. } => unreachable!("split_sparse strips the wrapper"),
         };
         // BN affine (gamma + beta) on the site's output channels; merging
         // shrinks the inner BNs to the ranks (see decompose::params).
@@ -152,7 +162,13 @@ pub fn count_macs(arch: &Arch, plan: &Plan, hw: usize) -> usize {
             let (ho, wo) = spatial[&t.name];
             let a = ho * wo;
             let k2 = t.k * t.k;
-            match plan.get(&t.name).unwrap_or(&Scheme::Orig) {
+            let (scheme, sparse_ppm) = plan.get(&t.name).unwrap_or(&Scheme::Orig).split_sparse();
+            // each residual nonzero is one MAC per output pixel
+            let sparse_macs = match sparse_ppm {
+                Some(ppm) => a * Scheme::sparse_nnz(t.c, t.s, t.k, ppm),
+                None => 0,
+            };
+            let base_macs = match scheme {
                 Scheme::Orig => a * t.c * t.s * k2,
                 Scheme::Svd { r } => a * r * (t.c + t.s),
                 Scheme::Tucker { r1, r2 } => a * (t.c * r1 + r1 * r2 * k2 + r2 * t.s),
@@ -174,7 +190,9 @@ pub fn count_macs(arch: &Arch, plan: &Plan, hw: usize) -> usize {
                 s @ (Scheme::Tucker2 { .. } | Scheme::Cp { .. }) => {
                     FactorChain::of(t, s).expect("chain scheme").macs(a)
                 }
-            }
+                Scheme::Sparse { .. } => unreachable!("split_sparse strips the wrapper"),
+            };
+            base_macs + sparse_macs
         })
         .sum()
 }
@@ -209,6 +227,21 @@ pub fn tile_efficiency(dim: usize, lane: usize) -> f64 {
 /// as both a contraction output and input, so it gates both factor matmuls.
 pub fn rank_efficiency(r: usize, lane: usize) -> f64 {
     tile_efficiency(r, lane)
+}
+
+/// Relative cost of one sparse-residual MAC against one dense-GEMM MAC on
+/// a `lane`-wide engine. CSR row gathers run at scalar rate, so a sparse
+/// MAC occupies a full lane-wide issue slot (`lane`x a dense MAC). Once
+/// the chain is contracted back to a dense weight the residual rides the
+/// activation tile the contraction already streams, halving its price —
+/// the asymmetry the three-way re-merge gate trades on.
+pub fn spmm_unit_cost(lane: usize, merged: bool) -> f64 {
+    let lane = lane.max(1) as f64;
+    if merged {
+        lane / 2.0
+    } else {
+        lane
+    }
 }
 
 /// Estimated VMEM bytes of one grid step of the fused low-rank matmul
@@ -332,6 +365,53 @@ mod tests {
             let ratio = orig as f64 / p as f64;
             assert!((1.5..2.6).contains(&ratio), "{v:?}: ratio {ratio}");
         }
+    }
+
+    #[test]
+    fn sparse_wrapper_costs_add_the_residual_arm() {
+        use crate::decompose::{plan_variant_with, SchemeFamily};
+        let a = arch("resnet-mini");
+        let base = plan_variant(&a, Variant::Lrd, 2.0, 4, None).unwrap();
+        let sp = plan_variant_with(
+            &a,
+            Variant::Lrd,
+            SchemeFamily::Svd,
+            2.0,
+            4,
+            None,
+            Some(50_000),
+        )
+        .unwrap();
+        // layer count is untouched: the residual is a branch, not a layer
+        assert_eq!(count_layers(&a, &sp), count_layers(&a, &base));
+        // params grow by exactly 2*nnz per wrapped site (vals + idx)
+        let extra: usize = a
+            .sites()
+            .iter()
+            .filter(|t| matches!(sp[&t.name], Scheme::Sparse { .. }))
+            .map(|t| 2 * Scheme::sparse_nnz(t.c, t.s, t.k, 50_000))
+            .sum();
+        assert!(extra > 0);
+        assert_eq!(count_params(&a, &sp), count_params(&a, &base) + extra);
+        // macs grow by exactly nnz * out_area per wrapped site
+        let spat = spatial_map(&a, 32);
+        let extra_macs: usize = a
+            .sites()
+            .iter()
+            .filter(|t| matches!(sp[&t.name], Scheme::Sparse { .. }))
+            .map(|t| {
+                let (h, w) = spat[&t.name];
+                h * w * Scheme::sparse_nnz(t.c, t.s, t.k, 50_000)
+            })
+            .sum();
+        assert_eq!(count_macs(&a, &sp, 32), count_macs(&a, &base, 32) + extra_macs);
+    }
+
+    #[test]
+    fn spmm_pricing_is_cheaper_after_contraction() {
+        assert_eq!(spmm_unit_cost(16, false), 16.0);
+        assert_eq!(spmm_unit_cost(16, true), 8.0);
+        assert_eq!(spmm_unit_cost(0, false), 1.0); // degenerate lane clamps
     }
 
     #[test]

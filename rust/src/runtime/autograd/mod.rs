@@ -20,6 +20,7 @@
 //! no dead adjoint chains behind the mask.
 
 use std::collections::HashSet;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -594,6 +595,74 @@ pub fn append_backward(
                     let sq = tape.mul(this, this);
                     let gv = tape.mul(g, sq);
                     contribs.push((input, tape.neg(gv)));
+                }
+            }
+            OpKind::SpmmCsr { n_rows, n_cols, row_ptr, col_idx, rhs_axis, val_perm } => {
+                // The frozen-S convention: sparse residual values are a
+                // mask-fixed parameter (`.s` is in the freeze suffix set),
+                // so no ∂vals path exists — refuse loudly rather than
+                // silently returning zeros if someone asks for one.
+                let (vals, x) = (node.inputs[0], node.inputs[1]);
+                if needs[vals.0] {
+                    bail!(
+                        "autograd: SpmmCsr values are mask-frozen (the `.s` \
+                         freeze convention) — exclude the sparse residual \
+                         from `wrt`"
+                    );
+                }
+                if needs[x.0] {
+                    // ∂x = Sᵀ·g: the same op with the transposed pattern,
+                    // riding the forward value vector through `val_perm`
+                    // (counting-sort transpose keeps per-row columns —
+                    // here the original row ids — strictly ascending).
+                    let nnz = col_idx.len();
+                    let mut counts = vec![0u32; *n_cols + 1];
+                    for &c in col_idx.iter() {
+                        counts[c as usize + 1] += 1;
+                    }
+                    for c in 0..*n_cols {
+                        counts[c + 1] += counts[c];
+                    }
+                    let mut next: Vec<u32> = counts[..*n_cols].to_vec();
+                    let mut col_idx_t = vec![0u32; nnz];
+                    let mut perm_t = vec![0u32; nnz];
+                    for r in 0..*n_rows {
+                        for e in row_ptr[r] as usize..row_ptr[r + 1] as usize {
+                            let c = col_idx[e] as usize;
+                            let pos = next[c] as usize;
+                            next[c] += 1;
+                            col_idx_t[pos] = r as u32;
+                            perm_t[pos] = match val_perm {
+                                Some(p) => p[e],
+                                None => e as u32,
+                            };
+                        }
+                    }
+                    let gd = tape.dims(g).to_vec();
+                    let mut out_dims = vec![*n_cols];
+                    out_dims.extend_from_slice(&gd[1..]);
+                    let gx = tape.push(
+                        OpKind::SpmmCsr {
+                            n_rows: *n_cols,
+                            n_cols: *n_rows,
+                            row_ptr: Arc::new(counts),
+                            col_idx: Arc::new(col_idx_t),
+                            rhs_axis: 0,
+                            val_perm: Some(Arc::new(perm_t)),
+                        },
+                        vec![vals, g],
+                        out_dims,
+                    );
+                    // route the contracted axis back to its x position
+                    let xr = tape.dims(x).len();
+                    let perm: Vec<usize> = (0..xr)
+                        .map(|a| match a.cmp(rhs_axis) {
+                            std::cmp::Ordering::Less => a + 1,
+                            std::cmp::Ordering::Equal => 0,
+                            std::cmp::Ordering::Greater => a,
+                        })
+                        .collect();
+                    contribs.push((x, tape.transpose(gx, &perm)));
                 }
             }
         }

@@ -10,6 +10,7 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -62,6 +63,23 @@ pub enum OpKind {
     Log,
     /// Elementwise reciprocal `1 / x`.
     Recip,
+    /// Sparse `[n_rows, n_cols]` CSR matrix times a dense operand,
+    /// contracting the sparse columns with axis `rhs_axis` of the dense
+    /// input. Inputs are `[vals, x]`: `vals` is the 1-D `[nnz]` value
+    /// vector (a parameter — the pattern is compile-time structure, the
+    /// values are weights), `x` is dense. Output shape is `[n_rows]`
+    /// followed by `x`'s dims with `rhs_axis` removed (sparse free dim
+    /// first, like `DotGeneral`). `val_perm`, when present, maps CSR
+    /// stream position `j` to `vals[val_perm[j]]` — the transposed
+    /// pattern autograd emits reuses the forward value vector in place.
+    SpmmCsr {
+        n_rows: usize,
+        n_cols: usize,
+        row_ptr: Arc<Vec<u32>>,
+        col_idx: Arc<Vec<u32>>,
+        rhs_axis: usize,
+        val_perm: Option<Arc<Vec<u32>>>,
+    },
 }
 
 #[derive(Clone, Debug)]
@@ -186,6 +204,38 @@ impl GraphBuilder {
 
 fn product(dims: &[usize]) -> usize {
     dims.iter().product()
+}
+
+/// Structural CSR validation shared by the builder and the sparse
+/// fitter: monotone row pointers covering `col_idx`, columns in range
+/// and strictly ascending within each row (ascending order is what
+/// makes the kernel's per-row accumulation order well-defined, hence
+/// bitwise thread-invariant).
+pub fn validate_csr(
+    n_rows: usize,
+    n_cols: usize,
+    row_ptr: &[u32],
+    col_idx: &[u32],
+) -> Result<()> {
+    let nnz = col_idx.len();
+    if row_ptr.len() != n_rows + 1 || row_ptr[0] != 0 || row_ptr[n_rows] as usize != nnz {
+        bail!("csr: row_ptr must be [0..={nnz}] over {n_rows} rows, got len {}", row_ptr.len());
+    }
+    for r in 0..n_rows {
+        let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+        if hi < lo || hi > nnz {
+            bail!("csr: row {r} range {lo}..{hi} is not monotone");
+        }
+        for j in lo..hi {
+            if col_idx[j] as usize >= n_cols {
+                bail!("csr: col {} out of range {n_cols} in row {r}", col_idx[j]);
+            }
+            if j > lo && col_idx[j] <= col_idx[j - 1] {
+                bail!("csr: row {r} columns not strictly ascending");
+            }
+        }
+    }
+    Ok(())
 }
 
 impl Op {
@@ -357,6 +407,49 @@ impl Op {
                 rhs_contract: rhs_contract.to_vec(),
             },
             vec![self.id, rhs.id],
+            dims,
+        ))
+    }
+
+    /// Sparse×dense contraction: `self` is the 1-D `[nnz]` value vector
+    /// of a CSR matrix `[n_rows, n_cols]` whose pattern is baked into
+    /// the op; `x`'s axis `rhs_axis` (extent `n_cols`) is contracted.
+    /// Output: `[n_rows]` ++ `x.dims` minus `rhs_axis`.
+    pub fn spmm_csr(
+        &self,
+        x: &Op,
+        n_rows: usize,
+        n_cols: usize,
+        row_ptr: Arc<Vec<u32>>,
+        col_idx: Arc<Vec<u32>>,
+        rhs_axis: usize,
+        val_perm: Option<Arc<Vec<u32>>>,
+    ) -> Result<Op> {
+        self.same_builder(x, "spmm_csr")?;
+        let vd = self.dims();
+        let nnz = col_idx.len();
+        if vd.len() != 1 || vd[0] != nnz {
+            bail!("spmm_csr: vals must be [nnz]={nnz}, got {vd:?}");
+        }
+        validate_csr(n_rows, n_cols, &row_ptr, &col_idx)?;
+        if let Some(p) = &val_perm {
+            if p.len() != nnz || p.iter().any(|&j| j as usize >= nnz) {
+                bail!("spmm_csr: val_perm must be a permutation of 0..{nnz}");
+            }
+        }
+        let xd = x.dims();
+        if rhs_axis >= xd.len() || xd[rhs_axis] != n_cols {
+            bail!("spmm_csr: rhs axis {rhs_axis} of {xd:?} must have extent {n_cols}");
+        }
+        let mut dims = vec![n_rows];
+        for (i, &e) in xd.iter().enumerate() {
+            if i != rhs_axis {
+                dims.push(e);
+            }
+        }
+        Ok(self.builder.push(
+            OpKind::SpmmCsr { n_rows, n_cols, row_ptr, col_idx, rhs_axis, val_perm },
+            vec![self.id, x.id],
             dims,
         ))
     }
@@ -570,6 +663,31 @@ mod tests {
         // empty reduces rejected for sum too
         let e = b.parameter(3, &[2, 0], "e").unwrap();
         assert!(e.reduce_sum(&[1], false).is_err());
+    }
+
+    #[test]
+    fn spmm_csr_shapes_and_validation() {
+        let b = GraphBuilder::new("t");
+        // 2x3 sparse: row 0 = {0, 2}, row 1 = {1}
+        let rp = Arc::new(vec![0u32, 2, 3]);
+        let ci = Arc::new(vec![0u32, 2, 1]);
+        let vals = b.parameter(0, &[3], "s").unwrap();
+        let x = b.parameter(1, &[4, 3, 5], "x").unwrap();
+        let y = vals.spmm_csr(&x, 2, 3, rp.clone(), ci.clone(), 1, None).unwrap();
+        assert_eq!(y.dims(), vec![2, 4, 5]);
+        // rhs axis extent mismatch
+        assert!(vals.spmm_csr(&x, 2, 3, rp.clone(), ci.clone(), 0, None).is_err());
+        // vals length must equal nnz
+        let bad = b.parameter(2, &[2], "bad").unwrap();
+        assert!(bad.spmm_csr(&x, 2, 3, rp.clone(), ci.clone(), 1, None).is_err());
+        // non-ascending columns rejected
+        let ci_bad = Arc::new(vec![2u32, 0, 1]);
+        assert!(vals.spmm_csr(&x, 2, 3, rp, ci_bad, 1, None).is_err());
+        // bad perm rejected
+        let rp2 = Arc::new(vec![0u32, 2, 3]);
+        let ci2 = Arc::new(vec![0u32, 2, 1]);
+        let perm_bad = Some(Arc::new(vec![0u32, 1, 7]));
+        assert!(vals.spmm_csr(&x, 2, 3, rp2, ci2, 1, perm_bad).is_err());
     }
 
     #[test]

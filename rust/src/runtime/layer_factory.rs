@@ -12,12 +12,14 @@
 //! IR has no conv primitive, so this *is* our conv lowering.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use super::graph::{Graph, GraphBuilder, Op};
 use super::{Buffer, Compiled, CompileOptions, Engine};
 use crate::decompose::rank_opt::LayerTimer;
+use crate::decompose::sparse::SparseResidual;
 use crate::decompose::Scheme;
 use crate::model::ConvSite;
 use crate::profiler::Timer;
@@ -178,6 +180,60 @@ pub fn grouped_conv2d(
     first.concat_in_dim(&parts[1..], 1)
 }
 
+/// Sparse-residual conv arm: applies S (stored as per-tap CSR slabs over
+/// the [S, C] plane) to `x` with the SAME padding and stride as the dense
+/// conv at the site, so its output aligns with the chain's [N, S, Ho, Wo].
+/// `x` is the UNPADDED [N, C, H, W] input, `vals` the [nnz] value vector
+/// in tap-major stream order; each tap's slab slices a contiguous range of
+/// `vals`, so no `val_perm` is needed.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_conv(
+    b: &B,
+    x: &Op,
+    vals: &Op,
+    pattern: &SparseResidual,
+    dims: &[usize; 4],
+    s_ch: usize,
+    k: usize,
+    stride: usize,
+    padding: usize,
+) -> Result<Op> {
+    let c = dims[1];
+    let xp = pad_hw(b, x, dims, padding, 0.0)?;
+    let (hp, wp) = (dims[2] + 2 * padding, dims[3] + 2 * padding);
+    if hp < k || wp < k {
+        bail!("spatial {hp}x{wp} smaller than kernel {k}");
+    }
+    let ho = (hp - k) / stride + 1;
+    let wo = (wp - k) / stride + 1;
+    let mut acc: Option<Op> = None;
+    for tap in pattern.taps()? {
+        // the same shifted strided window the dense conv uses for (kh, kw)
+        let xs = xp
+            .slice_in_dim(tap.h, tap.h + (ho - 1) * stride + 1, stride, 2)?
+            .slice_in_dim(tap.w, tap.w + (wo - 1) * stride + 1, stride, 3)?;
+        let vt = vals.slice_in_dim1(tap.lo, tap.hi, 0)?;
+        // [nnz_tap] spmm [N, C, Ho, Wo] contracting C -> [S, N, Ho, Wo]
+        let contrib = vt.spmm_csr(
+            &xs,
+            s_ch,
+            c,
+            Arc::new(tap.row_ptr),
+            Arc::new(tap.col_idx),
+            1,
+            None,
+        )?;
+        acc = Some(match acc {
+            None => contrib,
+            Some(a) => (a + contrib)?,
+        });
+    }
+    match acc {
+        Some(snhw) => snhw.transpose(&[1, 0, 2, 3]),
+        None => bail!("sparse pattern has no taps"),
+    }
+}
+
 /// Per-channel affine (inference-mode BN): `x * g[c] + b[c]`.
 pub fn bn_affine(x: &Op, gamma: &Op, beta: &Op, dims: &[usize; 4]) -> Result<Op> {
     let out_dims: Vec<usize> = dims.to_vec();
@@ -301,86 +357,134 @@ pub fn build_layer(
                 conv2d(&b, &xp, &w, &pd, co, site.k, site.stride)?
             }
         }
+        Scheme::MergedInto { .. } => bail!("merged_into sites are timed via their peer"),
+        chain => lower_chain(&b, &x, site, chain, batch, hw, &mut param)?,
+    };
+    let graph = b.build(&out)?;
+    Ok((graph, shapes))
+}
+
+/// Lower a factor-chain scheme (or its sparse-residual composition) at
+/// `site` onto builder `b`. `param` declares each weight in scheme order.
+/// Split out of `build_layer` so `Scheme::Sparse` can recurse into its
+/// base chain and then add the residual arm on the SAME input.
+fn lower_chain(
+    b: &B,
+    x: &Op,
+    site: &ConvSite,
+    scheme: &Scheme,
+    batch: usize,
+    hw: usize,
+    param: &mut dyn FnMut(&B, Vec<usize>, &str) -> Result<Op>,
+) -> Result<Op> {
+    let out = match scheme {
         Scheme::Svd { r } => {
-            let w0 = param(&b, vec![*r, site.c], "w0")?;
-            let w1 = param(&b, vec![site.s, *r], "w1")?;
+            let w0 = param(b, vec![*r, site.c], "w0")?;
+            let w1 = param(b, vec![site.s, *r], "w1")?;
             if site.k != 1 {
                 bail!("svd scheme on k={} site", site.k);
             }
-            let t = conv1x1(&x, &w0, site.stride)?;
+            let t = conv1x1(x, &w0, site.stride)?;
             conv1x1(&t, &w1, 1)?
         }
         Scheme::Tucker { r1, r2 } => {
-            let u = param(&b, vec![*r1, site.c], "u")?;
-            let core = param(&b, vec![*r2, *r1, site.k, site.k], "core")?;
-            let v = param(&b, vec![site.s, *r2], "v")?;
-            let t = conv1x1(&x, &u, 1)?;
+            let u = param(b, vec![*r1, site.c], "u")?;
+            let core = param(b, vec![*r2, *r1, site.k, site.k], "core")?;
+            let v = param(b, vec![site.s, *r2], "v")?;
+            let t = conv1x1(x, &u, 1)?;
             let tdims = [batch, *r1, hw, hw];
-            let tp = pad_hw(&b, &t, &tdims, site.padding, 0.0)?;
+            let tp = pad_hw(b, &t, &tdims, site.padding, 0.0)?;
             let pd = [batch, *r1, hw + 2 * site.padding, hw + 2 * site.padding];
-            let t = conv2d(&b, &tp, &core, &pd, *r2, site.k, site.stride)?;
+            let t = conv2d(b, &tp, &core, &pd, *r2, site.k, site.stride)?;
             conv1x1(&t, &v, 1)?
         }
         Scheme::Branched { r1, r2, groups } => {
-            let u = param(&b, vec![*r1, site.c], "u")?;
-            let core = param(&b, vec![*r2, r1 / groups, site.k, site.k], "core")?;
-            let v = param(&b, vec![site.s, *r2], "v")?;
-            let t = conv1x1(&x, &u, 1)?;
+            let u = param(b, vec![*r1, site.c], "u")?;
+            let core = param(b, vec![*r2, r1 / groups, site.k, site.k], "core")?;
+            let v = param(b, vec![site.s, *r2], "v")?;
+            let t = conv1x1(x, &u, 1)?;
             let tdims = [batch, *r1, hw, hw];
-            let tp = pad_hw(&b, &t, &tdims, site.padding, 0.0)?;
+            let tp = pad_hw(b, &t, &tdims, site.padding, 0.0)?;
             let pd = [batch, *r1, hw + 2 * site.padding, hw + 2 * site.padding];
-            let t = grouped_conv2d(&b, &tp, &core, &pd, *r2, site.k, site.stride, *groups)?;
+            let t = grouped_conv2d(b, &tp, &core, &pd, *r2, site.k, site.stride, *groups)?;
             conv1x1(&t, &v, 1)?
         }
         Scheme::Tucker2 { r1, r2 } => {
-            let u = param(&b, vec![*r1, site.c], "u")?;
+            let u = param(b, vec![*r1, site.c], "u")?;
             if site.k == 1 {
                 // three chained 1x1s; stride rides on the first factor
-                let core = param(&b, vec![*r2, *r1], "core")?;
-                let v = param(&b, vec![site.s, *r2], "v")?;
-                let t = conv1x1(&x, &u, site.stride)?;
+                let core = param(b, vec![*r2, *r1], "core")?;
+                let v = param(b, vec![site.s, *r2], "v")?;
+                let t = conv1x1(x, &u, site.stride)?;
                 let t = conv1x1(&t, &core, 1)?;
                 conv1x1(&t, &v, 1)?
             } else {
-                let core = param(&b, vec![*r2, *r1, site.k, site.k], "core")?;
-                let v = param(&b, vec![site.s, *r2], "v")?;
-                let t = conv1x1(&x, &u, 1)?;
+                let core = param(b, vec![*r2, *r1, site.k, site.k], "core")?;
+                let v = param(b, vec![site.s, *r2], "v")?;
+                let t = conv1x1(x, &u, 1)?;
                 let tdims = [batch, *r1, hw, hw];
-                let tp = pad_hw(&b, &t, &tdims, site.padding, 0.0)?;
+                let tp = pad_hw(b, &t, &tdims, site.padding, 0.0)?;
                 let pd = [batch, *r1, hw + 2 * site.padding, hw + 2 * site.padding];
-                let t = conv2d(&b, &tp, &core, &pd, *r2, site.k, site.stride)?;
+                let t = conv2d(b, &tp, &core, &pd, *r2, site.k, site.stride)?;
                 conv1x1(&t, &v, 1)?
             }
         }
         Scheme::Cp { r } => {
             if site.k == 1 {
                 // the CP chain of a matrix is the SVD pair
-                let w0 = param(&b, vec![*r, site.c], "w0")?;
-                let w1 = param(&b, vec![site.s, *r], "w1")?;
-                let t = conv1x1(&x, &w0, site.stride)?;
+                let w0 = param(b, vec![*r, site.c], "w0")?;
+                let w1 = param(b, vec![site.s, *r], "w1")?;
+                let t = conv1x1(x, &w0, site.stride)?;
                 conv1x1(&t, &w1, 1)?
             } else {
                 // Lebedev chain: 1x1 -> kx1 depthwise -> 1xk depthwise -> 1x1
-                let u = param(&b, vec![*r, site.c], "u")?;
-                let kh = param(&b, vec![*r, site.k], "kh")?;
-                let kw = param(&b, vec![*r, site.k], "kw")?;
-                let w1 = param(&b, vec![site.s, *r], "w1")?;
-                let t = conv1x1(&x, &u, 1)?;
+                let u = param(b, vec![*r, site.c], "u")?;
+                let kh = param(b, vec![*r, site.k], "kh")?;
+                let kw = param(b, vec![*r, site.k], "kw")?;
+                let w1 = param(b, vec![site.s, *r], "w1")?;
+                let t = conv1x1(x, &u, 1)?;
                 let tdims = [batch, *r, hw, hw];
-                let tp = pad_axis(&b, &t, &tdims, site.padding, 2)?;
+                let tp = pad_axis(b, &t, &tdims, site.padding, 2)?;
                 let hp = hw + 2 * site.padding;
                 let t = depthwise_1d(&tp, &kh, &[batch, *r, hp, hw], site.k, site.stride, 2)?;
                 let ho = (hp - site.k) / site.stride + 1;
-                let tp = pad_axis(&b, &t, &[batch, *r, ho, hw], site.padding, 3)?;
+                let tp = pad_axis(b, &t, &[batch, *r, ho, hw], site.padding, 3)?;
                 let wp = hw + 2 * site.padding;
                 let t = depthwise_1d(&tp, &kw, &[batch, *r, ho, wp], site.k, site.stride, 3)?;
                 conv1x1(&t, &w1, 1)?
             }
         }
-        Scheme::MergedInto { .. } => bail!("merged_into sites are timed via their peer"),
+        Scheme::Sparse { base, ppm } => {
+            let dense = lower_chain(b, x, site, base, batch, hw, &mut *param)?;
+            let wdims = if site.k == 1 {
+                vec![site.s, site.c]
+            } else {
+                vec![site.s, site.c, site.k, site.k]
+            };
+            let nnz = Scheme::sparse_nnz(site.c, site.s, site.k, *ppm);
+            // deterministic synthetic pattern: isolated timing needs the
+            // CSR geometry at the right density, not fitted values
+            let pattern = SparseResidual::synthetic(&wdims, nnz)?;
+            let vals = param(b, vec![nnz], "s")?;
+            let dims = [batch, site.c, hw, hw];
+            let sp = sparse_conv(
+                b,
+                x,
+                &vals,
+                &pattern,
+                &dims,
+                site.s,
+                site.k,
+                site.stride,
+                site.padding,
+            )?;
+            (dense + sp)?
+        }
+        Scheme::Orig | Scheme::Merged { .. } | Scheme::MergedInto { .. } => {
+            bail!("not a factor-chain scheme: {scheme:?}")
+        }
     };
-    let graph = b.build(&out)?;
-    Ok((graph, shapes))
+    Ok(out)
 }
 
 fn scheme_tag(s: &Scheme) -> String {
@@ -393,6 +497,7 @@ fn scheme_tag(s: &Scheme) -> String {
         Scheme::MergedInto { .. } => "mgi".into(),
         Scheme::Tucker2 { r1, r2 } => format!("tk2_{r1}x{r2}"),
         Scheme::Cp { r } => format!("cp{r}"),
+        Scheme::Sparse { base, ppm } => format!("{}+s{ppm}", scheme_tag(base)),
     }
 }
 
@@ -794,6 +899,91 @@ mod tests {
                     }
                 }
             }
+            let want = ref_conv(&x, &w, (n, c, h, h), (s, k, stride, 1));
+            crate::util::check::assert_allclose(&got, &want, 1e-3, 1e-3);
+        }
+    }
+
+    /// Densify a synthetic sparse pattern with the given vals into `w`.
+    fn scatter_synthetic(w: &mut [f32], wdims: &[usize], vals: &[f32]) {
+        let pat = SparseResidual::synthetic(wdims, vals.len()).unwrap();
+        for (j, &fi) in pat.idx.iter().enumerate() {
+            w[fi as usize] += vals[j];
+        }
+    }
+
+    #[test]
+    fn sparse_arm_adds_residual_to_svd_chain() {
+        let (n, c, s, r, h) = (2, 6, 8, 3, 4);
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..n * c * h * h).map(|_| rng.normal_f32()).collect();
+        let w0: Vec<f32> = (0..r * c).map(|_| rng.normal_f32()).collect();
+        let w1: Vec<f32> = (0..s * r).map(|_| rng.normal_f32()).collect();
+        let ppm = 100_000u32; // 10% of 48 entries -> nnz 4
+        let nnz = Scheme::sparse_nnz(c, s, 1, ppm);
+        assert_eq!(nnz, 4);
+        let vals: Vec<f32> = (0..nnz).map(|_| rng.normal_f32()).collect();
+        let sch = Scheme::Sparse { base: Box::new(Scheme::Svd { r }), ppm };
+        let t = site(c, s, 1, 1);
+        let got = run_layer(&t, &sch, n, h, &x, &[w0.clone(), w1.clone(), vals.clone()]);
+        let mut w = vec![0f32; s * c];
+        for si in 0..s {
+            for ci in 0..c {
+                for ri in 0..r {
+                    w[si * c + ci] += w1[si * r + ri] * w0[ri * c + ci];
+                }
+            }
+        }
+        scatter_synthetic(&mut w, &[s, c], &vals);
+        let want = ref_conv(&x, &w, (n, c, h, h), (s, 1, 1, 0));
+        crate::util::check::assert_allclose(&got, &want, 1e-3, 1e-3);
+    }
+
+    #[test]
+    fn sparse_arm_matches_dense_on_kxk_site() {
+        // residual over a Tucker2 chain on a 3x3 site, both strides: the
+        // per-tap CSR slabs must line up with the dense conv's windows
+        let (n, c, s, r1, r2, h, k) = (1, 4, 6, 2, 3, 6, 3);
+        let mut rng = Rng::new(10);
+        let x: Vec<f32> = (0..n * c * h * h).map(|_| rng.normal_f32()).collect();
+        let u: Vec<f32> = (0..r1 * c).map(|_| rng.normal_f32()).collect();
+        let core: Vec<f32> = (0..r2 * r1 * k * k).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..s * r2).map(|_| rng.normal_f32()).collect();
+        let ppm = 100_000u32; // 10% of 216 entries -> nnz 21
+        let nnz = Scheme::sparse_nnz(c, s, k, ppm);
+        assert_eq!(nnz, 21);
+        let vals: Vec<f32> = (0..nnz).map(|_| rng.normal_f32()).collect();
+        let sch = Scheme::Sparse { base: Box::new(Scheme::Tucker2 { r1, r2 }), ppm };
+        // dense equivalent: v @ core @ u per tap, plus the scattered residual
+        let mut w = vec![0f32; s * c * k * k];
+        for si in 0..s {
+            for ci in 0..c {
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let mut acc = 0f32;
+                        for j in 0..r2 {
+                            for i in 0..r1 {
+                                acc += v[si * r2 + j]
+                                    * core[((j * r1 + i) * k + ky) * k + kx]
+                                    * u[i * c + ci];
+                            }
+                        }
+                        w[((si * c + ci) * k + ky) * k + kx] = acc;
+                    }
+                }
+            }
+        }
+        scatter_synthetic(&mut w, &[s, c, k, k], &vals);
+        for stride in [1usize, 2] {
+            let t = site(c, s, k, stride);
+            let got = run_layer(
+                &t,
+                &sch,
+                n,
+                h,
+                &x,
+                &[u.clone(), core.clone(), v.clone(), vals.clone()],
+            );
             let want = ref_conv(&x, &w, (n, c, h, h), (s, k, stride, 1));
             crate::util::check::assert_allclose(&got, &want, 1e-3, 1e-3);
         }

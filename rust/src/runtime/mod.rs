@@ -74,6 +74,22 @@ impl HostTensor {
                 .zip(other.data.iter())
                 .all(|(a, b)| (a - b).abs() <= tol)
     }
+
+    /// Number of exactly-nonzero entries. Pruning masks and the sparse
+    /// fitter write hard `0.0`s, so exact comparison is the convention —
+    /// a near-zero weight still counts as occupied.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Fraction of nonzero entries; an empty tensor is vacuously dense.
+    pub fn density(&self) -> f64 {
+        if self.data.is_empty() {
+            1.0
+        } else {
+            self.nnz() as f64 / self.data.len() as f64
+        }
+    }
 }
 
 /// A device-resident (or, for the native backend, host-resident) buffer.
@@ -366,6 +382,18 @@ mod tests {
     fn host_tensor_shape_checked() {
         let r = std::panic::catch_unwind(|| HostTensor::new(vec![2, 3], vec![0.0; 5]));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn host_tensor_nnz_and_density() {
+        let t = HostTensor::new(vec![2, 3], vec![0.0, 1.5, 0.0, -2.0, 0.0, 1e-30]);
+        // exact-zero convention: the denormal-tiny 1e-30 still occupies a slot
+        assert_eq!(t.nnz(), 3);
+        assert!((t.density() - 0.5).abs() < 1e-12);
+        assert_eq!(HostTensor::zeros(vec![4]).nnz(), 0);
+        assert_eq!(HostTensor::zeros(vec![4]).density(), 0.0);
+        // empty tensor is vacuously dense, not 0/0
+        assert_eq!(HostTensor::new(vec![0], vec![]).density(), 1.0);
     }
 
     #[test]

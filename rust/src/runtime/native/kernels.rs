@@ -320,6 +320,81 @@ fn dot_rows(a: &[f32], b: &[f32], n: usize, k: usize, out: &mut [f32]) {
     }
 }
 
+/// CSR sparse×dense: `out[r, j] = Σ_{e ∈ row r} vals[perm(e)] · x[col(e), j]`
+/// with `x` pre-permuted so the contracted axis leads (`[n_cols, m]`
+/// row-major, like `dot_general`'s B operand). Rows are partitioned
+/// across lanes; within a row the entries accumulate in ascending CSR
+/// order, so — exactly like `dot_general` — neither threading nor
+/// chunking can change a bit. No zero-value skip, for the same IEEE
+/// reason as the dense kernel (stored zeros must still poison on NaN).
+#[allow(clippy::too_many_arguments)]
+pub fn spmm_csr(
+    vals: &[f32],
+    x: &[f32],
+    row_ptr: &[u32],
+    col_idx: &[u32],
+    val_perm: Option<&[u32]>,
+    m: usize,
+    out: &mut [f32],
+    pool: &WorkerPool,
+) {
+    if out.is_empty() {
+        return;
+    }
+    let n_rows = row_ptr.len() - 1;
+    debug_assert_eq!(out.len(), n_rows * m);
+    let macs = col_idx.len() * m;
+    let t = if macs >= PAR_MIN_MACS { pool.threads().min(n_rows) } else { 1 };
+    if t <= 1 {
+        spmm_rows(vals, x, row_ptr, col_idx, val_perm, m, 0, n_rows, out);
+        return;
+    }
+    let rows_per = n_rows.div_ceil(t);
+    let chunks = n_rows.div_ceil(rows_per);
+    let base = SendPtr(out.as_mut_ptr());
+    pool.run(chunks, &|ci| {
+        let r0 = ci * rows_per;
+        let rows = rows_per.min(n_rows - r0);
+        // SAFETY: row ranges are disjoint; `out` stays borrowed by the
+        // issuing `run` until every chunk completes.
+        let ochunk =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * m), rows * m) };
+        spmm_rows(vals, x, row_ptr, col_idx, val_perm, m, r0, rows, ochunk);
+    });
+}
+
+/// Serial core over a row block: per row, ascending-entry axpy into the
+/// output row (the fixed accumulation order the determinism pin needs).
+#[allow(clippy::too_many_arguments)]
+fn spmm_rows(
+    vals: &[f32],
+    x: &[f32],
+    row_ptr: &[u32],
+    col_idx: &[u32],
+    val_perm: Option<&[u32]>,
+    m: usize,
+    r0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    out.fill(0.0);
+    for i in 0..rows {
+        let r = r0 + i;
+        let orow = &mut out[i * m..(i + 1) * m];
+        for e in row_ptr[r] as usize..row_ptr[r + 1] as usize {
+            let v = match val_perm {
+                Some(p) => vals[p[e] as usize],
+                None => vals[e],
+            };
+            let c = col_idx[e] as usize;
+            let xrow = &x[c * m..(c + 1) * m];
+            for (o, &xv) in orow.iter_mut().zip(xrow.iter()) {
+                *o += v * xv;
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Reduction
 // ---------------------------------------------------------------------------
@@ -436,6 +511,61 @@ mod tests {
         let mut out = [0f32; 4];
         select(&p, &t, &f, &mut out, &pool(2));
         assert_eq!(out, [10.0, -2.0, 30.0, -4.0]);
+    }
+
+    #[test]
+    fn spmm_matches_ordered_naive_bitwise_across_threads() {
+        // 37x29 sparse against a [29, 401] dense block — big enough to
+        // cross PAR_MIN_MACS once m is large, with ragged rows.
+        let (n_rows, n_cols, m) = (37usize, 29usize, 401usize);
+        let mut row_ptr = vec![0u32];
+        let mut col_idx = Vec::new();
+        for r in 0..n_rows {
+            for c in 0..n_cols {
+                if (r * 7 + c * 13) % 5 == 0 {
+                    col_idx.push(c as u32);
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        let vals: Vec<f32> =
+            (0..col_idx.len()).map(|i| ((i * 31 % 17) as f32 - 8.0) * 0.21).collect();
+        let x: Vec<f32> =
+            (0..n_cols * m).map(|i| ((i * 43 % 23) as f32 - 11.0) * 0.09).collect();
+        // naive with the same per-row ascending accumulation order
+        let mut naive = vec![0f32; n_rows * m];
+        for r in 0..n_rows {
+            for e in row_ptr[r] as usize..row_ptr[r + 1] as usize {
+                let (v, c) = (vals[e], col_idx[e] as usize);
+                for j in 0..m {
+                    naive[r * m + j] += v * x[c * m + j];
+                }
+            }
+        }
+        for threads in [1, 2, 8] {
+            let mut out = vec![0f32; n_rows * m];
+            spmm_csr(&vals, &x, &row_ptr, &col_idx, None, m, &mut out, &pool(threads));
+            assert_eq!(out, naive, "threads={threads}");
+        }
+        // a permuted value stream reads through the perm
+        let perm: Vec<u32> = (0..vals.len() as u32).rev().collect();
+        let rvals: Vec<f32> = vals.iter().rev().copied().collect();
+        let mut out = vec![0f32; n_rows * m];
+        spmm_csr(&rvals, &x, &row_ptr, &col_idx, Some(&perm), m, &mut out, &pool(3));
+        assert_eq!(out, naive);
+    }
+
+    #[test]
+    fn spmm_has_no_zero_skip() {
+        // stored zero meeting NaN must poison, same as the dense kernel
+        let row_ptr = [0u32, 1];
+        let col_idx = [0u32];
+        let vals = [0.0f32];
+        let x = [f32::NAN, 1.0];
+        let mut out = [0f32; 2];
+        spmm_csr(&vals, &x, &row_ptr, &col_idx, None, 2, &mut out, &pool(1));
+        assert!(out[0].is_nan(), "0*NaN must be NaN, got {}", out[0]);
+        assert_eq!(out[1], 0.0);
     }
 
     #[test]

@@ -178,23 +178,20 @@ impl NativeExecutable {
 
     fn exec_step(&self, step: &Step, args: &[Arc<HostTensor>], bufs: &mut [Vec<f32>]) {
         let t = &self.pool;
-        // Dot operand permutes gather into their scratch slots first
+        // Dot/spmm operand permutes gather into their scratch slots first
         // (planner guarantees scratch ≠ inputs ≠ output).
-        if let Kernel::Dot { lhs_prep, rhs_prep, .. } = &step.kernel {
-            for (prep, &(vin, len)) in
-                [lhs_prep, rhs_prep].into_iter().zip(step.ins.iter())
-            {
-                if let Some(p) = prep {
-                    let mut scratch = std::mem::take(&mut bufs[p.slot]);
-                    kernels::gather(
-                        resolve(vin, len, args, bufs),
-                        &p.axes,
-                        &mut scratch[..p.len],
-                        t,
-                    );
-                    bufs[p.slot] = scratch;
-                }
+        let preps: [Option<(&plan::DotPrep, usize)>; 2] = match &step.kernel {
+            Kernel::Dot { lhs_prep, rhs_prep, .. } => {
+                [lhs_prep.as_ref().map(|p| (p, 0)), rhs_prep.as_ref().map(|p| (p, 1))]
             }
+            Kernel::Spmm { rhs_prep, .. } => [rhs_prep.as_ref().map(|p| (p, 1)), None],
+            _ => [None, None],
+        };
+        for (p, which) in preps.into_iter().flatten() {
+            let (vin, len) = step.ins[which];
+            let mut scratch = std::mem::take(&mut bufs[p.slot]);
+            kernels::gather(resolve(vin, len, args, bufs), &p.axes, &mut scratch[..p.len], t);
+            bufs[p.slot] = scratch;
         }
         // The output slot is taken out of the arena wholesale, so input
         // reads borrow `bufs` freely; in-place steps find their dying
@@ -232,6 +229,23 @@ impl NativeExecutable {
                     None => resolve(ins[1].0, ins[1].1, args, bufs),
                 };
                 kernels::dot_general(a, b, *n, *k, out, t);
+            }
+            Kernel::Spmm { m, row_ptr, col_idx, val_perm, rhs_prep } => {
+                let vals = resolve(ins[0].0, ins[0].1, args, bufs);
+                let x = match rhs_prep {
+                    Some(p) => &bufs[p.slot][..p.len],
+                    None => resolve(ins[1].0, ins[1].1, args, bufs),
+                };
+                kernels::spmm_csr(
+                    vals,
+                    x,
+                    row_ptr,
+                    col_idx,
+                    val_perm.as_ref().map(|p| &p[..]),
+                    *m,
+                    out,
+                    t,
+                );
             }
             Kernel::Bin { op, in_place } => {
                 let op = *op;
@@ -544,6 +558,113 @@ mod tests {
         let g = b.build(&y).unwrap();
         let out = run_all_ways(&g, &[HostTensor::new(vec![4], vec![-1., 2., -3., 4.])]);
         assert_eq!(out.data, vec![0., 2., 0., 4.]);
+    }
+
+    #[test]
+    fn spmm_csr_matches_densified_dot() {
+        // 3x4 sparse with pattern {0:(1,3), 1:(), 2:(0,2)} against
+        // x [2,4,5], contracting axis 1 -> [3,2,5] (like a 1x1 conv tap)
+        let rp = Arc::new(vec![0u32, 2, 2, 4]);
+        let ci = Arc::new(vec![1u32, 3, 0, 2]);
+        let vals_v = vec![2.0f32, -1.0, 0.5, 3.0];
+        let mut rng = crate::util::rng::Rng::new(0x5EED);
+        let x_v: Vec<f32> = (0..2 * 4 * 5).map(|_| rng.normal_f32()).collect();
+
+        let b = GraphBuilder::new("spmm");
+        let vals = b.parameter(0, &[4], "s").unwrap();
+        let x = b.parameter(1, &[2, 4, 5], "x").unwrap();
+        let y = vals.spmm_csr(&x, 3, 4, rp.clone(), ci.clone(), 1, None).unwrap();
+        let g = b.build(&y).unwrap();
+        let out = run_all_ways(
+            &g,
+            &[
+                HostTensor::new(vec![4], vals_v.clone()),
+                HostTensor::new(vec![2, 4, 5], x_v.clone()),
+            ],
+        );
+        assert_eq!(out.dims, vec![3, 2, 5]);
+
+        // densify and run the same contraction through dot_general
+        let mut dense = vec![0f32; 3 * 4];
+        for r in 0..3 {
+            for e in rp[r] as usize..rp[r + 1] as usize {
+                dense[r * 4 + ci[e] as usize] = vals_v[e];
+            }
+        }
+        let b2 = GraphBuilder::new("dense");
+        let w = b2.parameter(0, &[3, 4], "w").unwrap();
+        let x2 = b2.parameter(1, &[2, 4, 5], "x").unwrap();
+        let d = w.dot_general(&x2, &[1], &[1]).unwrap();
+        let g2 = b2.build(&d).unwrap();
+        let want = run1(
+            &g2,
+            &[HostTensor::new(vec![3, 4], dense), HostTensor::new(vec![2, 4, 5], x_v)],
+        );
+        assert_allclose(&out.data, &want.data, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn spmm_csr_randomized_property_suite() {
+        // the acceptance pin: planned == reference bitwise, and planned
+        // output identical across threads {1, 2, 8}, over randomized
+        // shapes / densities / rhs axes.
+        let mut rng = crate::util::rng::Rng::new(0xC5A);
+        for case in 0..12 {
+            let n_rows = 1 + (rng.next_u64() % 40) as usize;
+            let n_cols = 1 + (rng.next_u64() % 40) as usize;
+            let m_extra = 1 + (rng.next_u64() % 30) as usize;
+            let rhs_axis = (case % 2) as usize; // x is rank 2 either way
+            let mut row_ptr = vec![0u32];
+            let mut col_idx: Vec<u32> = Vec::new();
+            for _ in 0..n_rows {
+                for c in 0..n_cols {
+                    if rng.next_u64() % 5 == 0 {
+                        col_idx.push(c as u32);
+                    }
+                }
+                row_ptr.push(col_idx.len() as u32);
+            }
+            let nnz = col_idx.len();
+            let vals_v: Vec<f32> = (0..nnz).map(|_| rng.normal_f32()).collect();
+            let xdims = if rhs_axis == 0 {
+                vec![n_cols, m_extra]
+            } else {
+                vec![m_extra, n_cols]
+            };
+            let x_v: Vec<f32> =
+                (0..n_cols * m_extra).map(|_| rng.normal_f32()).collect();
+
+            let b = GraphBuilder::new("prop");
+            let vals = b.parameter(0, &[nnz], "s").unwrap();
+            let x = b.parameter(1, &xdims, "x").unwrap();
+            let y = vals
+                .spmm_csr(
+                    &x,
+                    n_rows,
+                    n_cols,
+                    Arc::new(row_ptr),
+                    Arc::new(col_idx),
+                    rhs_axis,
+                    None,
+                )
+                .unwrap();
+            let g = b.build(&y).unwrap();
+            let args: Vec<Arc<HostTensor>> = vec![
+                Arc::new(HostTensor::new(vec![nnz], vals_v)),
+                Arc::new(HostTensor::new(xdims, x_v)),
+            ];
+            let reference =
+                NativeExecutable::new(g.clone(), 1).unwrap().run_reference(&args).unwrap();
+            for threads in [1usize, 2, 8] {
+                let exe = NativeExecutable::new(g.clone(), threads).unwrap();
+                let out = exe.run(&args).unwrap();
+                assert_eq!(
+                    out.data, reference.data,
+                    "case {case}: planned@{threads} vs reference"
+                );
+                assert_eq!(out.dims, reference.dims);
+            }
+        }
     }
 
     #[test]

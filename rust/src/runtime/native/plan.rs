@@ -17,6 +17,8 @@
 //! values, which is one half of the bitwise-determinism contract; the
 //! other half is the kernels' partition-invariant accumulation order.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use super::super::graph::{Graph, OpKind};
@@ -115,6 +117,17 @@ pub enum Kernel {
     Concat { outer: usize, inner: usize, total: usize, mids: Vec<usize> },
     Slice { outer: usize, mid_in: usize, inner: usize, start: usize, stride: usize, mid_out: usize },
     Dot { n: usize, k: usize, lhs_prep: Option<DotPrep>, rhs_prep: Option<DotPrep> },
+    /// CSR sparse×dense (`SpmmCsr`): the pattern rides in the plan (it
+    /// is compile-time structure, uploaded once with the executable, not
+    /// re-derived per run); `rhs_prep` permutes the dense operand so the
+    /// contracted axis leads, exactly like a dot operand prep.
+    Spmm {
+        m: usize,
+        row_ptr: Arc<Vec<u32>>,
+        col_idx: Arc<Vec<u32>>,
+        val_perm: Option<Arc<Vec<u32>>>,
+        rhs_prep: Option<DotPrep>,
+    },
     Bin { op: BinOp, in_place: InPlace },
     /// `f(scalar-broadcast)` variant: `swap` means the scalar is the lhs.
     BinScalar { op: BinOp, swap: bool, in_place: bool },
@@ -500,6 +513,37 @@ pub fn build_plan(g: &Graph) -> Result<ExecPlan> {
                     None,
                 )
             }
+            OpKind::SpmmCsr { row_ptr, col_idx, rhs_axis, val_perm, .. } => {
+                let xd = in_dims!(1);
+                let m: usize = xd
+                    .iter()
+                    .enumerate()
+                    .filter(|&(ax, _)| ax != *rhs_axis)
+                    .map(|(_, &e)| e)
+                    .product();
+                let rhs_prep = if *rhs_axis == 0 {
+                    None // contracted axis already leads in row-major layout
+                } else {
+                    let mut p = vec![*rhs_axis];
+                    p.extend((0..xd.len()).filter(|ax| ax != rhs_axis));
+                    let len = in_len!(1);
+                    let pdims: Vec<usize> = p.iter().map(|&ax| xd[ax]).collect();
+                    let axes = transpose_axes(xd, &pdims, &p);
+                    naive_bytes += len * 4;
+                    Some(DotPrep { slot: arena.alloc(len), len, axes })
+                };
+                (
+                    Kernel::Spmm {
+                        m,
+                        row_ptr: row_ptr.clone(),
+                        col_idx: col_idx.clone(),
+                        val_perm: val_perm.clone(),
+                        rhs_prep,
+                    },
+                    vec![(val!(0), in_len!(0)), (val!(1), in_len!(1))],
+                    None,
+                )
+            }
             OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Max | OpKind::Gt => {
                 let op = match &node.op {
                     OpKind::Add => BinOp::Add,
@@ -602,10 +646,14 @@ pub fn build_plan(g: &Graph) -> Result<ExecPlan> {
             Some(s) => s, // in-place: slot stays allocated, refs adjusted below
             None => arena.alloc(out_len),
         };
-        if let Kernel::Dot { lhs_prep, rhs_prep, .. } = &kernel {
-            for p in [lhs_prep, rhs_prep].into_iter().flatten() {
-                arena.release(p.slot);
+        match &kernel {
+            Kernel::Dot { lhs_prep, rhs_prep, .. } => {
+                for p in [lhs_prep, rhs_prep].into_iter().flatten() {
+                    arena.release(p.slot);
+                }
             }
+            Kernel::Spmm { rhs_prep: Some(p), .. } => arena.release(p.slot),
+            _ => {}
         }
         // Consume the input edges (for in-place steps this drives the
         // reused slot's refs to 0 without releasing it — we immediately

@@ -155,6 +155,30 @@ fn eval_op(
                 bail!("elementwise op on mismatched shapes {:?} vs {:?}", a.dims, b.dims);
             }
         }
+        OpKind::SpmmCsr { row_ptr, col_idx, rhs_axis, val_perm, .. } => {
+            let (vals, x) = (ins[0], ins[1]);
+            // bring the contracted axis to the front, like a dot rhs prep
+            let xp = if *rhs_axis == 0 {
+                None
+            } else {
+                let mut p = vec![*rhs_axis];
+                p.extend((0..x.dims.len()).filter(|ax| ax != rhs_axis));
+                Some(p)
+            };
+            let xbuf = permuted(x, xp.as_deref(), serial);
+            let xflat: &[f32] = xbuf.as_deref().unwrap_or(&x.data);
+            let m: usize = out_dims[1..].iter().product();
+            kernels::spmm_csr(
+                &vals.data,
+                xflat,
+                row_ptr,
+                col_idx,
+                val_perm.as_ref().map(|p| &p[..]),
+                m,
+                &mut data,
+                serial,
+            );
+        }
         OpKind::Select => {
             kernels::select(&ins[0].data, &ins[1].data, &ins[2].data, &mut data, serial);
         }

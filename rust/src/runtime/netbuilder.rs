@@ -10,11 +10,15 @@
 //! quantity is throughput, and affine-BN is exactly what a deployed
 //! inference graph folds to.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail, Result};
 
 use super::graph::{Graph, GraphBuilder, Op};
 use super::layer_factory as lf;
-use super::{Buffer, Compiled, CompileOptions, Engine, PassStats};
+use super::{Buffer, Compiled, CompileOptions, Engine, HostTensor, PassStats};
+use crate::decompose::params::Params;
+use crate::decompose::sparse::SparseResidual;
 use crate::decompose::{Plan, Scheme};
 use crate::model::{Arch, BlockKind, ConvSite, SiteKind};
 use crate::util::rng::Rng;
@@ -33,6 +37,9 @@ struct NetCtx<'a> {
     b: &'a B,
     specs: Vec<ParamSpec>,
     next_idx: usize,
+    /// Decomposed parameters the net is being built against, when known —
+    /// the source of fitted sparse-residual CSR patterns (`{site}.s_idx`).
+    params: Option<&'a Params>,
 }
 
 impl NetCtx<'_> {
@@ -41,6 +48,25 @@ impl NetCtx<'_> {
         self.next_idx += 1;
         self.specs.push(ParamSpec { name: name.to_string(), shape });
         Ok(p)
+    }
+
+    /// CSR pattern for a sparse-residual site: the fitted one when the
+    /// net is built against decomposed params, a deterministic synthetic
+    /// one at the same density otherwise (He-initialised nets only need
+    /// the right geometry).
+    fn sparse_pattern(
+        &self,
+        idx_name: &str,
+        wdims: &[usize],
+        nnz: usize,
+    ) -> Result<SparseResidual> {
+        match self.params.and_then(|p| p.get(idx_name)) {
+            Some(idx) => {
+                let zeros = HostTensor::new(idx.dims.clone(), vec![0.0; idx.data.len()]);
+                SparseResidual::from_tensors(wdims, &zeros, idx)
+            }
+            None => SparseResidual::synthetic(wdims, nnz),
+        }
     }
 }
 
@@ -56,6 +82,22 @@ fn apply_site(
     w: usize,
 ) -> Result<(Op, usize, usize, usize)> {
     let scheme = plan.get(&site.name).unwrap_or(&Scheme::Orig);
+    apply_scheme(ctx, site, plan, scheme, x, n, h, w)
+}
+
+/// `apply_site` with an explicit scheme — `Scheme::Sparse` recurses into
+/// its base chain here, then rides the CSR residual arm on the same input.
+#[allow(clippy::too_many_arguments)]
+fn apply_scheme(
+    ctx: &mut NetCtx,
+    site: &ConvSite,
+    plan: &Plan,
+    scheme: &Scheme,
+    x: &Op,
+    n: usize,
+    h: usize,
+    w: usize,
+) -> Result<(Op, usize, usize, usize)> {
     let (ho, wo) = (
         (h + 2 * site.padding - site.k) / site.stride + 1,
         (w + 2 * site.padding - site.k) / site.stride + 1,
@@ -154,6 +196,34 @@ fn apply_site(
                 (lf::conv1x1(&t, &w1, 1)?, site.s, ho, wo)
             }
         }
+        Scheme::Sparse { base, ppm } => {
+            // base chain first (declares its factors), then the residual
+            // arm on the SAME input, aligned by identical stride/padding
+            let (dense, cc, nh, nw) = apply_scheme(ctx, site, plan, base, x, n, h, w)?;
+            if cc != site.s {
+                bail!("{nm}: sparse base emits {cc} channels, site wants {}", site.s);
+            }
+            let wdims = if site.k == 1 {
+                vec![site.s, site.c]
+            } else {
+                vec![site.s, site.c, site.k, site.k]
+            };
+            let nnz = Scheme::sparse_nnz(site.c, site.s, site.k, *ppm);
+            let pattern = ctx.sparse_pattern(&format!("{nm}.s_idx"), &wdims, nnz)?;
+            let vals = ctx.param(&format!("{nm}.s"), vec![pattern.nnz()])?;
+            let sp = lf::sparse_conv(
+                ctx.b,
+                x,
+                &vals,
+                &pattern,
+                &[n, site.c, h, w],
+                site.s,
+                site.k,
+                site.stride,
+                site.padding,
+            )?;
+            ((dense + sp)?, cc, nh, nw)
+        }
         Scheme::MergedInto { peer } => {
             let (r1, r2) = match plan.get(peer) {
                 Some(Scheme::Merged { r1, r2 }) => (*r1, *r2),
@@ -223,9 +293,24 @@ pub fn build_forward_mode(
     hw: usize,
     bn: BnMode,
 ) -> Result<(Graph, Vec<ParamSpec>)> {
+    build_forward_with(arch, plan, batch, hw, bn, None)
+}
+
+/// `build_forward_mode` built against known decomposed parameters:
+/// sparse-residual sites bake the FITTED CSR pattern (`{site}.s_idx`)
+/// into the graph instead of a synthetic one. Parameter names, order and
+/// shapes are unchanged — `.s_idx` never becomes a graph parameter.
+pub fn build_forward_with(
+    arch: &Arch,
+    plan: &Plan,
+    batch: usize,
+    hw: usize,
+    bn: BnMode,
+    params: Option<&Params>,
+) -> Result<(Graph, Vec<ParamSpec>)> {
     let b = B::new(&format!("{}_fwd", arch.name));
     let x = b.parameter(0, &[batch, 3, hw, hw], "x")?;
-    let mut ctx = NetCtx { b: &b, specs: Vec::new(), next_idx: 1 };
+    let mut ctx = NetCtx { b: &b, specs: Vec::new(), next_idx: 1, params };
     let sites = arch.sites();
     let by_name: std::collections::HashMap<String, ConvSite> =
         sites.iter().map(|t| (t.name.clone(), t.clone())).collect();
@@ -273,7 +358,8 @@ pub fn build_forward_mode(
     let pooled = lf::gap(&y)?; // [batch, C]
     let fc = sites.last().unwrap();
     assert_eq!(fc.kind, SiteKind::Fc);
-    let logits = match plan.get("fc").unwrap_or(&Scheme::Orig) {
+    let (fc_base, fc_sparse) = plan.get("fc").unwrap_or(&Scheme::Orig).split_sparse();
+    let logits = match fc_base {
         Scheme::Svd { r } | Scheme::Cp { r } => {
             let w0 = ctx.param("fc.w0", vec![*r, fc.c])?;
             let w1 = ctx.param("fc.w1", vec![fc.s, *r])?;
@@ -293,6 +379,30 @@ pub fn build_forward_mode(
             pooled.dot_general(&wp, &[1], &[1])?
         }
     };
+    let logits = match fc_sparse {
+        Some(ppm) => {
+            let nnz = Scheme::sparse_nnz(fc.c, fc.s, 1, ppm);
+            let pattern = ctx.sparse_pattern("fc.s_idx", &[fc.s, fc.c], nnz)?;
+            let taps = pattern.taps()?;
+            if taps.len() != 1 {
+                bail!("fc sparse pattern must be a single tap, got {}", taps.len());
+            }
+            let tap = taps.into_iter().next().unwrap();
+            let vals = ctx.param("fc.s", vec![pattern.nnz()])?;
+            // [nnz] spmm [batch, C] contracting C -> [S, batch] -> [batch, S]
+            let sp = vals.spmm_csr(
+                &pooled,
+                fc.s,
+                fc.c,
+                Arc::new(tap.row_ptr),
+                Arc::new(tap.col_idx),
+                1,
+                None,
+            )?;
+            (logits + sp.transpose(&[1, 0])?)?
+        }
+        None => logits,
+    };
     let bias = ctx.param("fc.b", vec![fc.s])?;
     let bias = bias.broadcast_in_dim(&[batch, fc.s], &[1])?;
     let out = (logits + bias)?;
@@ -311,6 +421,10 @@ pub fn init_param_host(spec: &ParamSpec, rng: &mut Rng) -> Vec<f32> {
         vec![1.0f32; n]
     } else if spec.name.ends_with(".bn.b") || spec.name == "fc.b" {
         vec![0.0f32; n]
+    } else if spec.name.ends_with(".s") {
+        // sparse-residual values start small, not He-scaled: a synthetic
+        // residual must not drown the chain it rides on
+        (0..n).map(|_| rng.normal_f32() * 0.05).collect()
     } else {
         rng.he_weights(n, fan_in)
     }
@@ -385,7 +499,7 @@ impl BuiltNet {
         opts: &CompileOptions,
         bn: BnMode,
     ) -> Result<BuiltNet> {
-        let (graph, specs) = build_forward_mode(arch, plan, batch, hw, bn)?;
+        let (graph, specs) = build_forward_with(arch, plan, batch, hw, bn, Some(params))?;
         let exe = engine.compile(&graph, opts)?;
         let mut weight_bufs = Vec::with_capacity(specs.len());
         for spec in &specs {
@@ -630,6 +744,37 @@ mod tests {
             // batch entries must differ (no accidental weight/input mixup)
             assert!(logits[..10] != logits[10..], "{v:?}");
         }
+    }
+
+    #[test]
+    fn sparse_composed_net_builds_and_runs() {
+        let engine = Engine::native();
+        let arch = Arch::by_name("resnet-mini").unwrap();
+        let plan = crate::decompose::plan_variant_with(
+            &arch,
+            Variant::Lrd,
+            crate::decompose::SchemeFamily::Svd,
+            2.0,
+            2,
+            None,
+            Some(50_000),
+        )
+        .unwrap();
+        let (_graph, specs) = build_forward(&arch, &plan, 1, 16).unwrap();
+        // every wrapped site declares `.s` vals; the pattern is baked, so
+        // `.s_idx` must never surface as a graph parameter
+        assert!(specs.iter().any(|s| s.name.ends_with(".s")));
+        assert!(specs.iter().all(|s| !s.name.ends_with(".s_idx")));
+        assert!(specs.iter().any(|s| s.name == "fc.s"));
+        let net =
+            BuiltNet::compile(&engine, &arch, &plan, 2, 16, 7, &CompileOptions::default())
+                .unwrap();
+        let x = crate::util::det_input(2, 16);
+        let xb = engine.upload(&x, &[2, 3, 16, 16]).unwrap();
+        let out = net.forward(&xb).unwrap().to_host().unwrap().data;
+        assert_eq!(out.len(), 20);
+        assert!(out.iter().all(|v| v.is_finite()));
+        assert!(out[..10] != out[10..]);
     }
 
     #[test]

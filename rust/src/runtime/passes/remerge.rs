@@ -49,9 +49,22 @@
 //! Factors with other consumers are left alone (the intermediate
 //! activation is observable), and the rewrite is only applied when the
 //! fused output shape provably equals the original.
+//!
+//! **Sparse-residual siblings.** A `Scheme::Sparse` site lowers to
+//! `chain(x) + S(x)` — the chain's output rides an `Add` whose other arm
+//! is a CSR residual (`SpmmCsr` taps). The residual changes the gate's
+//! economics asymmetrically: beside a factor chain each residual MAC
+//! costs `spmm_unit_cost(lane, false)` dense-MAC equivalents, but once
+//! the chain is contracted back to a dense weight the residual rides the
+//! activation tile the dense contraction already streams and its unit
+//! price halves (`spmm_unit_cost(lane, true)`). The gate therefore
+//! decides **three ways** per link: keep chain + S, contract the chain
+//! and keep S, or (when no sibling is found) the plain two-way merge. A
+//! heavy residual *lowers* the bar for contracting an otherwise
+//! profitable chain. The residual arm itself is never rewritten.
 
 use super::cleanup::Traced;
-use crate::model::cost::rank_efficiency;
+use crate::model::cost::{rank_efficiency, spmm_unit_cost};
 use crate::runtime::graph::{Graph, Node, NodeId, OpKind};
 
 /// `true` when the decomposed pair is not worth keeping at this lane
@@ -63,13 +76,84 @@ use crate::runtime::graph::{Graph, Node, NodeId, OpKind};
 /// batch). Ties merge — equal arithmetic with one less kernel launch
 /// and no intermediate.
 pub fn decomposed_loses(r: usize, c: usize, s: usize, lane: usize, free_elems: usize) -> bool {
+    decomposed_loses_with_residual(r, c, s, lane, free_elems, 0)
+}
+
+/// Three-way gate: the chain at this link has a sparse-residual sibling
+/// of `sparse_nnz` nonzeros riding the same site `Add` (0 = no sibling,
+/// reduces to the two-way gate). Per output element the residual adds
+/// `nnz · spmm_unit_cost(lane, false)` to the decomposed side but only
+/// `nnz · spmm_unit_cost(lane, merged=true)` to the contracted side — the
+/// CSR gather piggybacks on the dense contraction's activation stream —
+/// so a heavy residual can flip an otherwise-winning chain into
+/// "contract the chain, keep S".
+pub fn decomposed_loses_with_residual(
+    r: usize,
+    c: usize,
+    s: usize,
+    lane: usize,
+    free_elems: usize,
+    sparse_nnz: usize,
+) -> bool {
     // lane 0 would divide by zero inside tile_efficiency; clamp so a bad
     // programmatic CompileOptions degrades to lane-1 (always efficient)
     // instead of panicking mid-compile.
     let eff = rank_efficiency(r, lane.max(1)).max(1e-9);
-    let decomposed = (r * (c + s)) as f64 / eff;
-    let merged = (c * s) as f64 + (s * r * c) as f64 / free_elems.max(1) as f64;
+    let nnz = sparse_nnz as f64;
+    let decomposed = (r * (c + s)) as f64 / eff + nnz * spmm_unit_cost(lane, false);
+    let merged = (c * s) as f64
+        + (s * r * c) as f64 / free_elems.max(1) as f64
+        + nnz * spmm_unit_cost(lane, true);
     decomposed >= merged
+}
+
+/// Total nonzeros of a residual arm rooted at `id`: sums the `col_idx`
+/// length of every `SpmmCsr` reachable through the structural ops the
+/// sparse lowering emits (per-tap adds, layout transposes, reshapes).
+/// Any other op ends the walk — past it the subtree is not a pure
+/// residual arm and must not be priced as one.
+fn residual_nnz(g: &Graph, id: usize, depth: usize) -> usize {
+    if depth == 0 {
+        return 0;
+    }
+    let node = &g.nodes[id];
+    match &node.op {
+        OpKind::SpmmCsr { col_idx, .. } => col_idx.len(),
+        OpKind::Transpose { .. } | OpKind::Reshape | OpKind::Add => {
+            node.inputs.iter().map(|n| residual_nnz(g, n.0, depth - 1)).sum()
+        }
+        _ => 0,
+    }
+}
+
+/// Nonzeros of the sparse-residual sibling of the chain ending at node
+/// `start`, or 0 when there is none. Walks forward through single-use
+/// Transpose/Reshape hops to the site `Add` and prices the other arm; an
+/// `Add` whose other arm holds no `SpmmCsr` (a bias, a skip connection)
+/// is stepped through so `chain + bias + S` orderings still match.
+fn sibling_sparse_nnz(g: &Graph, consumers: &[Vec<usize>], start: usize) -> usize {
+    let mut id = start;
+    for _ in 0..6 {
+        let cs = &consumers[id];
+        if cs.len() != 1 {
+            return 0;
+        }
+        let j = cs[0];
+        match &g.nodes[j].op {
+            OpKind::Transpose { .. } | OpKind::Reshape => {}
+            OpKind::Add => {
+                let other =
+                    g.nodes[j].inputs.iter().map(|n| n.0).find(|&n| n != id).unwrap_or(id);
+                let nnz = residual_nnz(g, other, 64);
+                if nnz > 0 {
+                    return nnz;
+                }
+            }
+            _ => return 0,
+        }
+        id = j;
+    }
+    0
 }
 
 /// How a matched chain is laid out — which emission produced it and how
@@ -380,9 +464,11 @@ fn run_once(
     amortize: Option<(usize, usize)>,
 ) -> (Graph, Vec<NodeId>, usize, usize, usize) {
     let mut uses = vec![0usize; g.nodes.len()];
-    for node in &g.nodes {
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); g.nodes.len()];
+    for (i, node) in g.nodes.iter().enumerate() {
         for inp in &node.inputs {
             uses[inp.0] += 1;
+            consumers[inp.0].push(i);
         }
     }
     uses[g.root.0] += 1;
@@ -408,7 +494,8 @@ fn run_once(
                 }
                 None => free_elems(g, &ch),
             };
-            if !decomposed_loses(r, c, s, lane, fe) {
+            let sparse_nnz = sibling_sparse_nnz(g, &consumers, i);
+            if !decomposed_loses_with_residual(r, c, s, lane, fe, sparse_nnz) {
                 return None;
             }
             if fused_dims(g, &ch) != node.dims {
@@ -777,6 +864,101 @@ mod tests {
         assert_eq!(t.rewrites, 0, "batch-1 fc must keep the whole chain");
         let (t, _, _) = run_t(&g, 16, g.nodes.len(), Some((1, 4096)));
         assert_eq!(t.rewrites, 2, "pinned to the ceiling both links fuse");
+    }
+
+    #[test]
+    fn three_way_gate_prices_the_residual() {
+        // aligned r=16 chain on a 64x64 site over 256 output elements:
+        // chain 2048 MACs/elem vs contracted 4096 + 256 amortized merge —
+        // the bare chain clearly wins
+        assert!(!decomposed_loses(16, 64, 64, 16, 256));
+        // a light 5% residual (nnz=204) keeps it winning: lane-16-priced
+        // sparse MACs beside the chain still beat contraction + half-price
+        assert!(!decomposed_loses_with_residual(16, 64, 64, 16, 256, 204));
+        // a heavy 12% residual (nnz=492) flips it: halving the residual's
+        // unit price pays for contracting even the aligned chain
+        assert!(decomposed_loses_with_residual(16, 64, 64, 16, 256, 492));
+        // exact flip point: 2048 + 16·nnz >= 4352 + 8·nnz at nnz = 288
+        assert!(!decomposed_loses_with_residual(16, 64, 64, 16, 256, 287));
+        assert!(decomposed_loses_with_residual(16, 64, 64, 16, 256, 288));
+    }
+
+    /// The conv chain plus a CSR residual arm, as `lower_chain` emits for
+    /// a `Scheme::Sparse { base: Svd }` 1x1 site: `y = chain(x) + S(x)`.
+    fn sparse_sibling_graph(
+        n: usize,
+        c: usize,
+        r: usize,
+        s: usize,
+        hw: usize,
+        nnz: usize,
+    ) -> Graph {
+        use crate::decompose::sparse::SparseResidual;
+        use std::sync::Arc;
+        let b = GraphBuilder::new("svd_plus_s");
+        let x = b.parameter(0, &[n, c, hw, hw], "x").unwrap();
+        let w0 = b.parameter(1, &[r, c], "w0").unwrap();
+        let w1 = b.parameter(2, &[s, r], "w1").unwrap();
+        let vals = b.parameter(3, &[nnz], "vals").unwrap();
+        let t = w0.dot_general(&x, &[1], &[1]).unwrap().transpose(&[1, 0, 2, 3]).unwrap();
+        let dense =
+            w1.dot_general(&t, &[1], &[1]).unwrap().transpose(&[1, 0, 2, 3]).unwrap();
+        let pattern = SparseResidual::synthetic(&[s, c], nnz).unwrap();
+        let tap = pattern.taps().unwrap().into_iter().next().unwrap();
+        let sp = vals
+            .spmm_csr(&x, s, c, Arc::new(tap.row_ptr), Arc::new(tap.col_idx), 1, None)
+            .unwrap()
+            .transpose(&[1, 0, 2, 3])
+            .unwrap();
+        b.build(&(dense + sp).unwrap()).unwrap()
+    }
+
+    fn sibling_args(
+        n: usize,
+        c: usize,
+        r: usize,
+        s: usize,
+        hw: usize,
+        nnz: usize,
+    ) -> Vec<HostTensor> {
+        let mut rng = Rng::new(23);
+        let mut mk = |dims: Vec<usize>| {
+            let len: usize = dims.iter().product();
+            HostTensor::new(dims, (0..len).map(|_| rng.normal_f32()).collect())
+        };
+        vec![mk(vec![n, c, hw, hw]), mk(vec![r, c]), mk(vec![s, r]), mk(vec![nnz])]
+    }
+
+    #[test]
+    fn light_residual_keeps_chain_and_s() {
+        // the 5% regime of three_way_gate_prices_the_residual, end to end:
+        // aligned chain + light residual → keep both arms, rewrite nothing
+        let (n, c, r, s, hw) = (4, 64, 16, 64, 8); // free = 4·8·8 = 256
+        let g = sparse_sibling_graph(n, c, r, s, hw, 204);
+        let (_, fusions) = run(&g, 16);
+        assert_eq!(fusions, 0, "light residual must not flip the aligned chain");
+    }
+
+    #[test]
+    fn heavy_residual_contracts_chain_and_keeps_s() {
+        // the 12% regime: the old two-way gate would keep this aligned
+        // chain; pricing the residual's post-merge discount contracts it
+        // while the SpmmCsr arm survives untouched
+        let (n, c, r, s, hw) = (4, 64, 16, 64, 8);
+        let g = sparse_sibling_graph(n, c, r, s, hw, 492);
+        let (g2, fusions) = run(&g, 16);
+        assert_eq!(fusions, 1, "heavy residual must pay for contracting the chain");
+        let (g3, _) = dce(&g2);
+        let spmm = g3
+            .nodes
+            .iter()
+            .filter(|nd| matches!(nd.op, OpKind::SpmmCsr { .. }))
+            .count();
+        assert_eq!(spmm, 1, "the residual arm must survive the rewrite");
+        let args = sibling_args(n, c, r, s, hw, 492);
+        let want = run_graph(&g, &args);
+        let got = run_graph(&g3, &args);
+        crate::util::check::assert_allclose(&got, &want, 1e-3, 1e-3);
     }
 
     #[test]

@@ -129,6 +129,55 @@ fn translate(graph: &Graph) -> Result<xla::XlaComputation> {
                 let one = b.c0(1.0).map_err(err)?;
                 (one / lookup(&ops, ins[0], nm)?.clone()).map_err(err)?
             }
+            OpKind::SpmmCsr { n_rows, n_cols, row_ptr, col_idx, rhs_axis, val_perm } => {
+                // XLA has no first-class CSR op in this stub's API slice:
+                // densify the sparse matrix (zero gaps + 1-element value
+                // slices, O(nnz + n_rows) ops) and lower the contraction
+                // as a plain dot_general. XLA's fusion makes this
+                // acceptable for the type-check path; the native planner
+                // is the performance surface.
+                if *n_rows == 0 || *n_cols == 0 {
+                    bail!("{nm}: degenerate SpmmCsr cannot be densified");
+                }
+                let vals = lookup(&ops, ins[0], nm)?.clone();
+                let x = lookup(&ops, ins[1], nm)?;
+                let zeros = |len: usize| -> Result<xla::XlaOp> {
+                    b.c0(0.0).map_err(err)?.broadcast(&[len as i64]).map_err(err)
+                };
+                let mut rows: Vec<xla::XlaOp> = Vec::with_capacity(*n_rows);
+                for r in 0..*n_rows {
+                    let mut parts: Vec<xla::XlaOp> = Vec::new();
+                    let mut cur = 0usize;
+                    for e in row_ptr[r] as usize..row_ptr[r + 1] as usize {
+                        let c = col_idx[e] as usize;
+                        if c > cur {
+                            parts.push(zeros(c - cur)?);
+                        }
+                        let src = match val_perm {
+                            Some(p) => p[e] as usize,
+                            None => e,
+                        };
+                        parts.push(
+                            vals.slice_in_dim(src as i64, src as i64 + 1, 1, 0)
+                                .map_err(err)?,
+                        );
+                        cur = c + 1;
+                    }
+                    if *n_cols > cur {
+                        parts.push(zeros(*n_cols - cur)?);
+                    }
+                    let row = parts[0]
+                        .concat_in_dim(&parts[1..], 0)
+                        .map_err(err)?
+                        .reshape(&[1, *n_cols as i64])
+                        .map_err(err)?;
+                    rows.push(row);
+                }
+                let dense = rows[0].concat_in_dim(&rows[1..], 0).map_err(err)?;
+                dense
+                    .dot_general(x, &[1], &[*rhs_axis as i64], &[], &[])
+                    .map_err(err)?
+            }
         };
         ops.push(Some(op));
     }

@@ -7,7 +7,7 @@
 //! network with the same weights — through every variant's code path.
 
 use lrdx::decompose::params::{decompose_params, init_orig_params, reconstruct_params};
-use lrdx::decompose::{plan_variant, Plan, Scheme, Variant};
+use lrdx::decompose::{plan_variant, sparsify_plan, Plan, Scheme, Variant};
 use lrdx::model::Arch;
 use lrdx::runtime::netbuilder::BuiltNet;
 use lrdx::runtime::{CompileOptions, Engine};
@@ -123,6 +123,28 @@ fn chain_variants_match_their_reconstruction_oracle_at_o0() {
         let mut rng = Rng::new(46);
         let orig_params = init_orig_params(&arch, &mut rng);
         let plan = plan_variant(&arch, v, 2.0, 2, None).unwrap();
+        let params = decompose_params(&arch, &plan, &orig_params).unwrap();
+        let got = logits(&engine, &arch, &plan, &params, 2, 16);
+        let recon = reconstruct_params(&arch, &plan, &params).unwrap();
+        let want = logits(&engine, &arch, &plan_orig, &recon, 2, 16);
+        assert_allclose(&got, &want, 1e-4, 1e-4);
+    }
+}
+
+#[test]
+fn sparse_composed_variants_match_their_reconstruction_oracle_at_o0() {
+    // chain+S at 5% density vs an ORIGINAL net loaded with the dense
+    // re-merge of the SAME stored factors + scattered residual — the
+    // reconstruction oracle must cover the residual arm too: the fitted
+    // `.s`/`.s_idx` values scattered back into W change the function, so
+    // any mismatch in the CSR lowering or the scatter shows up here.
+    let engine = Engine::cpu().unwrap();
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    let plan_orig = plan_variant(&arch, Variant::Orig, 2.0, 2, None).unwrap();
+    for v in [Variant::Lrd, Variant::Tucker2] {
+        let mut rng = Rng::new(47);
+        let orig_params = init_orig_params(&arch, &mut rng);
+        let plan = sparsify_plan(plan_variant(&arch, v, 2.0, 2, None).unwrap(), 50_000);
         let params = decompose_params(&arch, &plan, &orig_params).unwrap();
         let got = logits(&engine, &arch, &plan, &params, 2, 16);
         let recon = reconstruct_params(&arch, &plan, &params).unwrap();

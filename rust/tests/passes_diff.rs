@@ -8,7 +8,7 @@
 //! says a rank loses at the configured lane width, and the executor's
 //! buffer arena stays strictly below the no-reuse intermediate total.
 
-use lrdx::decompose::{plan_variant, Scheme, Variant};
+use lrdx::decompose::{plan_variant, sparsify_plan, Scheme, Variant};
 use lrdx::model::{Arch, ConvSite, SiteKind};
 use lrdx::runtime::layer_factory::build_layer;
 use lrdx::runtime::netbuilder::BuiltNet;
@@ -69,6 +69,55 @@ fn every_variant_level_and_thread_count_matches_the_o0_reference() {
                     Some(t1) => assert_eq!(
                         t1, &got,
                         "{variant:?}/{}: thread count changed bits",
+                        level.name()
+                    ),
+                }
+            }
+        }
+    }
+}
+
+fn forward_sparse(
+    engine: &Engine,
+    variant: Variant,
+    opts: &CompileOptions,
+) -> (Vec<f32>, PassStats) {
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    // compose a 5% CSR residual onto every chain site of the variant plan
+    let plan = sparsify_plan(plan_variant(&arch, variant, 2.0, 2, None).unwrap(), 50_000);
+    let net = BuiltNet::compile(engine, &arch, &plan, BATCH, HW, 0xD1FF, opts).unwrap();
+    let x = det_input(BATCH, HW);
+    let xb = engine.upload(&x, &[BATCH, 3, HW, HW]).unwrap();
+    let logits = net.forward(&xb).unwrap().to_host().unwrap().data;
+    (logits, net.pass_stats().clone())
+}
+
+#[test]
+fn composed_sparse_variants_match_the_o0_reference_across_levels_and_threads() {
+    // chain+S nets through the same differential matrix: every opt level
+    // and thread count must match the O0 single-thread reference, and
+    // threads must be bitwise-irrelevant (the SpmmCsr kernel partitions
+    // rows deterministically).
+    let engine = Engine::native();
+    for variant in [Variant::Lrd, Variant::Tucker2, Variant::Cp] {
+        let (want, s0) = forward_sparse(&engine, variant, &CompileOptions::o0());
+        assert!(s0.passes.is_empty(), "{variant:?}+s: O0 must run no passes");
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+            let mut t1_logits: Option<Vec<f32>> = None;
+            for threads in [1usize, 4] {
+                let opts = CompileOptions { threads, ..CompileOptions::level(level) };
+                let (got, stats) = forward_sparse(&engine, variant, &opts);
+                assert_allclose(&got, &want, 1e-5, 1e-5);
+                assert!(
+                    stats.nodes_after <= stats.nodes_before,
+                    "{variant:?}+s/{}: optimization must never grow the graph",
+                    level.name()
+                );
+                match &t1_logits {
+                    None => t1_logits = Some(got),
+                    Some(t1) => assert_eq!(
+                        t1, &got,
+                        "{variant:?}+s/{}: thread count changed bits",
                         level.name()
                     ),
                 }
