@@ -285,6 +285,14 @@ pub fn plan_variant_with(
     overrides: Option<&Plan>,
     sparse_ppm: Option<u32>,
 ) -> Result<Plan> {
+    // User-reachable argument checks (CLI --alpha/--groups land here):
+    // typed errors, not the div-by-zero panic `quantize_ranks` would hit.
+    if groups == 0 {
+        bail!("rank quantization groups must be >= 1 (got --groups 0)");
+    }
+    if !(alpha.is_finite() && alpha > 0.0) {
+        bail!("compression ratio alpha must be a finite positive number, got {alpha}");
+    }
     let family = match variant {
         Variant::Tucker2 => SchemeFamily::Tucker2,
         Variant::Cp => SchemeFamily::Cp,

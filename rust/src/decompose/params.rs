@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::sparse::{self, SparseResidual};
 use super::weights::{branch_tucker, cp_stack, merge_bottleneck, svd_split, tucker_stack, CpStack};
@@ -27,14 +27,25 @@ fn ht_t4(t: &Tensor4) -> HostTensor {
     HostTensor::new(vec![t.o, t.i, t.h, t.w], t.data.clone())
 }
 
-fn as_mat(t: &HostTensor) -> Matrix {
-    assert_eq!(t.dims.len(), 2, "expected matrix, got {:?}", t.dims);
-    Matrix::from_vec(t.dims[0], t.dims[1], t.data.clone())
+fn as_mat(t: &HostTensor) -> Result<Matrix> {
+    if t.dims.len() != 2 {
+        bail!("expected a 2-d matrix tensor, got shape {:?}", t.dims);
+    }
+    Ok(Matrix::from_vec(t.dims[0], t.dims[1], t.data.clone()))
 }
 
-fn as_t4(t: &HostTensor) -> Tensor4 {
-    assert_eq!(t.dims.len(), 4, "expected 4-d tensor, got {:?}", t.dims);
-    Tensor4::from_vec(t.dims[0], t.dims[1], t.dims[2], t.dims[3], t.data.clone())
+fn as_t4(t: &HostTensor) -> Result<Tensor4> {
+    if t.dims.len() != 4 {
+        bail!("expected a 4-d tensor, got shape {:?}", t.dims);
+    }
+    Ok(Tensor4::from_vec(t.dims[0], t.dims[1], t.dims[2], t.dims[3], t.data.clone()))
+}
+
+/// Param lookup with a typed error instead of the `BTreeMap` index panic —
+/// `orig`/`dec` maps arrive from CLI-loaded artifacts, so a missing key is a
+/// user-input problem, not an internal invariant.
+fn get<'a>(p: &'a Params, key: &str) -> Result<&'a HostTensor> {
+    p.get(key).ok_or_else(|| anyhow!("missing parameter '{key}' in the source param set"))
 }
 
 /// He-initialised ORIGINAL weights + BN affines for every site.
@@ -75,40 +86,40 @@ pub fn decompose_params(arch: &Arch, plan: &Plan, orig: &Params) -> Result<Param
     let mut out = Params::new();
     for t in arch.sites() {
         let scheme = plan.get(&t.name).unwrap_or(&Scheme::Orig);
-        let w = &orig[&format!("{}.w", t.name)];
+        let w = get(orig, &format!("{}.w", t.name))?;
         if t.kind != SiteKind::Fc {
             out.insert(
                 format!("{}.bn.g", t.name),
-                orig[&format!("{}.bn.g", t.name)].clone(),
+                get(orig, &format!("{}.bn.g", t.name))?.clone(),
             );
             out.insert(
                 format!("{}.bn.b", t.name),
-                orig[&format!("{}.bn.b", t.name)].clone(),
+                get(orig, &format!("{}.bn.b", t.name))?.clone(),
             );
         }
         match scheme {
             Scheme::Orig => {
                 out.insert(format!("{}.w", t.name), w.clone());
                 if t.kind == SiteKind::Fc {
-                    out.insert(format!("{}.b", t.name), orig[&format!("{}.b", t.name)].clone());
+                    out.insert(format!("{}.b", t.name), get(orig, &format!("{}.b", t.name))?.clone());
                 }
             }
             Scheme::Svd { r } => {
-                let (w0, w1) = svd_split(&as_mat(w), *r);
+                let (w0, w1) = svd_split(&as_mat(w)?, *r);
                 out.insert(format!("{}.w0", t.name), ht_mat(&w0));
                 out.insert(format!("{}.w1", t.name), ht_mat(&w1));
                 if t.kind == SiteKind::Fc {
-                    out.insert(format!("{}.b", t.name), orig[&format!("{}.b", t.name)].clone());
+                    out.insert(format!("{}.b", t.name), get(orig, &format!("{}.b", t.name))?.clone());
                 }
             }
             Scheme::Tucker { r1, r2 } => {
-                let f = tucker_stack(&as_t4(w), *r1, *r2);
+                let f = tucker_stack(&as_t4(w)?, *r1, *r2);
                 out.insert(format!("{}.u", t.name), ht_mat(&f.u));
                 out.insert(format!("{}.core", t.name), ht_t4(&f.core));
                 out.insert(format!("{}.v", t.name), ht_mat(&f.v));
             }
             Scheme::Branched { r1, r2, groups } => {
-                let f = tucker_stack(&as_t4(w), *r1, *r2);
+                let f = tucker_stack(&as_t4(w)?, *r1, *r2);
                 let b = branch_tucker(&f, *groups)?;
                 out.insert(format!("{}.u", t.name), ht_mat(&b.u));
                 out.insert(format!("{}.core", t.name), ht_t4(&b.core));
@@ -119,9 +130,9 @@ pub fn decompose_params(arch: &Arch, plan: &Plan, orig: &Params) -> Result<Param
                     Some(p) => p,
                     None => bail!("merged scheme on non-conv2 site {}", t.name),
                 };
-                let f = tucker_stack(&as_t4(w), *r1, *r2);
-                let w1 = as_mat(&orig[&format!("{pre}.conv1.w")]);
-                let w3 = as_mat(&orig[&format!("{pre}.conv3.w")]);
+                let f = tucker_stack(&as_t4(w)?, *r1, *r2);
+                let w1 = as_mat(get(orig, &format!("{pre}.conv1.w"))?)?;
+                let w3 = as_mat(get(orig, &format!("{pre}.conv3.w"))?)?;
                 let m = merge_bottleneck(&w1, &f, &w3)?;
                 out.insert(format!("{pre}.conv1.w"), ht_mat(&m.w1m));
                 out.insert(format!("{}.w", t.name), ht_t4(&m.core));
@@ -143,7 +154,7 @@ pub fn decompose_params(arch: &Arch, plan: &Plan, orig: &Params) -> Result<Param
                 // three-factor chain for every site shape: kxk convs keep the
                 // 4-d core, 1x1 convs and the fc head store a 2-d [r2, r1] core
                 if w.dims.len() == 4 {
-                    let f = tucker_stack(&as_t4(w), *r1, *r2);
+                    let f = tucker_stack(&as_t4(w)?, *r1, *r2);
                     out.insert(format!("{}.u", t.name), ht_mat(&f.u));
                     out.insert(format!("{}.core", t.name), ht_t4(&f.core));
                     out.insert(format!("{}.v", t.name), ht_mat(&f.v));
@@ -159,23 +170,23 @@ pub fn decompose_params(arch: &Arch, plan: &Plan, orig: &Params) -> Result<Param
                     out.insert(format!("{}.v", t.name), ht_mat(&f.v));
                 }
                 if t.kind == SiteKind::Fc {
-                    out.insert(format!("{}.b", t.name), orig[&format!("{}.b", t.name)].clone());
+                    out.insert(format!("{}.b", t.name), get(orig, &format!("{}.b", t.name))?.clone());
                 }
             }
             Scheme::Cp { r } => {
                 if t.k == 1 {
                     // CP of a matrix degenerates to the SVD pair
-                    let (w0, w1) = svd_split(&as_mat(w), *r);
+                    let (w0, w1) = svd_split(&as_mat(w)?, *r);
                     out.insert(format!("{}.w0", t.name), ht_mat(&w0));
                     out.insert(format!("{}.w1", t.name), ht_mat(&w1));
                     if t.kind == SiteKind::Fc {
                         out.insert(
                             format!("{}.b", t.name),
-                            orig[&format!("{}.b", t.name)].clone(),
+                            get(orig, &format!("{}.b", t.name))?.clone(),
                         );
                     }
                 } else {
-                    let f = cp_stack(&as_t4(w), *r);
+                    let f = cp_stack(&as_t4(w)?, *r);
                     out.insert(format!("{}.u", t.name), ht_mat(&f.u));
                     out.insert(format!("{}.kh", t.name), ht_mat(&f.kh));
                     out.insert(format!("{}.kw", t.name), ht_mat(&f.kw));
@@ -191,7 +202,7 @@ pub fn decompose_params(arch: &Arch, plan: &Plan, orig: &Params) -> Result<Param
                 out.insert(format!("{}.s", t.name), vals);
                 out.insert(format!("{}.s_idx", t.name), idx);
                 if t.kind == SiteKind::Fc {
-                    out.insert(format!("{}.b", t.name), orig[&format!("{}.b", t.name)].clone());
+                    out.insert(format!("{}.b", t.name), get(orig, &format!("{}.b", t.name))?.clone());
                 }
             }
         }
@@ -209,11 +220,11 @@ pub fn reconstruct_params(arch: &Arch, plan: &Plan, dec: &Params) -> Result<Para
         if t.kind != SiteKind::Fc {
             out.insert(
                 format!("{}.bn.g", t.name),
-                dec[&format!("{}.bn.g", t.name)].clone(),
+                get(dec, &format!("{}.bn.g", t.name))?.clone(),
             );
             out.insert(
                 format!("{}.bn.b", t.name),
-                dec[&format!("{}.bn.b", t.name)].clone(),
+                get(dec, &format!("{}.bn.b", t.name))?.clone(),
             );
         } else if let Some(b) = dec.get(&format!("{}.b", t.name)) {
             out.insert(format!("{}.b", t.name), b.clone());
@@ -228,35 +239,35 @@ pub fn reconstruct_params(arch: &Arch, plan: &Plan, dec: &Params) -> Result<Para
 fn recon_site(t: &ConvSite, scheme: &Scheme, dec: &Params) -> Result<HostTensor> {
     let name = |suf: &str| format!("{}.{suf}", t.name);
     Ok(match scheme {
-        Scheme::Orig => dec[&name("w")].clone(),
+        Scheme::Orig => get(dec, &name("w"))?.clone(),
         Scheme::Svd { .. } => {
-            let w0 = as_mat(&dec[&name("w0")]);
-            let w1 = as_mat(&dec[&name("w1")]);
+            let w0 = as_mat(get(dec, &name("w0"))?)?;
+            let w1 = as_mat(get(dec, &name("w1"))?)?;
             ht_mat(&w1.matmul(&w0))
         }
         Scheme::Tucker { .. } | Scheme::Tucker2 { .. } => {
-            let u = as_mat(&dec[&name("u")]);
-            let v = as_mat(&dec[&name("v")]);
-            let core = &dec[&name("core")];
+            let u = as_mat(get(dec, &name("u"))?)?;
+            let v = as_mat(get(dec, &name("v"))?)?;
+            let core = get(dec, &name("core"))?;
             if core.dims.len() == 4 {
-                let f = Tucker2 { u, core: as_t4(core), v };
+                let f = Tucker2 { u, core: as_t4(core)?, v };
                 ht_t4(&f.reconstruct())
             } else {
-                let cm = as_mat(core);
+                let cm = as_mat(core)?;
                 ht_mat(&v.matmul(&cm).matmul(&u))
             }
         }
         Scheme::Cp { .. } => {
             if t.k == 1 {
-                let w0 = as_mat(&dec[&name("w0")]);
-                let w1 = as_mat(&dec[&name("w1")]);
+                let w0 = as_mat(get(dec, &name("w0"))?)?;
+                let w1 = as_mat(get(dec, &name("w1"))?)?;
                 ht_mat(&w1.matmul(&w0))
             } else {
                 let f = CpStack {
-                    u: as_mat(&dec[&name("u")]),
-                    kh: as_mat(&dec[&name("kh")]),
-                    kw: as_mat(&dec[&name("kw")]),
-                    w1: as_mat(&dec[&name("w1")]),
+                    u: as_mat(get(dec, &name("u"))?)?,
+                    kh: as_mat(get(dec, &name("kh"))?)?,
+                    kw: as_mat(get(dec, &name("kw"))?)?,
+                    w1: as_mat(get(dec, &name("w1"))?)?,
                 };
                 ht_t4(&f.reconstruct())
             }
@@ -264,7 +275,7 @@ fn recon_site(t: &ConvSite, scheme: &Scheme, dec: &Params) -> Result<HostTensor>
         Scheme::Sparse { base, .. } => {
             let mut w = recon_site(t, base, dec)?;
             let sr =
-                SparseResidual::from_tensors(&w.dims, &dec[&name("s")], &dec[&name("s_idx")])?;
+                SparseResidual::from_tensors(&w.dims, get(dec, &name("s"))?, get(dec, &name("s_idx"))?)?;
             for (j, &fi) in sr.idx.iter().enumerate() {
                 w.data[fi as usize] += sr.vals[j];
             }

@@ -21,6 +21,11 @@
 //! See `DESIGN.md` (repo root) for the system inventory, the backend
 //! trait and the feature matrix.
 
+// Every `unsafe` operation must sit in its own visible `unsafe` block
+// with its own `// SAFETY:` obligation — no implicit unsafety inside
+// `unsafe fn` bodies. See DESIGN.md §7 for the audit that backs them.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod baselines;
 pub mod coordinator;
 pub mod decompose;

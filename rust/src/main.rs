@@ -91,6 +91,10 @@ flags: --artifacts DIR  --reports DIR  --arch NAME  --hw N  --batch N
                           by train, rank-search and bench table2/table3
        --opt-level 0|1|2  IR pass pipeline for compiled graphs (default 2:
                           cleanup + low-rank re-merge fusion; 0 = as built)
+       --verify on|off    run the IR verifier after every pass and audit
+                          the arena plan before execution (default: on in
+                          debug builds, off in release). distinct from the
+                          `verify` command, which replays artifact numerics
        --lane N           lane width for the re-merge profitability gate
        --threads N        native executor kernel threads (bench/rank-search
                           default 1; 0 = auto). serve defaults to auto and
@@ -122,7 +126,15 @@ fn compile_opts(args: &Args) -> Result<CompileOptions> {
         bail!("--lane must be >= 1 (hardware lane width)");
     }
     let threads = args.usize_or("threads", 1)?;
-    Ok(CompileOptions { opt_level, lane, threads, amortize: None })
+    let verify = match args.get("verify") {
+        None => cfg!(debug_assertions),
+        Some(v) => match v {
+            "true" | "1" | "yes" | "on" => true,
+            "false" | "0" | "no" | "off" => false,
+            other => bail!("--verify expects on/off (or true/false), got {other:?}"),
+        },
+    };
+    Ok(CompileOptions { opt_level, lane, threads, amortize: None, verify })
 }
 
 /// `--scheme svd|tucker2|cp` → the factor-chain family (default svd).
@@ -511,7 +523,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 // compile their ladders lazily)
                 let (graph, _) =
                     lrdx::runtime::netbuilder::build_forward(&a, &plan, ceiling, hw)?;
-                let (_, stats) = lrdx::runtime::passes::run_pipeline(&graph, &copts);
+                let (_, stats) = lrdx::runtime::passes::run_pipeline(&graph, &copts)?;
                 println!("  {v:10} {}", stats.summary());
                 let (a2, copts2, buckets2) = (a.clone(), copts.clone(), buckets.clone());
                 coord.register(v, hw, replicas, move |ctx| {

@@ -18,6 +18,13 @@
 //! scheme). `Gt` is non-differentiable by construction — `needs_grad`
 //! treats it as a constant mask, so relu backward is `δ · gt(x, 0)` with
 //! no dead adjoint chains behind the mask.
+//!
+//! The joint graph's forward/backward split (the train-segment
+//! `boundary` = the forward graph's node count at adoption time) is a
+//! convention the pass pipeline relies on when attributing fusions and
+//! splitting executables; it is not merely assumed — with
+//! `CompileOptions::verify` on, `verify::check_boundary` re-proves after
+//! every pass that no node below the boundary reads one above it.
 
 use std::collections::HashSet;
 use std::sync::Arc;

@@ -432,6 +432,9 @@ impl Op {
             bail!("spmm_csr: vals must be [nnz]={nnz}, got {vd:?}");
         }
         validate_csr(n_rows, n_cols, &row_ptr, &col_idx)?;
+        // length + range is the cheap builder-side gate; the IR verifier
+        // (`verify::verify_graph`) additionally proves bijectivity (no
+        // index hit twice), which this O(nnz) check deliberately skips
         if let Some(p) = &val_perm {
             if p.len() != nnz || p.iter().any(|&j| j as usize >= nnz) {
                 bail!("spmm_csr: val_perm must be a permutation of 0..{nnz}");

@@ -21,6 +21,11 @@
 //! &CompileOptions)`, which runs the `passes` pipeline before the backend
 //! sees the graph and returns a `Compiled` handle carrying `PassStats`.
 
+// Pedantic unsafe hygiene, promoted to hard errors for the runtime
+// subtree (the only place `unsafe` is allowed — CI greps for strays):
+// every unsafe block documents its obligation and holds one operation.
+#![deny(clippy::undocumented_unsafe_blocks, clippy::multiple_unsafe_ops_per_block)]
+
 pub mod artifacts;
 pub mod autograd;
 pub mod graph;
@@ -28,6 +33,7 @@ pub mod layer_factory;
 pub mod native;
 pub mod netbuilder;
 pub mod passes;
+pub mod verify;
 #[cfg(feature = "xla-pjrt")]
 pub mod xla_backend;
 
@@ -41,6 +47,7 @@ pub use passes::{
     resolve_threads, ArenaStats, CompileOptions, OptLevel, PassRecord, PassStats,
     TrainSegments,
 };
+pub use verify::{VerifyError, VerifyStats, Violation, ViolationKind};
 
 /// Host-side f32 tensor handed around by the coordinator and the tests.
 ///
@@ -242,7 +249,7 @@ impl Engine {
     /// by `opts` over the IR, hand the rewritten graph to the backend, and
     /// return the executable together with its `PassStats`.
     pub fn compile(&self, graph: &Graph, opts: &CompileOptions) -> Result<Compiled> {
-        let (optimized, mut stats) = passes::run_pipeline(graph, opts);
+        let (optimized, mut stats) = passes::run_pipeline(graph, opts)?;
         let raw = self.backend.compile_graph(&optimized, opts)?;
         stats.arena = raw.arena();
         Ok(Compiled { raw, engine: self.clone(), stats: Arc::new(stats) })
@@ -262,7 +269,7 @@ impl Engine {
         fwd_boundary: usize,
     ) -> Result<Compiled> {
         let (optimized, mut stats) =
-            passes::run_pipeline_seg(graph, opts, Some(fwd_boundary));
+            passes::run_pipeline_seg(graph, opts, Some(fwd_boundary))?;
         let raw = self.backend.compile_graph(&optimized, opts)?;
         stats.arena = raw.arena();
         Ok(Compiled { raw, engine: self.clone(), stats: Arc::new(stats) })

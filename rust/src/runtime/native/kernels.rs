@@ -35,9 +35,14 @@ pub fn numel(dims: &[usize]) -> usize {
 }
 
 /// Minimum output elements before an elementwise/gather kernel fans out.
-const PAR_MIN_ELEMS: usize = 16 * 1024;
-/// Minimum M*N*K before `dot_general` fans out.
-const PAR_MIN_MACS: usize = 64 * 1024;
+/// Public so `runtime::verify::plan` can replay the fan-out decision and
+/// prove the resulting partition is a disjoint exact cover.
+pub const PAR_MIN_ELEMS: usize = 16 * 1024;
+/// Minimum M*N*K before `dot_general`/`spmm_csr` fans out.
+pub const PAR_MIN_MACS: usize = 64 * 1024;
+/// Minimum output elements before `reduce` fans out (cheaper threshold:
+/// each output element already amortizes `count` reads).
+pub const PAR_MIN_REDUCE: usize = 1024;
 /// N-dimension block: the B panel column strip kept hot in cache.
 const NB: usize = 256;
 /// K-dimension block: B panel rows per strip (NB*KB*4 B ≈ 128 KiB ≤ L2).
@@ -63,9 +68,18 @@ where
     pool.run(chunks, &|ci| {
         let start = ci * per;
         let len = per.min(n - start);
-        // SAFETY: chunk index ranges are disjoint sub-slices of `out`,
-        // which the issuing `run` keeps borrowed until every chunk is done.
-        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
+        debug_assert!(start + len <= n, "chunk {ci} overruns out");
+        // SAFETY: `start = ci*per < n` (pool only issues `ci < chunks`
+        // and `(chunks-1)*per < n`), so the offset stays inside the
+        // allocation `base` points to.
+        let ptr = unsafe { base.0.add(start) };
+        // SAFETY: `[start, start+len)` ranges for distinct `ci` are
+        // disjoint and in-bounds (`verify::plan::par_partition` mirrors
+        // this arithmetic and `check_cover` proves it is an exact
+        // disjoint cover for every lane count), and `out` stays
+        // exclusively borrowed by the issuing `run` until every chunk
+        // completes — so each `&mut` sub-slice is unique and live.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(ptr, len) };
         f(start, chunk);
     });
 }
@@ -287,10 +301,16 @@ pub fn dot_general(
     pool.run(chunks, &|ci| {
         let r0 = ci * rows_per;
         let rows = rows_per.min(m - r0);
-        // SAFETY: row ranges are disjoint; `out` stays borrowed by the
+        debug_assert!((r0 + rows) * n <= m * n, "row chunk {ci} overruns out");
+        // SAFETY: `r0 = ci*rows_per < m`, so `r0*n` is inside the `m*n`
+        // allocation behind `base`.
+        let ptr = unsafe { base.0.add(r0 * n) };
+        // SAFETY: row ranges `[r0, r0+rows)` for distinct `ci` are
+        // disjoint and exactly cover `0..m` (`verify::plan::row_partition`
+        // mirrors this arithmetic and `check_cover` proves it for every
+        // lane count), and `out` stays exclusively borrowed by the
         // issuing `run` until every chunk completes.
-        let ochunk =
-            unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * n), rows * n) };
+        let ochunk = unsafe { std::slice::from_raw_parts_mut(ptr, rows * n) };
         dot_rows(&a[r0 * k..(r0 + rows) * k], b, n, k, ochunk);
     });
 }
@@ -355,10 +375,16 @@ pub fn spmm_csr(
     pool.run(chunks, &|ci| {
         let r0 = ci * rows_per;
         let rows = rows_per.min(n_rows - r0);
-        // SAFETY: row ranges are disjoint; `out` stays borrowed by the
-        // issuing `run` until every chunk completes.
-        let ochunk =
-            unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * m), rows * m) };
+        debug_assert!((r0 + rows) * m <= n_rows * m, "row chunk {ci} overruns out");
+        // SAFETY: `r0 = ci*rows_per < n_rows`, so `r0*m` is inside the
+        // `n_rows*m` allocation behind `base`.
+        let ptr = unsafe { base.0.add(r0 * m) };
+        // SAFETY: row ranges `[r0, r0+rows)` for distinct `ci` are
+        // disjoint and exactly cover `0..n_rows` (mirrored and proven by
+        // `verify::plan::{row_partition, check_cover}` for every lane
+        // count), and `out` stays exclusively borrowed by the issuing
+        // `run` until every chunk completes.
+        let ochunk = unsafe { std::slice::from_raw_parts_mut(ptr, rows * m) };
         spmm_rows(vals, x, row_ptr, col_idx, val_perm, m, r0, rows, ochunk);
     });
 }
@@ -418,7 +444,7 @@ pub struct ReduceGeom {
 pub fn reduce(x: &[f32], geom: &ReduceGeom, mean: bool, out: &mut [f32], pool: &WorkerPool) {
     debug_assert!(geom.count > 0, "reduce over an empty subspace");
     let inv = geom.count as f64;
-    par_map(out, pool, 1024, |off, chunk| {
+    par_map(out, pool, PAR_MIN_REDUCE, |off, chunk| {
         for (i, slot) in chunk.iter_mut().enumerate() {
             let flat = off + i;
             let mut base = 0usize;

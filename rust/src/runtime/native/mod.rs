@@ -64,7 +64,11 @@ impl Backend for NativeBackend {
         graph: &Graph,
         opts: &CompileOptions,
     ) -> Result<Arc<dyn BackendExec>> {
-        Ok(Arc::new(NativeExecutable::new(graph.clone(), opts.resolved_threads())?))
+        Ok(Arc::new(NativeExecutable::with_verify(
+            graph.clone(),
+            opts.resolved_threads(),
+            opts.verify,
+        )?))
     }
 
     fn compile_hlo_text_file(&self, path: &std::path::Path) -> Result<Arc<dyn BackendExec>> {
@@ -109,14 +113,35 @@ pub struct NativeExecutable {
 impl NativeExecutable {
     /// Plan `graph` for execution with `threads` lanes (`>= 1`; pass 1
     /// for the fully serial reference configuration). The arena and the
-    /// worker pool are allocated here, never during `run`.
+    /// worker pool are allocated here, never during `run`. Audits the
+    /// plan in debug builds; use [`NativeExecutable::with_verify`] to
+    /// control auditing explicitly.
     pub fn new(graph: Graph, threads: usize) -> Result<NativeExecutable> {
+        NativeExecutable::with_verify(graph, threads, cfg!(debug_assertions))
+    }
+
+    /// `new` with the plan audit explicitly on or off. With `verify`
+    /// set, `runtime::verify::plan::audit_plan` replays the arena's
+    /// liveness story and the kernels' chunk partitions before the plan
+    /// can ever execute; a violation aborts compilation with a typed
+    /// [`super::verify::VerifyError`] (`pass == "plan"`).
+    pub fn with_verify(graph: Graph, threads: usize, verify: bool) -> Result<NativeExecutable> {
         let plan = plan::build_plan(&graph)?;
+        let threads = threads.max(1);
+        if verify {
+            let violations = super::verify::audit_plan(&graph, &plan, threads);
+            if !violations.is_empty() {
+                return Err(
+                    super::verify::VerifyError::new(graph.name.clone(), "plan", violations)
+                        .into(),
+                );
+            }
+        }
         let arena = plan.slot_caps.iter().map(|&c| vec![0f32; c]).collect();
         Ok(NativeExecutable {
             graph,
             plan,
-            pool: WorkerPool::new(threads.max(1)),
+            pool: WorkerPool::new(threads),
             arena: Mutex::new(arena),
         })
     }

@@ -32,8 +32,12 @@ use std::thread::JoinHandle;
 #[derive(Clone, Copy)]
 struct JobPtr(*const (dyn Fn(usize) + Sync));
 
-// SAFETY: the pointee is `Sync` (bound on `run`), and the pool's
-// completion barrier guarantees it outlives every dereference.
+// SAFETY: the pointee is `Sync` (bound on `run`), so calling it from a
+// worker thread is sound; the lifetime contract — `run` publishes the
+// pointer, blocks on the completion barrier (`pending == 0`), and
+// retires the pointer (`job = None`) before returning — guarantees the
+// borrowed closure outlives every dereference. Workers only load the
+// pointer from the slot while `job.is_some()`, i.e. inside that window.
 unsafe impl Send for JobPtr {}
 
 struct Slot {
@@ -178,6 +182,15 @@ impl WorkerPool {
             s = self.shared.done.wait(s).expect("pool wait");
         }
         let panicked = s.panicked;
+        // Lifetime contract: every chunk was handed out and completed
+        // before the job pointer is retired — after this, no worker can
+        // observe (let alone dereference) the stale pointer.
+        debug_assert!(s.next >= s.chunks, "job retired with chunks unissued");
+        debug_assert_eq!(s.pending, 0, "job retired with chunks in flight");
+        debug_assert!(
+            std::ptr::addr_eq(s.job.expect("job still published").0, f),
+            "job slot was overwritten while this run was in flight"
+        );
         s.job = None;
         drop(s);
         assert!(panicked == 0, "{panicked} pool chunk(s) panicked");
@@ -186,7 +199,7 @@ impl WorkerPool {
 
 fn worker_loop(shared: &Shared) {
     loop {
-        let (job, ci) = {
+        let (job, ci, chunks) = {
             let mut s = shared.slot.lock().expect("pool lock");
             loop {
                 if s.shutdown {
@@ -196,7 +209,7 @@ fn worker_loop(shared: &Shared) {
                 match grabbed {
                     Some(job) => {
                         s.next += 1;
-                        break (job, s.next - 1);
+                        break (job, s.next - 1, s.chunks);
                     }
                     None => s = shared.work.wait(s).expect("pool wait"),
                 }
@@ -204,9 +217,15 @@ fn worker_loop(shared: &Shared) {
         };
         // Catch panics so `pending` always reaches 0 and the caller can
         // re-throw instead of deadlocking.
+        debug_assert!(ci < chunks, "worker drew a chunk index past the job");
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            // SAFETY: the issuing `run` is blocked until pending == 0.
-            (unsafe { &*job.0 })(ci)
+            // SAFETY: the pointer was loaded from the slot while
+            // `job.is_some()`, and the issuing `run` keeps the closure
+            // borrowed (blocked on `pending == 0`, which this chunk has
+            // not yet decremented) until after this call returns — the
+            // pointee is alive for the whole dereference.
+            let job_ref = unsafe { &*job.0 };
+            job_ref(ci)
         }));
         let mut s = shared.slot.lock().expect("pool lock");
         if outcome.is_err() {
@@ -235,9 +254,22 @@ impl Drop for WorkerPool {
 
 /// Raw mutable base pointer smuggled into `Fn(usize)` chunk closures;
 /// chunks address disjoint ranges, so concurrent writes never alias.
+///
+/// Lifetime contract: a `SendPtr` is constructed from a `&mut [f32]`
+/// immediately before `WorkerPool::run` and every use happens inside
+/// that `run` call, which blocks until all chunks complete — the
+/// backing slice strictly outlives every dereference.
 #[derive(Clone, Copy)]
 pub(crate) struct SendPtr(pub *mut f32);
+// SAFETY: the pointer is only offset and dereferenced inside pool chunk
+// closures, and each chunk writes a distinct, in-bounds range of the
+// backing slice (the disjoint exact-cover invariant that
+// `runtime::verify::plan` proves for every kernel partition), so moving
+// the pointer to a worker thread cannot create an aliasing write.
 unsafe impl Send for SendPtr {}
+// SAFETY: chunk closures capture `SendPtr` by shared reference; the
+// same disjoint-range argument makes concurrent `.add`/write through it
+// race-free, so sharing the wrapper across threads is sound.
 unsafe impl Sync for SendPtr {}
 
 #[cfg(test)]

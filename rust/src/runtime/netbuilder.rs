@@ -356,8 +356,14 @@ pub fn build_forward_with(
 
     // Head
     let pooled = lf::gap(&y)?; // [batch, C]
-    let fc = sites.last().unwrap();
-    assert_eq!(fc.kind, SiteKind::Fc);
+    // User-reachable (any CLI --arch lands here): a typed error beats a
+    // panic if an architecture table ever ships without its fc head.
+    let Some(fc) = sites.last() else {
+        bail!("{}: architecture declares no sites", arch.name);
+    };
+    if fc.kind != SiteKind::Fc {
+        bail!("{}: last site {:?} is not the fc head", arch.name, fc.name);
+    }
     let (fc_base, fc_sparse) = plan.get("fc").unwrap_or(&Scheme::Orig).split_sparse();
     let logits = match fc_base {
         Scheme::Svd { r } | Scheme::Cp { r } => {

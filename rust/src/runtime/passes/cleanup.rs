@@ -371,7 +371,9 @@ pub(crate) fn dce_t(g: &Graph) -> Traced {
             rw.push(node.op.clone(), inputs, node.dims.clone())
         } else {
             // dead: never referenced by a live node, so the placeholder
-            // mapping is unreachable
+            // mapping is unreachable; if a bug ever routed an edge through
+            // it, the SSA check in `verify::verify_graph` rejects the
+            // out-of-range input id after the pass
             NodeId(usize::MAX)
         };
         rw.map.push(id);

@@ -37,6 +37,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::graph::Graph;
+use super::verify::{self, VerifyError, VerifyStats};
 
 /// How aggressively `Engine::compile` rewrites the IR.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
@@ -98,11 +99,24 @@ pub struct CompileOptions {
     /// chain reassociates f32 sums). `None` (the default) amortizes over
     /// the graph's own shapes.
     pub amortize: Option<(usize, usize)>,
+    /// Run the static verifier: the IR checker after every pass and the
+    /// arena-plan auditor before the native executable is accepted
+    /// (`runtime::verify`). Defaults to on in debug builds (so every
+    /// `cargo test` audits every graph it compiles) and off in release,
+    /// keeping the serving hot path free of the O(nodes) per-pass scan.
+    /// The CLI `--verify` flag overrides either way.
+    pub verify: bool,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        CompileOptions { opt_level: OptLevel::TOP, lane: 16, threads: 1, amortize: None }
+        CompileOptions {
+            opt_level: OptLevel::TOP,
+            lane: 16,
+            threads: 1,
+            amortize: None,
+            verify: cfg!(debug_assertions),
+        }
     }
 }
 
@@ -117,7 +131,10 @@ impl CompileOptions {
     }
 
     /// Stable key fragment for executable caches (`EngineLayerTimer`,
-    /// `netbuilder::ServableNet`'s bucket ladder).
+    /// `netbuilder::ServableNet`'s bucket ladder). `verify` is
+    /// deliberately absent: it changes what is checked, never what is
+    /// compiled, so verified and unverified compiles may share a cache
+    /// entry.
     pub fn cache_key(&self) -> String {
         let amort = match self.amortize {
             Some((b, ceil)) => format!("a{b}-{ceil}"),
@@ -212,6 +229,10 @@ pub struct PassStats {
     /// Forward/backward segment accounting (training graphs only —
     /// populated by `Engine::compile_train`).
     pub train: Option<TrainSegments>,
+    /// Static-verifier accounting (`None` when `CompileOptions::verify`
+    /// is off). A successful compile always reports 0 violations — any
+    /// finding aborts compilation with a `VerifyError` instead.
+    pub verify: Option<VerifyStats>,
 }
 
 impl PassStats {
@@ -254,14 +275,48 @@ impl PassStats {
                 t.fusions_bwd
             ));
         }
+        if let Some(v) = &self.verify {
+            s.push_str(&format!(
+                ", verified {} pass(es) in {:.2} ms",
+                v.passes_checked,
+                v.wall_secs * 1e3
+            ));
+        }
         s
     }
 }
 
 /// Run the pipeline selected by `opts` and return the rewritten graph plus
-/// its accounting. O0 returns the input graph untouched.
-pub fn run_pipeline(graph: &Graph, opts: &CompileOptions) -> (Graph, PassStats) {
+/// its accounting. O0 returns the input graph untouched. With
+/// `opts.verify` set, the IR verifier runs over the input graph and
+/// after every pass; the first pass to emit a malformed graph aborts
+/// compilation with a typed [`VerifyError`] naming it.
+pub fn run_pipeline(graph: &Graph, opts: &CompileOptions) -> Result<(Graph, PassStats)> {
     run_pipeline_seg(graph, opts, None)
+}
+
+/// Verify `g` (and the boundary, when tracking one), attributing any
+/// violations to `pass`. No-op when `vs` is `None` (verify off).
+fn check_after(
+    g: &Graph,
+    pass: &'static str,
+    boundary: Option<usize>,
+    vs: &mut Option<VerifyStats>,
+) -> Result<()> {
+    let Some(vs) = vs.as_mut() else { return Ok(()) };
+    let t0 = Instant::now();
+    let mut violations = verify::verify_graph(g);
+    if let Some(b) = boundary {
+        violations.extend(verify::check_boundary(g, b));
+    }
+    vs.passes_checked += 1;
+    vs.violations += violations.len();
+    vs.wall_secs += t0.elapsed().as_secs_f64();
+    if violations.is_empty() {
+        Ok(())
+    } else {
+        Err(VerifyError::new(g.name.clone(), pass, violations).into())
+    }
 }
 
 /// `run_pipeline` with an optional forward/backward boundary: nodes
@@ -273,7 +328,7 @@ pub fn run_pipeline_seg(
     graph: &Graph,
     opts: &CompileOptions,
     boundary: Option<usize>,
-) -> (Graph, PassStats) {
+) -> Result<(Graph, PassStats)> {
     let t0 = Instant::now();
     let n0 = graph.nodes.len();
     let mut stats = PassStats {
@@ -289,13 +344,18 @@ pub fn run_pipeline_seg(
         }),
         ..Default::default()
     };
+    let mut vs = opts.verify.then(VerifyStats::default);
+    let mut b = boundary.map(|b| b.min(n0));
+    // The as-built graph is checked too: netbuilder/autograd bugs should
+    // not masquerade as pass bugs (and under O0 this is the only check).
+    check_after(graph, "input", b, &mut vs)?;
     if opts.opt_level == OptLevel::O0 {
+        stats.verify = vs;
         stats.wall_secs = t0.elapsed().as_secs_f64();
-        return (graph.clone(), stats);
+        return Ok((graph.clone(), stats));
     }
 
     let mut g = graph.clone();
-    let mut b = boundary.map(|b| b.min(n0));
     if opts.opt_level >= OptLevel::O2 {
         let t0p = Instant::now();
         let before = g.nodes.len();
@@ -311,6 +371,7 @@ pub fn run_pipeline_seg(
             *bv = traced.remap_boundary(*bv);
         }
         g = traced.graph;
+        check_after(&g, "remerge", b, &mut vs)?;
     }
     // Cleanup to fixpoint. Each family member is individually idempotent
     // but unlocks the others (fusion orphans feed DCE, composed transposes
@@ -336,6 +397,7 @@ pub fn run_pipeline_seg(
                 *bv = traced.remap_boundary(*bv);
             }
             g = traced.graph;
+            check_after(&g, name, b, &mut vs)?;
         }
         if changed == 0 {
             break;
@@ -346,8 +408,9 @@ pub fn run_pipeline_seg(
         t.fwd_nodes_after = bv.min(g.nodes.len());
         t.bwd_nodes_after = g.nodes.len() - bv.min(g.nodes.len());
     }
+    stats.verify = vs;
     stats.wall_secs = t0.elapsed().as_secs_f64();
-    (g, stats)
+    Ok((g, stats))
 }
 
 fn record_pass(
@@ -386,7 +449,7 @@ mod tests {
         let x = b.parameter(0, &[2], "x").unwrap();
         let y = (x.clone() + x).unwrap();
         let g = b.build(&y).unwrap();
-        let (out, stats) = run_pipeline(&g, &CompileOptions::o0());
+        let (out, stats) = run_pipeline(&g, &CompileOptions::o0()).unwrap();
         assert_eq!(out.nodes.len(), g.nodes.len());
         assert!(stats.passes.is_empty());
         assert_eq!(stats.fusions, 0);
@@ -397,11 +460,11 @@ mod tests {
         let b = GraphBuilder::new("t");
         let x = b.parameter(0, &[2], "x").unwrap();
         let g = b.build(&x).unwrap();
-        let (_, stats) = run_pipeline(&g, &CompileOptions::level(OptLevel::O1));
+        let (_, stats) = run_pipeline(&g, &CompileOptions::level(OptLevel::O1)).unwrap();
         let names: Vec<_> = stats.passes.iter().map(|p| p.name).collect();
         assert!(names.contains(&"dce") && names.contains(&"cse"));
         assert!(!names.contains(&"remerge"));
-        let (_, stats2) = run_pipeline(&g, &CompileOptions::default());
+        let (_, stats2) = run_pipeline(&g, &CompileOptions::default()).unwrap();
         assert_eq!(stats2.passes[0].name, "remerge");
     }
 }

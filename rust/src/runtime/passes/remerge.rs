@@ -439,7 +439,9 @@ pub(crate) fn run_t(
         fus_fwd += nf;
         fus_bwd += nb;
         // the scan appends nodes in source order, so `map` is strictly
-        // increasing and the forward/backward boundary remaps exactly
+        // increasing and the forward/backward boundary remaps exactly;
+        // `verify::check_boundary` re-proves this after the pass instead
+        // of trusting it (forward nodes must not read backward nodes)
         bnd = if bnd == 0 { 0 } else { map[bnd - 1].0 + 1 };
         for t in total.iter_mut() {
             *t = map[t.0];

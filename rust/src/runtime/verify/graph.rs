@@ -1,0 +1,611 @@
+//! Stage 1: the IR verifier.
+//!
+//! `verify_graph` re-derives every node's output shape from its
+//! operands — deliberately *not* by calling back into `GraphBuilder`,
+//! whose inference produced the dims under test — and checks the
+//! structural invariants every pass must preserve:
+//!
+//! * SSA well-formedness: every input id strictly precedes its user
+//!   (the node list is append-only and topologically ordered, so this
+//!   single check rules out cycles, forward references, dangling ids
+//!   and the `usize::MAX` use-after-DCE sentinel `cleanup::Rewriter`
+//!   assigns to dead nodes), and the root is in range.
+//! * Operand arity per op kind.
+//! * Parameter conventions: indices cover `0..n_params` exactly once,
+//!   full names are unique, and the freeze-suffix rules hold (`*.s_idx`
+//!   is never a parameter — sparse patterns are compile-time structure —
+//!   and `*.s` residual-value parameters are 1-D).
+//! * `SpmmCsr` metadata: monotone `row_ptr`, in-bounds strictly
+//!   ascending `col_idx` per row (the tap-window/accumulation-order
+//!   contract), vals extent `[nnz]`, and `val_perm` an actual
+//!   *bijection* — stronger than the builder's in-range check, which a
+//!   duplicated entry would slip past.
+//!
+//! Violations accumulate; the caller (`passes::run_pipeline`) wraps a
+//! non-empty list in a `VerifyError` naming the pass that broke things.
+
+use super::super::graph::{validate_csr, Graph, Node, OpKind};
+use super::{Violation, ViolationKind};
+
+/// Check the whole graph; returns every violation found (empty = clean).
+pub fn verify_graph(g: &Graph) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let n = g.nodes.len();
+    if g.root.0 >= n {
+        out.push(Violation::new(
+            ViolationKind::Structure,
+            None,
+            format!("root {} out of range ({n} nodes)", g.root.0),
+        ));
+    }
+    let mut params: Vec<(usize, String, usize)> = Vec::new(); // (index, name, node)
+    for (i, node) in g.nodes.iter().enumerate() {
+        // SSA: inputs strictly precede their user. This is the one check
+        // that makes everything below well-defined (and it catches the
+        // rewriter's usize::MAX dead-node sentinel leaking into a live edge).
+        let mut structural_ok = true;
+        for inp in &node.inputs {
+            if inp.0 >= i {
+                structural_ok = false;
+                out.push(Violation::new(
+                    ViolationKind::Structure,
+                    Some(i),
+                    format!(
+                        "input {} does not precede its user (use-after-DCE or cycle)",
+                        inp.0
+                    ),
+                ));
+            }
+        }
+        if !structural_ok {
+            continue; // operand dims are unreadable; shape checks would lie
+        }
+        if let Some(v) = check_arity(i, node) {
+            out.push(v);
+            continue;
+        }
+        if let OpKind::Parameter { index, name } = &node.op {
+            params.push((*index, name.clone(), i));
+        }
+        check_shape(g, i, node, &mut out);
+    }
+    check_params(g, &params, &mut out);
+    out
+}
+
+/// The train-segment boundary must stay inside the node list through
+/// every rewrite (`Traced::remap_boundary` is supposed to guarantee it;
+/// this checks rather than assumes).
+pub fn check_boundary(g: &Graph, boundary: usize) -> Vec<Violation> {
+    if boundary > g.nodes.len() {
+        vec![Violation::new(
+            ViolationKind::Boundary,
+            None,
+            format!(
+                "train boundary {boundary} beyond node list ({} nodes)",
+                g.nodes.len()
+            ),
+        )]
+    } else {
+        Vec::new()
+    }
+}
+
+fn check_arity(i: usize, node: &Node) -> Option<Violation> {
+    let got = node.inputs.len();
+    let want: Option<usize> = match &node.op {
+        OpKind::Parameter { .. } | OpKind::ConstScalar { .. } => Some(0),
+        OpKind::Broadcast
+        | OpKind::BroadcastInDim { .. }
+        | OpKind::Slice { .. }
+        | OpKind::Reshape
+        | OpKind::Transpose { .. }
+        | OpKind::ReduceMean { .. }
+        | OpKind::ReduceSum { .. }
+        | OpKind::Sqrt
+        | OpKind::Neg
+        | OpKind::Exp
+        | OpKind::Log
+        | OpKind::Recip => Some(1),
+        OpKind::DotGeneral { .. }
+        | OpKind::SpmmCsr { .. }
+        | OpKind::Add
+        | OpKind::Sub
+        | OpKind::Mul
+        | OpKind::Max
+        | OpKind::Gt => Some(2),
+        OpKind::Select => Some(3),
+        OpKind::Concat { .. } => (got == 0).then_some(1), // >= 1
+    };
+    match want {
+        Some(w) if w != got => Some(Violation::new(
+            ViolationKind::Structure,
+            Some(i),
+            format!("{:?} takes {w} input(s), has {got}", op_name(&node.op)),
+        )),
+        _ => None,
+    }
+}
+
+fn numel(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+/// Re-derive the node's output shape from its operands and compare with
+/// the recorded dims. Mirrors the `GraphBuilder` rules by construction,
+/// but is a second, independent implementation — which is the point.
+fn check_shape(g: &Graph, i: usize, node: &Node, out: &mut Vec<Violation>) {
+    let dims = &node.dims;
+    let ind = |slot: usize| -> &[usize] { &g.nodes[node.inputs[slot].0].dims };
+    let mut shape_err = |detail: String| {
+        out.push(Violation::new(ViolationKind::Shape, Some(i), detail));
+    };
+    match &node.op {
+        OpKind::Parameter { .. } => {}
+        OpKind::ConstScalar { .. } => {
+            if !dims.is_empty() {
+                shape_err(format!("scalar const with dims {dims:?}"));
+            }
+        }
+        OpKind::Broadcast => {
+            if !ind(0).is_empty() {
+                shape_err(format!("broadcast of non-scalar {:?}", ind(0)));
+            }
+        }
+        OpKind::BroadcastInDim { mapping } => {
+            let d = ind(0);
+            if mapping.len() != d.len() {
+                shape_err(format!("{} axes mapped for operand {d:?}", mapping.len()));
+            } else {
+                for (ax, &m) in mapping.iter().enumerate() {
+                    if m >= dims.len() {
+                        shape_err(format!("axis map {m} out of range for {dims:?}"));
+                    } else if d[ax] != dims[m] {
+                        shape_err(format!(
+                            "operand axis {ax} ({}) != output axis {m} ({})",
+                            d[ax], dims[m]
+                        ));
+                    }
+                }
+            }
+        }
+        OpKind::Concat { dim } => {
+            let first = ind(0);
+            if *dim >= first.len() || first.len() != dims.len() {
+                shape_err(format!("concat dim {dim} of {first:?} -> {dims:?}"));
+                return;
+            }
+            let mut total = 0usize;
+            for slot in 0..node.inputs.len() {
+                let d = ind(slot);
+                if d.len() != dims.len() {
+                    shape_err(format!("concat rank mismatch {d:?} vs {dims:?}"));
+                    return;
+                }
+                for a in 0..dims.len() {
+                    if a != *dim && d[a] != dims[a] {
+                        shape_err(format!("concat axis {a}: {d:?} vs {dims:?}"));
+                    }
+                }
+                total += d[*dim];
+            }
+            if dims[*dim] != total {
+                shape_err(format!("concat axis sums to {total}, dims say {}", dims[*dim]));
+            }
+        }
+        OpKind::Slice { dim, start, stop, stride } => {
+            let d = ind(0);
+            if *dim >= d.len() || d.len() != dims.len() {
+                shape_err(format!("slice dim {dim} of {d:?} -> {dims:?}"));
+                return;
+            }
+            if *stride == 0 || start >= stop || *stop > d[*dim] {
+                shape_err(format!(
+                    "slice range {start}..{stop} step {stride} on axis {dim} of {d:?}"
+                ));
+                return;
+            }
+            let count = (stop - start).div_ceil(*stride);
+            for a in 0..d.len() {
+                let want = if a == *dim { count } else { d[a] };
+                if dims[a] != want {
+                    shape_err(format!("slice axis {a}: expected {want}, dims say {}", dims[a]));
+                }
+            }
+        }
+        OpKind::Reshape => {
+            if numel(ind(0)) != numel(dims) {
+                shape_err(format!("reshape {:?} -> {dims:?} changes element count", ind(0)));
+            }
+        }
+        OpKind::Transpose { perm } => {
+            let d = ind(0);
+            let mut seen = vec![false; d.len()];
+            if perm.len() != d.len() || dims.len() != d.len() {
+                shape_err(format!("transpose perm {perm:?} for {d:?} -> {dims:?}"));
+                return;
+            }
+            for (ax, &p) in perm.iter().enumerate() {
+                if p >= d.len() || seen[p] {
+                    shape_err(format!("perm {perm:?} is not a permutation of {d:?}"));
+                    return;
+                }
+                seen[p] = true;
+                if dims[ax] != d[p] {
+                    shape_err(format!(
+                        "transpose axis {ax}: expected {}, dims say {}",
+                        d[p], dims[ax]
+                    ));
+                }
+            }
+        }
+        OpKind::DotGeneral { lhs_contract, rhs_contract } => {
+            let (ld, rd) = (ind(0), ind(1));
+            if lhs_contract.len() != rhs_contract.len() {
+                shape_err("contract arity mismatch".to_string());
+                return;
+            }
+            for list in [lhs_contract, rhs_contract] {
+                let mut s = list.clone();
+                s.sort_unstable();
+                s.dedup();
+                if s.len() != list.len() {
+                    shape_err(format!("duplicate contraction axis in {list:?}"));
+                    return;
+                }
+            }
+            for (&lc, &rc) in lhs_contract.iter().zip(rhs_contract.iter()) {
+                if lc >= ld.len() || rc >= rd.len() {
+                    shape_err(format!("contract dim out of range ({ld:?} x {rd:?})"));
+                    return;
+                }
+                if ld[lc] != rd[rc] {
+                    shape_err(format!(
+                        "contracted extents differ: lhs[{lc}]={} rhs[{rc}]={}",
+                        ld[lc], rd[rc]
+                    ));
+                }
+            }
+            let mut want: Vec<usize> = Vec::new();
+            for (ax, &e) in ld.iter().enumerate() {
+                if !lhs_contract.contains(&ax) {
+                    want.push(e);
+                }
+            }
+            for (ax, &e) in rd.iter().enumerate() {
+                if !rhs_contract.contains(&ax) {
+                    want.push(e);
+                }
+            }
+            if *dims != want {
+                shape_err(format!("dot output should be {want:?}, dims say {dims:?}"));
+            }
+        }
+        OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Max | OpKind::Gt => {
+            let (a, b) = (ind(0), ind(1));
+            let want = if a == b {
+                a
+            } else if a.is_empty() {
+                b
+            } else if b.is_empty() {
+                a
+            } else {
+                shape_err(format!("elementwise shapes {a:?} vs {b:?}"));
+                return;
+            };
+            if dims != want {
+                shape_err(format!("elementwise output should be {want:?}, dims say {dims:?}"));
+            }
+        }
+        OpKind::Select => {
+            let (p, t, f) = (ind(0), ind(1), ind(2));
+            if p != t || p != f || dims != p {
+                shape_err(format!(
+                    "select shapes differ (pred {p:?}, true {t:?}, false {f:?}, out {dims:?})"
+                ));
+            }
+        }
+        OpKind::ReduceMean { dims: rdims } | OpKind::ReduceSum { dims: rdims } => {
+            let d = ind(0);
+            let mut s = rdims.clone();
+            s.sort_unstable();
+            s.dedup();
+            if s.len() != rdims.len() {
+                shape_err(format!("duplicate reduce axis in {rdims:?}"));
+                return;
+            }
+            for &r in rdims {
+                if r >= d.len() {
+                    shape_err(format!("reduce dim {r} out of range for {d:?}"));
+                    return;
+                }
+                if d[r] == 0 {
+                    shape_err(format!("reduce over zero-size axis {r} of {d:?} (0/0 mean)"));
+                }
+            }
+            let want: Vec<usize> = d
+                .iter()
+                .enumerate()
+                .filter(|(ax, _)| !rdims.contains(ax))
+                .map(|(_, &e)| e)
+                .collect();
+            if *dims != want {
+                shape_err(format!("reduce output should be {want:?}, dims say {dims:?}"));
+            }
+        }
+        OpKind::Sqrt | OpKind::Neg | OpKind::Exp | OpKind::Log | OpKind::Recip => {
+            if dims != ind(0) {
+                shape_err(format!("unary output {dims:?} != operand {:?}", ind(0)));
+            }
+        }
+        OpKind::SpmmCsr { n_rows, n_cols, row_ptr, col_idx, rhs_axis, val_perm } => {
+            let (vd, xd) = (ind(0), ind(1));
+            let nnz = col_idx.len();
+            if vd.len() != 1 || vd[0] != nnz {
+                out.push(Violation::new(
+                    ViolationKind::Csr,
+                    Some(i),
+                    format!("vals must be [nnz]={nnz}, got {vd:?}"),
+                ));
+            }
+            if let Err(e) = validate_csr(*n_rows, *n_cols, row_ptr, col_idx) {
+                out.push(Violation::new(ViolationKind::Csr, Some(i), format!("{e:#}")));
+            }
+            if let Some(p) = val_perm {
+                // bijectivity, not just in-range: a duplicated entry reads
+                // one weight twice and drops another — the builder's check
+                // would miss it.
+                let mut hits = vec![0u8; nnz];
+                let mut bad = p.len() != nnz;
+                for &j in p.iter() {
+                    if (j as usize) < nnz && hits[j as usize] == 0 {
+                        hits[j as usize] = 1;
+                    } else {
+                        bad = true;
+                        break;
+                    }
+                }
+                if bad {
+                    out.push(Violation::new(
+                        ViolationKind::Csr,
+                        Some(i),
+                        format!("val_perm is not a bijection of 0..{nnz}"),
+                    ));
+                }
+            }
+            if *rhs_axis >= xd.len() || xd[*rhs_axis] != *n_cols {
+                out.push(Violation::new(
+                    ViolationKind::Shape,
+                    Some(i),
+                    format!("spmm rhs axis {rhs_axis} of {xd:?} must have extent {n_cols}"),
+                ));
+                return;
+            }
+            let mut want = vec![*n_rows];
+            for (ax, &e) in xd.iter().enumerate() {
+                if ax != *rhs_axis {
+                    want.push(e);
+                }
+            }
+            if *dims != want {
+                out.push(Violation::new(
+                    ViolationKind::Shape,
+                    Some(i),
+                    format!("spmm output should be {want:?}, dims say {dims:?}"),
+                ));
+            }
+        }
+    }
+}
+
+/// Parameter-table invariants: contiguous unique indices, unique names,
+/// freeze-suffix conventions.
+fn check_params(g: &Graph, params: &[(usize, String, usize)], out: &mut Vec<Violation>) {
+    if params.len() != g.n_params {
+        out.push(Violation::new(
+            ViolationKind::Param,
+            None,
+            format!("graph declares {} params, found {}", g.n_params, params.len()),
+        ));
+    }
+    let mut by_index = vec![Vec::new(); g.n_params];
+    let mut names: std::collections::BTreeMap<&str, usize> = std::collections::BTreeMap::new();
+    for (index, name, node) in params {
+        if *index >= g.n_params {
+            out.push(Violation::new(
+                ViolationKind::Param,
+                Some(*node),
+                format!("parameter index {index} out of range (n_params {})", g.n_params),
+            ));
+        } else {
+            by_index[*index].push(*node);
+        }
+        if let Some(prev) = names.insert(name.as_str(), *node) {
+            out.push(Violation::new(
+                ViolationKind::Param,
+                Some(*node),
+                format!("parameter name {name:?} duplicates node {prev}"),
+            ));
+        }
+        // Freeze-suffix conventions (see decompose/netbuilder): sparse
+        // patterns are compile-time structure, never weights; residual
+        // value vectors are 1-D.
+        if name.ends_with(".s_idx") {
+            out.push(Violation::new(
+                ViolationKind::Param,
+                Some(*node),
+                format!("{name:?}: sparse index patterns must not be parameters"),
+            ));
+        }
+        if name.ends_with(".s") && g.nodes[*node].dims.len() != 1 {
+            out.push(Violation::new(
+                ViolationKind::Param,
+                Some(*node),
+                format!(
+                    "{name:?}: sparse residual values must be 1-D [nnz], got {:?}",
+                    g.nodes[*node].dims
+                ),
+            ));
+        }
+    }
+    for (index, nodes) in by_index.iter().enumerate() {
+        match nodes.len() {
+            0 => out.push(Violation::new(
+                ViolationKind::Param,
+                None,
+                format!("parameter index {index} missing (indices not contiguous)"),
+            )),
+            1 => {}
+            _ => out.push(Violation::new(
+                ViolationKind::Param,
+                Some(nodes[1]),
+                format!("parameter index {index} declared by nodes {nodes:?}"),
+            )),
+        }
+    }
+}
+
+fn op_name(op: &OpKind) -> &'static str {
+    match op {
+        OpKind::Parameter { .. } => "parameter",
+        OpKind::ConstScalar { .. } => "const",
+        OpKind::Broadcast => "broadcast",
+        OpKind::BroadcastInDim { .. } => "broadcast_in_dim",
+        OpKind::Concat { .. } => "concat",
+        OpKind::Slice { .. } => "slice",
+        OpKind::Reshape => "reshape",
+        OpKind::Transpose { .. } => "transpose",
+        OpKind::DotGeneral { .. } => "dot_general",
+        OpKind::Add => "add",
+        OpKind::Sub => "sub",
+        OpKind::Mul => "mul",
+        OpKind::Max => "max",
+        OpKind::Gt => "gt",
+        OpKind::Select => "select",
+        OpKind::ReduceMean { .. } => "reduce_mean",
+        OpKind::ReduceSum { .. } => "reduce_sum",
+        OpKind::Sqrt => "sqrt",
+        OpKind::Neg => "neg",
+        OpKind::Exp => "exp",
+        OpKind::Log => "log",
+        OpKind::Recip => "recip",
+        OpKind::SpmmCsr { .. } => "spmm_csr",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::graph::{GraphBuilder, Node, NodeId};
+    use super::*;
+    use std::sync::Arc;
+
+    fn clean_graph() -> Graph {
+        let b = GraphBuilder::new("clean");
+        let x = b.parameter(0, &[2, 3], "x").unwrap();
+        let w = b.parameter(1, &[4, 3], "w").unwrap();
+        let y = w.dot_general(&x.transpose(&[1, 0]).unwrap(), &[1], &[0]).unwrap();
+        let z = y.reshape(&[8]).unwrap().sqrt().unwrap();
+        b.build(&z).unwrap()
+    }
+
+    #[test]
+    fn clean_graph_passes() {
+        assert!(verify_graph(&clean_graph()).is_empty());
+    }
+
+    #[test]
+    fn forward_reference_is_structural() {
+        let mut g = clean_graph();
+        let last = g.nodes.len() - 1;
+        g.nodes[2].inputs[0] = NodeId(last); // edge pointing forward = cycle
+        let v = verify_graph(&g);
+        assert!(v.iter().any(|v| v.kind == ViolationKind::Structure), "{v:?}");
+    }
+
+    #[test]
+    fn dims_lie_is_shape() {
+        let mut g = clean_graph();
+        let last = g.nodes.len() - 1;
+        g.nodes[last].dims = vec![7]; // sqrt output can't change shape
+        let v = verify_graph(&g);
+        assert!(v.iter().any(|v| v.kind == ViolationKind::Shape), "{v:?}");
+    }
+
+    #[test]
+    fn duplicate_param_name_and_suffix_rules() {
+        let mut g = clean_graph();
+        // duplicate the name of node 0's parameter on node 1
+        if let OpKind::Parameter { name, .. } = &mut g.nodes[1].op {
+            *name = "x".to_string();
+        }
+        let v = verify_graph(&g);
+        assert!(v.iter().any(|v| v.kind == ViolationKind::Param), "{v:?}");
+
+        // a parameter named *.s_idx violates the freeze convention
+        let mut g2 = clean_graph();
+        if let OpKind::Parameter { name, .. } = &mut g2.nodes[1].op {
+            *name = "fc.s_idx".to_string();
+        }
+        assert!(verify_graph(&g2).iter().any(|v| v.kind == ViolationKind::Param));
+
+        // a 2-D parameter named *.s violates the 1-D residual rule
+        let mut g3 = clean_graph();
+        if let OpKind::Parameter { name, .. } = &mut g3.nodes[1].op {
+            *name = "fc.s".to_string();
+        }
+        assert!(verify_graph(&g3).iter().any(|v| v.kind == ViolationKind::Param));
+    }
+
+    #[test]
+    fn val_perm_bijectivity_is_stronger_than_builder() {
+        let b = GraphBuilder::new("s");
+        let vals = b.parameter(0, &[3], "l.s").unwrap();
+        let x = b.parameter(1, &[3, 2], "x").unwrap();
+        let rp = Arc::new(vec![0u32, 2, 3]);
+        let ci = Arc::new(vec![0u32, 2, 1]);
+        // in-range but NOT a bijection: builder accepts, verifier must not
+        let perm = Some(Arc::new(vec![0u32, 0, 1]));
+        let y = vals.spmm_csr(&x, 2, 3, rp, ci, 0, perm).unwrap();
+        let g = b.build(&y).unwrap();
+        let v = verify_graph(&g);
+        assert!(v.iter().any(|v| v.kind == ViolationKind::Csr), "{v:?}");
+    }
+
+    #[test]
+    fn corrupt_row_ptr_is_csr() {
+        let b = GraphBuilder::new("s");
+        let vals = b.parameter(0, &[3], "l.s").unwrap();
+        let x = b.parameter(1, &[3, 2], "x").unwrap();
+        let rp = Arc::new(vec![0u32, 2, 3]);
+        let ci = Arc::new(vec![0u32, 2, 1]);
+        let y = vals.spmm_csr(&x, 2, 3, rp, ci, 0, None).unwrap();
+        let mut g = b.build(&y).unwrap();
+        let spmm = g.nodes.len() - 1;
+        if let OpKind::SpmmCsr { row_ptr, .. } = &mut g.nodes[spmm].op {
+            *row_ptr = Arc::new(vec![0u32, 3, 2]); // non-monotone
+        }
+        let v = verify_graph(&g);
+        assert!(v.iter().any(|v| v.kind == ViolationKind::Csr), "{v:?}");
+    }
+
+    #[test]
+    fn boundary_past_end_is_boundary() {
+        let g = clean_graph();
+        assert!(check_boundary(&g, g.nodes.len()).is_empty());
+        let v = check_boundary(&g, g.nodes.len() + 1);
+        assert!(v.iter().any(|v| v.kind == ViolationKind::Boundary));
+    }
+
+    #[test]
+    fn arity_violation_is_structural() {
+        let mut g = clean_graph();
+        let last = g.nodes.len() - 1;
+        g.nodes[last] = Node {
+            op: OpKind::Select,
+            inputs: g.nodes[last].inputs.clone(), // 1 input, select needs 3
+            dims: g.nodes[last].dims.clone(),
+        };
+        let v = verify_graph(&g);
+        assert!(v.iter().any(|v| v.kind == ViolationKind::Structure), "{v:?}");
+    }
+}

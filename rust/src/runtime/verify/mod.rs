@@ -1,0 +1,184 @@
+//! Two-stage static checker for the compile pipeline.
+//!
+//! Stage 1 (`graph`) is the **IR verifier**: it re-derives every node's
+//! output shape independently of `GraphBuilder` and checks SSA
+//! well-formedness, parameter conventions and `SpmmCsr` metadata, so a
+//! pass that miscompiles the graph is caught *at the pass that broke it*
+//! instead of as a wrong number (or a crash) at execution time.
+//! `passes::run_pipeline` runs it over the input graph and again after
+//! every pass when `CompileOptions::verify` is set (the default in debug
+//! builds and CI; release hot paths skip it).
+//!
+//! Stage 2 (`plan`) is the **plan auditor**: before an `ExecPlan` ever
+//! executes, it replays the arena's liveness story independently of the
+//! planner and proves the memory-safety claims the executor's `unsafe`
+//! relies on — no two live values share a slot, in-place steps only
+//! overwrite dying inputs, reshape aliases are genuinely zero-copy, and
+//! every kernel's chunk partition is a disjoint exact cover of the
+//! output for *any* thread count (the bitwise-determinism invariant,
+//! checked rather than assumed).
+//!
+//! Both stages report every violation they find as a typed
+//! [`VerifyError`] naming the offending pass and node/step; counts are
+//! surfaced through `PassStats::verify`.
+
+pub mod graph;
+pub mod plan;
+
+pub use graph::{check_boundary, verify_graph};
+pub use plan::{audit_plan, check_cover, par_partition, row_partition};
+
+/// Which invariant class a violation belongs to. The mutation suite in
+/// `tests/verify.rs` plants one violation per class and matches on this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ViolationKind {
+    /// SSA structure: dangling/forward node ids (cycles), use-after-DCE
+    /// sentinels, bad root, wrong operand arity, plan/graph step drift.
+    Structure,
+    /// A node's recorded dims disagree with the shape re-derived from
+    /// its operands.
+    Shape,
+    /// Parameter conventions: duplicate or non-contiguous indices,
+    /// duplicate names, freeze-suffix misuse.
+    Param,
+    /// `SpmmCsr` metadata: row_ptr monotonicity, col_idx bounds/order,
+    /// val_perm bijectivity, vals extent.
+    Csr,
+    /// Train-segment boundary out of range after a rewrite.
+    Boundary,
+    /// Two live values share an arena slot (a write clobbers a value
+    /// that still has readers).
+    SlotOverlap,
+    /// An in-place step over an input that is not dying (or a claimed
+    /// in-place write to a slot that holds nothing).
+    InPlace,
+    /// Aliasing contract: a reshape alias that is not zero-copy, or
+    /// scratch that aliases a live operand.
+    Alias,
+    /// A kernel's chunk partition is not a disjoint exact cover of its
+    /// output.
+    Partition,
+}
+
+impl ViolationKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ViolationKind::Structure => "structure",
+            ViolationKind::Shape => "shape",
+            ViolationKind::Param => "param",
+            ViolationKind::Csr => "csr",
+            ViolationKind::Boundary => "boundary",
+            ViolationKind::SlotOverlap => "slot-overlap",
+            ViolationKind::InPlace => "in-place",
+            ViolationKind::Alias => "alias",
+            ViolationKind::Partition => "partition",
+        }
+    }
+}
+
+/// One broken invariant, anchored to a node (IR stage) or step index
+/// (plan stage) when the violation has a location.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub kind: ViolationKind,
+    /// `NodeId.0` for IR violations, step index for plan violations.
+    pub node: Option<usize>,
+    pub detail: String,
+}
+
+impl Violation {
+    pub fn new(kind: ViolationKind, node: Option<usize>, detail: impl Into<String>) -> Violation {
+        Violation { kind, node, detail: detail.into() }
+    }
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.node {
+            Some(n) => write!(f, "[{}] node {n}: {}", self.kind.name(), self.detail),
+            None => write!(f, "[{}] {}", self.kind.name(), self.detail),
+        }
+    }
+}
+
+/// Everything the verifier found wrong with one graph after one pass.
+/// `pass` is `"input"` for the as-built graph, a pipeline pass name
+/// (`"remerge"`, `"dce"`, ...) after a rewrite, or `"plan"` for the
+/// arena-plan audit.
+#[derive(Clone, Debug)]
+pub struct VerifyError {
+    pub graph: String,
+    pub pass: &'static str,
+    pub violations: Vec<Violation>,
+}
+
+impl VerifyError {
+    pub fn new(graph: impl Into<String>, pass: &'static str, violations: Vec<Violation>) -> VerifyError {
+        VerifyError { graph: graph.into(), pass, violations }
+    }
+
+    /// The invariant classes represented, for coarse matching in tests.
+    pub fn kinds(&self) -> Vec<ViolationKind> {
+        let mut ks: Vec<ViolationKind> = self.violations.iter().map(|v| v.kind).collect();
+        ks.dedup();
+        ks
+    }
+
+    pub fn has_kind(&self, kind: ViolationKind) -> bool {
+        self.violations.iter().any(|v| v.kind == kind)
+    }
+}
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "verify: {} violation(s) in graph {:?} after pass {:?}",
+            self.violations.len(),
+            self.graph,
+            self.pass
+        )?;
+        for v in &self.violations {
+            write!(f, "\n  {v}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+/// Per-compile verifier accounting, surfaced through `PassStats`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VerifyStats {
+    /// Graph-verifier runs (input graph + one per executed pass) plus
+    /// the plan audit.
+    pub passes_checked: usize,
+    /// Violations found. Always 0 on a successful compile — a nonzero
+    /// count aborts compilation with the `VerifyError` carrying it.
+    pub violations: usize,
+    pub wall_secs: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verify_error_formats_pass_and_kinds() {
+        let err = VerifyError::new(
+            "g",
+            "dce",
+            vec![
+                Violation::new(ViolationKind::Shape, Some(3), "dims lie"),
+                Violation::new(ViolationKind::Structure, None, "bad root"),
+            ],
+        );
+        let msg = format!("{err}");
+        assert!(msg.contains("dce") && msg.contains("node 3") && msg.contains("[shape]"));
+        assert!(err.has_kind(ViolationKind::Shape) && err.has_kind(ViolationKind::Structure));
+        assert!(!err.has_kind(ViolationKind::Csr));
+        // and it downcasts back out of anyhow
+        let any: anyhow::Error = err.into();
+        assert!(any.downcast_ref::<VerifyError>().is_some());
+    }
+}

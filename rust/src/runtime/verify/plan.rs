@@ -1,0 +1,623 @@
+//! Stage 2: the arena-plan auditor.
+//!
+//! `audit_plan` statically proves an [`ExecPlan`] safe before its first
+//! execution. It replays the graph's liveness story with its own
+//! reverse-reachability scan and reference counts — *not* the planner's
+//! (`plan::build_plan` is the code under audit) — and walks the emitted
+//! step list in lockstep, checking at every step that what the plan
+//! says about memory is consistent with what is actually live:
+//!
+//! * **No two live ranges share a slot**: a step may only write a slot
+//!   that holds no live value, and may only read slots currently owned
+//!   by its own operands.
+//! * **In-place only over dying inputs**: a step whose output slot is
+//!   occupied must be an elementwise kernel with its in-place flag set,
+//!   the slot must belong to one of the step's own operands, and every
+//!   outstanding use of that slot must be an edge into this very node.
+//! * **Reshape aliases are zero-copy**: reshape nodes consume no step
+//!   and forward their operand's location; element counts must agree.
+//! * **Scratch never aliases**: dot/spmm operand-permute scratch slots
+//!   must be dead at acquisition, distinct from each other and from the
+//!   output (the executor `mem::take`s them while operands are borrowed).
+//! * **Partition exact cover**: for every step and *every* lane count,
+//!   the chunk ranges the kernels derive (mirrored here from the same
+//!   published constants, re-deriving the arithmetic) tile the output
+//!   exactly — no gap, no overlap. This is the invariant that makes the
+//!   `unsafe { from_raw_parts_mut }` chunking in `kernels.rs` sound, and
+//!   since the partition is a pure function of (size, lane count), the
+//!   sweep also witnesses the bitwise-determinism claim that geometry
+//!   depends on the thread count alone.
+
+use super::super::graph::{Graph, OpKind};
+use super::super::native::kernels::{
+    numel, PAR_MIN_ELEMS, PAR_MIN_MACS, PAR_MIN_REDUCE,
+};
+use super::super::native::plan::{DotPrep, ExecPlan, InPlace, Kernel, Step, ValueRef};
+use super::{Violation, ViolationKind};
+
+/// Audit `plan` against the graph it was built from, for a pool of
+/// `threads` lanes. Returns every violation found (empty = proven safe).
+pub fn audit_plan(g: &Graph, plan: &ExecPlan, threads: usize) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let n = g.nodes.len();
+    let nslots = plan.slot_caps.len();
+
+    // Independent liveness model: reverse reachability + remaining-use
+    // counts (+1 on the root for the readout).
+    let mut live = vec![false; n];
+    if g.root.0 < n {
+        let mut stack = vec![g.root.0];
+        while let Some(i) = stack.pop() {
+            if live[i] {
+                continue;
+            }
+            live[i] = true;
+            for inp in &g.nodes[i].inputs {
+                if inp.0 < i {
+                    stack.push(inp.0);
+                }
+            }
+        }
+    } else {
+        out.push(Violation::new(ViolationKind::Structure, None, "root out of range"));
+        return out;
+    }
+    let mut remaining = vec![0usize; n];
+    for (i, node) in g.nodes.iter().enumerate() {
+        if live[i] {
+            for inp in &node.inputs {
+                if inp.0 < i {
+                    remaining[inp.0] += 1;
+                } else {
+                    out.push(Violation::new(
+                        ViolationKind::Structure,
+                        Some(i),
+                        "input does not precede its user",
+                    ));
+                    return out;
+                }
+            }
+        }
+    }
+    remaining[g.root.0] += 1;
+
+    // refs[s]: outstanding uses of the value currently in slot s (the
+    // audit's own copy of the planner's bookkeeping). loc[i]: where node
+    // i's value lives once produced.
+    let mut refs = vec![0usize; nslots];
+    let mut loc: Vec<Option<ValueRef>> = vec![None; n];
+    let mut cursor = 0usize;
+    let mut live_params: Vec<(usize, String, Vec<usize>)> = Vec::new();
+
+    for (i, node) in g.nodes.iter().enumerate() {
+        if !live[i] {
+            continue;
+        }
+        match &node.op {
+            OpKind::Parameter { index, name } => {
+                live_params.push((*index, name.clone(), node.dims.clone()));
+                loc[i] = Some(ValueRef::Arg(*index));
+                continue;
+            }
+            OpKind::Reshape => {
+                // No step: the alias is only zero-copy if the element
+                // counts agree (same bytes reinterpreted).
+                let src = node.inputs[0].0;
+                if numel(&node.dims) != numel(&g.nodes[src].dims) {
+                    out.push(Violation::new(
+                        ViolationKind::Alias,
+                        Some(i),
+                        format!(
+                            "reshape alias changes element count ({:?} -> {:?})",
+                            g.nodes[src].dims, node.dims
+                        ),
+                    ));
+                }
+                let v = loc[src].expect("topological order");
+                if let ValueRef::Slot(s) = v {
+                    refs[s] += remaining[i];
+                    refs[s] -= 1;
+                }
+                remaining[src] -= 1;
+                loc[i] = Some(v);
+                continue;
+            }
+            _ => {}
+        }
+
+        let Some(step) = plan.steps.get(cursor) else {
+            out.push(Violation::new(
+                ViolationKind::Structure,
+                Some(i),
+                "plan has no step for this node (step list too short)",
+            ));
+            return out;
+        };
+        let sidx = cursor;
+        cursor += 1;
+
+        audit_step(g, plan, i, node, step, sidx, &refs, &loc, &mut out);
+        check_step_partition(step, sidx, threads, &mut out);
+        if step.out >= nslots {
+            return out; // reported by audit_step; the model can't continue
+        }
+
+        // Commit the step's effects to the liveness model.
+        for inp in &node.inputs {
+            let id = inp.0;
+            remaining[id] -= 1;
+            if let Some(ValueRef::Slot(s)) = loc[id] {
+                refs[s] -= 1;
+            }
+        }
+        refs[step.out] += remaining[i];
+        loc[i] = Some(ValueRef::Slot(step.out));
+    }
+
+    if cursor != plan.steps.len() {
+        out.push(Violation::new(
+            ViolationKind::Structure,
+            None,
+            format!("plan has {} step(s) no live node accounts for", plan.steps.len() - cursor),
+        ));
+    }
+    // Root routing and declared parameters.
+    match loc[g.root.0] {
+        Some(v) if v == plan.root => {}
+        v => out.push(Violation::new(
+            ViolationKind::Structure,
+            Some(g.root.0),
+            format!("plan root {:?} does not match root value {v:?}", plan.root),
+        )),
+    }
+    if plan.root_dims != g.nodes[g.root.0].dims {
+        out.push(Violation::new(
+            ViolationKind::Shape,
+            Some(g.root.0),
+            format!(
+                "plan root dims {:?} != graph root dims {:?}",
+                plan.root_dims, g.nodes[g.root.0].dims
+            ),
+        ));
+    }
+    if plan.params.len() != live_params.len()
+        || plan
+            .params
+            .iter()
+            .zip(live_params.iter())
+            .any(|(p, (idx, name, dims))| p.index != *idx || &p.name != name || &p.dims != dims)
+    {
+        out.push(Violation::new(
+            ViolationKind::Param,
+            None,
+            "plan's declared parameters do not match the graph's live parameters",
+        ));
+    }
+    out
+}
+
+/// Check one emitted step against the current liveness model. Does not
+/// mutate the model (the caller commits effects afterwards).
+#[allow(clippy::too_many_arguments)]
+fn audit_step(
+    g: &Graph,
+    plan: &ExecPlan,
+    i: usize,
+    node: &super::super::graph::Node,
+    step: &Step,
+    sidx: usize,
+    refs: &[usize],
+    loc: &[Option<ValueRef>],
+    out: &mut Vec<Violation>,
+) {
+    let nslots = plan.slot_caps.len();
+    let mut viol = |kind: ViolationKind, detail: String| {
+        out.push(Violation::new(kind, Some(sidx), detail));
+    };
+
+    if !kernel_matches(&node.op, &step.kernel) {
+        viol(
+            ViolationKind::Structure,
+            format!("step kernel {:?} does not implement node {i}'s op", kernel_name(&step.kernel)),
+        );
+        return;
+    }
+    if step.out_len != numel(&node.dims) {
+        viol(
+            ViolationKind::Shape,
+            format!("out_len {} != node {i}'s element count {}", step.out_len, numel(&node.dims)),
+        );
+    }
+    if step.out >= nslots {
+        viol(ViolationKind::Structure, format!("output slot {} out of range", step.out));
+        return;
+    }
+    if step.out_len > plan.slot_caps[step.out] {
+        viol(
+            ViolationKind::SlotOverlap,
+            format!(
+                "output ({} elems) exceeds slot {}'s capacity {}",
+                step.out_len, step.out, plan.slot_caps[step.out]
+            ),
+        );
+    }
+
+    // Scratch slots: dead at acquisition, pairwise distinct, not the output.
+    let preps: Vec<&DotPrep> = match &step.kernel {
+        Kernel::Dot { lhs_prep, rhs_prep, .. } => {
+            lhs_prep.iter().chain(rhs_prep.iter()).collect()
+        }
+        Kernel::Spmm { rhs_prep, .. } => rhs_prep.iter().collect(),
+        _ => Vec::new(),
+    };
+    for (pi, p) in preps.iter().enumerate() {
+        if p.slot >= nslots {
+            viol(ViolationKind::Structure, format!("scratch slot {} out of range", p.slot));
+            continue;
+        }
+        if refs[p.slot] > 0 {
+            viol(
+                ViolationKind::Alias,
+                format!("scratch slot {} holds a live value", p.slot),
+            );
+        }
+        if p.slot == step.out {
+            viol(ViolationKind::Alias, format!("scratch slot {} aliases the output", p.slot));
+        }
+        if p.len > plan.slot_caps[p.slot] {
+            viol(
+                ViolationKind::SlotOverlap,
+                format!("scratch ({} elems) exceeds slot {}'s capacity", p.len, p.slot),
+            );
+        }
+        for q in &preps[..pi] {
+            if q.slot == p.slot {
+                viol(ViolationKind::Alias, format!("two scratch operands share slot {}", p.slot));
+            }
+        }
+    }
+
+    // Declared inputs: every read must hit a value one of this node's
+    // operands actually holds, within bounds — and never the output slot,
+    // which the executor takes out of the arena before resolving reads.
+    let want_ins = expected_ins(node, &step.kernel);
+    if let Some(want) = want_ins {
+        if step.ins.len() != want {
+            viol(
+                ViolationKind::Structure,
+                format!("step declares {} input(s), kernel needs {want}", step.ins.len()),
+            );
+        }
+    }
+    for &(v, len) in &step.ins {
+        let holder = node.inputs.iter().find(|id| loc[id.0] == Some(v));
+        match holder {
+            None => viol(
+                ViolationKind::SlotOverlap,
+                format!("step reads {v:?}, which no operand of node {i} holds"),
+            ),
+            Some(id) => {
+                if len > numel(&g.nodes[id.0].dims) {
+                    viol(
+                        ViolationKind::Shape,
+                        format!("step reads {len} elems from {v:?}, operand has {}", numel(&g.nodes[id.0].dims)),
+                    );
+                }
+            }
+        }
+        match v {
+            ValueRef::Slot(s) if s == step.out => viol(
+                ViolationKind::Alias,
+                format!("step reads slot {s} while writing it (executor takes it first)"),
+            ),
+            ValueRef::Slot(s) if s >= nslots => {
+                viol(ViolationKind::Structure, format!("input slot {s} out of range"))
+            }
+            ValueRef::Arg(a) if a >= g.n_params => {
+                viol(ViolationKind::Structure, format!("input arg {a} out of range"))
+            }
+            _ => {}
+        }
+    }
+
+    // Occupancy: writing a live slot is only legal as a dying-input
+    // in-place elementwise step.
+    let occupied = refs[step.out] > 0;
+    let claims_in_place = matches!(
+        step.kernel,
+        Kernel::Bin { in_place: InPlace::Lhs | InPlace::Rhs | InPlace::Both, .. }
+            | Kernel::BinScalar { in_place: true, .. }
+            | Kernel::Unary { in_place: true, .. }
+    );
+    if occupied {
+        if !claims_in_place {
+            viol(
+                ViolationKind::SlotOverlap,
+                format!(
+                    "step overwrites slot {} while its value still has {} outstanding use(s)",
+                    step.out, refs[step.out]
+                ),
+            );
+            return;
+        }
+        let aliased_edges = node
+            .inputs
+            .iter()
+            .filter(|id| loc[id.0] == Some(ValueRef::Slot(step.out)))
+            .count();
+        if aliased_edges == 0 {
+            viol(
+                ViolationKind::SlotOverlap,
+                format!("in-place step writes slot {}, which holds a stranger's value", step.out),
+            );
+            return;
+        }
+        if refs[step.out] != aliased_edges {
+            viol(
+                ViolationKind::InPlace,
+                format!(
+                    "in-place over a non-dying input: slot {} has {} use(s), only {} from this step",
+                    step.out, refs[step.out], aliased_edges
+                ),
+            );
+        }
+        if let Some(id) = node
+            .inputs
+            .iter()
+            .find(|id| loc[id.0] == Some(ValueRef::Slot(step.out)))
+        {
+            if numel(&g.nodes[id.0].dims) != step.out_len {
+                viol(
+                    ViolationKind::InPlace,
+                    format!("in-place operand extent {} != output {}", numel(&g.nodes[id.0].dims), step.out_len),
+                );
+            }
+        }
+    } else if claims_in_place {
+        viol(
+            ViolationKind::InPlace,
+            format!("kernel claims in-place but slot {} holds no value", step.out),
+        );
+    }
+}
+
+/// How many entries `step.ins` must carry for this kernel (in-place
+/// variants omit the aliased operand). `None` = no fixed arity.
+fn expected_ins(node: &super::super::graph::Node, k: &Kernel) -> Option<usize> {
+    Some(match k {
+        Kernel::ConstFill { .. } => 0,
+        Kernel::Fill | Kernel::Gather { .. } | Kernel::Slice { .. } | Kernel::Reduce { .. } => 1,
+        Kernel::Concat { .. } => node.inputs.len(),
+        Kernel::Dot { .. } | Kernel::Spmm { .. } => 2,
+        Kernel::Bin { in_place, .. } => match in_place {
+            InPlace::No => 2,
+            InPlace::Lhs | InPlace::Rhs => 1,
+            InPlace::Both => 0,
+        },
+        Kernel::BinScalar { in_place, .. } => {
+            if *in_place {
+                1
+            } else {
+                2
+            }
+        }
+        Kernel::Unary { in_place, .. } => usize::from(!*in_place),
+        Kernel::Select => 3,
+    })
+}
+
+fn kernel_matches(op: &OpKind, k: &Kernel) -> bool {
+    matches!(
+        (op, k),
+        (OpKind::ConstScalar { .. }, Kernel::ConstFill { .. })
+            | (OpKind::Broadcast, Kernel::Fill)
+            | (OpKind::BroadcastInDim { .. } | OpKind::Transpose { .. }, Kernel::Gather { .. })
+            | (OpKind::Concat { .. }, Kernel::Concat { .. })
+            | (OpKind::Slice { .. }, Kernel::Slice { .. })
+            | (OpKind::DotGeneral { .. }, Kernel::Dot { .. })
+            | (OpKind::SpmmCsr { .. }, Kernel::Spmm { .. })
+            | (
+                OpKind::Add | OpKind::Sub | OpKind::Mul | OpKind::Max | OpKind::Gt,
+                Kernel::Bin { .. } | Kernel::BinScalar { .. }
+            )
+            | (
+                OpKind::Sqrt | OpKind::Neg | OpKind::Exp | OpKind::Log | OpKind::Recip,
+                Kernel::Unary { .. }
+            )
+            | (OpKind::Select, Kernel::Select)
+            | (OpKind::ReduceMean { .. } | OpKind::ReduceSum { .. }, Kernel::Reduce { .. })
+    )
+}
+
+fn kernel_name(k: &Kernel) -> &'static str {
+    match k {
+        Kernel::ConstFill { .. } => "const-fill",
+        Kernel::Fill => "fill",
+        Kernel::Gather { .. } => "gather",
+        Kernel::Concat { .. } => "concat",
+        Kernel::Slice { .. } => "slice",
+        Kernel::Dot { .. } => "dot",
+        Kernel::Spmm { .. } => "spmm",
+        Kernel::Bin { .. } => "bin",
+        Kernel::BinScalar { .. } => "bin-scalar",
+        Kernel::Unary { .. } => "unary",
+        Kernel::Select => "select",
+        Kernel::Reduce { .. } => "reduce",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Partition cover
+// ---------------------------------------------------------------------------
+
+/// The chunk ranges `kernels::par_map` derives for `n` output elements
+/// over `lanes` lanes (same arithmetic, re-derived): `(start, len)` per
+/// chunk, in dispatch order.
+pub fn par_partition(n: usize, lanes: usize, min_elems: usize) -> Vec<(usize, usize)> {
+    if lanes <= 1 || n < min_elems.max(2) {
+        return vec![(0, n)];
+    }
+    let per = n.div_ceil(lanes.min(n));
+    let chunks = n.div_ceil(per);
+    (0..chunks)
+        .map(|ci| {
+            let start = ci * per;
+            (start, per.min(n - start))
+        })
+        .collect()
+}
+
+/// The row ranges `kernels::dot_general`/`spmm_csr` derive for `rows`
+/// output rows over `lanes` lanes (threshold gating is the caller's).
+pub fn row_partition(rows: usize, lanes: usize) -> Vec<(usize, usize)> {
+    let t = lanes.min(rows);
+    if t <= 1 {
+        return vec![(0, rows)];
+    }
+    let rows_per = rows.div_ceil(t);
+    let chunks = rows.div_ceil(rows_per);
+    (0..chunks)
+        .map(|ci| {
+            let r0 = ci * rows_per;
+            (r0, rows_per.min(rows - r0))
+        })
+        .collect()
+}
+
+/// Verify `parts` (in dispatch order) is a disjoint exact cover of
+/// `[0, total)` — the condition under which the kernels' raw-pointer
+/// chunking cannot alias.
+pub fn check_cover(total: usize, parts: &[(usize, usize)]) -> Result<(), String> {
+    let mut expect = 0usize;
+    for &(start, len) in parts {
+        if start != expect {
+            return Err(if start < expect {
+                format!("chunks overlap: chunk at {start} begins before {expect}")
+            } else {
+                format!("gap: chunk at {start} leaves {expect}..{start} unwritten")
+            });
+        }
+        expect = start + len;
+    }
+    if expect != total {
+        return Err(format!("cover ends at {expect}, output has {total} element(s)"));
+    }
+    Ok(())
+}
+
+/// Sweep every lane count up to `max(threads, 8)` and prove each yields
+/// an exact cover. The partition being a pure function of the lane
+/// count (nothing else enters the arithmetic) is the other half of the
+/// bitwise-determinism contract.
+fn check_step_partition(step: &Step, sidx: usize, threads: usize, out: &mut Vec<Violation>) {
+    let lanes_max = threads.max(8);
+    let mut fail = |lanes: usize, rows_scale: usize, e: String| {
+        out.push(Violation::new(
+            ViolationKind::Partition,
+            Some(sidx),
+            format!(
+                "{} kernel, {lanes} lane(s), row width {rows_scale}: {e}",
+                kernel_name(&step.kernel)
+            ),
+        ));
+    };
+    for lanes in 1..=lanes_max {
+        match &step.kernel {
+            // Serial kernels write the whole output inline: trivially covered.
+            Kernel::ConstFill { .. } | Kernel::Fill | Kernel::Concat { .. } | Kernel::Slice { .. } => {}
+            Kernel::Gather { .. } | Kernel::Bin { .. } | Kernel::BinScalar { .. }
+            | Kernel::Unary { .. } | Kernel::Select => {
+                let parts = par_partition(step.out_len, lanes, PAR_MIN_ELEMS);
+                if let Err(e) = check_cover(step.out_len, &parts) {
+                    fail(lanes, 1, e);
+                    return;
+                }
+            }
+            Kernel::Reduce { .. } => {
+                let parts = par_partition(step.out_len, lanes, PAR_MIN_REDUCE);
+                if let Err(e) = check_cover(step.out_len, &parts) {
+                    fail(lanes, 1, e);
+                    return;
+                }
+            }
+            Kernel::Dot { n, k, .. } => {
+                if step.out_len == 0 || *k == 0 || *n == 0 {
+                    continue; // fill paths, serial
+                }
+                if step.out_len % n != 0 {
+                    fail(lanes, *n, format!("out_len {} not a multiple of n {n}", step.out_len));
+                    return;
+                }
+                let m = step.out_len / n;
+                let t = if m * n * k >= PAR_MIN_MACS { lanes.min(m) } else { 1 };
+                let parts: Vec<(usize, usize)> = row_partition(m, t)
+                    .into_iter()
+                    .map(|(r0, rows)| (r0 * n, rows * n))
+                    .collect();
+                if let Err(e) = check_cover(step.out_len, &parts) {
+                    fail(lanes, *n, e);
+                    return;
+                }
+            }
+            Kernel::Spmm { m, row_ptr, col_idx, .. } => {
+                if step.out_len == 0 {
+                    continue;
+                }
+                if row_ptr.is_empty() {
+                    fail(lanes, *m, "empty row_ptr".to_string());
+                    return;
+                }
+                let n_rows = row_ptr.len() - 1;
+                if step.out_len != n_rows * m {
+                    fail(lanes, *m, format!("out_len {} != {n_rows} rows x {m}", step.out_len));
+                    return;
+                }
+                let macs = col_idx.len() * m;
+                let t = if macs >= PAR_MIN_MACS { lanes.min(n_rows) } else { 1 };
+                let parts: Vec<(usize, usize)> = row_partition(n_rows, t)
+                    .into_iter()
+                    .map(|(r0, rows)| (r0 * m, rows * m))
+                    .collect();
+                if let Err(e) = check_cover(step.out_len, &parts) {
+                    fail(lanes, *m, e);
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitions_cover_exactly_for_all_lane_counts() {
+        for n in [0usize, 1, 2, 7, 1024, 16 * 1024, 40_000, 65_537] {
+            for lanes in 1..=16 {
+                let parts = par_partition(n, lanes, 2);
+                check_cover(n, &parts).unwrap_or_else(|e| panic!("n={n} lanes={lanes}: {e}"));
+                assert!(parts.len() <= lanes.max(1), "n={n} lanes={lanes}");
+                let rows = row_partition(n, lanes);
+                check_cover(n, &rows).unwrap_or_else(|e| panic!("rows n={n} lanes={lanes}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn cover_rejects_gap_overlap_and_short_cover() {
+        assert!(check_cover(10, &[(0, 4), (6, 4)]).is_err(), "gap");
+        assert!(check_cover(10, &[(0, 6), (4, 6)]).is_err(), "overlap");
+        assert!(check_cover(10, &[(0, 6)]).is_err(), "short");
+        assert!(check_cover(10, &[(0, 6), (6, 4)]).is_ok());
+        assert!(check_cover(0, &[(0, 0)]).is_ok());
+    }
+
+    #[test]
+    fn partition_is_a_pure_function_of_lanes() {
+        // same n + lanes twice = same chunks; geometry cannot depend on
+        // anything else because nothing else is an input
+        assert_eq!(par_partition(40_000, 7, 2), par_partition(40_000, 7, 2));
+        assert_eq!(row_partition(37, 5), row_partition(37, 5));
+    }
+}

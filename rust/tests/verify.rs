@@ -1,0 +1,225 @@
+//! Mutation suite for the two-stage static verifier (`runtime::verify`):
+//! every invariant class gets a planted violation that must surface with
+//! the right `ViolationKind`, and the clean pipeline must verify with
+//! **zero** violations across the full variant × opt-level matrix —
+//! forward and train-step graphs alike.
+//!
+//! Graph-shape mutations (cycles, shape lies, duplicate params, corrupt
+//! CSR) are unit-tested next to `verify::graph`; this file covers the
+//! integration surface: the typed `VerifyError` escaping `run_pipeline`,
+//! the arena-plan auditor catching a corrupted `ExecPlan` before it could
+//! alias live memory, and the partition cover proofs behind the kernels'
+//! raw-pointer chunking.
+
+use lrdx::decompose::{plan_variant, sparsify_plan, Variant};
+use lrdx::model::Arch;
+use lrdx::runtime::graph::GraphBuilder;
+use lrdx::runtime::native::plan::{build_plan, Kernel};
+use lrdx::runtime::netbuilder::BuiltNet;
+use lrdx::runtime::passes::run_pipeline;
+use lrdx::runtime::verify::{audit_plan, check_cover, par_partition, row_partition};
+use lrdx::runtime::{CompileOptions, Engine, OptLevel, VerifyError, ViolationKind};
+use lrdx::trainsim::{self, data::SynthData};
+use lrdx::util::rng::Rng;
+
+const BATCH: usize = 2;
+const HW: usize = 16;
+
+// ---------------------------------------------------------------------------
+// Clean-pass matrix: the verifier must be silent on everything the repo
+// already compiles.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn clean_forward_matrix_verifies_with_zero_violations() {
+    let engine = Engine::native();
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    for variant in [
+        Variant::Orig,
+        Variant::Lrd,
+        Variant::Merged,
+        Variant::Branched,
+        Variant::Tucker2,
+        Variant::Cp,
+    ] {
+        let plan = plan_variant(&arch, variant, 2.0, 2, None).unwrap();
+        for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+            let opts = CompileOptions { verify: true, ..CompileOptions::level(level) };
+            let net = BuiltNet::compile(&engine, &arch, &plan, BATCH, HW, 0xD1FF, &opts)
+                .unwrap_or_else(|e| panic!("{variant:?}/{}: {e}", level.name()));
+            let vs = net
+                .pass_stats()
+                .verify
+                .as_ref()
+                .expect("verify stats present when CompileOptions::verify is on")
+                .clone();
+            assert_eq!(vs.violations, 0, "{variant:?}/{}", level.name());
+            assert!(
+                vs.passes_checked >= 1,
+                "{variant:?}/{}: at least the input graph must be checked",
+                level.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn clean_sparse_forward_verifies_including_spmm_invariants() {
+    let engine = Engine::native();
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    let plan =
+        sparsify_plan(plan_variant(&arch, Variant::Lrd, 2.0, 2, None).unwrap(), 50_000);
+    let opts = CompileOptions { verify: true, ..CompileOptions::default() };
+    let net = BuiltNet::compile(&engine, &arch, &plan, BATCH, HW, 0xD1FF, &opts).unwrap();
+    let vs = net.pass_stats().verify.as_ref().unwrap();
+    assert_eq!(vs.violations, 0);
+}
+
+#[test]
+fn clean_train_step_verifies_across_the_boundary() {
+    // the segmented fwd+bwd pipeline runs check_boundary after every pass
+    let engine = Engine::native();
+    let arch = Arch::by_name("resnet-mini").unwrap();
+    let gen = SynthData::new(8, arch.classes);
+    let mut rng = Rng::new(11);
+    let plan = plan_variant(&arch, Variant::Lrd, 2.0, 2, None).unwrap();
+    let opts = CompileOptions { verify: true, ..CompileOptions::default() };
+    let (_, stats) = trainsim::finetune_variant_native(
+        &engine, &arch, Variant::Lrd, &plan, None, &gen, &mut rng, 2, 4, 1, &opts,
+    )
+    .unwrap();
+    let vs = stats.verify.as_ref().expect("train pipeline carries verify stats");
+    assert_eq!(vs.violations, 0);
+    assert!(vs.passes_checked >= 1);
+}
+
+// ---------------------------------------------------------------------------
+// Typed error out of the pipeline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipeline_rejects_a_shape_lie_with_a_typed_error() {
+    let b = GraphBuilder::new("bad");
+    let x = b.parameter(0, &[4], "x").unwrap();
+    let y = x.sqrt().unwrap();
+    let g = b.build(&y).unwrap();
+
+    let opts = CompileOptions { verify: true, ..CompileOptions::default() };
+    let (_, stats) = run_pipeline(&g, &opts).unwrap();
+    assert_eq!(stats.verify.as_ref().unwrap().violations, 0);
+
+    let mut bad = g.clone();
+    bad.nodes[1].dims = vec![5]; // sqrt cannot change shape
+    let err = run_pipeline(&bad, &opts).unwrap_err();
+    let ve = err.downcast_ref::<VerifyError>().expect("VerifyError, not a panic");
+    assert_eq!(ve.pass, "input", "the lie must be caught before any pass runs");
+    assert!(ve.has_kind(ViolationKind::Shape), "{ve}");
+}
+
+// ---------------------------------------------------------------------------
+// Plan auditor: corrupted ExecPlans must die before execution
+// ---------------------------------------------------------------------------
+
+#[test]
+fn overlapping_arena_slots_are_caught_by_the_plan_auditor() {
+    // x -> sqrt(x), exp(x), then add: two live intermediates, one bin
+    let b = GraphBuilder::new("overlap");
+    let x = b.parameter(0, &[8], "x").unwrap();
+    let a = x.sqrt().unwrap();
+    let c = x.exp().unwrap();
+    let y = (a + c).unwrap();
+    let g = b.build(&y).unwrap();
+
+    let mut plan = build_plan(&g).unwrap();
+    assert!(audit_plan(&g, &plan, 4).is_empty(), "clean plan must audit clean");
+
+    // route exp's output into sqrt's still-live slot
+    assert_ne!(plan.steps[0].out, plan.steps[1].out);
+    plan.steps[1].out = plan.steps[0].out;
+    let v = audit_plan(&g, &plan, 4);
+    assert!(v.iter().any(|v| v.kind == ViolationKind::SlotOverlap), "{v:?}");
+}
+
+#[test]
+fn false_in_place_claim_is_caught_by_the_plan_auditor() {
+    let b = GraphBuilder::new("inplace");
+    let x = b.parameter(0, &[8], "x").unwrap();
+    let y = x.sqrt().unwrap();
+    let g = b.build(&y).unwrap();
+
+    let mut plan = build_plan(&g).unwrap();
+    assert!(audit_plan(&g, &plan, 1).is_empty());
+
+    // sqrt reads an Arg: claiming in-place would write a slot holding
+    // nothing (and drop the declared input)
+    if let Kernel::Unary { in_place, .. } = &mut plan.steps[0].kernel {
+        *in_place = true;
+    } else {
+        panic!("expected a unary step");
+    }
+    let v = audit_plan(&g, &plan, 1);
+    assert!(v.iter().any(|v| v.kind == ViolationKind::InPlace), "{v:?}");
+}
+
+#[test]
+fn reshape_alias_with_changed_numel_is_caught() {
+    let b = GraphBuilder::new("alias");
+    let x = b.parameter(0, &[2, 4], "x").unwrap();
+    let r = x.reshape(&[8]).unwrap();
+    let y = r.sqrt().unwrap();
+    let g = b.build(&y).unwrap();
+
+    let plan = build_plan(&g).unwrap();
+    assert!(audit_plan(&g, &plan, 1).is_empty());
+
+    let mut bad = g.clone();
+    bad.nodes[1].dims = vec![9]; // zero-copy alias over 8 elements claims 9
+    let v = audit_plan(&bad, &plan, 1);
+    assert!(v.iter().any(|v| v.kind == ViolationKind::Alias), "{v:?}");
+}
+
+#[test]
+fn corrupt_dot_geometry_fails_the_partition_sweep() {
+    let b = GraphBuilder::new("dot");
+    let w = b.parameter(0, &[4, 3], "w").unwrap();
+    let x = b.parameter(1, &[3, 2], "x").unwrap();
+    let y = w.dot_general(&x, &[1], &[0]).unwrap(); // [4, 2]
+    let g = b.build(&y).unwrap();
+
+    let mut plan = build_plan(&g).unwrap();
+    assert!(audit_plan(&g, &plan, 8).is_empty());
+
+    // a row width that does not divide the output: no lane count can
+    // produce a disjoint exact row cover
+    if let Kernel::Dot { n, .. } = &mut plan.steps[0].kernel {
+        *n = 3;
+    } else {
+        panic!("expected a dot step");
+    }
+    let v = audit_plan(&g, &plan, 8);
+    assert!(v.iter().any(|v| v.kind == ViolationKind::Partition), "{v:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Partition cover proofs (the obligation behind every raw-pointer chunk)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn partitions_cover_exactly_for_any_lane_count() {
+    for n in [0usize, 1, 5, 1023, 1024, 16 * 1024, 16 * 1024 + 1, 100_000] {
+        for lanes in 1..=9 {
+            check_cover(n, &par_partition(n, lanes, 16 * 1024))
+                .unwrap_or_else(|e| panic!("par n={n} lanes={lanes}: {e}"));
+            check_cover(n, &row_partition(n, lanes))
+                .unwrap_or_else(|e| panic!("row n={n} lanes={lanes}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn check_cover_rejects_gap_overlap_and_short_covers() {
+    assert!(check_cover(10, &[(0, 5), (5, 5)]).is_ok());
+    assert!(check_cover(10, &[(0, 4), (5, 5)]).unwrap_err().contains("gap"));
+    assert!(check_cover(10, &[(0, 6), (5, 5)]).unwrap_err().contains("overlap"));
+    assert!(check_cover(10, &[(0, 5), (5, 4)]).unwrap_err().contains("ends at"));
+}
