@@ -1,0 +1,108 @@
+//! `cargo bench --bench profile_overhead [-- --smoke]` — prices the
+//! observability layer on the merged O2 resnet-mini forward:
+//!
+//! * `overhead_off_pct` — profile-OFF executable vs the plain `new`
+//!   constructor (an A/A comparison: the off path must be free). CI
+//!   gates this under 2%.
+//! * `overhead_on_pct` — profile-ON vs baseline (informational; two
+//!   clock reads per step are not free, just cheap).
+//! * `coverage` — Σ per-step measured time / end-to-end run time with
+//!   profiling on. CI gates this at >= 0.9: the per-op numbers must
+//!   explain the run they claim to decompose.
+//!
+//! Emits `BENCH_profile.json`; `--smoke` shrinks the rep counts with the
+//! same schema (the CI schema + gate job).
+
+use std::sync::Arc;
+
+use lrdx::decompose::{plan_variant, Variant};
+use lrdx::model::Arch;
+use lrdx::runtime::native::NativeExecutable;
+use lrdx::runtime::netbuilder::build_forward;
+use lrdx::runtime::passes::run_pipeline;
+use lrdx::runtime::{CompileOptions, HostTensor, OptLevel};
+use lrdx::util::json::Json;
+use lrdx::util::rng::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let (batch, hw, threads) = (8usize, 32usize, 2usize);
+
+    let arch = Arch::by_name("resnet-mini").expect("arch");
+    let plan = plan_variant(&arch, Variant::Merged, 2.0, 2, None).expect("plan");
+    let (graph, specs) = build_forward(&arch, &plan, batch, hw).expect("build");
+    let opts = CompileOptions { opt_level: OptLevel::O2, threads, ..Default::default() };
+    let (graph, _) = run_pipeline(&graph, &opts).expect("pipeline");
+
+    let mut rng = Rng::new(0xBE7C);
+    let mut args = vec![Arc::new(HostTensor::new(
+        vec![batch, 3, hw, hw],
+        lrdx::util::det_input(batch, hw),
+    ))];
+    for spec in &specs {
+        let host = lrdx::runtime::netbuilder::init_param_host(spec, &mut rng);
+        args.push(Arc::new(HostTensor::new(spec.shape.clone(), host)));
+    }
+
+    // Three executables over the SAME optimized graph: the plain
+    // constructor (the pre-observability compile path), options with
+    // profile off, and options with profile on.
+    let exe_base = NativeExecutable::new(graph.clone(), threads).expect("compile base");
+    let exe_off =
+        NativeExecutable::with_options(graph.clone(), threads, false, false).expect("off");
+    let exe_on =
+        NativeExecutable::with_options(graph.clone(), threads, false, true).expect("on");
+
+    let (warmup, reps, inner) = if smoke { (1, 4, 1) } else { (5, 40, 4) };
+    for _ in 0..warmup {
+        exe_base.run(&args).expect("run");
+        exe_off.run(&args).expect("run");
+        exe_on.run(&args).expect("run");
+    }
+    // Interleaved min-of-reps: scheduler noise hits all three arms alike,
+    // and the min isolates the code path cost from the noise floor.
+    let time = |exe: &NativeExecutable| {
+        let t0 = std::time::Instant::now();
+        for _ in 0..inner {
+            exe.run(&args).expect("run");
+        }
+        t0.elapsed().as_secs_f64() / inner as f64
+    };
+    let (mut base, mut off, mut on) = (f64::INFINITY, f64::INFINITY, f64::INFINITY);
+    for _ in 0..reps {
+        base = base.min(time(&exe_base));
+        off = off.min(time(&exe_off));
+        on = on.min(time(&exe_on));
+    }
+
+    let overhead_off_pct = (off / base - 1.0) * 100.0;
+    let overhead_on_pct = (on / base - 1.0) * 100.0;
+    let profile = exe_on.exec_profile().expect("profile-on executable reports");
+    let coverage = profile.coverage();
+
+    println!("profile overhead on merged O2 {} (t{threads}, batch {batch}, hw {hw}):", arch.name);
+    println!("  baseline       {:>9.3} ms/fwd", base * 1e3);
+    println!("  profile off    {:>9.3} ms/fwd  ({overhead_off_pct:+.2}%)", off * 1e3);
+    println!("  profile on     {:>9.3} ms/fwd  ({overhead_on_pct:+.2}%)", on * 1e3);
+    println!("  step coverage  {:>9.1} %", coverage * 100.0);
+
+    let doc = Json::obj_from(vec![
+        ("arch", Json::Str(arch.name.to_string())),
+        ("variant", Json::Str("merged".into())),
+        ("opt_level", Json::Str("O2".into())),
+        ("threads", Json::Num(threads as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("hw", Json::Num(hw as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("baseline_secs", Json::Num(base)),
+        ("profile_off_secs", Json::Num(off)),
+        ("profile_on_secs", Json::Num(on)),
+        ("overhead_off_pct", Json::Num(overhead_off_pct)),
+        ("overhead_on_pct", Json::Num(overhead_on_pct)),
+        ("coverage", Json::Num(coverage)),
+        ("profiled_runs", Json::Num(profile.runs as f64)),
+    ]);
+    std::fs::write("BENCH_profile.json", doc.render()).expect("write BENCH_profile.json");
+    println!("(saved BENCH_profile.json)");
+}

@@ -66,6 +66,10 @@ pub fn collect_bucketed<T>(
         Ok(item) => item,
         Err(_) => return Collected::Closed,
     };
+    // Span starts at first arrival, not at the blocking recv above: the
+    // idle wait for traffic is not collection work and would dominate
+    // the trace row.
+    let _sp = crate::obs::span("batch-collect", "serve");
     let deadline = Instant::now() + policy.max_wait;
     let mut batch = Vec::with_capacity(policy.max_batch);
     batch.push(first);

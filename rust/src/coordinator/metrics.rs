@@ -1,5 +1,7 @@
-//! Serving metrics: lock-free counters + a sampled latency reservoir,
-//! plus the bucketed-serving instrumentation: per-bucket occupancy, the
+//! Serving metrics: lock-free counters + uniformly-sampled latency
+//! reservoirs (Vitter's Algorithm R, so p50/p99 describe the whole run,
+//! not just warm-up), plus the bucketed-serving instrumentation:
+//! per-bucket occupancy **and queue-wait vs execute-time split**, the
 //! padding-waste ratio (real requests vs dispatched bucket capacity), a
 //! queue-depth gauge sampled at admission, and load-shed / replica-death
 //! counters.
@@ -8,6 +10,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
 #[derive(Default)]
@@ -27,32 +30,72 @@ pub struct Metrics {
     bucket_capacity: AtomicU64,
     /// Deepest queue observed at admission (queued + executing).
     max_queue_depth: AtomicU64,
-    /// bucket size -> (batches dispatched, real requests carried)
-    bucket_counts: Mutex<BTreeMap<usize, (u64, u64)>>,
+    /// bucket size -> dispatch aggregates (batches, items, exec, wait)
+    bucket_counts: Mutex<BTreeMap<usize, BucketAgg>>,
     /// queue depth of the chosen replica at each admission. A RING (the
     /// `usize` is the overwrite cursor), not a first-N reservoir: depth
     /// is a time-varying gauge, so the summary must track the most
     /// recent window — a first-N capture would freeze on a quiet warmup
     /// period and report p99≈0 during the saturation that matters.
     queue_depths: Mutex<(Vec<f64>, usize)>,
-    /// end-to-end request latencies, seconds (bounded reservoir); covers
+    /// end-to-end request latencies, seconds (uniform reservoir); covers
     /// BOTH successful and errored requests — a failed request still
     /// occupied the queue and the worker for its full latency
-    latencies: Mutex<Vec<f64>>,
-    /// latencies of errored requests only, seconds (bounded reservoir);
+    latencies: Mutex<Reservoir>,
+    /// latencies of errored requests only, seconds (uniform reservoir);
     /// shed requests land here too (their latency is the admission time)
-    error_latencies: Mutex<Vec<f64>>,
-    /// time spent inside model execution, seconds
-    exec_time: Mutex<Vec<f64>>,
+    error_latencies: Mutex<Reservoir>,
 }
 
 const RESERVOIR: usize = 65_536;
 
-fn push_bounded(reservoir: &Mutex<Vec<f64>>, sample: f64) {
-    let mut r = reservoir.lock().unwrap();
-    if r.len() < RESERVOIR {
-        r.push(sample);
+/// Per-bucket dispatch accumulator (interior of `bucket_counts`).
+#[derive(Clone, Copy, Default)]
+struct BucketAgg {
+    batches: u64,
+    items: u64,
+    exec_secs: f64,
+    wait_secs: f64,
+}
+
+/// Bounded uniform sample: Vitter's Algorithm R. Every observation —
+/// first or ten-millionth — ends up in the sample with probability
+/// `RESERVOIR / seen`, so percentiles describe the whole run. (The seed
+/// version kept only the first `RESERVOIR` observations, which froze the
+/// histogram on warmup traffic and hid late latency regressions.)
+///
+/// The RNG is our own deterministic [`Rng`], so two runs that observe
+/// the same sequence report identical summaries.
+struct Reservoir {
+    samples: Vec<f64>,
+    /// Total observations ever offered, including evicted/skipped ones.
+    seen: u64,
+    rng: Rng,
+}
+
+impl Default for Reservoir {
+    fn default() -> Reservoir {
+        Reservoir { samples: Vec::new(), seen: 0, rng: Rng::new(0x0b5e_7a11) }
     }
+}
+
+impl Reservoir {
+    fn push(&mut self, sample: f64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR {
+            self.samples.push(sample);
+        } else {
+            // Replace a random slot with probability RESERVOIR / seen.
+            let j = self.rng.below(self.seen as usize);
+            if j < RESERVOIR {
+                self.samples[j] = sample;
+            }
+        }
+    }
+}
+
+fn push_bounded(reservoir: &Mutex<Reservoir>, sample: f64) {
+    reservoir.lock().unwrap().push(sample);
 }
 
 impl Metrics {
@@ -66,17 +109,18 @@ impl Metrics {
 
     /// One dispatched batch: `items` real requests carried by a `bucket`-
     /// sized executable (`bucket - items` slots were padding).
-    pub fn record_batch(&self, items: usize, bucket: usize, exec_secs: f64) {
+    /// `exec_secs` is time inside model execution; `wait_secs` is the
+    /// summed queue wait (admission → dispatch) of the carried requests.
+    pub fn record_batch(&self, items: usize, bucket: usize, exec_secs: f64, wait_secs: f64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_items.fetch_add(items as u64, Ordering::Relaxed);
         self.bucket_capacity.fetch_add(bucket as u64, Ordering::Relaxed);
-        {
-            let mut bc = self.bucket_counts.lock().unwrap();
-            let e = bc.entry(bucket).or_insert((0, 0));
-            e.0 += 1;
-            e.1 += items as u64;
-        }
-        push_bounded(&self.exec_time, exec_secs);
+        let mut bc = self.bucket_counts.lock().unwrap();
+        let e = bc.entry(bucket).or_insert_with(BucketAgg::default);
+        e.batches += 1;
+        e.items += items as u64;
+        e.exec_secs += exec_secs;
+        e.wait_secs += wait_secs;
     }
 
     /// Queue depth of the replica a request was just admitted to.
@@ -133,29 +177,38 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsReport {
-        let latencies = self.latencies.lock().unwrap().clone();
-        let error_latencies = self.error_latencies.lock().unwrap().clone();
-        let exec = self.exec_time.lock().unwrap().clone();
+        let (latencies, latency_seen) = {
+            let r = self.latencies.lock().unwrap();
+            (r.samples.clone(), r.seen)
+        };
+        let (error_latencies, error_latency_seen) = {
+            let r = self.error_latencies.lock().unwrap();
+            (r.samples.clone(), r.seen)
+        };
         let queue_depths = self.queue_depths.lock().unwrap().0.clone();
         let batches = self.batches.load(Ordering::Relaxed);
         let items = self.batch_items.load(Ordering::Relaxed);
         let capacity = self.bucket_capacity.load(Ordering::Relaxed);
-        let buckets = self
+        let buckets: Vec<BucketStat> = self
             .bucket_counts
             .lock()
             .unwrap()
             .iter()
-            .map(|(&bucket, &(n, carried))| BucketStat {
+            .map(|(&bucket, agg)| BucketStat {
                 bucket,
-                batches: n,
-                items: carried,
-                fill: if n == 0 {
+                batches: agg.batches,
+                items: agg.items,
+                fill: if agg.batches == 0 {
                     0.0
                 } else {
-                    carried as f64 / (n * bucket as u64) as f64
+                    agg.items as f64 / (agg.batches * bucket as u64) as f64
                 },
+                exec_secs: agg.exec_secs,
+                wait_secs: agg.wait_secs,
             })
             .collect();
+        let exec_secs: f64 = buckets.iter().map(|b| b.exec_secs).sum();
+        let wait_secs: f64 = buckets.iter().map(|b| b.wait_secs).sum();
         MetricsReport {
             requests: self.requests.load(Ordering::Relaxed),
             responses: self.responses.load(Ordering::Relaxed),
@@ -179,9 +232,12 @@ impl Metrics {
             max_queue_depth: self.max_queue_depth.load(Ordering::Relaxed),
             queue_depth: (!queue_depths.is_empty()).then(|| Summary::of(&queue_depths)),
             latency: (!latencies.is_empty()).then(|| Summary::of(&latencies)),
+            latency_seen,
             error_latency: (!error_latencies.is_empty())
                 .then(|| Summary::of(&error_latencies)),
-            exec: (!exec.is_empty()).then(|| Summary::of(&exec)),
+            error_latency_seen,
+            exec_secs,
+            wait_secs,
         }
     }
 }
@@ -196,6 +252,23 @@ pub struct BucketStat {
     pub items: u64,
     /// `items / (batches * bucket)` — 1.0 means zero padding.
     pub fill: f64,
+    /// Σ model-execution seconds over this bucket's batches.
+    pub exec_secs: f64,
+    /// Σ queue-wait seconds (admission → dispatch) over the requests
+    /// this bucket's batches carried.
+    pub wait_secs: f64,
+}
+
+impl BucketStat {
+    /// Mean execution time per dispatched batch, seconds.
+    pub fn exec_per_batch(&self) -> f64 {
+        if self.batches == 0 { 0.0 } else { self.exec_secs / self.batches as f64 }
+    }
+
+    /// Mean queue wait per carried request, seconds.
+    pub fn wait_per_item(&self) -> f64 {
+        if self.items == 0 { 0.0 } else { self.wait_secs / self.items as f64 }
+    }
 }
 
 #[derive(Debug)]
@@ -222,10 +295,20 @@ pub struct MetricsReport {
     /// Queue depth of the chosen replica at each admission.
     pub queue_depth: Option<Summary>,
     /// All completed requests, errored ones included (shed excluded).
+    /// Computed over a uniform reservoir sample of `latency_seen`
+    /// observations.
     pub latency: Option<Summary>,
+    /// Total latency observations ever offered to the reservoir (the
+    /// summary's `n` caps at the reservoir size; this does not).
+    pub latency_seen: u64,
     /// Errored requests, shed ones included.
     pub error_latency: Option<Summary>,
-    pub exec: Option<Summary>,
+    /// Total error-latency observations ever offered to the reservoir.
+    pub error_latency_seen: u64,
+    /// Σ model-execution seconds over all dispatched batches.
+    pub exec_secs: f64,
+    /// Σ queue-wait seconds over all carried requests.
+    pub wait_secs: f64,
 }
 
 impl MetricsReport {
@@ -246,10 +329,12 @@ impl MetricsReport {
             s.push_str("\nbuckets ");
             for b in &self.buckets {
                 s.push_str(&format!(
-                    " {}: {} batches (fill {:.0}%)",
+                    " {}: {} batches (fill {:.0}%, exec {:.2}ms/batch, wait {:.2}ms/req)",
                     b.bucket,
                     b.batches,
-                    b.fill * 100.0
+                    b.fill * 100.0,
+                    b.exec_per_batch() * 1e3,
+                    b.wait_per_item() * 1e3
                 ));
             }
         }
@@ -261,10 +346,12 @@ impl MetricsReport {
         }
         if let Some(l) = &self.latency {
             s.push_str(&format!(
-                "\nlatency  p50={:.2}ms p90={:.2}ms p99={:.2}ms",
+                "\nlatency  p50={:.2}ms p90={:.2}ms p99={:.2}ms (sampled {} of {} seen)",
                 l.p50 * 1e3,
                 l.p90 * 1e3,
-                l.p99 * 1e3
+                l.p99 * 1e3,
+                l.n,
+                self.latency_seen
             ));
         }
         if let Some(e) = &self.error_latency {
@@ -274,8 +361,12 @@ impl MetricsReport {
                 e.p99 * 1e3
             ));
         }
-        if let Some(e) = &self.exec {
-            s.push_str(&format!("\nexec     mean={:.2}ms", e.trimmed_mean * 1e3));
+        if self.batches > 0 {
+            s.push_str(&format!(
+                "\ntime     exec={:.1}ms queue-wait={:.1}ms (totals; per-bucket split above)",
+                self.exec_secs * 1e3,
+                self.wait_secs * 1e3
+            ));
         }
         s
     }
@@ -290,7 +381,7 @@ mod tests {
         let m = Metrics::new();
         m.record_request();
         m.record_request();
-        m.record_batch(2, 2, 0.010);
+        m.record_batch(2, 2, 0.010, 0.004);
         m.record_response(0.011);
         m.record_response(0.013);
         let r = m.snapshot();
@@ -307,8 +398,10 @@ mod tests {
     fn empty_snapshot_has_no_summaries() {
         let r = Metrics::new().snapshot();
         assert!(r.latency.is_none());
+        assert_eq!(r.latency_seen, 0);
         assert!(r.error_latency.is_none());
-        assert!(r.exec.is_none());
+        assert_eq!(r.exec_secs, 0.0);
+        assert_eq!(r.wait_secs, 0.0);
         assert!(r.queue_depth.is_none());
         assert!(r.buckets.is_empty());
         assert_eq!(r.mean_batch_occupancy, 0.0);
@@ -341,8 +434,8 @@ mod tests {
         let m = Metrics::new();
         // 3 real requests in a 4-bucket, 1 in a 1-bucket: 1 padded slot
         // over 5 dispatched -> 20% waste
-        m.record_batch(3, 4, 0.010);
-        m.record_batch(1, 1, 0.002);
+        m.record_batch(3, 4, 0.010, 0.030);
+        m.record_batch(1, 1, 0.002, 0.001);
         let r = m.snapshot();
         assert_eq!(r.batches, 2);
         assert!((r.padding_waste - 0.2).abs() < 1e-12, "waste {}", r.padding_waste);
@@ -352,7 +445,43 @@ mod tests {
         assert_eq!(r.buckets[1].bucket, 4);
         assert_eq!(r.buckets[1].batches, 1);
         assert!((r.buckets[1].fill - 0.75).abs() < 1e-12);
-        assert!(r.render().contains("buckets"));
+        // queue-wait vs execute split, per bucket and in aggregate
+        assert!((r.buckets[1].exec_secs - 0.010).abs() < 1e-12);
+        assert!((r.buckets[1].wait_secs - 0.030).abs() < 1e-12);
+        assert!((r.buckets[1].exec_per_batch() - 0.010).abs() < 1e-12);
+        assert!((r.buckets[1].wait_per_item() - 0.010).abs() < 1e-12);
+        assert!((r.exec_secs - 0.012).abs() < 1e-12);
+        assert!((r.wait_secs - 0.031).abs() < 1e-12);
+        let rendered = r.render();
+        assert!(rendered.contains("buckets"));
+        assert!(rendered.contains("queue-wait"), "render must show the wait/exec split");
+    }
+
+    /// The whole point of Algorithm R over the seed's first-N capture: a
+    /// latency regression that starts AFTER the reservoir fills must
+    /// still move the reported percentiles.
+    #[test]
+    fn late_latency_shift_moves_p99() {
+        let m = Metrics::new();
+        // Fill the reservoir with fast warmup traffic, then regress.
+        for _ in 0..RESERVOIR + 10_000 {
+            m.record_response(0.001);
+        }
+        for _ in 0..RESERVOIR + 10_000 {
+            m.record_response(0.100);
+        }
+        let r = m.snapshot();
+        assert_eq!(r.latency_seen, 2 * (RESERVOIR as u64 + 10_000));
+        let lat = r.latency.expect("latency summary");
+        assert_eq!(lat.n, RESERVOIR);
+        // ~half the sample should be late observations; a first-N capture
+        // would report p99 = 1ms here.
+        assert!(
+            lat.p99 > 0.05,
+            "late shift must reach the tail, p99={}",
+            lat.p99
+        );
+        assert!(lat.max >= 0.1);
     }
 
     #[test]

@@ -59,6 +59,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::obs;
 use crate::runtime::Engine;
 use batcher::{BatchPolicy, Collected};
 use metrics::Metrics;
@@ -270,6 +271,8 @@ impl Coordinator {
             bail!("image has {} floats, model {model:?} expects {}", image.len(), expect);
         }
         self.metrics.record_request();
+        // Covers routing: admission decision through enqueue (or shed).
+        let _admit_sp = obs::span_with(|| format!("admit:{model}"), "serve");
         let (resp_tx, resp_rx) = mpsc::sync_channel(1);
         let mut req = InferRequest { image, enqueued: Instant::now(), resp: resp_tx };
         let n = entry.replicas.len();
@@ -428,6 +431,7 @@ fn worker_loop(
             Collected::Batch(b) => b,
             Collected::Closed => {
                 watch.armed = false; // clean shutdown, not a death
+                obs::flush_thread();
                 return;
             }
         };
@@ -435,6 +439,10 @@ fn worker_loop(
         // smallest covering bucket; collect_bucketed caps n at the ladder
         // ceiling, so the find always succeeds
         let bucket = buckets.iter().copied().find(|&b| b >= n).unwrap_or(max_batch);
+        // Queue wait: admission → dispatch, summed over carried requests.
+        let wait_secs: f64 =
+            requests.iter().map(|r| r.enqueued.elapsed().as_secs_f64()).sum();
+        let t_asm = Instant::now();
         for (i, req) in requests.iter().enumerate() {
             xbatch[i * img_len..(i + 1) * img_len].copy_from_slice(&req.image);
         }
@@ -443,12 +451,19 @@ fn worker_loop(
             let (head, tail) = xbatch.split_at_mut(i * img_len);
             tail[..img_len].copy_from_slice(&head[..img_len]);
         }
+        if obs::enabled() {
+            obs::event_from(&format!("bucket-dispatch:b{bucket}"), "serve", t_asm, t_asm.elapsed());
+        }
         let t0 = Instant::now();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             model.run_bucket(&xbatch[..bucket * img_len], bucket)
         }));
         let exec = t0.elapsed().as_secs_f64();
-        metrics.record_batch(n, bucket, exec);
+        if obs::enabled() {
+            obs::event_from(&format!("execute:b{bucket}"), "serve", t0, t0.elapsed());
+        }
+        metrics.record_batch(n, bucket, exec, wait_secs);
+        let _reply_sp = obs::span_with(|| format!("reply:b{bucket}"), "serve");
         // the batch left the replica: the router sees it free before the
         // responses land
         watch.state.depth.fetch_sub(n, Ordering::Relaxed);
@@ -507,6 +522,12 @@ fn worker_loop(
                 let msg = format!("batch execution failed: {e:#}");
                 fail_batch(&metrics, requests, &msg);
             }
+        }
+        // Publish this thread's buffered spans so a trace export taken
+        // between batches sees the completed request path.
+        drop(_reply_sp);
+        if obs::enabled() {
+            obs::flush_thread();
         }
     }
 }

@@ -80,6 +80,16 @@ pub fn measure_fps(engine: &Engine, net: &BuiltNet, timer: &Timer) -> Result<f64
         out.sync()?;
         Ok(())
     })?;
+    if !summary.converged {
+        eprintln!(
+            "warning: fps measurement (batch={}, hw={}) did not converge \
+             (cv={:.3} after {} samples) — treat the number as noisy",
+            net.batch,
+            net.hw,
+            summary.cv(),
+            summary.n
+        );
+    }
     Ok(net.batch as f64 / summary.trimmed_mean)
 }
 

@@ -46,6 +46,8 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
     let timer = Timer::default();
     let mut rows = Vec::new();
     let mut jrows = Vec::new();
+    // per-network heaviest-sites notes, only when `--profile` is on
+    let mut profile_notes: Vec<String> = Vec::new();
     for arch_name in &cfg.archs {
         let arch = Arch::by_name(arch_name)
             .ok_or_else(|| anyhow::anyhow!("unknown arch {arch_name}"))?;
@@ -62,7 +64,28 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
                 if let Some(a) = &net.pass_stats().arena {
                     arena_peak = a.peak_bytes as f64;
                 }
-                measure_fps(engine, &net, &timer)?
+                let fps = measure_fps(engine, &net, &timer)?;
+                if let Some(p) = net.exe.profile() {
+                    let mut sites = p.by_site();
+                    sites.truncate(3);
+                    profile_notes.push(format!(
+                        "profile {} {}: {}",
+                        arch.name,
+                        variant.name(),
+                        sites
+                            .iter()
+                            .map(|s| format!(
+                                "{} [{}] {:.3}ms/run ({:.1} GFLOP/s)",
+                                s.site,
+                                s.op,
+                                s.ms_per_run(p.runs),
+                                s.gflops()
+                            ))
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    ));
+                }
+                fps
             };
             let label = match variant {
                 Variant::Orig => arch.name.to_string(),
@@ -96,7 +119,8 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
             .map(|s| s.to_string())
             .collect(),
         rows,
-        notes: vec![
+        notes: {
+            let mut notes = vec![
             format!(
                 "fps measured on {} at {}x{} batch {} ({} executor thread(s)); \
                  paper used GPU at 224 (DESIGN.md §5)",
@@ -110,7 +134,10 @@ pub fn run(engine: &Engine, cfg: &Config) -> Result<Report> {
              throughput for the mini models is in table456"
                 .into(),
             "FLOPs column computed at the paper's 224x224".into(),
-        ],
+            ];
+            notes.extend(profile_notes);
+            notes
+        },
         json: Json::obj_from(vec![("rows", Json::Arr(jrows))]),
     })
 }

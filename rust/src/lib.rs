@@ -32,6 +32,7 @@ pub mod decompose;
 pub mod harness;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod profiler;
 pub mod runtime;
 pub mod train;

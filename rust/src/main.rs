@@ -46,7 +46,13 @@ fn main() {
 
 fn dispatch(args: &Args) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
-    match cmd {
+    // `--trace out.json`: record spans across the whole command and export
+    // a Chrome trace-event file (chrome://tracing, Perfetto) at the end.
+    let trace_path = args.get("trace").map(|s| s.to_string());
+    if trace_path.is_some() {
+        lrdx::obs::enable();
+    }
+    let result = match cmd {
         "info" => cmd_info(args),
         "cost" => cmd_cost(args),
         "plan" => cmd_plan(args),
@@ -55,12 +61,19 @@ fn dispatch(args: &Args) -> Result<()> {
         "train" => cmd_train(args),
         "serve" => cmd_serve(args),
         "bench" => cmd_bench(args),
+        "profile" => cmd_profile(args),
         "help" | "--help" => {
             println!("{}", HELP);
             Ok(())
         }
         other => bail!("unknown command {other:?}\n{HELP}"),
+    };
+    if let Some(path) = trace_path {
+        let events = lrdx::obs::drain();
+        std::fs::write(&path, lrdx::obs::chrome_trace(&events).render())?;
+        println!("wrote {} trace events to {path}", events.len());
     }
+    result
 }
 
 const HELP: &str = "\
@@ -78,8 +91,23 @@ commands:
   serve         serving demo through the coordinator (--variants a,b)
   bench         regenerate a paper table/figure:
                 table1 table2 table3 table456 fig2 fig5
+  profile       per-op profile of dense vs lrd vs merged vs chain+S on the
+                native engine: measured ms per layer site, GFLOP/s, and a
+                cost-model calibration (predicted-vs-measured ratio plus
+                the fitted effective lane width per op kind). flags:
+                --arch (default resnet-mini), --runs N (default 5),
+                --hw, --batch, --alpha, --scheme, --sparse-density
 flags: --artifacts DIR  --reports DIR  --arch NAME  --hw N  --batch N
        --alpha F  --groups N  --real  --full  --no-measure
+       --profile          record per-step wall time / bytes / MACs inside
+                          the native executor (any command that compiles a
+                          graph). Never changes results — outputs stay
+                          bitwise identical; `profile` implies it
+       --trace FILE       export every span recorded during the command
+                          (compile passes, arena build, verifier, executor
+                          steps, worker-pool chunks, serve request path,
+                          train steps) as Chrome trace-event JSON — open
+                          in chrome://tracing or Perfetto
        --scheme svd|tucker2|cp  factor-chain family decomposed layers lower
                           to (default svd: the paper's two-factor pair;
                           tucker2 = 1x1 -> core -> 1x1 sandwich; cp =
@@ -134,7 +162,14 @@ fn compile_opts(args: &Args) -> Result<CompileOptions> {
             other => bail!("--verify expects on/off (or true/false), got {other:?}"),
         },
     };
-    Ok(CompileOptions { opt_level, lane, threads, amortize: None, verify })
+    Ok(CompileOptions {
+        opt_level,
+        lane,
+        threads,
+        amortize: None,
+        verify,
+        profile: args.bool("profile") || args.get("trace").is_some(),
+    })
 }
 
 /// `--scheme svd|tucker2|cp` → the factor-chain family (default svd).
@@ -664,4 +699,170 @@ fn cmd_bench(args: &Args) -> Result<()> {
         other => bail!("unknown bench target {other:?}"),
     };
     finish(report, args)
+}
+
+/// `lrdx profile` — compile the paper's four variants (dense, decomposed,
+/// merged, chain + sparse residual) with per-step profiling on, run each a
+/// few times, and render the per-site measured table plus a cost-model
+/// calibration: `AnalyticTimer`-predicted vs measured time per site, and
+/// the effective lane width `fit_effective_lane` recovers per op kind.
+fn cmd_profile(args: &Args) -> Result<()> {
+    use lrdx::decompose::Plan;
+    use lrdx::obs;
+    use lrdx::runtime::netbuilder::BuiltNet;
+    use lrdx::util::json::Json;
+
+    let engine = Engine::cpu()?;
+    let arch_name = args.get_or("arch", "resnet-mini");
+    let arch =
+        Arch::by_name(arch_name).ok_or_else(|| anyhow!("unknown --arch {arch_name}"))?;
+    let hw = args.usize_or("hw", 32)?;
+    let batch = args.usize_or("batch", 4)?;
+    let runs = args.usize_or("runs", 5)?.max(1);
+    let alpha = args.f64_or("alpha", 2.0)?;
+    let groups = args.usize_or("groups", 4)?;
+    let ppm = sparse_ppm(args)?.unwrap_or(50_000); // chain+S default: 5%
+    let mut copts = compile_opts(args)?;
+    copts.profile = true;
+    let timer = AnalyticTimer { lane: copts.lane, ..Default::default() };
+
+    let mut variants: Vec<(&str, Plan)> = vec![
+        ("orig", plan_variant(&arch, Variant::Orig, alpha, groups, None)?),
+        ("lrd", plan_variant(&arch, Variant::Lrd, alpha, groups, None)?),
+    ];
+    if arch.block == lrdx::model::BlockKind::Bottleneck {
+        variants.push(("merged", plan_variant(&arch, Variant::Merged, alpha, groups, None)?));
+    }
+    variants.push((
+        "chain+S",
+        plan_variant_with(&arch, Variant::Lrd, scheme_family(args)?, alpha, groups, None, Some(ppm))?,
+    ));
+
+    const TOP_SITES: usize = 8;
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+    let mut notes = vec![format!(
+        "{arch_name} at {hw}x{hw} batch {batch}, {runs} runs/variant, {} thread(s), {}; \
+         predicted = AnalyticTimer (lane {}, {:.0} GFLOP/s peak, {:.0}us dispatch)",
+        copts.resolved_threads(),
+        copts.opt_level.name(),
+        timer.lane,
+        timer.flops_per_sec / 1e9,
+        timer.overhead * 1e6,
+    )];
+    // (op kind -> (gate dim, measured FLOP/s)) across every variant
+    let mut cal_points: std::collections::BTreeMap<&'static str, Vec<(usize, f64)>> =
+        std::collections::BTreeMap::new();
+
+    for (label, plan) in &variants {
+        let net = BuiltNet::compile(&engine, &arch, plan, batch, hw, 0xBEEF, &copts)?;
+        let x: Vec<f32> = lrdx::util::det_input(batch, hw);
+        let xb = engine.upload(&x, &[batch, 3, hw, hw])?;
+        for _ in 0..runs {
+            net.forward(&xb)?.sync()?;
+        }
+        let p = net
+            .exe
+            .profile()
+            .ok_or_else(|| anyhow!("{label}: backend returned no profile"))?;
+        obs::inject(p.trace_events()); // rides along into --trace output
+
+        // calibration points: per-step measured rate vs the step's gate dim
+        for (m, a) in p.meta.iter().zip(&p.steps) {
+            if m.macs > 0 && a.total_secs > 0.0 && m.gate > 0 {
+                let rate = 2.0 * (m.macs as u64 * a.calls) as f64 / a.total_secs;
+                cal_points.entry(m.op).or_default().push((m.gate, rate));
+            }
+        }
+
+        let sites = p.by_site();
+        let arena = net
+            .pass_stats()
+            .arena
+            .as_ref()
+            .map(|a| a.peak_bytes)
+            .unwrap_or(0);
+        rows.push(vec![
+            format!("{label} TOTAL"),
+            String::new(),
+            format!("{:.3}", p.run_secs / p.runs.max(1) as f64 * 1e3),
+            String::new(),
+            String::new(),
+            format!("cov {:.0}% arena {:.1}MB", p.coverage() * 100.0, arena as f64 / 1e6),
+        ]);
+        let mut jsites = Vec::new();
+        for (i, s) in sites.iter().enumerate() {
+            // predicted: MACs through the tile-efficiency curve at the
+            // step's gate dim, plus the per-dispatch overhead
+            let eff = cost::tile_efficiency(s.gate, timer.lane).max(1e-3);
+            let pred_secs = 2.0 * s.macs_total as f64 / (timer.flops_per_sec * eff)
+                + timer.overhead * s.calls as f64;
+            let ratio = if pred_secs > 0.0 { s.total_secs / pred_secs } else { f64::NAN };
+            jsites.push(Json::obj_from(vec![
+                ("site", Json::Str(s.site.clone())),
+                ("op", Json::Str(s.op.into())),
+                ("ms_per_run", Json::Num(s.ms_per_run(p.runs))),
+                ("gflops", Json::Num(s.gflops())),
+                ("meas_over_pred", Json::Num(ratio)),
+                ("macs", Json::Num(s.macs_total as f64)),
+                ("bytes", Json::Num(s.bytes_total as f64)),
+            ]));
+            if i >= TOP_SITES {
+                continue; // JSON keeps every site; the table shows the top
+            }
+            rows.push(vec![
+                label.to_string(),
+                format!("{} [{}]", s.site, s.op),
+                format!("{:.3}", s.ms_per_run(p.runs)),
+                if s.macs_total > 0 { format!("{:.2}", s.gflops()) } else { "-".into() },
+                if s.macs_total > 0 { format!("{ratio:.2}") } else { "-".into() },
+                format!("{} step(s) x{}", s.steps, s.calls),
+            ]);
+        }
+        if sites.len() > TOP_SITES {
+            notes.push(format!(
+                "{label}: table shows the {TOP_SITES} heaviest of {} site rows \
+                 (all rows in the JSON report)",
+                sites.len()
+            ));
+        }
+        jrows.push(Json::obj_from(vec![
+            ("variant", Json::Str(label.to_string())),
+            ("runs", Json::Num(p.runs as f64)),
+            ("ms_per_run", Json::Num(p.run_secs / p.runs.max(1) as f64 * 1e3)),
+            ("coverage", Json::Num(p.coverage())),
+            ("arena_peak_bytes", Json::Num(arena as f64)),
+            ("sites", Json::Arr(jsites)),
+        ]));
+    }
+
+    // Calibration: which lane width explains the measured rates per op kind
+    for (op, pts) in &cal_points {
+        match cost::fit_effective_lane(pts) {
+            Some((lane, peak, resid)) => notes.push(format!(
+                "calibration[{op}]: effective lane {lane} at {:.2} GFLOP/s peak \
+                 (rel residual {:.2}, {} points) — configured gate lane is {}",
+                peak / 1e9,
+                resid,
+                pts.len(),
+                copts.lane,
+            )),
+            None => notes.push(format!("calibration[{op}]: no usable points")),
+        }
+    }
+
+    finish(
+        Report {
+            id: "profile".into(),
+            title: format!("Per-op profile & cost calibration ({arch_name})"),
+            header: ["Variant", "Site [op]", "ms/run", "GFLOP/s", "meas/pred", "notes"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            rows,
+            notes,
+            json: Json::obj_from(vec![("variants", Json::Arr(jrows))]),
+        },
+        args,
+    )
 }

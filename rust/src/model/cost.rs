@@ -244,6 +244,58 @@ pub fn spmm_unit_cost(lane: usize, merged: bool) -> f64 {
     }
 }
 
+/// Calibrate the tile-efficiency model against measurements: given
+/// `(gate_dim, measured_rate)` points — gate dimension of a kernel (the
+/// contiguous dimension its inner loop vectorizes over) and its measured
+/// throughput (e.g. GFLOP/s) — find the lane width `L` whose
+/// `rate ≈ c · tile_efficiency(gate_dim, L)` fit has the smallest
+/// least-squares residual. Returns `(lane, peak_rate, rel_residual)`
+/// where `peak_rate` is the fitted full-lane throughput `c` and
+/// `rel_residual` is `sqrt(Σerr² / Σrate²)` (0 = perfect fit).
+///
+/// This is the measured counterpart of [`tile_efficiency`]: the profiler
+/// feeds per-op observed rates in, and the reported lane is the
+/// *effective* vector width the kernel actually achieved — the number
+/// `AnalyticTimer { lane }` should be configured with for this machine.
+pub fn fit_effective_lane(points: &[(usize, f64)]) -> Option<(usize, f64, f64)> {
+    const CANDIDATES: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+    let pts: Vec<(usize, f64)> = points
+        .iter()
+        .copied()
+        .filter(|&(dim, rate)| dim > 0 && rate.is_finite() && rate > 0.0)
+        .collect();
+    if pts.is_empty() {
+        return None;
+    }
+    let rate_sq: f64 = pts.iter().map(|&(_, r)| r * r).sum();
+    let mut best: Option<(usize, f64)> = None;
+    let mut best_resid = f64::INFINITY;
+    for &lane in &CANDIDATES {
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for &(dim, rate) in &pts {
+            let eff = tile_efficiency(dim, lane);
+            num += rate * eff;
+            den += eff * eff;
+        }
+        if den == 0.0 {
+            continue;
+        }
+        let c = num / den;
+        let resid: f64 = pts
+            .iter()
+            .map(|&(dim, rate)| {
+                let err = rate - c * tile_efficiency(dim, lane);
+                err * err
+            })
+            .sum();
+        if resid < best_resid {
+            best_resid = resid;
+            best = Some((lane, c));
+        }
+    }
+    best.map(|(lane, c)| (lane, c, (best_resid / rate_sq).sqrt()))
+}
+
 /// Estimated VMEM bytes of one grid step of the fused low-rank matmul
 /// kernel — mirrors `python/compile/kernels/lowrank_matmul.py::vmem_bytes`.
 pub fn lowrank_vmem_bytes(b: usize, c: usize, r: usize, s: usize) -> usize {
@@ -438,5 +490,21 @@ mod tests {
     fn vmem_estimate_sane() {
         let b = lowrank_vmem_bytes(128, 512, 256, 512);
         assert!(b > 0 && b < 16 * 1024 * 1024, "{b}");
+    }
+
+    #[test]
+    fn fit_effective_lane_recovers_the_generating_lane() {
+        // Synthesize rates from the model itself at lane 8 / 40 GFLOP/s
+        // peak; dims straddle tile boundaries so lanes are separable.
+        let dims = [3usize, 7, 8, 12, 16, 23, 57, 64, 100, 129];
+        let pts: Vec<(usize, f64)> =
+            dims.iter().map(|&d| (d, 40e9 * tile_efficiency(d, 8))).collect();
+        let (lane, peak, resid) = fit_effective_lane(&pts).unwrap();
+        assert_eq!(lane, 8);
+        assert!((peak - 40e9).abs() / 40e9 < 1e-9, "peak {peak}");
+        assert!(resid < 1e-9, "residual {resid}");
+        // degenerate inputs
+        assert!(fit_effective_lane(&[]).is_none());
+        assert!(fit_effective_lane(&[(0, 1.0), (4, f64::NAN), (4, -1.0)]).is_none());
     }
 }

@@ -1,0 +1,664 @@
+//! Cross-layer observability: spans, per-step execution profiles, and
+//! Chrome trace-event export.
+//!
+//! Two data paths, deliberately separate:
+//!
+//! 1. **Spans** — coarse pipeline stages (compile passes, plan/arena
+//!    build, verifier stages, train steps, the serve request path). Each
+//!    instrumented thread appends finished spans to a *thread-local*
+//!    buffer ([`SpanGuard`] / [`event_from`]) and flushes it to the
+//!    global sink at coarse boundaries ([`flush_thread`]) — the shared
+//!    `Mutex` is touched once per flush, never per span. With the sink
+//!    disabled (the default) every entry point is a single relaxed
+//!    atomic load and no allocation.
+//!
+//! 2. **Execution profiles** — per-`Step` wall time with analytic
+//!    MAC/byte attribution ([`ExecProfile`]). These are *not* routed
+//!    through the global sink: the native executor owns its
+//!    [`ProfileState`] (one mutex acquisition per `run`, after the step
+//!    loop) and the worker pool records per-chunk events into lock-free
+//!    per-chunk slots that are drained after the completion barrier. The
+//!    kernel inner loops are never instrumented — profiling wraps the
+//!    unchanged kernel calls with clock reads, so enabling it cannot
+//!    perturb partitioning or accumulation order (the bitwise-determinism
+//!    regression in `tests/obs_profile.rs`).
+//!
+//! Both paths export to the Chrome trace-event JSON format
+//! ([`chrome_trace`]), loadable in Perfetto / `chrome://tracing`.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+// --------------------------------------------------------------------------
+// Global span sink
+// --------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static GLOBAL: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Flush the thread-local buffer into the global sink once it holds this
+/// many spans (bounds per-thread memory without per-span lock traffic).
+const LOCAL_FLUSH: usize = 1024;
+
+thread_local! {
+    static LOCAL: RefCell<Vec<TraceEvent>> = const { RefCell::new(Vec::new()) };
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Turn the span sink on (idempotent). Timestamps are microseconds since
+/// the first call to `enable`/`epoch` in the process.
+pub fn enable() {
+    epoch();
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Turn the span sink off. Buffered spans stay until [`drain`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+}
+
+/// Is the span sink collecting? One relaxed-ish atomic load — the cost of
+/// every instrumentation point when tracing is off.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Acquire)
+}
+
+/// The process-wide trace epoch (first use wins).
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds elapsed since the trace epoch.
+pub fn now_us() -> f64 {
+    epoch().elapsed().as_secs_f64() * 1e6
+}
+
+/// Stable small integer identifying the calling thread in trace exports.
+pub fn tid() -> u64 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        t.set(v);
+        v
+    })
+}
+
+/// Move this thread's buffered spans into the global sink (one lock).
+/// Instrumented threads call this at coarse boundaries — after a compile,
+/// after a served batch — never on the kernel path.
+pub fn flush_thread() {
+    let local: Vec<TraceEvent> = LOCAL.with(|l| std::mem::take(&mut *l.borrow_mut()));
+    if local.is_empty() {
+        return;
+    }
+    GLOBAL.lock().expect("obs sink").extend(local);
+}
+
+/// Take every span flushed so far (plus the calling thread's buffer).
+/// Spans buffered on *other* live threads are not stolen — they arrive at
+/// those threads' next flush.
+pub fn drain() -> Vec<TraceEvent> {
+    flush_thread();
+    std::mem::take(&mut *GLOBAL.lock().expect("obs sink"))
+}
+
+/// Append pre-built events — e.g. an [`ExecProfile`]'s per-step rows —
+/// to the global sink so the next [`drain`] exports them alongside the
+/// live spans. No-op while the sink is disabled.
+pub fn inject(events: Vec<TraceEvent>) {
+    if !enabled() || events.is_empty() {
+        return;
+    }
+    GLOBAL.lock().expect("obs sink").extend(events);
+}
+
+fn push_event(e: TraceEvent) {
+    let full = LOCAL.with(|l| {
+        let mut b = l.borrow_mut();
+        b.push(e);
+        b.len() >= LOCAL_FLUSH
+    });
+    if full {
+        flush_thread();
+    }
+}
+
+/// One complete ("ph":"X") trace event.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: String,
+    /// Category — "compile", "exec", "serve", "train", "verify", ...
+    pub cat: &'static str,
+    pub tid: u64,
+    /// Microseconds since [`epoch`].
+    pub ts_us: f64,
+    pub dur_us: f64,
+    pub args: Vec<(String, Json)>,
+}
+
+/// RAII span: measures from construction to drop and appends to the
+/// thread-local buffer. Inert (no allocation, no clock read beyond one
+/// atomic load) when the sink is disabled.
+pub struct SpanGuard {
+    name: Option<String>,
+    cat: &'static str,
+    t0: Instant,
+}
+
+/// Open a span named `name`. Prefer [`span_with`] when the name needs
+/// formatting — the closure is only run when the sink is enabled.
+pub fn span(name: &str, cat: &'static str) -> SpanGuard {
+    span_with(|| name.to_string(), cat)
+}
+
+/// Open a span with a lazily-built name (skips the allocation when the
+/// sink is off).
+pub fn span_with(name: impl FnOnce() -> String, cat: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { name: None, cat, t0: epoch() };
+    }
+    SpanGuard { name: Some(name()), cat, t0: Instant::now() }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(name) = self.name.take() else { return };
+        let dur_us = self.t0.elapsed().as_secs_f64() * 1e6;
+        let ts_us = self.t0.duration_since(epoch()).as_secs_f64() * 1e6;
+        push_event(TraceEvent { name, cat: self.cat, tid: tid(), ts_us, dur_us, args: Vec::new() });
+    }
+}
+
+/// Record an already-measured interval (for call sites that time a stage
+/// themselves, like the pass pipeline's `record_pass`). No-op when the
+/// sink is disabled — but guard the `format!` building `name` with
+/// [`enabled`] at the call site to keep the off path allocation-free.
+pub fn event_from(name: &str, cat: &'static str, t0: Instant, dur: Duration) {
+    if !enabled() {
+        return;
+    }
+    push_event(TraceEvent {
+        name: name.to_string(),
+        cat,
+        tid: tid(),
+        ts_us: t0.duration_since(epoch()).as_secs_f64() * 1e6,
+        dur_us: dur.as_secs_f64() * 1e6,
+        args: Vec::new(),
+    });
+}
+
+// --------------------------------------------------------------------------
+// Execution profiles (native executor)
+// --------------------------------------------------------------------------
+
+/// Static attribution for one plan step, built by the planner in lockstep
+/// with `ExecPlan::steps`. `site` maps the step back to the parameter
+/// site that feeds it (`conv2.w0`, `conv2.s`, ...) so decomposed factors,
+/// residual taps and merged siblings are separately attributable.
+#[derive(Clone, Debug)]
+pub struct StepMeta {
+    /// Graph node this step computes.
+    pub node: usize,
+    /// Kernel kind ("dot", "spmm", "bin", ...).
+    pub op: &'static str,
+    /// Nearest parameter site feeding this step, or "(activations)".
+    pub site: String,
+    /// Analytic multiply-accumulates per execution (0 for non-contraction
+    /// kernels).
+    pub macs: usize,
+    /// Bytes moved per execution (inputs read + output written, f32).
+    pub bytes: usize,
+    /// The lane-gated dimension the cost model tiles over (`n` for dot,
+    /// 1 for the scalar-rate spmm, 0 when not applicable).
+    pub gate: usize,
+}
+
+/// One timed step execution (microseconds since [`epoch`]).
+#[derive(Clone, Copy, Debug)]
+pub struct StepSample {
+    pub step: usize,
+    pub ts_us: f64,
+    pub dur_us: f64,
+}
+
+/// One pool chunk dispatched while profiling: which worker lane ran which
+/// chunk of which step, and when.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkEvent {
+    pub step: usize,
+    pub chunk: usize,
+    /// Pool lane (0 = the calling thread, 1.. = workers).
+    pub lane: usize,
+    pub ts_us: f64,
+    pub dur_us: f64,
+}
+
+/// Accumulated timing for one plan step across runs.
+#[derive(Clone, Copy, Debug)]
+pub struct StepAgg {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub min_secs: f64,
+}
+
+impl StepAgg {
+    fn new() -> StepAgg {
+        StepAgg { calls: 0, total_secs: 0.0, min_secs: f64::INFINITY }
+    }
+
+    fn add(&mut self, secs: f64) {
+        self.calls += 1;
+        self.total_secs += secs;
+        if secs < self.min_secs {
+            self.min_secs = secs;
+        }
+    }
+}
+
+/// Raw samples kept for trace export are capped so long profiled serves
+/// don't grow without bound; the per-step aggregates keep counting.
+const SAMPLE_CAP: usize = 65_536;
+const CHUNK_CAP: usize = 65_536;
+const SPAN_CAP: usize = 8_192;
+
+/// Mutable profiling state owned by one executable (behind its own
+/// mutex, locked once per run *after* the step loop).
+#[derive(Debug, Default)]
+pub struct ProfileState {
+    pub runs: u64,
+    pub run_secs: f64,
+    /// (ts_us, dur_us) of each run, capped at `SPAN_CAP`.
+    pub run_spans: Vec<(f64, f64)>,
+    /// Per-step aggregates, indexed like `ExecPlan::steps`.
+    pub agg: Vec<StepAgg>,
+    /// Raw step samples for trace export, capped at `SAMPLE_CAP`.
+    pub samples: Vec<StepSample>,
+    /// Raw pool chunk events, capped at `CHUNK_CAP`.
+    pub chunks: Vec<ChunkEvent>,
+}
+
+impl ProfileState {
+    pub fn new(n_steps: usize) -> ProfileState {
+        ProfileState { agg: vec![StepAgg::new(); n_steps], ..ProfileState::default() }
+    }
+
+    /// Fold one run's measurements in (one call per `run`, under the
+    /// state's own lock — the step loop itself takes no locks).
+    pub fn record_run(
+        &mut self,
+        ts_us: f64,
+        dur_secs: f64,
+        samples: Vec<StepSample>,
+        chunks: Vec<ChunkEvent>,
+    ) {
+        self.runs += 1;
+        self.run_secs += dur_secs;
+        for s in &samples {
+            if let Some(a) = self.agg.get_mut(s.step) {
+                a.add(s.dur_us * 1e-6);
+            }
+        }
+        if self.run_spans.len() < SPAN_CAP {
+            self.run_spans.push((ts_us, dur_secs * 1e6));
+        }
+        let room = SAMPLE_CAP.saturating_sub(self.samples.len());
+        self.samples.extend(samples.into_iter().take(room));
+        let room = CHUNK_CAP.saturating_sub(self.chunks.len());
+        self.chunks.extend(chunks.into_iter().take(room));
+    }
+}
+
+/// Immutable snapshot of an executable's profile, with the plan's step
+/// attribution attached — what `Compiled::profile()` returns.
+#[derive(Clone, Debug)]
+pub struct ExecProfile {
+    pub graph: String,
+    pub meta: Vec<StepMeta>,
+    pub runs: u64,
+    /// Total wall seconds inside `run` across all runs.
+    pub run_secs: f64,
+    pub run_spans: Vec<(f64, f64)>,
+    pub steps: Vec<StepAgg>,
+    pub samples: Vec<StepSample>,
+    pub chunks: Vec<ChunkEvent>,
+}
+
+/// Per-(site, op) aggregate over the plan steps attributed to it.
+#[derive(Clone, Debug)]
+pub struct SiteAgg {
+    pub site: String,
+    pub op: &'static str,
+    /// Distinct plan steps folded into this row.
+    pub steps: usize,
+    pub calls: u64,
+    pub total_secs: f64,
+    /// Total analytic MACs executed (per-step MACs x calls).
+    pub macs_total: u64,
+    pub bytes_total: u64,
+    /// Representative (max) lane-gate dimension among the grouped steps.
+    pub gate: usize,
+}
+
+impl SiteAgg {
+    /// Measured MAC throughput in GFLOP/s (2 flops per MAC).
+    pub fn gflops(&self) -> f64 {
+        if self.total_secs > 0.0 {
+            2.0 * self.macs_total as f64 / self.total_secs / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean milliseconds spent in this row per run.
+    pub fn ms_per_run(&self, runs: u64) -> f64 {
+        if runs == 0 {
+            0.0
+        } else {
+            self.total_secs * 1e3 / runs as f64
+        }
+    }
+}
+
+/// Synthetic trace rows: the executor's step timeline and one row per
+/// pool lane, so chunk events sit visually under their step span.
+pub const EXEC_TID: u64 = 100;
+pub const LANE_TID_BASE: u64 = 101;
+
+impl ExecProfile {
+    /// Sum of per-step wall time (the numerator of [`coverage`]).
+    ///
+    /// [`coverage`]: ExecProfile::coverage
+    pub fn step_secs(&self) -> f64 {
+        self.steps.iter().map(|a| a.total_secs).sum()
+    }
+
+    /// Fraction of end-to-end run time accounted for by step timings —
+    /// the CI gate asserts >= 0.9 (the remainder is arg validation, the
+    /// arena lock and root routing).
+    pub fn coverage(&self) -> f64 {
+        if self.run_secs > 0.0 {
+            self.step_secs() / self.run_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Group step aggregates by (parameter site, op kind), heaviest
+    /// first.
+    pub fn by_site(&self) -> Vec<SiteAgg> {
+        let mut map: BTreeMap<(String, &'static str), SiteAgg> = BTreeMap::new();
+        for (i, m) in self.meta.iter().enumerate() {
+            let Some(a) = self.steps.get(i) else { continue };
+            if a.calls == 0 {
+                continue;
+            }
+            let e = map.entry((m.site.clone(), m.op)).or_insert_with(|| SiteAgg {
+                site: m.site.clone(),
+                op: m.op,
+                steps: 0,
+                calls: 0,
+                total_secs: 0.0,
+                macs_total: 0,
+                bytes_total: 0,
+                gate: 0,
+            });
+            e.steps += 1;
+            e.calls += a.calls;
+            e.total_secs += a.total_secs;
+            e.macs_total += m.macs as u64 * a.calls;
+            e.bytes_total += m.bytes as u64 * a.calls;
+            e.gate = e.gate.max(m.gate);
+        }
+        let mut v: Vec<SiteAgg> = map.into_values().collect();
+        v.sort_by(|a, b| {
+            b.total_secs.partial_cmp(&a.total_secs).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        v
+    }
+
+    /// Render the profile as complete trace events (runs, steps, chunks)
+    /// for merging into a Chrome trace export.
+    pub fn trace_events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for (ri, &(ts_us, dur_us)) in self.run_spans.iter().enumerate() {
+            out.push(TraceEvent {
+                name: format!("run:{}", self.graph),
+                cat: "exec",
+                tid: EXEC_TID,
+                ts_us,
+                dur_us,
+                args: vec![("run".into(), Json::Num(ri as f64))],
+            });
+        }
+        for s in &self.samples {
+            let (name, macs) = match self.meta.get(s.step) {
+                Some(m) => (format!("{}:{}", m.op, m.site), m.macs),
+                None => (format!("step{}", s.step), 0),
+            };
+            out.push(TraceEvent {
+                name,
+                cat: "step",
+                tid: EXEC_TID,
+                ts_us: s.ts_us,
+                dur_us: s.dur_us,
+                args: vec![
+                    ("step".into(), Json::Num(s.step as f64)),
+                    ("macs".into(), Json::Num(macs as f64)),
+                ],
+            });
+        }
+        for c in &self.chunks {
+            out.push(TraceEvent {
+                name: format!("chunk{}", c.chunk),
+                cat: "chunk",
+                tid: LANE_TID_BASE + c.lane as u64,
+                ts_us: c.ts_us,
+                dur_us: c.dur_us,
+                args: vec![("step".into(), Json::Num(c.step as f64))],
+            });
+        }
+        out
+    }
+}
+
+// --------------------------------------------------------------------------
+// Chrome trace-event export
+// --------------------------------------------------------------------------
+
+/// Serialize events as a Chrome trace-event JSON document (the
+/// `{"traceEvents": [...]}` object form; load in Perfetto or
+/// `chrome://tracing`).
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    Json::obj_from(vec![(
+        "traceEvents",
+        Json::Arr(events.iter().map(trace_event_json).collect()),
+    )])
+}
+
+fn trace_event_json(e: &TraceEvent) -> Json {
+    let mut pairs = vec![
+        ("ph", Json::Str("X".into())),
+        ("name", Json::Str(e.name.clone())),
+        ("cat", Json::Str(e.cat.into())),
+        ("pid", Json::Num(0.0)),
+        ("tid", Json::Num(e.tid as f64)),
+        ("ts", Json::Num(e.ts_us)),
+        ("dur", Json::Num(e.dur_us)),
+    ];
+    if !e.args.is_empty() {
+        let obj: BTreeMap<String, Json> =
+            e.args.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        pairs.push(("args", Json::Obj(obj)));
+    }
+    Json::obj_from(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_records_nothing() {
+        // default-off: guards are inert (other tests may have enabled the
+        // sink concurrently, so only assert when it is actually off)
+        if !enabled() {
+            let _s = span("obs-test-should-not-appear", "test");
+            drop(_s);
+            let got = drain();
+            assert!(
+                got.iter().all(|e| e.name != "obs-test-should-not-appear"),
+                "disabled sink must drop spans"
+            );
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // clock reads are unsupported under isolation
+    fn spans_flush_and_drain() {
+        enable();
+        {
+            let _outer = span("obs-test-outer", "test");
+            let _inner = span("obs-test-inner", "test");
+        }
+        let got = drain();
+        disable();
+        let mine: Vec<&TraceEvent> =
+            got.iter().filter(|e| e.name.starts_with("obs-test-")).collect();
+        assert_eq!(mine.len(), 2, "both spans recorded");
+        for e in &mine {
+            assert!(e.dur_us >= 0.0);
+            assert!(e.ts_us >= 0.0);
+            assert_eq!(e.cat, "test");
+            assert_eq!(e.tid, tid());
+        }
+        // inner closed before outer => inner's interval nests inside
+        let inner = mine.iter().find(|e| e.name == "obs-test-inner").unwrap();
+        let outer = mine.iter().find(|e| e.name == "obs-test-outer").unwrap();
+        assert!(inner.ts_us >= outer.ts_us);
+        assert!(inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us + 1.0);
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_json() {
+        let events = vec![
+            TraceEvent {
+                name: "compile:g".into(),
+                cat: "compile",
+                tid: 1,
+                ts_us: 10.5,
+                dur_us: 100.0,
+                args: vec![("nodes".into(), Json::Num(42.0))],
+            },
+            TraceEvent {
+                name: "dot:conv2.w0".into(),
+                cat: "step",
+                tid: EXEC_TID,
+                ts_us: 120.0,
+                dur_us: 7.25,
+                args: Vec::new(),
+            },
+        ];
+        let doc = chrome_trace(&events);
+        let back = Json::parse(&doc.render()).expect("rendered trace parses");
+        let arr = match back.get("traceEvents").unwrap() {
+            Json::Arr(v) => v,
+            other => panic!("traceEvents not an array: {other:?}"),
+        };
+        assert_eq!(arr.len(), 2);
+        for (e, j) in events.iter().zip(arr) {
+            assert_eq!(j.get("ph").unwrap(), &Json::Str("X".into()));
+            assert_eq!(j.get("name").unwrap(), &Json::Str(e.name.clone()));
+            assert_eq!(j.get("cat").unwrap(), &Json::Str(e.cat.into()));
+            assert_eq!(j.get("pid").unwrap(), &Json::Num(0.0));
+            assert_eq!(j.get("tid").unwrap(), &Json::Num(e.tid as f64));
+            assert_eq!(j.get("ts").unwrap(), &Json::Num(e.ts_us));
+            assert_eq!(j.get("dur").unwrap(), &Json::Num(e.dur_us));
+        }
+        assert_eq!(
+            arr[0].get("args").unwrap().get("nodes").unwrap(),
+            &Json::Num(42.0)
+        );
+        assert!(arr[1].get("args").is_err(), "empty args omitted");
+    }
+
+    #[test]
+    fn profile_state_aggregates_and_caps() {
+        let mut st = ProfileState::new(2);
+        st.record_run(
+            0.0,
+            0.001,
+            vec![
+                StepSample { step: 0, ts_us: 0.0, dur_us: 400.0 },
+                StepSample { step: 1, ts_us: 400.0, dur_us: 500.0 },
+            ],
+            vec![ChunkEvent { step: 1, chunk: 0, lane: 1, ts_us: 410.0, dur_us: 100.0 }],
+        );
+        st.record_run(
+            1000.0,
+            0.002,
+            vec![
+                StepSample { step: 0, ts_us: 1000.0, dur_us: 800.0 },
+                StepSample { step: 1, ts_us: 1800.0, dur_us: 1100.0 },
+            ],
+            Vec::new(),
+        );
+        assert_eq!(st.runs, 2);
+        assert_eq!(st.agg[0].calls, 2);
+        assert!((st.agg[0].total_secs - 1.2e-3).abs() < 1e-9);
+        assert!((st.agg[0].min_secs - 4e-4).abs() < 1e-9);
+        assert_eq!(st.samples.len(), 4);
+        assert_eq!(st.chunks.len(), 1);
+
+        let p = ExecProfile {
+            graph: "g".into(),
+            meta: vec![
+                StepMeta {
+                    node: 0,
+                    op: "dot",
+                    site: "conv1.w".into(),
+                    macs: 1000,
+                    bytes: 64,
+                    gate: 8,
+                },
+                StepMeta {
+                    node: 1,
+                    op: "unary",
+                    site: "(activations)".into(),
+                    macs: 0,
+                    bytes: 32,
+                    gate: 0,
+                },
+            ],
+            runs: st.runs,
+            run_secs: st.run_secs,
+            run_spans: st.run_spans.clone(),
+            steps: st.agg.clone(),
+            samples: st.samples.clone(),
+            chunks: st.chunks.clone(),
+        };
+        // steps were timed inside the run span: sum <= run total
+        assert!(p.step_secs() <= p.run_secs + 1e-9);
+        assert!(p.coverage() > 0.9, "coverage {}", p.coverage());
+        let sites = p.by_site();
+        assert_eq!(sites.len(), 2);
+        assert_eq!(sites[0].site, "(activations)", "heaviest first");
+        let dot = sites.iter().find(|s| s.op == "dot").unwrap();
+        assert_eq!(dot.macs_total, 2000);
+        assert!(dot.gflops() > 0.0);
+        let ev = p.trace_events();
+        // 2 run spans + 4 step samples + 1 chunk
+        assert_eq!(ev.len(), 7);
+        assert!(ev.iter().any(|e| e.name == "dot:conv1.w"));
+        assert!(ev.iter().any(|e| e.tid == LANE_TID_BASE + 1));
+    }
+}

@@ -52,7 +52,11 @@ impl Timer {
                 }
             }
         }
-        Ok(Summary::of(&samples))
+        // max_samples exhausted without meeting cv_target: don't trust
+        // this silently — flag it so harness/bench output can warn.
+        let mut s = Summary::of(&samples);
+        s.converged = false;
+        Ok(s)
     }
 
     /// Throughput helper: items/second given seconds-per-call.
@@ -90,6 +94,25 @@ mod tests {
             .unwrap();
         assert!(calls < 1000);
         assert_eq!(s.n, calls);
+        assert!(s.converged, "early-exit means the CV target was met");
+    }
+
+    #[test]
+    fn flags_non_convergence_at_max_samples() {
+        // an impossible CV target: the loop must hit max_samples and the
+        // summary must say so instead of silently looking authoritative
+        let t = Timer { warmup: 0, min_samples: 2, max_samples: 6, cv_target: 0.0 };
+        let mut tick = 0u32;
+        let s = t
+            .measure(|| {
+                tick += 1;
+                std::thread::sleep(std::time::Duration::from_micros(50 * tick as u64));
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(s.n, 6);
+        assert!(!s.converged, "max_samples fallthrough must clear converged");
+        assert!(s.cv() > 0.0, "achieved CV stays readable");
     }
 
     #[test]

@@ -196,6 +196,13 @@ pub(crate) trait BackendExec {
     fn arena(&self) -> Option<ArenaStats> {
         None
     }
+
+    /// Per-step profile accumulated since compile, if the executable was
+    /// compiled with `CompileOptions::profile` and the backend supports
+    /// step timing (today: the native executor).
+    fn profile(&self) -> Option<crate::obs::ExecProfile> {
+        None
+    }
 }
 
 /// Process-facing engine handle (one backend instance, `Arc`-shared).
@@ -334,6 +341,14 @@ impl Compiled {
             hosts.extend(o.to_host_all()?);
         }
         Ok(hosts)
+    }
+
+    /// The per-step/per-site execution profile accumulated across runs —
+    /// `Some` only when compiled with `CompileOptions::profile` on a
+    /// backend that times steps (the native executor). Snapshots; the
+    /// executable keeps accumulating.
+    pub fn profile(&self) -> Option<crate::obs::ExecProfile> {
+        self.raw.profile()
     }
 
     /// Execute with host tensors (convenience / tests).

@@ -30,12 +30,14 @@ pub mod pool;
 mod reference;
 
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use super::graph::Graph;
 use super::passes::ArenaStats;
 use super::{Backend, BackendExec, Buffer, CompileOptions, HostTensor};
+use crate::obs;
 use plan::{ExecPlan, InPlace, Kernel, Step, ValueRef};
 use pool::WorkerPool;
 
@@ -64,10 +66,11 @@ impl Backend for NativeBackend {
         graph: &Graph,
         opts: &CompileOptions,
     ) -> Result<Arc<dyn BackendExec>> {
-        Ok(Arc::new(NativeExecutable::with_verify(
+        Ok(Arc::new(NativeExecutable::with_options(
             graph.clone(),
             opts.resolved_threads(),
             opts.verify,
+            opts.profile,
         )?))
     }
 
@@ -108,6 +111,10 @@ pub struct NativeExecutable {
     /// above-threshold kernel of every run.
     pool: WorkerPool,
     arena: Mutex<Vec<Vec<f32>>>,
+    /// Per-step timing state, present only when compiled with
+    /// `CompileOptions::profile`. `None` keeps the hot path structurally
+    /// identical to an unprofiled build (one branch per run).
+    profile: Option<Mutex<obs::ProfileState>>,
 }
 
 impl NativeExecutable {
@@ -126,10 +133,33 @@ impl NativeExecutable {
     /// can ever execute; a violation aborts compilation with a typed
     /// [`super::verify::VerifyError`] (`pass == "plan"`).
     pub fn with_verify(graph: Graph, threads: usize, verify: bool) -> Result<NativeExecutable> {
+        NativeExecutable::with_options(graph, threads, verify, false)
+    }
+
+    /// `with_verify` plus per-step profiling (`CompileOptions::profile`):
+    /// the executable accumulates an [`obs::ExecProfile`] across runs,
+    /// readable via `BackendExec::profile`. Profiling wraps the unchanged
+    /// kernel calls with clock reads — it cannot change partitioning or
+    /// accumulation order, so outputs stay bitwise identical (regression:
+    /// `tests/obs_profile.rs`).
+    pub fn with_options(
+        graph: Graph,
+        threads: usize,
+        verify: bool,
+        profile: bool,
+    ) -> Result<NativeExecutable> {
+        let t0 = Instant::now();
         let plan = plan::build_plan(&graph)?;
+        if obs::enabled() {
+            obs::event_from(&format!("plan:{}", graph.name), "compile", t0, t0.elapsed());
+        }
         let threads = threads.max(1);
         if verify {
+            let t0 = Instant::now();
             let violations = super::verify::audit_plan(&graph, &plan, threads);
+            if obs::enabled() {
+                obs::event_from(&format!("audit-plan:{}", graph.name), "verify", t0, t0.elapsed());
+            }
             if !violations.is_empty() {
                 return Err(
                     super::verify::VerifyError::new(graph.name.clone(), "plan", violations)
@@ -137,18 +167,41 @@ impl NativeExecutable {
                 );
             }
         }
-        let arena = plan.slot_caps.iter().map(|&c| vec![0f32; c]).collect();
+        let t0 = Instant::now();
+        let arena: Vec<Vec<f32>> = plan.slot_caps.iter().map(|&c| vec![0f32; c]).collect();
+        if obs::enabled() {
+            obs::event_from(&format!("arena:{}", graph.name), "compile", t0, t0.elapsed());
+        }
+        let profile = profile.then(|| Mutex::new(obs::ProfileState::new(plan.steps.len())));
         Ok(NativeExecutable {
             graph,
             plan,
             pool: WorkerPool::new(threads),
             arena: Mutex::new(arena),
+            profile,
         })
     }
 
     /// The plan's buffer-arena accounting.
     pub fn arena_stats(&self) -> &ArenaStats {
         &self.plan.stats
+    }
+
+    /// Snapshot of the per-step profile accumulated since compile —
+    /// `None` unless built with `with_options(.., profile = true)`.
+    pub fn exec_profile(&self) -> Option<obs::ExecProfile> {
+        let state = self.profile.as_ref()?;
+        let st = state.lock().ok()?;
+        Some(obs::ExecProfile {
+            graph: self.graph.name.clone(),
+            meta: self.plan.meta.clone(),
+            runs: st.runs,
+            run_secs: st.run_secs,
+            run_spans: st.run_spans.clone(),
+            steps: st.agg.clone(),
+            samples: st.samples.clone(),
+            chunks: st.chunks.clone(),
+        })
     }
 
     /// Core evaluation over `Arc`'d tensors: parameters are refcount
@@ -178,8 +231,40 @@ impl NativeExecutable {
             .lock()
             .map_err(|_| anyhow!("{}: executor arena poisoned", g.name))?;
         let bufs: &mut [Vec<f32>] = &mut guard[..];
-        for step in &self.plan.steps {
-            self.exec_step(step, args, bufs);
+        match &self.profile {
+            None => {
+                for step in &self.plan.steps {
+                    self.exec_step(step, args, bufs);
+                }
+            }
+            Some(state) => {
+                // Timed variant: same steps, same order, same kernels —
+                // only clock reads around each call. The pool tags chunk
+                // dispatches into lock-free per-chunk slots; everything
+                // is folded into the shared state under ONE lock, here,
+                // after the loop.
+                self.pool.profile_begin();
+                let run_t0 = Instant::now();
+                let run_ts = obs::now_us();
+                let mut samples = Vec::with_capacity(self.plan.steps.len());
+                for (i, step) in self.plan.steps.iter().enumerate() {
+                    self.pool.profile_set_step(i);
+                    let ts = obs::now_us();
+                    let t0 = Instant::now();
+                    self.exec_step(step, args, bufs);
+                    samples.push(obs::StepSample {
+                        step: i,
+                        ts_us: ts,
+                        dur_us: t0.elapsed().as_secs_f64() * 1e6,
+                    });
+                }
+                let dur = run_t0.elapsed().as_secs_f64();
+                let chunks = self.pool.profile_end();
+                let mut st = state
+                    .lock()
+                    .map_err(|_| anyhow!("{}: profile state poisoned", g.name))?;
+                st.record_run(run_ts, dur, samples, chunks);
+            }
         }
         Ok(match self.plan.root {
             ValueRef::Arg(i) => {
@@ -382,6 +467,10 @@ impl BackendExec for NativeExecutable {
 
     fn arena(&self) -> Option<ArenaStats> {
         Some(self.plan.stats.clone())
+    }
+
+    fn profile(&self) -> Option<obs::ExecProfile> {
+        self.exec_profile()
     }
 }
 

@@ -24,6 +24,7 @@ use anyhow::{bail, Result};
 use super::super::graph::{Graph, OpKind};
 use super::super::passes::ArenaStats;
 use super::kernels::{self, GatherAxis, ReduceGeom};
+use crate::obs::StepMeta;
 
 /// Where a node's value lives at execution time.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -166,6 +167,27 @@ pub struct ExecPlan {
     pub root: ValueRef,
     pub root_dims: Vec<usize>,
     pub stats: ArenaStats,
+    /// Profiling attribution, one entry per step (same order). Purely
+    /// descriptive: the executor and the plan auditor never read it.
+    pub meta: Vec<StepMeta>,
+}
+
+/// Display name of a kernel kind for profiles and trace exports.
+pub fn kernel_name(k: &Kernel) -> &'static str {
+    match k {
+        Kernel::ConstFill { .. } => "const",
+        Kernel::Fill => "fill",
+        Kernel::Gather { .. } => "gather",
+        Kernel::Concat { .. } => "concat",
+        Kernel::Slice { .. } => "slice",
+        Kernel::Dot { .. } => "dot",
+        Kernel::Spmm { .. } => "spmm",
+        Kernel::Bin { .. } => "bin",
+        Kernel::BinScalar { .. } => "bin-scalar",
+        Kernel::Unary { .. } => "unary",
+        Kernel::Select => "select",
+        Kernel::Reduce { .. } => "reduce",
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -362,9 +384,37 @@ pub fn build_plan(g: &Graph) -> Result<ExecPlan> {
     }
     remaining[g.root.0] += 1;
 
+    // Profiling attribution: the nearest parameter site feeding each
+    // node, found by a forward scan (parameters tag themselves, every
+    // other node inherits the shallowest tag among its inputs, rightmost
+    // input winning ties — the weight operand of a contraction sits at
+    // depth 1 while the activation chain is deeper, so `conv2.w0`, the
+    // `conv2.s` residual tap and a merged sibling each land on their own
+    // row in `lrdx profile`). Arg 0 is the network input by netbuilder
+    // convention and never originates a tag.
+    let mut site_of: Vec<Option<(String, usize)>> = vec![None; n];
+    for (i, node) in g.nodes.iter().enumerate() {
+        if !live[i] {
+            continue;
+        }
+        let tag = match &node.op {
+            OpKind::Parameter { index, name } if *index > 0 => Some((name.clone(), 0usize)),
+            OpKind::Parameter { .. } => None,
+            _ => node
+                .inputs
+                .iter()
+                .rev()
+                .filter_map(|id| site_of[id.0].clone())
+                .min_by_key(|&(_, d)| d)
+                .map(|(s, d)| (s, d + 1)),
+        };
+        site_of[i] = tag;
+    }
+
     let mut arena = Arena { caps: Vec::new(), refs: Vec::new(), free: Vec::new() };
     let mut values: Vec<Option<ValueRef>> = vec![None; n];
     let mut steps: Vec<Step> = Vec::new();
+    let mut meta: Vec<StepMeta> = Vec::new();
     let mut params: Vec<ParamCheck> = Vec::new();
     let mut naive_bytes = 0usize;
     let mut in_place_steps = 0usize;
@@ -670,6 +720,27 @@ pub fn build_plan(g: &Graph) -> Result<ExecPlan> {
         }
         arena.refs[out] += remaining[i];
         values[i] = Some(ValueRef::Slot(out));
+        // Attribution rides beside the step (never inside it): analytic
+        // MACs for the contractions, bytes moved, and the lane-gated
+        // dimension the cost model tiles over.
+        let (macs, gate) = match &kernel {
+            Kernel::Dot { n, k, .. } => (out_len * *k, *n),
+            Kernel::Spmm { m, col_idx, .. } => {
+                (col_idx.len() * (out_len / (*m).max(1)), 1)
+            }
+            _ => (0, 0),
+        };
+        meta.push(StepMeta {
+            node: i,
+            op: kernel_name(&kernel),
+            site: site_of[i]
+                .as_ref()
+                .map(|(s, _)| s.clone())
+                .unwrap_or_else(|| "(activations)".into()),
+            macs,
+            bytes: (ins.iter().map(|&(_, l)| l).sum::<usize>() + out_len) * 4,
+            gate,
+        });
         steps.push(Step { kernel, ins, out, out_len });
     }
 
@@ -688,5 +759,6 @@ pub fn build_plan(g: &Graph) -> Result<ExecPlan> {
         root,
         root_dims: g.nodes[g.root.0].dims.clone(),
         stats,
+        meta,
     })
 }

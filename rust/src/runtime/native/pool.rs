@@ -24,8 +24,19 @@
 //! workers are caught, counted and re-thrown on the caller) — the borrow
 //! therefore always outlives its uses.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+
+use crate::obs;
+
+thread_local! {
+    /// Which pool lane this thread is: 0 for any caller thread, `1..`
+    /// for spawned workers (set once at spawn). Only read while
+    /// profiling, to tag chunk events with the lane that ran them.
+    static POOL_LANE: Cell<usize> = const { Cell::new(0) };
+}
 
 /// Type-erased pointer to the job closure. Only ever dereferenced while
 /// the issuing `run` call is blocked waiting for completion.
@@ -73,6 +84,14 @@ pub struct WorkerPool {
     handles: std::sync::Mutex<Vec<JoinHandle<()>>>,
     spawned: std::sync::atomic::AtomicBool,
     threads: usize,
+    /// Chunk-event tagging, driven by the profiled executor between
+    /// `profile_begin`/`profile_end`. When off (always, unless the owning
+    /// executable was compiled with `CompileOptions::profile`) the only
+    /// cost on the dispatch path is one relaxed atomic load per
+    /// fanned-out job; the serial/inline path doesn't even pay that.
+    prof_on: AtomicBool,
+    prof_step: AtomicUsize,
+    prof_events: Mutex<Vec<obs::ChunkEvent>>,
 }
 
 impl WorkerPool {
@@ -97,6 +116,9 @@ impl WorkerPool {
             handles: std::sync::Mutex::new(Vec::new()),
             spawned: std::sync::atomic::AtomicBool::new(false),
             threads: threads.max(1),
+            prof_on: AtomicBool::new(false),
+            prof_step: AtomicUsize::new(0),
+            prof_events: Mutex::new(Vec::new()),
         }
     }
 
@@ -112,15 +134,17 @@ impl WorkerPool {
     }
 
     fn ensure_spawned(&self) {
-        use std::sync::atomic::Ordering;
         if self.spawned.load(Ordering::Acquire) {
             return;
         }
         let mut handles = self.handles.lock().expect("pool handles lock");
         if handles.is_empty() {
-            for _ in 1..self.threads {
+            for lane in 1..self.threads {
                 let shared = Arc::clone(&self.shared);
-                handles.push(std::thread::spawn(move || worker_loop(&shared)));
+                handles.push(std::thread::spawn(move || {
+                    POOL_LANE.with(|l| l.set(lane));
+                    worker_loop(&shared)
+                }));
             }
         }
         self.spawned.store(true, Ordering::Release);
@@ -139,6 +163,62 @@ impl WorkerPool {
             }
             return;
         }
+        if self.prof_on.load(Ordering::Relaxed) {
+            self.run_profiled(chunks, f);
+            return;
+        }
+        self.dispatch(chunks, f);
+    }
+
+    /// Enable chunk-event tagging for subsequent fanned-out jobs (called
+    /// by the profiled executor before its step loop).
+    pub(crate) fn profile_begin(&self) {
+        self.prof_on.store(true, Ordering::Relaxed);
+    }
+
+    /// Tag subsequent chunk events with this plan-step index.
+    pub(crate) fn profile_set_step(&self, step: usize) {
+        self.prof_step.store(step, Ordering::Relaxed);
+    }
+
+    /// Disable tagging and take the events recorded since
+    /// `profile_begin`.
+    pub(crate) fn profile_end(&self) -> Vec<obs::ChunkEvent> {
+        self.prof_on.store(false, Ordering::Relaxed);
+        std::mem::take(&mut *self.prof_events.lock().expect("pool profile events"))
+    }
+
+    /// The profiled fan-out: wrap `f` so each chunk records (lane, t0,
+    /// duration) into its own pre-allocated `OnceLock` slot — lock-free
+    /// on the kernel path — then push them into the event buffer once,
+    /// after the completion barrier. The wrapper calls `f(ci)` with the
+    /// exact same chunk indices the plain path would, so partitioning
+    /// and accumulation order (the bitwise-determinism contract) are
+    /// untouched.
+    fn run_profiled(&self, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        let step = self.prof_step.load(Ordering::Relaxed);
+        let recs: Vec<OnceLock<(usize, f64, f64)>> =
+            (0..chunks).map(|_| OnceLock::new()).collect();
+        let wrapped = |ci: usize| {
+            let ts = obs::now_us();
+            let t0 = std::time::Instant::now();
+            f(ci);
+            let dur = t0.elapsed().as_secs_f64() * 1e6;
+            let lane = POOL_LANE.with(|l| l.get());
+            let _ = recs[ci].set((lane, ts, dur));
+        };
+        self.dispatch(chunks, &wrapped);
+        let mut ev = self.prof_events.lock().expect("pool profile events");
+        for (ci, r) in recs.iter().enumerate() {
+            if let Some(&(lane, ts_us, dur_us)) = r.get() {
+                ev.push(obs::ChunkEvent { step, chunk: ci, lane, ts_us, dur_us });
+            }
+        }
+    }
+
+    /// The fan-out machinery shared by the plain and profiled paths:
+    /// publish, participate, barrier, retire.
+    fn dispatch(&self, chunks: usize, f: &(dyn Fn(usize) + Sync)) {
         self.ensure_spawned();
         // Publish the job. The raw pointer stays valid until we observe
         // pending == 0 below, which is after the last dereference.
@@ -312,6 +392,32 @@ mod tests {
             });
         }
         assert_eq!(total.load(Ordering::SeqCst), 2000 * (1 + 2 + 3 + 4));
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // clock reads are unsupported under isolation
+    fn profiled_run_tags_every_chunk() {
+        let pool = WorkerPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        pool.profile_begin();
+        pool.profile_set_step(7);
+        pool.run(8, &|ci| {
+            hits[ci].fetch_add(1, Ordering::SeqCst);
+        });
+        let events = pool.profile_end();
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        assert_eq!(events.len(), 8, "one event per chunk");
+        let mut seen = vec![false; 8];
+        for e in &events {
+            assert_eq!(e.step, 7);
+            assert!(e.lane < 3, "lane {} out of range", e.lane);
+            assert!(e.dur_us >= 0.0);
+            seen[e.chunk] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "every chunk tagged");
+        // tagging off again: plain dispatch records nothing
+        pool.run(4, &|_| {});
+        assert!(pool.profile_end().is_empty());
     }
 
     #[test]

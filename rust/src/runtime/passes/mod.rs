@@ -38,6 +38,7 @@ use anyhow::{bail, Result};
 
 use super::graph::Graph;
 use super::verify::{self, VerifyError, VerifyStats};
+use crate::obs;
 
 /// How aggressively `Engine::compile` rewrites the IR.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
@@ -106,6 +107,15 @@ pub struct CompileOptions {
     /// keeping the serving hot path free of the O(nodes) per-pass scan.
     /// The CLI `--verify` flag overrides either way.
     pub verify: bool,
+    /// Record a per-step execution profile on the compiled executable
+    /// (`Compiled::profile`): wall time, analytic MACs and bytes per plan
+    /// step, attributed back to graph node, op kind and parameter site,
+    /// plus per-chunk worker-pool dispatch events. Off by default — the
+    /// unprofiled run path is structurally unchanged (one branch per
+    /// run). Profiling never changes outputs: it only wraps the same
+    /// kernel calls with clock reads (`tests/obs_profile.rs` pins this
+    /// bitwise). The CLI `--profile` flag and `lrdx profile` set it.
+    pub profile: bool,
 }
 
 impl Default for CompileOptions {
@@ -116,6 +126,7 @@ impl Default for CompileOptions {
             threads: 1,
             amortize: None,
             verify: cfg!(debug_assertions),
+            profile: false,
         }
     }
 }
@@ -134,7 +145,9 @@ impl CompileOptions {
     /// `netbuilder::ServableNet`'s bucket ladder). `verify` is
     /// deliberately absent: it changes what is checked, never what is
     /// compiled, so verified and unverified compiles may share a cache
-    /// entry.
+    /// entry. `profile` is absent for the same reason — it changes what
+    /// is *measured*, never what is computed (and profiled outputs are
+    /// bitwise identical to unprofiled ones).
     pub fn cache_key(&self) -> String {
         let amort = match self.amortize {
             Some((b, ceil)) => format!("a{b}-{ceil}"),
@@ -311,7 +324,11 @@ fn check_after(
     }
     vs.passes_checked += 1;
     vs.violations += violations.len();
-    vs.wall_secs += t0.elapsed().as_secs_f64();
+    let wall = t0.elapsed();
+    vs.wall_secs += wall.as_secs_f64();
+    if obs::enabled() {
+        obs::event_from(&format!("verify:{pass}"), "verify", t0, wall);
+    }
     if violations.is_empty() {
         Ok(())
     } else {
@@ -329,6 +346,7 @@ pub fn run_pipeline_seg(
     opts: &CompileOptions,
     boundary: Option<usize>,
 ) -> Result<(Graph, PassStats)> {
+    let _sp = obs::span_with(|| format!("pipeline:{}", graph.name), "compile");
     let t0 = Instant::now();
     let n0 = graph.nodes.len();
     let mut stats = PassStats {
@@ -420,12 +438,14 @@ fn record_pass(
     traced: &cleanup::Traced,
     t0: Instant,
 ) {
+    let wall = t0.elapsed();
+    obs::event_from(name, "pass", t0, wall);
     stats.passes.push(PassRecord {
         name,
         nodes_before,
         nodes_after: traced.graph.nodes.len(),
         rewrites: traced.rewrites,
-        wall_secs: t0.elapsed().as_secs_f64(),
+        wall_secs: wall.as_secs_f64(),
     });
 }
 

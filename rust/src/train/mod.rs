@@ -325,6 +325,7 @@ impl NativeTrainSession {
 
     /// One SGD+momentum step on a host batch. Returns (loss, accuracy).
     pub fn step(&mut self, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let _sp = crate::obs::span("train-step", "train");
         let (b, hw, k) = (self.layout.batch, self.layout.hw, self.layout.classes);
         if x.len() != b * 3 * hw * hw || y.len() != b {
             bail!("bad batch shapes: x={} y={}", x.len(), y.len());

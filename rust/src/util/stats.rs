@@ -13,6 +13,12 @@ pub struct Summary {
     pub p99: f64,
     /// trimmed mean over the middle 80% — the profiler's primary statistic
     pub trimmed_mean: f64,
+    /// Did the measurement loop that produced this summary reach its
+    /// steady-state criterion? `Summary::of` sets `true`;
+    /// `profiler::Timer::measure` clears it when `max_samples` ran out
+    /// before the CV target was met (the achieved CV stays readable via
+    /// [`Summary::cv`]).
+    pub converged: bool,
 }
 
 impl Summary {
@@ -36,6 +42,7 @@ impl Summary {
             p90: percentile(&s, 0.90),
             p99: percentile(&s, 0.99),
             trimmed_mean: mid.iter().sum::<f64>() / mid.len() as f64,
+            converged: true,
         }
     }
 

@@ -1,0 +1,154 @@
+//! Observability contract suite (DESIGN.md §Observability).
+//!
+//! 1. profiling is measurement-only: turning `CompileOptions::profile`
+//!    on must not change a single output bit, at any thread count or
+//!    opt level, for any decomposition variant;
+//! 2. the executor profile is a well-formed span tree: every step span
+//!    closed, step time nests inside (sums to no more than) the run
+//!    span, chunk events point at real steps;
+//! 3. the Chrome trace export is valid JSON that round-trips through
+//!    our own parser with every required trace-event field present.
+
+use lrdx::decompose::{plan_variant, plan_variant_with, Plan, SchemeFamily, Variant};
+use lrdx::model::Arch;
+use lrdx::obs;
+use lrdx::runtime::netbuilder::BuiltNet;
+use lrdx::runtime::{CompileOptions, Engine, OptLevel};
+use lrdx::util::det_input;
+use lrdx::util::json::Json;
+
+const BATCH: usize = 2;
+const HW: usize = 16;
+
+fn arch() -> Arch {
+    Arch::by_name("resnet-mini").unwrap()
+}
+
+/// The four paper variants the profiler table reports.
+fn plans() -> Vec<(&'static str, Plan)> {
+    let a = arch();
+    vec![
+        ("orig", plan_variant(&a, Variant::Orig, 2.0, 2, None).unwrap()),
+        ("lrd", plan_variant(&a, Variant::Lrd, 2.0, 2, None).unwrap()),
+        ("tucker2", plan_variant(&a, Variant::Tucker2, 2.0, 2, None).unwrap()),
+        (
+            "chain+S",
+            plan_variant_with(
+                &a,
+                Variant::Lrd,
+                SchemeFamily::Svd,
+                2.0,
+                2,
+                None,
+                Some(50_000),
+            )
+            .unwrap(),
+        ),
+    ]
+}
+
+fn run_bits(plan: &Plan, threads: usize, profile: bool, level: OptLevel) -> Vec<u32> {
+    let engine = Engine::native();
+    let opts = CompileOptions { threads, profile, opt_level: level, ..Default::default() };
+    let net = BuiltNet::compile(&engine, &arch(), plan, BATCH, HW, 0xD7, &opts).unwrap();
+    let x = det_input(BATCH, HW);
+    let xb = engine.upload(&x, &[BATCH, 3, HW, HW]).unwrap();
+    let out = net.forward(&xb).unwrap().to_host().unwrap();
+    out.data.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn profiling_is_bitwise_invisible() {
+    for (label, plan) in &plans() {
+        for level in [OptLevel::O0, OptLevel::O2] {
+            let want = run_bits(plan, 1, false, level);
+            for threads in [1usize, 4] {
+                for profile in [false, true] {
+                    let got = run_bits(plan, threads, profile, level);
+                    assert_eq!(
+                        want,
+                        got,
+                        "{label}/{}/t{threads}/profile={profile} changed output bits",
+                        level.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn exec_profile_spans_are_well_formed() {
+    let engine = Engine::native();
+    let plan = plan_variant(&arch(), Variant::Lrd, 2.0, 2, None).unwrap();
+    let opts = CompileOptions { threads: 2, profile: true, ..Default::default() };
+    let net = BuiltNet::compile(&engine, &arch(), &plan, BATCH, HW, 0xD7, &opts).unwrap();
+    let x = det_input(BATCH, HW);
+    let xb = engine.upload(&x, &[BATCH, 3, HW, HW]).unwrap();
+    for _ in 0..3 {
+        net.forward(&xb).unwrap().sync().unwrap();
+    }
+    let p = net.exe.profile().expect("profile was requested at compile");
+    assert_eq!(p.runs, 3);
+    assert_eq!(p.run_spans.len(), 3, "every run span recorded below the cap");
+    assert_eq!(p.steps.len(), p.meta.len(), "one aggregate per plan step");
+    assert!(p.steps.iter().all(|a| a.calls == 3), "each step ran once per run");
+    // every span closed with a sane duration
+    assert!(p.samples.iter().all(|s| s.dur_us >= 0.0 && s.dur_us.is_finite()));
+    assert!(p.run_spans.iter().all(|&(ts, dur)| ts >= 0.0 && dur >= 0.0));
+    // run spans are ordered in time
+    for w in p.run_spans.windows(2) {
+        assert!(w[1].0 >= w[0].0, "run spans out of order: {:?}", p.run_spans);
+    }
+    // step spans nest inside the run span: their sum cannot exceed the
+    // measured run wall time (and should account for most of it)
+    assert!(
+        p.step_secs() <= p.run_secs + 1e-9,
+        "step spans ({}) exceed run span ({})",
+        p.step_secs(),
+        p.run_secs
+    );
+    let cov = p.coverage();
+    assert!((0.5..=1.0 + 1e-9).contains(&cov), "coverage {cov} out of range");
+    // chunk events reference real steps and closed cleanly
+    assert!(p.chunks.iter().all(|c| c.step < p.meta.len() && c.dur_us >= 0.0));
+    // attribution: a decomposed net must charge steps to parameter sites
+    assert!(p.meta.iter().any(|m| m.site != "(activations)"));
+    assert!(p.meta.iter().any(|m| m.macs > 0), "dot steps carry analytic MACs");
+}
+
+#[test]
+fn chrome_trace_round_trips_and_is_loadable() {
+    let engine = Engine::native();
+    let plan = plan_variant(&arch(), Variant::Lrd, 2.0, 2, None).unwrap();
+    let opts = CompileOptions { threads: 2, profile: true, ..Default::default() };
+    let net = BuiltNet::compile(&engine, &arch(), &plan, BATCH, HW, 0xD7, &opts).unwrap();
+    let x = det_input(BATCH, HW);
+    let xb = engine.upload(&x, &[BATCH, 3, HW, HW]).unwrap();
+    net.forward(&xb).unwrap().sync().unwrap();
+    let p = net.exe.profile().unwrap();
+    let events = p.trace_events();
+    assert!(!events.is_empty());
+    let text = obs::chrome_trace(&events).render();
+    let parsed = Json::parse(&text).expect("trace export must be valid JSON");
+    let arr = parsed.get("traceEvents").unwrap().arr().unwrap();
+    assert_eq!(arr.len(), events.len());
+    for e in arr {
+        // the complete-event shape Perfetto/chrome://tracing require
+        assert_eq!(e.get("ph").unwrap().str().unwrap(), "X");
+        assert!(!e.get("name").unwrap().str().unwrap().is_empty());
+        assert!(e.get("ts").unwrap().num().unwrap() >= 0.0);
+        assert!(e.get("dur").unwrap().num().unwrap() >= 0.0);
+        e.get("pid").unwrap().num().unwrap();
+        e.get("tid").unwrap().num().unwrap();
+        e.get("cat").unwrap().str().unwrap();
+    }
+    // step rows carry their attribution: named op:site, step + MACs args
+    let step = arr
+        .iter()
+        .find(|e| e.get("cat").unwrap().str().unwrap() == "step")
+        .expect("at least one step row");
+    assert!(step.get("name").unwrap().str().unwrap().contains(':'));
+    step.get("args").unwrap().get("step").unwrap().num().unwrap();
+    step.get("args").unwrap().get("macs").unwrap().num().unwrap();
+}
