@@ -2,16 +2,25 @@
 //! prices the planned arena executor against the seed's per-node
 //! interpreter (`run_reference`): forward latency and throughput per
 //! variant × executor × thread count × batch on the same O0 graphs, so
-//! the delta is purely plan + arena + tiled parallel kernels. Emits
-//! `BENCH_native.json`; `--smoke` runs a single-iteration subset with
-//! the same schema (the CI schema gate).
+//! the delta is purely plan + arena + tiled parallel kernels. Also
+//! sweeps the raw GEMM kernels (scalar `dot_scalar` baseline vs the
+//! packed BLIS-style path, threads {1, 4}, autotuned tile) into a
+//! per-shape GFLOP/s table — the standing measurement behind the
+//! `PAR_MIN_MACS`/`PACK_MIN_MACS` thresholds and the cost model's lane
+//! constants. Emits `BENCH_native.json` (`rows` + `gemm` sections);
+//! `--smoke` runs a single-iteration subset with the same schema (the
+//! CI schema gate asserts packed ≥ 2× scalar on the large square shape
+//! and no regression on the small ones).
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use lrdx::decompose::{plan_variant, Variant};
 use lrdx::model::Arch;
 use lrdx::profiler::Timer;
-use lrdx::runtime::native::NativeExecutable;
+use lrdx::runtime::native::kernels::{self, TileConfig};
+use lrdx::runtime::native::pool::WorkerPool;
+use lrdx::runtime::native::{autotune, NativeExecutable};
 use lrdx::runtime::netbuilder::build_forward;
 use lrdx::runtime::HostTensor;
 use lrdx::util::json::Json;
@@ -47,6 +56,74 @@ struct Row {
     speedup: f64,
     arena_peak: usize,
     arena_naive: usize,
+}
+
+struct GemmRow {
+    m: usize,
+    n: usize,
+    k: usize,
+    threads: usize,
+    scalar_gflops: f64,
+    packed_gflops: f64,
+    tile: String,
+}
+
+/// Best-of-`reps` per-call wall time for `f`, each rep averaging over
+/// `iters` back-to-back calls (one untimed warmup call first).
+fn time_best(reps: usize, iters: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        best = best.min(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    best
+}
+
+/// Raw-kernel GFLOP/s sweep: `dot_scalar` baseline vs the packed
+/// microkernel at the autotuner's chosen tile. The small shapes sit
+/// just above `PACK_MIN_MACS` (the planner's packing threshold, so
+/// they are the worst case the packed path ships on), the large square
+/// is the CI 2x acceptance gate, and the m=1 row drives the
+/// tall-skinny column-panel partition.
+fn gemm_sweep(smoke: bool) -> Vec<GemmRow> {
+    let shapes: &[(usize, usize, usize)] =
+        &[(48, 48, 48), (64, 64, 64), (256, 256, 256), (1, 4096, 256)];
+    let reps = if smoke { 2 } else { 4 };
+    let mut rows = Vec::new();
+    for &(m, n, k) in shapes {
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 13) as f32 * 0.25 - 1.5).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 7) as f32 * 0.5 - 1.0).collect();
+        let mut out = vec![0f32; m * n];
+        let mut a_pack = vec![0f32; kernels::packed_a_len(m, k)];
+        let mut b_pack = vec![0f32; kernels::packed_b_len(n, k)];
+        let tile: TileConfig = autotune::choose(m, n, k);
+        let macs = m * n * k;
+        // Enough inner iterations to push each rep past timer noise.
+        let iters = (8 * 1024 * 1024 / macs).clamp(1, 256);
+        for &threads in &[1usize, 4] {
+            let pool = WorkerPool::new(threads);
+            let scalar_secs =
+                time_best(reps, iters, || kernels::dot_scalar(&a, &b, n, k, &mut out, &pool));
+            let packed_secs = time_best(reps, iters, || {
+                kernels::dot_packed(&a, &b, n, k, &mut out, &pool, tile, &mut a_pack, &mut b_pack)
+            });
+            let flops = 2.0 * macs as f64;
+            rows.push(GemmRow {
+                m,
+                n,
+                k,
+                threads,
+                scalar_gflops: flops / scalar_secs / 1e9,
+                packed_gflops: flops / packed_secs / 1e9,
+                tile: tile.key(),
+            });
+        }
+    }
+    rows
 }
 
 fn main() {
@@ -137,6 +214,26 @@ fn main() {
         }
     }
 
+    println!("\ngemm kernel sweep: scalar baseline vs packed (autotuned tile)");
+    println!(
+        "{:>5} {:>5} {:>5} {:>7} {:>14} {:>14} {:>7} {:>14}",
+        "m", "n", "k", "threads", "scalar GF/s", "packed GF/s", "ratio", "tile"
+    );
+    let gemm = gemm_sweep(smoke);
+    for g in &gemm {
+        println!(
+            "{:>5} {:>5} {:>5} {:>7} {:>14.2} {:>14.2} {:>6.2}x {:>14}",
+            g.m,
+            g.n,
+            g.k,
+            g.threads,
+            g.scalar_gflops,
+            g.packed_gflops,
+            g.packed_gflops / g.scalar_gflops,
+            g.tile
+        );
+    }
+
     let jrows: Vec<Json> = rows
         .iter()
         .map(|r| {
@@ -153,11 +250,27 @@ fn main() {
             ])
         })
         .collect();
+    let jgemm: Vec<Json> = gemm
+        .iter()
+        .map(|g| {
+            Json::obj_from(vec![
+                ("m", Json::Num(g.m as f64)),
+                ("n", Json::Num(g.n as f64)),
+                ("k", Json::Num(g.k as f64)),
+                ("threads", Json::Num(g.threads as f64)),
+                ("scalar_gflops", Json::Num(g.scalar_gflops)),
+                ("packed_gflops", Json::Num(g.packed_gflops)),
+                ("speedup", Json::Num(g.packed_gflops / g.scalar_gflops)),
+                ("tile", Json::Str(g.tile.clone())),
+            ])
+        })
+        .collect();
     let doc = Json::obj_from(vec![
         ("arch", Json::Str(arch.name.to_string())),
         ("hw", Json::Num(hw as f64)),
         ("smoke", Json::Bool(smoke)),
         ("rows", Json::Arr(jrows)),
+        ("gemm", Json::Arr(jgemm)),
     ]);
     std::fs::write("BENCH_native.json", doc.render()).expect("write BENCH_native.json");
     println!("(saved BENCH_native.json)");

@@ -25,7 +25,7 @@ use lrdx::profiler::Timer;
 use lrdx::runtime::artifacts::{ArtifactLibrary, ForwardModel, TrainSession};
 use lrdx::runtime::layer_factory::EngineLayerTimer;
 use lrdx::runtime::netbuilder::{pow2_ladder, ServableNet};
-use lrdx::runtime::{CompileOptions, Engine, OptLevel};
+use lrdx::runtime::{CompileOptions, Engine, OptLevel, TileConfig};
 use lrdx::trainsim::{self, data::SynthData};
 use lrdx::util::cli::Args;
 use lrdx::util::rng::Rng;
@@ -124,6 +124,15 @@ flags: --artifacts DIR  --reports DIR  --arch NAME  --hw N  --batch N
                           debug builds, off in release). distinct from the
                           `verify` command, which replays artifact numerics
        --lane N           lane width for the re-merge profitability gate
+       --tile MRxNRxKBxNB pin one packed-GEMM register tile + blocking for
+                          every large contraction (e.g. 8x16x128x256);
+                          performance-only — any tile gives bitwise-
+                          identical outputs. Overrides the autotuner
+       --no-autotune      skip compile-time tile autotuning (on by default
+                          in the CLI: the first compile of each (M,N,K)
+                          shape bucket times the candidate tiles once and
+                          caches the winner process-wide). With this flag
+                          every contraction uses the fixed default tile
        --threads N        native executor kernel threads (bench/rank-search
                           default 1; 0 = auto). serve defaults to auto and
                           treats N as the TOTAL budget, split across models
@@ -162,6 +171,10 @@ fn compile_opts(args: &Args) -> Result<CompileOptions> {
             other => bail!("--verify expects on/off (or true/false), got {other:?}"),
         },
     };
+    let tile = match args.get("tile") {
+        Some(s) => Some(TileConfig::parse(s).map_err(|e| anyhow!(e))?),
+        None => None,
+    };
     Ok(CompileOptions {
         opt_level,
         lane,
@@ -169,6 +182,10 @@ fn compile_opts(args: &Args) -> Result<CompileOptions> {
         amortize: None,
         verify,
         profile: args.bool("profile") || args.get("trace").is_some(),
+        tile,
+        // CLI compiles are long-lived (serve ladders, bench sweeps), so
+        // autotuning pays for itself; library/test compiles default off.
+        autotune: !args.bool("no-autotune"),
     })
 }
 
@@ -826,12 +843,27 @@ fn cmd_profile(args: &Args) -> Result<()> {
                 sites.len()
             ));
         }
+        // per-kernel throughput attribution: one row per op kind, the
+        // measured GFLOP/s of everything the kernel executed
+        let jops: Vec<Json> = p
+            .by_op()
+            .iter()
+            .map(|o| {
+                Json::obj_from(vec![
+                    ("op", Json::Str(o.op.into())),
+                    ("ms_per_run", Json::Num(o.ms_per_run(p.runs))),
+                    ("gflops", Json::Num(o.gflops())),
+                    ("macs", Json::Num(o.macs_total as f64)),
+                ])
+            })
+            .collect();
         jrows.push(Json::obj_from(vec![
             ("variant", Json::Str(label.to_string())),
             ("runs", Json::Num(p.runs as f64)),
             ("ms_per_run", Json::Num(p.run_secs / p.runs.max(1) as f64 * 1e3)),
             ("coverage", Json::Num(p.coverage())),
             ("arena_peak_bytes", Json::Num(arena as f64)),
+            ("ops", Json::Arr(jops)),
             ("sites", Json::Arr(jsites)),
         ]));
     }
@@ -848,6 +880,29 @@ fn cmd_profile(args: &Args) -> Result<()> {
                 copts.lane,
             )),
             None => notes.push(format!("calibration[{op}]: no usable points")),
+        }
+    }
+
+    // Second, independent calibration source: the tile autotuner's
+    // candidate sweeps (populated whenever compiles ran with tuning on —
+    // the CLI default). These rates come from dedicated serial timing
+    // rather than profiled step wall time, so agreement between the two
+    // fits is itself a sanity check on the cost model.
+    let tuned = lrdx::runtime::native::autotune::points();
+    if !tuned.is_empty() {
+        let pts: Vec<(usize, f64)> = tuned.iter().map(|p| (p.n, p.gflops * 1e9)).collect();
+        if let Some((lane, peak, resid)) = cost::fit_effective_lane(&pts) {
+            notes.push(format!(
+                "autotune: {} shape bucket(s) timed; effective lane {lane} at \
+                 {:.2} GFLOP/s serial peak (rel residual {resid:.2}); winners: {}",
+                tuned.len(),
+                peak / 1e9,
+                tuned
+                    .iter()
+                    .map(|p| format!("{}x{}x{}:{}", p.m, p.n, p.k, p.cfg.key()))
+                    .collect::<Vec<_>>()
+                    .join(" "),
+            ));
         }
     }
 

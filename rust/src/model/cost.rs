@@ -214,8 +214,13 @@ pub fn report(arch: &Arch, plan: &Plan, hw: usize) -> CostReport {
 ///
 /// This is the mechanism behind the paper's Fig. 2 cliff (rank 257 -> 256 =
 /// +15% throughput on CUDA tiles) and behind our TPU adaptation (MXU lane
-/// width 128; DESIGN.md §Hardware-Adaptation). On XLA:CPU the effective
-/// lane is the AVX vector width x unroll (8/16 f32).
+/// width 128; DESIGN.md §Hardware-Adaptation). On the native backend the
+/// lane is no longer an assumption: the packed microkernel's register
+/// tile (`native::kernels::TileConfig`, NR = 8 or 16 f32 lanes) is the
+/// physical tile this curve models, and the autotuner's candidate sweeps
+/// plus `lrdx profile`'s [`fit_effective_lane`] recover the *achieved*
+/// lane per machine (see the `gemm` section of `BENCH_native.json` for
+/// the standing measurement).
 pub fn tile_efficiency(dim: usize, lane: usize) -> f64 {
     if dim == 0 {
         return 0.0;
@@ -235,6 +240,13 @@ pub fn rank_efficiency(r: usize, lane: usize) -> f64 {
 /// the chain is contracted back to a dense weight the residual rides the
 /// activation tile the contraction already streams, halving its price —
 /// the asymmetry the three-way re-merge gate trades on.
+///
+/// Re-measured against the vectorized kernels (PR 10): `spmm_rows`' dense
+/// axpy now uses the same 8-wide lane primitive as the packed GEMM
+/// (`kernels::axpy_lanes`), so both sides of the ratio vectorize equally
+/// and the lane/2-vs-lane asymmetry — which comes from the *gather*, not
+/// the multiply — is unchanged. The nnz = 288 flip point pinned in
+/// `runtime::passes::remerge` therefore stands.
 pub fn spmm_unit_cost(lane: usize, merged: bool) -> f64 {
     let lane = lane.max(1) as f64;
     if merged {

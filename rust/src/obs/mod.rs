@@ -426,6 +426,42 @@ impl ExecProfile {
         v
     }
 
+    /// Group step aggregates by op kind alone, heaviest first — the
+    /// per-kernel throughput attribution (`SiteAgg::gflops` on a "dot"
+    /// row is the measured packed-GEMM rate, on "spmm" the CSR rate, and
+    /// so on), with `site` carrying the op name. `lrdx profile`'s
+    /// lane-fit calibration consumes the same grouping.
+    pub fn by_op(&self) -> Vec<SiteAgg> {
+        let mut map: BTreeMap<&'static str, SiteAgg> = BTreeMap::new();
+        for (i, m) in self.meta.iter().enumerate() {
+            let Some(a) = self.steps.get(i) else { continue };
+            if a.calls == 0 {
+                continue;
+            }
+            let e = map.entry(m.op).or_insert_with(|| SiteAgg {
+                site: m.op.to_string(),
+                op: m.op,
+                steps: 0,
+                calls: 0,
+                total_secs: 0.0,
+                macs_total: 0,
+                bytes_total: 0,
+                gate: 0,
+            });
+            e.steps += 1;
+            e.calls += a.calls;
+            e.total_secs += a.total_secs;
+            e.macs_total += m.macs as u64 * a.calls;
+            e.bytes_total += m.bytes as u64 * a.calls;
+            e.gate = e.gate.max(m.gate);
+        }
+        let mut v: Vec<SiteAgg> = map.into_values().collect();
+        v.sort_by(|a, b| {
+            b.total_secs.partial_cmp(&a.total_secs).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        v
+    }
+
     /// Render the profile as complete trace events (runs, steps, chunks)
     /// for merging into a Chrome trace export.
     pub fn trace_events(&self) -> Vec<TraceEvent> {

@@ -43,6 +43,8 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use graph::Graph;
+pub use native::kernels::TileConfig;
+pub use native::TunePolicy;
 pub use passes::{
     resolve_threads, ArenaStats, CompileOptions, OptLevel, PassRecord, PassStats,
     TrainSegments,

@@ -1,0 +1,183 @@
+//! Compile-time tile autotuning for the packed GEMM path.
+//!
+//! When a shape class (a power-of-two (M, N, K) bucket, the same
+//! bucketing idea the serve ladder uses) first appears during
+//! `Engine::compile` with tuning enabled, [`choice`] times every
+//! [`TileConfig::CANDIDATES`] entry on a capped stand-in problem and
+//! caches the winner in a process-global table — later compiles of any
+//! shape in the bucket reuse the measurement for free.
+//!
+//! The choice is **performance-only state**: every tile config produces
+//! bitwise-identical output (see `kernels::dot_packed`), so the cache
+//! is keyed and stored exactly like the serve bucket ladder's compiled
+//! artifacts — outside anything that feeds bitwise-identity checks, and
+//! deliberately excluded from `CompileOptions::cache_key`.
+//!
+//! The measured GFLOP/s double as calibration data: [`points`] exposes
+//! `(gate_dim, rate)` pairs that `model::cost::fit_effective_lane`
+//! turns into this machine's effective lane width, replacing the
+//! paper-cited lane assumptions in `model::cost` with measurements.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::kernels::{dot_packed, packed_a_len, packed_b_len, TileConfig};
+use super::pool::WorkerPool;
+
+/// How a compiled executable picks tile configs for packed `Dot` steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TunePolicy {
+    /// Use [`TileConfig::DEFAULT`] everywhere (library default: no
+    /// timing work at compile, fully deterministic compile times).
+    Off,
+    /// Time the candidate set per shape bucket at compile and use each
+    /// bucket's winner (the CLI default).
+    Auto,
+    /// Force one config for every packed step (`--tile MRxNRxKBxNB`).
+    Fixed(TileConfig),
+}
+
+/// One autotuned bucket: the winning config and its measured rate.
+#[derive(Clone, Copy, Debug)]
+pub struct Choice {
+    pub cfg: TileConfig,
+    /// Winner's serial throughput on the stand-in problem, GFLOP/s.
+    pub gflops: f64,
+}
+
+/// A calibration sample for `cost::fit_effective_lane`: the bucket's
+/// gate dimension (N — the dimension the register tile vectorizes
+/// over) and the measured rate at that dimension.
+#[derive(Clone, Copy, Debug)]
+pub struct TunePoint {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub cfg: TileConfig,
+    pub gflops: f64,
+}
+
+type Bucket = (u32, u32, u32);
+
+fn cache() -> &'static Mutex<HashMap<Bucket, Choice>> {
+    static CACHE: OnceLock<Mutex<HashMap<Bucket, Choice>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Power-of-two shape bucket, clamped so degenerate dims stay valid.
+fn bucket_dim(d: usize) -> u32 {
+    d.clamp(1, 1 << 20).next_power_of_two() as u32
+}
+
+/// Timing dims are capped: a 4096³ bucket measures the same microkernel
+/// behaviour at 256³ in a fraction of the time (both stream KB×NB
+/// blocks through the same register tile), and compile latency stays
+/// bounded no matter what shape first hits a bucket.
+const TIME_DIM_CAP: usize = 256;
+
+/// The autotuned choice for an (m, n, k) contraction — cached per
+/// bucket, timed on first appearance.
+pub fn choice(m: usize, n: usize, k: usize) -> Choice {
+    let key = (bucket_dim(m), bucket_dim(n), bucket_dim(k));
+    if let Ok(g) = cache().lock() {
+        if let Some(c) = g.get(&key) {
+            return *c;
+        }
+    }
+    let c = time_bucket(key);
+    if let Ok(mut g) = cache().lock() {
+        g.insert(key, c);
+    }
+    c
+}
+
+/// Convenience: just the winning config.
+pub fn choose(m: usize, n: usize, k: usize) -> TileConfig {
+    choice(m, n, k).cfg
+}
+
+/// Snapshot of every bucket measured so far, as lane-fit calibration
+/// points (pass `[(p.n, p.gflops), ..]` to `cost::fit_effective_lane`).
+pub fn points() -> Vec<TunePoint> {
+    let Ok(g) = cache().lock() else {
+        return Vec::new();
+    };
+    let mut pts: Vec<TunePoint> = g
+        .iter()
+        .map(|(&(bm, bn, bk), c)| TunePoint {
+            m: bm as usize,
+            n: bn as usize,
+            k: bk as usize,
+            cfg: c.cfg,
+            gflops: c.gflops,
+        })
+        .collect();
+    pts.sort_by_key(|p| (p.m, p.n, p.k));
+    pts
+}
+
+/// Time every candidate on the bucket's (capped) stand-in problem and
+/// return the winner. Serial on purpose: the lane constants the fit
+/// feeds model single-lane issue width, and serial timing is immune to
+/// pool scheduling noise.
+fn time_bucket(key: Bucket) -> Choice {
+    let m = (key.0 as usize).min(TIME_DIM_CAP);
+    let n = (key.1 as usize).min(TIME_DIM_CAP);
+    let k = (key.2 as usize).min(TIME_DIM_CAP);
+    // Deterministic non-trivial fill; values are irrelevant to timing
+    // but NaN/Inf-free so no candidate hits slow denormal paths.
+    let a: Vec<f32> = (0..m * k).map(|i| (i % 13) as f32 * 0.25 - 1.5).collect();
+    let b: Vec<f32> = (0..k * n).map(|i| (i % 7) as f32 * 0.5 - 1.0).collect();
+    let mut out = vec![0f32; m * n];
+    let mut apk = vec![0f32; packed_a_len(m, k)];
+    let mut bpk = vec![0f32; packed_b_len(n, k)];
+    let serial = WorkerPool::serial();
+    let flops = 2.0 * (m * n * k) as f64;
+    let mut best = Choice { cfg: TileConfig::DEFAULT, gflops: 0.0 };
+    for &cand in &TileConfig::CANDIDATES {
+        // One warm-up (pays the page faults / icache misses), then the
+        // better of two timed runs.
+        dot_packed(&a, &b, n, k, &mut out, &serial, cand, &mut apk, &mut bpk);
+        let mut secs = f64::INFINITY;
+        for _ in 0..2 {
+            let t0 = Instant::now();
+            dot_packed(&a, &b, n, k, &mut out, &serial, cand, &mut apk, &mut bpk);
+            secs = secs.min(t0.elapsed().as_secs_f64());
+        }
+        let rate = if secs > 0.0 { flops / secs / 1e9 } else { 0.0 };
+        if rate > best.gflops {
+            best = Choice { cfg: cand, gflops: rate };
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_dims_are_powers_of_two() {
+        assert_eq!(bucket_dim(0), 1);
+        assert_eq!(bucket_dim(1), 1);
+        assert_eq!(bucket_dim(3), 4);
+        assert_eq!(bucket_dim(256), 256);
+        assert_eq!(bucket_dim(257), 512);
+    }
+
+    // Times real GEMMs — meaningless (and very slow) under miri's
+    // interpreter, so the miri job runs only the bucket-math test.
+    #[cfg(not(miri))]
+    #[test]
+    fn choice_is_cached_per_bucket() {
+        // Tiny bucket so the timing pass is milliseconds even under the
+        // test profile. Both calls land in the same (64, 64, 64) bucket
+        // and the second must be a pure cache hit (same winner).
+        let first = choice(40, 33, 50);
+        let again = choice(64, 64, 64);
+        assert_eq!(first.cfg, again.cfg);
+        assert!(first.gflops > 0.0, "timing produced no rate");
+        assert!(points().iter().any(|p| (p.m, p.n, p.k) == (64, 64, 64)));
+    }
+}

@@ -12,10 +12,17 @@
 //! inline: dispatch costs more than it saves there, and skipping it
 //! cannot change a single bit.
 //!
-//! `dot_general` is the hot kernel: an i-k-j matmul blocked over N and K
-//! so the active B panel stays cache-resident across the rows of a
-//! thread's chunk, with rows (M) partitioned across lanes. There is
-//! deliberately NO zero-operand fast path: `0 × NaN` and `0 × Inf` must
+//! `dot_general` is the hot kernel. Above [`PACK_MIN_MACS`] it runs a
+//! BLIS-style packed path: A is repacked into MR-row panels, B into
+//! NR-column panels, and an MR×NR register-tile microkernel walks the
+//! packed panels in ascending-k order. Each accumulator lane owns
+//! exactly one output element for the whole k extent, so the per-element
+//! operation sequence (mul, then add, k ascending) is identical to the
+//! naive triple loop — tile shape, KB/NB blocking, packing, and thread
+//! count are all bitwise-irrelevant. Below the threshold (and as the
+//! bench baseline) the original i-k-j `dot_scalar` core runs instead;
+//! both paths produce identical bits. There is deliberately NO
+//! zero-operand fast path anywhere: `0 × NaN` and `0 × Inf` must
 //! produce NaN per IEEE 754 — the seed's `av == 0.0` skip silently
 //! swallowed poisoned activations inside decomposed W0·W1 chains.
 
@@ -38,11 +45,25 @@ pub fn numel(dims: &[usize]) -> usize {
 /// Public so `runtime::verify::plan` can replay the fan-out decision and
 /// prove the resulting partition is a disjoint exact cover.
 pub const PAR_MIN_ELEMS: usize = 16 * 1024;
-/// Minimum M*N*K before `dot_general`/`spmm_csr` fans out.
-pub const PAR_MIN_MACS: usize = 64 * 1024;
+/// Minimum M*N*K before `dot_general`/`spmm_csr` fans out. Re-derived
+/// for the packed microkernel: pool dispatch costs on the order of
+/// 10 µs, and the packed serial core clears several f32 GMAC/s (the
+/// `benches/native_exec.rs` GEMM sweep records the live number per
+/// machine in `BENCH_native.json`), so a fan-out only amortizes from
+/// roughly 10 µs × GMAC/s ≈ 2¹⁸ MACs upward — 4× the seed's 64·1024,
+/// which was calibrated against the slower scalar core. The small-shape
+/// rows of the sweep's CI gate keep this from regressing small dots.
+pub const PAR_MIN_MACS: usize = 256 * 1024;
 /// Minimum output elements before `reduce` fans out (cheaper threshold:
 /// each output element already amortizes `count` reads).
 pub const PAR_MIN_REDUCE: usize = 1024;
+/// Minimum M*N*K before `dot_general` pays for packing A and B into
+/// panels. Packing moves (M·K + K·N) floats to win register-tiled
+/// accumulation over M·N·K MACs; below ~32K MACs (e.g. 32³) the copy
+/// traffic is a double-digit fraction of the MAC count and the scalar
+/// core is at least as fast — the GEMM sweep's small-shape rows track
+/// the live crossover.
+pub const PACK_MIN_MACS: usize = 32 * 1024;
 /// N-dimension block: the B panel column strip kept hot in cache.
 const NB: usize = 256;
 /// K-dimension block: B panel rows per strip (NB*KB*4 B ≈ 128 KiB ≤ L2).
@@ -269,10 +290,475 @@ pub fn slice(
 // Contraction
 // ---------------------------------------------------------------------------
 
-/// `out[m,n] = Σ_k a[m,k] · b[k,n]`, cache-tiled, rows partitioned
-/// across the pool's lanes. Per output element the k-sum always runs in
-/// ascending k order, so tiling and threading never change a bit.
+/// Tile geometry of the packed GEMM path: MR×NR is the register tile
+/// (one accumulator lane per output element), KB the k-block streamed
+/// per pass over the output, NB the column strip kept L2-resident.
+///
+/// The config is performance-only state: every config produces
+/// bitwise-identical output (each element's k-sum is the same ascending
+/// mul/add sequence regardless of tiling), which is why the autotuner's
+/// choice may be cached outside the bitwise-identity-relevant parts of
+/// an executable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileConfig {
+    /// Register-tile rows (A panel height). One of {1, 2, 4, 8}.
+    pub mr: usize,
+    /// Register-tile columns (B panel width). One of {8, 16}.
+    pub nr: usize,
+    /// K-block length per pass over the output tile.
+    pub kb: usize,
+    /// Column-strip width (rounded up to a multiple of `nr`).
+    pub nb: usize,
+}
+
+impl TileConfig {
+    /// Shape-oblivious default, used when the autotuner is off. A 4×8
+    /// tile holds its 32 accumulators in 8 xmm registers even under
+    /// baseline x86-64 codegen (no `target-cpu` assumption), so it
+    /// never spills; wider tiles only win where the autotuner can
+    /// verify the register file supports them.
+    pub const DEFAULT: TileConfig = TileConfig { mr: 4, nr: 8, kb: 128, nb: 256 };
+
+    /// Candidate set the compile-time autotuner times per shape bucket.
+    /// Kept small on purpose: each entry is one monomorphized
+    /// microkernel instantiation plus one blocking choice, spanning
+    /// register budgets from SSE2 xmm (4×8) up to AVX-512 zmm (8×16).
+    pub const CANDIDATES: [TileConfig; 6] = [
+        TileConfig { mr: 4, nr: 8, kb: 128, nb: 256 },
+        TileConfig { mr: 8, nr: 8, kb: 128, nb: 256 },
+        TileConfig { mr: 4, nr: 16, kb: 256, nb: 256 },
+        TileConfig { mr: 8, nr: 16, kb: 128, nb: 256 },
+        TileConfig { mr: 2, nr: 16, kb: 128, nb: 512 },
+        TileConfig { mr: 1, nr: 16, kb: 256, nb: 512 },
+    ];
+
+    /// Parse the CLI form `MRxNRxKBxNB`, e.g. `8x16x128x256`.
+    pub fn parse(s: &str) -> Result<TileConfig, String> {
+        let parts: Vec<&str> = s.split('x').collect();
+        if parts.len() != 4 {
+            return Err(format!("tile '{s}': want MRxNRxKBxNB, e.g. 8x16x128x256"));
+        }
+        let mut v = [0usize; 4];
+        for (slot, p) in v.iter_mut().zip(&parts) {
+            *slot = p.parse::<usize>().map_err(|_| format!("tile '{s}': '{p}' not a number"))?;
+        }
+        let cfg = TileConfig { mr: v[0], nr: v[1], kb: v[2], nb: v[3] };
+        if !matches!(cfg.mr, 1 | 2 | 4 | 8) {
+            return Err(format!("tile '{s}': MR must be one of 1/2/4/8"));
+        }
+        if !matches!(cfg.nr, 8 | 16) {
+            return Err(format!("tile '{s}': NR must be 8 or 16"));
+        }
+        if cfg.kb == 0 || cfg.nb == 0 {
+            return Err(format!("tile '{s}': KB and NB must be positive"));
+        }
+        Ok(cfg)
+    }
+
+    /// Report form, inverse of [`TileConfig::parse`].
+    pub fn key(&self) -> String {
+        format!("{}x{}x{}x{}", self.mr, self.nr, self.kb, self.nb)
+    }
+
+    /// Clamp to what the kernel can execute for an `m`-row output:
+    /// `mr` drops to the shape's effective panel height, `nb` rounds up
+    /// to a whole number of `nr` panels, `kb` gets a sane floor. Pure
+    /// function of (config, m) — `verify::plan` re-derives it when
+    /// proving panel partitions.
+    pub fn normalized(&self, m: usize) -> TileConfig {
+        let mr = effective_mr(self.mr, m);
+        let nr = if self.nr >= 16 { 16 } else { 8 };
+        let kb = self.kb.max(8);
+        let nb = self.nb.max(nr).div_ceil(nr) * nr;
+        TileConfig { mr, nr, kb, nb }
+    }
+}
+
+/// Largest microkernel panel height `<= min(mr, m)` (a power of two,
+/// at least 1): an m-row output never pays for accumulator rows that
+/// could only ever hold padding.
+pub fn effective_mr(mr: usize, m: usize) -> usize {
+    let cap = mr.min(m.max(1)).min(8);
+    let mut e = 1usize;
+    while e * 2 <= cap {
+        e *= 2;
+    }
+    e
+}
+
+/// Widest panel height any [`TileConfig`] can request — pack-buffer
+/// capacities are sized for it so one buffer fits every candidate.
+pub const MR_MAX: usize = 8;
+/// Widest panel width any [`TileConfig`] can request.
+pub const NR_MAX: usize = 16;
+
+/// f32 capacity of the packed-A scratch for an `m`×`k` operand, valid
+/// for every tile config and thread count (panel heights are powers of
+/// two `<=` [`MR_MAX`], so rounding `m` up to `MR_MAX` covers them all).
+/// The planner sizes the arena slot with this; the kernel asserts it.
+pub fn packed_a_len(m: usize, k: usize) -> usize {
+    m.div_ceil(MR_MAX) * MR_MAX * k
+}
+
+/// f32 capacity of the packed-B scratch for a `k`×`n` operand, valid
+/// for every tile config and thread count.
+pub fn packed_b_len(n: usize, k: usize) -> usize {
+    n.div_ceil(NR_MAX) * NR_MAX * k
+}
+
+/// Monomorphized MR×NR register-tile kernel: (packed A block, packed B
+/// block, klen, first-k-block?, out base, n, i0, j0, live rows, live
+/// cols).
+type MicroFn = fn(&[f32], &[f32], usize, bool, SendPtr, usize, usize, usize, usize, usize);
+
+fn micro_fn(mr: usize, nr: usize) -> MicroFn {
+    match (mr, nr) {
+        (1, 8) => micro_tile::<1, 8>,
+        (1, 16) => micro_tile::<1, 16>,
+        (2, 8) => micro_tile::<2, 8>,
+        (2, 16) => micro_tile::<2, 16>,
+        (4, 8) => micro_tile::<4, 8>,
+        (4, 16) => micro_tile::<4, 16>,
+        (8, 8) => micro_tile::<8, 8>,
+        _ => micro_tile::<8, 16>,
+    }
+}
+
+/// One MR×NR register tile over one k-block. `first` zeroes the
+/// accumulators; later k-blocks reload the partial sums already stored,
+/// so per output element the sum still runs over k in ascending order —
+/// the bitwise contract. The accumulator array is the explicit
+/// vectorization: NR f32 lanes per row that the compiler lowers to
+/// AVX/NEON mul+add (no FMA contraction — the scalar path rounds twice
+/// per MAC, so the packed path must too). Edge tiles (`rows < MR`,
+/// `cols < NR`) compute the full tile against the packs' zero padding
+/// but load/store through masked scalar row loops, so padding lanes
+/// never touch `out`.
+#[allow(clippy::too_many_arguments)]
+fn micro_tile<const MR: usize, const NR: usize>(
+    ap: &[f32],
+    bp: &[f32],
+    klen: usize,
+    first: bool,
+    base: SendPtr,
+    n: usize,
+    i0: usize,
+    j0: usize,
+    rows: usize,
+    cols: usize,
+) {
+    debug_assert!(rows <= MR && cols <= NR);
+    debug_assert!(ap.len() == klen * MR && bp.len() == klen * NR);
+    let mut acc = [[0f32; NR]; MR];
+    if !first {
+        for (r, arow) in acc.iter_mut().enumerate().take(rows) {
+            // SAFETY: `(i0+r)*n + j0` addresses row `i0+r < m`, col `j0`
+            // of the m×n allocation behind `base` (the caller's tile
+            // ranges come from the panel partition `verify::plan` proves
+            // is in-bounds), so the offset stays inside the allocation.
+            let p = unsafe { base.0.add((i0 + r) * n + j0) };
+            // SAFETY: `[j0, j0+cols)` of row `i0+r` lies inside this
+            // chunk's exclusive output rectangle (disjoint exact cover
+            // across chunks per `verify::plan::check_cover`), and the
+            // slice dies before the matching store below re-borrows it.
+            let prev = unsafe { std::slice::from_raw_parts(p, cols) };
+            arow[..cols].copy_from_slice(prev);
+        }
+    }
+    for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for r in 0..MR {
+            let a = av[r];
+            let arow = &mut acc[r];
+            for (o, &bb) in arow.iter_mut().zip(bv) {
+                *o += a * bb;
+            }
+        }
+    }
+    for (r, arow) in acc.iter().enumerate().take(rows) {
+        // SAFETY: same in-bounds argument as the load above.
+        let p = unsafe { base.0.add((i0 + r) * n + j0) };
+        // SAFETY: same exclusive-rectangle argument as the load above;
+        // no other slice over this range is live.
+        let orow = unsafe { std::slice::from_raw_parts_mut(p, cols) };
+        orow.copy_from_slice(&arow[..cols]);
+    }
+}
+
+/// Pack `pc` row-panels of `a` (global panels `p0..p0+pc`, `mr` rows
+/// each) into `dst`, `[panel][k][mr]`-contiguous with `dst[0]` the
+/// first element of panel `p0`; rows past `m` pad with zeros. Pure data
+/// movement: contributes nothing to accumulation order.
+fn pack_a_panels(a: &[f32], m: usize, k: usize, mr: usize, p0: usize, pc: usize, dst: &mut [f32]) {
+    debug_assert_eq!(dst.len(), pc * k * mr);
+    for lp in 0..pc {
+        let r0 = (p0 + lp) * mr;
+        let rows = mr.min(m.saturating_sub(r0));
+        let panel = &mut dst[lp * k * mr..(lp + 1) * k * mr];
+        if rows < mr {
+            panel.fill(0.0);
+        }
+        for r in 0..rows {
+            let arow = &a[(r0 + r) * k..(r0 + r + 1) * k];
+            for (kk, &v) in arow.iter().enumerate() {
+                panel[kk * mr + r] = v;
+            }
+        }
+    }
+}
+
+/// Pack `pc` column-panels of `b` (global panels `p0..p0+pc`, `nr`
+/// columns each) into `dst`, `[panel][k][nr]`-contiguous; columns past
+/// `n` pad with zeros.
+fn pack_b_panels(b: &[f32], n: usize, k: usize, nr: usize, p0: usize, pc: usize, dst: &mut [f32]) {
+    debug_assert_eq!(dst.len(), pc * k * nr);
+    for lp in 0..pc {
+        let j0 = (p0 + lp) * nr;
+        let cols = nr.min(n - j0);
+        let panel = &mut dst[lp * k * nr..(lp + 1) * k * nr];
+        for kk in 0..k {
+            let drow = &mut panel[kk * nr..(kk + 1) * nr];
+            drow[..cols].copy_from_slice(&b[kk * n + j0..kk * n + j0 + cols]);
+            drow[cols..].fill(0.0);
+        }
+    }
+}
+
+/// Serial packed-GEMM driver over one output rectangle
+/// `[row0, row0+rows) × [col0, col0+cols)`. `ap`/`bp` hold exactly the
+/// packed panels covering that rectangle (panel-local: their first
+/// panel starts at offset 0). `row0`/`col0` must be panel-aligned.
+/// Loop order per rectangle: NB column strips outermost, then ascending
+/// KB k-blocks, then row/column panels — so every output element sees
+/// its k-sum in ascending order across k-blocks.
+#[allow(clippy::too_many_arguments)]
+fn dot_packed_block(
+    ap: &[f32],
+    bp: &[f32],
+    n: usize,
+    k: usize,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    cfg: TileConfig,
+    micro: MicroFn,
+    base: SendPtr,
+) {
+    let TileConfig { mr, nr, kb, nb } = cfg;
+    debug_assert!(row0 % mr == 0 && col0 % nr == 0 && nb % nr == 0);
+    for jb in (0..cols).step_by(nb) {
+        let je = (jb + nb).min(cols);
+        for k0 in (0..k).step_by(kb) {
+            let ke = (k0 + kb).min(k);
+            let (first, klen) = (k0 == 0, ke - k0);
+            let mut i0 = 0usize;
+            while i0 < rows {
+                let trows = mr.min(rows - i0);
+                let pa = i0 / mr * k * mr;
+                let ap_blk = &ap[pa + k0 * mr..pa + ke * mr];
+                let mut j0 = jb;
+                while j0 < je {
+                    let tcols = nr.min(je - j0);
+                    let pb = j0 / nr * k * nr;
+                    let bp_blk = &bp[pb + k0 * nr..pb + ke * nr];
+                    micro(
+                        ap_blk,
+                        bp_blk,
+                        klen,
+                        first,
+                        base,
+                        n,
+                        row0 + i0,
+                        col0 + j0,
+                        trows,
+                        tcols,
+                    );
+                    j0 += nr;
+                }
+                i0 += mr;
+            }
+        }
+    }
+}
+
+/// Packed BLIS-style `out[m,n] = Σ_k a[m,k] · b[k,n]` with
+/// caller-provided pack scratch (arena slots sized by
+/// [`packed_a_len`]/[`packed_b_len`]). Partitioning: row panels across
+/// lanes when `m >= threads`; otherwise — the tall-skinny fix — column
+/// panels across lanes (batch-1 `m = 1` now fans out over N). Both
+/// partitions and the `normalized` tile are pure functions of
+/// (shape, thread count, config), and every accumulator lane owns one
+/// output element over the full ascending-k extent — so output bits
+/// never depend on threads or tile.
+#[allow(clippy::too_many_arguments)]
+pub fn dot_packed(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+    pool: &WorkerPool,
+    cfg: TileConfig,
+    a_pack: &mut [f32],
+    b_pack: &mut [f32],
+) {
+    if out.is_empty() {
+        return;
+    }
+    if k == 0 {
+        out.fill(0.0); // empty contraction: a sum over nothing
+        return;
+    }
+    let m = out.len() / n;
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let cfg = cfg.normalized(m);
+    let (mr, nr) = (cfg.mr, cfg.nr);
+    let rp = m.div_ceil(mr); // row panels
+    let cp = n.div_ceil(nr); // column panels
+    assert!(a_pack.len() >= rp * k * mr, "packed-A scratch undersized");
+    assert!(b_pack.len() >= cp * k * nr, "packed-B scratch undersized");
+    let micro = micro_fn(mr, nr);
+    let threads = pool.threads();
+    let base = SendPtr(out.as_mut_ptr());
+    if threads <= 1 || m * n * k < PAR_MIN_MACS {
+        pack_b_panels(b, n, k, nr, 0, cp, &mut b_pack[..cp * k * nr]);
+        pack_a_panels(a, m, k, mr, 0, rp, &mut a_pack[..rp * k * mr]);
+        dot_packed_block(a_pack, b_pack, n, k, 0, m, 0, n, cfg, micro, base);
+        return;
+    }
+    if m >= threads {
+        // Row-panel partition: pack B once (panels split across lanes),
+        // then each lane packs and contracts its own row panels.
+        par_pack_b(b, n, k, nr, cp, pool, b_pack);
+        let bp: &[f32] = b_pack;
+        let t = threads.min(rp);
+        let per = rp.div_ceil(t);
+        let chunks = rp.div_ceil(per);
+        let abase = SendPtr(a_pack.as_mut_ptr());
+        pool.run(chunks, &|ci| {
+            let p0 = ci * per;
+            let pc = per.min(rp - p0);
+            // SAFETY: `p0 < rp`, so `p0*k*mr` is inside the `>= rp*k*mr`
+            // allocation behind `abase` (asserted above).
+            let aptr = unsafe { abase.0.add(p0 * k * mr) };
+            // SAFETY: panel ranges `[p0, p0+pc)` for distinct `ci` are
+            // disjoint and exactly cover `0..rp`
+            // (`verify::plan::panel_partition` mirrors this arithmetic
+            // and `check_cover` proves it for every lane count), so the
+            // `pc*k*mr` regions never alias, and `a_pack` stays
+            // exclusively borrowed by this `run`.
+            let ap = unsafe { std::slice::from_raw_parts_mut(aptr, pc * k * mr) };
+            pack_a_panels(a, m, k, mr, p0, pc, ap);
+            let row0 = p0 * mr;
+            let rows = ((p0 + pc) * mr).min(m) - row0;
+            dot_packed_block(ap, bp, n, k, row0, rows, 0, n, cfg, micro, base);
+        });
+    } else {
+        // Column-panel partition (tall-skinny fallback): pack all of A
+        // up front (m < threads, so it is tiny), then each lane packs
+        // and contracts its own column panels.
+        pack_a_panels(a, m, k, mr, 0, rp, &mut a_pack[..rp * k * mr]);
+        let ap: &[f32] = a_pack;
+        let t = threads.min(cp);
+        if t <= 1 {
+            pack_b_panels(b, n, k, nr, 0, cp, &mut b_pack[..cp * k * nr]);
+            dot_packed_block(ap, b_pack, n, k, 0, m, 0, n, cfg, micro, base);
+            return;
+        }
+        let per = cp.div_ceil(t);
+        let chunks = cp.div_ceil(per);
+        let bbase = SendPtr(b_pack.as_mut_ptr());
+        pool.run(chunks, &|ci| {
+            let p0 = ci * per;
+            let pc = per.min(cp - p0);
+            // SAFETY: `p0 < cp`, so `p0*k*nr` is inside the `>= cp*k*nr`
+            // allocation behind `bbase` (asserted above).
+            let bptr = unsafe { bbase.0.add(p0 * k * nr) };
+            // SAFETY: panel ranges `[p0, p0+pc)` for distinct `ci` are
+            // disjoint and exactly cover `0..cp`
+            // (`verify::plan::panel_partition` mirrors this arithmetic
+            // and `check_cover` proves it for every lane count), so the
+            // `pc*k*nr` regions never alias, and `b_pack` stays
+            // exclusively borrowed by this `run`.
+            let bp = unsafe { std::slice::from_raw_parts_mut(bptr, pc * k * nr) };
+            pack_b_panels(b, n, k, nr, p0, pc, bp);
+            let col0 = p0 * nr;
+            let cols = ((p0 + pc) * nr).min(n) - col0;
+            dot_packed_block(ap, bp, n, k, 0, m, col0, cols, cfg, micro, base);
+        });
+    }
+}
+
+/// Pack all `cp` column panels of B in parallel (panels split across
+/// lanes with the same exact-cover partition the contraction uses).
+fn par_pack_b(
+    b: &[f32],
+    n: usize,
+    k: usize,
+    nr: usize,
+    cp: usize,
+    pool: &WorkerPool,
+    b_pack: &mut [f32],
+) {
+    let t = pool.threads().min(cp);
+    if t <= 1 {
+        pack_b_panels(b, n, k, nr, 0, cp, &mut b_pack[..cp * k * nr]);
+        return;
+    }
+    let per = cp.div_ceil(t);
+    let chunks = cp.div_ceil(per);
+    let bbase = SendPtr(b_pack.as_mut_ptr());
+    pool.run(chunks, &|ci| {
+        let p0 = ci * per;
+        let pc = per.min(cp - p0);
+        // SAFETY: `p0 < cp`, so `p0*k*nr` stays inside the `>= cp*k*nr`
+        // capacity the caller asserted for `b_pack`.
+        let bptr = unsafe { bbase.0.add(p0 * k * nr) };
+        // SAFETY: panel ranges for distinct `ci` are disjoint and
+        // exactly cover `0..cp` (`verify::plan::panel_partition` +
+        // `check_cover`), and `b_pack` stays exclusively borrowed by
+        // this `run` until every chunk completes.
+        let bp = unsafe { std::slice::from_raw_parts_mut(bptr, pc * k * nr) };
+        pack_b_panels(b, n, k, nr, p0, pc, bp);
+    });
+}
+
+/// `out[m,n] = Σ_k a[m,k] · b[k,n]` — the self-contained entry the
+/// reference interpreter and tests use. Above [`PACK_MIN_MACS`] it
+/// allocates transient pack scratch and runs the packed path (the
+/// planned executor passes arena slots to [`dot_packed`] instead);
+/// below, the scalar core. Both produce identical bits.
 pub fn dot_general(
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+    pool: &WorkerPool,
+) {
+    if out.is_empty() {
+        return;
+    }
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let m = out.len() / n;
+    if m * n * k < PACK_MIN_MACS {
+        dot_scalar(a, b, n, k, out, pool);
+        return;
+    }
+    let mut ap = vec![0f32; packed_a_len(m, k)];
+    let mut bp = vec![0f32; packed_b_len(n, k)];
+    dot_packed(a, b, n, k, out, pool, TileConfig::DEFAULT, &mut ap, &mut bp);
+}
+
+/// The pre-packing i-k-j core, kept as the small-shape path and as the
+/// bench baseline the packed path is gated against: rows partitioned
+/// across lanes, per-element ascending-k accumulation (bitwise equal to
+/// the packed path).
+pub fn dot_scalar(
     a: &[f32],
     b: &[f32],
     n: usize,
@@ -389,8 +875,34 @@ pub fn spmm_csr(
     });
 }
 
+/// f32 lanes per accumulator chunk in the explicitly unrolled axpy —
+/// the same 8-wide unit the packed microkernel's register tiles build
+/// on (one AVX/NEON-pair vector of f32).
+pub const LANES: usize = 8;
+
+/// `out[j] += v * x[j]`, unrolled into [`LANES`]-wide chunks so the
+/// compiler lowers it to vector mul+add. Element order and rounding are
+/// identical to the plain scalar loop (each `out[j]` sees exactly one
+/// mul and one add, in ascending j), so this is bitwise-neutral.
+#[inline]
+fn axpy_lanes(v: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (o, xv) in (&mut oc).zip(&mut xc) {
+        for l in 0..LANES {
+            o[l] += v * xv[l];
+        }
+    }
+    for (o, &xv) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o += v * xv;
+    }
+}
+
 /// Serial core over a row block: per row, ascending-entry axpy into the
 /// output row (the fixed accumulation order the determinism pin needs).
+/// The dense-axis inner loop runs through [`axpy_lanes`], the same
+/// fixed-width lane primitive the packed microkernel uses.
 #[allow(clippy::too_many_arguments)]
 fn spmm_rows(
     vals: &[f32],
@@ -413,10 +925,7 @@ fn spmm_rows(
                 None => vals[e],
             };
             let c = col_idx[e] as usize;
-            let xrow = &x[c * m..(c + 1) * m];
-            for (o, &xv) in orow.iter_mut().zip(xrow.iter()) {
-                *o += v * xv;
-            }
+            axpy_lanes(v, &x[c * m..(c + 1) * m], orow);
         }
     }
 }
@@ -496,6 +1005,15 @@ mod tests {
         let (m, n, k) = (7, 300, 190); // forces partial N/K tiles
         let a: Vec<f32> = (0..m * k).map(|i| ((i * 37 % 97) as f32 - 48.0) * 0.37).collect();
         let b: Vec<f32> = (0..k * n).map(|i| ((i * 61 % 89) as f32 - 44.0) * 0.13).collect();
+        let naive = naive_dot(&a, &b, m, n, k);
+        for threads in [1, 2, 5] {
+            let mut out = vec![0f32; m * n];
+            dot_general(&a, &b, n, k, &mut out, &pool(threads));
+            assert_eq!(out, naive, "threads={threads}");
+        }
+    }
+
+    fn naive_dot(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
         let mut naive = vec![0f32; m * n];
         for i in 0..m {
             for p in 0..k {
@@ -505,11 +1023,174 @@ mod tests {
                 }
             }
         }
-        for threads in [1, 2, 5] {
-            let mut out = vec![0f32; m * n];
-            dot_general(&a, &b, n, k, &mut out, &pool(threads));
-            assert_eq!(out, naive, "threads={threads}");
+        naive
+    }
+
+    fn det_mat(len: usize, mul: usize, md: usize, off: f32, scale: f32) -> Vec<f32> {
+        (0..len).map(|i| ((i * mul % md) as f32 - off) * scale).collect()
+    }
+
+    fn run_packed(
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        cfg: TileConfig,
+        threads: usize,
+    ) -> Vec<f32> {
+        let mut out = vec![f32::NAN; m * n]; // stale arena garbage must not leak
+        let mut ap = vec![0f32; packed_a_len(m, k)];
+        let mut bp = vec![0f32; packed_b_len(n, k)];
+        dot_packed(a, b, n, k, &mut out, &pool(threads), cfg, &mut ap, &mut bp);
+        out
+    }
+
+    #[test]
+    fn pack_roundtrip_restores_edge_panels() {
+        // M%MR, N%NR, K odd — every edge case the panels must pad
+        let (m, n, k) = (7usize, 13usize, 5usize);
+        let a = det_mat(m * k, 7, 31, 15.0, 0.5);
+        let b = det_mat(k * n, 11, 29, 14.0, 0.25);
+        for mr in [1usize, 2, 4, 8] {
+            let rp = m.div_ceil(mr);
+            let mut packed = vec![f32::NAN; rp * k * mr];
+            pack_a_panels(&a, m, k, mr, 0, rp, &mut packed);
+            for pi in 0..rp {
+                for kk in 0..k {
+                    for r in 0..mr {
+                        let got = packed[pi * k * mr + kk * mr + r];
+                        let row = pi * mr + r;
+                        let want = if row < m { a[row * k + kk] } else { 0.0 };
+                        assert_eq!(got, want, "a panel {pi} k {kk} r {r} (mr={mr})");
+                    }
+                }
+            }
         }
+        for nr in [8usize, 16] {
+            let cp = n.div_ceil(nr);
+            let mut packed = vec![f32::NAN; cp * k * nr];
+            pack_b_panels(&b, n, k, nr, 0, cp, &mut packed);
+            for pj in 0..cp {
+                for kk in 0..k {
+                    for c in 0..nr {
+                        let got = packed[pj * k * nr + kk * nr + c];
+                        let col = pj * nr + c;
+                        let want = if col < n { b[kk * n + col] } else { 0.0 };
+                        assert_eq!(got, want, "b panel {pj} k {kk} c {c} (nr={nr})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_is_bitwise_equal_across_tile_configs() {
+        // small enough to stay serial — the config sweep isolates tiling
+        let (m, n, k) = (11, 37, 23); // M%MR, N%NR, K%KB all non-zero
+        let a = det_mat(m * k, 37, 97, 48.0, 0.37);
+        let b = det_mat(k * n, 61, 89, 44.0, 0.13);
+        let naive = naive_dot(&a, &b, m, n, k);
+        let mut scalar = vec![0f32; m * n];
+        dot_scalar(&a, &b, n, k, &mut scalar, &pool(1));
+        assert_eq!(scalar, naive, "scalar path diverged from naive");
+        for cfg in TileConfig::CANDIDATES.iter().chain([&TileConfig::DEFAULT]) {
+            let out = run_packed(&a, &b, m, n, k, *cfg, 1);
+            assert_eq!(out, naive, "tile {} changed bits", cfg.key());
+        }
+        // an intentionally awkward blocking: KB/NB smaller than the tile
+        let odd = TileConfig { mr: 4, nr: 8, kb: 8, nb: 8 };
+        assert_eq!(run_packed(&a, &b, m, n, k, odd, 1), naive, "odd blocking changed bits");
+    }
+
+    #[test]
+    fn packed_row_partition_is_bitwise_across_threads() {
+        // crosses PAR_MIN_MACS with m >= threads: row-panel partition
+        let (m, n, k) = (16, 160, 110);
+        assert!(m * n * k >= PAR_MIN_MACS);
+        let a = det_mat(m * k, 37, 97, 48.0, 0.37);
+        let b = det_mat(k * n, 61, 89, 44.0, 0.13);
+        let t1 = run_packed(&a, &b, m, n, k, TileConfig::DEFAULT, 1);
+        assert_eq!(t1, naive_dot(&a, &b, m, n, k));
+        for threads in [2usize, 8] {
+            let out = run_packed(&a, &b, m, n, k, TileConfig::DEFAULT, threads);
+            assert_eq!(out, t1, "threads={threads} changed bits (row path)");
+        }
+    }
+
+    #[test]
+    fn packed_column_partition_feeds_tall_skinny_shapes() {
+        // m=2 < threads while N·K is large: the seed starved here
+        // (threads capped at min(threads, m)); the column-panel
+        // partition must fan out and stay bitwise with serial
+        let (m, n, k) = (2, 1000, 150);
+        assert!(m * n * k >= PAR_MIN_MACS);
+        let a = det_mat(m * k, 13, 61, 30.0, 0.21);
+        let b = det_mat(k * n, 17, 53, 26.0, 0.11);
+        let t1 = run_packed(&a, &b, m, n, k, TileConfig::DEFAULT, 1);
+        assert_eq!(t1, naive_dot(&a, &b, m, n, k));
+        for threads in [2usize, 8] {
+            let out = run_packed(&a, &b, m, n, k, TileConfig::DEFAULT, threads);
+            assert_eq!(out, t1, "threads={threads} changed bits (column path)");
+        }
+        // batch-1 (m=1) rides the same fallback
+        let (m, n, k) = (1, 2000, 160);
+        assert!(m * n * k >= PAR_MIN_MACS);
+        let a = det_mat(m * k, 19, 47, 23.0, 0.17);
+        let b = det_mat(k * n, 23, 43, 21.0, 0.09);
+        let t1 = run_packed(&a, &b, m, n, k, TileConfig::DEFAULT, 1);
+        assert_eq!(t1, naive_dot(&a, &b, m, n, k));
+        let t8 = run_packed(&a, &b, m, n, k, TileConfig::DEFAULT, 8);
+        assert_eq!(t8, t1, "batch-1 column partition changed bits");
+    }
+
+    #[test]
+    fn packed_has_no_zero_skip() {
+        // NaN/Inf activations against an all-zero weight row must
+        // poison through the packed path too (PR 3's pin, re-applied)
+        let (m, n, k) = (5, 17, 9);
+        let a = vec![0f32; m * k];
+        let mut b = det_mat(k * n, 7, 19, 9.0, 0.5);
+        b[3] = f32::NAN; // column 3 of row 0
+        b[n + 4] = f32::INFINITY; // column 4 of row 1
+        let out = run_packed(&a, &b, m, n, k, TileConfig::DEFAULT, 1);
+        for i in 0..m {
+            assert!(out[i * n + 3].is_nan(), "0*NaN must poison row {i}");
+            assert!(out[i * n + 4].is_nan(), "0*Inf then 0*finite must be NaN in row {i}");
+        }
+        assert_eq!(out[5], 0.0, "finite columns stay exact zero");
+    }
+
+    #[test]
+    fn pack_capacity_covers_every_candidate() {
+        for (m, n, k) in [(1usize, 1usize, 1usize), (7, 13, 5), (16, 160, 110), (33, 65, 17)] {
+            for cfg in TileConfig::CANDIDATES {
+                let c = cfg.normalized(m);
+                assert!(
+                    m.div_ceil(c.mr) * c.mr * k <= packed_a_len(m, k),
+                    "a capacity m={m} k={k} tile {}",
+                    cfg.key()
+                );
+                assert!(
+                    n.div_ceil(c.nr) * c.nr * k <= packed_b_len(n, k),
+                    "b capacity n={n} k={k} tile {}",
+                    cfg.key()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tile_config_parse_roundtrip_and_rejects() {
+        let cfg = TileConfig::parse("4x8x64x128").unwrap();
+        assert_eq!(cfg, TileConfig { mr: 4, nr: 8, kb: 64, nb: 128 });
+        assert_eq!(TileConfig::parse(&cfg.key()).unwrap(), cfg);
+        for bad in ["4x8x64", "3x8x64x128", "4x9x64x128", "4x8x0x128", "axbxcxd"] {
+            assert!(TileConfig::parse(bad).is_err(), "{bad} should not parse");
+        }
+        assert_eq!(effective_mr(8, 3), 2);
+        assert_eq!(effective_mr(8, 1), 1);
+        assert_eq!(effective_mr(4, 100), 4);
     }
 
     #[test]
@@ -541,9 +1222,9 @@ mod tests {
 
     #[test]
     fn spmm_matches_ordered_naive_bitwise_across_threads() {
-        // 37x29 sparse against a [29, 401] dense block — big enough to
-        // cross PAR_MIN_MACS once m is large, with ragged rows.
-        let (n_rows, n_cols, m) = (37usize, 29usize, 401usize);
+        // 37x29 sparse (nnz = 215) against a [29, 1301] dense block —
+        // 215 x 1301 MACs crosses PAR_MIN_MACS, with ragged rows.
+        let (n_rows, n_cols, m) = (37usize, 29usize, 1301usize);
         let mut row_ptr = vec![0u32];
         let mut col_idx = Vec::new();
         for r in 0..n_rows {
@@ -554,6 +1235,7 @@ mod tests {
             }
             row_ptr.push(col_idx.len() as u32);
         }
+        assert!(col_idx.len() * m >= PAR_MIN_MACS, "pattern must reach the parallel branch");
         let vals: Vec<f32> =
             (0..col_idx.len()).map(|i| ((i * 31 % 17) as f32 - 8.0) * 0.21).collect();
         let x: Vec<f32> =

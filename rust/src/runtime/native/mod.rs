@@ -24,6 +24,7 @@
 //! that never fan out never pin OS threads (the ROADMAP worker-pool
 //! item).
 
+pub mod autotune;
 pub mod kernels;
 pub mod plan;
 pub mod pool;
@@ -38,6 +39,8 @@ use super::graph::Graph;
 use super::passes::ArenaStats;
 use super::{Backend, BackendExec, Buffer, CompileOptions, HostTensor};
 use crate::obs;
+pub use autotune::TunePolicy;
+use kernels::TileConfig;
 use plan::{ExecPlan, InPlace, Kernel, Step, ValueRef};
 use pool::WorkerPool;
 
@@ -66,11 +69,17 @@ impl Backend for NativeBackend {
         graph: &Graph,
         opts: &CompileOptions,
     ) -> Result<Arc<dyn BackendExec>> {
-        Ok(Arc::new(NativeExecutable::with_options(
+        let policy = match (opts.tile, opts.autotune) {
+            (Some(cfg), _) => TunePolicy::Fixed(cfg),
+            (None, true) => TunePolicy::Auto,
+            (None, false) => TunePolicy::Off,
+        };
+        Ok(Arc::new(NativeExecutable::with_tuning(
             graph.clone(),
             opts.resolved_threads(),
             opts.verify,
             opts.profile,
+            policy,
         )?))
     }
 
@@ -111,6 +120,11 @@ pub struct NativeExecutable {
     /// above-threshold kernel of every run.
     pool: WorkerPool,
     arena: Mutex<Vec<Vec<f32>>>,
+    /// Tile config per step (only packed `Dot` steps read theirs) —
+    /// resolved once at compile from the [`TunePolicy`]. Performance-only
+    /// state: every config yields bitwise-identical output, so `tiles`
+    /// never participates in identity or cache-key comparisons.
+    tiles: Vec<TileConfig>,
     /// Per-step timing state, present only when compiled with
     /// `CompileOptions::profile`. `None` keeps the hot path structurally
     /// identical to an unprofiled build (one branch per run).
@@ -148,6 +162,23 @@ impl NativeExecutable {
         verify: bool,
         profile: bool,
     ) -> Result<NativeExecutable> {
+        NativeExecutable::with_tuning(graph, threads, verify, profile, TunePolicy::Off)
+    }
+
+    /// `with_options` plus an explicit tile policy for the packed GEMM
+    /// path. [`TunePolicy::Off`] (the library default) uses
+    /// `TileConfig::DEFAULT` everywhere; [`TunePolicy::Auto`] times the
+    /// candidate set per shape bucket (cached process-wide, so repeat
+    /// compiles of a bucket are free); [`TunePolicy::Fixed`] pins one
+    /// config. The policy cannot change output bits — only throughput —
+    /// which is why it lives outside `CompileOptions::cache_key`.
+    pub fn with_tuning(
+        graph: Graph,
+        threads: usize,
+        verify: bool,
+        profile: bool,
+        policy: TunePolicy,
+    ) -> Result<NativeExecutable> {
         let t0 = Instant::now();
         let plan = plan::build_plan(&graph)?;
         if obs::enabled() {
@@ -172,12 +203,32 @@ impl NativeExecutable {
         if obs::enabled() {
             obs::event_from(&format!("arena:{}", graph.name), "compile", t0, t0.elapsed());
         }
+        // Resolve each step's tile once, at compile. Auto-tuning only
+        // ever times shapes that actually route through the packed path.
+        let t0 = Instant::now();
+        let mut tuned = 0usize;
+        let tiles: Vec<TileConfig> = plan
+            .steps
+            .iter()
+            .map(|s| match (&s.kernel, policy) {
+                (_, TunePolicy::Fixed(cfg)) => cfg,
+                (Kernel::Dot { n, k, pack: Some(_), .. }, TunePolicy::Auto) if *n > 0 => {
+                    tuned += 1;
+                    autotune::choose(s.out_len / n, *n, *k)
+                }
+                _ => TileConfig::DEFAULT,
+            })
+            .collect();
+        if tuned > 0 && obs::enabled() {
+            obs::event_from(&format!("autotune:{}", graph.name), "compile", t0, t0.elapsed());
+        }
         let profile = profile.then(|| Mutex::new(obs::ProfileState::new(plan.steps.len())));
         Ok(NativeExecutable {
             graph,
             plan,
             pool: WorkerPool::new(threads),
             arena: Mutex::new(arena),
+            tiles,
             profile,
         })
     }
@@ -233,8 +284,8 @@ impl NativeExecutable {
         let bufs: &mut [Vec<f32>] = &mut guard[..];
         match &self.profile {
             None => {
-                for step in &self.plan.steps {
-                    self.exec_step(step, args, bufs);
+                for (step, tile) in self.plan.steps.iter().zip(&self.tiles) {
+                    self.exec_step(step, *tile, args, bufs);
                 }
             }
             Some(state) => {
@@ -251,7 +302,7 @@ impl NativeExecutable {
                     self.pool.profile_set_step(i);
                     let ts = obs::now_us();
                     let t0 = Instant::now();
-                    self.exec_step(step, args, bufs);
+                    self.exec_step(step, self.tiles[i], args, bufs);
                     samples.push(obs::StepSample {
                         step: i,
                         ts_us: ts,
@@ -286,7 +337,13 @@ impl NativeExecutable {
         })
     }
 
-    fn exec_step(&self, step: &Step, args: &[Arc<HostTensor>], bufs: &mut [Vec<f32>]) {
+    fn exec_step(
+        &self,
+        step: &Step,
+        tile: TileConfig,
+        args: &[Arc<HostTensor>],
+        bufs: &mut [Vec<f32>],
+    ) {
         let t = &self.pool;
         // Dot/spmm operand permutes gather into their scratch slots first
         // (planner guarantees scratch ≠ inputs ≠ output).
@@ -329,7 +386,14 @@ impl NativeExecutable {
                 let x = resolve(ins[0].0, ins[0].1, args, bufs);
                 kernels::slice(x, *outer, *mid_in, *inner, *start, *stride, *mid_out, out);
             }
-            Kernel::Dot { n, k, lhs_prep, rhs_prep } => {
+            Kernel::Dot { n, k, lhs_prep, rhs_prep, pack } => {
+                // Pack scratch comes out of the arena first (the planner
+                // guarantees the pack slots alias neither inputs, preps,
+                // nor output — `verify::plan` audits it), so the operand
+                // reads below can borrow `bufs` freely.
+                let mut packs = pack.map(|pb| {
+                    (std::mem::take(&mut bufs[pb.a_slot]), std::mem::take(&mut bufs[pb.b_slot]))
+                });
                 let a = match lhs_prep {
                     Some(p) => &bufs[p.slot][..p.len],
                     None => resolve(ins[0].0, ins[0].1, args, bufs),
@@ -338,7 +402,24 @@ impl NativeExecutable {
                     Some(p) => &bufs[p.slot][..p.len],
                     None => resolve(ins[1].0, ins[1].1, args, bufs),
                 };
-                kernels::dot_general(a, b, *n, *k, out, t);
+                match (&mut packs, pack) {
+                    (Some((apk, bpk)), Some(pb)) => kernels::dot_packed(
+                        a,
+                        b,
+                        *n,
+                        *k,
+                        out,
+                        t,
+                        tile,
+                        &mut apk[..pb.a_len],
+                        &mut bpk[..pb.b_len],
+                    ),
+                    _ => kernels::dot_scalar(a, b, *n, *k, out, t),
+                }
+                if let (Some((apk, bpk)), Some(pb)) = (packs, pack) {
+                    bufs[pb.a_slot] = apk;
+                    bufs[pb.b_slot] = bpk;
+                }
             }
             Kernel::Spmm { m, row_ptr, col_idx, val_perm, rhs_prep } => {
                 let vals = resolve(ins[0].0, ins[0].1, args, bufs);

@@ -105,6 +105,21 @@ pub struct DotPrep {
     pub axes: Vec<GatherAxis>,
 }
 
+/// Arena-planned packing scratch for a packed `Dot` step: A row-panels
+/// land in `a_slot`, B column-panels in `b_slot`. The lengths round the
+/// panel counts up to the *widest* candidate tile (`packed_a_len` /
+/// `packed_b_len`), so one plan serves every tile config and the tile
+/// choice stays plan- and bitwise-irrelevant. Like `DotPrep` scratch,
+/// the slots are liveness-tracked: released right after the step's
+/// output is allocated, free for any later step to reuse.
+#[derive(Clone, Copy, Debug)]
+pub struct PackBufs {
+    pub a_slot: usize,
+    pub a_len: usize,
+    pub b_slot: usize,
+    pub b_len: usize,
+}
+
 /// One executable step with all shape math pre-resolved.
 #[derive(Clone, Debug)]
 pub enum Kernel {
@@ -117,7 +132,15 @@ pub enum Kernel {
     /// Per-input (mid extent, source offset along the concat axis).
     Concat { outer: usize, inner: usize, total: usize, mids: Vec<usize> },
     Slice { outer: usize, mid_in: usize, inner: usize, start: usize, stride: usize, mid_out: usize },
-    Dot { n: usize, k: usize, lhs_prep: Option<DotPrep>, rhs_prep: Option<DotPrep> },
+    Dot {
+        n: usize,
+        k: usize,
+        lhs_prep: Option<DotPrep>,
+        rhs_prep: Option<DotPrep>,
+        /// `Some` routes the step through the packed microkernel; `None`
+        /// (small shapes) keeps the scalar row core, scratch-free.
+        pack: Option<PackBufs>,
+    },
     /// CSR sparse×dense (`SpmmCsr`): the pattern rides in the plan (it
     /// is compile-time structure, uploaded once with the executable, not
     /// re-derived per run); `rhs_prep` permutes the dense operand so the
@@ -557,8 +580,25 @@ pub fn build_plan(g: &Graph) -> Result<ExecPlan> {
                 };
                 let lhs_prep = mk_prep(shape.lhs_perm, 0);
                 let rhs_prep = mk_prep(shape.rhs_perm, 1);
+                // Packing scratch, only for shapes the executor will
+                // actually route through the packed microkernel (the
+                // executor and the plan apply the same MAC threshold).
+                // Allocated while the inputs are live, released with the
+                // operand preps below.
+                let pack = (shape.m * shape.n * shape.k >= kernels::PACK_MIN_MACS)
+                    .then(|| {
+                        let a_len = kernels::packed_a_len(shape.m, shape.k);
+                        let b_len = kernels::packed_b_len(shape.n, shape.k);
+                        naive_bytes += (a_len + b_len) * 4; // ad-hoc Vecs otherwise
+                        PackBufs {
+                            a_slot: arena.alloc(a_len),
+                            a_len,
+                            b_slot: arena.alloc(b_len),
+                            b_len,
+                        }
+                    });
                 (
-                    Kernel::Dot { n: shape.n, k: shape.k, lhs_prep, rhs_prep },
+                    Kernel::Dot { n: shape.n, k: shape.k, lhs_prep, rhs_prep, pack },
                     vec![(val!(0), in_len!(0)), (val!(1), in_len!(1))],
                     None,
                 )
@@ -697,9 +737,13 @@ pub fn build_plan(g: &Graph) -> Result<ExecPlan> {
             None => arena.alloc(out_len),
         };
         match &kernel {
-            Kernel::Dot { lhs_prep, rhs_prep, .. } => {
+            Kernel::Dot { lhs_prep, rhs_prep, pack, .. } => {
                 for p in [lhs_prep, rhs_prep].into_iter().flatten() {
                     arena.release(p.slot);
+                }
+                if let Some(pb) = pack {
+                    arena.release(pb.a_slot);
+                    arena.release(pb.b_slot);
                 }
             }
             Kernel::Spmm { rhs_prep: Some(p), .. } => arena.release(p.slot),

@@ -37,6 +37,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use super::graph::Graph;
+use super::native::kernels::TileConfig;
 use super::verify::{self, VerifyError, VerifyStats};
 use crate::obs;
 
@@ -116,6 +117,18 @@ pub struct CompileOptions {
     /// kernel calls with clock reads (`tests/obs_profile.rs` pins this
     /// bitwise). The CLI `--profile` flag and `lrdx profile` set it.
     pub profile: bool,
+    /// Pin one packed-GEMM tile config for every large contraction
+    /// (`--tile MRxNRxKBxNB`), overriding `autotune`. `None` leaves the
+    /// choice to `autotune`/the default tile. Tile choice is
+    /// performance-only — every config produces bitwise-identical
+    /// output — so like `verify`/`profile` it stays out of `cache_key`.
+    pub tile: Option<TileConfig>,
+    /// Time the packed-GEMM candidate tiles per (M, N, K) shape bucket
+    /// at compile and use each bucket's winner (cached process-wide;
+    /// see `native::autotune`). Off by default so library users and the
+    /// test suite never pay compile-time benchmarking; the CLI turns it
+    /// on (escape hatch: `--no-autotune`).
+    pub autotune: bool,
 }
 
 impl Default for CompileOptions {
@@ -127,6 +140,8 @@ impl Default for CompileOptions {
             amortize: None,
             verify: cfg!(debug_assertions),
             profile: false,
+            tile: None,
+            autotune: false,
         }
     }
 }
@@ -147,7 +162,10 @@ impl CompileOptions {
     /// compiled, so verified and unverified compiles may share a cache
     /// entry. `profile` is absent for the same reason — it changes what
     /// is *measured*, never what is computed (and profiled outputs are
-    /// bitwise identical to unprofiled ones).
+    /// bitwise identical to unprofiled ones). `tile`/`autotune` are
+    /// absent too: the tile config only moves throughput, never bits
+    /// (`kernels::dot_packed`'s ascending-k contract), so differently
+    /// tuned compiles of one shape may share a ladder entry.
     pub fn cache_key(&self) -> String {
         let amort = match self.amortize {
             Some((b, ceil)) => format!("a{b}-{ceil}"),

@@ -880,7 +880,12 @@ mod tests {
         // a heavy 12% residual (nnz=492) flips it: halving the residual's
         // unit price pays for contracting even the aligned chain
         assert!(decomposed_loses_with_residual(16, 64, 64, 16, 256, 492));
-        // exact flip point: 2048 + 16·nnz >= 4352 + 8·nnz at nnz = 288
+        // exact flip point: 2048 + 16·nnz >= 4352 + 8·nnz at nnz = 288.
+        // Re-pinned against the PR 10 vectorized kernels: `spmm_rows`'
+        // dense axpy now runs on the same 8-wide lane primitive as the
+        // packed GEMM, so the lane/2-vs-lane ratio in
+        // `cost::spmm_unit_cost` (driven by the scalar-rate CSR gather,
+        // not the multiply) — and with it this flip point — is unchanged.
         assert!(!decomposed_loses_with_residual(16, 64, 64, 16, 256, 287));
         assert!(decomposed_loses_with_residual(16, 64, 64, 16, 256, 288));
     }

@@ -30,9 +30,9 @@
 
 use super::super::graph::{Graph, OpKind};
 use super::super::native::kernels::{
-    numel, PAR_MIN_ELEMS, PAR_MIN_MACS, PAR_MIN_REDUCE,
+    numel, packed_a_len, packed_b_len, TileConfig, PAR_MIN_ELEMS, PAR_MIN_MACS, PAR_MIN_REDUCE,
 };
-use super::super::native::plan::{DotPrep, ExecPlan, InPlace, Kernel, Step, ValueRef};
+use super::super::native::plan::{ExecPlan, InPlace, Kernel, Step, ValueRef};
 use super::{Violation, ViolationKind};
 
 /// Audit `plan` against the graph it was built from, for a pool of
@@ -242,37 +242,72 @@ fn audit_step(
         );
     }
 
-    // Scratch slots: dead at acquisition, pairwise distinct, not the output.
-    let preps: Vec<&DotPrep> = match &step.kernel {
-        Kernel::Dot { lhs_prep, rhs_prep, .. } => {
-            lhs_prep.iter().chain(rhs_prep.iter()).collect()
+    // Scratch slots (operand-permute preps + GEMM packing buffers):
+    // dead at acquisition, pairwise distinct, not the output.
+    let mut scratch: Vec<(usize, usize)> = Vec::new();
+    match &step.kernel {
+        Kernel::Dot { n, k, lhs_prep, rhs_prep, pack } => {
+            for p in lhs_prep.iter().chain(rhs_prep.iter()) {
+                scratch.push((p.slot, p.len));
+            }
+            if let Some(pb) = pack {
+                scratch.push((pb.a_slot, pb.a_len));
+                scratch.push((pb.b_slot, pb.b_len));
+                // The packing buffers must hold the widest panel
+                // rounding any candidate tile can ask for — the same
+                // bound the planner sizes with and the kernel asserts.
+                if *n > 0 && step.out_len % n == 0 {
+                    let m = step.out_len / n;
+                    if pb.a_len < packed_a_len(m, *k) {
+                        viol(
+                            ViolationKind::SlotOverlap,
+                            format!(
+                                "packed-A scratch {} < required {} for m={m} k={k}",
+                                pb.a_len,
+                                packed_a_len(m, *k)
+                            ),
+                        );
+                    }
+                    if pb.b_len < packed_b_len(*n, *k) {
+                        viol(
+                            ViolationKind::SlotOverlap,
+                            format!(
+                                "packed-B scratch {} < required {} for n={n} k={k}",
+                                pb.b_len,
+                                packed_b_len(*n, *k)
+                            ),
+                        );
+                    }
+                }
+            }
         }
-        Kernel::Spmm { rhs_prep, .. } => rhs_prep.iter().collect(),
-        _ => Vec::new(),
-    };
-    for (pi, p) in preps.iter().enumerate() {
-        if p.slot >= nslots {
-            viol(ViolationKind::Structure, format!("scratch slot {} out of range", p.slot));
+        Kernel::Spmm { rhs_prep, .. } => {
+            for p in rhs_prep.iter() {
+                scratch.push((p.slot, p.len));
+            }
+        }
+        _ => {}
+    }
+    for (pi, &(slot, len)) in scratch.iter().enumerate() {
+        if slot >= nslots {
+            viol(ViolationKind::Structure, format!("scratch slot {slot} out of range"));
             continue;
         }
-        if refs[p.slot] > 0 {
-            viol(
-                ViolationKind::Alias,
-                format!("scratch slot {} holds a live value", p.slot),
-            );
+        if refs[slot] > 0 {
+            viol(ViolationKind::Alias, format!("scratch slot {slot} holds a live value"));
         }
-        if p.slot == step.out {
-            viol(ViolationKind::Alias, format!("scratch slot {} aliases the output", p.slot));
+        if slot == step.out {
+            viol(ViolationKind::Alias, format!("scratch slot {slot} aliases the output"));
         }
-        if p.len > plan.slot_caps[p.slot] {
+        if len > plan.slot_caps[slot] {
             viol(
                 ViolationKind::SlotOverlap,
-                format!("scratch ({} elems) exceeds slot {}'s capacity", p.len, p.slot),
+                format!("scratch ({len} elems) exceeds slot {slot}'s capacity"),
             );
         }
-        for q in &preps[..pi] {
-            if q.slot == p.slot {
-                viol(ViolationKind::Alias, format!("two scratch operands share slot {}", p.slot));
+        for &(qslot, _) in &scratch[..pi] {
+            if qslot == slot {
+                viol(ViolationKind::Alias, format!("two scratch operands share slot {slot}"));
             }
         }
     }
@@ -484,6 +519,31 @@ pub fn row_partition(rows: usize, lanes: usize) -> Vec<(usize, usize)> {
         .collect()
 }
 
+/// The panel-aligned ranges `kernels::dot_packed` derives when it
+/// splits `total` rows (panel = MR) or columns (panel = NR) over
+/// `lanes` (same arithmetic, re-derived): whole panels per chunk, the
+/// last range clamped to `total`. Panel alignment is what lets each
+/// chunk also own a contiguous region of the packing buffer —
+/// `chunk_panels × k × panel` floats at panel-index offset — so one
+/// cover proof discharges both the output writes and the pack writes.
+pub fn panel_partition(total: usize, panel: usize, lanes: usize) -> Vec<(usize, usize)> {
+    let np = total.div_ceil(panel);
+    let t = lanes.min(np);
+    if t <= 1 {
+        return vec![(0, total)];
+    }
+    let per = np.div_ceil(t);
+    let chunks = np.div_ceil(per);
+    (0..chunks)
+        .map(|ci| {
+            let p0 = ci * per;
+            let pc = per.min(np - p0);
+            let start = p0 * panel;
+            (start, ((p0 + pc) * panel).min(total) - start)
+        })
+        .collect()
+}
+
 /// Verify `parts` (in dispatch order) is a disjoint exact cover of
 /// `[0, total)` — the condition under which the kernels' raw-pointer
 /// chunking cannot alias.
@@ -540,7 +600,7 @@ fn check_step_partition(step: &Step, sidx: usize, threads: usize, out: &mut Vec<
                     return;
                 }
             }
-            Kernel::Dot { n, k, .. } => {
+            Kernel::Dot { n, k, pack, .. } => {
                 if step.out_len == 0 || *k == 0 || *n == 0 {
                     continue; // fill paths, serial
                 }
@@ -549,14 +609,49 @@ fn check_step_partition(step: &Step, sidx: usize, threads: usize, out: &mut Vec<
                     return;
                 }
                 let m = step.out_len / n;
-                let t = if m * n * k >= PAR_MIN_MACS { lanes.min(m) } else { 1 };
-                let parts: Vec<(usize, usize)> = row_partition(m, t)
-                    .into_iter()
-                    .map(|(r0, rows)| (r0 * n, rows * n))
-                    .collect();
-                if let Err(e) = check_cover(step.out_len, &parts) {
-                    fail(lanes, *n, e);
-                    return;
+                if m * n * k < PAR_MIN_MACS {
+                    continue; // both paths run serial below the threshold
+                }
+                if pack.is_none() {
+                    // Scalar path: plain row partition.
+                    let parts: Vec<(usize, usize)> = row_partition(m, lanes.min(m))
+                        .into_iter()
+                        .map(|(r0, rows)| (r0 * n, rows * n))
+                        .collect();
+                    if let Err(e) = check_cover(step.out_len, &parts) {
+                        fail(lanes, *n, e);
+                        return;
+                    }
+                    continue;
+                }
+                // Packed path: the partition is panel-aligned and the
+                // panel width depends on which tile the autotuner picks,
+                // so the proof sweeps every candidate (the tile cannot
+                // change bits, but it does change the chunk geometry the
+                // raw-pointer writes rely on).
+                for cand in TileConfig::CANDIDATES.iter().chain([&TileConfig::DEFAULT]) {
+                    let c = cand.normalized(m);
+                    if m >= lanes {
+                        // Row-panel partition: output rows, whole width.
+                        let parts: Vec<(usize, usize)> = panel_partition(m, c.mr, lanes)
+                            .into_iter()
+                            .map(|(r0, rows)| (r0 * n, rows * n))
+                            .collect();
+                        if let Err(e) = check_cover(step.out_len, &parts) {
+                            fail(lanes, *n, format!("tile {}: {e}", cand.key()));
+                            return;
+                        }
+                    } else {
+                        // Column-panel partition (tall-skinny fallback):
+                        // every chunk owns all rows of its column band,
+                        // so an exact cover of the columns covers the
+                        // output.
+                        let parts = panel_partition(*n, c.nr, lanes);
+                        if let Err(e) = check_cover(*n, &parts) {
+                            fail(lanes, *n, format!("tile {} columns: {e}", cand.key()));
+                            return;
+                        }
+                    }
                 }
             }
             Kernel::Spmm { m, row_ptr, col_idx, .. } => {
@@ -619,5 +714,27 @@ mod tests {
         // anything else because nothing else is an input
         assert_eq!(par_partition(40_000, 7, 2), par_partition(40_000, 7, 2));
         assert_eq!(row_partition(37, 5), row_partition(37, 5));
+        assert_eq!(panel_partition(37, 4, 5), panel_partition(37, 4, 5));
+    }
+
+    #[test]
+    fn panel_partitions_cover_exactly_and_stay_aligned() {
+        for total in [1usize, 2, 7, 8, 33, 100, 1000, 2048] {
+            for panel in [1usize, 2, 4, 8, 16] {
+                for lanes in 1..=16 {
+                    let parts = panel_partition(total, panel, lanes);
+                    check_cover(total, &parts).unwrap_or_else(|e| {
+                        panic!("total={total} panel={panel} lanes={lanes}: {e}")
+                    });
+                    for (i, &(start, len)) in parts.iter().enumerate() {
+                        assert_eq!(start % panel, 0, "chunk {i} start not panel-aligned");
+                        assert!(len > 0, "empty chunk {i}");
+                        if i + 1 < parts.len() {
+                            assert_eq!(len % panel, 0, "interior chunk {i} not whole panels");
+                        }
+                    }
+                }
+            }
+        }
     }
 }

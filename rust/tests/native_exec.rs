@@ -60,6 +60,47 @@ fn thread_count_and_repetition_are_bitwise_irrelevant() {
 }
 
 #[test]
+fn packed_dot_is_bitwise_identical_across_threads_1_2_8() {
+    // Both shapes clear `PACK_MIN_MACS`, so the planner allocates pack
+    // slots and the executor routes through the packed microkernel;
+    // both also clear `PAR_MIN_MACS`, so threads > 1 really partition.
+    // (64,64,64) drives the row-panel split; the batch-1 (1,768,512)
+    // shape has m < threads at every pool size, driving the tall-skinny
+    // column-panel split. All must be bitwise equal to the serial run
+    // AND to the per-node reference interpreter's scalar contraction.
+    for (m, k, n) in [(64usize, 64usize, 64usize), (1, 768, 512)] {
+        let b = GraphBuilder::new("packed_dot");
+        let x = b.parameter(0, &[m, k], "x").unwrap();
+        let w = b.parameter(1, &[k, n], "w").unwrap();
+        let y = x.dot_general(&w, &[1], &[0]).unwrap();
+        let graph = b.build(&y).unwrap();
+        let mut rng = Rng::new(0xC0FFEE ^ (m as u64));
+        let xs: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+        let ws: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let args: Vec<Arc<HostTensor>> = vec![
+            Arc::new(HostTensor::new(vec![m, k], xs)),
+            Arc::new(HostTensor::new(vec![k, n], ws)),
+        ];
+        let serial = NativeExecutable::new(graph.clone(), 1).unwrap();
+        let want = bits(&serial.run(&args).unwrap().data);
+        let reference = serial.run_reference(&args).unwrap();
+        assert_eq!(
+            want,
+            bits(&reference.data),
+            "({m},{k},{n}): packed path diverged from the reference interpreter"
+        );
+        for threads in [2usize, 8] {
+            let exe = NativeExecutable::new(graph.clone(), threads).unwrap();
+            let got = bits(&exe.run(&args).unwrap().data);
+            assert_eq!(
+                want, got,
+                "({m},{k},{n}): threads={threads} changed bits on the packed path"
+            );
+        }
+    }
+}
+
+#[test]
 fn nan_propagates_through_decomposed_chains_at_every_opt_level() {
     // A zero weight pair meeting NaN activations: the merged (O2) and
     // factored (O0/O1) forms must BOTH produce NaN — 0 × NaN is NaN, and

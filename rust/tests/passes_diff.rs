@@ -12,7 +12,7 @@ use lrdx::decompose::{plan_variant, sparsify_plan, Scheme, Variant};
 use lrdx::model::{Arch, ConvSite, SiteKind};
 use lrdx::runtime::layer_factory::build_layer;
 use lrdx::runtime::netbuilder::BuiltNet;
-use lrdx::runtime::{CompileOptions, Engine, OptLevel, PassStats};
+use lrdx::runtime::{CompileOptions, Engine, OptLevel, PassStats, TileConfig};
 use lrdx::util::check::assert_allclose;
 use lrdx::util::det_input;
 
@@ -119,6 +119,42 @@ fn composed_sparse_variants_match_the_o0_reference_across_levels_and_threads() {
                         t1, &got,
                         "{variant:?}+s/{}: thread count changed bits",
                         level.name()
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_tile_config_matches_the_o0_reference_and_is_bitwise_stable() {
+    // The tile config is performance-only state: pinning any candidate
+    // (MR,NR,KB,NB) via `CompileOptions::tile` must produce the SAME
+    // bits as every other candidate (the packed microkernel's
+    // per-element ascending-k contract), and all of them must match the
+    // O0 scalar reference within 1e-5 at O2 where the graph itself is
+    // reshaped by the pass pipeline.
+    let engine = Engine::native();
+    for variant in [Variant::Lrd, Variant::Merged] {
+        let (want, _) = forward(&engine, variant, &CompileOptions::o0());
+        for level in [OptLevel::O0, OptLevel::O2] {
+            let mut first: Option<Vec<f32>> = None;
+            for cfg in TileConfig::CANDIDATES {
+                let opts = CompileOptions {
+                    tile: Some(cfg),
+                    threads: 2,
+                    ..CompileOptions::level(level)
+                };
+                let (got, _) = forward(&engine, variant, &opts);
+                assert_allclose(&got, &want, 1e-5, 1e-5);
+                match &first {
+                    None => first = Some(got),
+                    Some(f) => assert_eq!(
+                        f,
+                        &got,
+                        "{variant:?}/{}: tile {} changed bits",
+                        level.name(),
+                        cfg.key()
                     ),
                 }
             }
